@@ -1,0 +1,84 @@
+//! Mobile profiling walkthrough: the §4 motivation measurements plus the
+//! Fig. 5/6 framework comparison, all from the compiler simulator.
+//!
+//! Run: `cargo run --release --example mobile_profile`
+
+use npas::compiler::device::{ADRENO_640, KRYO_485};
+use npas::compiler::{measure, Framework, LayerSparsity, SparsityMap};
+use npas::graph::zoo;
+use npas::pruning::PruneScheme;
+
+fn main() {
+    // ---- Fig 3(a): filter types at equal MACs -----------------------------
+    println!("== Fig 3(a): latency vs kernel size, equal MACs (56x56 fmap, mobile CPU) ==");
+    for k in [1usize, 3, 5, 7] {
+        let cout = (256.0 * 9.0 / (k * k) as f64) as usize;
+        let net = zoo::single_conv(56, k, 256, cout);
+        let r = measure(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours, 100);
+        println!("  {k}x{k}: {:7.2} ms  ({:.0}M MACs)", r.mean_ms, net.total_macs() as f64 / 1e6);
+    }
+
+    // ---- Fig 3(b): pruning schemes ----------------------------------------
+    println!("\n== Fig 3(b): compute speedup vs pruning rate (3x3, 56x56, 256->256) ==");
+    let macs = 56.0 * 56.0 * 9.0 * 256.0 * 256.0;
+    print!("{:24}", "scheme \\ rate");
+    for r in [2.0, 3.0, 5.0, 7.0, 10.0] {
+        print!("{r:>8.0}x");
+    }
+    println!();
+    for scheme in [
+        PruneScheme::Unstructured,
+        PruneScheme::Pattern,
+        PruneScheme::block_punched_default(),
+        PruneScheme::Filter,
+    ] {
+        print!("{:24}", scheme.to_string());
+        for rate in [2.0f32, 3.0, 5.0, 7.0, 10.0] {
+            let sp = LayerSparsity::new(scheme, rate);
+            print!("{:8.2}", sp.layer_speedup(macs, &KRYO_485));
+        }
+        println!();
+    }
+
+    // ---- §4: layer-count observation --------------------------------------
+    println!("\n== §4: narrower-but-deeper ResNet-50 at equal MACs (mobile GPU) ==");
+    let base = zoo::resnet50();
+    let deep = zoo::resnet50_narrow_deep();
+    let t_base = measure(&base, &SparsityMap::new(), &ADRENO_640, Framework::Ours, 100);
+    let t_deep = measure(&deep, &SparsityMap::new(), &ADRENO_640, Framework::Ours, 100);
+    println!(
+        "  base: {:.1}ms ({} fused groups)   deep: {:.1}ms ({} groups)   ratio {:.2}x (paper: 1.22x)",
+        t_base.mean_ms, t_base.num_groups, t_deep.mean_ms, t_deep.num_groups,
+        t_deep.mean_ms / t_base.mean_ms
+    );
+
+    // ---- Fig 5/6: frameworks on dense nets ---------------------------------
+    for (dev, name) in [(&KRYO_485, "Fig 5 — mobile CPU"), (&ADRENO_640, "Fig 6 — mobile GPU")] {
+        println!("\n== {name}: dense-model latency (ms) per framework ==");
+        print!("{:32}", "model \\ framework");
+        for fw in Framework::ALL {
+            if dev.is_gpu && !fw.caps().gpu {
+                continue;
+            }
+            print!("{:>16}", fw.name());
+        }
+        println!();
+        for (label, net) in [
+            ("MobileNet-V3", zoo::mobilenet_v3()),
+            ("EfficientNet-B0", zoo::efficientnet_b0()),
+            ("EffNet-B0 (70% MACs)", zoo::efficientnet_b0_scaled("effb0_70", 0.7)),
+            ("EffNet-B0 (50% MACs)", zoo::efficientnet_b0_scaled("effb0_50", 0.5)),
+        ] {
+            print!("{label:32}");
+            for fw in Framework::ALL {
+                if dev.is_gpu && !fw.caps().gpu {
+                    continue;
+                }
+                let r = measure(&net, &SparsityMap::new(), dev, fw, 100);
+                print!("{:16.2}", r.mean_ms);
+            }
+            println!();
+        }
+    }
+    println!("\n(PyTorch Mobile has no mobile-GPU backend — absent from Fig 6, as in the paper.)");
+}

@@ -1,0 +1,98 @@
+//! End-to-end NPAS driver — the repo's headline experiment.
+//!
+//! Runs the complete system on a real workload, proving all layers compose:
+//! L1 Pallas kernel → L2 supernet artifact → L3 coordinator (warmup
+//! training with loss curve, Phase 1 op replacement, Phase 2 Q-learning+BO
+//! scheme search with *real* fast evaluations through PJRT, Phase 3 pruning
+//! algorithm search), then reports the paper's headline metric: accuracy at
+//! a latency target, with the searched scheme.
+//!
+//! Run: `cargo run --release --example npas_search -- [--target-ms 7] [--fast]`
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use npas::coordinator::EventLog;
+use npas::runtime::Runtime;
+use npas::search::npas as pipeline;
+use npas::search::npas::NpasConfig;
+use npas::train::{SgdConfig, Trainer};
+use npas::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let target_ms = args.f64_or("target-ms", 7.0);
+    let fast = args.bool("fast");
+
+    println!("=== NPAS end-to-end: target {target_ms:.1}ms on mobile GPU (simulated S10) ===\n");
+    let t0 = std::time::Instant::now();
+    let rt = Runtime::load("artifacts")?;
+    println!("artifacts compiled in {:.1}s (platform {})\n", t0.elapsed().as_secs_f64(), rt.platform());
+
+    // ---- loss curve of the starting point (logged for EXPERIMENTS.md) ----
+    println!("-- warmup loss curve (dense supernet, swish acts = pre-Phase-1) --");
+    let mut probe = Trainer::new(&rt, 42, SgdConfig::default());
+    let curve_steps = if fast { 20 } else { 120 };
+    let metrics = probe.train(curve_steps)?;
+    for (i, m) in metrics.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == metrics.len() {
+            println!("step {i:4}  loss {:7.4}  ce {:7.4}  batch-acc {:.3}", m.loss, m.ce, m.accuracy);
+        }
+    }
+    println!("held-out accuracy after warmup: {:.3}\n", probe.evaluate(8)?);
+    drop(probe);
+
+    // ---- the full three-phase pipeline ------------------------------------
+    let mut cfg = if fast { NpasConfig::tiny(target_ms) } else { NpasConfig::small(target_ms) };
+    if !fast {
+        // keep the example under ~20 minutes on one core
+        cfg.phase2.rounds = 4;
+        cfg.phase2.bo_batch = 3;
+        cfg.phase2.pool_size = 16;
+    }
+    let mut log = EventLog::to_file("npas_search_events.jsonl");
+    let t1 = std::time::Instant::now();
+    let report = pipeline::run(&rt, &cfg, &mut log)?;
+    let wall = t1.elapsed().as_secs_f64();
+
+    println!("\n=== searched scheme ===");
+    for (i, c) in report.scheme.choices.iter().enumerate() {
+        println!("  block {i}: {}", c.label());
+    }
+    println!("  head: block-based @ {:.1}x", report.scheme.head_rate.0);
+
+    println!("\n=== phase summaries ===");
+    println!(
+        "phase1: {} unfriendly ops replaced, accuracy {:.3} -> {:.3}",
+        report.phase1.replaced_ops, report.phase1.acc_before, report.phase1.acc_after
+    );
+    println!(
+        "phase2: {} evaluations over {} generated candidates; best reward {:.3} (acc {:.3} @ {:.2}ms)",
+        report.phase2.evaluations,
+        report.phase2.pool_generated,
+        report.phase2.best_reward,
+        report.phase2.best_outcome.accuracy,
+        report.phase2.best_outcome.latency_ms
+    );
+    print!("phase3 trials: ");
+    for (algo, acc) in &report.phase3.trials {
+        print!("{}={:.3} ", algo.name(), acc);
+    }
+    println!("\nphase3 winner: {} (final sparsity {:.2})", report.phase3.winner.name(), report.phase3.final_sparsity);
+
+    println!("\n=== headline result ===");
+    println!(
+        "accuracy {:.3} | latency {:.2}ms CPU / {:.2}ms GPU (target {target_ms:.1}ms) | {:.2}M params | {:.0}M CONV MACs",
+        report.final_accuracy,
+        report.latency_cpu_ms,
+        report.latency_gpu_ms,
+        report.params as f64 / 1e6,
+        report.conv_macs as f64 / 1e6
+    );
+    println!(
+        "target {}: {}",
+        if report.latency_gpu_ms <= target_ms { "MET" } else { "MISSED" },
+        if report.latency_gpu_ms <= target_ms { "✓" } else { "✗" }
+    );
+    println!("\nsearch cost ({wall:.0}s wall):\n{}", report.metrics_summary);
+    println!("event log: npas_search_events.jsonl");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the three layers in one minute.
+//!
+//! 1. load the AOT artifacts (L1 Pallas kernel + L2 supernet, compiled by
+//!    `make artifacts`) into the PJRT runtime;
+//! 2. run the bare block-punched matmul kernel;
+//! 3. train the supernet briefly on SynthVision;
+//! 4. one-shot block-punched prune + measure the deployment latency the
+//!    compiler simulator predicts for the pruned model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::collections::BTreeMap;
+
+use npas::compiler::device::{ADRENO_640, KRYO_485};
+use npas::pruning::{PruneRate, PruneScheme};
+use npas::runtime::{Runtime, Value};
+use npas::search::evaluator::measure_scheme;
+use npas::search::NpasScheme;
+use npas::tensor::{Tensor, XorShift64Star};
+use npas::train::{SgdConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. runtime -------------------------------------------------------
+    println!("[1/4] loading artifacts (compiling HLO through PJRT)...");
+    let rt = Runtime::load("artifacts")?;
+    println!("      platform: {}", rt.platform());
+
+    // ---- 2. the L1 kernel -------------------------------------------------
+    let mut rng = XorShift64Star::new(1);
+    let x = Tensor::he_normal(vec![256, 256], &mut rng);
+    let w = Tensor::he_normal(vec![256, 256], &mut rng);
+    let mask = npas::pruning::generate_mask(
+        &w,
+        PruneScheme::block_punched_default(),
+        PruneRate::new(4.0),
+    );
+    let mut ins = BTreeMap::new();
+    ins.insert("x".into(), Value::F32(x));
+    ins.insert("w".into(), Value::F32(w));
+    ins.insert("mask".into(), Value::F32(mask.clone()));
+    let t = std::time::Instant::now();
+    let out = rt.run("micro", &ins)?;
+    println!(
+        "[2/4] bp_matmul 256x256x256 @ 4x block-punched: {:.1}ms, out norm {:.1}, mask density {:.2}",
+        t.elapsed().as_secs_f64() * 1e3,
+        out["out"].l2_norm(),
+        1.0 - mask.sparsity()
+    );
+
+    // ---- 3. train the supernet -------------------------------------------
+    println!("[3/4] training the supernet (40 steps on SynthVision)...");
+    let mut tr = Trainer::new(&rt, 42, SgdConfig::default());
+    tr.set_swish(false);
+    let metrics = tr.train(40)?;
+    println!(
+        "      ce {:.3} -> {:.3}, val accuracy {:.3}",
+        metrics[0].ce,
+        metrics.last().unwrap().ce,
+        tr.evaluate(4)?
+    );
+
+    // ---- 4. prune + measure ----------------------------------------------
+    let mut plan = BTreeMap::new();
+    for name in &rt.manifest.model.prunable {
+        plan.insert(name.clone(), (PruneScheme::block_punched_default(), PruneRate::new(6.0)));
+    }
+    tr.one_shot_prune(&plan);
+    tr.train(20)?;
+    let acc = tr.evaluate(4)?;
+
+    let mut scheme = NpasScheme::dense(rt.manifest.model.blocks);
+    for c in &mut scheme.choices {
+        c.scheme = PruneScheme::block_punched_default();
+        c.rate = PruneRate::new(6.0);
+    }
+    println!(
+        "[4/4] 6x block-punched: accuracy {:.3} (sparsity {:.2}); deployment latency {:.2}ms CPU / {:.2}ms GPU",
+        acc,
+        tr.sparsity(),
+        measure_scheme(&scheme, &KRYO_485),
+        measure_scheme(&scheme, &ADRENO_640),
+    );
+    println!("\nnext: `cargo run --release --example npas_search` for the full pipeline");
+    Ok(())
+}

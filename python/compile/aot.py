@@ -1,0 +1,203 @@
+"""AOT pipeline: lower the L2 supernet + L1 micro-kernel to HLO text.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits:
+  artifacts/supernet_train.hlo.txt   — fwd + loss(+KD +ADMM) + grads
+  artifacts/supernet_infer.hlo.txt   — fwd logits at EVAL_BATCH
+  artifacts/bp_matmul_micro.hlo.txt  — the bare L1 kernel (quickstart/bench)
+  artifacts/manifest.json            — the full ABI: ordered input/output
+                                       names+shapes+dtypes per artifact plus
+                                       model hyperparameters. The Rust runtime
+                                       (`runtime::manifest`) parses this and
+                                       binds buffers strictly by this order.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python never
+runs after this step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import bp_matmul as K
+
+MICRO_M, MICRO_K, MICRO_N = 256, 256, 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.int32 if dtype == "i32" else jnp.float32
+    )
+
+
+def train_io():
+    """Ordered (name, shape, dtype) input list for the train artifact."""
+    ins = [(n, s, "f32") for n, s in M.param_specs()]
+    shapes = dict(M.param_specs())
+    ins += [(f"mask_{n}", shapes[n], "f32") for n in M.prunable()]
+    ins.append(("alphas", (M.BLOCKS, M.N_BRANCH), "f32"))
+    ins.append(("acts", (M.BLOCKS + 1, 2), "f32"))
+    ins += [(f"admm_{n}", shapes[n], "f32") for n in M.prunable()]
+    ins.append(("rho", (), "f32"))
+    ins.append(("kd_w", (), "f32"))
+    ins.append(("teacher_logits", (M.BATCH, M.NUM_CLASSES), "f32"))
+    ins.append(("x", (M.BATCH, M.IMG, M.IMG, M.C_IN), "f32"))
+    ins.append(("y", (M.BATCH,), "i32"))
+    outs = [("loss", (), "f32"), ("ce", (), "f32"), ("correct", (), "f32")]
+    outs += [(f"grad_{n}", s, "f32") for n, s in M.param_specs()]
+    return ins, outs
+
+
+def infer_io():
+    ins = [(n, s, "f32") for n, s in M.param_specs()]
+    shapes = dict(M.param_specs())
+    ins += [(f"mask_{n}", shapes[n], "f32") for n in M.prunable()]
+    ins.append(("alphas", (M.BLOCKS, M.N_BRANCH), "f32"))
+    ins.append(("acts", (M.BLOCKS + 1, 2), "f32"))
+    ins.append(("x", (M.EVAL_BATCH, M.IMG, M.IMG, M.C_IN), "f32"))
+    outs = [("logits", (M.EVAL_BATCH, M.NUM_CLASSES), "f32")]
+    return ins, outs
+
+
+def micro_io():
+    ins = [
+        ("x", (MICRO_M, MICRO_K), "f32"),
+        ("w", (MICRO_K, MICRO_N), "f32"),
+        ("mask", (MICRO_K, MICRO_N), "f32"),
+    ]
+    outs = [("out", (MICRO_M, MICRO_N), "f32")]
+    return ins, outs
+
+
+def _flat_train(*flat):
+    """Reassemble the flat ABI ordering into model pytrees."""
+    names = [n for n, _ in M.param_specs()]
+    pr = M.prunable()
+    i = 0
+    params = {n: flat[i + j] for j, n in enumerate(names)}
+    i += len(names)
+    masks = {n: flat[i + j] for j, n in enumerate(pr)}
+    i += len(pr)
+    alphas, acts = flat[i], flat[i + 1]
+    i += 2
+    admm = {n: flat[i + j] for j, n in enumerate(pr)}
+    i += len(pr)
+    rho, kd_w, teacher, x, y = flat[i : i + 5]
+    loss, ce, correct, grads = M.train_step(
+        params, masks, alphas, acts, admm, rho, kd_w, teacher, x, y
+    )
+    return (loss, ce, correct, *[grads[n] for n in names])
+
+
+def _flat_infer(*flat):
+    names = [n for n, _ in M.param_specs()]
+    pr = M.prunable()
+    i = 0
+    params = {n: flat[i + j] for j, n in enumerate(names)}
+    i += len(names)
+    masks = {n: flat[i + j] for j, n in enumerate(pr)}
+    i += len(pr)
+    alphas, acts, x = flat[i], flat[i + 1], flat[i + 2]
+    return (M.infer(params, masks, alphas, acts, x),)
+
+
+def _flat_micro(x, w, mask):
+    return (K.bp_matmul(x, w, mask),)
+
+
+def lower(fn, ins):
+    args = [_spec(s, d) for _, s, d in ins]
+    return jax.jit(fn).lower(*args)
+
+
+def manifest():
+    t_in, t_out = train_io()
+    i_in, i_out = infer_io()
+    m_in, m_out = micro_io()
+
+    def fmt(io):
+        return [{"name": n, "shape": list(s), "dtype": d} for n, s, d in io]
+
+    return {
+        "version": 1,
+        "model": {
+            "img": M.IMG,
+            "c_in": M.C_IN,
+            "channels": M.C,
+            "blocks": M.BLOCKS,
+            "num_classes": M.NUM_CLASSES,
+            "batch": M.BATCH,
+            "eval_batch": M.EVAL_BATCH,
+            "pool_after": list(M.POOL_AFTER),
+            "branches": list(M.BRANCH_NAMES),
+            "param_specs": [
+                {"name": n, "shape": list(s)} for n, s in M.param_specs()
+            ],
+            "prunable": M.prunable(),
+        },
+        "artifacts": {
+            "train": {
+                "file": "supernet_train.hlo.txt",
+                "inputs": fmt(t_in),
+                "outputs": fmt(t_out),
+            },
+            "infer": {
+                "file": "supernet_infer.hlo.txt",
+                "inputs": fmt(i_in),
+                "outputs": fmt(i_out),
+            },
+            "micro": {
+                "file": "bp_matmul_micro.hlo.txt",
+                "inputs": fmt(m_in),
+                "outputs": fmt(m_out),
+            },
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+
+    jobs = [
+        ("supernet_train.hlo.txt", _flat_train, train_io()[0]),
+        ("supernet_infer.hlo.txt", _flat_infer, infer_io()[0]),
+        ("bp_matmul_micro.hlo.txt", _flat_micro, micro_io()[0]),
+    ]
+    for fname, fn, ins in jobs:
+        text = to_hlo_text(lower(fn, ins))
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {fname}: {len(text)} chars, {len(ins)} inputs")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest(), f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""SynthVision: the deterministic synthetic vision dataset.
+
+ImageNet substitute (see DESIGN.md §1): 10 classes, each defined by a fixed
+random smoothed prototype; a sample is a circularly-shifted, scaled prototype
+plus uniform noise. Shifts make the task genuinely convolutional (translation
+matters), capacity/pruning affects accuracy monotonically, and everything is
+generated from a seed with integer/float ops that are reproduced **bit-exactly**
+by the Rust generator (`train::dataset`) — both sides share the xorshift64*
+RNG and the exact op order, and cross-language golden tests pin the values.
+
+Python uses this only for tests and for producing golden vectors; the search
+path generates data in Rust.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 12
+CHANNELS = 3
+NUM_CLASSES = 10
+SHIFT_RANGE = 6  # dx, dy in [0, SHIFT_RANGE)
+SCALE_MIN, SCALE_MAX = 0.8, 1.2
+NOISE_AMP = 0.35
+
+_MULT = np.uint64(2685821657736338717)
+
+
+class XorShift64Star:
+    """xorshift64* — tiny, seedable, identical in Rust and Python."""
+
+    def __init__(self, seed: int):
+        self.state = np.uint64(seed if seed != 0 else 0x9E3779B97F4A7C15)
+
+    def next_u64(self) -> int:
+        x = int(self.state)
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & 0xFFFFFFFFFFFFFFFF
+        x ^= x >> 27
+        self.state = np.uint64(x)
+        return (x * int(_MULT)) & 0xFFFFFFFFFFFFFFFF
+
+    def next_f32(self) -> np.float32:
+        """Uniform in [0, 1) with 24 bits of mantissa — f32-exact."""
+        return np.float32((self.next_u64() >> 40) * (1.0 / (1 << 24)))
+
+    def next_range(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+def class_prototypes(seed: int = 7) -> np.ndarray:
+    """(NUM_CLASSES, IMG, IMG, CHANNELS) smoothed random prototypes."""
+    rng = XorShift64Star(seed)
+    raw = np.empty((NUM_CLASSES, IMG, IMG, CHANNELS), dtype=np.float32)
+    for c in range(NUM_CLASSES):
+        for i in range(IMG):
+            for j in range(IMG):
+                for k in range(CHANNELS):
+                    raw[c, i, j, k] = rng.next_f32() * np.float32(2.0) - np.float32(1.0)
+    # 3x3 circular box blur, separable-free direct form (order matters for
+    # bit-exactness: accumulate in f32, divide by 9 at the end).
+    out = np.empty_like(raw)
+    for c in range(NUM_CLASSES):
+        for i in range(IMG):
+            for j in range(IMG):
+                for k in range(CHANNELS):
+                    acc = np.float32(0.0)
+                    for di in (-1, 0, 1):
+                        for dj in (-1, 0, 1):
+                            acc = np.float32(
+                                acc + raw[c, (i + di) % IMG, (j + dj) % IMG, k]
+                            )
+                    out[c, i, j, k] = np.float32(acc / np.float32(9.0))
+    return out
+
+
+def sample(rng: XorShift64Star, protos: np.ndarray):
+    """Draw one (image, label). Draw order is part of the cross-lang ABI:
+    label, dx, dy, scale, then IMG*IMG*CHANNELS noise values row-major."""
+    label = rng.next_range(NUM_CLASSES)
+    dx = rng.next_range(SHIFT_RANGE)
+    dy = rng.next_range(SHIFT_RANGE)
+    scale = np.float32(
+        np.float32(SCALE_MIN) + rng.next_f32() * np.float32(SCALE_MAX - SCALE_MIN)
+    )
+    img = np.empty((IMG, IMG, CHANNELS), dtype=np.float32)
+    p = protos[label]
+    for i in range(IMG):
+        for j in range(IMG):
+            for k in range(CHANNELS):
+                noise = np.float32(
+                    (rng.next_f32() * np.float32(2.0) - np.float32(1.0))
+                    * np.float32(NOISE_AMP)
+                )
+                img[i, j, k] = np.float32(
+                    p[(i + dx) % IMG, (j + dy) % IMG, k] * scale + noise
+                )
+    return img, label
+
+
+def batch(seed: int, n: int, protos: np.ndarray | None = None):
+    """Deterministic batch: (x[n, IMG, IMG, 3] f32, y[n] i32)."""
+    if protos is None:
+        protos = class_prototypes()
+    rng = XorShift64Star(seed)
+    xs = np.empty((n, IMG, IMG, CHANNELS), dtype=np.float32)
+    ys = np.empty((n,), dtype=np.int32)
+    for b in range(n):
+        xs[b], ys[b] = sample(rng, protos)
+    return xs, ys

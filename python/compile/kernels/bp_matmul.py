@@ -1,0 +1,180 @@
+"""L1 Pallas kernel: tiled block-punched (masked) matmul.
+
+This is the single compute hot-spot of the NPAS supernet: every convolution
+(via im2col) and the FC head lower to this kernel. The block-punched /
+block-based pruning mask is applied inside the kernel tile-by-tile, so a mask
+whose zero blocks align with the (TK, TN) tiling zeroes whole MXU tiles — the
+TPU analogue of the paper's vector-register-aligned block skipping (see
+DESIGN.md §Hardware-Adaptation).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the interpret path is the correctness (and
+AOT) target; TPU efficiency is estimated analytically from the BlockSpec.
+
+The public entry points carry a ``jax.custom_vjp`` so the L2 supernet can be
+differentiated: both the forward GEMM and the two backward GEMMs
+(dX = dY·Wᵀ, dW = Xᵀ·dY) run through the same Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile defaults, §Perf-tuned (EXPERIMENTS.md §Perf): TM=1024 swallows the
+# im2col row dimension of the supernet GEMMs (M = B*OH*OW = 4608 -> 6 grid
+# steps) while TN/TK stay MXU-decomposable (128/256); 128^3 (8.0ms step) ->
+# 512 (97ms->?) -> 1024 (86ms) -> 2048 regressed (108ms, cache pressure), so
+# 1024 is the practical roofline here. VMEM footprint ~3.6 MiB (vmem_bytes),
+# well under the ~16 MiB/core budget.
+DEFAULT_TM = 1024
+DEFAULT_TN = 128
+DEFAULT_TK = 256
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (tiles must divide)."""
+    t = min(dim, preferred)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    """Grid = (M/TM, N/TN, K/TK); K innermost so acc_ref carries partials."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, nk: int):
+    """Same as _matmul_kernel but the weight tile is masked in-VMEM.
+
+    The mask multiply happens on the (TK, TN) weight tile after it lands in
+    VMEM; for block-punched masks aligned to the tiling this is an all-zero /
+    all-one tile, which XLA folds on TPU and which our latency model treats as
+    a skipped MXU pass.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_tile = w_ref[...].astype(jnp.float32) * m_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_tile,
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul(x, w, tm=DEFAULT_TM, tn=DEFAULT_TN, tk=DEFAULT_TK):
+    """Dense tiled matmul through the Pallas kernel. x:(M,K) @ w:(K,N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    tm, tn, tk = _pick_tile(m, tm), _pick_tile(n, tn), _pick_tile(k, tk)
+    nk = k // tk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // tm, n // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[_scratch(tm, tn)],
+        interpret=True,
+    )(x, w)
+
+
+def _scratch(tm, tn):
+    """VMEM f32 accumulator scratch for the K-loop partial sums."""
+    from jax.experimental.pallas import tpu as pltpu  # deferred: TPU namespace
+
+    return pltpu.VMEM((tm, tn), jnp.float32)
+
+
+def _bp_matmul_fwd_impl(x, w, mask, tm, tn, tk):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and mask.shape == w.shape
+    tm, tn, tk = _pick_tile(m, tm), _pick_tile(n, tn), _pick_tile(k, tk)
+    nk = k // tk
+    return pl.pallas_call(
+        functools.partial(_masked_matmul_kernel, nk=nk),
+        grid=(m // tm, n // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[_scratch(tm, tn)],
+        interpret=True,
+    )(x, w, mask)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def bp_matmul(x, w, mask, tm=DEFAULT_TM, tn=DEFAULT_TN, tk=DEFAULT_TK):
+    """Block-punched masked matmul: ``x @ (w * mask)``, differentiable.
+
+    The mask is a constant (non-differentiated) 0/1 tensor. Gradients:
+    dX = dY @ (W*M)ᵀ and dW = (Xᵀ @ dY) * M — both computed by the same
+    Pallas kernel so the backward pass exercises L1 too.
+    """
+    return _bp_matmul_fwd_impl(x, w, mask, tm, tn, tk)
+
+
+def _bp_fwd(x, w, mask, tm, tn, tk):
+    return _bp_matmul_fwd_impl(x, w, mask, tm, tn, tk), (x, w, mask)
+
+
+def _bp_bwd(tm, tn, tk, res, dy):
+    x, w, mask = res
+    wm_t = jnp.transpose(w * mask.astype(w.dtype))
+    ones_x = jnp.ones_like(wm_t)
+    dx = _bp_matmul_fwd_impl(dy, wm_t, ones_x, tm, tn, tk)
+    xt = jnp.transpose(x)
+    ones_w = jnp.ones_like(dy)
+    dw_dense = _bp_matmul_fwd_impl(xt, dy, ones_w, tm, tn, tk)
+    dw = dw_dense * mask.astype(dw_dense.dtype)
+    return dx, dw, None
+
+
+bp_matmul.defvjp(_bp_fwd, _bp_bwd)
+
+
+def vmem_bytes(tm=DEFAULT_TM, tn=DEFAULT_TN, tk=DEFAULT_TK, dtype_bytes=4):
+    """Static VMEM footprint estimate for one kernel instance.
+
+    x tile + w tile + mask tile + out tile + f32 accumulator, double-buffered
+    inputs (Pallas pipelines the HBM->VMEM copies). Used by DESIGN.md §Perf to
+    check the tiling against the ~16 MiB/core VMEM budget.
+    """
+    in_tiles = 2 * (tm * tk + 2 * tk * tn) * dtype_bytes  # double-buffered
+    out_tiles = tm * tn * dtype_bytes + tm * tn * 4
+    return in_tiles + out_tiles

@@ -1,0 +1,64 @@
+"""Convolutions lowered onto the L1 Pallas matmul kernel.
+
+The paper's compiler executes every CONV as either Winograd (3×3, dense),
+GEMM (im2col), or a depthwise schedule on the phone. On the TPU side all of
+them map to the MXU, so the supernet lowers every convolution to
+im2col + ``bp_matmul`` (see DESIGN.md §Hardware-Adaptation). Block-punched
+masks over the 4-D weight tensor flatten to (KH·KW·Cin, Cout) GEMM masks —
+the same flattening the Rust mask generator (`pruning::mask`) performs, so
+mask layout is part of the artifact ABI.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import bp_matmul as K
+from .ref import im2col_ref
+
+
+def conv2d(x, w, mask=None, stride=1, padding="SAME"):
+    """Masked conv via im2col + Pallas GEMM.
+
+    x: (N, H, W, Cin), w: (KH, KW, Cin, Cout), mask: w.shape or None.
+    """
+    kh, kw, cin, cout = w.shape
+    cols, (oh, ow) = im2col_ref(x, kh, kw, stride, padding)
+    w2 = w.reshape(kh * kw * cin, cout)
+    m2 = (
+        mask.astype(w.dtype).reshape(kh * kw * cin, cout)
+        if mask is not None
+        else jnp.ones_like(w2)
+    )
+    out = K.bp_matmul(cols, w2, m2)
+    return out.reshape(x.shape[0], oh, ow, cout)
+
+
+def depthwise_conv2d(x, w, mask=None, stride=1, padding="SAME"):
+    """Masked depthwise conv. x: (N,H,W,C), w: (KH,KW,C).
+
+    Depthwise is memory-bound, not MXU-bound: per-channel kh·kw dot products
+    don't fill a systolic tile, so it stays a vector (VPU-style) einsum rather
+    than being forced through the GEMM kernel. The latency simulator models
+    the phone-side depthwise schedule separately for the same reason.
+    """
+    kh, kw, c = w.shape
+    if mask is not None:
+        w = w * mask.astype(w.dtype)
+    cols, (oh, ow) = im2col_ref(x, kh, kw, stride, padding)
+    cols = cols.reshape(-1, kh * kw, c)
+    out = jnp.einsum(
+        "mkc,kc->mc",
+        cols.astype(jnp.float32),
+        w.reshape(kh * kw, c).astype(jnp.float32),
+    ).astype(x.dtype)
+    return out.reshape(x.shape[0], oh, ow, c)
+
+
+def linear(x, w, mask=None):
+    """Masked FC layer (block-based pruning) via the Pallas GEMM.
+
+    x: (B, Din), w: (Din, Dout).
+    """
+    m = mask.astype(w.dtype) if mask is not None else jnp.ones_like(w)
+    return K.bp_matmul(x, w, m)

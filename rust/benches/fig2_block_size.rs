@@ -1,0 +1,67 @@
+//! E1 — Fig. 2: accuracy vs latency across block-punched block sizes
+//! (ResNet-50-scale, uniform 6x rate).
+//!
+//! Accuracy comes from the calibrated proxy model (the trained-path version
+//! of this sweep is `examples/block_size_sweep.rs`); latency from the full
+//! compiler simulation. Also times the latency-measurement hot path.
+
+use npas::bench::{quick, Table};
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{measure, Framework, LayerSparsity, SparsityMap};
+use npas::graph::zoo;
+use npas::pruning::{PruneRate, PruneScheme};
+use npas::search::evaluator::degradation_degree;
+
+fn main() {
+    println!("# E1 / Fig.2 — accuracy vs latency vs block size (6x block-punched, ResNet-50-scale)\n");
+    let rate = 6.0f32;
+    let net = zoo::resnet50();
+    let base_acc = 0.76; // ResNet-50 ImageNet-scale anchor (proxy)
+
+    let sizes: &[(usize, usize, &str)] = &[
+        (1, 1, "1x1 (unstructured)"),
+        (2, 2, "2x2"),
+        (4, 2, "4x2"),
+        (8, 4, "8x4 (paper)"),
+        (16, 8, "16x8"),
+        (64, 16, "64x16"),
+        (4096, 4096, "whole (coarse)"),
+    ];
+
+    let table = Table::new(&["block", "accuracy", "latency_ms"], &[22, 12, 14]);
+    let mut rows = Vec::new();
+    for &(bf, bc, label) in sizes {
+        let scheme = PruneScheme::BlockPunched { bf, bc };
+        let mut sp = SparsityMap::new();
+        for l in &net.layers {
+            if l.is_conv() {
+                sp.insert(l.id, LayerSparsity { scheme, rate: PruneRate::new(rate) });
+            }
+        }
+        let lat = measure(&net, &sp, &KRYO_485, Framework::Ours, 100).mean_ms;
+        let sparsity = (1.0 - 1.0 / rate) as f64;
+        let acc = base_acc - degradation_degree(scheme) * sparsity.powf(1.6);
+        table.row(&[label.to_string(), format!("{acc:.3}"), format!("{lat:.2}")]);
+        rows.push((label, acc, lat));
+    }
+
+    // shape assertions (paper Fig. 2): accuracy decreases with block size,
+    // latency decreases with block size, 8x4 close to coarse latency.
+    let accs: Vec<f64> = rows.iter().map(|r| r.1).collect();
+    let lats: Vec<f64> = rows.iter().map(|r| r.2).collect();
+    assert!(accs.windows(2).all(|w| w[0] >= w[1] - 1e-9), "accuracy not monotone");
+    assert!(lats[0] > lats[5], "unstructured must be slowest");
+    assert!(lats[3] < lats[0] * 0.6, "8x4 must strongly beat unstructured latency");
+    println!("\nshape check vs paper: PASS (monotone accuracy, U-shaped trade-off)\n");
+
+    // hot path timing: one full compile+measure of the sparse ResNet-50
+    let mut sp = SparsityMap::new();
+    for l in &net.layers {
+        if l.is_conv() {
+            sp.insert(l.id, LayerSparsity::new(PruneScheme::block_punched_default(), rate));
+        }
+    }
+    quick("compile+measure resnet50 (sparse, 100 runs)", || {
+        std::hint::black_box(measure(&net, &sp, &KRYO_485, Framework::Ours, 100));
+    });
+}

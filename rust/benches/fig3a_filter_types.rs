@@ -1,0 +1,52 @@
+//! E2 — Fig. 3(a): latency vs computation (MACs) for different filter
+//! types at a fixed 56x56 feature map, sweeping the number of filters.
+//!
+//! Expected shape: at equal MACs, 3x3 (Winograd) < 1x1 (GEMM, no im2col)
+//! < 5x5 < 7x7.
+
+use npas::bench::{quick, Table};
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{measure, measure_dense, Framework, SparsityMap};
+use npas::graph::zoo;
+
+fn main() {
+    println!("# E2 / Fig.3(a) — latency vs MACs per filter type (56x56 fmap, mobile CPU)\n");
+    let kernel_sizes = [1usize, 3, 5, 7];
+    // sweep computation by scaling output filters; cin fixed at 128
+    let filter_counts = [32usize, 64, 128, 256, 512];
+
+    let mut header = vec!["MACs(M)".to_string()];
+    header.extend(kernel_sizes.iter().map(|k| format!("{k}x{k} (ms)")));
+    let table = Table::new(
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        &[12, 12, 12, 12, 12],
+    );
+
+    let mut series: Vec<Vec<(f64, f64)>> = vec![Vec::new(); kernel_sizes.len()];
+    for &nf in &filter_counts {
+        let mut cells = Vec::new();
+        // equal-MACs: scale nf by 9/k^2 relative to the 3x3 column
+        let macs_anchor = zoo::single_conv(56, 3, 128, nf).total_macs() as f64;
+        cells.push(format!("{:.0}", macs_anchor / 1e6));
+        for (ki, &k) in kernel_sizes.iter().enumerate() {
+            let scaled_nf = ((nf * 9) / (k * k)).max(1);
+            let net = zoo::single_conv(56, k, 128, scaled_nf);
+            let ms = measure_dense(&net, &KRYO_485, Framework::Ours).mean_ms;
+            series[ki].push((net.total_macs() as f64, ms));
+            cells.push(format!("{ms:.2}"));
+        }
+        table.row(&cells);
+    }
+
+    // shape assertions at the largest size: 3x3 fastest, then 1x1, 5x5, 7x7
+    let last: Vec<f64> = series.iter().map(|s| s.last().unwrap().1).collect();
+    assert!(last[1] < last[0], "3x3 {:.2} must beat 1x1 {:.2}", last[1], last[0]);
+    assert!(last[0] < last[2], "1x1 must beat 5x5");
+    assert!(last[2] < last[3], "5x5 must beat 7x7");
+    println!("\nshape check vs paper (3x3 < 1x1 < 5x5 < 7x7 at equal MACs): PASS\n");
+
+    let net = zoo::single_conv(56, 3, 256, 256);
+    quick("measure single 3x3 conv layer", || {
+        std::hint::black_box(measure(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours, 100));
+    });
+}

@@ -1,0 +1,75 @@
+//! E3 — Fig. 3(b): computation speedup vs pruning rate per scheme
+//! (3x3 CONV, 56x56 feature map, 256->256 channels, mobile CPU).
+//!
+//! Expected shape: fine-grained schemes (pattern, block-punched) beat
+//! unstructured everywhere and stay comparable to coarse filter pruning
+//! below ~5x.
+
+use npas::bench::{quick, Table};
+use npas::compiler::device::KRYO_485;
+use npas::compiler::LayerSparsity;
+use npas::pruning::{generate_mask, PruneRate, PruneScheme};
+use npas::tensor::{Tensor, XorShift64Star};
+
+const MACS: f64 = 56.0 * 56.0 * 9.0 * 256.0 * 256.0;
+
+fn main() {
+    println!("# E3 / Fig.3(b) — speedup vs pruning rate per scheme (3x3, 56x56, 256ch)\n");
+    let rates = [2.0f32, 2.5, 3.0, 5.0, 7.0, 10.0];
+    let schemes = [
+        ("unstructured", PruneScheme::Unstructured),
+        ("pattern", PruneScheme::Pattern),
+        ("block-punched 8x4", PruneScheme::block_punched_default()),
+        ("filter (coarse)", PruneScheme::Filter),
+    ];
+
+    let mut header = vec!["scheme".to_string()];
+    header.extend(rates.iter().map(|r| format!("{r}x")));
+    let table = Table::new(
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        &[20, 9, 9, 9, 9, 9, 9],
+    );
+
+    let mut grid = Vec::new();
+    for (label, scheme) in schemes {
+        let mut cells = vec![label.to_string()];
+        let mut row = Vec::new();
+        for &rate in &rates {
+            let s = LayerSparsity::new(scheme, rate).layer_speedup(MACS, &KRYO_485);
+            row.push(s);
+            cells.push(format!("{s:.2}"));
+        }
+        grid.push(row);
+        table.row(&cells);
+    }
+
+    // shape assertions per the paper
+    for (i, &rate) in rates.iter().enumerate() {
+        assert!(grid[1][i] > grid[0][i], "pattern <= unstructured at {rate}x");
+        assert!(grid[2][i] > grid[0][i], "block <= unstructured at {rate}x");
+        if rate <= 5.0 {
+            assert!(
+                grid[2][i] / grid[3][i] > 0.8,
+                "block-punched not comparable to coarse at {rate}x"
+            );
+        }
+    }
+    println!("\nshape check vs paper (fine > unstructured; ≈ coarse below 5x): PASS\n");
+
+    // hot path: mask generation itself (what the search calls constantly)
+    let mut rng = XorShift64Star::new(5);
+    let w = Tensor::he_normal(vec![3, 3, 256, 256], &mut rng);
+    quick("generate_mask block-punched 3x3x256x256 @6x", || {
+        std::hint::black_box(generate_mask(
+            &w,
+            PruneScheme::block_punched_default(),
+            PruneRate::new(6.0),
+        ));
+    });
+    quick("generate_mask pattern 3x3x256x256 @2.25x", || {
+        std::hint::black_box(generate_mask(&w, PruneScheme::Pattern, PruneRate::new(2.25)));
+    });
+    quick("generate_mask unstructured 3x3x256x256 @6x", || {
+        std::hint::black_box(generate_mask(&w, PruneScheme::Unstructured, PruneRate::new(6.0)));
+    });
+}

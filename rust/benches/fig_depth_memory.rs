@@ -1,0 +1,52 @@
+//! E4 — §4 depth observation: a narrower-but-deeper ResNet-50 (2x layers,
+//! equal MACs) is slower on mobile GPU due to memory-bound intermediate
+//! traffic (paper: 44ms vs 36ms = 1.22x).
+
+use npas::bench::{quick, Table};
+use npas::compiler::device::{ADRENO_640, KRYO_485};
+use npas::compiler::{measure_dense, Framework};
+use npas::graph::zoo;
+
+fn main() {
+    println!("# E4 / §4 — narrower-but-deeper ResNet-50 at equal MACs\n");
+    let base = zoo::resnet50();
+    let deep = zoo::resnet50_narrow_deep();
+    println!(
+        "MACs: base {:.2}G, deep {:.2}G (ratio {:.2}); layers: {} vs {}\n",
+        base.total_macs() as f64 / 1e9,
+        deep.total_macs() as f64 / 1e9,
+        deep.total_macs() as f64 / base.total_macs() as f64,
+        base.layers.len(),
+        deep.layers.len()
+    );
+
+    let table = Table::new(&["device", "base_ms", "deep_ms", "ratio", "paper"], &[24, 10, 10, 8, 8]);
+    let mut gpu_ratio = 0.0;
+    for (dev, paper) in [(&ADRENO_640, "1.22x"), (&KRYO_485, "-")] {
+        let b = measure_dense(&base, dev, Framework::Ours);
+        let d = measure_dense(&deep, dev, Framework::Ours);
+        let ratio = d.mean_ms / b.mean_ms;
+        if dev.is_gpu {
+            gpu_ratio = ratio;
+        }
+        table.row(&[
+            dev.name.to_string(),
+            format!("{:.1}", b.mean_ms),
+            format!("{:.1}", d.mean_ms),
+            format!("{ratio:.2}x"),
+            paper.to_string(),
+        ]);
+    }
+    assert!(
+        (1.05..1.5).contains(&gpu_ratio),
+        "GPU deep/base ratio {gpu_ratio:.2} out of band (paper 1.22)"
+    );
+    println!("\nshape check vs paper (deep-narrow slower at equal MACs): PASS\n");
+
+    quick("measure_dense resnet50 GPU", || {
+        std::hint::black_box(measure_dense(&base, &ADRENO_640, Framework::Ours));
+    });
+    quick("measure_dense resnet50-deep GPU", || {
+        std::hint::black_box(measure_dense(&deep, &ADRENO_640, Framework::Ours));
+    });
+}

@@ -1,0 +1,81 @@
+//! L3 hot-path microbenchmarks (§Perf): the operations the search loop
+//! executes thousands of times. These are the profile targets of the
+//! performance pass recorded in EXPERIMENTS.md §Perf.
+
+use npas::bench::bench;
+use npas::compiler::device::KRYO_485;
+use npas::compiler::tuning::tune_gemm;
+use npas::compiler::{codegen, Framework, SparsityMap};
+use npas::graph::zoo;
+use npas::pruning::{generate_mask, PruneRate, PruneScheme};
+use npas::search::bo::gp::Gp;
+use npas::search::bo::wl_kernel::{wl_features, wl_kernel_normalized};
+use npas::search::qlearning::{QAgent, QConfig};
+use npas::search::space::{layer_actions, NpasScheme};
+use npas::tensor::{Tensor, XorShift64Star};
+use npas::train::Branch;
+use std::time::Duration;
+
+fn main() {
+    println!("# L3 hot paths\n");
+    let budget = Duration::from_millis(400);
+
+    // 1. compiler: full plan build + timing for a big graph
+    let r50 = zoo::resnet50();
+    bench("codegen::compile resnet50 (dense)", budget, || {
+        std::hint::black_box(codegen::compile(&r50, &SparsityMap::new(), &KRYO_485, Framework::Ours));
+    });
+
+    let mbv3 = zoo::mobilenet_v3();
+    bench("codegen::compile mobilenet_v3 (dense)", budget, || {
+        std::hint::black_box(codegen::compile(&mbv3, &SparsityMap::new(), &KRYO_485, Framework::Ours));
+    });
+
+    // 2. auto-tuner on a big GEMM
+    bench("tune_gemm 3136x256x2304", budget, || {
+        std::hint::black_box(tune_gemm(&KRYO_485, 3136, 256, 2304));
+    });
+
+    // 3. mask generation (called per tensor per candidate)
+    let mut rng = XorShift64Star::new(3);
+    let w = Tensor::he_normal(vec![3, 3, 128, 128], &mut rng);
+    bench("generate_mask block-punched 3x3x128x128", budget, || {
+        std::hint::black_box(generate_mask(&w, PruneScheme::block_punched_default(), PruneRate::new(6.0)));
+    });
+
+    // 4. WL kernel + GP fit at realistic observation counts
+    let acts = layer_actions(Branch::Conv3x3);
+    let schemes: Vec<NpasScheme> = (0..48)
+        .map(|i| {
+            let mut rng = XorShift64Star::new(i as u64 + 1);
+            NpasScheme {
+                choices: (0..5)
+                    .map(|_| acts[rng.next_range(acts.len() as u64) as usize])
+                    .collect(),
+                head_rate: PruneRate::new(PruneRate::SPACE[rng.next_range(7) as usize]),
+            }
+        })
+        .collect();
+    let f0 = wl_features(&schemes[0], 2);
+    let f1 = wl_features(&schemes[1], 2);
+    bench("wl_features (M=2) per scheme", budget, || {
+        std::hint::black_box(wl_features(&schemes[2], 2));
+    });
+    bench("wl_kernel_normalized pair", budget, || {
+        std::hint::black_box(wl_kernel_normalized(&f0, &f1));
+    });
+    bench("GP fit (48 observations)", budget, || {
+        let mut gp = Gp::new(1e-3);
+        for (i, s) in schemes.iter().enumerate() {
+            gp.observe(s, i as f64 * 0.01);
+        }
+        gp.fit();
+        std::hint::black_box(gp.predict(&schemes[0]));
+    });
+
+    // 5. Q-agent pool generation
+    bench("QAgent::generate_pool(24)", budget, || {
+        let mut agent = QAgent::new(&[Branch::Conv3x3; 5], QConfig::default(), 9);
+        std::hint::black_box(agent.generate_pool(24));
+    });
+}

@@ -1,0 +1,99 @@
+//! E7 — Table 2: NPAS results at the paper's latency targets next to the
+//! reference lightweight networks.
+//!
+//! Reference rows reprint the published numbers; NPAS rows come from real
+//! proxy-pipeline searches (Q-learning + WL-GP BO + compiler-simulated
+//! measurement) at the paper's GPU targets. The shape to reproduce: NPAS
+//! rows dominate the references on latency at matched accuracy tiers, with
+//! fewer MACs at equal accuracy.
+
+use npas::bench::{quick, Table};
+use npas::compiler::device::{ADRENO_640, KRYO_485};
+use npas::coordinator::EventLog;
+use npas::search::evaluator::{measure_scheme, scheme_footprint, ProxyEvaluator};
+use npas::search::npas::{run_proxy, NpasConfig};
+
+fn main() {
+    println!("# E7 / Table 2 — NPAS vs representative lightweight networks\n");
+    let table = Table::new(
+        &["model", "search", "params(M)", "MACs(M)", "top1", "cpu_ms", "gpu_ms"],
+        &[26, 8, 10, 9, 7, 8, 8],
+    );
+
+    // published reference rows (paper Table 2; latency on their devices)
+    for (name, search, params, macs, top1, cpu, gpu) in [
+        ("MobileNet-V1 [31]", "N/N", 4.2, 575.0, 70.6, -1.0, -1.0),
+        ("MobileNet-V2 [64]", "N/N", 3.4, 300.0, 72.0, -1.0, -1.0),
+        ("MobileNet-V3 [30]", "Y/N", 5.4, 227.0, 75.2, -1.0, -1.0),
+        ("MnasNet-A1 [68]", "Y/N", 3.9, 312.0, 75.2, 78.0, -1.0),
+        ("ProxylessNas-R [8]", "Y/N", -1.0, -1.0, 74.6, 78.0, -1.0),
+    ] {
+        table.row(&[
+            name.to_string(),
+            search.to_string(),
+            fmt_opt(params),
+            fmt_opt(macs),
+            format!("{top1:.1}"),
+            fmt_opt(cpu),
+            fmt_opt(gpu),
+        ]);
+    }
+
+    // NPAS rows: real searches at the paper's four GPU latency targets
+    let mut prev_acc = f32::MAX;
+    let mut results = Vec::new();
+    for (target, label) in
+        [(6.7, "NPAS (ours) @6.7"), (5.9, "NPAS (ours) @5.9"), (3.9, "NPAS (ours) @3.9"), (3.3, "NPAS (ours) @3.3")]
+    {
+        let ev = ProxyEvaluator::new(&ADRENO_640);
+        let mut log = EventLog::memory();
+        let mut cfg = NpasConfig::small(target);
+        cfg.seed = 42 + (target * 10.0) as u64; // decorrelate runs per target
+        cfg.phase2.rounds = 20;
+        cfg.phase2.pool_size = 48;
+        cfg.phase2.bo_batch = 8; // table-quality budget (still <100ms/search)
+        let (p2, scheme) = run_proxy(&ev, &cfg, &mut log);
+        let (params, macs) = scheme_footprint(&scheme);
+        let cpu = measure_scheme(&scheme, &KRYO_485);
+        let gpu = measure_scheme(&scheme, &ADRENO_640);
+        table.row(&[
+            label.to_string(),
+            "Y/Y".to_string(),
+            format!("{:.1}", params as f64 / 1e6),
+            format!("{:.0}", macs as f64 / 1e6),
+            format!("{:.1}", p2.best_outcome.accuracy * 100.0),
+            format!("{cpu:.1}"),
+            format!("{gpu:.1}"),
+        ]);
+        results.push((target, p2.best_outcome.accuracy, gpu, macs));
+        prev_acc = prev_acc.min(p2.best_outcome.accuracy);
+    }
+
+    // shape checks: latency targets met (within measurement band) and
+    // tighter targets never increase MACs systematically
+    for (target, _acc, gpu, _m) in &results {
+        assert!(
+            *gpu <= target * 1.25,
+            "target {target}: measured {gpu:.2}ms blew past the constraint"
+        );
+    }
+    let first = &results[0];
+    let last = results.last().unwrap();
+    assert!(last.3 <= first.3, "tightest target must not need more MACs");
+    assert!(last.1 <= first.1 + 0.02, "accuracy should tighten with the budget");
+    println!("\nshape check vs paper (targets met; MACs/accuracy scale with budget): PASS\n");
+
+    quick("one full proxy NPAS search (6 rounds x 4 evals)", || {
+        let ev = ProxyEvaluator::new(&ADRENO_640);
+        let mut log = EventLog::memory();
+        std::hint::black_box(run_proxy(&ev, &NpasConfig::small(6.7), &mut log));
+    });
+}
+
+fn fmt_opt(v: f64) -> String {
+    if v < 0.0 {
+        "-".to_string()
+    } else {
+        format!("{v:.1}")
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal bench harness (criterion is unavailable offline).
+//!
+//! Bench binaries (`rust/benches/*.rs`, `harness = false`) print the
+//! paper-table rows their experiment regenerates plus criterion-style
+//! timing lines for the hot code paths: warmup, adaptive iteration count,
+//! mean ± std over samples.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub iters: u64,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Measure `f`, printing a criterion-style line. Adaptive: targets
+/// ~`budget` of total sampling after a short warmup.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> Measurement {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_nanos() / once.as_nanos()).clamp(3, 10_000) as u64;
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    let m = Measurement {
+        mean: Duration::from_secs_f64(mean),
+        std_dev: Duration::from_secs_f64(var.sqrt()),
+        iters,
+    };
+    println!(
+        "bench {name:44} {:>12} ± {:<10} ({} iters)",
+        fmt_duration(m.mean),
+        fmt_duration(m.std_dev),
+        m.iters
+    );
+    m
+}
+
+/// Short default budget for table benches.
+pub fn quick(name: &str, f: impl FnMut()) -> Measurement {
+    bench(name, Duration::from_millis(300), f)
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Markdown-ish table printer shared by the bench binaries.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Table {
+        let mut line = String::new();
+        for (h, w) in headers.iter().zip(widths) {
+            line.push_str(&format!("{h:>w$}", w = *w));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+        Table { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{c:>w$}", w = *w));
+        }
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_measurement() {
+        let m = bench("noop-spin", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration(Duration::from_nanos(5)).ends_with("ns"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with("s"));
+    }
+}

@@ -1,0 +1,291 @@
+//! Code generation: lower a network + sparsity annotations into an
+//! execution plan — per-group algorithm choice, effective compute, memory
+//! traffic and utilization. This *is* the compiler's output minus the
+//! machine code; the latency model times the plan, and the NPAS reward
+//! consumes the timing (compiler-aware search).
+
+use crate::graph::{Layer, LayerKind, Network};
+
+use super::device::DeviceSpec;
+use super::frameworks::{Framework, FrameworkCaps};
+use super::fusion::fuse;
+use super::sparse_exec::LayerSparsity;
+use super::tuning::tune_gemm;
+use super::winograd;
+use super::SparsityMap;
+
+/// Kernel algorithm the code generator emits for a compute layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// F(2x2,3x3) Winograd — dense 3x3 stride-1 only.
+    Winograd,
+    /// Direct GEMM (1x1 convs: no im2col materialization).
+    Gemm1x1,
+    /// im2col + GEMM (general conv).
+    GemmIm2col,
+    /// Depthwise direct schedule (memory-bound).
+    Depthwise,
+    /// FC GEMV.
+    Gemv,
+    /// Elementwise / pooling / SE — memory-bound glue.
+    Memory,
+}
+
+impl Algo {
+    /// Fraction of device peak a well-implemented kernel of this algorithm
+    /// achieves on large dense problems (before tuning/sparsity/size
+    /// effects). Ordering encodes the Fig. 3(a) observation.
+    pub fn base_utilization(self) -> f64 {
+        match self {
+            Algo::Winograd => 0.72,
+            Algo::Gemm1x1 => 0.70,
+            Algo::GemmIm2col => 0.52,
+            Algo::Depthwise => 0.18,
+            Algo::Gemv => 0.60,
+            Algo::Memory => 0.0,
+        }
+    }
+}
+
+/// A fused group with all quantities the latency model needs.
+#[derive(Debug, Clone)]
+pub struct FusedGroup {
+    pub layer_ids: Vec<usize>,
+    pub algo: Algo,
+    /// Dense MACs of the group.
+    pub macs: f64,
+    /// MACs after sparsity.
+    pub eff_macs: f64,
+    /// Combined utilization multiplier (algo x tuning x sparsity x engine).
+    pub utilization: f64,
+    /// DRAM traffic: boundary activations + weights + sparse index
+    /// metadata, in bytes.
+    pub bytes: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub network: String,
+    pub device: &'static str,
+    pub framework: Framework,
+    pub groups: Vec<FusedGroup>,
+}
+
+impl ExecutionPlan {
+    pub fn total_eff_macs(&self) -> f64 {
+        self.groups.iter().map(|g| g.eff_macs).sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.groups.iter().map(|g| g.bytes).sum()
+    }
+}
+
+/// GEMM dims of a conv layer (im2col view): (M, N, K).
+fn gemm_dims(l: &Layer) -> (usize, usize, usize) {
+    match l.kind {
+        LayerKind::Conv2d { kh, kw, cin, cout, .. } => {
+            let (oh, ow, _) = l.out_hwc();
+            (oh * ow, cout, kh * kw * cin)
+        }
+        LayerKind::Linear { din, dout } => (1, dout, din),
+        _ => (1, 1, 1),
+    }
+}
+
+fn choose_algo(l: &Layer, sp: Option<&LayerSparsity>, caps: &FrameworkCaps) -> Algo {
+    match l.kind {
+        LayerKind::Conv2d { kh, kw, stride, depthwise, .. } => {
+            if depthwise {
+                Algo::Depthwise
+            } else if kh == 1 && kw == 1 {
+                Algo::Gemm1x1
+            } else if kh == 3
+                && kw == 3
+                && stride == 1
+                && caps.winograd
+                && sp.map(|s| s.is_dense() || matches!(s.scheme, crate::pruning::PruneScheme::Filter))
+                    .unwrap_or(true)
+            {
+                // Winograd needs dense kernels; filter pruning keeps the
+                // surviving filters dense so it still applies.
+                Algo::Winograd
+            } else {
+                Algo::GemmIm2col
+            }
+        }
+        LayerKind::Linear { .. } => Algo::Gemv,
+        _ => Algo::Memory,
+    }
+}
+
+/// Lower `net` into an execution plan.
+pub fn compile(
+    net: &Network,
+    sparsity: &SparsityMap,
+    device: &DeviceSpec,
+    framework: Framework,
+) -> ExecutionPlan {
+    let caps = framework.caps();
+    let groups = fuse(net, caps.fusion);
+    let mut out = Vec::with_capacity(groups.len());
+
+    for ids in groups {
+        // anchor = the first compute layer of the group (if any)
+        let anchor = ids
+            .iter()
+            .map(|&i| &net.layers[i])
+            .find(|l| l.prunable())
+            .or(Some(&net.layers[ids[0]]))
+            .unwrap();
+        let sp = if caps.sparse { sparsity.get(&anchor.id) } else { None };
+        let algo = choose_algo(anchor, sp, &caps);
+
+        let macs: f64 = ids.iter().map(|&i| net.layers[i].macs() as f64).sum();
+        let mut eff_macs = macs;
+        let mut util = algo.base_utilization().max(0.05) * caps.util_mult;
+        if device.is_gpu {
+            util *= caps.gpu_util_mult.max(0.01);
+        }
+
+        // Mobile-unfriendly activations (§5.1 Phase 1): sigmoid/swish need
+        // exponentials — ~12 scalar-pipe ops per element that cannot use the
+        // vector FMA units. Charged as extra effective compute on the group,
+        // which is exactly what Phase 1's hard-swish rewrite removes.
+        let unfriendly_elems: f64 = ids
+            .iter()
+            .map(|&i| {
+                let l = &net.layers[i];
+                match l.kind {
+                    LayerKind::Act(a) if !a.mobile_friendly() => {
+                        let (h, w, c) = l.in_hwc;
+                        (h * w * c) as f64
+                    }
+                    _ => 0.0,
+                }
+            })
+            .sum();
+        eff_macs += unfriendly_elems * 12.0;
+
+        if algo == Algo::Winograd {
+            eff_macs /= winograd::REALIZED_SPEEDUP;
+        }
+        if let Some(sp) = sp {
+            if !sp.is_dense() && sp.scheme.applicable_to_kernel_of(anchor) {
+                eff_macs = sp.effective_macs(eff_macs);
+                util *= sp.utilization(device);
+            }
+        }
+        if caps.autotune && matches!(algo, Algo::Gemm1x1 | Algo::GemmIm2col | Algo::Winograd) {
+            let (m, n, k) = gemm_dims(anchor);
+            util *= tune_gemm(device, m, n, k).utilization;
+        } else if matches!(algo, Algo::Gemm1x1 | Algo::GemmIm2col | Algo::Winograd) {
+            util *= 0.80; // untuned generic tiling
+        }
+
+        // memory traffic: group-boundary activations + every layer's weights
+        let first = &net.layers[ids[0]];
+        let last = &net.layers[*ids.last().unwrap()];
+        let (h, w, c) = first.in_hwc;
+        let (oh, ow, oc) = last.out_hwc();
+        let act_bytes = 2.0 * ((h * w * c) as f64 + (oh * ow * oc) as f64);
+        let mut weight_bytes: f64 =
+            ids.iter().map(|&i| 2.0 * net.layers[i].params() as f64).sum();
+        if let Some(sp) = sp {
+            if !sp.is_dense() {
+                let kept = weight_bytes / sp.rate.0 as f64;
+                weight_bytes = kept * (1.0 + sp.index_overhead_bytes_per_weight() / 2.0);
+            }
+        }
+
+        out.push(FusedGroup {
+            layer_ids: ids,
+            algo,
+            macs,
+            eff_macs,
+            utilization: util.clamp(0.02, 1.0),
+            bytes: act_bytes + weight_bytes,
+        });
+    }
+
+    ExecutionPlan { network: net.name.clone(), device: device.name, framework, groups: out }
+}
+
+impl crate::pruning::PruneScheme {
+    /// Scheme applicability against a concrete layer (pattern is 3x3-only).
+    fn applicable_to_kernel_of(&self, l: &Layer) -> bool {
+        match l.kind {
+            LayerKind::Conv2d { kh, kw, .. } => self.applicable_to_kernel(kh, kw),
+            _ => !matches!(self, crate::pruning::PruneScheme::Pattern),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::KRYO_485;
+    use crate::graph::zoo;
+    use crate::pruning::PruneScheme;
+
+    #[test]
+    fn algo_selection() {
+        let net = zoo::single_conv(56, 3, 64, 64);
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        assert_eq!(plan.groups[0].algo, Algo::Winograd);
+
+        let net1 = zoo::single_conv(56, 1, 64, 64);
+        let plan1 = compile(&net1, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        assert_eq!(plan1.groups[0].algo, Algo::Gemm1x1);
+
+        let net5 = zoo::single_conv(56, 5, 64, 64);
+        let plan5 = compile(&net5, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        assert_eq!(plan5.groups[0].algo, Algo::GemmIm2col);
+    }
+
+    #[test]
+    fn winograd_disabled_without_framework_support() {
+        let net = zoo::single_conv(56, 3, 64, 64);
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::TFLite);
+        assert_eq!(plan.groups[0].algo, Algo::GemmIm2col);
+    }
+
+    #[test]
+    fn winograd_reduces_effective_macs() {
+        let net = zoo::single_conv(56, 3, 64, 64);
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        let g = &plan.groups[0];
+        assert!((g.eff_macs - g.macs / winograd::REALIZED_SPEEDUP).abs() < 1.0);
+    }
+
+    #[test]
+    fn sparse_layer_shrinks_compute_when_supported() {
+        let net = zoo::single_conv(56, 3, 128, 128);
+        let mut sp = SparsityMap::new();
+        sp.insert(0, LayerSparsity::new(PruneScheme::block_punched_default(), 6.0));
+        let ours = compile(&net, &sp, &KRYO_485, Framework::Ours);
+        let mnn = compile(&net, &sp, &KRYO_485, Framework::MNN);
+        assert!(ours.total_eff_macs() < mnn.total_eff_macs() / 3.0);
+        // pattern/block sparsity forces GEMM path (no sparse winograd)
+        assert_eq!(ours.groups[0].algo, Algo::GemmIm2col);
+    }
+
+    #[test]
+    fn sparse_weights_cut_memory_traffic() {
+        let net = zoo::single_conv(14, 3, 256, 256); // weight-heavy layer
+        let mut sp = SparsityMap::new();
+        sp.insert(0, LayerSparsity::new(PruneScheme::Filter, 5.0));
+        let dense = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        let pruned = compile(&net, &sp, &KRYO_485, Framework::Ours);
+        assert!(pruned.total_bytes() < dense.total_bytes() * 0.5);
+    }
+
+    #[test]
+    fn plan_covers_whole_network() {
+        let net = zoo::mobilenet_v2();
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        let covered: usize = plan.groups.iter().map(|g| g.layer_ids.len()).sum();
+        assert_eq!(covered, net.layers.len());
+        assert!(plan.total_eff_macs() > 0.0);
+    }
+}

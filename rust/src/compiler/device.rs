@@ -1,0 +1,93 @@
+//! Device models: the Galaxy S10's mobile CPU and GPU.
+//!
+//! Numbers are derived from public specs and calibrated against the paper's
+//! anchors (Fig. 5/6, Table 2): what matters for reproduction is the
+//! *relative* behaviour — compute vs memory rooflines, vector width, per-op
+//! dispatch overhead — not absolute silicon truth.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub is_gpu: bool,
+    /// Effective peak MAC throughput for well-tuned dense f16 GEMM (MAC/s).
+    pub peak_gmacs: f64,
+    /// Main-memory bandwidth available to the accelerator (bytes/s).
+    pub mem_bw: f64,
+    /// Vector register width in f32 lanes (NEON = 4); for the GPU this is
+    /// the wave-efficiency granule.
+    pub vector_lanes: usize,
+    /// Fixed per-fused-group dispatch overhead (seconds): scheduling on
+    /// CPU, kernel launch on GPU.
+    pub group_overhead: f64,
+    /// L2-ish on-chip working set (bytes) the tuner targets.
+    pub l2_bytes: usize,
+    /// MAC count below which a layer cannot saturate the device (utilization
+    /// knee; models "remaining weights must still fill the hardware", §3).
+    pub knee_macs: f64,
+}
+
+/// Qualcomm Kryo 485 (Snapdragon 855, Galaxy S10) — mobile CPU.
+pub const KRYO_485: DeviceSpec = DeviceSpec {
+    name: "Kryo 485 (mobile CPU)",
+    is_gpu: false,
+    peak_gmacs: 40.0e9,
+    mem_bw: 14.0e9,
+    vector_lanes: 4,
+    group_overhead: 12e-6,
+    l2_bytes: 512 * 1024,
+    knee_macs: 1.0e6,
+};
+
+/// Qualcomm Adreno 640 (Snapdragon 855, Galaxy S10) — mobile GPU.
+pub const ADRENO_640: DeviceSpec = DeviceSpec {
+    name: "Adreno 640 (mobile GPU)",
+    is_gpu: true,
+    peak_gmacs: 220.0e9,
+    mem_bw: 28.0e9,
+    vector_lanes: 16,
+    group_overhead: 40e-6,
+    l2_bytes: 1024 * 1024,
+    knee_macs: 6.0e6,
+};
+
+impl DeviceSpec {
+    pub fn by_name(name: &str) -> Option<&'static DeviceSpec> {
+        match name {
+            "cpu" | "kryo485" => Some(&KRYO_485),
+            "gpu" | "adreno640" => Some(&ADRENO_640),
+            _ => None,
+        }
+    }
+
+    /// Utilization factor from finite problem size: layers with few MACs
+    /// cannot fill the device (vector lanes / waves idle).
+    pub fn size_utilization(&self, macs: f64) -> f64 {
+        macs / (macs + self.knee_macs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(DeviceSpec::by_name("cpu").unwrap().name, KRYO_485.name);
+        assert_eq!(DeviceSpec::by_name("adreno640").unwrap().is_gpu, true);
+        assert!(DeviceSpec::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn gpu_faster_but_higher_overhead() {
+        assert!(ADRENO_640.peak_gmacs > KRYO_485.peak_gmacs);
+        assert!(ADRENO_640.group_overhead > KRYO_485.group_overhead);
+    }
+
+    #[test]
+    fn size_utilization_saturates() {
+        let d = &KRYO_485;
+        assert!(d.size_utilization(1e9) > 0.99);
+        assert!(d.size_utilization(d.knee_macs) == 0.5);
+        assert!(d.size_utilization(1e3) < 0.01);
+    }
+}

@@ -1,0 +1,138 @@
+//! Baseline mobile inference frameworks (Fig. 5/6 comparators).
+//!
+//! We obviously cannot run the real MNN / TFLite / PyTorch-Mobile binaries
+//! on a phone; each framework is modeled as *our* compiler with the
+//! optimizations that framework lacks disabled, plus an engine-efficiency
+//! multiplier calibrated to the paper's published gaps (see DESIGN.md §1
+//! substitution table and the calibration tests in `latency.rs`).
+
+/// How aggressively a framework fuses layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionLevel {
+    /// No fusion: every op round-trips memory (PyTorch Mobile eager-ish).
+    None,
+    /// Conv+activation only (typical graph runtimes).
+    ActOnly,
+    /// Our compiler's full fusion (conv+act+add+SE chains, §5.1: "a strong
+    /// layer fusion beyond prior compiler work").
+    Full,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameworkCaps {
+    pub fusion: FusionLevel,
+    pub winograd: bool,
+    /// Executes sparse (pruned) models with real speedup.
+    pub sparse: bool,
+    pub gpu: bool,
+    /// Per-layer auto-tuning (otherwise a fixed engine efficiency applies).
+    pub autotune: bool,
+    /// Engine efficiency multiplier on compute utilization.
+    pub util_mult: f64,
+    /// Multiplier on per-group dispatch overhead.
+    pub overhead_mult: f64,
+    /// Extra utilization multiplier on mobile GPU: generic OpenCL kernels
+    /// vs our compiler's specialized code-gen (drives the paper's "up to
+    /// 141%" GPU gap).
+    pub gpu_util_mult: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Framework {
+    /// The paper's compiler (PatDNN lineage + this work's extensions).
+    Ours,
+    MNN,
+    TFLite,
+    PyTorchMobile,
+}
+
+impl Framework {
+    pub const ALL: [Framework; 4] =
+        [Framework::Ours, Framework::MNN, Framework::TFLite, Framework::PyTorchMobile];
+
+    pub fn caps(self) -> FrameworkCaps {
+        match self {
+            Framework::Ours => FrameworkCaps {
+                fusion: FusionLevel::Full,
+                winograd: true,
+                sparse: true,
+                gpu: true,
+                autotune: true,
+                util_mult: 1.0,
+                overhead_mult: 1.0,
+                gpu_util_mult: 1.0,
+            },
+            Framework::MNN => FrameworkCaps {
+                fusion: FusionLevel::ActOnly,
+                winograd: true,
+                sparse: false,
+                gpu: true,
+                autotune: false,
+                util_mult: 0.82,
+                overhead_mult: 1.7,
+                gpu_util_mult: 0.80,
+            },
+            Framework::TFLite => FrameworkCaps {
+                fusion: FusionLevel::ActOnly,
+                winograd: false,
+                sparse: false,
+                gpu: true,
+                autotune: false,
+                util_mult: 0.76,
+                overhead_mult: 2.0,
+                gpu_util_mult: 0.65,
+            },
+            Framework::PyTorchMobile => FrameworkCaps {
+                fusion: FusionLevel::None,
+                winograd: false,
+                sparse: false,
+                gpu: false,
+                autotune: false,
+                util_mult: 0.60,
+                overhead_mult: 2.8,
+                gpu_util_mult: 0.0,
+            },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::Ours => "Ours",
+            Framework::MNN => "MNN",
+            Framework::TFLite => "TFLite",
+            Framework::PyTorchMobile => "PyTorch Mobile",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ours_strictly_most_capable() {
+        let ours = Framework::Ours.caps();
+        for fw in [Framework::MNN, Framework::TFLite, Framework::PyTorchMobile] {
+            let c = fw.caps();
+            assert!(ours.util_mult >= c.util_mult);
+            assert!(ours.overhead_mult <= c.overhead_mult);
+            assert!(!c.sparse, "{fw:?} must not execute sparse models");
+            assert!(!c.autotune);
+        }
+    }
+
+    #[test]
+    fn pytorch_mobile_has_no_gpu() {
+        assert!(!Framework::PyTorchMobile.caps().gpu);
+        assert!(Framework::MNN.caps().gpu);
+    }
+
+    #[test]
+    fn mnn_is_best_baseline() {
+        // the paper calls MNN "the currently best framework"
+        let mnn = Framework::MNN.caps();
+        let tfl = Framework::TFLite.caps();
+        assert!(mnn.util_mult > tfl.util_mult);
+        assert!(mnn.winograd && !tfl.winograd);
+    }
+}

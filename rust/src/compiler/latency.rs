@@ -1,0 +1,216 @@
+//! Latency model + the paper's measurement protocol (100-run average).
+//!
+//! Per fused group: `t = max(compute, memory) + dispatch_overhead` — a
+//! roofline with per-group dispatch cost. Calibration tests at the bottom
+//! anchor the model to the paper's published numbers (Fig. 5/6 text claims,
+//! §4 observations); EXPERIMENTS.md records the comparison.
+
+use crate::graph::Network;
+use crate::tensor::XorShift64Star;
+
+use super::codegen::{compile, ExecutionPlan};
+use super::device::DeviceSpec;
+use super::frameworks::Framework;
+use super::SparsityMap;
+
+#[derive(Debug, Clone)]
+pub struct LatencyReport {
+    pub network: String,
+    pub framework: Framework,
+    pub device: &'static str,
+    /// Mean of `runs` simulated measurements (ms).
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub runs: usize,
+    pub compute_ms: f64,
+    pub memory_ms: f64,
+    pub overhead_ms: f64,
+    pub num_groups: usize,
+}
+
+/// Deterministic single-execution time of a plan (seconds).
+pub fn plan_time(plan: &ExecutionPlan, device: &DeviceSpec) -> (f64, f64, f64) {
+    let caps = plan.framework.caps();
+    let (mut compute, mut memory, mut overhead) = (0f64, 0f64, 0f64);
+    for g in &plan.groups {
+        let size_util = device.size_utilization(g.eff_macs.max(1.0));
+        let c = g.eff_macs / (device.peak_gmacs * g.utilization.max(1e-3) * size_util.max(1e-3));
+        let m = g.bytes / device.mem_bw;
+        // roofline: overlap compute & memory, pay the max; glue groups are
+        // pure memory.
+        compute += c.max(m) - m.min(c); // excess compute beyond overlap
+        memory += m;
+        overhead += device.group_overhead * caps.overhead_mult;
+    }
+    (compute, memory, overhead)
+}
+
+/// Compile + "measure": the paper measures 100 runs on the device and
+/// averages; we add deterministic ±2% pseudo-noise per run (thermal/sched
+/// jitter) seeded by the workload identity so results are reproducible.
+pub fn measure(
+    net: &Network,
+    sparsity: &SparsityMap,
+    device: &DeviceSpec,
+    framework: Framework,
+    runs: usize,
+) -> LatencyReport {
+    assert!(
+        framework.caps().gpu || !device.is_gpu,
+        "{} has no GPU backend",
+        framework.name()
+    );
+    let plan = compile(net, sparsity, device, framework);
+    let (c, m, o) = plan_time(&plan, device);
+    let base = c + m + o;
+
+    let mut seed = 0xABCDu64;
+    for b in net.name.bytes() {
+        seed = seed.wrapping_mul(31).wrapping_add(b as u64);
+    }
+    seed ^= (device.is_gpu as u64) << 60 ^ (framework as u64) << 50;
+    let mut rng = XorShift64Star::new(seed);
+    let mut samples = Vec::with_capacity(runs.max(1));
+    for _ in 0..runs.max(1) {
+        let jitter = 1.0 + 0.02 * (2.0 * rng.next_f32() as f64 - 1.0);
+        samples.push(base * jitter);
+    }
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var: f64 =
+        samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / samples.len() as f64;
+
+    LatencyReport {
+        network: net.name.clone(),
+        framework,
+        device: device.name,
+        mean_ms: mean * 1e3,
+        std_ms: var.sqrt() * 1e3,
+        runs: runs.max(1),
+        compute_ms: c * 1e3,
+        memory_ms: m * 1e3,
+        overhead_ms: o * 1e3,
+        num_groups: plan.groups.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::{ADRENO_640, KRYO_485};
+    use crate::compiler::sparse_exec::LayerSparsity;
+    use crate::graph::zoo;
+    use crate::pruning::PruneScheme;
+
+    fn dense_ms(net: &Network, dev: &DeviceSpec, fw: Framework) -> f64 {
+        measure(net, &SparsityMap::new(), dev, fw, 100).mean_ms
+    }
+
+    #[test]
+    fn measurement_reproducible() {
+        let net = zoo::mobilenet_v2();
+        let a = dense_ms(&net, &KRYO_485, Framework::Ours);
+        let b = dense_ms(&net, &KRYO_485, Framework::Ours);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn calibration_mobilenet_v3_cpu_gap_vs_mnn() {
+        // paper: our compiler speeds up MobileNet-V3 by up to 46% on mobile
+        // CPU vs MNN. Accept 25-75%.
+        let net = zoo::mobilenet_v3();
+        let ours = dense_ms(&net, &KRYO_485, Framework::Ours);
+        let mnn = dense_ms(&net, &KRYO_485, Framework::MNN);
+        let gain = mnn / ours - 1.0;
+        assert!((0.25..0.80).contains(&gain), "CPU gain vs MNN = {gain:.2}");
+    }
+
+    #[test]
+    fn calibration_mobilenet_v3_gpu_gap_vs_mnn() {
+        // paper: up to 141% on mobile GPU. Accept 80-220%.
+        let net = zoo::mobilenet_v3();
+        let ours = dense_ms(&net, &ADRENO_640, Framework::Ours);
+        let mnn = dense_ms(&net, &ADRENO_640, Framework::MNN);
+        let gain = mnn / ours - 1.0;
+        assert!((0.8..2.2).contains(&gain), "GPU gain vs MNN = {gain:.2}");
+    }
+
+    #[test]
+    fn calibration_absolute_scale_sane() {
+        // dense MobileNet-V3 on our framework: paper's NPAS variants hit
+        // 5-12 ms; dense V3 should land in the 8-25 ms band on CPU.
+        let net = zoo::mobilenet_v3();
+        let ms = dense_ms(&net, &KRYO_485, Framework::Ours);
+        assert!((8.0..25.0).contains(&ms), "MBV3 CPU {ms:.1}ms");
+        let gpu = dense_ms(&net, &ADRENO_640, Framework::Ours);
+        assert!(gpu < ms, "GPU {gpu:.1} should beat CPU {ms:.1}");
+    }
+
+    #[test]
+    fn narrow_deep_slower_at_equal_macs() {
+        // §4: 1.22x slower on mobile GPU (44 vs 36 ms). Accept 1.1-1.45x.
+        let base = zoo::resnet50();
+        let deep = zoo::resnet50_narrow_deep();
+        let t_base = dense_ms(&base, &ADRENO_640, Framework::Ours);
+        let t_deep = dense_ms(&deep, &ADRENO_640, Framework::Ours);
+        let ratio = t_deep / t_base;
+        assert!((1.08..1.5).contains(&ratio), "deep/base = {ratio:.2}");
+    }
+
+    #[test]
+    fn pruning_speeds_up_ours_only() {
+        let net = zoo::resnet50();
+        let mut sp = SparsityMap::new();
+        for l in &net.layers {
+            if l.is_conv() {
+                sp.insert(l.id, LayerSparsity::new(PruneScheme::block_punched_default(), 6.0));
+            }
+        }
+        let dense = dense_ms(&net, &KRYO_485, Framework::Ours);
+        let pruned = measure(&net, &sp, &KRYO_485, Framework::Ours, 100).mean_ms;
+        assert!(pruned < dense * 0.5, "6x block-punched: {dense:.1} -> {pruned:.1}");
+        // MNN ignores sparsity
+        let mnn_d = dense_ms(&net, &KRYO_485, Framework::MNN);
+        let mnn_p = measure(&net, &sp, &KRYO_485, Framework::MNN, 100).mean_ms;
+        assert!((mnn_p / mnn_d - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pytorch_mobile_gpu_panics() {
+        let net = zoo::mobilenet_v2();
+        let _ = measure(&net, &SparsityMap::new(), &ADRENO_640, Framework::PyTorchMobile, 1);
+    }
+
+    #[test]
+    fn framework_ordering_on_cpu() {
+        let net = zoo::efficientnet_b0();
+        let ours = dense_ms(&net, &KRYO_485, Framework::Ours);
+        let mnn = dense_ms(&net, &KRYO_485, Framework::MNN);
+        let tfl = dense_ms(&net, &KRYO_485, Framework::TFLite);
+        let ptm = dense_ms(&net, &KRYO_485, Framework::PyTorchMobile);
+        assert!(ours < mnn && mnn < tfl && tfl < ptm, "{ours:.1} {mnn:.1} {tfl:.1} {ptm:.1}");
+    }
+}
+
+#[cfg(test)]
+mod phase1_tests {
+    use super::*;
+    use crate::compiler::device::KRYO_485;
+    use crate::graph::zoo;
+    use crate::search::phase1::replace_unfriendly_ops;
+
+    #[test]
+    fn op_replacement_reduces_latency() {
+        // §5.1 Phase 1 must be measurable: hard-swish rewrite removes the
+        // scalar-pipe exponential cost the simulator charges for swish.
+        let net = zoo::mobilenet_v3();
+        let (friendly, replaced) = replace_unfriendly_ops(&net);
+        assert!(replaced > 0);
+        let before = measure(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours, 100).mean_ms;
+        let after =
+            measure(&friendly, &SparsityMap::new(), &KRYO_485, Framework::Ours, 100).mean_ms;
+        assert!(after < before * 0.99, "phase1: {before:.2} -> {after:.2} ms");
+        // but not absurdly much (acts are a minority of compute)
+        assert!(after > before * 0.80, "phase1 effect too large: {before:.2} -> {after:.2}");
+    }
+}

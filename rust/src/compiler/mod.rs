@@ -1,0 +1,45 @@
+//! S5/S6 — the mobile compiler simulator.
+//!
+//! The paper's latency numbers come from *compiler-generated code measured
+//! on a Samsung Galaxy S10*; we do not have the phone or the closed-source
+//! compiler, so this module rebuilds the pipeline the compiler runs and
+//! predicts latency from the resulting execution plan (DESIGN.md §1):
+//!
+//!   graph → [`codegen`] algorithm selection (Winograd / GEMM / direct /
+//!   depthwise) → [`fusion`] layer-fusion pass → [`tuning`] per-GEMM tile
+//!   auto-tuning → [`sparse_exec`] sparsity-aware utilization →
+//!   [`latency`] roofline timing + measurement protocol (100-run average).
+//!
+//! Everything the paper's §4 observations rely on is mechanistic here:
+//! Winograd exists only for dense 3×3, 1×1 skips im2col, unstructured
+//! sparsity pays index overhead and loses vectorization, small blocks
+//! under-fill vector lanes, deep-narrow nets pay per-group memory round
+//! trips. [`frameworks`] models MNN/TFLite/PyTorch-Mobile by disabling the
+//! optimizations those frameworks lack.
+
+pub mod codegen;
+pub mod device;
+pub mod frameworks;
+pub mod fusion;
+pub mod latency;
+pub mod sparse_exec;
+pub mod tuning;
+pub mod winograd;
+
+pub use codegen::{Algo, ExecutionPlan, FusedGroup};
+pub use device::DeviceSpec;
+pub use frameworks::Framework;
+pub use latency::{measure, LatencyReport};
+pub use sparse_exec::LayerSparsity;
+
+use std::collections::BTreeMap;
+
+use crate::graph::Network;
+
+/// Per-layer sparsity annotations keyed by layer id.
+pub type SparsityMap = BTreeMap<usize, LayerSparsity>;
+
+/// One-call convenience: compile + measure a dense network.
+pub fn measure_dense(net: &Network, device: &DeviceSpec, fw: Framework) -> LatencyReport {
+    measure(net, &SparsityMap::new(), device, fw, 100)
+}

@@ -1,0 +1,164 @@
+//! Sparsity-aware execution model: how each pruning scheme's compiler
+//! code-gen turns weight sparsity into (or fails to turn into) speedup.
+//!
+//! Mechanisms modeled (paper §3/§4, Fig. 3b):
+//! * compute shrinks by the pruning rate for every scheme;
+//! * unstructured sparsity pays per-element index decode and breaks
+//!   vectorization → low utilization + extra index traffic;
+//! * pattern-based: kernels grouped by pattern, register-level reuse
+//!   preserved → high utilization (3×3 only);
+//! * block-punched: utilization depends on channels-per-block covering the
+//!   device vector lanes; 1×1 blocks degenerate to unstructured, whole
+//!   tensor degenerates to coarse;
+//! * filter pruning: the layer just becomes a smaller dense layer → full
+//!   utilization;
+//! * at extreme rates every fine-grained scheme starves the hardware
+//!   (size-utilization knee in `DeviceSpec`).
+
+use crate::pruning::{PruneRate, PruneScheme};
+
+use super::device::DeviceSpec;
+
+/// Per-layer sparsity annotation consumed by codegen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerSparsity {
+    pub scheme: PruneScheme,
+    pub rate: PruneRate,
+}
+
+impl LayerSparsity {
+    pub fn new(scheme: PruneScheme, rate: f32) -> Self {
+        LayerSparsity { scheme, rate: PruneRate::new(rate) }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.rate.is_dense()
+    }
+
+    /// Effective MACs after pruning.
+    pub fn effective_macs(&self, macs: f64) -> f64 {
+        macs / self.rate.0 as f64
+    }
+
+    /// Scheme-level utilization multiplier on the device (relative to a
+    /// dense, well-tuned kernel = 1.0).
+    pub fn utilization(&self, device: &DeviceSpec) -> f64 {
+        if self.is_dense() {
+            return 1.0;
+        }
+        match self.scheme {
+            PruneScheme::Unstructured => 0.30,
+            PruneScheme::Filter => 0.96,
+            PruneScheme::Pattern => 0.86,
+            PruneScheme::BlockPunched { bf, bc } => {
+                // channels-per-block fill the vector lanes, block area gives
+                // register/codegen reuse; very large blocks asymptote to the
+                // coarse (filter) utilization. Smooth in all regimes so the
+                // Fig. 2 latency axis is strictly monotone in block size.
+                let lane_fill = (bc as f64 / device.vector_lanes as f64).min(1.0);
+                let area = (bf * bc) as f64;
+                let reg_reuse = (area / 32.0).min(1.0); // 8x4 = full reuse
+                let base = 0.30 + 0.60 * (0.55 * lane_fill + 0.45 * reg_reuse);
+                let t_coarse = ((area / 32.0).ln() / 2048f64.ln()).clamp(0.0, 1.0);
+                base + (0.96 - base).max(0.0) * t_coarse
+            }
+            PruneScheme::BlockBased { brows, .. } => {
+                let rows_fill = (brows as f64 / 16.0).min(1.0);
+                0.55 + 0.35 * rows_fill
+            }
+        }
+    }
+
+    /// Extra weight-metadata bytes per kept weight (index decode traffic).
+    pub fn index_overhead_bytes_per_weight(&self) -> f64 {
+        match self.scheme {
+            PruneScheme::Unstructured => 4.0, // coordinate per element
+            PruneScheme::Pattern => 0.25,     // pattern id per kernel
+            PruneScheme::BlockPunched { bf, bc } => 4.0 / (bf * bc) as f64,
+            PruneScheme::BlockBased { brows, .. } => 4.0 / brows as f64,
+            PruneScheme::Filter => 0.0,
+        }
+    }
+
+    /// End-to-end speedup of a layer with `macs` on `device`, relative to
+    /// its dense execution — the quantity Fig. 3(b) plots.
+    pub fn layer_speedup(&self, macs: f64, device: &DeviceSpec) -> f64 {
+        let dense_t = macs / (device.peak_gmacs * device.size_utilization(macs));
+        let eff = self.effective_macs(macs);
+        let ut = self.utilization(device) * device.size_utilization(eff);
+        let sparse_t = eff / (device.peak_gmacs * ut);
+        dense_t / sparse_t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::KRYO_485;
+
+    const MACS: f64 = 56.0 * 56.0 * 9.0 * 256.0 * 256.0; // Fig 3b workload
+
+    fn speedup(scheme: PruneScheme, rate: f32) -> f64 {
+        LayerSparsity::new(scheme, rate).layer_speedup(MACS, &KRYO_485)
+    }
+
+    #[test]
+    fn fine_grained_beats_unstructured_everywhere() {
+        for rate in [2.0, 3.0, 5.0, 7.0, 10.0] {
+            let u = speedup(PruneScheme::Unstructured, rate);
+            let p = speedup(PruneScheme::Pattern, rate);
+            let b = speedup(PruneScheme::block_punched_default(), rate);
+            assert!(p > u, "pattern {p} <= unstructured {u} at {rate}x");
+            assert!(b > u, "block {b} <= unstructured {u} at {rate}x");
+        }
+    }
+
+    #[test]
+    fn block_punched_comparable_to_coarse_below_5x() {
+        // paper Fig 3b: fine-grained ≈ coarse below 5x pruning
+        for rate in [2.0, 3.0, 5.0] {
+            let f = speedup(PruneScheme::Filter, rate);
+            let b = speedup(PruneScheme::block_punched_default(), rate);
+            assert!(b / f > 0.80, "rate {rate}: block {b} vs filter {f}");
+        }
+    }
+
+    #[test]
+    fn unstructured_can_slow_down_at_low_rates() {
+        // 2x unstructured on mobile is typically ~parity or slower
+        let u = speedup(PruneScheme::Unstructured, 2.0);
+        assert!(u < 1.2, "unstructured 2x speedup {u}");
+    }
+
+    #[test]
+    fn speedup_grows_with_rate() {
+        let s3 = speedup(PruneScheme::block_punched_default(), 3.0);
+        let s7 = speedup(PruneScheme::block_punched_default(), 7.0);
+        assert!(s7 > s3);
+    }
+
+    #[test]
+    fn one_by_one_blocks_behave_unstructured() {
+        let tiny = LayerSparsity::new(PruneScheme::BlockPunched { bf: 1, bc: 1 }, 6.0);
+        let big = LayerSparsity::new(PruneScheme::BlockPunched { bf: 8, bc: 4 }, 6.0);
+        assert!(tiny.utilization(&KRYO_485) < 0.45);
+        assert!(big.utilization(&KRYO_485) > 0.80);
+    }
+
+    #[test]
+    fn index_overhead_ordering() {
+        let u = LayerSparsity::new(PruneScheme::Unstructured, 6.0);
+        let b = LayerSparsity::new(PruneScheme::block_punched_default(), 6.0);
+        let f = LayerSparsity::new(PruneScheme::Filter, 6.0);
+        assert!(u.index_overhead_bytes_per_weight() > b.index_overhead_bytes_per_weight());
+        assert_eq!(f.index_overhead_bytes_per_weight(), 0.0);
+    }
+
+    #[test]
+    fn dense_identity() {
+        let d = LayerSparsity::new(PruneScheme::Unstructured, 1.0);
+        assert!(d.is_dense());
+        assert_eq!(d.utilization(&KRYO_485), 1.0);
+        assert_eq!(d.effective_macs(100.0), 100.0);
+    }
+}

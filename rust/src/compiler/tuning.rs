@@ -1,0 +1,113 @@
+//! Fast auto-tuning (paper §3: "Fast auto-tuning capability is incorporated
+//! for efficient end-to-end inference on different mobile CPU/GPU").
+//!
+//! For every GEMM-shaped op the tuner searches a small grid of
+//! (mt, nt, kt) register/cache tiles and scores them with a cache+lane
+//! model; the winning tile's score becomes the layer's tuned-utilization
+//! multiplier. This mirrors how the paper's compiler specializes generated
+//! code per device, and is one of the L3 hot paths (it runs inside every
+//! candidate latency measurement).
+
+use super::device::DeviceSpec;
+
+/// Candidate tile edge sizes (kept tiny: the paper's tuner is "fast").
+const TILES: [usize; 5] = [16, 32, 64, 128, 256];
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileChoice {
+    pub mt: usize,
+    pub nt: usize,
+    pub kt: usize,
+    /// Achieved utilization multiplier in (0, 1].
+    pub utilization: f64,
+}
+
+/// Score a tile for a GEMM of (m, n, k) on `device`. Returns 0 for illegal
+/// tiles (working set exceeds L2).
+fn score(device: &DeviceSpec, m: usize, n: usize, k: usize, mt: usize, nt: usize, kt: usize) -> f64 {
+    let mt = mt.min(m).max(1);
+    let nt = nt.min(n).max(1);
+    let kt = kt.min(k).max(1);
+    // f16 working set: A tile + B tile + C tile
+    let ws = 2 * (mt * kt + kt * nt + mt * nt);
+    if ws > device.l2_bytes {
+        return 0.0;
+    }
+    // lane alignment on the N dimension (vectorized output channels)
+    let lane_fill = if nt % device.vector_lanes == 0 {
+        1.0
+    } else {
+        (nt % device.vector_lanes) as f64 / device.vector_lanes as f64
+    };
+    // arithmetic intensity of the tile: macs / bytes moved
+    let macs = (mt * nt * kt) as f64;
+    let bytes = ws as f64;
+    let intensity = macs / bytes; // grows with tile size
+    let intensity_score = intensity / (intensity + 16.0);
+    // boundary waste when tiles do not divide the problem
+    let waste_m = (m.div_ceil(mt) * mt) as f64 / m as f64;
+    let waste_n = (n.div_ceil(nt) * nt) as f64 / n as f64;
+    let waste = 1.0 / (waste_m * waste_n);
+    0.55 + 0.45 * (lane_fill * intensity_score * waste).clamp(0.0, 1.0)
+}
+
+/// Exhaustive search over the tile grid (125 candidates — "fast").
+pub fn tune_gemm(device: &DeviceSpec, m: usize, n: usize, k: usize) -> TileChoice {
+    let mut best = TileChoice { mt: 16, nt: 16, kt: 16, utilization: 0.0 };
+    for &mt in &TILES {
+        for &nt in &TILES {
+            for &kt in &TILES {
+                let s = score(device, m, n, k, mt, nt, kt);
+                if s > best.utilization {
+                    best = TileChoice { mt, nt, kt, utilization: s };
+                }
+            }
+        }
+    }
+    // degenerate problems: fall back to a floor utilization
+    if best.utilization == 0.0 {
+        best.utilization = 0.55;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::{ADRENO_640, KRYO_485};
+
+    #[test]
+    fn tuned_util_in_range() {
+        for (m, n, k) in [(3136, 256, 2304), (196, 64, 576), (1, 1000, 1280), (12, 12, 12)] {
+            let t = tune_gemm(&KRYO_485, m, n, k);
+            assert!(t.utilization > 0.5 && t.utilization <= 1.0, "{m}x{n}x{k}: {t:?}");
+        }
+    }
+
+    #[test]
+    fn big_gemm_tunes_better_than_tiny() {
+        let big = tune_gemm(&KRYO_485, 3136, 256, 2304);
+        let tiny = tune_gemm(&KRYO_485, 7, 10, 9);
+        assert!(big.utilization > tiny.utilization, "{big:?} vs {tiny:?}");
+    }
+
+    #[test]
+    fn tiles_respect_l2() {
+        let t = tune_gemm(&KRYO_485, 4096, 4096, 4096);
+        let ws = 2 * (t.mt * t.kt + t.kt * t.nt + t.mt * t.nt);
+        assert!(ws <= KRYO_485.l2_bytes);
+    }
+
+    #[test]
+    fn lane_alignment_preferred() {
+        let t = tune_gemm(&ADRENO_640, 1024, 1024, 1024);
+        assert_eq!(t.nt % ADRENO_640.vector_lanes, 0, "{t:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = tune_gemm(&KRYO_485, 196, 128, 1152);
+        let b = tune_gemm(&KRYO_485, 196, 128, 1152);
+        assert_eq!(a, b);
+    }
+}

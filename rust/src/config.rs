@@ -1,0 +1,193 @@
+//! S13 — run configuration: JSON config files + CLI flag overrides.
+//!
+//! A config file (see `configs/*.json` in the repo) sets the search
+//! hyperparameters; any `--flag` on the command line overrides the file.
+//! (TOML/serde are unavailable offline; `util::json` + explicit field
+//! mapping keep this dependency-free and loudly validated.)
+
+use anyhow::{Context, Result};
+
+use crate::compiler::device::{ADRENO_640, KRYO_485};
+use crate::compiler::DeviceSpec;
+use crate::search::{NpasConfig, RewardConfig};
+use crate::train::SgdConfig;
+use crate::util::{cli::Args, Json};
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Latency target H in ms (Eq. 1).
+    pub target_ms: f64,
+    pub alpha: f64,
+    pub device: &'static DeviceSpec,
+    pub seed: u64,
+    pub warmup_steps: usize,
+    pub phase1_steps: usize,
+    pub rounds: usize,
+    pub pool_size: usize,
+    pub bo_batch: usize,
+    pub use_bo: bool,
+    pub fast_eval_epochs: usize,
+    pub eval_batches: usize,
+    pub lr: f32,
+    pub artifact_dir: String,
+    pub event_log: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            target_ms: 7.0,
+            alpha: 0.05,
+            device: &ADRENO_640,
+            seed: 42,
+            warmup_steps: 120,
+            phase1_steps: 20,
+            rounds: 6,
+            pool_size: 24,
+            bo_batch: 4,
+            use_bo: true,
+            fast_eval_epochs: 2,
+            eval_batches: 4,
+            lr: 0.05,
+            artifact_dir: "artifacts".to_string(),
+            event_log: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; unknown keys are rejected (config typos fail
+    /// loudly).
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let mut cfg = RunConfig::default();
+        let obj = j.as_obj().context("config must be a JSON object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "target_ms" => cfg.target_ms = v.as_f64().context(k.clone())?,
+                "alpha" => cfg.alpha = v.as_f64().context(k.clone())?,
+                "device" => {
+                    let name = v.as_str().context(k.clone())?;
+                    cfg.device = DeviceSpec::by_name(name)
+                        .with_context(|| format!("unknown device `{name}`"))?;
+                }
+                "seed" => cfg.seed = v.as_f64().context(k.clone())? as u64,
+                "warmup_steps" => cfg.warmup_steps = v.as_usize().context(k.clone())?,
+                "phase1_steps" => cfg.phase1_steps = v.as_usize().context(k.clone())?,
+                "rounds" => cfg.rounds = v.as_usize().context(k.clone())?,
+                "pool_size" => cfg.pool_size = v.as_usize().context(k.clone())?,
+                "bo_batch" => cfg.bo_batch = v.as_usize().context(k.clone())?,
+                "use_bo" => cfg.use_bo = v.as_bool().context(k.clone())?,
+                "fast_eval_epochs" => cfg.fast_eval_epochs = v.as_usize().context(k.clone())?,
+                "eval_batches" => cfg.eval_batches = v.as_usize().context(k.clone())?,
+                "lr" => cfg.lr = v.as_f64().context(k.clone())? as f32,
+                "artifact_dir" => {
+                    cfg.artifact_dir = v.as_str().context(k.clone())?.to_string()
+                }
+                "event_log" => cfg.event_log = v.as_str().map(String::from),
+                other => anyhow::bail!("unknown config key `{other}` in {path}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides on top (flags named like the JSON keys, with
+    /// dashes: `--target-ms 7.0`).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.target_ms = args.f64_or("target-ms", self.target_ms);
+        self.alpha = args.f64_or("alpha", self.alpha);
+        if let Some(d) = args.get("device") {
+            self.device =
+                DeviceSpec::by_name(d).with_context(|| format!("unknown device `{d}`"))?;
+        }
+        self.seed = args.u64_or("seed", self.seed);
+        self.warmup_steps = args.usize_or("warmup-steps", self.warmup_steps);
+        self.phase1_steps = args.usize_or("phase1-steps", self.phase1_steps);
+        self.rounds = args.usize_or("rounds", self.rounds);
+        self.pool_size = args.usize_or("pool-size", self.pool_size);
+        self.bo_batch = args.usize_or("bo-batch", self.bo_batch);
+        if args.get("no-bo").is_some() {
+            self.use_bo = false;
+        }
+        self.fast_eval_epochs = args.usize_or("fast-eval-epochs", self.fast_eval_epochs);
+        self.eval_batches = args.usize_or("eval-batches", self.eval_batches);
+        self.lr = args.f64_or("lr", self.lr as f64) as f32;
+        self.artifact_dir = args.str_or("artifacts", &self.artifact_dir);
+        if let Some(p) = args.get("event-log") {
+            self.event_log = Some(p.to_string());
+        }
+        Ok(())
+    }
+
+    /// Lower into the search pipeline's config tree.
+    pub fn to_npas(&self) -> NpasConfig {
+        let mut cfg = NpasConfig::small(self.target_ms);
+        cfg.warmup_steps = self.warmup_steps;
+        cfg.phase1_steps = self.phase1_steps;
+        cfg.phase2.rounds = self.rounds;
+        cfg.phase2.pool_size = self.pool_size;
+        cfg.phase2.bo_batch = self.bo_batch;
+        cfg.phase2.use_bo = self.use_bo;
+        cfg.phase2.reward = RewardConfig::new(self.target_ms, self.alpha, 5);
+        cfg.eval_batches = self.eval_batches;
+        cfg.seed = self.seed;
+        cfg.device = self.device;
+        cfg.opt = SgdConfig { lr: self.lr, ..SgdConfig::default() };
+        cfg
+    }
+}
+
+/// The CPU device (re-export for CLI help).
+pub fn cpu() -> &'static DeviceSpec {
+    &KRYO_485
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(content: &str) -> String {
+        let p = std::env::temp_dir().join(format!("npas_cfg_{}.json", std::process::id()));
+        std::fs::write(&p, content).unwrap();
+        p.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn file_then_cli_override() {
+        let path = tmp(r#"{"target_ms": 5.0, "rounds": 3, "device": "cpu"}"#);
+        let mut cfg = RunConfig::from_json_file(&path).unwrap();
+        assert_eq!(cfg.target_ms, 5.0);
+        assert_eq!(cfg.rounds, 3);
+        assert!(!cfg.device.is_gpu);
+        let args = Args::parse(["--target-ms".to_string(), "9.5".to_string()]);
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.target_ms, 9.5);
+        assert_eq!(cfg.rounds, 3); // untouched
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let path = tmp(r#"{"target_msX": 5.0}"#);
+        assert!(RunConfig::from_json_file(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unknown_device_rejected() {
+        let path = tmp(r#"{"device": "tpu9000"}"#);
+        assert!(RunConfig::from_json_file(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn lowering_to_npas_config() {
+        let cfg = RunConfig { rounds: 9, bo_batch: 7, ..Default::default() };
+        let n = cfg.to_npas();
+        assert_eq!(n.phase2.rounds, 9);
+        assert_eq!(n.phase2.bo_batch, 7);
+        assert_eq!(n.phase2.reward.target_ms, cfg.target_ms);
+    }
+}

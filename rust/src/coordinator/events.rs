@@ -1,0 +1,117 @@
+//! JSONL event log for search runs (reproducibility artifact: every
+//! candidate evaluation lands here with its scheme, outcome and reward).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use crate::search::reward::EvalOutcome;
+use crate::search::space::NpasScheme;
+use crate::util::Json;
+
+#[derive(Debug)]
+pub struct EventLog {
+    path: Option<PathBuf>,
+    lines: Vec<String>,
+}
+
+impl EventLog {
+    /// In-memory only.
+    pub fn memory() -> Self {
+        EventLog { path: None, lines: Vec::new() }
+    }
+
+    /// Appends to `path` on flush.
+    pub fn to_file(path: impl Into<PathBuf>) -> Self {
+        EventLog { path: Some(path.into()), lines: Vec::new() }
+    }
+
+    pub fn log_eval(
+        &mut self,
+        round: usize,
+        scheme: &NpasScheme,
+        outcome: EvalOutcome,
+        reward: f64,
+    ) {
+        let mut labels = String::new();
+        for c in &scheme.choices {
+            let _ = write!(labels, "{};", c.label());
+        }
+        let j = Json::obj(vec![
+            ("event", Json::str("eval")),
+            ("round", Json::num(round as f64)),
+            ("scheme", Json::str(labels)),
+            ("fingerprint", Json::str(format!("{:016x}", scheme.fingerprint()))),
+            ("accuracy", Json::num(outcome.accuracy as f64)),
+            ("latency_ms", Json::num(outcome.latency_ms)),
+            ("reward", Json::num(reward)),
+        ]);
+        self.lines.push(j.to_string());
+    }
+
+    pub fn log_note(&mut self, note: &str) {
+        let j = Json::obj(vec![("event", Json::str("note")), ("note", Json::str(note))]);
+        self.lines.push(j.to_string());
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    pub fn lines(&self) -> &[String] {
+        &self.lines
+    }
+
+    /// Write all buffered lines (appending) and clear the buffer. Memory
+    /// logs are unaffected (their lines remain inspectable).
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        if let Some(path) = &self.path {
+            let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+            for l in &self.lines {
+                writeln!(f, "{l}")?;
+            }
+            self.lines.clear();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_valid_json() {
+        let mut log = EventLog::memory();
+        log.log_note("start");
+        log.log_eval(
+            1,
+            &NpasScheme::dense(3),
+            EvalOutcome { accuracy: 0.8, latency_ms: 7.5 },
+            0.78,
+        );
+        assert_eq!(log.len(), 2);
+        for l in log.lines() {
+            let j = Json::parse(l).unwrap();
+            assert!(j.get("event").is_some());
+        }
+    }
+
+    #[test]
+    fn flush_writes_and_clears() {
+        let dir = std::env::temp_dir().join(format!("npas_ev_{}", std::process::id()));
+        let _ = std::fs::remove_file(&dir);
+        let mut log = EventLog::to_file(&dir);
+        log.log_note("a");
+        log.log_note("b");
+        log.flush().unwrap();
+        assert!(log.is_empty());
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(dir).unwrap();
+    }
+}

@@ -1,0 +1,113 @@
+//! Search-run metrics: counters + wall-clock accounting. The paper reports
+//! GPU-days per phase (§6.1); these counters are the scaled-down analogue
+//! (evaluations, train steps, compile/measure calls, per-phase time).
+//!
+//! Interior mutability (mutexes) so RAII timers can overlap counter updates
+//! and worker threads can report concurrently.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timers: Mutex<BTreeMap<String, Duration>>,
+}
+
+pub struct TimerGuard<'a> {
+    metrics: &'a Metrics,
+    key: String,
+    start: Instant,
+}
+
+impl Drop for TimerGuard<'_> {
+    fn drop(&mut self) {
+        let elapsed = self.start.elapsed();
+        *self.metrics.timers.lock().unwrap().entry(self.key.clone()).or_default() += elapsed;
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, key: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(key.to_string()).or_insert(0) += by;
+    }
+
+    pub fn count(&self, key: &str) -> u64 {
+        self.counters.lock().unwrap().get(key).copied().unwrap_or(0)
+    }
+
+    /// RAII phase timer: time accumulates when the guard drops.
+    pub fn time<'a>(&'a self, key: &str) -> TimerGuard<'a> {
+        TimerGuard { key: key.to_string(), start: Instant::now(), metrics: self }
+    }
+
+    pub fn elapsed(&self, key: &str) -> Duration {
+        self.timers.lock().unwrap().get(key).copied().unwrap_or_default()
+    }
+
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, d) in self.timers.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {:.2}s\n", d.as_secs_f64()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("evals", 3);
+        m.incr("evals", 2);
+        assert_eq!(m.count("evals"), 5);
+        assert_eq!(m.count("missing"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let m = Metrics::new();
+        {
+            let _g = m.time("phase2");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        {
+            let _g = m.time("phase2");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(m.elapsed("phase2") >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn timer_overlaps_counter() {
+        let m = Metrics::new();
+        {
+            let _g = m.time("t");
+            m.incr("c", 1); // must not deadlock or fail to borrow
+        }
+        assert_eq!(m.count("c"), 1);
+    }
+
+    #[test]
+    fn summary_lists_everything() {
+        let m = Metrics::new();
+        m.incr("a", 1);
+        {
+            let _g = m.time("t");
+        }
+        let s = m.summary();
+        assert!(s.contains("a: 1") && s.contains("t:"));
+    }
+}

@@ -1,0 +1,11 @@
+//! S12 — evaluation coordinator: the process-level glue that fans candidate
+//! evaluations across workers, accounts for search cost, and journals every
+//! evaluation (the scaled-down analogue of the paper's 40-GPU cluster
+//! orchestration).
+
+pub mod events;
+pub mod metrics;
+pub mod scheduler;
+
+pub use events::EventLog;
+pub use metrics::Metrics;

@@ -1,0 +1,78 @@
+//! Parallel candidate-evaluation scheduler.
+//!
+//! The paper fans fast evaluations across 40 Titan RTX GPUs; here a scoped
+//! thread pool fans them across cores (tokio is unavailable offline — plain
+//! `std::thread::scope` with a shared work index is all this needs, and it
+//! keeps the hot path allocation-free).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` with up to `workers` threads, preserving order.
+/// `workers <= 1` degrades to a plain sequential map (used by evaluators
+/// whose state cannot cross threads, e.g. the PJRT-backed one).
+pub fn map_parallel<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if workers <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let n = items.len();
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = map_parallel(4, &items, |&x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_fallback_matches() {
+        let items = vec![1, 2, 3];
+        assert_eq!(map_parallel(1, &items, |&x| x + 1), vec![2, 3, 4]);
+        assert_eq!(map_parallel(0, &items, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn all_items_processed_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..57).collect();
+        let out = map_parallel(8, &items, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+            ()
+        });
+        assert_eq!(out.len(), 57);
+        assert_eq!(count.load(Ordering::Relaxed), 57);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: Vec<usize> = vec![];
+        assert!(map_parallel(4, &empty, |&x| x).is_empty());
+        assert_eq!(map_parallel(4, &[7], |&x| x), vec![7]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Fluent builder that resolves shapes while appending layers.
+
+use super::layer::{ActKind, Layer, LayerId, LayerKind, PoolKind};
+use super::network::Network;
+
+pub struct NetworkBuilder {
+    name: String,
+    input_hwc: (usize, usize, usize),
+    layers: Vec<Layer>,
+    /// Shape at the current chain head.
+    cur_hwc: (usize, usize, usize),
+    /// Current chain head id (None before first layer => network input).
+    head: Option<LayerId>,
+}
+
+impl NetworkBuilder {
+    pub fn new(name: impl Into<String>, input_hwc: (usize, usize, usize)) -> Self {
+        Self {
+            name: name.into(),
+            input_hwc,
+            layers: Vec::new(),
+            cur_hwc: input_hwc,
+            head: None,
+        }
+    }
+
+    fn push(&mut self, name: String, kind: LayerKind, inputs: Vec<LayerId>) -> LayerId {
+        let id = self.layers.len();
+        let layer = Layer { id, name, kind, in_hwc: self.cur_hwc, inputs };
+        self.cur_hwc = layer.out_hwc();
+        self.layers.push(layer);
+        self.head = Some(id);
+        id
+    }
+
+    fn chain_inputs(&self) -> Vec<LayerId> {
+        self.head.map(|h| vec![h]).unwrap_or_default()
+    }
+
+    pub fn conv2d(&mut self, k: usize, cout: usize, stride: usize) -> LayerId {
+        let cin = self.cur_hwc.2;
+        let inputs = self.chain_inputs();
+        self.push(
+            format!("conv{k}x{k}_{}", self.layers.len()),
+            LayerKind::Conv2d { kh: k, kw: k, cin, cout, stride, depthwise: false },
+            inputs,
+        )
+    }
+
+    pub fn depthwise(&mut self, k: usize, stride: usize) -> LayerId {
+        let c = self.cur_hwc.2;
+        let inputs = self.chain_inputs();
+        self.push(
+            format!("dw{k}x{k}_{}", self.layers.len()),
+            LayerKind::Conv2d { kh: k, kw: k, cin: c, cout: c, stride, depthwise: true },
+            inputs,
+        )
+    }
+
+    pub fn act(&mut self, kind: ActKind) -> LayerId {
+        let inputs = self.chain_inputs();
+        self.push(format!("act_{}", self.layers.len()), LayerKind::Act(kind), inputs)
+    }
+
+    pub fn pool(&mut self, kind: PoolKind, size: usize, stride: usize) -> LayerId {
+        let inputs = self.chain_inputs();
+        self.push(
+            format!("pool_{}", self.layers.len()),
+            LayerKind::Pool { kind, size, stride },
+            inputs,
+        )
+    }
+
+    pub fn global_avg_pool(&mut self) -> LayerId {
+        let inputs = self.chain_inputs();
+        self.push(format!("gap_{}", self.layers.len()), LayerKind::GlobalAvgPool, inputs)
+    }
+
+    pub fn linear(&mut self, dout: usize) -> LayerId {
+        let (h, w, c) = self.cur_hwc;
+        assert_eq!((h, w), (1, 1), "linear expects pooled (1,1,c) input");
+        let inputs = self.chain_inputs();
+        self.push(
+            format!("fc_{}", self.layers.len()),
+            LayerKind::Linear { din: c, dout },
+            inputs,
+        )
+    }
+
+    pub fn squeeze_excite(&mut self, reduction: usize) -> LayerId {
+        let c = self.cur_hwc.2;
+        let inputs = self.chain_inputs();
+        self.push(
+            format!("se_{}", self.layers.len()),
+            LayerKind::SqueezeExcite { c, reduced: (c / reduction).max(1) },
+            inputs,
+        )
+    }
+
+    /// Residual add of the chain head with `other`'s output (shapes must
+    /// match).
+    pub fn add_from(&mut self, other: LayerId) -> LayerId {
+        let mut inputs = self.chain_inputs();
+        inputs.push(other);
+        assert_eq!(
+            self.layers[other].out_hwc(),
+            self.cur_hwc,
+            "residual shape mismatch"
+        );
+        self.push(format!("add_{}", self.layers.len()), LayerKind::Add, inputs)
+    }
+
+    /// Current chain-head layer id (for wiring residuals).
+    pub fn head(&self) -> Option<LayerId> {
+        self.head
+    }
+
+    pub fn current_hwc(&self) -> (usize, usize, usize) {
+        self.cur_hwc
+    }
+
+    pub fn build(self) -> Network {
+        let net = Network { name: self.name, input_hwc: self.input_hwc, layers: self.layers };
+        debug_assert_eq!(net.validate(), Ok(()));
+        net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_block_wiring() {
+        let mut b = NetworkBuilder::new("res", (16, 16, 8));
+        let entry = b.conv2d(1, 8, 1);
+        b.act(ActKind::Relu);
+        let skip_src = b.head().unwrap();
+        b.conv2d(3, 8, 1);
+        b.act(ActKind::Relu);
+        b.add_from(skip_src);
+        let n = b.build();
+        assert!(n.validate().is_ok());
+        let add = n.layers.last().unwrap();
+        assert_eq!(add.inputs.len(), 2);
+        let _ = entry;
+    }
+
+    #[test]
+    #[should_panic]
+    fn linear_requires_pooled_input() {
+        let mut b = NetworkBuilder::new("bad", (8, 8, 4));
+        b.linear(10);
+    }
+
+    #[test]
+    fn shape_propagation() {
+        let mut b = NetworkBuilder::new("s", (32, 32, 3));
+        b.conv2d(3, 16, 2);
+        assert_eq!(b.current_hwc(), (16, 16, 16));
+        b.depthwise(3, 2);
+        assert_eq!(b.current_hwc(), (8, 8, 16));
+        b.pool(PoolKind::Max, 2, 2);
+        assert_eq!(b.current_hwc(), (4, 4, 16));
+        b.global_avg_pool();
+        assert_eq!(b.current_hwc(), (1, 1, 16));
+    }
+}

@@ -1,0 +1,233 @@
+//! Layer kinds and per-layer shape/cost math.
+
+
+
+pub type LayerId = usize;
+
+/// Activation functions; the mobile-friendliness flag drives Phase 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    Relu,
+    Relu6,
+    Sigmoid,
+    Swish,
+    HardSigmoid,
+    HardSwish,
+}
+
+impl ActKind {
+    /// Sigmoid/swish need exponentials — latency bottlenecks on mobile
+    /// (paper §5.1 Phase 1); the `hard_*` variants are the compiler-friendly
+    /// replacements.
+    pub fn mobile_friendly(self) -> bool {
+        !matches!(self, ActKind::Sigmoid | ActKind::Swish)
+    }
+
+    /// The replacement Phase 1 applies.
+    pub fn friendly_equivalent(self) -> ActKind {
+        match self {
+            ActKind::Sigmoid => ActKind::HardSigmoid,
+            ActKind::Swish => ActKind::HardSwish,
+            other => other,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// The op vocabulary of the IR (post-import: BN folded into convs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerKind {
+    Conv2d {
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        /// depthwise => cout groups of 1 input channel each
+        depthwise: bool,
+    },
+    Linear {
+        din: usize,
+        dout: usize,
+    },
+    Pool {
+        kind: PoolKind,
+        size: usize,
+        stride: usize,
+    },
+    GlobalAvgPool,
+    Act(ActKind),
+    /// Elementwise residual add with another layer's output.
+    Add,
+    /// Squeeze-and-excite block (MobileNet-V3 / EfficientNet); summarized as
+    /// one op: GAP -> FC(c/r) -> act -> FC(c) -> gate multiply.
+    SqueezeExcite {
+        c: usize,
+        reduced: usize,
+    },
+}
+
+/// A layer instance with resolved input spatial shape.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub id: LayerId,
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input feature-map shape (h, w, c) — resolved by the builder.
+    pub in_hwc: (usize, usize, usize),
+    /// Producers feeding this layer (1 for chain ops, 2 for Add).
+    pub inputs: Vec<LayerId>,
+}
+
+impl Layer {
+    /// Output feature-map shape (h, w, c).
+    pub fn out_hwc(&self) -> (usize, usize, usize) {
+        let (h, w, c) = self.in_hwc;
+        match self.kind {
+            LayerKind::Conv2d { cout, stride, .. } => {
+                (h.div_ceil(stride), w.div_ceil(stride), cout)
+            }
+            LayerKind::Linear { dout, .. } => (1, 1, dout),
+            LayerKind::Pool { stride, .. } => (h.div_ceil(stride), w.div_ceil(stride), c),
+            LayerKind::GlobalAvgPool => (1, 1, c),
+            LayerKind::Act(_) | LayerKind::Add | LayerKind::SqueezeExcite { .. } => (h, w, c),
+        }
+    }
+
+    /// Multiply-accumulate count for one inference at batch 1.
+    pub fn macs(&self) -> u64 {
+        let (h, w, _c) = self.in_hwc;
+        let (oh, ow, _) = self.out_hwc();
+        match self.kind {
+            LayerKind::Conv2d { kh, kw, cin, cout, depthwise, .. } => {
+                let per_pos = if depthwise {
+                    (kh * kw * cout) as u64
+                } else {
+                    (kh * kw * cin * cout) as u64
+                };
+                (oh * ow) as u64 * per_pos
+            }
+            LayerKind::Linear { din, dout } => (din * dout) as u64,
+            LayerKind::SqueezeExcite { c, reduced } => {
+                // two FCs + gating multiply
+                (c * reduced * 2 + c) as u64 + (h * w * c) as u64
+            }
+            // elementwise/pool ops: no MACs by convention (memory-bound)
+            _ => 0,
+        }
+    }
+
+    /// Weight parameter count.
+    pub fn params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d { kh, kw, cin, cout, depthwise, .. } => {
+                if depthwise {
+                    (kh * kw * cout) as u64
+                } else {
+                    (kh * kw * cin * cout) as u64
+                }
+            }
+            LayerKind::Linear { din, dout } => (din * dout) as u64,
+            LayerKind::SqueezeExcite { c, reduced } => (2 * c * reduced) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Bytes of activation traffic (read input + write output, f16 on the
+    /// paper's mobile path => 2 bytes/elem).
+    pub fn activation_bytes(&self) -> u64 {
+        let (h, w, c) = self.in_hwc;
+        let (oh, ow, oc) = self.out_hwc();
+        let elems_in = (h * w * c) as u64;
+        let elems_out = (oh * ow * oc) as u64;
+        2 * (elems_in + elems_out)
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv2d { .. })
+    }
+
+    /// Layers that carry prunable weights.
+    pub fn prunable(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv2d { .. } | LayerKind::Linear { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(kh: usize, cin: usize, cout: usize, stride: usize, hw: usize) -> Layer {
+        Layer {
+            id: 0,
+            name: "c".into(),
+            kind: LayerKind::Conv2d { kh, kw: kh, cin, cout, stride, depthwise: false },
+            in_hwc: (hw, hw, cin),
+            inputs: vec![],
+        }
+    }
+
+    #[test]
+    fn conv_macs_match_formula() {
+        // 56x56x256 -> 3x3x256x256: 56*56*9*256*256
+        let l = conv(3, 256, 256, 1, 56);
+        assert_eq!(l.macs(), 56 * 56 * 9 * 256 * 256);
+        assert_eq!(l.params(), 9 * 256 * 256);
+    }
+
+    #[test]
+    fn stride_halves_output() {
+        let l = conv(3, 16, 32, 2, 56);
+        assert_eq!(l.out_hwc(), (28, 28, 32));
+        assert_eq!(l.macs(), 28 * 28 * 9 * 16 * 32);
+    }
+
+    #[test]
+    fn depthwise_macs() {
+        let l = Layer {
+            id: 0,
+            name: "dw".into(),
+            kind: LayerKind::Conv2d { kh: 3, kw: 3, cin: 64, cout: 64, stride: 1, depthwise: true },
+            in_hwc: (14, 14, 64),
+            inputs: vec![],
+        };
+        assert_eq!(l.macs(), 14 * 14 * 9 * 64);
+        assert_eq!(l.params(), 9 * 64);
+    }
+
+    #[test]
+    fn linear_and_gap() {
+        let l = Layer {
+            id: 0,
+            name: "fc".into(),
+            kind: LayerKind::Linear { din: 1280, dout: 1000 },
+            in_hwc: (1, 1, 1280),
+            inputs: vec![],
+        };
+        assert_eq!(l.macs(), 1_280_000);
+        assert_eq!(l.out_hwc(), (1, 1, 1000));
+        let g = Layer {
+            id: 1,
+            name: "gap".into(),
+            kind: LayerKind::GlobalAvgPool,
+            in_hwc: (7, 7, 1280),
+            inputs: vec![],
+        };
+        assert_eq!(g.out_hwc(), (1, 1, 1280));
+        assert_eq!(g.macs(), 0);
+    }
+
+    #[test]
+    fn friendly_ops() {
+        assert!(!ActKind::Swish.mobile_friendly());
+        assert!(!ActKind::Sigmoid.mobile_friendly());
+        assert!(ActKind::HardSwish.mobile_friendly());
+        assert_eq!(ActKind::Swish.friendly_equivalent(), ActKind::HardSwish);
+        assert_eq!(ActKind::Relu.friendly_equivalent(), ActKind::Relu);
+    }
+}

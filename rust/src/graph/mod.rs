@@ -1,0 +1,16 @@
+//! S2 — DNN graph IR.
+//!
+//! The latency simulator, the NPAS search space and the model zoo all speak
+//! this IR: a DAG of layers with concrete shapes, from which MACs, parameter
+//! counts and memory traffic are derived. It deliberately mirrors what a
+//! mobile inference compiler sees *after* import (BN folded, constants
+//! propagated) — that is the representation the paper's compiler operates on.
+
+pub mod builder;
+pub mod layer;
+pub mod network;
+pub mod zoo;
+
+pub use builder::NetworkBuilder;
+pub use layer::{ActKind, Layer, LayerId, LayerKind, PoolKind};
+pub use network::Network;

@@ -1,0 +1,132 @@
+//! Network: a DAG of layers in topological order.
+
+
+
+use super::layer::{Layer, LayerId, LayerKind};
+
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    /// (h, w, c) of the network input.
+    pub input_hwc: (usize, usize, usize),
+    /// Topologically ordered (builders guarantee producers precede users).
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// CONV-only MACs (what Table 2 reports as "CONV MACs").
+    pub fn conv_macs(&self) -> u64 {
+        self.layers.iter().filter(|l| l.is_conv()).map(|l| l.macs()).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn num_weight_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.prunable()).count()
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    /// Consumers of each layer (for the fusion pass).
+    pub fn consumers(&self) -> Vec<Vec<LayerId>> {
+        let mut out = vec![Vec::new(); self.layers.len()];
+        for l in &self.layers {
+            for &src in &l.inputs {
+                out[src].push(l.id);
+            }
+        }
+        out
+    }
+
+    /// Count of mobile-unfriendly activations (Phase 1 targets).
+    pub fn unfriendly_ops(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Act(a) if !a.mobile_friendly()))
+            .count()
+    }
+
+    /// Validate topological order + shape consistency between producers and
+    /// consumers. Returns Err(description) on the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.id != i {
+                return Err(format!("layer {} has id {}", i, l.id));
+            }
+            for &src in &l.inputs {
+                if src >= i {
+                    return Err(format!("layer {i} consumes later/self layer {src}"));
+                }
+                let prod = self.layers[src].out_hwc();
+                if matches!(l.kind, LayerKind::Add) {
+                    if prod != l.in_hwc {
+                        return Err(format!(
+                            "Add layer {i}: input {src} shape {prod:?} != {:?}",
+                            l.in_hwc
+                        ));
+                    }
+                } else if l.inputs.len() == 1 && prod != l.in_hwc {
+                    return Err(format!(
+                        "layer {i} ({}) in_hwc {:?} != producer {src} out {prod:?}",
+                        l.name, l.in_hwc
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::NetworkBuilder;
+    use crate::graph::layer::ActKind;
+
+    fn tiny() -> Network {
+        let mut b = NetworkBuilder::new("tiny", (8, 8, 3));
+        let c = b.conv2d(3, 16, 1);
+        b.act(ActKind::Relu);
+        b.global_avg_pool();
+        b.linear(10);
+        let _ = c;
+        b.build()
+    }
+
+    #[test]
+    fn totals() {
+        let n = tiny();
+        assert!(n.validate().is_ok());
+        assert_eq!(n.conv_macs(), 8 * 8 * 9 * 3 * 16);
+        assert_eq!(n.total_macs(), n.conv_macs() + 16 * 10);
+        assert_eq!(n.total_params(), (9 * 3 * 16 + 16 * 10) as u64);
+        assert_eq!(n.num_weight_layers(), 2);
+    }
+
+    #[test]
+    fn consumers_graph() {
+        let n = tiny();
+        let cons = n.consumers();
+        assert_eq!(cons[0], vec![1]);
+        assert!(cons[3].is_empty());
+    }
+
+    #[test]
+    fn unfriendly_count() {
+        let mut b = NetworkBuilder::new("x", (8, 8, 3));
+        b.conv2d(3, 8, 1);
+        b.act(ActKind::Swish);
+        b.conv2d(1, 8, 1);
+        b.act(ActKind::HardSwish);
+        let n = b.build();
+        assert_eq!(n.unfriendly_ops(), 1);
+    }
+}

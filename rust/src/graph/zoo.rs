@@ -1,0 +1,481 @@
+//! Model zoo: the reference networks the paper's evaluation uses.
+//!
+//! These are IR-level reconstructions (BN folded) of the published
+//! architectures, used by the latency simulator as Fig. 2/3/5/6 and Table 2
+//! workloads. MACs are asserted against the published numbers in tests
+//! (within tolerance — head/SE bookkeeping differs slightly by source).
+
+use super::builder::NetworkBuilder;
+use super::layer::{ActKind, PoolKind};
+use super::network::Network;
+
+/// Filter-type choices for NPAS candidate blocks (mirrors search::space, but
+/// kept IR-local so graph does not depend on the search crate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CandidateBlock {
+    Conv1x1,
+    Conv3x3,
+    DwPw,
+    PwDwPw,
+    Skip,
+}
+
+/// MobileNet-V1 (224x224): 575M MACs, 4.2M params.
+pub fn mobilenet_v1() -> Network {
+    let mut b = NetworkBuilder::new("mobilenet_v1", (224, 224, 3));
+    b.conv2d(3, 32, 2);
+    b.act(ActKind::Relu);
+    let cfg: &[(usize, usize)] = &[
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for &(c, s) in cfg {
+        b.depthwise(3, s);
+        b.act(ActKind::Relu);
+        b.conv2d(1, c, 1);
+        b.act(ActKind::Relu);
+    }
+    b.global_avg_pool();
+    b.linear(1000);
+    b.build()
+}
+
+/// MobileNet-V2 (224x224): 300M MACs, 3.4M params.
+pub fn mobilenet_v2() -> Network {
+    let mut b = NetworkBuilder::new("mobilenet_v2", (224, 224, 3));
+    b.conv2d(3, 32, 2);
+    b.act(ActKind::Relu6);
+    // (expansion, cout, repeats, first-stride)
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for &(t, c, n, s) in cfg {
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            inverted_residual(&mut b, t, c, stride, 3, false, ActKind::Relu6);
+        }
+    }
+    b.conv2d(1, 1280, 1);
+    b.act(ActKind::Relu6);
+    b.global_avg_pool();
+    b.linear(1000);
+    b.build()
+}
+
+/// MobileNet-V3-Large (224x224): 227M MACs, 5.4M params. Uses swish/SE —
+/// the mobile-unfriendly ops Phase 1 replaces.
+pub fn mobilenet_v3() -> Network {
+    let mut b = NetworkBuilder::new("mobilenet_v3", (224, 224, 3));
+    b.conv2d(3, 16, 2);
+    b.act(ActKind::Swish);
+    // (k, exp, out, se, act, stride)
+    #[allow(clippy::type_complexity)]
+    let cfg: &[(usize, usize, usize, bool, ActKind, usize)] = &[
+        (3, 16, 16, false, ActKind::Relu, 1),
+        (3, 64, 24, false, ActKind::Relu, 2),
+        (3, 72, 24, false, ActKind::Relu, 1),
+        (5, 72, 40, true, ActKind::Relu, 2),
+        (5, 120, 40, true, ActKind::Relu, 1),
+        (5, 120, 40, true, ActKind::Relu, 1),
+        (3, 240, 80, false, ActKind::Swish, 2),
+        (3, 200, 80, false, ActKind::Swish, 1),
+        (3, 184, 80, false, ActKind::Swish, 1),
+        (3, 184, 80, false, ActKind::Swish, 1),
+        (3, 480, 112, true, ActKind::Swish, 1),
+        (3, 672, 112, true, ActKind::Swish, 1),
+        (5, 672, 160, true, ActKind::Swish, 2),
+        (5, 960, 160, true, ActKind::Swish, 1),
+        (5, 960, 160, true, ActKind::Swish, 1),
+    ];
+    for &(k, exp, out, se, act, s) in cfg {
+        mbconv_explicit(&mut b, k, exp, out, se, act, s);
+    }
+    b.conv2d(1, 960, 1);
+    b.act(ActKind::Swish);
+    b.global_avg_pool();
+    b.linear(1280);
+    b.act(ActKind::Swish);
+    b.linear(1000);
+    b.build()
+}
+
+/// EfficientNet-B0 (224x224): ~390M MACs, 5.3M params. The paper's NPAS
+/// starting point.
+pub fn efficientnet_b0() -> Network {
+    efficientnet_b0_scaled("efficientnet_b0", 1.0)
+}
+
+/// Width-scaled EfficientNet-B0 — Fig. 5/6 use 70% / 50% MACs variants.
+/// MACs scale ~ width^2, so width = sqrt(macs_frac).
+pub fn efficientnet_b0_scaled(name: &str, macs_frac: f64) -> Network {
+    let width = macs_frac.sqrt();
+    let sc = |c: usize| ((c as f64 * width / 8.0).round() as usize * 8).max(8);
+    let mut b = NetworkBuilder::new(name, (224, 224, 3));
+    b.conv2d(3, sc(32), 2);
+    b.act(ActKind::Swish);
+    // (k, expansion, cout, repeats, first-stride)
+    let cfg: &[(usize, usize, usize, usize, usize)] = &[
+        (3, 1, 16, 1, 1),
+        (3, 6, 24, 2, 2),
+        (5, 6, 40, 2, 2),
+        (3, 6, 80, 3, 2),
+        (5, 6, 112, 3, 1),
+        (5, 6, 192, 4, 2),
+        (3, 6, 320, 1, 1),
+    ];
+    for &(k, t, c, n, s) in cfg {
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            inverted_residual(&mut b, t, sc(c), stride, k, true, ActKind::Swish);
+        }
+    }
+    b.conv2d(1, sc(1280), 1);
+    b.act(ActKind::Swish);
+    b.global_avg_pool();
+    b.linear(1000);
+    b.build()
+}
+
+/// ResNet-50 (224x224): ~4.1G MACs — the Fig. 2 block-size workload.
+pub fn resnet50() -> Network {
+    resnet50_config("resnet50", &[3, 4, 6, 3], &[64, 128, 256, 512], 1.0)
+}
+
+/// The §4 "narrower-but-deeper" variant: 2x layers, channels scaled by
+/// 1/sqrt(2) so total MACs stay ~equal. Paper measures it 1.22x slower on
+/// mobile GPU (44 vs 36 ms) due to memory-bound intermediate traffic.
+pub fn resnet50_narrow_deep() -> Network {
+    resnet50_config(
+        "resnet50_narrow_deep",
+        &[6, 8, 12, 6],
+        &[64, 128, 256, 512],
+        std::f64::consts::FRAC_1_SQRT_2,
+    )
+}
+
+fn resnet50_config(name: &str, blocks: &[usize], chans: &[usize], width: f64) -> Network {
+    let sc = |c: usize| ((c as f64 * width).round() as usize).max(8);
+    let mut b = NetworkBuilder::new(name, (224, 224, 3));
+    b.conv2d(7, sc(64), 2);
+    b.act(ActKind::Relu);
+    b.pool(PoolKind::Max, 3, 2);
+    for (stage, (&n, &c)) in blocks.iter().zip(chans).enumerate() {
+        for rep in 0..n {
+            let stride = if rep == 0 && stage > 0 { 2 } else { 1 };
+            bottleneck(&mut b, sc(c), stride);
+        }
+    }
+    b.global_avg_pool();
+    b.linear(1000);
+    b.build()
+}
+
+fn bottleneck(b: &mut NetworkBuilder, c: usize, stride: usize) {
+    let skip_needed = b.current_hwc().2 != c * 4 || stride != 1;
+    let entry = b.head();
+    b.conv2d(1, c, 1);
+    b.act(ActKind::Relu);
+    b.conv2d(3, c, stride);
+    b.act(ActKind::Relu);
+    b.conv2d(1, c * 4, 1);
+    if skip_needed {
+        // projection shortcut modeled as part of the main chain cost: add a
+        // 1x1 conv on the skip path would need a second chain; we fold it in.
+        b.act(ActKind::Relu);
+    } else {
+        let skip = entry.expect("bottleneck without producer");
+        b.add_from(skip);
+        b.act(ActKind::Relu);
+    }
+}
+
+fn inverted_residual(
+    b: &mut NetworkBuilder,
+    expansion: usize,
+    cout: usize,
+    stride: usize,
+    k: usize,
+    se: bool,
+    act: ActKind,
+) {
+    let cin = b.current_hwc().2;
+    let entry = b.head();
+    let exp_c = cin * expansion;
+    if expansion != 1 {
+        b.conv2d(1, exp_c, 1);
+        b.act(act);
+    }
+    b.depthwise(k, stride);
+    b.act(act);
+    if se {
+        b.squeeze_excite(4);
+    }
+    b.conv2d(1, cout, 1);
+    if stride == 1 && cin == cout {
+        if let Some(skip) = entry {
+            b.add_from(skip);
+        }
+    }
+}
+
+fn mbconv_explicit(
+    b: &mut NetworkBuilder,
+    k: usize,
+    exp_c: usize,
+    cout: usize,
+    se: bool,
+    act: ActKind,
+    stride: usize,
+) {
+    let cin = b.current_hwc().2;
+    let entry = b.head();
+    if exp_c != cin {
+        b.conv2d(1, exp_c, 1);
+        b.act(act);
+    }
+    b.depthwise(k, stride);
+    b.act(act);
+    if se {
+        b.squeeze_excite(4);
+    }
+    b.conv2d(1, cout, 1);
+    if stride == 1 && cin == cout {
+        if let Some(skip) = entry {
+            b.add_from(skip);
+        }
+    }
+}
+
+/// A single-CONV-layer "network" — Fig. 3(a)/(b) microbenchmark workload.
+pub fn single_conv(hw: usize, k: usize, cin: usize, cout: usize) -> Network {
+    let mut b = NetworkBuilder::new(format!("conv{k}x{k}_{cin}x{cout}@{hw}"), (hw, hw, cin));
+    b.conv2d(k, cout, 1);
+    b.build()
+}
+
+/// The deployment-scale network an NPAS scheme compiles to: a MobileNet-like
+/// skeleton at 224x224 whose per-stage block type follows the searched
+/// choices. This is the graph the "on-device" latency of a candidate is
+/// measured on (the tiny supernet only provides accuracy signal).
+pub fn npas_deploy_network(name: &str, choices: &[CandidateBlock]) -> Network {
+    npas_deploy_network_tagged(name, choices).0
+}
+
+/// Like [`npas_deploy_network`] but also returns, per searched stage, the
+/// layer ids that stage created (so per-layer sparsity annotations can be
+/// attached to the right layers).
+pub fn npas_deploy_network_tagged(
+    name: &str,
+    choices: &[CandidateBlock],
+) -> (Network, Vec<Vec<usize>>) {
+    let mut b = NetworkBuilder::new(name, (224, 224, 3));
+    b.conv2d(3, 32, 2);
+    b.act(ActKind::HardSwish);
+    // channel/stride schedule: one stage per searchable block. Sized so the
+    // dense 3x3 network lands near EfficientNet-B0's simulated latency
+    // (~15ms GPU): the paper's targets (6.7/5.9/3.9/3.3ms) then force real
+    // pruning/architecture trade-offs.
+    let stages: &[(usize, usize)] =
+        &[(128, 2), (256, 2), (256, 1), (512, 2), (512, 1), (768, 2), (768, 1)];
+    let mut stage_layers = Vec::with_capacity(choices.len());
+    for (i, &choice) in choices.iter().enumerate() {
+        let (c, s) = stages[i.min(stages.len() - 1)];
+        let before = b.head().map(|h| h + 1).unwrap_or(0);
+        candidate_block(&mut b, choice, c, s);
+        let after = b.head().map(|h| h + 1).unwrap_or(0);
+        stage_layers.push((before..after).collect());
+    }
+    b.conv2d(1, 1280, 1);
+    b.act(ActKind::HardSwish);
+    b.global_avg_pool();
+    b.linear(1000);
+    (b.build(), stage_layers)
+}
+
+fn candidate_block(b: &mut NetworkBuilder, choice: CandidateBlock, cout: usize, stride: usize) {
+    match choice {
+        CandidateBlock::Conv1x1 => {
+            b.conv2d(1, cout, stride);
+            b.act(ActKind::HardSwish);
+        }
+        CandidateBlock::Conv3x3 => {
+            b.conv2d(3, cout, stride);
+            b.act(ActKind::HardSwish);
+        }
+        CandidateBlock::DwPw => {
+            b.depthwise(3, stride);
+            b.act(ActKind::HardSwish);
+            b.conv2d(1, cout, 1);
+            b.act(ActKind::HardSwish);
+        }
+        CandidateBlock::PwDwPw => {
+            let mid = cout / 2;
+            b.conv2d(1, mid, 1);
+            b.act(ActKind::HardSwish);
+            b.depthwise(3, stride);
+            b.act(ActKind::HardSwish);
+            b.conv2d(1, cout, 1);
+            b.act(ActKind::HardSwish);
+        }
+        CandidateBlock::Skip => {
+            // skipping the layer entirely: keep shapes legal by pooling when
+            // the stage would have downsampled, and a free channel pad is
+            // modeled as a 1x1 "repack" only when channels change.
+            if stride != 1 {
+                b.pool(PoolKind::Max, 2, 2);
+            }
+            if b.current_hwc().2 != cout {
+                b.conv2d(1, cout, 1); // cheapest legal repack
+            }
+        }
+    }
+}
+
+/// The tiny supernet backbone mirrored as IR (for simulator cross-checks of
+/// the artifact model; shapes must match `python/compile/model.py`).
+pub fn supernet_backbone(choices: &[CandidateBlock]) -> Network {
+    let (img, c, classes) = (12, 16, 10);
+    let mut b = NetworkBuilder::new("supernet", (img, img, 3));
+    b.conv2d(3, c, 1);
+    b.act(ActKind::HardSwish);
+    for (i, &choice) in choices.iter().enumerate() {
+        match choice {
+            CandidateBlock::Conv1x1 => {
+                b.conv2d(1, c, 1);
+            }
+            CandidateBlock::Conv3x3 => {
+                b.conv2d(3, c, 1);
+            }
+            CandidateBlock::DwPw => {
+                b.depthwise(3, 1);
+                b.conv2d(1, c, 1);
+            }
+            CandidateBlock::PwDwPw => {
+                b.conv2d(1, c, 1);
+                b.depthwise(3, 1);
+                b.conv2d(1, c, 1);
+            }
+            CandidateBlock::Skip => {}
+        }
+        b.act(ActKind::HardSwish);
+        if i == 1 || i == 3 {
+            b.pool(PoolKind::Max, 2, 2);
+        }
+    }
+    b.global_avg_pool();
+    b.linear(classes);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(actual: u64, published_m: u64, tol: f64) -> bool {
+        let a = actual as f64 / 1e6;
+        let p = published_m as f64;
+        (a - p).abs() / p < tol
+    }
+
+    #[test]
+    fn mobilenet_v1_macs_near_published() {
+        let n = mobilenet_v1();
+        assert!(n.validate().is_ok());
+        assert!(close(n.total_macs(), 575, 0.15), "{}M", n.total_macs() / 1_000_000);
+        assert!(close(n.total_params(), 4, 0.25), "{} params", n.total_params());
+    }
+
+    #[test]
+    fn mobilenet_v2_macs_near_published() {
+        let n = mobilenet_v2();
+        assert!(n.validate().is_ok());
+        assert!(close(n.total_macs(), 300, 0.15), "{}M", n.total_macs() / 1_000_000);
+    }
+
+    #[test]
+    fn mobilenet_v3_macs_near_published() {
+        let n = mobilenet_v3();
+        assert!(n.validate().is_ok());
+        assert!(close(n.total_macs(), 227, 0.20), "{}M", n.total_macs() / 1_000_000);
+        assert!(n.unfriendly_ops() > 0, "v3 must contain swish for Phase 1");
+    }
+
+    #[test]
+    fn efficientnet_b0_macs_near_published() {
+        let n = efficientnet_b0();
+        assert!(n.validate().is_ok());
+        assert!(close(n.total_macs(), 390, 0.20), "{}M", n.total_macs() / 1_000_000);
+    }
+
+    #[test]
+    fn efficientnet_scaling_tracks_macs() {
+        let full = efficientnet_b0().total_macs() as f64;
+        let m70 = efficientnet_b0_scaled("e70", 0.70).total_macs() as f64;
+        let m50 = efficientnet_b0_scaled("e50", 0.50).total_macs() as f64;
+        assert!((m70 / full - 0.70).abs() < 0.12, "{}", m70 / full);
+        assert!((m50 / full - 0.50).abs() < 0.12, "{}", m50 / full);
+    }
+
+    #[test]
+    fn resnet50_macs_near_published() {
+        let n = resnet50();
+        assert!(n.validate().is_ok());
+        assert!(close(n.total_macs(), 4100, 0.15), "{}M", n.total_macs() / 1_000_000);
+    }
+
+    #[test]
+    fn narrow_deep_equal_macs_more_layers() {
+        let base = resnet50();
+        let nd = resnet50_narrow_deep();
+        let ratio = nd.total_macs() as f64 / base.total_macs() as f64;
+        assert!((0.8..1.2).contains(&ratio), "macs ratio {ratio}");
+        assert!(nd.layers.len() > base.layers.len() * 3 / 2);
+    }
+
+    #[test]
+    fn deploy_network_all_choices_valid() {
+        use CandidateBlock::*;
+        for choice in [Conv1x1, Conv3x3, DwPw, PwDwPw, Skip] {
+            let n = npas_deploy_network("t", &[choice; 7]);
+            assert!(n.validate().is_ok(), "{choice:?}");
+            assert!(n.total_macs() > 0);
+        }
+        // 3x3 stage must cost more than dw+pw stage
+        let dense = npas_deploy_network("d", &[Conv3x3; 7]).total_macs();
+        let sep = npas_deploy_network("s", &[DwPw; 7]).total_macs();
+        assert!(dense > sep * 2);
+    }
+
+    #[test]
+    fn supernet_backbone_matches_artifact_shapes() {
+        use CandidateBlock::*;
+        let n = supernet_backbone(&[Conv3x3; 5]);
+        assert!(n.validate().is_ok());
+        // 12x12 -> pool after block 1 -> 6x6 -> pool after block 3 -> 3x3
+        let gap = n.layers.iter().find(|l| matches!(l.kind, crate::graph::LayerKind::GlobalAvgPool)).unwrap();
+        assert_eq!(gap.in_hwc, (3, 3, 16));
+    }
+
+    #[test]
+    fn single_conv_workload() {
+        let n = single_conv(56, 3, 256, 256);
+        assert_eq!(n.total_macs(), 56 * 56 * 9 * 256 * 256);
+    }
+}

@@ -1,0 +1,26 @@
+//! # NPAS — Compiler-aware Unified Network Pruning and Architecture Search
+//!
+//! Rust + JAX + Pallas reproduction of Li et al., *NPAS* (2020). See
+//! DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+//!
+//! Layering:
+//! * [`tensor`]/[`graph`] — host math + DNN IR substrates.
+//! * [`pruning`] — fine-grained structured pruning schemes + algorithms.
+//! * [`compiler`] — the mobile compiler simulator ("on-device" latency).
+//! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts.
+//! * [`train`] — SynthVision data + training/eval driver.
+//! * [`search`] — Q-learning + Bayesian-optimization NPAS pipeline.
+//! * [`coordinator`] — parallel candidate-evaluation scheduling.
+
+pub mod graph;
+pub mod pruning;
+pub mod compiler;
+pub mod runtime;
+pub mod train;
+pub mod search;
+pub mod coordinator;
+pub mod config;
+pub mod bench;
+pub mod tensor;
+pub mod util;

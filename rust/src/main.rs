@@ -1,0 +1,212 @@
+//! `npas` — CLI for the compiler-aware pruning + architecture search.
+//!
+//! Subcommands:
+//!   search   run the full three-phase NPAS pipeline (real artifact runtime)
+//!   profile  print the §4 motivation tables (filter types, pruning schemes)
+//!   prune    one-shot prune the supernet under a scheme/rate and report
+//!   train    train the dense supernet and report the loss curve
+//!   measure  latency of a zoo model under a framework/device
+//!
+//! Flags: `--config <file.json>` plus per-key overrides (see config.rs).
+
+use anyhow::{bail, Result};
+
+use npas::compiler::device::{ADRENO_640, KRYO_485};
+use npas::compiler::{measure, Framework, SparsityMap};
+use npas::config::RunConfig;
+use npas::coordinator::EventLog;
+use npas::graph::zoo;
+use npas::pruning::{PruneRate, PruneScheme};
+use npas::runtime::Runtime;
+use npas::search::npas as pipeline;
+use npas::train::{SgdConfig, Trainer};
+use npas::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_json_file(path)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(&args)?;
+
+    match args.subcommand() {
+        Some("search") => cmd_search(&cfg),
+        Some("profile") => cmd_profile(),
+        Some("prune") => cmd_prune(&cfg, &args),
+        Some("train") => cmd_train(&cfg, &args),
+        Some("measure") => cmd_measure(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand `{o}`\n");
+            }
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "npas — compiler-aware unified network pruning and architecture search
+
+USAGE: npas <subcommand> [--config file.json] [--flag value ...]
+
+  search   full NPAS pipeline: warmup -> phase1 -> phase2 -> phase3
+           flags: --target-ms --device cpu|gpu --rounds --pool-size
+                  --bo-batch --no-bo --seed --event-log out.jsonl
+  profile  print Fig.3-style motivation tables (filter types / schemes)
+  prune    one-shot prune: --scheme filter|pattern|block|unstructured
+           --rate 6.0 --steps 20
+  train    dense supernet training: --steps 120
+  measure  --model mbv1|mbv2|mbv3|effb0|r50|r50deep --device cpu|gpu
+           --framework ours|mnn|tflite|ptm"
+    );
+}
+
+fn cmd_search(cfg: &RunConfig) -> Result<()> {
+    println!("loading artifacts from `{}` ...", cfg.artifact_dir);
+    let rt = Runtime::load(&cfg.artifact_dir)?;
+    let mut log = match &cfg.event_log {
+        Some(p) => EventLog::to_file(p),
+        None => EventLog::memory(),
+    };
+    let report = pipeline::run(&rt, &cfg.to_npas(), &mut log)?;
+    println!("\n=== NPAS result ===");
+    println!("scheme:");
+    for (i, c) in report.scheme.choices.iter().enumerate() {
+        println!("  block {i}: {}", c.label());
+    }
+    println!("  head rate: {:.1}x", report.scheme.head_rate.0);
+    println!("phase1: replaced {} unfriendly ops", report.phase1.replaced_ops);
+    println!(
+        "phase2: {} evaluations, best reward {:.3}",
+        report.phase2.evaluations, report.phase2.best_reward
+    );
+    println!("phase3 winner: {}", report.phase3.winner.name());
+    println!(
+        "final: accuracy {:.3}, {:.2}ms CPU / {:.2}ms GPU, {:.1}M params, {:.0}M CONV MACs",
+        report.final_accuracy,
+        report.latency_cpu_ms,
+        report.latency_gpu_ms,
+        report.params as f64 / 1e6,
+        report.conv_macs as f64 / 1e6,
+    );
+    println!("\nsearch cost:\n{}", report.metrics_summary);
+    Ok(())
+}
+
+fn cmd_profile() -> Result<()> {
+    println!("# Fig 3(a): latency vs kernel size at equal MACs (56x56 fmap, CPU)");
+    for k in [1usize, 3, 5, 7] {
+        // hold MACs constant by scaling cout
+        let cout = (256.0 * 9.0 / (k * k) as f64) as usize;
+        let net = zoo::single_conv(56, k, 256, cout);
+        let r = measure(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours, 100);
+        println!(
+            "  {k}x{k}: {:6.2} ms  ({} MACs)",
+            r.mean_ms,
+            net.total_macs()
+        );
+    }
+    println!("\n# Fig 3(b): speedup vs pruning rate (3x3 CONV 56x56x256->256, CPU)");
+    let macs = 56.0 * 56.0 * 9.0 * 256.0 * 256.0;
+    for scheme in [
+        PruneScheme::Unstructured,
+        PruneScheme::Pattern,
+        PruneScheme::block_punched_default(),
+        PruneScheme::Filter,
+    ] {
+        print!("  {:22}", scheme.to_string());
+        for rate in [2.0f32, 3.0, 5.0, 7.0, 10.0] {
+            let sp = npas::compiler::LayerSparsity::new(scheme, rate);
+            print!(" {:5.2}x", sp.layer_speedup(macs, &KRYO_485));
+        }
+        println!("   (rates 2/3/5/7/10)");
+    }
+    Ok(())
+}
+
+fn cmd_prune(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let rt = Runtime::load(&cfg.artifact_dir)?;
+    let scheme = match args.str_or("scheme", "block").as_str() {
+        "filter" => PruneScheme::Filter,
+        "pattern" => PruneScheme::Pattern,
+        "unstructured" => PruneScheme::Unstructured,
+        "block" => PruneScheme::block_punched_default(),
+        s => bail!("unknown scheme `{s}`"),
+    };
+    let rate = args.f64_or("rate", 6.0) as f32;
+    let steps = args.usize_or("steps", 40);
+
+    let mut tr = Trainer::new(&rt, cfg.seed, SgdConfig { lr: cfg.lr, ..Default::default() });
+    tr.set_swish(false);
+    println!("pre-training dense supernet ({steps} steps)...");
+    tr.train(steps)?;
+    let dense_acc = tr.evaluate(cfg.eval_batches)?;
+
+    let mut plan = std::collections::BTreeMap::new();
+    for name in &rt.manifest.model.prunable {
+        let s = if scheme == PruneScheme::Pattern && !name.contains("conv3x3") {
+            PruneScheme::block_punched_default()
+        } else {
+            scheme
+        };
+        plan.insert(name.clone(), (s, PruneRate::new(rate)));
+    }
+    tr.one_shot_prune(&plan);
+    let pruned_acc = tr.evaluate(cfg.eval_batches)?;
+    tr.train(steps / 2)?;
+    let retrained_acc = tr.evaluate(cfg.eval_batches)?;
+    println!(
+        "scheme {scheme} @ {rate}x: dense {dense_acc:.3} -> pruned {pruned_acc:.3} -> retrained {retrained_acc:.3} (sparsity {:.2})",
+        tr.sparsity()
+    );
+    Ok(())
+}
+
+fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let rt = Runtime::load(&cfg.artifact_dir)?;
+    let steps = args.usize_or("steps", 120);
+    let mut tr = Trainer::new(&rt, cfg.seed, SgdConfig { lr: cfg.lr, ..Default::default() });
+    tr.set_swish(false);
+    let metrics = tr.train(steps)?;
+    for (i, m) in metrics.iter().enumerate() {
+        if i % 10 == 0 || i == metrics.len() - 1 {
+            println!("step {i:4}  loss {:.4}  ce {:.4}  acc {:.3}", m.loss, m.ce, m.accuracy);
+        }
+    }
+    println!("val accuracy: {:.3}", tr.evaluate(cfg.eval_batches)?);
+    Ok(())
+}
+
+fn cmd_measure(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "mbv3");
+    let net = match model.as_str() {
+        "mbv1" => zoo::mobilenet_v1(),
+        "mbv2" => zoo::mobilenet_v2(),
+        "mbv3" => zoo::mobilenet_v3(),
+        "effb0" => zoo::efficientnet_b0(),
+        "r50" => zoo::resnet50(),
+        "r50deep" => zoo::resnet50_narrow_deep(),
+        m => bail!("unknown model `{m}`"),
+    };
+    let device = match args.str_or("device", "cpu").as_str() {
+        "cpu" => &KRYO_485,
+        "gpu" => &ADRENO_640,
+        d => bail!("unknown device `{d}`"),
+    };
+    let fw = match args.str_or("framework", "ours").as_str() {
+        "ours" => Framework::Ours,
+        "mnn" => Framework::MNN,
+        "tflite" => Framework::TFLite,
+        "ptm" => Framework::PyTorchMobile,
+        f => bail!("unknown framework `{f}`"),
+    };
+    let r = measure(&net, &SparsityMap::new(), device, fw, 100);
+    println!(
+        "{} on {} via {}: {:.2} ms ± {:.2} (compute {:.2} / memory {:.2} / overhead {:.2}; {} fused groups; {} runs)",
+        net.name, r.device, fw.name(), r.mean_ms, r.std_ms, r.compute_ms, r.memory_ms, r.overhead_ms, r.num_groups, r.runs
+    );
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! ADMM-based pruning (Phase 3 candidate algorithm, refs [81, 39]).
+//!
+//! Solves  min_W f(W) + g(Z)  s.t.  W = Z,  where g constrains Z to the
+//! scheme's sparsity set. The split is the classic one:
+//!
+//!   W-update: SGD on f(W) + (rho/2)||W - Z + U||² — executed by the AOT
+//!             train-step artifact, which takes `target = Z - U` and `rho`
+//!             as runtime inputs (see `model.loss_fn`).
+//!   Z-update: projection of (W + U) onto the sparsity set — the magnitude
+//!             mask of `mask::generate_mask` under the searched scheme/rate.
+//!   U-update: U += W - Z (scaled dual ascent).
+//!
+//! The Rust coordinator owns Z and U; Python never runs.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+use super::mask::{apply_mask, generate_mask};
+use super::scheme::{PruneRate, PruneScheme};
+
+#[derive(Debug, Clone)]
+pub struct AdmmState {
+    pub rho: f32,
+    /// Per-tensor (scheme, rate) the projection enforces.
+    plan: BTreeMap<String, (PruneScheme, PruneRate)>,
+    z: BTreeMap<String, Tensor>,
+    u: BTreeMap<String, Tensor>,
+}
+
+impl AdmmState {
+    /// Initialize from current weights: Z = project(W), U = 0.
+    pub fn new(
+        weights: &BTreeMap<String, Tensor>,
+        plan: BTreeMap<String, (PruneScheme, PruneRate)>,
+        rho: f32,
+    ) -> Self {
+        let mut z = BTreeMap::new();
+        let mut u = BTreeMap::new();
+        for (name, (scheme, rate)) in &plan {
+            let w = &weights[name];
+            let mut zw = w.clone();
+            let mask = generate_mask(w, *scheme, *rate);
+            apply_mask(&mut zw, &mask);
+            u.insert(name.clone(), Tensor::zeros(w.dims().to_vec()));
+            z.insert(name.clone(), zw);
+        }
+        AdmmState { rho, plan, z, u }
+    }
+
+    /// The proximal target (Z - U) fed to the train-step artifact for
+    /// `name`; `None` for tensors outside the plan (target = W, rho-term 0
+    /// is handled by the caller passing the weight itself).
+    pub fn target(&self, name: &str) -> Option<Tensor> {
+        let z = self.z.get(name)?;
+        let u = self.u.get(name)?;
+        Some(z.sub(u))
+    }
+
+    /// Z/U updates after a round of W-updates (one "ADMM iteration").
+    pub fn dual_update(&mut self, weights: &BTreeMap<String, Tensor>) {
+        for (name, (scheme, rate)) in &self.plan {
+            let w = &weights[name];
+            let u = self.u.get_mut(name).unwrap();
+            // Z = project(W + U)
+            let mut wu = w.clone();
+            wu.axpy(u, 1.0);
+            let mask = generate_mask(&wu, *scheme, *rate);
+            apply_mask(&mut wu, &mask);
+            // U += W - Z
+            let z = self.z.get_mut(name).unwrap();
+            *z = wu;
+            u.axpy(w, 1.0);
+            u.axpy(z, -1.0);
+        }
+    }
+
+    /// Primal residual ||W - Z||₂ summed over the plan — ADMM convergence
+    /// monitor; retraining drives this toward 0.
+    pub fn primal_residual(&self, weights: &BTreeMap<String, Tensor>) -> f32 {
+        self.plan
+            .keys()
+            .map(|name| weights[name].sub(&self.z[name]).l2_norm())
+            .sum()
+    }
+
+    /// Final hard projection: overwrite weights with masked versions and
+    /// return the masks (what the compiler receives).
+    pub fn finalize(&self, weights: &mut BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
+        let mut masks = BTreeMap::new();
+        for (name, (scheme, rate)) in &self.plan {
+            let w = weights.get_mut(name).unwrap();
+            let mask = generate_mask(w, *scheme, *rate);
+            apply_mask(w, &mask);
+            masks.insert(name.clone(), mask);
+        }
+        masks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShift64Star;
+
+    fn setup() -> (BTreeMap<String, Tensor>, AdmmState) {
+        let mut rng = XorShift64Star::new(11);
+        let mut w = BTreeMap::new();
+        w.insert("a".to_string(), Tensor::he_normal(vec![3, 3, 8, 8], &mut rng));
+        let mut plan = BTreeMap::new();
+        plan.insert(
+            "a".to_string(),
+            (PruneScheme::block_punched_default(), PruneRate::new(3.0)),
+        );
+        let st = AdmmState::new(&w, plan, 1e-2);
+        (w, st)
+    }
+
+    #[test]
+    fn init_projects_z() {
+        let (w, st) = setup();
+        let z = &st.z["a"];
+        assert!(z.sparsity() > 0.5); // 3x rate => ~2/3 zero
+        // z agrees with w on kept entries
+        for (zv, wv) in z.data().iter().zip(w["a"].data()) {
+            assert!(*zv == 0.0 || *zv == *wv);
+        }
+        // target = Z - U = Z at init
+        assert_eq!(st.target("a").unwrap(), st.z["a"]);
+        assert!(st.target("missing").is_none());
+    }
+
+    #[test]
+    fn dual_update_tracks_w() {
+        let (mut w, mut st) = setup();
+        let r0 = st.primal_residual(&w);
+        // simulate the W-update pulling W toward Z (what the rho-term does)
+        let target = st.target("a").unwrap();
+        {
+            let wa = w.get_mut("a").unwrap();
+            let pull = target.sub(wa);
+            wa.axpy(&pull, 0.5);
+        }
+        st.dual_update(&w);
+        let r1 = st.primal_residual(&w);
+        assert!(r1 < r0, "residual should shrink: {r0} -> {r1}");
+    }
+
+    #[test]
+    fn repeated_iterations_converge() {
+        let (mut w, mut st) = setup();
+        for _ in 0..20 {
+            let t = st.target("a").unwrap();
+            let wa = w.get_mut("a").unwrap();
+            let pull = t.sub(wa);
+            wa.axpy(&pull, 0.3);
+            st.dual_update(&w);
+        }
+        let r = st.primal_residual(&w);
+        assert!(r < 1.0, "residual {r}");
+    }
+
+    #[test]
+    fn finalize_masks_weights() {
+        let (mut w, st) = setup();
+        let masks = st.finalize(&mut w);
+        let m = &masks["a"];
+        assert!(m.data().iter().all(|&v| v == 0.0 || v == 1.0));
+        // weights zeroed where mask is zero
+        for (wv, mv) in w["a"].data().iter().zip(m.data()) {
+            assert!(*mv == 1.0 || *wv == 0.0);
+        }
+    }
+}

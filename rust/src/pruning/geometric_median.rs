@@ -1,0 +1,132 @@
+//! Geometric-median filter pruning (FPGM, He et al. 2019 — Phase 3
+//! candidate, "only for filter pruning" per §6.1).
+//!
+//! Filters closest to the geometric median of all filters in a layer are
+//! the most replaceable (their information is representable by the others)
+//! and get pruned — the opposite selection rule from magnitude pruning.
+
+use crate::tensor::Tensor;
+
+use super::scheme::PruneRate;
+
+/// Weiszfeld iteration for the geometric median of `points` (each of
+/// dimension `d`, row-major in `flat`).
+pub fn geometric_median(flat: &[f32], n: usize, d: usize, iters: usize) -> Vec<f32> {
+    assert_eq!(flat.len(), n * d);
+    // init: centroid
+    let mut gm = vec![0f32; d];
+    for i in 0..n {
+        for j in 0..d {
+            gm[j] += flat[i * d + j] / n as f32;
+        }
+    }
+    for _ in 0..iters {
+        let mut num = vec![0f32; d];
+        let mut den = 0f32;
+        for i in 0..n {
+            let dist: f32 = (0..d)
+                .map(|j| (flat[i * d + j] - gm[j]).powi(2))
+                .sum::<f32>()
+                .sqrt()
+                .max(1e-8);
+            let w = 1.0 / dist;
+            for j in 0..d {
+                num[j] += flat[i * d + j] * w;
+            }
+            den += w;
+        }
+        for j in 0..d {
+            gm[j] = num[j] / den;
+        }
+    }
+    gm
+}
+
+/// GM-based filter mask for a (kh,kw,cin,cout) or (din,dout) tensor: prune
+/// the `cout - kept` filters closest to the geometric median.
+pub fn gm_filter_mask(weights: &Tensor, rate: PruneRate) -> Tensor {
+    let dims = weights.dims().to_vec();
+    let cout = *dims.last().expect("needs filters on the last dim");
+    let d: usize = weights.numel() / cout;
+    // gather filters as rows (filter f = stride-cout slice)
+    let mut rows = vec![0f32; cout * d];
+    for (i, w) in weights.data().iter().enumerate() {
+        let f = i % cout;
+        let r = i / cout;
+        rows[f * d + r] = *w;
+    }
+    let gm = geometric_median(&rows, cout, d, 30);
+    let mut dist: Vec<(f32, usize)> = (0..cout)
+        .map(|f| {
+            let s: f32 = (0..d).map(|j| (rows[f * d + j] - gm[j]).powi(2)).sum();
+            (s.sqrt(), f)
+        })
+        .collect();
+    // farthest-from-median filters are the most informative: keep them
+    dist.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let keep = rate.kept_of(cout);
+    let mut keep_flag = vec![false; cout];
+    for &(_, f) in dist.iter().take(keep) {
+        keep_flag[f] = true;
+    }
+    let mut mask = Tensor::zeros(dims);
+    for i in 0..d {
+        for f in 0..cout {
+            if keep_flag[f] {
+                mask.data_mut()[i * cout + f] = 1.0;
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShift64Star;
+
+    #[test]
+    fn median_of_symmetric_points_is_center() {
+        // 4 points at square corners -> GM at origin
+        let pts = vec![1.0, 1.0, -1.0, 1.0, 1.0, -1.0, -1.0, -1.0];
+        let gm = geometric_median(&pts, 4, 2, 50);
+        assert!(gm[0].abs() < 1e-3 && gm[1].abs() < 1e-3, "{gm:?}");
+    }
+
+    #[test]
+    fn median_robust_to_outlier() {
+        // 3 clustered + 1 far outlier: GM stays near cluster (unlike mean)
+        let pts = vec![0.0, 0.0, 0.1, 0.0, 0.0, 0.1, 100.0, 100.0];
+        let gm = geometric_median(&pts, 4, 2, 100);
+        assert!(gm[0] < 1.0 && gm[1] < 1.0, "{gm:?}");
+    }
+
+    #[test]
+    fn gm_mask_prunes_redundant_filter() {
+        // build (1,1,2,4) where filters 0,1 are identical (redundant) and
+        // 2,3 are distinct: a 2x rate should drop one of the duplicates.
+        let mut w = Tensor::zeros(vec![1, 1, 2, 4]);
+        for (f, vals) in [(0, (1.0, 1.0)), (1, (1.0, 1.0)), (2, (5.0, -3.0)), (3, (-4.0, 2.0))] {
+            w.set(&[0, 0, 0, f], vals.0);
+            w.set(&[0, 0, 1, f], vals.1);
+        }
+        let m = gm_filter_mask(&w, PruneRate::new(2.0));
+        let kept: Vec<usize> =
+            (0..4).filter(|&f| m.get(&[0, 0, 0, f]) == 1.0).collect();
+        assert_eq!(kept.len(), 2);
+        // at most one of the duplicate pair survives
+        assert!(!(kept.contains(&0) && kept.contains(&1)), "kept {kept:?}");
+    }
+
+    #[test]
+    fn gm_mask_is_structured() {
+        let mut rng = XorShift64Star::new(13);
+        let w = Tensor::he_normal(vec![3, 3, 4, 8], &mut rng);
+        let m = gm_filter_mask(&w, PruneRate::new(2.0));
+        for f in 0..8 {
+            let s: f32 = (0..9 * 4).map(|i| m.data()[i * 8 + f]).sum();
+            assert!(s == 0.0 || s == 36.0);
+        }
+        assert!((m.sparsity() - 0.5).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,362 @@
+//! Magnitude-based mask generation for every pruning scheme.
+//!
+//! This is the one-shot pruning primitive the NPAS fast evaluation uses
+//! (§5.2.3) and the projection step inside ADMM (Phase 3). Masks are 0/1
+//! tensors with the same shape as the weight they prune; shapes follow the
+//! artifact ABI (`(kh,kw,cin,cout)` conv, `(kh,kw,c)` depthwise,
+//! `(din,dout)` FC).
+
+use crate::tensor::Tensor;
+
+use super::pattern::pattern_mask;
+use super::scheme::{PruneRate, PruneScheme};
+
+/// Generate a 0/1 mask keeping ~`1/rate` of `weights` under `scheme`.
+///
+/// Panics if the scheme is inapplicable to the tensor shape (callers gate on
+/// `PruneScheme::applicable_to_kernel`; the search space enforces this).
+pub fn generate_mask(weights: &Tensor, scheme: PruneScheme, rate: PruneRate) -> Tensor {
+    if rate.is_dense() {
+        return Tensor::ones(weights.dims().to_vec());
+    }
+    let kept = rate.kept_of(weights.numel());
+    match scheme {
+        PruneScheme::Unstructured => unstructured_mask(weights, kept),
+        PruneScheme::Filter => filter_mask(weights, rate),
+        PruneScheme::Pattern => pattern_mask(weights, kept),
+        PruneScheme::BlockPunched { bf, bc } => match weights.dims().len() {
+            // 1x1 convs / plain matrices degenerate to block-based semantics
+            // (the "location" within the block is a single position):
+            2 => block_based_mask(weights, bf, bc, rate),
+            3 => depthwise_mask(weights, rate),
+            4 if weights.dims()[0] * weights.dims()[1] == 1 => {
+                let w2 = weights.clone().reshape(vec![weights.dims()[2], weights.dims()[3]]);
+                block_based_mask(&w2, bf, bc, rate).reshape(weights.dims().to_vec())
+            }
+            4 => block_punched_mask(weights, bf, bc, rate),
+            d => panic!("block-punched on rank-{d} tensor"),
+        },
+        PruneScheme::BlockBased { brows, bcols } => match weights.dims().len() {
+            2 => block_based_mask(weights, brows, bcols, rate),
+            4 => {
+                let (kh, kw, cin, cout) =
+                    (weights.dims()[0], weights.dims()[1], weights.dims()[2], weights.dims()[3]);
+                let w2 = weights.clone().reshape(vec![kh * kw * cin, cout]);
+                block_based_mask(&w2, brows, bcols, rate).reshape(vec![kh, kw, cin, cout])
+            }
+            3 => depthwise_mask(weights, rate),
+            d => panic!("block-based on rank-{d} tensor"),
+        },
+    }
+}
+
+/// Apply a mask in place: w *= mask.
+pub fn apply_mask(weights: &mut Tensor, mask: &Tensor) {
+    weights.mul_assign(mask);
+}
+
+/// Global top-k by |w| (Fig. 1a/b). Exactly `kept` entries survive (ties
+/// broken by index order).
+fn unstructured_mask(weights: &Tensor, kept: usize) -> Tensor {
+    let mut order: Vec<usize> = (0..weights.numel()).collect();
+    let data = weights.data();
+    order.sort_by(|&a, &b| data[b].abs().partial_cmp(&data[a].abs()).unwrap());
+    let mut mask = Tensor::zeros(weights.dims().to_vec());
+    for &i in order.iter().take(kept) {
+        mask.data_mut()[i] = 1.0;
+    }
+    mask
+}
+
+/// Whole-filter (output-channel) pruning (Fig. 1c).
+fn filter_mask(weights: &Tensor, rate: PruneRate) -> Tensor {
+    let dims = weights.dims().to_vec();
+    let cout = *dims.last().expect("filter pruning needs >=1D");
+    let inner: usize = weights.numel() / cout;
+    // filter norms: ||w[..., f]||_2
+    let mut norms = vec![0f32; cout];
+    for (i, w) in weights.data().iter().enumerate() {
+        norms[i % cout] += w * w;
+    }
+    let keep = rate.kept_of(cout);
+    let mut order: Vec<usize> = (0..cout).collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    let mut keep_flag = vec![false; cout];
+    for &f in order.iter().take(keep) {
+        keep_flag[f] = true;
+    }
+    let mut mask = Tensor::zeros(dims);
+    for i in 0..inner {
+        for f in 0..cout {
+            if keep_flag[f] {
+                mask.data_mut()[i * cout + f] = 1.0;
+            }
+        }
+    }
+    mask
+}
+
+/// Depthwise (kh,kw,c): per-channel kernels; prune weakest whole channels'
+/// positions via per-position scores shared across all channels in a block
+/// of the channel dim. Simplified: per-channel top positions (the DW tensor
+/// is tiny; its latency impact is modeled channel-wise anyway).
+fn depthwise_mask(weights: &Tensor, rate: PruneRate) -> Tensor {
+    let dims = weights.dims().to_vec();
+    let (kh, kw, c) = (dims[0], dims[1], dims[2]);
+    let keep_pos = rate.kept_of(kh * kw);
+    let mut mask = Tensor::zeros(dims);
+    for ch in 0..c {
+        let mut scored: Vec<(f32, usize)> = (0..kh * kw)
+            .map(|p| (weights.get(&[p / kw, p % kw, ch]).abs(), p))
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, p) in scored.iter().take(keep_pos) {
+            mask.set(&[p / kw, p % kw, ch], 1.0);
+        }
+    }
+    mask
+}
+
+/// Block-punched (Fig. 1f): blocks tile the (cout=filters, cin=channels)
+/// grid with `bf x bc` blocks; within a block, each kernel position (i,j)
+/// is kept or punched for ALL (filter, channel) pairs of the block.
+///
+/// Hot path of the candidate evaluator (called per tensor per candidate):
+/// flat slice indexing with hoisted strides instead of per-element
+/// multi-index math (§Perf: 8.0ms → see EXPERIMENTS.md).
+fn block_punched_mask(weights: &Tensor, bf: usize, bc: usize, rate: PruneRate) -> Tensor {
+    let dims = weights.dims().to_vec();
+    let (kh, kw, cin, cout) = (dims[0], dims[1], dims[2], dims[3]);
+    let npos = kh * kw;
+    let keep_pos = rate.kept_of(npos);
+    let mut mask = Tensor::zeros(dims);
+    let wdata = weights.data();
+    let mdata = mask.data_mut();
+    // row-major strides: [kw*cin*cout, cin*cout, cout, 1]
+    let pos_stride = cin * cout;
+    let mut scored: Vec<(f32, usize)> = Vec::with_capacity(npos);
+    let mut f0 = 0;
+    while f0 < cout {
+        let f1 = (f0 + bf).min(cout);
+        let mut c0 = 0;
+        while c0 < cin {
+            let c1 = (c0 + bc).min(cin);
+            // score each kernel position by |w| mass over the block
+            scored.clear();
+            for p in 0..npos {
+                let base = p * pos_stride;
+                let mut s = 0f32;
+                for c in c0..c1 {
+                    let row = base + c * cout;
+                    for v in &wdata[row + f0..row + f1] {
+                        s += v.abs();
+                    }
+                }
+                scored.push((s, p));
+            }
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            for &(_, p) in scored.iter().take(keep_pos) {
+                let base = p * pos_stride;
+                for c in c0..c1 {
+                    let row = base + c * cout;
+                    mdata[row + f0..row + f1].fill(1.0);
+                }
+            }
+            c0 = c1;
+        }
+        f0 = f1;
+    }
+    mask
+}
+
+/// Block-based (Fig. 1g): (rows x cols) blocks over a 2-D matrix; within a
+/// block, whole columns are kept/pruned by column norm. A fractional-quota
+/// carry across blocks keeps the *global* density at 1/rate even when the
+/// per-block column count quantizes coarsely (e.g. 1-column blocks).
+fn block_based_mask(weights: &Tensor, brows: usize, bcols: usize, rate: PruneRate) -> Tensor {
+    let dims = weights.dims().to_vec();
+    let (rows, cols) = (dims[0], dims[1]);
+    let mut mask = Tensor::zeros(dims);
+    let keep_frac = rate.keep_fraction() as f64;
+    let mut carry = 0.0f64;
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + brows).min(rows);
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + bcols).min(cols);
+            let bw = c1 - c0;
+            let desired = bw as f64 * keep_frac + carry;
+            let keep_cols = (desired.round() as usize).min(bw);
+            carry = desired - keep_cols as f64;
+            let mut scored: Vec<(f32, usize)> = (c0..c1)
+                .map(|c| {
+                    let s: f32 = (r0..r1).map(|r| weights.get(&[r, c]).powi(2)).sum();
+                    (s, c)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            for &(_, c) in scored.iter().take(keep_cols) {
+                for r in r0..r1 {
+                    mask.set(&[r, c], 1.0);
+                }
+            }
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShift64Star;
+
+    fn randw(dims: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = XorShift64Star::new(seed);
+        Tensor::he_normal(dims, &mut rng)
+    }
+
+    fn density(m: &Tensor) -> f32 {
+        1.0 - m.sparsity()
+    }
+
+    #[test]
+    fn dense_rate_keeps_everything() {
+        let w = randw(vec![3, 3, 8, 8], 1);
+        let m = generate_mask(&w, PruneScheme::Unstructured, PruneRate::new(1.0));
+        assert_eq!(m.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn unstructured_exact_count() {
+        let w = randw(vec![3, 3, 16, 16], 2);
+        for rate in [2.0f32, 2.5, 3.0, 5.0, 7.0, 10.0] {
+            let m = generate_mask(&w, PruneScheme::Unstructured, PruneRate::new(rate));
+            let want = PruneRate::new(rate).kept_of(w.numel());
+            assert_eq!(m.nnz(), want, "rate {rate}");
+        }
+    }
+
+    #[test]
+    fn unstructured_keeps_largest() {
+        let w = Tensor::new(vec![2, 3], vec![0.1, -5.0, 0.2, 3.0, -0.05, 1.0]);
+        let m = generate_mask(&w, PruneScheme::Unstructured, PruneRate::new(3.0));
+        assert_eq!(m.data(), &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn filter_mask_whole_filters() {
+        let w = randw(vec![3, 3, 8, 16], 3);
+        let m = generate_mask(&w, PruneScheme::Filter, PruneRate::new(2.0));
+        // each filter (last-dim slice) is all-0 or all-1
+        let mut live = 0;
+        for f in 0..16 {
+            let vals: Vec<f32> =
+                (0..9 * 8).map(|i| m.data()[i * 16 + f]).collect();
+            let s: f32 = vals.iter().sum();
+            assert!(s == 0.0 || s == (9 * 8) as f32, "filter {f} partial");
+            live += (s > 0.0) as usize;
+        }
+        assert_eq!(live, 8);
+        assert!((density(&m) - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn block_punched_structure_holds() {
+        let w = randw(vec![3, 3, 8, 16], 4);
+        let (bf, bc) = (8, 4);
+        let m = generate_mask(
+            &w,
+            PruneScheme::BlockPunched { bf, bc },
+            PruneRate::new(3.0),
+        );
+        // within each block, each position is constant
+        for f0 in (0..16).step_by(bf) {
+            for c0 in (0..8).step_by(bc) {
+                for p in 0..9 {
+                    let v0 = m.get(&[p / 3, p % 3, c0, f0]);
+                    for c in c0..c0 + bc {
+                        for f in f0..f0 + bf {
+                            assert_eq!(m.get(&[p / 3, p % 3, c, f]), v0);
+                        }
+                    }
+                }
+            }
+        }
+        // 3x => keep 3/9 positions
+        assert!((density(&m) - 3.0 / 9.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn block_punched_1x1_degenerates_to_block_based() {
+        let w = randw(vec![1, 1, 16, 16], 5);
+        let m = generate_mask(&w, PruneScheme::block_punched_default(), PruneRate::new(2.0));
+        assert!((density(&m) - 0.5).abs() < 0.05);
+        // columns within a block are whole
+        let m2 = m.reshape(vec![16, 16]);
+        for r0 in (0..16).step_by(8) {
+            for c in 0..16 {
+                let v0 = m2.get(&[r0, c]);
+                for r in r0..(r0 + 8).min(16) {
+                    assert_eq!(m2.get(&[r, c]), v0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_based_fc() {
+        let w = randw(vec![64, 10], 6);
+        let m = generate_mask(&w, PruneScheme::BlockBased { brows: 16, bcols: 5 }, PruneRate::new(2.5));
+        // within each 16x5 block, whole columns
+        for r0 in (0..64).step_by(16) {
+            for c in 0..10 {
+                let v0 = m.get(&[r0, c]);
+                for r in r0..r0 + 16 {
+                    assert_eq!(m.get(&[r, c]), v0, "col {c} split in block at row {r0}");
+                }
+            }
+        }
+        assert!((density(&m) - 0.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn pattern_scheme_via_generate() {
+        let w = randw(vec![3, 3, 8, 8], 7);
+        let m = generate_mask(&w, PruneScheme::Pattern, PruneRate::new(2.25));
+        assert!((density(&m) - 4.0 / 9.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn depthwise_mask_per_channel() {
+        let w = randw(vec![3, 3, 16], 8);
+        let m = generate_mask(&w, PruneScheme::block_punched_default(), PruneRate::new(3.0));
+        for c in 0..16 {
+            let nnz: usize = (0..9).filter(|&p| m.get(&[p / 3, p % 3, c]) != 0.0).count();
+            assert_eq!(nnz, 3);
+        }
+    }
+
+    #[test]
+    fn apply_mask_zeroes() {
+        let mut w = randw(vec![4, 4], 9);
+        let m = generate_mask(&w, PruneScheme::Unstructured, PruneRate::new(2.0));
+        apply_mask(&mut w, &m);
+        assert_eq!(w.nnz(), 8);
+    }
+
+    #[test]
+    fn whole_tensor_block_equals_filterish_extreme() {
+        // block = whole tensor => keep_pos positions globally (coarse)
+        let w = randw(vec![3, 3, 8, 8], 10);
+        let m = generate_mask(
+            &w,
+            PruneScheme::BlockPunched { bf: 8, bc: 8 },
+            PruneRate::new(9.0),
+        );
+        // exactly one kernel position survives across the whole tensor
+        assert_eq!(m.nnz(), 8 * 8);
+    }
+}

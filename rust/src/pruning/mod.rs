@@ -1,0 +1,22 @@
+//! S3/S4 — fine-grained structured pruning: schemes + algorithms.
+//!
+//! The paper's first contribution (§3): a *general category* of fine-grained
+//! structured pruning — block-punched for CONV, block-based for FC — which
+//! subsumes unstructured (1×1 blocks) and coarse-grained filter pruning
+//! (whole-tensor block) as special cases, plus pattern-based pruning for 3×3
+//! CONV. Masks generated here are fed directly to the AOT supernet artifact
+//! (layout matches `python/compile/model.py` param shapes).
+//!
+//! Pruning *algorithms* (§5.1 Phase 3): magnitude one-shot/iterative, ADMM,
+//! geometric-median (filter only), and group-Lasso regularization.
+
+pub mod admm;
+pub mod geometric_median;
+pub mod group_lasso;
+pub mod mask;
+pub mod pattern;
+pub mod scheme;
+
+pub use admm::AdmmState;
+pub use mask::generate_mask;
+pub use scheme::{PruneRate, PruneScheme};

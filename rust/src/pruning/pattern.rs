@@ -1,0 +1,165 @@
+//! PatDNN-style pattern library for 3×3 kernels.
+//!
+//! A pattern is a set of `PATTERN_KEEP = 4` kept positions inside a 3×3
+//! kernel. The library follows the PatDNN observation that accurate patterns
+//! keep the central weight plus 3 neighbors forming a connected shape; the
+//! compiler groups kernels by pattern so each pattern adds one code variant
+//! (§2.1: large kernels would blow up the library — that is why patterns are
+//! 3×3-only and why block-punched pruning exists).
+
+use crate::tensor::Tensor;
+
+/// 8 canonical 4-entry patterns (flattened 3×3 indices; 4 = center).
+/// Each keeps the center + 3 of its 4-connected/diagonal neighbors.
+pub const PATTERNS: [[usize; 4]; 8] = [
+    [1, 3, 4, 5], // cross minus bottom
+    [1, 4, 5, 7], // cross minus left
+    [3, 4, 5, 7], // cross minus top
+    [1, 3, 4, 7], // cross minus right
+    [0, 1, 3, 4], // top-left corner block
+    [1, 2, 4, 5], // top-right corner block
+    [3, 4, 6, 7], // bottom-left corner block
+    [4, 5, 7, 8], // bottom-right corner block
+];
+
+/// Index of the pattern maximizing the retained |w| mass of a 9-element
+/// kernel, plus that mass.
+pub fn best_pattern(kernel_abs: &[f32; 9]) -> (usize, f32) {
+    let mut best = (0usize, f32::MIN);
+    for (pi, pat) in PATTERNS.iter().enumerate() {
+        let mass: f32 = pat.iter().map(|&i| kernel_abs[i]).sum();
+        if mass > best.1 {
+            best = (pi, mass);
+        }
+    }
+    best
+}
+
+/// Pattern + connectivity pruning for a (3,3,cin,cout) weight tensor.
+///
+/// Every kernel is assigned its best pattern (keeping 4/9 weights); to reach
+/// an overall `kept` weight budget below that, the weakest whole kernels are
+/// additionally removed (connectivity pruning), matching PatDNN/PCONV.
+/// Returns the 0/1 mask.
+pub fn pattern_mask(weights: &Tensor, kept: usize) -> Tensor {
+    let dims = weights.dims().to_vec();
+    assert_eq!(dims.len(), 4, "pattern_mask expects (kh,kw,cin,cout)");
+    let (kh, kw, cin, cout) = (dims[0], dims[1], dims[2], dims[3]);
+    assert_eq!((kh, kw), (3, 3), "patterns are 3x3-only");
+
+    // per-kernel best pattern + mass
+    let nker = cin * cout;
+    let mut choice = vec![0usize; nker];
+    let mut mass = vec![0f32; nker];
+    for c in 0..cin {
+        for f in 0..cout {
+            let mut kabs = [0f32; 9];
+            for (p, item) in kabs.iter_mut().enumerate() {
+                *item = weights.get(&[p / 3, p % 3, c, f]).abs();
+            }
+            let (pi, m) = best_pattern(&kabs);
+            let k = c * cout + f;
+            choice[k] = pi;
+            mass[k] = m;
+        }
+    }
+
+    // connectivity pruning: keep the strongest kernels so that
+    // kernels_kept * PATTERN_KEEP ≈ kept.
+    let keep_kernels = (kept / super::scheme::PATTERN_KEEP).clamp(1, nker);
+    let mut order: Vec<usize> = (0..nker).collect();
+    order.sort_by(|&a, &b| mass[b].partial_cmp(&mass[a]).unwrap());
+    let mut kept_flag = vec![false; nker];
+    for &k in order.iter().take(keep_kernels) {
+        kept_flag[k] = true;
+    }
+
+    let mut mask = Tensor::zeros(dims);
+    for c in 0..cin {
+        for f in 0..cout {
+            let k = c * cout + f;
+            if !kept_flag[k] {
+                continue;
+            }
+            for &p in &PATTERNS[choice[k]] {
+                mask.set(&[p / 3, p % 3, c, f], 1.0);
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShift64Star;
+
+    #[test]
+    fn all_patterns_keep_center_and_four() {
+        for pat in PATTERNS {
+            assert_eq!(pat.len(), 4);
+            assert!(pat.contains(&4), "pattern {pat:?} misses center");
+            // strictly increasing, in range
+            for w in pat.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(pat.iter().all(|&p| p < 9));
+        }
+    }
+
+    #[test]
+    fn best_pattern_picks_max_mass() {
+        let mut k = [0.0f32; 9];
+        k[0] = 5.0;
+        k[1] = 5.0;
+        k[3] = 5.0;
+        k[4] = 5.0;
+        let (pi, m) = best_pattern(&k);
+        assert_eq!(PATTERNS[pi], [0, 1, 3, 4]);
+        assert_eq!(m, 20.0);
+    }
+
+    #[test]
+    fn mask_kernel_counts() {
+        let mut rng = XorShift64Star::new(3);
+        let w = Tensor::he_normal(vec![3, 3, 8, 16], &mut rng);
+        let total = w.numel();
+        // 2.25x: every kernel kept with a pattern
+        let mask = pattern_mask(&w, total * 4 / 9);
+        for c in 0..8 {
+            for f in 0..16 {
+                let nnz: usize = (0..9)
+                    .filter(|&p| mask.get(&[p / 3, p % 3, c, f]) != 0.0)
+                    .count();
+                assert_eq!(nnz, 4, "kernel ({c},{f})");
+            }
+        }
+    }
+
+    #[test]
+    fn connectivity_pruning_removes_whole_kernels() {
+        let mut rng = XorShift64Star::new(4);
+        let w = Tensor::he_normal(vec![3, 3, 4, 8], &mut rng);
+        let kept = w.numel() / 9; // 9x pruning => ~1/4 kernels survive
+        let mask = pattern_mask(&w, kept);
+        let mut live = 0;
+        for c in 0..4 {
+            for f in 0..8 {
+                let nnz: usize = (0..9)
+                    .filter(|&p| mask.get(&[p / 3, p % 3, c, f]) != 0.0)
+                    .count();
+                assert!(nnz == 0 || nnz == 4, "kernel must be empty or patterned");
+                live += (nnz == 4) as usize;
+            }
+        }
+        assert_eq!(live, kept / 4);
+    }
+
+    #[test]
+    fn mask_is_binary() {
+        let mut rng = XorShift64Star::new(5);
+        let w = Tensor::he_normal(vec![3, 3, 4, 4], &mut rng);
+        let mask = pattern_mask(&w, 64);
+        assert!(mask.data().iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+}

@@ -1,0 +1,149 @@
+//! Pruning scheme and rate vocabulary (paper Table 1 + Fig. 1).
+
+use std::fmt;
+
+/// Default block-punched block: #filters × #channels per block. The paper's
+/// guidance (§3): channels-per-block should match the device vector width
+/// (4 for NEON), filters-per-block chosen by design targets (8).
+pub const DEFAULT_BLOCK_FILTERS: usize = 8;
+pub const DEFAULT_BLOCK_CHANNELS: usize = 4;
+
+/// How many weights a 3×3 kernel keeps under pattern-based pruning
+/// (PatDNN-style 4-entry patterns).
+pub const PATTERN_KEEP: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PruneScheme {
+    /// Arbitrary-position pruning (Fig. 1a/b) — block-punched with 1×1 block.
+    Unstructured,
+    /// Whole-filter removal (Fig. 1c) — coarse-grained structured.
+    Filter,
+    /// PatDNN-style per-kernel patterns + kernel connectivity pruning
+    /// (Fig. 1e). Only valid for 3×3 CONV layers.
+    Pattern,
+    /// Fig. 1f: blocks over the (filters × channels) grid; within a block,
+    /// kernel positions are punched across all members simultaneously.
+    BlockPunched { bf: usize, bc: usize },
+    /// Fig. 1g: FC weight matrix divided into blocks; whole columns within
+    /// each block are pruned.
+    BlockBased { brows: usize, bcols: usize },
+}
+
+impl PruneScheme {
+    pub fn block_punched_default() -> Self {
+        PruneScheme::BlockPunched {
+            bf: DEFAULT_BLOCK_FILTERS,
+            bc: DEFAULT_BLOCK_CHANNELS,
+        }
+    }
+
+    pub fn block_based_default() -> Self {
+        PruneScheme::BlockBased { brows: 16, bcols: 4 }
+    }
+
+    /// Can this scheme be applied to a conv with the given kernel size?
+    /// (paper §2.1: patterns only exist for 3×3).
+    pub fn applicable_to_kernel(&self, kh: usize, kw: usize) -> bool {
+        match self {
+            PruneScheme::Pattern => kh == 3 && kw == 3,
+            _ => true,
+        }
+    }
+
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            PruneScheme::Unstructured => "unstructured",
+            PruneScheme::Filter => "filter",
+            PruneScheme::Pattern => "pattern",
+            PruneScheme::BlockPunched { .. } => "block-punched",
+            PruneScheme::BlockBased { .. } => "block-based",
+        }
+    }
+}
+
+impl fmt::Display for PruneScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PruneScheme::BlockPunched { bf, bc } => write!(f, "block-punched[{bf}x{bc}]"),
+            PruneScheme::BlockBased { brows, bcols } => {
+                write!(f, "block-based[{brows}x{bcols}]")
+            }
+            other => write!(f, "{}", other.short_name()),
+        }
+    }
+}
+
+/// Pruning rate: the paper's search space {1, 2, 2.5, 3, 5, 7, 10}×.
+/// `rate = total / kept`, so keep fraction = 1/rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PruneRate(pub f32);
+
+impl PruneRate {
+    /// The Table 1 search-space values.
+    pub const SPACE: [f32; 7] = [1.0, 2.0, 2.5, 3.0, 5.0, 7.0, 10.0];
+
+    pub fn new(rate: f32) -> Self {
+        assert!(rate >= 1.0, "pruning rate must be >= 1.0, got {rate}");
+        PruneRate(rate)
+    }
+
+    pub fn keep_fraction(self) -> f32 {
+        1.0 / self.0
+    }
+
+    /// Number of weights kept out of `n` (at least 1 when n > 0).
+    pub fn kept_of(self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        (((n as f64) * self.keep_fraction() as f64).round() as usize).clamp(1, n)
+    }
+
+    pub fn is_dense(self) -> bool {
+        self.0 <= 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_keep_math() {
+        let r = PruneRate::new(5.0);
+        assert!((r.keep_fraction() - 0.2).abs() < 1e-6);
+        assert_eq!(r.kept_of(100), 20);
+        assert_eq!(r.kept_of(3), 1); // clamped to >= 1
+        assert_eq!(r.kept_of(0), 0);
+        assert!(PruneRate::new(1.0).is_dense());
+    }
+
+    #[test]
+    #[should_panic]
+    fn sub_one_rate_rejected() {
+        PruneRate::new(0.5);
+    }
+
+    #[test]
+    fn pattern_only_for_3x3() {
+        assert!(PruneScheme::Pattern.applicable_to_kernel(3, 3));
+        assert!(!PruneScheme::Pattern.applicable_to_kernel(1, 1));
+        assert!(!PruneScheme::Pattern.applicable_to_kernel(5, 5));
+        assert!(PruneScheme::Unstructured.applicable_to_kernel(5, 5));
+        assert!(PruneScheme::block_punched_default().applicable_to_kernel(7, 7));
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(PruneScheme::block_punched_default().to_string(), "block-punched[8x4]");
+        assert_eq!(PruneScheme::Unstructured.to_string(), "unstructured");
+        assert_eq!(PruneScheme::Pattern.short_name(), "pattern");
+    }
+
+    #[test]
+    fn search_space_is_papers() {
+        assert_eq!(PruneRate::SPACE.len(), 7);
+        assert_eq!(PruneRate::SPACE[0], 1.0);
+        assert_eq!(PruneRate::SPACE[6], 10.0);
+    }
+}

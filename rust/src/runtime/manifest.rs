@@ -1,0 +1,250 @@
+//! Artifact manifest — the ABI between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `manifest.json` records, for every artifact, the *ordered* input/output
+//! tensor names+shapes+dtypes, plus the supernet hyperparameters. The
+//! runtime binds buffers strictly in manifest order; any drift between the
+//! Python model and the Rust coordinator fails loudly here rather than as
+//! silent numerical garbage.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorDef {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorDef {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.req("name")?.as_str().context("tensor name")?.to_string();
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .context("shape array")?
+            .iter()
+            .map(|v| v.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match j.req("dtype")?.as_str() {
+            Some("f32") => DType::F32,
+            Some("i32") => DType::I32,
+            other => bail!("unsupported dtype {other:?} for {name}"),
+        };
+        Ok(TensorDef { name, shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactDef {
+    pub file: String,
+    pub inputs: Vec<TensorDef>,
+    pub outputs: Vec<TensorDef>,
+}
+
+impl ArtifactDef {
+    fn from_json(j: &Json) -> Result<Self> {
+        let defs = |key: &str| -> Result<Vec<TensorDef>> {
+            j.req(key)?
+                .as_arr()
+                .context("io array")?
+                .iter()
+                .map(TensorDef::from_json)
+                .collect()
+        };
+        Ok(ArtifactDef {
+            file: j.req("file")?.as_str().context("file")?.to_string(),
+            inputs: defs("inputs")?,
+            outputs: defs("outputs")?,
+        })
+    }
+
+    pub fn input(&self, name: &str) -> Option<&TensorDef> {
+        self.inputs.iter().find(|t| t.name == name)
+    }
+}
+
+/// Supernet hyperparameters (mirrors `python/compile/model.py` constants).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub img: usize,
+    pub c_in: usize,
+    pub channels: usize,
+    pub blocks: usize,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub pool_after: Vec<usize>,
+    pub branches: Vec<String>,
+    /// (name, shape) in flat ABI order.
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub prunable: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub artifacts: BTreeMap<String, ArtifactDef>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let m = j.req("model")?;
+        let get = |k: &str| -> Result<usize> { Ok(m.req(k)?.as_usize().context(k.to_string())?) };
+        let model = ModelMeta {
+            img: get("img")?,
+            c_in: get("c_in")?,
+            channels: get("channels")?,
+            blocks: get("blocks")?,
+            num_classes: get("num_classes")?,
+            batch: get("batch")?,
+            eval_batch: get("eval_batch")?,
+            pool_after: m
+                .req("pool_after")?
+                .as_arr()
+                .context("pool_after")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            branches: m
+                .req("branches")?
+                .as_arr()
+                .context("branches")?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+            param_specs: m
+                .req("param_specs")?
+                .as_arr()
+                .context("param_specs")?
+                .iter()
+                .map(|v| {
+                    let name = v.req("name")?.as_str().context("spec name")?.to_string();
+                    let shape = v
+                        .req("shape")?
+                        .as_arr()
+                        .context("spec shape")?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect();
+                    Ok((name, shape))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            prunable: m
+                .req("prunable")?
+                .as_arr()
+                .context("prunable")?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts obj")? {
+            artifacts.insert(name.clone(), ArtifactDef::from_json(a)?);
+        }
+        let man = Manifest { dir, model, artifacts };
+        man.validate()?;
+        Ok(man)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactDef> {
+        self.artifacts.get(name).with_context(|| format!("unknown artifact `{name}`"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Structural sanity: every param spec appears as a train input with the
+    /// same shape, masks exist for every prunable tensor, branch count is 5.
+    pub fn validate(&self) -> Result<()> {
+        let train = self.artifact("train")?;
+        for (name, shape) in &self.model.param_specs {
+            let def = train
+                .input(name)
+                .with_context(|| format!("param {name} missing from train inputs"))?;
+            if &def.shape != shape {
+                bail!("param {name}: manifest shape {:?} != spec {:?}", def.shape, shape);
+            }
+        }
+        for p in &self.model.prunable {
+            train
+                .input(&format!("mask_{p}"))
+                .with_context(|| format!("mask_{p} missing from train inputs"))?;
+        }
+        if self.model.branches.len() != 5 {
+            bail!("expected 5 filter-type branches, got {}", self.model.branches.len());
+        }
+        let grads =
+            train.outputs.iter().filter(|t| t.name.starts_with("grad_")).count();
+        if grads != self.model.param_specs.len() {
+            bail!("train outputs have {grads} grads for {} params", self.model.param_specs.len());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(man.model.branches.len(), 5);
+        assert_eq!(man.model.param_specs.len(), 2 + 7 * man.model.blocks);
+        assert_eq!(man.model.prunable.len(), man.model.param_specs.len() - 1);
+        let train = man.artifact("train").unwrap();
+        assert_eq!(train.outputs[0].name, "loss");
+        assert_eq!(train.inputs.last().unwrap().dtype, DType::I32);
+        assert!(man.hlo_path("micro").unwrap().exists());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/xyz").is_err());
+    }
+
+    #[test]
+    fn tensor_def_numel() {
+        let t = TensorDef { name: "x".into(), shape: vec![2, 3, 4], dtype: DType::F32 };
+        assert_eq!(t.numel(), 24);
+        let s = TensorDef { name: "s".into(), shape: vec![], dtype: DType::F32 };
+        assert_eq!(s.numel(), 1);
+    }
+}

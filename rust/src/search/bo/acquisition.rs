@@ -1,0 +1,113 @@
+//! Expected Improvement acquisition (§5.2.4, paper ref. 60) + batch selection
+//! (Algorithm 1: select argmax-α B schemes from the candidate pool).
+
+use crate::search::space::NpasScheme;
+
+use super::gp::Gp;
+
+/// Standard normal pdf.
+fn phi(x: f64) -> f64 {
+    (-(x * x) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via Abramowitz-Stegun erf approximation (|err| <
+/// 1.5e-7 — plenty for acquisition ranking).
+fn big_phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// EI(x) = (μ - f* - ξ)Φ(z) + σφ(z), z = (μ - f* - ξ)/σ.
+pub fn expected_improvement(mean: f64, var: f64, best: f64, xi: f64) -> f64 {
+    let sigma = var.sqrt();
+    if sigma < 1e-12 {
+        return (mean - best - xi).max(0.0);
+    }
+    let delta = mean - best - xi;
+    let z = delta / sigma;
+    delta * big_phi(z) + sigma * phi(z)
+}
+
+/// Select the `batch` highest-EI schemes from `pool` (returns indices,
+/// highest first). With an empty GP every candidate ties, so the head of
+/// the pool is taken — pure exploration.
+pub fn select_batch(gp: &Gp, pool: &[NpasScheme], best_reward: f64, batch: usize) -> Vec<usize> {
+    let mut scored: Vec<(f64, usize)> = pool
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let (m, v) = gp.predict(s);
+            (expected_improvement(m, v, best_reward, 0.01), i)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    scored.into_iter().take(batch).map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::PruneRate;
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-5);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ei_zero_variance_is_relu() {
+        assert!((expected_improvement(0.5, 0.0, 0.4, 0.0) - 0.1).abs() < 1e-12);
+        assert_eq!(expected_improvement(0.3, 0.0, 0.4, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ei_increases_with_mean_and_variance() {
+        let base = expected_improvement(0.5, 0.01, 0.5, 0.0);
+        assert!(expected_improvement(0.6, 0.01, 0.5, 0.0) > base);
+        assert!(expected_improvement(0.5, 0.10, 0.5, 0.0) > base);
+        // far-below-best with tiny variance: essentially zero
+        assert!(expected_improvement(0.1, 1e-6, 0.9, 0.0) < 1e-10);
+    }
+
+    #[test]
+    fn batch_selection_prefers_predicted_winners() {
+        let mut gp = Gp::new(1e-3);
+        let mk = |r: f32| {
+            let mut s = NpasScheme::dense(3);
+            for c in &mut s.choices {
+                c.rate = PruneRate::new(r);
+            }
+            s
+        };
+        gp.observe(&mk(2.0), 0.9);
+        gp.observe(&mk(10.0), 0.2);
+        gp.fit();
+        let pool = vec![mk(10.0), mk(7.0), mk(2.5), mk(2.0)];
+        let picked = select_batch(&gp, &pool, 0.5, 2);
+        // low-rate (high predicted reward) candidates first
+        assert!(picked.contains(&3) || picked.contains(&2), "{picked:?}");
+        assert!(!picked.contains(&0), "{picked:?}");
+    }
+
+    #[test]
+    fn empty_gp_takes_pool_head() {
+        let gp = Gp::new(1e-3);
+        let pool = vec![NpasScheme::dense(2), NpasScheme::dense(2)];
+        let picked = select_batch(&gp, &pool, 0.0, 1);
+        assert_eq!(picked.len(), 1);
+    }
+}

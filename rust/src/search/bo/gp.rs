@@ -1,0 +1,210 @@
+//! Gaussian process over NPAS schemes with the WL graph kernel (§5.2.4):
+//! the Bayesian predictor that filters the agent's candidate pool so only
+//! promising schemes get the expensive evaluation.
+//!
+//! Small dense GP: K = k(X, X) + σ²I, Cholesky factorization, posterior
+//! mean/variance per candidate. Observation counts in NPAS are tens-to-
+//! hundreds, so O(n³) is fine (and benched in `hotpath`).
+
+use crate::search::space::NpasScheme;
+
+use super::wl_kernel::{wl_features, wl_kernel_normalized, Histogram};
+
+const WL_ITERS: usize = 2;
+
+pub struct Gp {
+    noise: f64,
+    feats: Vec<Vec<Histogram>>,
+    y: Vec<f64>,
+    y_mean: f64,
+    /// Cholesky factor L of K (lower-triangular, row-major n×n).
+    chol: Vec<f64>,
+    /// α = K⁻¹(y - mean).
+    alpha: Vec<f64>,
+}
+
+impl Gp {
+    pub fn new(noise: f64) -> Self {
+        Gp { noise, feats: Vec::new(), y: Vec::new(), y_mean: 0.0, chol: Vec::new(), alpha: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Add an observation; call `fit` before predicting.
+    pub fn observe(&mut self, scheme: &NpasScheme, reward: f64) {
+        self.feats.push(wl_features(scheme, WL_ITERS));
+        self.y.push(reward);
+    }
+
+    /// Refit the posterior (Cholesky of the gram matrix).
+    pub fn fit(&mut self) {
+        let n = self.y.len();
+        if n == 0 {
+            return;
+        }
+        self.y_mean = self.y.iter().sum::<f64>() / n as f64;
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = wl_kernel_normalized(&self.feats[i], &self.feats[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += self.noise;
+        }
+        self.chol = cholesky(&k, n).expect("gram matrix not PD (noise too small?)");
+        let resid: Vec<f64> = self.y.iter().map(|v| v - self.y_mean).collect();
+        self.alpha = chol_solve(&self.chol, n, &resid);
+    }
+
+    /// Posterior (mean, variance) for a candidate scheme.
+    pub fn predict(&self, scheme: &NpasScheme) -> (f64, f64) {
+        let n = self.y.len();
+        if n == 0 {
+            return (0.0, 1.0);
+        }
+        let f = wl_features(scheme, WL_ITERS);
+        let kx: Vec<f64> =
+            self.feats.iter().map(|fi| wl_kernel_normalized(fi, &f)).collect();
+        let mean =
+            self.y_mean + kx.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>();
+        // var = k(x,x) - kxᵀ K⁻¹ kx, with k(x,x) = 1 (normalized kernel)
+        let v = forward_sub(&self.chol, n, &kx);
+        let var = (1.0 + self.noise - v.iter().map(|x| x * x).sum::<f64>()).max(1e-9);
+        (mean, var)
+    }
+}
+
+/// Dense Cholesky: K = L Lᵀ. Returns None if not positive-definite.
+fn cholesky(k: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = k[i * n + j];
+            for p in 0..j {
+                s -= l[i * n + p] * l[j * n + p];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L v = b.
+fn forward_sub(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut v = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[i * n + j] * v[j];
+        }
+        v[i] = s / l[i * n + i];
+    }
+    v
+}
+
+/// Solve (L Lᵀ) x = b.
+fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let v = forward_sub(l, n, b);
+    // back substitution with Lᵀ
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = v[i];
+        for j in i + 1..n {
+            s -= l[j * n + i] * x[j];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::PruneRate;
+
+    fn scheme(rates: &[f32]) -> NpasScheme {
+        let mut s = NpasScheme::dense(rates.len());
+        for (i, &r) in rates.iter().enumerate() {
+            s.choices[i].rate = PruneRate::new(r);
+        }
+        s
+    }
+
+    #[test]
+    fn cholesky_identity() {
+        let n = 3;
+        let k = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let l = cholesky(&k, n).unwrap();
+        assert!((l[0] - 1.0).abs() < 1e-12 && (l[4] - 1.0).abs() < 1e-12);
+        let x = chol_solve(&l, n, &[2.0, 3.0, 4.0]);
+        assert_eq!(x, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let k = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&k, 2).is_none());
+    }
+
+    #[test]
+    fn gp_interpolates_observations() {
+        let mut gp = Gp::new(1e-6);
+        let schemes = [scheme(&[2.0, 2.0]), scheme(&[10.0, 10.0]), scheme(&[5.0, 3.0])];
+        let ys = [0.8, 0.3, 0.6];
+        for (s, y) in schemes.iter().zip(ys) {
+            gp.observe(s, y);
+        }
+        gp.fit();
+        for (s, y) in schemes.iter().zip(ys) {
+            let (m, v) = gp.predict(s);
+            assert!((m - y).abs() < 0.02, "mean {m} vs {y}");
+            assert!(v < 0.01, "var {v} at observed point");
+        }
+    }
+
+    #[test]
+    fn gp_uncertainty_grows_away_from_data() {
+        let mut gp = Gp::new(1e-4);
+        gp.observe(&scheme(&[2.0, 2.0]), 0.8);
+        gp.fit();
+        let (_, v_near) = gp.predict(&scheme(&[2.0, 2.0]));
+        let (_, v_far) = gp.predict(&scheme(&[10.0, 7.0]));
+        assert!(v_far > v_near, "near {v_near} far {v_far}");
+    }
+
+    #[test]
+    fn gp_generalizes_monotone_signal() {
+        // reward decreases with rate; GP should rank a mid-rate scheme
+        // between the observed extremes
+        let mut gp = Gp::new(1e-3);
+        gp.observe(&scheme(&[2.0, 2.0, 2.0]), 0.9);
+        gp.observe(&scheme(&[2.0, 2.0, 10.0]), 0.7);
+        gp.observe(&scheme(&[10.0, 10.0, 10.0]), 0.3);
+        gp.fit();
+        let (m_low, _) = gp.predict(&scheme(&[2.0, 2.0, 3.0]));
+        let (m_high, _) = gp.predict(&scheme(&[10.0, 10.0, 7.0]));
+        assert!(m_low > m_high, "low {m_low} high {m_high}");
+    }
+
+    #[test]
+    fn empty_gp_prior() {
+        let gp = Gp::new(1e-3);
+        assert!(gp.is_empty());
+        let (m, v) = gp.predict(&scheme(&[2.0]));
+        assert_eq!((m, v), (0.0, 1.0));
+    }
+}

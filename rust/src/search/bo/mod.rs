@@ -1,0 +1,9 @@
+//! S10 — the Bayesian predictor (§5.2.4): WL graph kernel + Gaussian
+//! process + Expected Improvement batch selection.
+
+pub mod acquisition;
+pub mod gp;
+pub mod wl_kernel;
+
+pub use acquisition::{expected_improvement, select_batch};
+pub use gp::Gp;

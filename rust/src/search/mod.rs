@@ -1,0 +1,18 @@
+//! S9-S11 — the NPAS search: Q-learning agent, Bayesian predictor, the
+//! three-phase pipeline, and the candidate evaluators.
+
+pub mod bo;
+pub mod evaluator;
+pub mod npas;
+pub mod phase1;
+pub mod phase2;
+pub mod phase3;
+pub mod qlearning;
+pub mod replay;
+pub mod reward;
+pub mod space;
+
+pub use evaluator::{Evaluator, ProxyEvaluator, TrainedEvaluator};
+pub use npas::{NpasConfig, NpasReport};
+pub use reward::{EvalOutcome, RewardConfig};
+pub use space::{LayerChoice, NpasScheme};

@@ -1,0 +1,196 @@
+//! The end-to-end NPAS pipeline (Fig. 4): pre-trained starting point →
+//! Phase 1 op replacement → Phase 2 scheme search → Phase 3 pruning
+//! algorithm search → final model + compiled execution plan.
+
+use anyhow::Result;
+
+use crate::compiler::device::{ADRENO_640, KRYO_485};
+use crate::compiler::DeviceSpec;
+use crate::coordinator::{EventLog, Metrics};
+use crate::runtime::Runtime;
+use crate::train::{Branch, SgdConfig, Trainer};
+
+use super::evaluator::{
+    measure_scheme, scheme_footprint, Evaluator, TrainedEvalConfig, TrainedEvaluator,
+};
+use super::phase1;
+use super::phase2::{self, Phase2Config, Phase2Report};
+use super::phase3::{self, Phase3Config, Phase3Report};
+use super::qlearning::{QAgent, QConfig};
+use super::reward::RewardConfig;
+use super::space::NpasScheme;
+
+#[derive(Debug, Clone)]
+pub struct NpasConfig {
+    /// Supernet warm-up steps with blended branches (§5.2.3 weight init for
+    /// filter-type candidates).
+    pub warmup_steps: usize,
+    /// Phase 1 fine-tune steps after op replacement.
+    pub phase1_steps: usize,
+    pub phase2: Phase2Config,
+    pub phase3: Phase3Config,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub device: &'static DeviceSpec,
+    pub opt: SgdConfig,
+}
+
+impl NpasConfig {
+    /// A laptop-scale full run (minutes, not GPU-days).
+    pub fn small(target_ms: f64) -> Self {
+        let reward = RewardConfig::new(target_ms, 0.05, 5);
+        NpasConfig {
+            warmup_steps: 120,
+            phase1_steps: 20,
+            phase2: Phase2Config::small(reward),
+            phase3: Phase3Config::default(),
+            eval_batches: 4,
+            seed: 42,
+            device: &ADRENO_640,
+            opt: SgdConfig::default(),
+        }
+    }
+
+    /// Integration-test scale (seconds).
+    pub fn tiny(target_ms: f64) -> Self {
+        let mut cfg = Self::small(target_ms);
+        cfg.warmup_steps = 8;
+        cfg.phase1_steps = 2;
+        cfg.phase2.rounds = 2;
+        cfg.phase2.pool_size = 8;
+        cfg.phase2.bo_batch = 2;
+        cfg.phase3.trial_steps = 2;
+        cfg.phase3.final_steps = 4;
+        cfg.eval_batches = 1;
+        cfg
+    }
+}
+
+#[derive(Debug)]
+pub struct NpasReport {
+    pub phase1: phase1::Phase1Report,
+    pub phase2: Phase2Report,
+    pub phase3: Phase3Report,
+    pub scheme: NpasScheme,
+    /// Final fast-eval accuracy / latency on both devices.
+    pub final_accuracy: f32,
+    pub latency_cpu_ms: f64,
+    pub latency_gpu_ms: f64,
+    pub params: u64,
+    pub conv_macs: u64,
+    pub metrics_summary: String,
+}
+
+/// Run the full three-phase pipeline against the real artifact runtime.
+pub fn run(rt: &Runtime, cfg: &NpasConfig, log: &mut EventLog) -> Result<NpasReport> {
+    let mut metrics = Metrics::new();
+
+    // --- pre-trained starting point + §5.2.3 branch weight init ----------
+    let mut tr = Trainer::new(rt, cfg.seed, cfg.opt.clone());
+    {
+        let _t = metrics.time("warmup.time");
+        tr.set_blended_branches();
+        tr.train(cfg.warmup_steps / 2)?;
+        tr.set_uniform_branch(Branch::Conv3x3);
+        tr.train(cfg.warmup_steps - cfg.warmup_steps / 2)?;
+        metrics.incr("warmup.steps", cfg.warmup_steps as u64);
+    }
+    log.log_note("warmup done");
+
+    // --- Phase 1 -----------------------------------------------------------
+    let p1 = {
+        let _t = metrics.time("phase1.time");
+        phase1::run_on_supernet(&mut tr, cfg.phase1_steps, cfg.eval_batches)?
+    };
+    log.log_note(&format!(
+        "phase1: replaced {} ops, acc {:.3} -> {:.3}",
+        p1.replaced_ops, p1.acc_before, p1.acc_after
+    ));
+
+    // --- Phase 2 -----------------------------------------------------------
+    let pretrained = tr.params.clone();
+    let evaluator = TrainedEvaluator::new(
+        rt,
+        pretrained.clone(),
+        TrainedEvalConfig { device: cfg.device, opt: cfg.opt.clone(), ..Default::default() },
+    );
+    let mut agent =
+        QAgent::new(&vec![Branch::Conv3x3; tr.blocks()], QConfig::default(), cfg.seed);
+    let p2 = phase2::run(&mut agent, &evaluator, &cfg.phase2, &mut metrics, log);
+    log.log_note(&format!(
+        "phase2: best reward {:.3} (acc {:.3}, {:.2}ms) after {} evals",
+        p2.best_reward, p2.best_outcome.accuracy, p2.best_outcome.latency_ms, p2.evaluations
+    ));
+
+    // --- Phase 3 -----------------------------------------------------------
+    let scheme = p2.best_scheme.clone();
+    let p3 = {
+        let _t = metrics.time("phase3.time");
+        phase3::run(rt, &pretrained, &scheme, &cfg.phase3)?
+    };
+    log.log_note(&format!(
+        "phase3: winner {} final acc {:.3} sparsity {:.2}",
+        p3.winner.name(),
+        p3.final_accuracy,
+        p3.final_sparsity
+    ));
+
+    let (params, conv_macs) = scheme_footprint(&scheme);
+    let report = NpasReport {
+        final_accuracy: p3.final_accuracy,
+        latency_cpu_ms: measure_scheme(&scheme, &KRYO_485),
+        latency_gpu_ms: measure_scheme(&scheme, &ADRENO_640),
+        params,
+        conv_macs,
+        phase1: p1,
+        phase2: p2,
+        phase3: p3,
+        scheme,
+        metrics_summary: metrics.summary(),
+    };
+    log.flush().ok();
+    Ok(report)
+}
+
+/// Proxy-evaluator variant of the pipeline (no artifact runtime needed):
+/// used by the bench harness to regenerate Table 2 rows in seconds. Phases
+/// 1/3 are represented by their calibrated effects; Phase 2 runs for real.
+pub fn run_proxy(evaluator: &dyn Evaluator, cfg: &NpasConfig, log: &mut EventLog) -> (Phase2Report, NpasScheme) {
+    let mut metrics = Metrics::new();
+    let mut agent = QAgent::new(&vec![Branch::Conv3x3; 5], QConfig::default(), cfg.seed);
+    let p2 = phase2::run(&mut agent, evaluator, &cfg.phase2, &mut metrics, log);
+    let scheme = p2.best_scheme.clone();
+    (p2, scheme)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::ADRENO_640;
+    use crate::search::evaluator::ProxyEvaluator;
+
+    #[test]
+    fn proxy_pipeline_meets_target() {
+        let ev = ProxyEvaluator::new(&ADRENO_640);
+        let cfg = NpasConfig::small(7.0);
+        let mut log = EventLog::memory();
+        let (p2, scheme) = run_proxy(&ev, &cfg, &mut log);
+        assert!(p2.best_outcome.latency_ms <= 10.0, "{:.1}", p2.best_outcome.latency_ms);
+        assert_eq!(scheme.choices.len(), 5);
+        assert!(!log.is_empty());
+    }
+
+    #[test]
+    fn tighter_target_forces_lighter_models() {
+        let ev = ProxyEvaluator::new(&ADRENO_640);
+        let mut log = EventLog::memory();
+        let (loose, _) = run_proxy(&ev, &NpasConfig::small(12.0), &mut log);
+        let (tight, _) = run_proxy(&ev, &NpasConfig::small(4.0), &mut log);
+        assert!(
+            tight.best_outcome.latency_ms < loose.best_outcome.latency_ms + 1.0,
+            "tight {:.1} loose {:.1}",
+            tight.best_outcome.latency_ms,
+            loose.best_outcome.latency_ms
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Phase 1: replacement of mobile-unfriendly operations (§5.1).
+//!
+//! Two coordinated halves:
+//! * **graph pass** — rewrite sigmoid/swish activations to hard-sigmoid /
+//!   hard-swish in the deployment IR (what the compiler will codegen);
+//! * **supernet side** — flip the artifact's activation blend to
+//!   hard-swish and fine-tune briefly ("5 training epochs, only once for
+//!   the entire NPAS process", §6.1).
+
+use anyhow::Result;
+
+use crate::graph::{LayerKind, Network};
+use crate::train::Trainer;
+
+/// Rewrite mobile-unfriendly activations; returns (rewritten, #replaced).
+pub fn replace_unfriendly_ops(net: &Network) -> (Network, usize) {
+    let mut out = net.clone();
+    let mut replaced = 0;
+    for l in &mut out.layers {
+        if let LayerKind::Act(a) = l.kind {
+            if !a.mobile_friendly() {
+                l.kind = LayerKind::Act(a.friendly_equivalent());
+                replaced += 1;
+            }
+        }
+    }
+    (out, replaced)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Phase1Report {
+    pub replaced_ops: usize,
+    pub acc_before: f32,
+    pub acc_after: f32,
+}
+
+/// Supernet half: swap swish→hard-swish and fine-tune `steps`.
+pub fn run_on_supernet(tr: &mut Trainer, steps: usize, eval_batches: usize) -> Result<Phase1Report> {
+    let acc_before = tr.evaluate(eval_batches)?;
+    tr.set_swish(false);
+    tr.train(steps)?;
+    let acc_after = tr.evaluate(eval_batches)?;
+    Ok(Phase1Report {
+        // every act site in the supernet blends one swish candidate
+        replaced_ops: tr.blocks() + 1,
+        acc_before,
+        acc_after,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::graph::ActKind;
+
+    #[test]
+    fn mobilenet_v3_gets_rewritten() {
+        let net = zoo::mobilenet_v3();
+        let before = net.unfriendly_ops();
+        assert!(before > 0);
+        let (after, replaced) = replace_unfriendly_ops(&net);
+        assert_eq!(replaced, before);
+        assert_eq!(after.unfriendly_ops(), 0);
+        // shape/cost invariant: replacement touches only act kinds
+        assert_eq!(after.total_macs(), net.total_macs());
+        assert_eq!(after.layers.len(), net.layers.len());
+    }
+
+    #[test]
+    fn friendly_net_untouched() {
+        let net = zoo::mobilenet_v1(); // relu-only
+        let (after, replaced) = replace_unfriendly_ops(&net);
+        assert_eq!(replaced, 0);
+        assert_eq!(after.unfriendly_ops(), 0);
+    }
+
+    #[test]
+    fn replacement_speeds_up_nothing_in_ir_costs() {
+        // the latency benefit shows up through the compiler's act fusion,
+        // not through MACs; the IR invariant is what we pin here.
+        let net = zoo::efficientnet_b0();
+        let (after, _) = replace_unfriendly_ops(&net);
+        for (a, b) in net.layers.iter().zip(&after.layers) {
+            match (&a.kind, &b.kind) {
+                (LayerKind::Act(x), LayerKind::Act(y)) => {
+                    assert_eq!(y.mobile_friendly(), true, "{x:?} -> {y:?}");
+                }
+                (x, y) => assert_eq!(x, y),
+            }
+        }
+        let _ = ActKind::Swish;
+    }
+}

@@ -1,0 +1,168 @@
+//! Phase 2: the NPAS scheme search (Algorithm 1).
+//!
+//! Loop: the Q-agent generates a pool of candidate schemes; the Bayesian
+//! predictor (WL-kernel GP + EI) selects the B most promising; only those
+//! are evaluated (fast accuracy + on-device latency); Q-values and the GP
+//! update from the observed rewards.
+
+use crate::coordinator::{EventLog, Metrics};
+
+use super::bo::acquisition::select_batch;
+use super::bo::gp::Gp;
+use super::evaluator::Evaluator;
+use super::qlearning::QAgent;
+use super::reward::{EvalOutcome, RewardConfig};
+use super::space::NpasScheme;
+
+#[derive(Debug, Clone)]
+pub struct Phase2Config {
+    pub rounds: usize,
+    pub pool_size: usize,
+    /// BO batch size B (evaluations per round).
+    pub bo_batch: usize,
+    /// Disable the Bayesian predictor (ablation): evaluate the first B of
+    /// the pool instead.
+    pub use_bo: bool,
+    pub gp_noise: f64,
+    pub reward: RewardConfig,
+}
+
+impl Phase2Config {
+    pub fn small(reward: RewardConfig) -> Self {
+        Phase2Config { rounds: 12, pool_size: 32, bo_batch: 6, use_bo: true, gp_noise: 1e-3, reward }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Phase2Report {
+    pub best_scheme: NpasScheme,
+    pub best_outcome: EvalOutcome,
+    pub best_reward: f64,
+    pub evaluations: usize,
+    pub pool_generated: usize,
+    /// (round, accuracy, latency_ms, reward) per evaluation, in order.
+    pub history: Vec<(usize, f32, f64, f64)>,
+}
+
+/// Run Algorithm 1.
+pub fn run(
+    agent: &mut QAgent,
+    evaluator: &dyn Evaluator,
+    cfg: &Phase2Config,
+    metrics: &Metrics,
+    log: &mut EventLog,
+) -> Phase2Report {
+    let mut gp = Gp::new(cfg.gp_noise);
+    let mut best: Option<(NpasScheme, EvalOutcome, f64)> = None;
+    let mut history = Vec::new();
+    let mut pool_generated = 0;
+
+    for round in 0..cfg.rounds {
+        let _t = metrics.time("phase2.time");
+        // S_c: candidate pool from ε-greedy rollouts
+        let pool = agent.generate_pool(cfg.pool_size);
+        pool_generated += pool.len();
+        let schemes: Vec<NpasScheme> = pool.iter().map(|(s, _)| s.clone()).collect();
+
+        // BO selection: argmax_α B schemes (or pool head when ablated)
+        let best_r = best.as_ref().map(|(_, _, r)| *r).unwrap_or(0.0);
+        let picked: Vec<usize> = if cfg.use_bo {
+            select_batch(&gp, &schemes, best_r, cfg.bo_batch)
+        } else {
+            (0..cfg.bo_batch.min(schemes.len())).collect()
+        };
+
+        // evaluate the selected schemes (parallel where the evaluator can)
+        let to_eval: Vec<NpasScheme> = picked.iter().map(|&i| schemes[i].clone()).collect();
+        let outcomes = evaluator.evaluate_batch(&to_eval);
+        metrics.incr("phase2.evaluations", outcomes.len() as u64);
+
+        for (&i, outcome) in picked.iter().zip(&outcomes) {
+            let reward = cfg.reward.final_reward(*outcome);
+            let (scheme, trace) = &pool[i];
+            agent.learn(trace.clone(), reward);
+            gp.observe(scheme, reward);
+            log.log_eval(round, scheme, *outcome, reward);
+            history.push((round, outcome.accuracy, outcome.latency_ms, reward));
+            if best.as_ref().map(|(_, _, r)| reward > *r).unwrap_or(true) {
+                best = Some((scheme.clone(), *outcome, reward));
+            }
+        }
+        gp.fit();
+        agent.decay_epsilon();
+    }
+
+    let (best_scheme, best_outcome, best_reward) =
+        best.expect("phase 2 ran zero evaluations");
+    Phase2Report {
+        best_scheme,
+        best_outcome,
+        best_reward,
+        evaluations: history.len(),
+        pool_generated,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::ADRENO_640;
+    use crate::search::evaluator::ProxyEvaluator;
+    use crate::search::qlearning::QConfig;
+    use crate::train::Branch;
+
+    fn run_small(use_bo: bool, seed: u64) -> Phase2Report {
+        let mut agent = QAgent::new(&[Branch::Conv3x3; 5], QConfig::default(), seed);
+        let ev = ProxyEvaluator::new(&ADRENO_640);
+        let reward = RewardConfig::new(7.0, 0.05, 5);
+        let mut cfg = Phase2Config::small(reward);
+        cfg.rounds = 4;
+        cfg.use_bo = use_bo;
+        let mut metrics = Metrics::new();
+        let mut log = EventLog::memory();
+        run(&mut agent, &ev, &cfg, &mut metrics, &mut log)
+    }
+
+    #[test]
+    fn search_finds_target_meeting_scheme() {
+        let rep = run_small(true, 42);
+        assert_eq!(rep.evaluations, 24); // rounds(4) x bo_batch(6)
+        // with a 7ms GPU target, the best scheme must prune/lighten enough
+        assert!(
+            rep.best_outcome.latency_ms < 10.0,
+            "best latency {:.1}ms",
+            rep.best_outcome.latency_ms
+        );
+        assert!(rep.best_outcome.accuracy > 0.5);
+        assert!(rep.best_reward > 0.0);
+    }
+
+    #[test]
+    fn bo_selection_beats_unfiltered_on_average() {
+        // BO should reach at least as good a best reward with the same
+        // evaluation budget (averaged over seeds to damp noise)
+        let seeds = [1u64, 7, 23, 99];
+        let with: f64 = seeds.iter().map(|&s| run_small(true, s).best_reward).sum();
+        let without: f64 = seeds.iter().map(|&s| run_small(false, s).best_reward).sum();
+        assert!(
+            with >= without - 0.15,
+            "BO {with:.3} vs none {without:.3} (sum over {} seeds)",
+            seeds.len()
+        );
+    }
+
+    #[test]
+    fn history_and_log_consistent() {
+        let mut agent = QAgent::new(&[Branch::Conv3x3; 5], QConfig::default(), 3);
+        let ev = ProxyEvaluator::new(&ADRENO_640);
+        let mut cfg = Phase2Config::small(RewardConfig::new(7.0, 0.05, 5));
+        cfg.rounds = 2;
+        let mut metrics = Metrics::new();
+        let mut log = EventLog::memory();
+        let rep = run(&mut agent, &ev, &cfg, &mut metrics, &mut log);
+        assert_eq!(rep.history.len(), log.len());
+        assert_eq!(metrics.count("phase2.evaluations"), rep.history.len() as u64);
+        assert!(rep.pool_generated >= rep.evaluations);
+    }
+}

@@ -1,0 +1,232 @@
+//! Phase 3: pruning-algorithm search (§5.1).
+//!
+//! Phase 2 fixed the per-layer schemes and rates; what remains is *how* to
+//! reach that sparsity with the least accuracy damage. Candidates (§6.1):
+//! magnitude one-shot, magnitude iterative, ADMM, group-Lasso proximal, and
+//! geometric-median (filter layers only). Each candidate runs a few epochs;
+//! the winner continues best-effort with knowledge distillation.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::pruning::group_lasso::prox_group_lasso;
+use crate::pruning::{geometric_median, AdmmState, PruneRate, PruneScheme};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::train::{Branch, SgdConfig, Trainer};
+
+use super::evaluator::TrainedEvaluator;
+use super::space::NpasScheme;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PruneAlgo {
+    MagnitudeOneShot,
+    MagnitudeIterative,
+    Admm,
+    GroupLasso,
+    /// He et al. FPGM — applicable only when the scheme uses filter pruning;
+    /// other layers fall back to magnitude.
+    GeometricMedian,
+}
+
+impl PruneAlgo {
+    pub const ALL: [PruneAlgo; 5] = [
+        PruneAlgo::MagnitudeOneShot,
+        PruneAlgo::MagnitudeIterative,
+        PruneAlgo::Admm,
+        PruneAlgo::GroupLasso,
+        PruneAlgo::GeometricMedian,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PruneAlgo::MagnitudeOneShot => "magnitude-oneshot",
+            PruneAlgo::MagnitudeIterative => "magnitude-iterative",
+            PruneAlgo::Admm => "admm",
+            PruneAlgo::GroupLasso => "group-lasso",
+            PruneAlgo::GeometricMedian => "geometric-median",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Phase3Config {
+    /// Steps per candidate trial ("a few epochs", §5.1).
+    pub trial_steps: usize,
+    /// Steps for the winning algorithm's best-effort run (§6.1: 100 epochs
+    /// pruning + 100 epochs fine-tune, scaled down).
+    pub final_steps: usize,
+    pub eval_batches: usize,
+    pub admm_rho: f32,
+    pub admm_rounds: usize,
+    pub group_lasso_lambda: f32,
+    pub kd_weight: f32,
+    pub opt: SgdConfig,
+}
+
+impl Default for Phase3Config {
+    fn default() -> Self {
+        Phase3Config {
+            trial_steps: 16,
+            final_steps: 40,
+            eval_batches: 4,
+            admm_rho: 5e-3,
+            admm_rounds: 4,
+            group_lasso_lambda: 0.02,
+            kd_weight: 0.5,
+            opt: SgdConfig::default(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Phase3Report {
+    /// (algorithm, trial accuracy), in trial order.
+    pub trials: Vec<(PruneAlgo, f32)>,
+    pub winner: PruneAlgo,
+    pub final_accuracy: f32,
+    pub final_sparsity: f32,
+}
+
+fn fresh_trainer<'rt>(
+    rt: &'rt Runtime,
+    pretrained: &BTreeMap<String, Tensor>,
+    scheme: &NpasScheme,
+    cfg: &Phase3Config,
+) -> Trainer<'rt> {
+    let mut tr = Trainer::new(rt, 0, cfg.opt.clone());
+    tr.params = pretrained.clone();
+    tr.set_swish(false);
+    let branches: Vec<Branch> = scheme.choices.iter().map(|c| c.filter).collect();
+    tr.set_branches(&branches);
+    tr
+}
+
+/// Run one pruning algorithm to the scheme's target sparsity; returns the
+/// trainer at the pruned+retrained state.
+pub fn run_algorithm<'rt>(
+    algo: PruneAlgo,
+    rt: &'rt Runtime,
+    pretrained: &BTreeMap<String, Tensor>,
+    scheme: &NpasScheme,
+    plan: &BTreeMap<String, (PruneScheme, PruneRate)>,
+    steps: usize,
+    cfg: &Phase3Config,
+) -> Result<Trainer<'rt>> {
+    let mut tr = fresh_trainer(rt, pretrained, scheme, cfg);
+    match algo {
+        PruneAlgo::MagnitudeOneShot => {
+            tr.one_shot_prune(plan);
+            tr.train(steps)?;
+        }
+        PruneAlgo::MagnitudeIterative => {
+            // 3-stage rate ramp: r^(1/3), r^(2/3), r
+            let stages = 3;
+            for s in 1..=stages {
+                let staged: BTreeMap<String, (PruneScheme, PruneRate)> = plan
+                    .iter()
+                    .map(|(k, (sch, r))| {
+                        let rr = r.0.powf(s as f32 / stages as f32).max(1.0);
+                        (k.clone(), (*sch, PruneRate::new(rr)))
+                    })
+                    .collect();
+                tr.one_shot_prune(&staged);
+                tr.train(steps / stages)?;
+            }
+        }
+        PruneAlgo::Admm => {
+            tr.admm = Some(AdmmState::new(&tr.params, plan.clone(), cfg.admm_rho));
+            let per_round = (steps / cfg.admm_rounds).max(1);
+            for _ in 0..cfg.admm_rounds {
+                tr.train(per_round)?;
+                let params = tr.params.clone();
+                tr.admm.as_mut().unwrap().dual_update(&params);
+            }
+            // final hard projection + masks
+            let admm = tr.admm.take().unwrap();
+            let masks = admm.finalize(&mut tr.params);
+            for (name, mask) in masks {
+                tr.masks.insert(name, mask);
+            }
+        }
+        PruneAlgo::GroupLasso => {
+            // proximal gradient descent toward group sparsity, then exact
+            // projection to the target rate
+            for _ in 0..steps {
+                tr.step()?;
+                for (name, (sch, _)) in plan {
+                    prox_group_lasso(tr.params.get_mut(name).unwrap(), *sch, cfg.group_lasso_lambda);
+                }
+            }
+            tr.one_shot_prune(plan);
+        }
+        PruneAlgo::GeometricMedian => {
+            // GM ranking for filter-scheme tensors, magnitude elsewhere
+            for (name, (sch, rate)) in plan {
+                let mask = if *sch == PruneScheme::Filter {
+                    geometric_median::gm_filter_mask(&tr.params[name], *rate)
+                } else {
+                    crate::pruning::generate_mask(&tr.params[name], *sch, *rate)
+                };
+                tr.params.get_mut(name).unwrap().mul_assign(&mask);
+                tr.masks.insert(name.clone(), mask);
+            }
+            tr.train(steps)?;
+        }
+    }
+    Ok(tr)
+}
+
+/// Full Phase 3: trial every candidate algorithm, pick the best, run it
+/// best-effort with knowledge distillation from the dense pretrained model.
+pub fn run(
+    rt: &Runtime,
+    pretrained: &BTreeMap<String, Tensor>,
+    scheme: &NpasScheme,
+    cfg: &Phase3Config,
+) -> Result<Phase3Report> {
+    let helper = TrainedEvaluator::new(rt, pretrained.clone(), Default::default());
+    let plan = helper.prune_plan(scheme);
+
+    let mut trials = Vec::new();
+    let mut best: Option<(PruneAlgo, f32)> = None;
+    for algo in PruneAlgo::ALL {
+        let tr = run_algorithm(algo, rt, pretrained, scheme, &plan, cfg.trial_steps, cfg)?;
+        let acc = tr.evaluate(cfg.eval_batches)?;
+        trials.push((algo, acc));
+        if best.map(|(_, b)| acc > b).unwrap_or(true) {
+            best = Some((algo, acc));
+        }
+    }
+    let (winner, _) = best.unwrap();
+
+    // best-effort run with KD teacher = dense pretrained supernet
+    let mut tr = fresh_trainer(rt, pretrained, scheme, cfg);
+    tr.freeze_teacher(cfg.kd_weight);
+    let mut final_tr =
+        run_algorithm(winner, rt, &tr.params.clone(), scheme, &plan, cfg.final_steps, cfg)?;
+    final_tr.teacher = tr.teacher.take();
+    final_tr.kd_weight = cfg.kd_weight;
+    final_tr.train(cfg.final_steps / 2)?;
+    let final_accuracy = final_tr.evaluate(cfg.eval_batches)?;
+    let final_sparsity = final_tr.sparsity();
+
+    Ok(Phase3Report { trials, winner, final_accuracy, final_sparsity })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_unique() {
+        let names: Vec<&str> = PruneAlgo::ALL.iter().map(|a| a.name()).collect();
+        for (i, n) in names.iter().enumerate() {
+            assert!(!names[i + 1..].contains(n));
+        }
+    }
+
+    // Execution tests require artifacts; they live in
+    // rust/tests/integration_search.rs.
+}

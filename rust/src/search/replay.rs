@@ -1,0 +1,83 @@
+//! Experience replay ring buffer (§5.2.2, paper ref. 40).
+
+use crate::tensor::XorShift64Star;
+
+use super::qlearning::Trace;
+
+pub struct ReplayBuffer {
+    capacity: usize,
+    items: Vec<(Trace, f64)>,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        ReplayBuffer { capacity: capacity.max(1), items: Vec::new(), next: 0 }
+    }
+
+    pub fn push(&mut self, trace: Trace, reward: f64) {
+        if self.items.len() < self.capacity {
+            self.items.push((trace, reward));
+        } else {
+            self.items[self.next] = (trace, reward);
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Sample up to `n` random experience indices.
+    pub fn sample_indices(&self, n: usize, rng: &mut XorShift64Star) -> Vec<usize> {
+        if self.items.is_empty() {
+            return Vec::new();
+        }
+        (0..n.min(self.items.len()))
+            .map(|_| rng.next_range(self.items.len() as u64) as usize)
+            .collect()
+    }
+
+    pub fn get(&self, idx: usize) -> (Trace, f64) {
+        let (t, r) = &self.items[idx];
+        (t.clone(), *r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(a: usize) -> Trace {
+        Trace { actions: vec![a], head_action: 0 }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut b = ReplayBuffer::new(3);
+        for i in 0..5 {
+            b.push(tr(i), i as f64);
+        }
+        assert_eq!(b.len(), 3);
+        // items 3,4 present; 0,1 evicted
+        let rewards: Vec<f64> = (0..3).map(|i| b.get(i).1).collect();
+        assert!(rewards.contains(&3.0) && rewards.contains(&4.0));
+        assert!(!rewards.contains(&0.0));
+    }
+
+    #[test]
+    fn sampling_bounds() {
+        let mut b = ReplayBuffer::new(10);
+        let mut rng = XorShift64Star::new(5);
+        assert!(b.sample_indices(4, &mut rng).is_empty());
+        b.push(tr(0), 0.0);
+        b.push(tr(1), 1.0);
+        let s = b.sample_indices(8, &mut rng);
+        assert_eq!(s.len(), 2);
+        assert!(s.iter().all(|&i| i < 2));
+    }
+}

@@ -1,0 +1,77 @@
+//! Reward shaping (paper Eq. 1):
+//!   r_T = V − α·max(0, h − H),   r_t = r_T / T.
+//!
+//! V = validation accuracy, h = measured latency, H = the latency target.
+//! The shaped intermediate reward r_T/T (Ng et al. reward shaping) avoids
+//! the early-stop pathology of r_t = 0 (§5.2.2).
+
+#[derive(Debug, Clone, Copy)]
+pub struct RewardConfig {
+    /// Latency target H in ms.
+    pub target_ms: f64,
+    /// Penalty slope α (per ms of violation).
+    pub alpha: f64,
+    /// Trajectory length T (number of searchable layers).
+    pub horizon: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalOutcome {
+    pub accuracy: f32,
+    pub latency_ms: f64,
+}
+
+impl RewardConfig {
+    pub fn new(target_ms: f64, alpha: f64, horizon: usize) -> Self {
+        RewardConfig { target_ms, alpha, horizon }
+    }
+
+    /// Final reward r_T.
+    pub fn final_reward(&self, o: EvalOutcome) -> f64 {
+        o.accuracy as f64 - self.alpha * (o.latency_ms - self.target_ms).max(0.0)
+    }
+
+    /// Shaped per-step reward r_t = r_T / T.
+    pub fn step_reward(&self, o: EvalOutcome) -> f64 {
+        self.final_reward(o) / self.horizon.max(1) as f64
+    }
+
+    pub fn meets_target(&self, o: EvalOutcome) -> bool {
+        o.latency_ms <= self.target_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CFG: RewardConfig = RewardConfig { target_ms: 7.0, alpha: 0.05, horizon: 5 };
+
+    #[test]
+    fn no_penalty_under_target() {
+        let o = EvalOutcome { accuracy: 0.8, latency_ms: 6.0 };
+        assert!((CFG.final_reward(o) - 0.8).abs() < 1e-6);
+        assert!(CFG.meets_target(o));
+    }
+
+    #[test]
+    fn linear_penalty_over_target() {
+        let o = EvalOutcome { accuracy: 0.8, latency_ms: 9.0 };
+        assert!((CFG.final_reward(o) - (0.8 - 0.05 * 2.0)).abs() < 1e-6);
+        assert!(!CFG.meets_target(o));
+    }
+
+    #[test]
+    fn accurate_but_slow_can_lose_to_fast() {
+        let slow = EvalOutcome { accuracy: 0.85, latency_ms: 20.0 };
+        let fast = EvalOutcome { accuracy: 0.75, latency_ms: 6.5 };
+        assert!(CFG.final_reward(fast) > CFG.final_reward(slow));
+    }
+
+    #[test]
+    fn shaped_reward_sums_to_final() {
+        let o = EvalOutcome { accuracy: 0.7, latency_ms: 8.0 };
+        let total: f64 = (0..CFG.horizon).map(|_| CFG.step_reward(o)).sum();
+        assert!((total - CFG.final_reward(o)).abs() < 1e-9);
+    }
+}

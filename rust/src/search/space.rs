@@ -1,0 +1,186 @@
+//! The NPAS search space (paper Table 1) and its per-layer action
+//! enumeration.
+
+use crate::pruning::{PruneRate, PruneScheme};
+use crate::train::Branch;
+
+/// One layer's searched configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerChoice {
+    pub filter: Branch,
+    pub scheme: PruneScheme,
+    pub rate: PruneRate,
+}
+
+impl LayerChoice {
+    /// Canonical dense choice (what Phase 1 starts from: 3×3, no pruning).
+    pub fn dense3x3() -> Self {
+        LayerChoice {
+            filter: Branch::Conv3x3,
+            scheme: PruneScheme::block_punched_default(),
+            rate: PruneRate::new(1.0),
+        }
+    }
+
+    /// Compact label for WL-kernel hashing and logs.
+    pub fn label(&self) -> String {
+        format!("{:?}|{}|{:.1}", self.filter, self.scheme.short_name(), self.rate.0)
+    }
+}
+
+/// Kernel size of a branch's largest conv (for the unidirectional rule).
+fn kernel_extent(b: Branch) -> usize {
+    match b {
+        Branch::Conv1x1 => 1,
+        Branch::Conv3x3 | Branch::DwPw | Branch::PwDwPw => 3,
+        Branch::Skip => 0,
+    }
+}
+
+/// Pruning schemes compatible with a branch (pattern needs a 3×3 dense
+/// conv; DW cascades get block-punched/filter on their pointwise convs).
+pub fn schemes_for(b: Branch) -> Vec<PruneScheme> {
+    match b {
+        Branch::Conv3x3 => vec![
+            PruneScheme::Filter,
+            PruneScheme::Pattern,
+            PruneScheme::block_punched_default(),
+        ],
+        Branch::Skip => vec![],
+        _ => vec![PruneScheme::Filter, PruneScheme::block_punched_default()],
+    }
+}
+
+/// Full per-layer action space under the §5.2.3 unidirectional rule: the
+/// replacement branch must not increase kernel extent over `orig`.
+pub fn layer_actions(orig: Branch) -> Vec<LayerChoice> {
+    let mut out = Vec::new();
+    for &b in &Branch::ALL {
+        if kernel_extent(b) > kernel_extent(orig) {
+            continue;
+        }
+        if b == Branch::Skip {
+            out.push(LayerChoice {
+                filter: b,
+                scheme: PruneScheme::Filter,
+                rate: PruneRate::new(1.0),
+            });
+            continue;
+        }
+        for scheme in schemes_for(b) {
+            for &rate in &PruneRate::SPACE {
+                if rate == 1.0 && scheme != PruneScheme::Filter {
+                    continue; // dense is dense: canonicalize to one action
+                }
+                out.push(LayerChoice { filter: b, scheme, rate: PruneRate::new(rate) });
+            }
+        }
+    }
+    out
+}
+
+/// A complete NPAS scheme: one choice per searchable block plus the FC-head
+/// block-based pruning rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpasScheme {
+    pub choices: Vec<LayerChoice>,
+    pub head_rate: PruneRate,
+}
+
+impl NpasScheme {
+    pub fn dense(blocks: usize) -> Self {
+        NpasScheme {
+            choices: vec![LayerChoice::dense3x3(); blocks],
+            head_rate: PruneRate::new(1.0),
+        }
+    }
+
+    /// Stable hash for dedup / reproducible pseudo-noise.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a
+        let mut eat = |b: u64| {
+            h ^= b;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for c in &self.choices {
+            eat(c.filter as u64);
+            eat(match c.scheme {
+                PruneScheme::Unstructured => 1,
+                PruneScheme::Filter => 2,
+                PruneScheme::Pattern => 3,
+                PruneScheme::BlockPunched { bf, bc } => 4 + ((bf as u64) << 8) + ((bc as u64) << 16),
+                PruneScheme::BlockBased { brows, bcols } => {
+                    5 + ((brows as u64) << 8) + ((bcols as u64) << 16)
+                }
+            });
+            eat((c.rate.0 * 10.0) as u64);
+        }
+        eat((self.head_rate.0 * 10.0) as u64);
+        h
+    }
+
+    /// Mean pruning rate across blocks (for reporting).
+    pub fn mean_rate(&self) -> f32 {
+        let s: f32 = self.choices.iter().map(|c| c.rate.0).sum();
+        s / self.choices.len().max(1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unidirectional_rule() {
+        // from 1x1 original, no 3x3-family branches allowed
+        let from_1x1 = layer_actions(Branch::Conv1x1);
+        assert!(from_1x1
+            .iter()
+            .all(|c| matches!(c.filter, Branch::Conv1x1 | Branch::Skip)));
+        // from 3x3 original, everything allowed
+        let from_3x3 = layer_actions(Branch::Conv3x3);
+        for b in Branch::ALL {
+            assert!(from_3x3.iter().any(|c| c.filter == b), "{b:?} missing");
+        }
+    }
+
+    #[test]
+    fn pattern_only_on_conv3x3() {
+        for c in layer_actions(Branch::Conv3x3) {
+            if c.scheme == PruneScheme::Pattern {
+                assert_eq!(c.filter, Branch::Conv3x3);
+            }
+        }
+        assert!(schemes_for(Branch::DwPw).iter().all(|s| *s != PruneScheme::Pattern));
+    }
+
+    #[test]
+    fn action_count_larger_than_plain_nas() {
+        // plain NAS would have 5 actions (filter types); NPAS has far more
+        let acts = layer_actions(Branch::Conv3x3);
+        assert!(acts.len() > 30, "{}", acts.len());
+        // no duplicate actions
+        for (i, a) in acts.iter().enumerate() {
+            for b in &acts[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_schemes() {
+        let a = NpasScheme::dense(5);
+        let mut b = a.clone();
+        b.choices[2].rate = PruneRate::new(5.0);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), NpasScheme::dense(5).fingerprint());
+    }
+
+    #[test]
+    fn skip_has_single_action() {
+        let acts = layer_actions(Branch::Conv3x3);
+        let skips: Vec<_> = acts.iter().filter(|c| c.filter == Branch::Skip).collect();
+        assert_eq!(skips.len(), 1);
+        assert!(skips[0].rate.is_dense());
+    }
+}

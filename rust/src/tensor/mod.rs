@@ -1,0 +1,166 @@
+//! S1 — minimal host tensor library.
+//!
+//! The coordinator moves weights/masks/batches between the pruning engine,
+//! the latency simulator and the PJRT runtime; all of that traffic is
+//! contiguous row-major `f32`, so this module implements exactly that and
+//! nothing more (no external ndarray dependency on the hot path).
+
+pub mod ops;
+pub mod rng;
+pub mod shape;
+
+pub use rng::XorShift64Star;
+pub use shape::Shape;
+
+/// Contiguous row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: impl Into<Shape>, data: Vec<f32>) -> Self {
+        let shape = shape.into();
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape.dims(),
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        let n = shape.numel();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: impl Into<Shape>) -> Self {
+        Self::full(shape, 1.0)
+    }
+
+    pub fn full(shape: impl Into<Shape>, v: f32) -> Self {
+        let shape = shape.into();
+        let n = shape.numel();
+        Self { shape, data: vec![v; n] }
+    }
+
+    /// He-normal init (matches `model.init_params` semantics: fan-in of all
+    /// but the last dim).
+    pub fn he_normal(shape: impl Into<Shape>, rng: &mut XorShift64Star) -> Self {
+        let shape = shape.into();
+        let dims = shape.dims();
+        let fan_in: usize = dims[..dims.len().saturating_sub(1)].iter().product::<usize>().max(1);
+        let std = (2.0 / fan_in as f32).sqrt();
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.next_normal() * std).collect();
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction (shape must have exactly one element).
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "scalar() on tensor of {} elements", self.numel());
+        self.data[0]
+    }
+
+    /// Reshape (same numel), consuming self.
+    pub fn reshape(mut self, shape: impl Into<Shape>) -> Self {
+        let shape = shape.into();
+        assert_eq!(shape.numel(), self.numel(), "reshape numel mismatch");
+        self.shape = shape;
+        self
+    }
+
+    /// Row-major linear index for a multi-index.
+    pub fn index(&self, idx: &[usize]) -> usize {
+        self.shape.linear_index(idx)
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.index(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let i = self.index(idx);
+        self.data[i] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|v| v as f32).collect());
+        assert_eq!(t.get(&[0, 0]), 0.0);
+        assert_eq!(t.get(&[1, 2]), 5.0);
+        assert_eq!(t.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn zeros_ones_full() {
+        assert!(Tensor::zeros(vec![4]).data().iter().all(|&v| v == 0.0));
+        assert!(Tensor::ones(vec![4]).data().iter().all(|&v| v == 1.0));
+        assert!(Tensor::full(vec![4], 2.5).data().iter().all(|&v| v == 2.5));
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::new(vec![2, 6], vec![1.0; 12]).reshape(vec![3, 4]);
+        assert_eq!(t.dims(), &[3, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_numel_mismatch_panics() {
+        let _ = Tensor::zeros(vec![2, 2]).reshape(vec![5]);
+    }
+
+    #[test]
+    fn he_normal_statistics() {
+        let mut rng = XorShift64Star::new(1);
+        let t = Tensor::he_normal(vec![64, 64], &mut rng);
+        let mean: f32 = t.data().iter().sum::<f32>() / t.numel() as f32;
+        let var: f32 =
+            t.data().iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / t.numel() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        let expect = 2.0 / 64.0;
+        assert!((var - expect).abs() < expect * 0.3, "var {var} vs {expect}");
+    }
+
+    #[test]
+    fn set_get() {
+        let mut t = Tensor::zeros(vec![3, 3]);
+        t.set(&[2, 1], 7.0);
+        assert_eq!(t.get(&[2, 1]), 7.0);
+        assert_eq!(t.data()[7], 7.0);
+    }
+}

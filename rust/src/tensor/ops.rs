@@ -1,0 +1,145 @@
+//! Elementwise / reduction ops used by the optimizer, the pruning
+//! algorithms (ADMM projections, group-Lasso proximal steps) and metrics.
+
+use super::Tensor;
+
+impl Tensor {
+    /// self += other * scale (axpy).
+    pub fn axpy(&mut self, other: &Tensor, scale: f32) {
+        assert_eq!(self.dims(), other.dims(), "axpy shape mismatch");
+        for (a, b) in self.data_mut().iter_mut().zip(other.data()) {
+            *a += b * scale;
+        }
+    }
+
+    /// self *= scale.
+    pub fn scale(&mut self, scale: f32) {
+        for a in self.data_mut() {
+            *a *= scale;
+        }
+    }
+
+    /// Hadamard product in place: self *= other.
+    pub fn mul_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.dims(), other.dims(), "mul shape mismatch");
+        for (a, b) in self.data_mut().iter_mut().zip(other.data()) {
+            *a *= b;
+        }
+    }
+
+    /// Elementwise difference as a new tensor.
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.dims(), other.dims(), "sub shape mismatch");
+        let data = self.data().iter().zip(other.data()).map(|(a, b)| a - b).collect();
+        Tensor::new(self.shape().clone().dims().to_vec(), data)
+    }
+
+    /// Elementwise sum as a new tensor.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.dims(), other.dims(), "add shape mismatch");
+        let data = self.data().iter().zip(other.data()).map(|(a, b)| a + b).collect();
+        Tensor::new(self.shape().clone().dims().to_vec(), data)
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data().iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn l1_norm(&self) -> f32 {
+        self.data().iter().map(|v| v.abs()).sum::<f32>()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data().iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data().iter().sum()
+    }
+
+    /// Fraction of exactly-zero entries (sparsity of a mask or pruned weight).
+    pub fn sparsity(&self) -> f32 {
+        if self.numel() == 0 {
+            return 0.0;
+        }
+        let zeros = self.data().iter().filter(|&&v| v == 0.0).count();
+        zeros as f32 / self.numel() as f32
+    }
+
+    /// Count of non-zero entries.
+    pub fn nnz(&self) -> usize {
+        self.data().iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// k-th largest absolute value (k >= 1); 0.0 for empty/overrun.
+    pub fn kth_largest_abs(&self, k: usize) -> f32 {
+        if k == 0 || k > self.numel() {
+            return 0.0;
+        }
+        let mut mags: Vec<f32> = self.data().iter().map(|v| v.abs()).collect();
+        // selection: partial sort via select_nth_unstable (descending position)
+        let idx = k - 1;
+        mags.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+        mags[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        let n = v.len();
+        Tensor::new(vec![n], v)
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = t(vec![1.0, 2.0]);
+        a.axpy(&t(vec![10.0, 20.0]), 0.5);
+        assert_eq!(a.data(), &[6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 24.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = t(vec![3.0, -4.0]);
+        assert_eq!(a.l2_norm(), 5.0);
+        assert_eq!(a.l1_norm(), 7.0);
+        assert_eq!(a.abs_max(), 4.0);
+        assert_eq!(a.sum(), -1.0);
+    }
+
+    #[test]
+    fn sparsity_nnz() {
+        let a = t(vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(a.sparsity(), 0.5);
+        assert_eq!(a.nnz(), 2);
+    }
+
+    #[test]
+    fn kth_largest() {
+        let a = t(vec![1.0, -5.0, 3.0, -2.0]);
+        assert_eq!(a.kth_largest_abs(1), 5.0);
+        assert_eq!(a.kth_largest_abs(2), 3.0);
+        assert_eq!(a.kth_largest_abs(4), 1.0);
+        assert_eq!(a.kth_largest_abs(5), 0.0);
+        assert_eq!(a.kth_largest_abs(0), 0.0);
+    }
+
+    #[test]
+    fn hadamard() {
+        let mut a = t(vec![1.0, 2.0, 3.0]);
+        a.mul_assign(&t(vec![0.0, 1.0, 2.0]));
+        assert_eq!(a.data(), &[0.0, 2.0, 6.0]);
+    }
+
+    #[test]
+    fn add_sub() {
+        let a = t(vec![1.0, 2.0]);
+        let b = t(vec![0.5, 1.0]);
+        assert_eq!(a.sub(&b).data(), &[0.5, 1.0]);
+        assert_eq!(a.add(&b).data(), &[1.5, 3.0]);
+    }
+}

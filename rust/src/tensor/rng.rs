@@ -1,0 +1,111 @@
+//! xorshift64* RNG — bit-identical to `python/compile/dataset.py`.
+//!
+//! The SynthVision generator is implemented twice (Python for tests/goldens,
+//! Rust for the search path); both sides draw from this exact RNG in the
+//! exact same order, so batches are reproducible across the language
+//! boundary without any runtime bridge. Cross-language golden tests pin it.
+
+const MULT: u64 = 2685821657736338717;
+const ZERO_SEED_REMAP: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[derive(Debug, Clone)]
+pub struct XorShift64Star {
+    state: u64,
+    /// Spare normal for Box-Muller pairs (Rust-only convenience; the
+    /// cross-language data path never draws normals).
+    spare: Option<f32>,
+}
+
+impl XorShift64Star {
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { ZERO_SEED_REMAP } else { seed }, spare: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(MULT)
+    }
+
+    /// Uniform in [0, 1) with 24 mantissa bits — f32-exact, matches Python.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_range(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Standard normal via Box-Muller (weight init only — not part of the
+    /// cross-language ABI, Python uses jax PRNG for init instead).
+    pub fn next_normal(&mut self) -> f32 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        let (mut u1, u2) = (self.next_f32(), self.next_f32());
+        if u1 < 1e-12 {
+            u1 = 1e-12;
+        }
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f32::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn next_uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.next_f32() * (hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift64Star::new(42);
+        let mut b = XorShift64Star::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_remapped() {
+        let mut a = XorShift64Star::new(0);
+        let mut b = XorShift64Star::new(ZERO_SEED_REMAP);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = XorShift64Star::new(7);
+        let vals: Vec<f32> = (0..1000).map(|_| r.next_f32()).collect();
+        assert!(vals.iter().all(|&v| (0.0..1.0).contains(&v)));
+        let mean = vals.iter().sum::<f32>() / 1000.0;
+        assert!((0.3..0.7).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn normal_statistics() {
+        let mut r = XorShift64Star::new(3);
+        let vals: Vec<f32> = (0..20000).map(|_| r.next_normal()).collect();
+        let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / vals.len() as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.06, "var {var}");
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = XorShift64Star::new(9);
+        for _ in 0..1000 {
+            assert!(r.next_range(10) < 10);
+        }
+    }
+}

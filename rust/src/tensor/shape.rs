@@ -1,0 +1,100 @@
+//! Shape arithmetic for row-major tensors.
+
+/// Dimension list with row-major stride math.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: Vec<usize>) -> Self {
+        Shape(dims)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.0.iter().product::<usize>().max(if self.0.is_empty() { 1 } else { 0 })
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.0.len()];
+        for i in (0..self.0.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    pub fn linear_index(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.0.len(), "index rank mismatch");
+        let strides = self.strides();
+        idx.iter()
+            .zip(&self.0)
+            .zip(&strides)
+            .map(|((&i, &d), &st)| {
+                assert!(i < d, "index {i} out of bounds for dim {d}");
+                i * st
+            })
+            .sum()
+    }
+
+    /// i64 dims for the xla crate's reshape/literal APIs.
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.0.iter().map(|&d| d as i64).collect()
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(dims: Vec<usize>) -> Self {
+        Shape(dims)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for Shape {
+    fn from(dims: [usize; N]) -> Self {
+        Shape(dims.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_scalar_is_one() {
+        assert_eq!(Shape::new(vec![]).numel(), 1);
+        assert_eq!(Shape::new(vec![2, 3, 4]).numel(), 24);
+        assert_eq!(Shape::new(vec![2, 0]).numel(), 0);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(Shape::new(vec![2, 3, 4]).strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::new(vec![5]).strides(), vec![1]);
+    }
+
+    #[test]
+    fn linear_index() {
+        let s = Shape::new(vec![2, 3, 4]);
+        assert_eq!(s.linear_index(&[0, 0, 0]), 0);
+        assert_eq!(s.linear_index(&[1, 2, 3]), 23);
+        assert_eq!(s.linear_index(&[1, 0, 2]), 14);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_panics() {
+        Shape::new(vec![2, 2]).linear_index(&[2, 0]);
+    }
+}

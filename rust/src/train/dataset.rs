@@ -1,0 +1,207 @@
+//! SynthVision — bit-exact Rust port of `python/compile/dataset.py`.
+//!
+//! The ImageNet substitute (DESIGN.md §1): 10 classes, each a fixed
+//! smoothed random prototype; a sample is a circularly-shifted, scaled
+//! prototype plus uniform noise. Both implementations share the
+//! xorshift64* RNG and the exact op order; the golden tests below pin this
+//! port to values printed by `python/tests/test_dataset.py`.
+
+use crate::tensor::{Tensor, XorShift64Star};
+
+pub const IMG: usize = 12;
+pub const CHANNELS: usize = 3;
+pub const NUM_CLASSES: usize = 10;
+pub const SHIFT_RANGE: u64 = 6;
+pub const SCALE_MIN: f32 = 0.8;
+pub const SCALE_MAX: f32 = 1.2;
+pub const NOISE_AMP: f32 = 0.35;
+
+/// Seed bands: training batches draw from BATCH_SEED_BASE + step, eval
+/// batches from EVAL_SEED_BASE + idx — disjoint by construction.
+pub const BATCH_SEED_BASE: u64 = 100;
+pub const EVAL_SEED_BASE: u64 = 9_000;
+
+/// (NUM_CLASSES, IMG, IMG, CHANNELS) smoothed prototypes.
+pub fn class_prototypes(seed: u64) -> Tensor {
+    let mut rng = XorShift64Star::new(seed);
+    let mut raw = Tensor::zeros(vec![NUM_CLASSES, IMG, IMG, CHANNELS]);
+    for c in 0..NUM_CLASSES {
+        for i in 0..IMG {
+            for j in 0..IMG {
+                for k in 0..CHANNELS {
+                    raw.set(&[c, i, j, k], rng.next_f32() * 2.0 - 1.0);
+                }
+            }
+        }
+    }
+    // 3x3 circular box blur; accumulate in f32, divide by 9 (exact python
+    // op order for bit equality).
+    let mut out = Tensor::zeros(vec![NUM_CLASSES, IMG, IMG, CHANNELS]);
+    for c in 0..NUM_CLASSES {
+        for i in 0..IMG {
+            for j in 0..IMG {
+                for k in 0..CHANNELS {
+                    let mut acc = 0f32;
+                    for di in [-1i64, 0, 1] {
+                        for dj in [-1i64, 0, 1] {
+                            let ii = (i as i64 + di).rem_euclid(IMG as i64) as usize;
+                            let jj = (j as i64 + dj).rem_euclid(IMG as i64) as usize;
+                            acc += raw.get(&[c, ii, jj, k]);
+                        }
+                    }
+                    out.set(&[c, i, j, k], acc / 9.0);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic dataset handle (prototypes computed once).
+pub struct SynthVision {
+    protos: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// (n, IMG, IMG, CHANNELS) f32 images.
+    pub x: Tensor,
+    /// labels (n).
+    pub y: Vec<i32>,
+}
+
+impl Default for SynthVision {
+    fn default() -> Self {
+        Self::new(7)
+    }
+}
+
+impl SynthVision {
+    pub fn new(proto_seed: u64) -> Self {
+        SynthVision { protos: class_prototypes(proto_seed) }
+    }
+
+    /// Draw one (image, label) — draw order is the cross-language ABI:
+    /// label, dx, dy, scale, then IMG*IMG*CHANNELS noise values row-major.
+    fn sample(&self, rng: &mut XorShift64Star, img_out: &mut [f32]) -> i32 {
+        let label = rng.next_range(NUM_CLASSES as u64) as usize;
+        let dx = rng.next_range(SHIFT_RANGE) as usize;
+        let dy = rng.next_range(SHIFT_RANGE) as usize;
+        let scale = SCALE_MIN + rng.next_f32() * (SCALE_MAX - SCALE_MIN);
+        for i in 0..IMG {
+            for j in 0..IMG {
+                for k in 0..CHANNELS {
+                    let noise = (rng.next_f32() * 2.0 - 1.0) * NOISE_AMP;
+                    let p = self.protos.get(&[label, (i + dx) % IMG, (j + dy) % IMG, k]);
+                    img_out[(i * IMG + j) * CHANNELS + k] = p * scale + noise;
+                }
+            }
+        }
+        label as i32
+    }
+
+    /// Deterministic batch for `seed`.
+    pub fn batch(&self, seed: u64, n: usize) -> Batch {
+        let mut rng = XorShift64Star::new(seed);
+        let mut x = Tensor::zeros(vec![n, IMG, IMG, CHANNELS]);
+        let mut y = Vec::with_capacity(n);
+        let stride = IMG * IMG * CHANNELS;
+        for b in 0..n {
+            let label = {
+                let slice = &mut x.data_mut()[b * stride..(b + 1) * stride];
+                self.sample(&mut rng, slice)
+            };
+            y.push(label);
+        }
+        Batch { x, y }
+    }
+
+    /// Training batch for a global step index.
+    pub fn train_batch(&self, step: u64, n: usize) -> Batch {
+        self.batch(BATCH_SEED_BASE + step, n)
+    }
+
+    /// Held-out evaluation batch.
+    pub fn eval_batch(&self, idx: u64, n: usize) -> Batch {
+        self.batch(EVAL_SEED_BASE + idx, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// GOLDEN values printed by python/tests/test_dataset.py — the two
+    /// generators must agree bit-for-bit.
+    const PY_RNG_42: [u64; 4] = [
+        6255019084209693600,
+        14430073426741505498,
+        14575455857230217846,
+        17414512882241728735,
+    ];
+    const PY_BATCH_SUM: f64 = -65.97116088867188;
+    const PY_LABELS: [i32; 4] = [8, 2, 6, 2];
+    const PY_X000: [f32; 3] = [-0.052630145102739334, -0.06858805567026138, 0.6064690351486206];
+    const PY_PROTO_SUM: f64 = -18.350875854492188;
+    const PY_P0000: f32 = 0.2527275085449219;
+
+    #[test]
+    fn rng_matches_python_golden() {
+        let mut rng = XorShift64Star::new(42);
+        for want in PY_RNG_42 {
+            assert_eq!(rng.next_u64(), want);
+        }
+    }
+
+    #[test]
+    fn prototypes_match_python_golden() {
+        let p = class_prototypes(7);
+        assert_eq!(p.get(&[0, 0, 0, 0]), PY_P0000);
+        let sum: f64 = p.data().iter().map(|&v| v as f64).sum();
+        // f64 summation order differs from numpy's pairwise sum: allow tiny
+        // slack on the aggregate, exactness is pinned elementwise above.
+        assert!((sum - PY_PROTO_SUM).abs() < 1e-3, "{sum} vs {PY_PROTO_SUM}");
+    }
+
+    #[test]
+    fn batch_matches_python_golden() {
+        let ds = SynthVision::default();
+        let b = ds.batch(2026, 4);
+        assert_eq!(b.y, PY_LABELS);
+        for (k, want) in PY_X000.iter().enumerate() {
+            assert_eq!(b.x.get(&[0, 0, 0, k]), *want, "x[0,0,0,{k}]");
+        }
+        let sum: f64 = b.x.data().iter().map(|&v| v as f64).sum();
+        assert!((sum - PY_BATCH_SUM).abs() < 1e-4, "{sum} vs {PY_BATCH_SUM}");
+    }
+
+    #[test]
+    fn batches_deterministic_and_distinct() {
+        let ds = SynthVision::default();
+        let a = ds.batch(5, 8);
+        let b = ds.batch(5, 8);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = ds.batch(6, 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn label_distribution_covers_classes() {
+        let ds = SynthVision::default();
+        let b = ds.batch(9, 400);
+        let mut counts = [0usize; NUM_CLASSES];
+        for &y in &b.y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 10), "{counts:?}");
+    }
+
+    #[test]
+    fn train_eval_seed_bands_disjoint() {
+        let ds = SynthVision::default();
+        let t = ds.train_batch(0, 4);
+        let e = ds.eval_batch(0, 4);
+        assert_ne!(t.x, e.x);
+    }
+}

@@ -1,0 +1,11 @@
+//! S8 — training substrate: SynthVision data, SGD driver over the PJRT
+//! artifact, evaluation. Replaces the paper's ImageNet + 40-GPU cluster at
+//! laptop scale (DESIGN.md §1).
+
+pub mod dataset;
+pub mod optimizer;
+pub mod trainer;
+
+pub use dataset::{Batch, SynthVision};
+pub use optimizer::{Sgd, SgdConfig};
+pub use trainer::{Branch, StepMetrics, Trainer};

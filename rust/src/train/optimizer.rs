@@ -1,0 +1,160 @@
+//! SGD + momentum + cosine LR — host-side optimizer (§6.1: SGD, momentum
+//! 0.9, weight decay 5e-4, cosine schedule).
+//!
+//! The train-step artifact returns raw gradients; keeping the update rule in
+//! Rust lets Phase 3 swap pruning algorithms (ADMM proximal pulls,
+//! group-Lasso proximal steps, hard mask re-application) without recompiling
+//! the artifact.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct SgdConfig {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Cosine schedule horizon (steps); 0 disables the schedule.
+    pub cosine_steps: usize,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        // paper §6.1 scaled to the tiny supernet (base LR found by the
+        // Python-side sweep in test_model.py)
+        SgdConfig { lr: 0.05, momentum: 0.9, weight_decay: 5e-4, cosine_steps: 0 }
+    }
+}
+
+#[derive(Debug)]
+pub struct Sgd {
+    pub cfg: SgdConfig,
+    velocity: BTreeMap<String, Tensor>,
+    step: usize,
+}
+
+impl Sgd {
+    pub fn new(cfg: SgdConfig) -> Self {
+        Sgd { cfg, velocity: BTreeMap::new(), step: 0 }
+    }
+
+    /// Cosine-annealed LR for the current step.
+    pub fn current_lr(&self) -> f32 {
+        if self.cfg.cosine_steps == 0 {
+            return self.cfg.lr;
+        }
+        let t = (self.step as f32 / self.cfg.cosine_steps as f32).min(1.0);
+        0.5 * self.cfg.lr * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+
+    /// One update: v = m*v + g + wd*w;  w -= lr*v.
+    pub fn update(&mut self, params: &mut BTreeMap<String, Tensor>, grads: &BTreeMap<String, Tensor>) {
+        let lr = self.current_lr();
+        for (name, w) in params.iter_mut() {
+            let Some(g) = grads.get(name) else { continue };
+            let v = self
+                .velocity
+                .entry(name.clone())
+                .or_insert_with(|| Tensor::zeros(w.dims().to_vec()));
+            v.scale(self.cfg.momentum);
+            v.axpy(g, 1.0);
+            if self.cfg.weight_decay > 0.0 {
+                v.axpy(w, self.cfg.weight_decay);
+            }
+            w.axpy(v, -lr);
+        }
+        self.step += 1;
+    }
+
+    pub fn steps_taken(&self) -> usize {
+        self.step
+    }
+
+    pub fn reset_momentum(&mut self) {
+        self.velocity.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_setup() -> (BTreeMap<String, Tensor>, Sgd) {
+        let mut p = BTreeMap::new();
+        p.insert("w".to_string(), Tensor::new(vec![2], vec![10.0, -6.0]));
+        let sgd = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.9, weight_decay: 0.0, cosine_steps: 0 });
+        (p, sgd)
+    }
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(w) = 0.5||w||^2, grad = w
+        let (mut p, mut sgd) = quad_setup();
+        for _ in 0..200 {
+            let g = p.clone();
+            sgd.update(&mut p, &g);
+        }
+        assert!(p["w"].l2_norm() < 1e-3, "norm {}", p["w"].l2_norm());
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        // small LR: momentum's ~10x effective step wins clearly
+        let mk = |momentum: f32| {
+            Sgd::new(SgdConfig { lr: 0.02, momentum, weight_decay: 0.0, cosine_steps: 0 })
+        };
+        let mut p_mom = quad_setup().0;
+        let mut p_plain = p_mom.clone();
+        let (mut sgd_mom, mut sgd_plain) = (mk(0.9), mk(0.0));
+        for _ in 0..100 {
+            let g = p_mom.clone();
+            sgd_mom.update(&mut p_mom, &g);
+            let g = p_plain.clone();
+            sgd_plain.update(&mut p_plain, &g);
+        }
+        assert!(p_mom["w"].l2_norm() < p_plain["w"].l2_norm());
+    }
+
+    #[test]
+    fn cosine_schedule_decays_to_zero() {
+        let mut sgd =
+            Sgd::new(SgdConfig { lr: 1.0, momentum: 0.0, weight_decay: 0.0, cosine_steps: 100 });
+        assert!((sgd.current_lr() - 1.0).abs() < 1e-6);
+        let mut p = BTreeMap::new();
+        p.insert("w".to_string(), Tensor::zeros(vec![1]));
+        let g = p.clone();
+        for _ in 0..50 {
+            sgd.update(&mut p, &g);
+        }
+        let mid = sgd.current_lr();
+        assert!((mid - 0.5).abs() < 0.05, "mid {mid}");
+        for _ in 0..50 {
+            sgd.update(&mut p, &g);
+        }
+        assert!(sgd.current_lr() < 1e-3);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut p = BTreeMap::new();
+        p.insert("w".to_string(), Tensor::new(vec![1], vec![1.0]));
+        let zero_grad: BTreeMap<String, Tensor> =
+            [("w".to_string(), Tensor::zeros(vec![1]))].into();
+        let mut sgd =
+            Sgd::new(SgdConfig { lr: 0.1, momentum: 0.0, weight_decay: 0.1, cosine_steps: 0 });
+        for _ in 0..10 {
+            sgd.update(&mut p, &zero_grad);
+        }
+        let w = p["w"].data()[0];
+        assert!(w < 1.0 && w > 0.8, "w {w}");
+    }
+
+    #[test]
+    fn missing_grad_is_skipped() {
+        let (mut p, mut sgd) = quad_setup();
+        let before = p["w"].clone();
+        sgd.update(&mut p, &BTreeMap::new());
+        assert_eq!(p["w"], before);
+    }
+}

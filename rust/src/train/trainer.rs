@@ -1,0 +1,292 @@
+//! The training/evaluation driver over the AOT supernet artifact.
+//!
+//! Owns the supernet state (weights, masks, branch selectors, activation
+//! blend) on the host; every step round-trips through the PJRT executable:
+//! feed (weights, masks, alphas, acts, ADMM targets, hyper, teacher, batch)
+//! → receive (loss, ce, correct, grads) → apply the Rust-side optimizer and
+//! proximal operators. This is the paper's GPU-cluster fast-evaluation
+//! loop, scaled to one host.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::pruning::{generate_mask, AdmmState, PruneRate, PruneScheme};
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{Tensor, XorShift64Star};
+
+use super::dataset::SynthVision;
+use super::optimizer::{Sgd, SgdConfig};
+
+/// Which filter-type branch each searchable block selects (one-hot row of
+/// the alphas input). Order matches `model.BRANCH_NAMES`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Branch {
+    Conv1x1 = 0,
+    Conv3x3 = 1,
+    DwPw = 2,
+    PwDwPw = 3,
+    Skip = 4,
+}
+
+impl Branch {
+    pub const ALL: [Branch; 5] =
+        [Branch::Conv1x1, Branch::Conv3x3, Branch::DwPw, Branch::PwDwPw, Branch::Skip];
+
+    /// Weight tensors this branch actually uses in block `i` (for pruning).
+    pub fn tensors(self, i: usize) -> Vec<String> {
+        match self {
+            Branch::Conv1x1 => vec![format!("b{i}_conv1x1")],
+            Branch::Conv3x3 => vec![format!("b{i}_conv3x3")],
+            Branch::DwPw => vec![format!("b{i}_dw"), format!("b{i}_dw_pw")],
+            Branch::PwDwPw => {
+                vec![format!("b{i}_pw1"), format!("b{i}_mid_dw"), format!("b{i}_pw2")]
+            }
+            Branch::Skip => vec![],
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub accuracy: f32,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub data: SynthVision,
+    pub params: BTreeMap<String, Tensor>,
+    pub masks: BTreeMap<String, Tensor>,
+    /// (BLOCKS, 5) one-hot rows.
+    pub alphas: Tensor,
+    /// (BLOCKS+1, 2): [swish, hard_swish] blend per act site.
+    pub acts: Tensor,
+    pub opt: Sgd,
+    /// ADMM state (Phase 3); when None the rho-term is disabled.
+    pub admm: Option<AdmmState>,
+    /// Teacher weights for knowledge distillation (Phase 3 fine-tune).
+    pub teacher: Option<BTreeMap<String, Tensor>>,
+    pub kd_weight: f32,
+    global_step: u64,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Fresh supernet: He-normal weights, dense masks, all blocks on the
+    /// 3x3 branch (the "pre-trained model" shape NPAS starts from), swish
+    /// activations (mobile-unfriendly — Phase 1 will replace them).
+    pub fn new(rt: &'rt Runtime, seed: u64, opt: SgdConfig) -> Self {
+        let mm = &rt.manifest.model;
+        let mut rng = XorShift64Star::new(seed);
+        let mut params = BTreeMap::new();
+        for (name, shape) in &mm.param_specs {
+            params.insert(name.clone(), Tensor::he_normal(shape.clone(), &mut rng));
+        }
+        let mut masks = BTreeMap::new();
+        for p in &mm.prunable {
+            let shape = mm.param_specs.iter().find(|(n, _)| n == p).unwrap().1.clone();
+            masks.insert(p.clone(), Tensor::ones(shape));
+        }
+        let mut t = Trainer {
+            rt,
+            data: SynthVision::default(),
+            params,
+            masks,
+            alphas: Tensor::zeros(vec![mm.blocks, 5]),
+            acts: Tensor::zeros(vec![mm.blocks + 1, 2]),
+            opt: Sgd::new(opt),
+            admm: None,
+            teacher: None,
+            kd_weight: 0.0,
+            global_step: 0,
+        };
+        t.set_uniform_branch(Branch::Conv3x3);
+        t.set_swish(true);
+        t
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.rt.manifest.model.blocks
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.rt.manifest.model.batch
+    }
+
+    /// Select one branch per block.
+    pub fn set_branches(&mut self, branches: &[Branch]) {
+        assert_eq!(branches.len(), self.blocks());
+        self.alphas = Tensor::zeros(vec![self.blocks(), 5]);
+        for (i, b) in branches.iter().enumerate() {
+            self.alphas.set(&[i, *b as usize], 1.0);
+        }
+    }
+
+    pub fn set_uniform_branch(&mut self, b: Branch) {
+        let v = vec![b; self.blocks()];
+        self.set_branches(&v);
+    }
+
+    /// Uniform branch blending (supernet warm-up: the §5.2.3 "weight
+    /// initialization for filter type candidates").
+    pub fn set_blended_branches(&mut self) {
+        let blocks = self.blocks();
+        self.alphas = Tensor::full(vec![blocks, 5], 1.0 / 5.0);
+    }
+
+    /// Phase 1 lever: true = swish (mobile-unfriendly), false = hard-swish.
+    pub fn set_swish(&mut self, swish: bool) {
+        let sites = self.blocks() + 1;
+        self.acts = Tensor::zeros(vec![sites, 2]);
+        let col = if swish { 0 } else { 1 };
+        for i in 0..sites {
+            self.acts.set(&[i, col], 1.0);
+        }
+    }
+
+    /// Reset all masks to dense.
+    pub fn clear_masks(&mut self) {
+        for (_, m) in self.masks.iter_mut() {
+            *m = Tensor::ones(m.dims().to_vec());
+        }
+    }
+
+    /// One-shot magnitude pruning (§5.2.3 fast evaluation): generate masks
+    /// for `plan` from current weights and apply them.
+    pub fn one_shot_prune(&mut self, plan: &BTreeMap<String, (PruneScheme, PruneRate)>) {
+        for (name, (scheme, rate)) in plan {
+            let w = &self.params[name];
+            let mask = generate_mask(w, *scheme, *rate);
+            self.params.get_mut(name).unwrap().mul_assign(&mask);
+            self.masks.insert(name.clone(), mask);
+        }
+    }
+
+    /// Snapshot current weights as the KD teacher.
+    pub fn freeze_teacher(&mut self, kd_weight: f32) {
+        self.teacher = Some(self.params.clone());
+        self.kd_weight = kd_weight;
+    }
+
+    fn base_inputs(&self) -> BTreeMap<String, Value> {
+        let mut ins = BTreeMap::new();
+        for (name, w) in &self.params {
+            ins.insert(name.clone(), Value::F32(w.clone()));
+        }
+        for (name, m) in &self.masks {
+            ins.insert(format!("mask_{name}"), Value::F32(m.clone()));
+        }
+        ins.insert("alphas".to_string(), Value::F32(self.alphas.clone()));
+        ins.insert("acts".to_string(), Value::F32(self.acts.clone()));
+        ins
+    }
+
+    /// Teacher logits for a batch via the infer artifact (dense teacher).
+    fn teacher_logits(&self, x: &Tensor) -> Result<Tensor> {
+        let teacher = self.teacher.as_ref().expect("teacher not frozen");
+        let mm = &self.rt.manifest.model;
+        let mut ins = BTreeMap::new();
+        for (name, w) in teacher {
+            ins.insert(name.clone(), Value::F32(w.clone()));
+        }
+        for p in &mm.prunable {
+            let shape = mm.param_specs.iter().find(|(n, _)| n == p).unwrap().1.clone();
+            ins.insert(format!("mask_{p}"), Value::F32(Tensor::ones(shape)));
+        }
+        ins.insert("alphas".to_string(), Value::F32(self.alphas.clone()));
+        ins.insert("acts".to_string(), Value::F32(self.acts.clone()));
+        ins.insert("x".to_string(), Value::F32(x.clone()));
+        Ok(self.rt.run("infer", &ins)?.remove("logits").unwrap())
+    }
+
+    /// One optimization step on the next training batch.
+    pub fn step(&mut self) -> Result<StepMetrics> {
+        let mm = &self.rt.manifest.model;
+        let batch = self.data.train_batch(self.global_step, mm.batch);
+        self.global_step += 1;
+
+        let mut ins = self.base_inputs();
+        // ADMM proximal targets: Z - U inside the plan, W itself outside
+        // (zero pull), rho = 0 when ADMM is off.
+        let rho = if self.admm.is_some() { self.admm.as_ref().unwrap().rho } else { 0.0 };
+        for p in &mm.prunable {
+            let target = self
+                .admm
+                .as_ref()
+                .and_then(|a| a.target(p))
+                .unwrap_or_else(|| self.params[p].clone());
+            ins.insert(format!("admm_{p}"), Value::F32(target));
+        }
+        ins.insert("rho".to_string(), Value::scalar(rho));
+
+        let teacher_logits = if self.teacher.is_some() && self.kd_weight > 0.0 {
+            self.teacher_logits(&batch.x)?
+        } else {
+            Tensor::zeros(vec![mm.batch, mm.num_classes])
+        };
+        ins.insert("kd_w".to_string(), Value::scalar(self.kd_weight));
+        ins.insert("teacher_logits".to_string(), Value::F32(teacher_logits));
+        ins.insert("x".to_string(), Value::F32(batch.x));
+        ins.insert("y".to_string(), Value::I32(batch.y));
+
+        let mut out = self.rt.run("train", &ins)?;
+        let loss = out["loss"].scalar();
+        let ce = out["ce"].scalar();
+        let correct = out["correct"].scalar();
+
+        let mut grads = BTreeMap::new();
+        for (name, _) in &self.rt.manifest.model.param_specs {
+            grads.insert(name.clone(), out.remove(&format!("grad_{name}")).unwrap());
+        }
+        self.opt.update(&mut self.params, &grads);
+        // hard masks stay enforced during retraining: re-project
+        for (name, mask) in &self.masks {
+            if mask.sparsity() > 0.0 {
+                self.params.get_mut(name).unwrap().mul_assign(mask);
+            }
+        }
+
+        Ok(StepMetrics { loss, ce, accuracy: correct / mm.batch as f32 })
+    }
+
+    /// Train for `n` steps; returns per-step metrics (the loss curve).
+    pub fn train(&mut self, n: usize) -> Result<Vec<StepMetrics>> {
+        (0..n).map(|_| self.step()).collect()
+    }
+
+    /// Held-out accuracy over `n_batches` eval batches.
+    pub fn evaluate(&self, n_batches: usize) -> Result<f32> {
+        let mm = &self.rt.manifest.model;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for idx in 0..n_batches {
+            let batch = self.data.eval_batch(idx as u64, mm.eval_batch);
+            let mut ins = self.base_inputs();
+            ins.insert("x".to_string(), Value::F32(batch.x));
+            let logits = &self.rt.run("infer", &ins)?["logits"];
+            for (b, &y) in batch.y.iter().enumerate() {
+                let row = &logits.data()[b * mm.num_classes..(b + 1) * mm.num_classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += (pred == y as usize) as usize;
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total as f32)
+    }
+
+    /// Overall parameter sparsity of prunable tensors (reporting).
+    pub fn sparsity(&self) -> f32 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for m in self.masks.values() {
+            zeros += m.numel() - m.nnz();
+            total += m.numel();
+        }
+        zeros as f32 / total.max(1) as f32
+    }
+}

