@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use npas::compiler::device::{ADRENO_640, KRYO_485};
 use npas::pruning::{PruneRate, PruneScheme};
 use npas::runtime::{Runtime, Value};
-use npas::search::evaluator::measure_scheme;
+use npas::search::evaluator::{measure_scheme_with, EvalContext};
 use npas::search::NpasScheme;
 use npas::tensor::{Tensor, XorShift64Star};
 use npas::train::{SgdConfig, Trainer};
@@ -73,12 +73,20 @@ fn main() -> anyhow::Result<()> {
         c.scheme = PruneScheme::block_punched_default();
         c.rate = PruneRate::new(6.0);
     }
+    // the same compile-once context the search loop uses: the second
+    // measurement of a workload is a plan-cache hit, not a recompile
+    let ctx = EvalContext::new();
     println!(
         "[4/4] 6x block-punched: accuracy {:.3} (sparsity {:.2}); deployment latency {:.2}ms CPU / {:.2}ms GPU",
         acc,
         tr.sparsity(),
-        measure_scheme(&scheme, &KRYO_485),
-        measure_scheme(&scheme, &ADRENO_640),
+        measure_scheme_with(&ctx, &scheme, &KRYO_485),
+        measure_scheme_with(&ctx, &scheme, &ADRENO_640),
+    );
+    let stats = ctx.stats();
+    println!(
+        "      (plan cache: {} misses, {} hits — rerun a measurement and it's free)",
+        stats.plan_misses, stats.plan_hits
     );
     println!("\nnext: `cargo run --release --example npas_search` for the full pipeline");
     Ok(())

@@ -9,17 +9,25 @@
 use npas::bench::{quick, Table};
 use npas::compiler::device::ADRENO_640;
 use npas::coordinator::{EventLog, Metrics};
-use npas::search::evaluator::ProxyEvaluator;
+use npas::search::evaluator::{Evaluator, ProxyEvaluator};
 use npas::search::phase2::{self, Phase2Config};
 use npas::search::qlearning::{QAgent, QConfig};
 use npas::search::reward::RewardConfig;
 use npas::train::Branch;
 
 fn run_once(use_bo: bool, replay: bool, pool: usize, seed: u64) -> (f64, usize) {
-    run_variant(use_bo, replay, true, pool, seed)
+    let (reward, evals, _) = run_variant(use_bo, replay, true, pool, seed);
+    (reward, evals)
 }
 
-fn run_variant(use_bo: bool, replay: bool, shaped: bool, pool: usize, seed: u64) -> (f64, usize) {
+/// Returns (best reward, evaluations, plan-cache hit rate).
+fn run_variant(
+    use_bo: bool,
+    replay: bool,
+    shaped: bool,
+    pool: usize,
+    seed: u64,
+) -> (f64, usize, f64) {
     let mut qcfg = QConfig::default();
     qcfg.shaped = shaped;
     if !replay {
@@ -38,14 +46,16 @@ fn run_variant(use_bo: bool, replay: bool, shaped: bool, pool: usize, seed: u64)
     let metrics = Metrics::new();
     let mut log = EventLog::memory();
     let rep = phase2::run(&mut agent, &ev, &cfg, &metrics, &mut log);
-    (rep.best_reward, rep.evaluations)
+    let hit_rate = ev.cache_stats().map(|s| s.plan_hit_rate()).unwrap_or(0.0);
+    (rep.best_reward, rep.evaluations, hit_rate)
 }
 
 fn main() {
     println!("# E8 — search ablations (fixed budget: 5 rounds x 4 evaluations)\n");
     let seeds: [u64; 6] = [1, 7, 23, 42, 99, 1234];
 
-    let table = Table::new(&["variant", "mean_best_reward", "evals"], &[30, 18, 8]);
+    let table =
+        Table::new(&["variant", "mean_best_reward", "evals", "plan_hit%"], &[30, 18, 8, 11]);
     let mut results = Vec::new();
     for (label, use_bo, replay, shaped, pool) in [
         ("full (BO + replay + shaping)", true, true, true, 24),
@@ -57,13 +67,21 @@ fn main() {
     ] {
         let mut sum = 0.0;
         let mut evals = 0;
+        let mut hit_sum = 0.0;
         for &s in &seeds {
-            let (r, e) = run_variant(use_bo, replay, shaped, pool, s);
+            let (r, e, h) = run_variant(use_bo, replay, shaped, pool, s);
             sum += r;
             evals = e;
+            hit_sum += h;
         }
         let mean = sum / seeds.len() as f64;
-        table.row(&[label.to_string(), format!("{mean:.4}"), format!("{evals}")]);
+        let hit = 100.0 * hit_sum / seeds.len() as f64;
+        table.row(&[
+            label.to_string(),
+            format!("{mean:.4}"),
+            format!("{evals}"),
+            format!("{hit:.0}"),
+        ]);
         results.push((label, mean));
     }
 

@@ -10,6 +10,7 @@ use npas::graph::zoo;
 use npas::pruning::{generate_mask, PruneRate, PruneScheme};
 use npas::search::bo::gp::Gp;
 use npas::search::bo::wl_kernel::{wl_features, wl_kernel_normalized};
+use npas::search::evaluator::{measure_scheme, measure_scheme_with, EvalContext};
 use npas::search::qlearning::{QAgent, QConfig};
 use npas::search::space::{layer_actions, NpasScheme};
 use npas::tensor::{Tensor, XorShift64Star};
@@ -78,4 +79,37 @@ fn main() {
         let mut agent = QAgent::new(&[Branch::Conv3x3; 5], QConfig::default(), 9);
         std::hint::black_box(agent.generate_pool(24));
     });
+
+    // 6. candidate evaluation: full recompile vs the compile-once plan cache
+    // (the search-loop hot path this perf pass attacks). Repeated evaluation
+    // of a scheme must be >= 5x faster through the cache, with bit-identical
+    // results.
+    let scheme = &schemes[0];
+    let uncached = bench("measure_scheme (uncached, full compile)", budget, || {
+        std::hint::black_box(measure_scheme(scheme, &KRYO_485));
+    });
+    let ctx = EvalContext::new();
+    let reference = measure_scheme(scheme, &KRYO_485);
+    let warm = measure_scheme_with(&ctx, scheme, &KRYO_485); // cold fill
+    assert_eq!(reference, warm, "cold cache path must be bit-identical");
+    let cached = bench("measure_scheme_with (plan-cache hit)", budget, || {
+        std::hint::black_box(measure_scheme_with(&ctx, scheme, &KRYO_485));
+    });
+    assert_eq!(
+        reference,
+        measure_scheme_with(&ctx, scheme, &KRYO_485),
+        "cache hit must be bit-identical"
+    );
+    let speedup = uncached.mean.as_secs_f64() / cached.mean.as_secs_f64();
+    let stats = ctx.stats();
+    println!(
+        "\nplan-cache speedup on repeated scheme evaluation: {speedup:.1}x \
+         ({} hits / {} misses)",
+        stats.plan_hits, stats.plan_misses
+    );
+    assert!(
+        speedup >= 5.0,
+        "plan cache must give >= 5x on repeated evaluation, got {speedup:.1}x"
+    );
+    println!("shape check (cached == uncached, >= 5x on repeats): PASS");
 }

@@ -10,7 +10,7 @@
 use npas::bench::{quick, Table};
 use npas::compiler::device::{ADRENO_640, KRYO_485};
 use npas::coordinator::EventLog;
-use npas::search::evaluator::{measure_scheme, scheme_footprint, ProxyEvaluator};
+use npas::search::evaluator::{measure_scheme, scheme_footprint, Evaluator, ProxyEvaluator};
 use npas::search::npas::{run_proxy, NpasConfig};
 
 fn main() {
@@ -42,6 +42,7 @@ fn main() {
     // NPAS rows: real searches at the paper's four GPU latency targets
     let mut prev_acc = f32::MAX;
     let mut results = Vec::new();
+    let mut cache_lines = Vec::new();
     for (target, label) in
         [(6.7, "NPAS (ours) @6.7"), (5.9, "NPAS (ours) @5.9"), (3.9, "NPAS (ours) @3.9"), (3.3, "NPAS (ours) @3.3")]
     {
@@ -67,6 +68,22 @@ fn main() {
         ]);
         results.push((target, p2.best_outcome.accuracy, gpu, macs));
         prev_acc = prev_acc.min(p2.best_outcome.accuracy);
+        if let Some(st) = ev.cache_stats() {
+            cache_lines.push(format!(
+                "  target {target}: plan cache {} hits / {} misses ({:.0}% hit rate), \
+                 structure cache {} hits / {} misses",
+                st.plan_hits,
+                st.plan_misses,
+                st.plan_hit_rate() * 100.0,
+                st.structure_hits,
+                st.structure_misses
+            ));
+        }
+    }
+
+    println!("\ncompile-once evaluation cache (per search):");
+    for l in &cache_lines {
+        println!("{l}");
     }
 
     // shape checks: latency targets met (within measurement band) and

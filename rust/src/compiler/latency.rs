@@ -36,9 +36,10 @@ pub fn plan_time(plan: &ExecutionPlan, device: &DeviceSpec) -> (f64, f64, f64) {
         let size_util = device.size_utilization(g.eff_macs.max(1.0));
         let c = g.eff_macs / (device.peak_gmacs * g.utilization.max(1e-3) * size_util.max(1e-3));
         let m = g.bytes / device.mem_bw;
-        // roofline: overlap compute & memory, pay the max; glue groups are
-        // pure memory.
-        compute += c.max(m) - m.min(c); // excess compute beyond overlap
+        // roofline: compute and memory overlap, so a group pays max(c, m) —
+        // accounted as its memory time plus the compute excess beyond it.
+        // Memory-bound groups (m >= c, e.g. glue) contribute no excess.
+        compute += (c - m).max(0.0);
         memory += m;
         overhead += device.group_overhead * caps.overhead_mult;
     }
@@ -61,14 +62,28 @@ pub fn measure(
         framework.name()
     );
     let plan = compile(net, sparsity, device, framework);
-    let (c, m, o) = plan_time(&plan, device);
+    measure_plan(&plan, device, runs)
+}
+
+/// "Measure" an already-compiled plan with the same 100-run protocol as
+/// [`measure`]. A [`super::PlanCache`] hit comes straight here and skips
+/// codegen entirely; the pseudo-noise seed depends only on the plan's
+/// identity (network name, device, framework), so cached and uncached
+/// reports are bit-identical.
+pub fn measure_plan(plan: &ExecutionPlan, device: &DeviceSpec, runs: usize) -> LatencyReport {
+    assert!(
+        plan.framework.caps().gpu || !device.is_gpu,
+        "{} has no GPU backend",
+        plan.framework.name()
+    );
+    let (c, m, o) = plan_time(plan, device);
     let base = c + m + o;
 
     let mut seed = 0xABCDu64;
-    for b in net.name.bytes() {
+    for b in plan.network.bytes() {
         seed = seed.wrapping_mul(31).wrapping_add(b as u64);
     }
-    seed ^= (device.is_gpu as u64) << 60 ^ (framework as u64) << 50;
+    seed ^= (device.is_gpu as u64) << 60 ^ (plan.framework as u64) << 50;
     let mut rng = XorShift64Star::new(seed);
     let mut samples = Vec::with_capacity(runs.max(1));
     for _ in 0..runs.max(1) {
@@ -80,8 +95,8 @@ pub fn measure(
         samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / samples.len() as f64;
 
     LatencyReport {
-        network: net.name.clone(),
-        framework,
+        network: plan.network.clone(),
+        framework: plan.framework,
         device: device.name,
         mean_ms: mean * 1e3,
         std_ms: var.sqrt() * 1e3,
@@ -103,6 +118,46 @@ mod tests {
 
     fn dense_ms(net: &Network, dev: &DeviceSpec, fw: Framework) -> f64 {
         measure(net, &SparsityMap::new(), dev, fw, 100).mean_ms
+    }
+
+    #[test]
+    fn roofline_memory_bound_group_pays_max_not_double() {
+        use crate::compiler::codegen::{Algo, FusedGroup};
+        // a pure-memory glue group (zero MACs, 1 MB of traffic) must cost
+        // max(c, m) = m, not the 2m - c the old |c - m| excess charged.
+        let plan = ExecutionPlan {
+            network: "glue".to_string(),
+            device: KRYO_485.name,
+            framework: Framework::Ours,
+            groups: vec![FusedGroup {
+                layer_ids: vec![0],
+                algo: Algo::Memory,
+                macs: 0.0,
+                eff_macs: 0.0,
+                utilization: 0.05,
+                bytes: 1e6,
+            }],
+        };
+        let (c, m, o) = plan_time(&plan, &KRYO_485);
+        let expected_m = 1e6 / KRYO_485.mem_bw;
+        assert!(c.abs() < expected_m * 1e-6, "memory-bound group added compute excess {c}");
+        assert!((m - expected_m).abs() < 1e-12, "memory term {m} vs {expected_m}");
+        assert!((o - KRYO_485.group_overhead).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_plan_matches_measure_exactly() {
+        // the plan-cache fast path must be bit-identical to the one-call API
+        let net = zoo::mobilenet_v3();
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        let a = measure(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours, 100);
+        let b = measure_plan(&plan, &KRYO_485, 100);
+        assert_eq!(a.mean_ms, b.mean_ms);
+        assert_eq!(a.std_ms, b.std_ms);
+        assert_eq!(a.compute_ms, b.compute_ms);
+        assert_eq!(a.memory_ms, b.memory_ms);
+        assert_eq!(a.overhead_ms, b.overhead_ms);
+        assert_eq!(a.num_groups, b.num_groups);
     }
 
     #[test]

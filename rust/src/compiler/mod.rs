@@ -22,6 +22,7 @@ pub mod device;
 pub mod frameworks;
 pub mod fusion;
 pub mod latency;
+pub mod plan_cache;
 pub mod sparse_exec;
 pub mod tuning;
 pub mod winograd;
@@ -29,7 +30,8 @@ pub mod winograd;
 pub use codegen::{Algo, ExecutionPlan, FusedGroup};
 pub use device::DeviceSpec;
 pub use frameworks::Framework;
-pub use latency::{measure, LatencyReport};
+pub use latency::{measure, measure_plan, LatencyReport};
+pub use plan_cache::{PlanCache, PlanCacheStats};
 pub use sparse_exec::LayerSparsity;
 
 use std::collections::BTreeMap;

@@ -1,0 +1,335 @@
+//! Compile-once plan cache — the candidate-evaluation hot path.
+//!
+//! NPAS measures thousands of candidate schemes per search (§5.2.3 keeps
+//! that affordable by fanning fast evaluations across 40 GPUs); every
+//! measurement used to re-run the full codegen pipeline (fusion + per-GEMM
+//! auto-tuning) from scratch. The cache memoizes [`compile`] output behind a
+//! content-addressed key — (network fingerprint, sparsity map, device,
+//! framework) — so repeated evaluations of a workload pay one hash lookup
+//! instead of a compilation, CPrune-style amortization of compiler-in-the-
+//! loop measurement. Thread-safe: `ProxyEvaluator::evaluate_batch` hits one
+//! shared cache from every `map_parallel` worker.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::Network;
+
+use super::codegen::{compile, ExecutionPlan};
+use super::device::DeviceSpec;
+use super::frameworks::Framework;
+use super::latency::{measure_plan, LatencyReport};
+use super::SparsityMap;
+
+/// Content-addressed cache key. Device identity hashes the full spec (not
+/// just the name) so ad-hoc `DeviceSpec` values never alias the presets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    net_fp: u64,
+    sparsity_fp: u64,
+    device_fp: u64,
+    framework: Framework,
+}
+
+impl PlanKey {
+    pub fn new(
+        net: &Network,
+        sparsity: &SparsityMap,
+        device: &DeviceSpec,
+        framework: Framework,
+    ) -> Self {
+        PlanKey {
+            net_fp: net.fingerprint(),
+            sparsity_fp: sparsity_fingerprint(sparsity),
+            device_fp: device_fingerprint(device),
+            framework,
+        }
+    }
+}
+
+fn fnv(h: &mut u64, b: u64) {
+    *h ^= b;
+    *h = h.wrapping_mul(0x100000001b3);
+}
+
+fn sparsity_fingerprint(sp: &SparsityMap) -> u64 {
+    use crate::pruning::PruneScheme;
+    let mut h = 0xcbf29ce484222325u64;
+    // BTreeMap iteration is ordered, so the hash is canonical.
+    for (&id, ls) in sp {
+        fnv(&mut h, id as u64);
+        match ls.scheme {
+            PruneScheme::Unstructured => fnv(&mut h, 1),
+            PruneScheme::Filter => fnv(&mut h, 2),
+            PruneScheme::Pattern => fnv(&mut h, 3),
+            PruneScheme::BlockPunched { bf, bc } => {
+                fnv(&mut h, 4);
+                fnv(&mut h, bf as u64);
+                fnv(&mut h, bc as u64);
+            }
+            PruneScheme::BlockBased { brows, bcols } => {
+                fnv(&mut h, 5);
+                fnv(&mut h, brows as u64);
+                fnv(&mut h, bcols as u64);
+            }
+        }
+        fnv(&mut h, ls.rate.0.to_bits() as u64);
+    }
+    h
+}
+
+fn device_fingerprint(d: &DeviceSpec) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in d.name.bytes() {
+        fnv(&mut h, b as u64);
+    }
+    fnv(&mut h, d.is_gpu as u64);
+    fnv(&mut h, d.peak_gmacs.to_bits());
+    fnv(&mut h, d.mem_bw.to_bits());
+    fnv(&mut h, d.vector_lanes as u64);
+    fnv(&mut h, d.group_overhead.to_bits());
+    fnv(&mut h, d.l2_bytes as u64);
+    fnv(&mut h, d.knee_macs.to_bits());
+    h
+}
+
+/// Snapshot of cache counters (reported through `coordinator::Metrics` and
+/// the event log by the search phases).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    map: HashMap<PlanKey, Arc<ExecutionPlan>>,
+    /// Insertion order for FIFO eviction (plans are equally cheap to rebuild,
+    /// so recency bookkeeping is not worth the hot-path cost).
+    order: VecDeque<PlanKey>,
+}
+
+#[derive(Debug)]
+pub struct PlanCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// Roughly one search round's worth of distinct workloads; a deployment
+    /// plan is ~25 small groups, so even large caches stay in the megabytes.
+    pub const DEFAULT_CAPACITY: usize = 512;
+
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "plan cache capacity must be positive");
+        PlanCache {
+            capacity,
+            inner: Mutex::new(CacheInner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Memoized [`compile`]: returns the cached plan on a key hit, otherwise
+    /// compiles, stores and returns it (evicting the oldest entry at the
+    /// capacity bound).
+    pub fn get_or_compile(
+        &self,
+        net: &Network,
+        sparsity: &SparsityMap,
+        device: &DeviceSpec,
+        framework: Framework,
+    ) -> Arc<ExecutionPlan> {
+        let key = PlanKey::new(net, sparsity, device, framework);
+        if let Some(plan) = self.inner.lock().unwrap().map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return plan.clone();
+        }
+        // compile outside the lock so concurrent misses on different keys
+        // proceed in parallel; a racing duplicate keeps the first insert.
+        let plan = Arc::new(compile(net, sparsity, device, framework));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(existing) = inner.map.get(&key) {
+            return existing.clone();
+        }
+        if inner.map.len() >= self.capacity {
+            if let Some(old) = inner.order.pop_front() {
+                inner.map.remove(&old);
+            }
+        }
+        inner.map.insert(key, plan.clone());
+        inner.order.push_back(key);
+        plan
+    }
+
+    /// Cached compile + the 100-run measurement protocol; bit-identical to
+    /// [`super::measure`] (see `measure_plan_matches_measure_exactly`).
+    pub fn measure(
+        &self,
+        net: &Network,
+        sparsity: &SparsityMap,
+        device: &DeviceSpec,
+        framework: Framework,
+        runs: usize,
+    ) -> LatencyReport {
+        let plan = self.get_or_compile(net, sparsity, device, framework);
+        measure_plan(&plan, device, runs)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats { hits: self.hits(), misses: self.misses(), entries: self.len() }
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new(Self::DEFAULT_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::{ADRENO_640, KRYO_485};
+    use crate::compiler::sparse_exec::LayerSparsity;
+    use crate::graph::zoo;
+    use crate::pruning::PruneScheme;
+
+    fn sparsity(rate: f32) -> SparsityMap {
+        let mut sp = SparsityMap::new();
+        sp.insert(0, LayerSparsity::new(PruneScheme::block_punched_default(), rate));
+        sp
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let cache = PlanCache::default();
+        let net = zoo::single_conv(28, 3, 64, 64);
+        let dense = SparsityMap::new();
+        cache.get_or_compile(&net, &dense, &KRYO_485, Framework::Ours);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        cache.get_or_compile(&net, &dense, &KRYO_485, Framework::Ours);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // any key component change is a distinct workload
+        cache.get_or_compile(&net, &sparsity(6.0), &KRYO_485, Framework::Ours);
+        cache.get_or_compile(&net, &dense, &ADRENO_640, Framework::Ours);
+        cache.get_or_compile(&net, &dense, &KRYO_485, Framework::MNN);
+        assert_eq!((cache.hits(), cache.misses()), (1, 4));
+        assert_eq!(cache.len(), 4);
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 4);
+        assert!((stats.hit_rate() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eviction_respects_capacity_bound() {
+        let cache = PlanCache::new(4);
+        let net = zoo::single_conv(28, 3, 32, 32);
+        for rate in [2.0f32, 2.5, 3.0, 5.0, 7.0, 10.0, 4.0, 6.0, 8.0, 9.0] {
+            cache.get_or_compile(&net, &sparsity(rate), &KRYO_485, Framework::Ours);
+        }
+        assert_eq!(cache.misses(), 10);
+        assert_eq!(cache.len(), 4, "cache exceeded its capacity bound");
+        // oldest entries were evicted: re-requesting the first rate recompiles
+        cache.get_or_compile(&net, &sparsity(2.0), &KRYO_485, Framework::Ours);
+        assert_eq!(cache.misses(), 11);
+        // the newest survivor is still resident
+        cache.get_or_compile(&net, &sparsity(9.0), &KRYO_485, Framework::Ours);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn prop_hit_returns_exactly_the_cold_compile() {
+        // property: over a sweep of workloads, a cache hit is structurally
+        // identical to an independent cold compile of the same inputs.
+        let cache = PlanCache::default();
+        for net in [zoo::single_conv(56, 3, 64, 64), zoo::mobilenet_v2()] {
+            for device in [&KRYO_485, &ADRENO_640] {
+                for rate in [1.0f32, 3.0, 6.0] {
+                    let sp = if rate > 1.0 { sparsity(rate) } else { SparsityMap::new() };
+                    let cold = compile(&net, &sp, device, Framework::Ours);
+                    cache.get_or_compile(&net, &sp, device, Framework::Ours); // fill
+                    let hit = cache.get_or_compile(&net, &sp, device, Framework::Ours);
+                    assert_eq!(format!("{cold:?}"), format!("{hit:?}"));
+                }
+            }
+        }
+        assert_eq!(cache.hits(), cache.misses());
+    }
+
+    #[test]
+    fn cached_measure_bit_identical_to_uncached() {
+        let cache = PlanCache::default();
+        let net = zoo::mobilenet_v2();
+        let sp = sparsity(5.0);
+        let uncached = crate::compiler::measure(&net, &sp, &KRYO_485, Framework::Ours, 100);
+        let cold = cache.measure(&net, &sp, &KRYO_485, Framework::Ours, 100);
+        let hot = cache.measure(&net, &sp, &KRYO_485, Framework::Ours, 100);
+        assert_eq!(cache.hits(), 1);
+        for r in [&cold, &hot] {
+            assert_eq!(uncached.mean_ms, r.mean_ms);
+            assert_eq!(uncached.std_ms, r.std_ms);
+            assert_eq!(uncached.compute_ms, r.compute_ms);
+            assert_eq!(uncached.memory_ms, r.memory_ms);
+            assert_eq!(uncached.num_groups, r.num_groups);
+        }
+    }
+
+    #[test]
+    fn shared_across_map_parallel_workers() {
+        use crate::coordinator::scheduler::map_parallel;
+        let cache = PlanCache::default();
+        let net = zoo::single_conv(28, 3, 64, 64);
+        let rates: Vec<f32> = vec![2.0, 3.0, 2.0, 3.0, 2.0, 3.0, 2.0, 3.0, 5.0, 5.0, 5.0, 5.0];
+        let reference: Vec<f64> = rates
+            .iter()
+            .map(|&r| crate::compiler::measure(&net, &sparsity(r), &KRYO_485, Framework::Ours, 10).mean_ms)
+            .collect();
+        let cached: Vec<f64> = map_parallel(4, &rates, |&r| {
+            cache.measure(&net, &sparsity(r), &KRYO_485, Framework::Ours, 10).mean_ms
+        });
+        assert_eq!(cached, reference);
+        // 3 distinct workloads; every worker saw the shared counters.
+        // (Racing workers may each miss the same cold key — compilation runs
+        // outside the lock — so only the lower bound on misses is exact.)
+        assert_eq!(cache.hits() + cache.misses(), rates.len() as u64);
+        assert_eq!(cache.len(), 3);
+        assert!(cache.misses() >= 3, "at least one miss per distinct workload");
+    }
+}

@@ -46,6 +46,68 @@ impl Network {
         out
     }
 
+    /// Content fingerprint (FNV-1a over name, input shape and every layer's
+    /// definition and wiring) — the plan-cache identity of this network.
+    /// The name participates because the latency measurement's pseudo-noise
+    /// is seeded by it, so two same-shaped networks with different names are
+    /// distinct measurement workloads.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |b: u64| {
+            h ^= b;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for b in self.name.bytes() {
+            eat(b as u64);
+        }
+        eat(0xff); // name / body separator
+        let (ih, iw, ic) = self.input_hwc;
+        eat(ih as u64);
+        eat(iw as u64);
+        eat(ic as u64);
+        for l in &self.layers {
+            eat(l.id as u64);
+            match l.kind {
+                LayerKind::Conv2d { kh, kw, cin, cout, stride, depthwise } => {
+                    eat(1);
+                    eat(kh as u64);
+                    eat(kw as u64);
+                    eat(cin as u64);
+                    eat(cout as u64);
+                    eat(stride as u64);
+                    eat(depthwise as u64);
+                }
+                LayerKind::Linear { din, dout } => {
+                    eat(2);
+                    eat(din as u64);
+                    eat(dout as u64);
+                }
+                LayerKind::Pool { kind, size, stride } => {
+                    eat(3);
+                    eat(kind as u64);
+                    eat(size as u64);
+                    eat(stride as u64);
+                }
+                LayerKind::GlobalAvgPool => eat(4),
+                LayerKind::Act(a) => {
+                    eat(5);
+                    eat(a as u64);
+                }
+                LayerKind::Add => eat(6),
+                LayerKind::SqueezeExcite { c, reduced } => {
+                    eat(7);
+                    eat(c as u64);
+                    eat(reduced as u64);
+                }
+            }
+            for &src in &l.inputs {
+                eat(src as u64);
+            }
+            eat(0xfe); // layer separator
+        }
+        h
+    }
+
     /// Count of mobile-unfriendly activations (Phase 1 targets).
     pub fn unfriendly_ops(&self) -> usize {
         self.layers
@@ -117,6 +179,23 @@ mod tests {
         let cons = n.consumers();
         assert_eq!(cons[0], vec![1]);
         assert!(cons[3].is_empty());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = tiny();
+        assert_eq!(a.fingerprint(), tiny().fingerprint());
+        // name participates (it seeds the measurement noise)
+        let mut renamed = tiny();
+        renamed.name = "tiny2".to_string();
+        assert_ne!(a.fingerprint(), renamed.fingerprint());
+        // a one-enum structural change flips the hash
+        let mut b = NetworkBuilder::new("tiny", (8, 8, 3));
+        b.conv2d(3, 16, 1);
+        b.act(ActKind::Relu6);
+        b.global_avg_pool();
+        b.linear(10);
+        assert_ne!(a.fingerprint(), b.build().fingerprint());
     }
 
     #[test]

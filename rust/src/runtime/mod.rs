@@ -4,8 +4,15 @@
 //! that xla_extension 0.5.1 rejects; the text parser reassigns ids). One
 //! compiled executable per artifact, cached for the process lifetime;
 //! Python never runs here.
+//!
+//! The `xla` crate is not vendorable offline, so [`xla_stub`] supplies the
+//! same API surface with a client that fails loudly at load time; swap the
+//! `use` alias back to the real crate to run against actual PJRT.
 
 pub mod manifest;
+mod xla_stub;
+
+use xla_stub as xla;
 
 use std::collections::BTreeMap;
 use std::path::Path;

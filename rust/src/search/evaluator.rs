@@ -12,12 +12,15 @@
 //!   the compiler simulator on the deployment-scale network — the same path
 //!   the trained evaluator uses.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::compiler::{self, DeviceSpec, Framework, LayerSparsity, SparsityMap};
+use crate::compiler::{self, DeviceSpec, Framework, LayerSparsity, PlanCache, SparsityMap};
 use crate::graph::zoo::{self, CandidateBlock};
+use crate::graph::Network;
 use crate::pruning::{PruneRate, PruneScheme};
 use crate::runtime::Runtime;
 use crate::tensor::{Tensor, XorShift64Star};
@@ -38,12 +41,13 @@ impl Branch {
     }
 }
 
-/// Compile the scheme's deployment network and measure it on `device`
-/// (100-run protocol) — the candidate latency h of Eq. 1.
-pub fn measure_scheme(scheme: &NpasScheme, device: &DeviceSpec) -> f64 {
-    let blocks: Vec<CandidateBlock> =
-        scheme.choices.iter().map(|c| c.filter.to_candidate()).collect();
-    let (net, stage_layers) = zoo::npas_deploy_network_tagged("npas_candidate", &blocks);
+/// The per-layer sparsity annotations a scheme induces on its deployment
+/// network (shared by the cached and uncached measurement paths).
+fn scheme_sparsity(
+    net: &Network,
+    stage_layers: &[Vec<usize>],
+    scheme: &NpasScheme,
+) -> SparsityMap {
     let mut sp = SparsityMap::new();
     for (stage, ids) in stage_layers.iter().enumerate() {
         let c = scheme.choices[stage];
@@ -56,23 +60,50 @@ pub fn measure_scheme(scheme: &NpasScheme, device: &DeviceSpec) -> f64 {
             }
         }
     }
-    // FC head: block-based at the searched head rate
-    if let Some(fc) = net.layers.iter().rev().find(|l| l.prunable()) {
-        if !scheme.head_rate.is_dense() {
-            sp.insert(
-                fc.id,
-                LayerSparsity {
-                    scheme: PruneScheme::block_based_default(),
-                    rate: scheme.head_rate,
-                },
-            );
+    // FC head: block-based at the searched head rate. A stage annotation on
+    // the same layer wins — the same precedence `scheme_footprint` applies,
+    // so measured latency and reported params always describe one model.
+    if !scheme.head_rate.is_dense() {
+        if let Some(fc) = net.layers.iter().rev().find(|l| l.prunable()) {
+            sp.entry(fc.id).or_insert(LayerSparsity {
+                scheme: PruneScheme::block_based_default(),
+                rate: scheme.head_rate,
+            });
         }
     }
+    sp
+}
+
+/// Compile the scheme's deployment network and measure it on `device`
+/// (100-run protocol) — the candidate latency h of Eq. 1. This is the
+/// uncached reference path; the search loops go through
+/// [`measure_scheme_with`] and an [`EvalContext`] instead.
+pub fn measure_scheme(scheme: &NpasScheme, device: &DeviceSpec) -> f64 {
+    let blocks: Vec<CandidateBlock> =
+        scheme.choices.iter().map(|c| c.filter.to_candidate()).collect();
+    let (net, stage_layers) = zoo::npas_deploy_network_tagged("npas_candidate", &blocks);
+    let sp = scheme_sparsity(&net, &stage_layers, scheme);
     compiler::measure(&net, &sp, device, Framework::Ours, 100).mean_ms
 }
 
+/// Cached [`measure_scheme`]: the deployment graph comes from the context's
+/// structure cache (candidates sharing block choices reuse it and only swap
+/// the sparsity annotation) and the compiled plan from its [`PlanCache`].
+/// Bit-identical to the uncached path.
+pub fn measure_scheme_with(ctx: &EvalContext, scheme: &NpasScheme, device: &DeviceSpec) -> f64 {
+    let blocks: Vec<CandidateBlock> =
+        scheme.choices.iter().map(|c| c.filter.to_candidate()).collect();
+    let structure = ctx.deploy_structure(&blocks);
+    let (net, stage_layers) = (&structure.0, &structure.1);
+    let sp = scheme_sparsity(net, stage_layers, scheme);
+    let plan = ctx.plan_cache.get_or_compile(net, &sp, device, Framework::Ours);
+    compiler::measure_plan(&plan, device, 100).mean_ms
+}
+
 /// Deployment-scale params/MACs of a scheme (Table 2 columns). MACs are
-/// dense graph MACs; params account for pruning rates.
+/// dense graph MACs; params account for pruning rates, including the FC
+/// head's searched block-based rate (the same head `measure_scheme`
+/// compiles — it must not be reported dense).
 pub fn scheme_footprint(scheme: &NpasScheme) -> (u64, u64) {
     let blocks: Vec<CandidateBlock> =
         scheme.choices.iter().map(|c| c.filter.to_candidate()).collect();
@@ -82,6 +113,13 @@ pub fn scheme_footprint(scheme: &NpasScheme) -> (u64, u64) {
     for (stage, ids) in stage_layers.iter().enumerate() {
         for &id in ids {
             tagged[id] = Some(scheme.choices[stage].rate);
+        }
+    }
+    if !scheme.head_rate.is_dense() {
+        if let Some(fc) = net.layers.iter().rev().find(|l| l.prunable()) {
+            if tagged[fc.id].is_none() {
+                tagged[fc.id] = Some(scheme.head_rate);
+            }
         }
     }
     for l in &net.layers {
@@ -94,12 +132,125 @@ pub fn scheme_footprint(scheme: &NpasScheme) -> (u64, u64) {
     (params as u64, net.conv_macs())
 }
 
+// ---------------------------------------------------------------------------
+// Shared evaluation context (compile-once, evaluate-many)
+// ---------------------------------------------------------------------------
+
+/// Combined cache counters for an [`EvalContext`] (surfaced through
+/// `coordinator::Metrics` and the event log by the search phases).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalCacheStats {
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub plan_entries: usize,
+    pub structure_hits: u64,
+    pub structure_misses: u64,
+}
+
+impl EvalCacheStats {
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Shared, thread-safe candidate-evaluation state: a [`PlanCache`] that
+/// memoizes compiled execution plans, plus a structure-level cache of the
+/// tagged deployment graphs keyed by block choices — candidates that share
+/// filter types reuse the graph and only swap sparsity annotations. One
+/// context is shared across the whole search (and across `map_parallel`
+/// workers: everything inside is `Sync`).
+#[derive(Debug)]
+pub struct EvalContext {
+    pub plan_cache: PlanCache,
+    structures: Mutex<StructureInner>,
+    structure_hits: AtomicU64,
+    structure_misses: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct StructureInner {
+    map: HashMap<Vec<CandidateBlock>, Arc<(Network, Vec<Vec<usize>>)>>,
+    /// Insertion order for FIFO eviction, mirroring [`PlanCache`].
+    order: VecDeque<Vec<CandidateBlock>>,
+}
+
+impl EvalContext {
+    /// The block-choice space is |CandidateBlock|^stages, so a long-lived
+    /// shared context must not retain every distinct deployment graph;
+    /// structures are cheap to rebuild on a re-miss.
+    const STRUCTURE_CAPACITY: usize = 64;
+
+    pub fn new() -> Self {
+        EvalContext {
+            plan_cache: PlanCache::default(),
+            structures: Mutex::new(StructureInner::default()),
+            structure_hits: AtomicU64::new(0),
+            structure_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The tagged deployment network for a block-choice vector, built at
+    /// most once per distinct resident structure (FIFO-bounded).
+    pub fn deploy_structure(
+        &self,
+        blocks: &[CandidateBlock],
+    ) -> Arc<(Network, Vec<Vec<usize>>)> {
+        if let Some(s) = self.structures.lock().unwrap().map.get(blocks) {
+            self.structure_hits.fetch_add(1, Ordering::Relaxed);
+            return s.clone();
+        }
+        // build outside the lock; a racing duplicate keeps the first insert
+        let built = Arc::new(zoo::npas_deploy_network_tagged("npas_candidate", blocks));
+        self.structure_misses.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.structures.lock().unwrap();
+        if let Some(existing) = inner.map.get(blocks) {
+            return existing.clone();
+        }
+        if inner.map.len() >= Self::STRUCTURE_CAPACITY {
+            if let Some(old) = inner.order.pop_front() {
+                inner.map.remove(&old);
+            }
+        }
+        inner.map.insert(blocks.to_vec(), built.clone());
+        inner.order.push_back(blocks.to_vec());
+        built
+    }
+
+    pub fn stats(&self) -> EvalCacheStats {
+        let plan = self.plan_cache.stats();
+        EvalCacheStats {
+            plan_hits: plan.hits,
+            plan_misses: plan.misses,
+            plan_entries: plan.entries,
+            structure_hits: self.structure_hits.load(Ordering::Relaxed),
+            structure_misses: self.structure_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for EvalContext {
+    fn default() -> Self {
+        EvalContext::new()
+    }
+}
+
 pub trait Evaluator {
     fn evaluate(&self, scheme: &NpasScheme) -> EvalOutcome;
 
     /// Batch evaluation; implementations may parallelize.
     fn evaluate_batch(&self, schemes: &[NpasScheme]) -> Vec<EvalOutcome> {
         schemes.iter().map(|s| self.evaluate(s)).collect()
+    }
+
+    /// Cumulative cache counters for evaluators backed by an
+    /// [`EvalContext`]; `None` when the evaluator does not cache.
+    fn cache_stats(&self) -> Option<EvalCacheStats> {
+        None
     }
 
     fn name(&self) -> &'static str;
@@ -140,11 +291,24 @@ pub struct ProxyEvaluator {
     pub device: &'static DeviceSpec,
     pub base_accuracy: f32,
     pub workers: usize,
+    /// Shared compile-once state; `Arc` so batch workers and clones hit the
+    /// same caches.
+    ctx: Arc<EvalContext>,
 }
 
 impl ProxyEvaluator {
     pub fn new(device: &'static DeviceSpec) -> Self {
-        ProxyEvaluator { device, base_accuracy: 0.86, workers: 4 }
+        Self::with_context(device, Arc::new(EvalContext::new()))
+    }
+
+    /// Share an existing evaluation context (e.g. across latency targets or
+    /// with the pipeline's own measurements).
+    pub fn with_context(device: &'static DeviceSpec, ctx: Arc<EvalContext>) -> Self {
+        ProxyEvaluator { device, base_accuracy: 0.86, workers: 4, ctx }
+    }
+
+    pub fn context(&self) -> &EvalContext {
+        &self.ctx
     }
 
     fn capacity_penalty(branch: Branch) -> f64 {
@@ -181,12 +345,16 @@ impl Evaluator for ProxyEvaluator {
     fn evaluate(&self, scheme: &NpasScheme) -> EvalOutcome {
         EvalOutcome {
             accuracy: self.accuracy(scheme),
-            latency_ms: measure_scheme(scheme, self.device),
+            latency_ms: measure_scheme_with(&self.ctx, scheme, self.device),
         }
     }
 
     fn evaluate_batch(&self, schemes: &[NpasScheme]) -> Vec<EvalOutcome> {
         crate::coordinator::scheduler::map_parallel(self.workers, schemes, |s| self.evaluate(s))
+    }
+
+    fn cache_stats(&self) -> Option<EvalCacheStats> {
+        Some(self.ctx.stats())
     }
 
     fn name(&self) -> &'static str {
@@ -225,6 +393,7 @@ pub struct TrainedEvaluator<'rt> {
     /// Warm-started supernet weights (§5.2.3 weight initialization).
     pretrained: BTreeMap<String, Tensor>,
     pub cfg: TrainedEvalConfig,
+    ctx: Arc<EvalContext>,
 }
 
 impl<'rt> TrainedEvaluator<'rt> {
@@ -233,7 +402,14 @@ impl<'rt> TrainedEvaluator<'rt> {
         pretrained: BTreeMap<String, Tensor>,
         cfg: TrainedEvalConfig,
     ) -> Self {
-        TrainedEvaluator { rt, pretrained, cfg }
+        TrainedEvaluator { rt, pretrained, cfg, ctx: Arc::new(EvalContext::new()) }
+    }
+
+    /// Share an evaluation context with the rest of the pipeline (the plan
+    /// cache then carries over to the final report's measurements).
+    pub fn with_context(mut self, ctx: Arc<EvalContext>) -> Self {
+        self.ctx = ctx;
+        self
     }
 
     /// The per-tensor prune plan a scheme induces on the supernet.
@@ -284,7 +460,14 @@ impl<'rt> TrainedEvaluator<'rt> {
 impl Evaluator for TrainedEvaluator<'_> {
     fn evaluate(&self, scheme: &NpasScheme) -> EvalOutcome {
         let accuracy = self.fast_accuracy(scheme).expect("fast evaluation failed");
-        EvalOutcome { accuracy, latency_ms: measure_scheme(scheme, self.cfg.device) }
+        EvalOutcome {
+            accuracy,
+            latency_ms: measure_scheme_with(&self.ctx, scheme, self.cfg.device),
+        }
+    }
+
+    fn cache_stats(&self) -> Option<EvalCacheStats> {
+        Some(self.ctx.stats())
     }
 
     fn name(&self) -> &'static str {
@@ -354,6 +537,74 @@ mod tests {
         let ev = ProxyEvaluator::new(&KRYO_485);
         let s = scheme_with(5.0, PruneScheme::Pattern);
         assert_eq!(ev.evaluate(&s).accuracy, ev.evaluate(&s).accuracy);
+    }
+
+    #[test]
+    fn cached_measure_scheme_bit_identical() {
+        // property: for random schemes on both devices, the EvalContext path
+        // (structure cache + plan cache, cold and hot) returns exactly the
+        // uncached measurement.
+        let ctx = EvalContext::new();
+        let mut rng = XorShift64Star::new(11);
+        let acts = crate::search::space::layer_actions(Branch::Conv3x3);
+        for _ in 0..12 {
+            let scheme = NpasScheme {
+                choices: (0..5)
+                    .map(|_| acts[rng.next_range(acts.len() as u64) as usize])
+                    .collect(),
+                head_rate: PruneRate::new(PruneRate::SPACE[rng.next_range(7) as usize]),
+            };
+            for device in [&KRYO_485, &ADRENO_640] {
+                let uncached = measure_scheme(&scheme, device);
+                let cold = measure_scheme_with(&ctx, &scheme, device);
+                let hot = measure_scheme_with(&ctx, &scheme, device);
+                assert_eq!(uncached, cold, "cold cache path diverged");
+                assert_eq!(uncached, hot, "cache hit diverged");
+            }
+        }
+        let stats = ctx.stats();
+        assert!(stats.plan_hits >= 24, "every repeat measurement must hit: {stats:?}");
+        assert!(stats.structure_misses <= 12, "one structure build per distinct blocks");
+        assert!(stats.structure_hits > 0);
+    }
+
+    #[test]
+    fn batch_parallel_matches_sequential_through_shared_cache() {
+        let ev = ProxyEvaluator::new(&KRYO_485);
+        let schemes = vec![
+            NpasScheme::dense(5),
+            scheme_with(3.0, PruneScheme::block_punched_default()),
+            scheme_with(6.0, PruneScheme::Pattern),
+            scheme_with(3.0, PruneScheme::Filter),
+            NpasScheme::dense(5), // duplicate: must be a plan-cache hit
+            scheme_with(10.0, PruneScheme::block_punched_default()),
+        ];
+        let batch = ev.evaluate_batch(&schemes);
+        let sequential: Vec<EvalOutcome> = schemes.iter().map(|s| ev.evaluate(s)).collect();
+        assert_eq!(batch, sequential);
+        let stats = ev.cache_stats().expect("proxy evaluator caches");
+        // the sequential pass re-measures workloads the batch already
+        // compiled, so it is all hits; racing batch workers may each miss a
+        // cold key, bounded by the worker count.
+        assert!(stats.plan_hits >= 6, "sequential re-evaluation must hit: {stats:?}");
+        assert!(stats.structure_misses <= 4, "one shared structure, ≤1 miss per worker");
+    }
+
+    #[test]
+    fn footprint_counts_head_rate() {
+        let dense = NpasScheme::dense(5);
+        let (p_dense, m_dense) = scheme_footprint(&dense);
+        let mut headed = dense.clone();
+        headed.head_rate = PruneRate::new(10.0);
+        let (p_head, m_head) = scheme_footprint(&headed);
+        assert_eq!(m_dense, m_head); // masks do not change dense-graph MACs
+        // the deploy FC head is 1280x1000; 10x block-based pruning keeps 10%
+        let removed = (p_dense - p_head) as f64;
+        let expected = (1280 * 1000) as f64 * 0.9;
+        assert!(
+            (removed - expected).abs() / expected < 0.01,
+            "head params removed {removed} vs expected {expected}"
+        );
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod replay;
 pub mod reward;
 pub mod space;
 
-pub use evaluator::{Evaluator, ProxyEvaluator, TrainedEvaluator};
+pub use evaluator::{EvalCacheStats, EvalContext, Evaluator, ProxyEvaluator, TrainedEvaluator};
 pub use npas::{NpasConfig, NpasReport};
 pub use reward::{EvalOutcome, RewardConfig};
 pub use space::{LayerChoice, NpasScheme};

@@ -2,6 +2,8 @@
 //! Phase 1 op replacement → Phase 2 scheme search → Phase 3 pruning
 //! algorithm search → final model + compiled execution plan.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::compiler::device::{ADRENO_640, KRYO_485};
@@ -11,7 +13,8 @@ use crate::runtime::Runtime;
 use crate::train::{Branch, SgdConfig, Trainer};
 
 use super::evaluator::{
-    measure_scheme, scheme_footprint, Evaluator, TrainedEvalConfig, TrainedEvaluator,
+    measure_scheme_with, scheme_footprint, EvalCacheStats, EvalContext, Evaluator,
+    TrainedEvalConfig, TrainedEvaluator,
 };
 use super::phase1;
 use super::phase2::{self, Phase2Config, Phase2Report};
@@ -108,12 +111,16 @@ pub fn run(rt: &Runtime, cfg: &NpasConfig, log: &mut EventLog) -> Result<NpasRep
     ));
 
     // --- Phase 2 -----------------------------------------------------------
+    // one compile-once context for the whole pipeline: fast evaluations and
+    // the final report share the same plan cache
+    let ctx = Arc::new(EvalContext::new());
     let pretrained = tr.params.clone();
     let evaluator = TrainedEvaluator::new(
         rt,
         pretrained.clone(),
         TrainedEvalConfig { device: cfg.device, opt: cfg.opt.clone(), ..Default::default() },
-    );
+    )
+    .with_context(ctx.clone());
     let mut agent =
         QAgent::new(&vec![Branch::Conv3x3; tr.blocks()], QConfig::default(), cfg.seed);
     let p2 = phase2::run(&mut agent, &evaluator, &cfg.phase2, &mut metrics, log);
@@ -121,6 +128,7 @@ pub fn run(rt: &Runtime, cfg: &NpasConfig, log: &mut EventLog) -> Result<NpasRep
         "phase2: best reward {:.3} (acc {:.3}, {:.2}ms) after {} evals",
         p2.best_reward, p2.best_outcome.accuracy, p2.best_outcome.latency_ms, p2.evaluations
     ));
+    log.log_note(&cache_note(&ctx.stats()));
 
     // --- Phase 3 -----------------------------------------------------------
     let scheme = p2.best_scheme.clone();
@@ -138,8 +146,8 @@ pub fn run(rt: &Runtime, cfg: &NpasConfig, log: &mut EventLog) -> Result<NpasRep
     let (params, conv_macs) = scheme_footprint(&scheme);
     let report = NpasReport {
         final_accuracy: p3.final_accuracy,
-        latency_cpu_ms: measure_scheme(&scheme, &KRYO_485),
-        latency_gpu_ms: measure_scheme(&scheme, &ADRENO_640),
+        latency_cpu_ms: measure_scheme_with(&ctx, &scheme, &KRYO_485),
+        latency_gpu_ms: measure_scheme_with(&ctx, &scheme, &ADRENO_640),
         params,
         conv_macs,
         phase1: p1,
@@ -152,6 +160,19 @@ pub fn run(rt: &Runtime, cfg: &NpasConfig, log: &mut EventLog) -> Result<NpasRep
     Ok(report)
 }
 
+fn cache_note(stats: &EvalCacheStats) -> String {
+    format!(
+        "plan cache: {} hits / {} misses ({:.0}% hit rate, {} plans resident); \
+         structure cache: {} hits / {} misses",
+        stats.plan_hits,
+        stats.plan_misses,
+        stats.plan_hit_rate() * 100.0,
+        stats.plan_entries,
+        stats.structure_hits,
+        stats.structure_misses,
+    )
+}
+
 /// Proxy-evaluator variant of the pipeline (no artifact runtime needed):
 /// used by the bench harness to regenerate Table 2 rows in seconds. Phases
 /// 1/3 are represented by their calibrated effects; Phase 2 runs for real.
@@ -159,6 +180,9 @@ pub fn run_proxy(evaluator: &dyn Evaluator, cfg: &NpasConfig, log: &mut EventLog
     let mut metrics = Metrics::new();
     let mut agent = QAgent::new(&vec![Branch::Conv3x3; 5], QConfig::default(), cfg.seed);
     let p2 = phase2::run(&mut agent, evaluator, &cfg.phase2, &mut metrics, log);
+    if let Some(stats) = evaluator.cache_stats() {
+        log.log_note(&cache_note(&stats));
+    }
     let scheme = p2.best_scheme.clone();
     (p2, scheme)
 }

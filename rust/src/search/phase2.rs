@@ -56,6 +56,9 @@ pub fn run(
     let mut best: Option<(NpasScheme, EvalOutcome, f64)> = None;
     let mut history = Vec::new();
     let mut pool_generated = 0;
+    // cache counters are cumulative over the evaluator's lifetime; snapshot
+    // them so a shared EvalContext is not double-counted across runs
+    let cache_before = evaluator.cache_stats().unwrap_or_default();
 
     for round in 0..cfg.rounds {
         let _t = metrics.time("phase2.time");
@@ -90,6 +93,23 @@ pub fn run(
         }
         gp.fit();
         agent.decay_epsilon();
+    }
+
+    // surface this run's share of the compile-once cache counters
+    if let Some(stats) = evaluator.cache_stats() {
+        metrics.incr("plan_cache.hits", stats.plan_hits.saturating_sub(cache_before.plan_hits));
+        metrics.incr(
+            "plan_cache.misses",
+            stats.plan_misses.saturating_sub(cache_before.plan_misses),
+        );
+        metrics.incr(
+            "structure_cache.hits",
+            stats.structure_hits.saturating_sub(cache_before.structure_hits),
+        );
+        metrics.incr(
+            "structure_cache.misses",
+            stats.structure_misses.saturating_sub(cache_before.structure_misses),
+        );
     }
 
     let (best_scheme, best_outcome, best_reward) =
@@ -149,6 +169,32 @@ mod tests {
             with >= without - 0.15,
             "BO {with:.3} vs none {without:.3} (sum over {} seeds)",
             seeds.len()
+        );
+    }
+
+    #[test]
+    fn cache_metrics_report_per_run_deltas() {
+        // two runs sharing one evaluator (and thus one EvalContext): the
+        // Metrics totals must equal the lifetime counters, not double-count
+        // the first run's share.
+        let ev = ProxyEvaluator::new(&ADRENO_640);
+        let mut cfg = Phase2Config::small(RewardConfig::new(7.0, 0.05, 5));
+        cfg.rounds = 2;
+        let metrics = Metrics::new();
+        let mut log = EventLog::memory();
+        let mut agent = QAgent::new(&[Branch::Conv3x3; 5], QConfig::default(), 3);
+        run(&mut agent, &ev, &cfg, &metrics, &mut log);
+        let mut agent2 = QAgent::new(&[Branch::Conv3x3; 5], QConfig::default(), 4);
+        run(&mut agent2, &ev, &cfg, &metrics, &mut log);
+        let stats = ev.cache_stats().unwrap();
+        assert_eq!(
+            metrics.count("plan_cache.hits") + metrics.count("plan_cache.misses"),
+            stats.plan_hits + stats.plan_misses,
+            "shared-context counters double-counted"
+        );
+        assert_eq!(
+            metrics.count("structure_cache.hits") + metrics.count("structure_cache.misses"),
+            stats.structure_hits + stats.structure_misses,
         );
     }
 

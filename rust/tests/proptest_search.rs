@@ -3,12 +3,12 @@
 //! offline): action-space validity, WL-kernel PSD-ness, GP sanity,
 //! scheduler exactness, reward monotonicity.
 
-use npas::compiler::device::KRYO_485;
+use npas::compiler::device::{ADRENO_640, KRYO_485};
 use npas::coordinator::scheduler::map_parallel;
 use npas::pruning::{PruneRate, PruneScheme};
 use npas::search::bo::gp::Gp;
 use npas::search::bo::wl_kernel::{wl_features, wl_kernel_normalized};
-use npas::search::evaluator::{measure_scheme, ProxyEvaluator};
+use npas::search::evaluator::{measure_scheme, measure_scheme_with, EvalContext, ProxyEvaluator};
 use npas::search::qlearning::{QAgent, QConfig};
 use npas::search::reward::{EvalOutcome, RewardConfig};
 use npas::search::space::{layer_actions, NpasScheme};
@@ -166,6 +166,30 @@ fn prop_proxy_monotone_in_rate() {
         prev_acc = acc;
         prev_lat = lat;
     }
+}
+
+/// The compile-once cache is transparent: for arbitrary schemes, devices
+/// and repetition patterns — including concurrent access from map_parallel
+/// workers — the cached measurement equals the uncached one bit-for-bit.
+#[test]
+fn prop_cached_evaluation_transparent() {
+    let mut rng = XorShift64Star::new(4242);
+    let ctx = EvalContext::new();
+    let mut schemes: Vec<NpasScheme> = (0..10).map(|_| random_scheme(&mut rng)).collect();
+    // duplicates force plan-cache hits on first contact
+    schemes.push(schemes[0].clone());
+    schemes.push(schemes[3].clone());
+    for device in [&KRYO_485, &ADRENO_640] {
+        let uncached: Vec<f64> = schemes.iter().map(|s| measure_scheme(s, device)).collect();
+        let cached: Vec<f64> = map_parallel(4, &schemes, |s| measure_scheme_with(&ctx, s, device));
+        assert_eq!(uncached, cached, "{}", device.name);
+        // a second (fully warm) pass must also agree
+        let warm: Vec<f64> =
+            schemes.iter().map(|s| measure_scheme_with(&ctx, s, device)).collect();
+        assert_eq!(uncached, warm, "{}", device.name);
+    }
+    let stats = ctx.stats();
+    assert!(stats.plan_hits >= 2 * schemes.len() as u64, "warm passes must hit: {stats:?}");
 }
 
 /// Scheme fingerprints rarely collide across random schemes.
