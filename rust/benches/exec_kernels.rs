@@ -1,0 +1,70 @@
+//! Executor kernel microbench: wall-clock for each compiled-kernel path on
+//! one conv workload, plus packed block-sparse GEMM across pruning rates.
+//!
+//! This is the measured counterpart of the roofline model's ordering
+//! claims (Fig. 3): Winograd < im2col on dense 3x3, and block-sparse GEMM
+//! time falls as the pruning rate rises. The assertions living in CI are in
+//! `tests/exec_parity.rs`; this binary prints the numbers.
+//!
+//! Run: `cargo bench --bench exec_kernels`
+
+use npas::bench::{quick, Table};
+use npas::pruning::packing::{DEFAULT_PACK_COLS, DEFAULT_PACK_ROWS};
+use npas::pruning::{apply_mask, generate_mask, BlockCsr, PruneRate, PruneScheme};
+use npas::tensor::{Tensor, XorShift64Star};
+
+fn main() {
+    let mut rng = XorShift64Star::new(5);
+    let (hw, cin, cout) = (32usize, 64usize, 64usize);
+    let x = Tensor::he_normal(vec![hw, hw, cin], &mut rng);
+    let w = Tensor::he_normal(vec![3, 3, cin, cout], &mut rng);
+    let w2 = w.clone().reshape(vec![9 * cin, cout]);
+    let dense_macs = (hw * hw * 9 * cin * cout) as f64;
+
+    println!("== dense 3x3 conv {hw}x{hw}x{cin} -> {cout} ({:.0}M MACs) ==", dense_macs / 1e6);
+    let direct = quick("conv2d_direct", || {
+        std::hint::black_box(x.conv2d_direct(&w, 1));
+    });
+    let patches = x.im2col(3, 3, 1);
+    let im2col = quick("im2col + GEMM", || {
+        std::hint::black_box(x.im2col(3, 3, 1).matmul(&w2));
+    });
+    let wino = quick("winograd F(2x2,3x3)", || {
+        std::hint::black_box(npas::compiler::winograd::winograd_conv2d(&x, &w));
+    });
+    println!(
+        "   winograd/im2col speedup: {:.2}x (theoretical multiply ratio 2.25x); \
+         direct-loop baseline {:.2}ms\n",
+        im2col.mean.as_secs_f64() / wino.mean.as_secs_f64().max(1e-12),
+        direct.mean_ms()
+    );
+
+    println!("== packed block-sparse GEMM vs pruning rate ==");
+    let table = Table::new(
+        &["rate", "blocks kept", "time", "speedup vs dense"],
+        &[8, 16, 14, 20],
+    );
+    let dense_t = quick("dense GEMM (reference)", || {
+        std::hint::black_box(patches.matmul(&w2));
+    });
+    for rate in [2.0f32, 3.0, 5.0, 10.0] {
+        let mut wm = w.clone();
+        let mask =
+            generate_mask(&wm, PruneScheme::block_punched_default(), PruneRate::new(rate));
+        apply_mask(&mut wm, &mask);
+        let packed = BlockCsr::pack(
+            &wm.clone().reshape(vec![9 * cin, cout]),
+            DEFAULT_PACK_ROWS,
+            DEFAULT_PACK_COLS,
+        );
+        let m = quick(&format!("block-sparse GEMM {rate}x"), || {
+            std::hint::black_box(packed.matmul(&patches));
+        });
+        table.row(&[
+            format!("{rate}x"),
+            format!("{}/{}", packed.nnz_blocks(), packed.total_blocks()),
+            format!("{:.2}ms", m.mean_ms()),
+            format!("{:.2}x", dense_t.mean.as_secs_f64() / m.mean.as_secs_f64().max(1e-12)),
+        ]);
+    }
+}

@@ -1,0 +1,679 @@
+//! Executable kernel backend: run a compiled [`ExecutionPlan`] on real
+//! tensors.
+//!
+//! The rest of the `compiler` module *models* execution (algorithm choice,
+//! roofline timing); this module *performs* it on the host CPU, so every
+//! pruning scheme and every [`Algo`] the search explores can be
+//! differentially tested against a naive dense reference
+//! ([`run_dense_reference`]). Dispatch follows the plan exactly:
+//!
+//! * [`Algo::Winograd`] → `winograd::winograd_conv2d` (F(2x2,3x3));
+//! * [`Algo::Gemm1x1`] / [`Algo::GemmIm2col`] → im2col + GEMM, or packed
+//!   block-CSR GEMM ([`BlockCsr`]) when the layer carries a non-dense
+//!   sparsity annotation and the framework executes sparse models;
+//! * [`Algo::Depthwise`] → direct per-channel convolution;
+//! * [`Algo::Gemv`] → dense FC GEMV (masked weights stay dense storage —
+//!   FC packing is modeled but not a latency win at these sizes);
+//! * [`Algo::Memory`] → elementwise / pooling / squeeze-excite glue.
+//!
+//! Numerics: every GEMM-family path accumulates in the same ascending
+//! reduction order as the dense reference, so parity holds to float
+//! round-off (1e-4 relative in the differential suite). Winograd reorders
+//! the summation through the tile transforms and gets a documented looser
+//! bound. Squeeze-excite is executed as GAP → FC(reduce) → ReLU →
+//! FC(expand) → hard-sigmoid gate (the MobileNet-V3 convention the IR
+//! summarizes as one op).
+
+use std::collections::BTreeMap;
+
+use crate::graph::{ActKind, Layer, LayerKind, Network, PoolKind};
+use crate::pruning::packing::{DEFAULT_PACK_COLS, DEFAULT_PACK_ROWS};
+use crate::pruning::{apply_mask, generate_mask, BlockCsr, PruneScheme};
+use crate::tensor::{same_pad, Tensor, XorShift64Star};
+
+use super::codegen::{Algo, ExecutionPlan};
+use super::sparse_exec::LayerSparsity;
+use super::winograd;
+use super::SparsityMap;
+
+/// Per-layer weight tensors in the artifact ABI shapes.
+#[derive(Debug, Clone)]
+pub enum LayerWeights {
+    /// `(kh, kw, cin, cout)`
+    Conv(Tensor),
+    /// `(kh, kw, c)`
+    Depthwise(Tensor),
+    /// `(din, dout)`
+    Linear(Tensor),
+    /// `(c, reduced)` and `(reduced, c)` FCs of the SE block.
+    SqueezeExcite { reduce: Tensor, expand: Tensor },
+}
+
+impl LayerWeights {
+    pub fn role(&self) -> &'static str {
+        match self {
+            LayerWeights::Conv(_) => "conv",
+            LayerWeights::Depthwise(_) => "depthwise",
+            LayerWeights::Linear(_) => "linear",
+            LayerWeights::SqueezeExcite { .. } => "squeeze_excite",
+        }
+    }
+}
+
+/// The weight bundle a plan executes with: one entry per weighted layer.
+#[derive(Debug, Clone, Default)]
+pub struct WeightSet {
+    tensors: BTreeMap<usize, LayerWeights>,
+}
+
+impl WeightSet {
+    pub fn new() -> WeightSet {
+        WeightSet { tensors: BTreeMap::new() }
+    }
+
+    /// He-normal random weights for every weighted layer of `net`
+    /// (deterministic in `seed`; draws are sequential in layer order).
+    pub fn random(net: &Network, seed: u64) -> WeightSet {
+        let mut rng = XorShift64Star::new(seed);
+        let mut tensors = BTreeMap::new();
+        for l in &net.layers {
+            let lw = match l.kind {
+                LayerKind::Conv2d { kh, kw, cin, cout, depthwise, .. } => {
+                    if depthwise {
+                        Some(LayerWeights::Depthwise(Tensor::he_normal(
+                            vec![kh, kw, cout],
+                            &mut rng,
+                        )))
+                    } else {
+                        Some(LayerWeights::Conv(Tensor::he_normal(
+                            vec![kh, kw, cin, cout],
+                            &mut rng,
+                        )))
+                    }
+                }
+                LayerKind::Linear { din, dout } => {
+                    Some(LayerWeights::Linear(Tensor::he_normal(vec![din, dout], &mut rng)))
+                }
+                LayerKind::SqueezeExcite { c, reduced } => Some(LayerWeights::SqueezeExcite {
+                    reduce: Tensor::he_normal(vec![c, reduced], &mut rng),
+                    expand: Tensor::he_normal(vec![reduced, c], &mut rng),
+                }),
+                _ => None,
+            };
+            if let Some(lw) = lw {
+                tensors.insert(l.id, lw);
+            }
+        }
+        WeightSet { tensors }
+    }
+
+    pub fn get(&self, id: usize) -> Option<&LayerWeights> {
+        self.tensors.get(&id)
+    }
+
+    pub fn insert(&mut self, id: usize, w: LayerWeights) {
+        self.tensors.insert(id, w);
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&usize, &LayerWeights)> {
+        self.tensors.iter()
+    }
+
+    /// Generate + apply the magnitude mask for every annotated layer whose
+    /// weight shape supports the scheme. Both the executor and the dense
+    /// reference run on the *same* masked weights, so parity is exactly
+    /// "compiled plan vs dense reference with the mask applied".
+    pub fn apply_sparsity(&mut self, sparsity: &SparsityMap) {
+        for (&id, sp) in sparsity {
+            if sp.is_dense() {
+                continue;
+            }
+            if let Some(lw) = self.tensors.get_mut(&id) {
+                let t = match lw {
+                    LayerWeights::Conv(t)
+                    | LayerWeights::Depthwise(t)
+                    | LayerWeights::Linear(t) => t,
+                    LayerWeights::SqueezeExcite { .. } => continue, // not prunable
+                };
+                if !mask_supported(sp.scheme, t.dims()) {
+                    continue;
+                }
+                let m = generate_mask(t, sp.scheme, sp.rate);
+                apply_mask(t, &m);
+            }
+        }
+    }
+}
+
+/// Can `generate_mask` produce a mask for a weight of this shape?
+/// (patterns are 3x3 full-conv only; everything else is shape-generic.)
+pub fn mask_supported(scheme: PruneScheme, dims: &[usize]) -> bool {
+    match scheme {
+        PruneScheme::Pattern => dims.len() == 4 && dims[0] == 3 && dims[1] == 3,
+        _ => (2..=4).contains(&dims.len()),
+    }
+}
+
+/// Annotate every layer of `net` where `scheme` can actually generate a
+/// mask, at one shared `rate` — the uniform-sparsity workload the
+/// differential suite sweeps.
+pub fn uniform_sparsity(net: &Network, scheme: PruneScheme, rate: f32) -> SparsityMap {
+    let mut map = SparsityMap::new();
+    if rate <= 1.0 {
+        return map;
+    }
+    for l in &net.layers {
+        let ok = match l.kind {
+            LayerKind::Conv2d { kh, kw, depthwise, .. } => {
+                scheme.applicable_to_kernel(kh, kw)
+                    && !(matches!(scheme, PruneScheme::Pattern) && depthwise)
+            }
+            LayerKind::Linear { .. } => !matches!(scheme, PruneScheme::Pattern),
+            _ => false,
+        };
+        if ok {
+            map.insert(l.id, LayerSparsity::new(scheme, rate));
+        }
+    }
+    map
+}
+
+fn producer<'a>(outs: &'a [Option<Tensor>], layer: &Layer, input: &'a Tensor) -> &'a Tensor {
+    match layer.inputs.first() {
+        Some(&src) => outs[src].as_ref().expect("producer executed before consumer"),
+        None => input,
+    }
+}
+
+fn conv_weight<'a>(weights: &'a WeightSet, id: usize, depthwise: bool) -> &'a Tensor {
+    match weights.get(id) {
+        Some(LayerWeights::Conv(t)) if !depthwise => t,
+        Some(LayerWeights::Depthwise(t)) if depthwise => t,
+        other => panic!(
+            "layer {id}: missing or mismatched conv weights (got {:?})",
+            other.map(|w| w.role())
+        ),
+    }
+}
+
+fn linear_forward(x: &Tensor, w: &Tensor) -> Tensor {
+    let (din, dout) = (w.dims()[0], w.dims()[1]);
+    assert_eq!(x.numel(), din, "fc input {} vs weight din {din}", x.numel());
+    x.clone().reshape(vec![1, din]).matmul(w).reshape(vec![1, 1, dout])
+}
+
+fn apply_act(x: &Tensor, kind: ActKind) -> Tensor {
+    let f = |v: f32| -> f32 {
+        match kind {
+            ActKind::Relu => v.max(0.0),
+            ActKind::Relu6 => v.clamp(0.0, 6.0),
+            ActKind::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+            ActKind::Swish => v / (1.0 + (-v).exp()),
+            ActKind::HardSigmoid => ((v + 3.0) / 6.0).clamp(0.0, 1.0),
+            ActKind::HardSwish => v * ((v + 3.0) / 6.0).clamp(0.0, 1.0),
+        }
+    };
+    Tensor::new(x.dims().to_vec(), x.data().iter().map(|&v| f(v)).collect())
+}
+
+fn squeeze_excite(x: &Tensor, reduce: &Tensor, expand: &Tensor) -> Tensor {
+    let c = x.dims()[2];
+    assert_eq!(reduce.dims()[0], c, "SE reduce shape");
+    let s = x.global_avg_pool().reshape(vec![1, c]);
+    let h = apply_act(&s.matmul(reduce), ActKind::Relu);
+    let gate = apply_act(&h.matmul(expand), ActKind::HardSigmoid);
+    let g = gate.data();
+    let mut out = x.data().to_vec();
+    for row in out.chunks_mut(c) {
+        for (o, &gv) in row.iter_mut().zip(g) {
+            *o *= gv;
+        }
+    }
+    Tensor::new(x.dims().to_vec(), out)
+}
+
+/// Memory-bound glue shared verbatim by the plan executor and the dense
+/// reference (so parity differences can only come from compute kernels).
+fn glue_layer(
+    layer: &Layer,
+    x: &Tensor,
+    outs: &[Option<Tensor>],
+    weights: &WeightSet,
+) -> Tensor {
+    match layer.kind {
+        LayerKind::Act(kind) => apply_act(x, kind),
+        LayerKind::Pool { kind, size, stride } => match kind {
+            PoolKind::Max => x.maxpool2d(size, stride),
+            PoolKind::Avg => x.avgpool2d(size, stride),
+        },
+        LayerKind::GlobalAvgPool => x.global_avg_pool(),
+        LayerKind::Add => {
+            let skip =
+                outs[layer.inputs[1]].as_ref().expect("skip producer executed before Add");
+            x.add(skip)
+        }
+        LayerKind::SqueezeExcite { .. } => match weights.get(layer.id) {
+            Some(LayerWeights::SqueezeExcite { reduce, expand }) => {
+                squeeze_excite(x, reduce, expand)
+            }
+            other => panic!(
+                "layer {}: missing SE weights (got {:?})",
+                layer.id,
+                other.map(|w| w.role())
+            ),
+        },
+        LayerKind::Conv2d { .. } | LayerKind::Linear { .. } => {
+            unreachable!("glue_layer called on compute layer {}", layer.id)
+        }
+    }
+}
+
+fn check_shape(layer: &Layer, y: &Tensor) {
+    let (oh, ow, oc) = layer.out_hwc();
+    debug_assert_eq!(
+        y.dims(),
+        &[oh, ow, oc][..],
+        "layer {} ({}) produced wrong shape",
+        layer.id,
+        layer.name
+    );
+}
+
+/// Packing geometry aligned to an annotation's zero structure, so punched /
+/// block-based cells map onto whole CSR blocks and get skipped wholesale:
+/// block-punched blocks put `bc` channels on rows and `bf` filters on
+/// columns of the im2col view; block-based blocks are `(brows, bcols)`
+/// there directly. Element-level schemes (unstructured / pattern / filter)
+/// have no block alignment to exploit and use the default geometry.
+fn pack_geometry(scheme: PruneScheme) -> (usize, usize) {
+    match scheme {
+        PruneScheme::BlockPunched { bf, bc } => (bc.max(1), bf.max(1)),
+        PruneScheme::BlockBased { brows, bcols } => (brows.max(1), bcols.max(1)),
+        _ => (DEFAULT_PACK_ROWS, DEFAULT_PACK_COLS),
+    }
+}
+
+/// A compiled plan bound to weights, with per-layer kernel state prepared
+/// **once**: packed block-CSR matrices for every sparse GEMM layer and
+/// Winograd-domain kernel transforms for every Winograd group. Repeated
+/// [`Executor::run`] calls pay only the kernel time, not the preparation.
+pub struct Executor<'a> {
+    net: &'a Network,
+    plan: &'a ExecutionPlan,
+    weights: &'a WeightSet,
+    packed: BTreeMap<usize, BlockCsr>,
+    wino: BTreeMap<usize, winograd::WinogradKernel>,
+}
+
+impl<'a> Executor<'a> {
+    /// Bind a plan to weights. `sparsity` must be the map the plan was
+    /// compiled with; annotated GEMM layers are packed here (block geometry
+    /// follows the annotation's scheme) when the framework executes sparse
+    /// models, and Winograd kernels are pre-transformed. `weights` should
+    /// already be masked ([`WeightSet::apply_sparsity`]).
+    pub fn new(
+        net: &'a Network,
+        plan: &'a ExecutionPlan,
+        sparsity: &SparsityMap,
+        weights: &'a WeightSet,
+    ) -> Executor<'a> {
+        assert_eq!(plan.network, net.name, "plan was compiled for a different network");
+        let sparse_exec = plan.framework.caps().sparse;
+        let mut packed = BTreeMap::new();
+        let mut wino = BTreeMap::new();
+        for g in &plan.groups {
+            if !matches!(g.algo, Algo::Winograd | Algo::Gemm1x1 | Algo::GemmIm2col) {
+                continue;
+            }
+            for &id in &g.layer_ids {
+                let LayerKind::Conv2d { kh, kw, cin, cout, depthwise, .. } =
+                    net.layers[id].kind
+                else {
+                    continue;
+                };
+                if depthwise {
+                    continue;
+                }
+                let w = conv_weight(weights, id, false);
+                if g.algo == Algo::Winograd {
+                    wino.insert(id, winograd::transform_kernel(w));
+                    continue;
+                }
+                if !sparse_exec {
+                    continue;
+                }
+                let Some(sp) = sparsity.get(&id) else { continue };
+                if sp.is_dense() {
+                    continue;
+                }
+                let w2 = w.clone().reshape(vec![kh * kw * cin, cout]);
+                let (br, bc) = pack_geometry(sp.scheme);
+                packed.insert(id, BlockCsr::pack(&w2, br, bc));
+            }
+        }
+        Executor { net, plan, weights, packed, wino }
+    }
+
+    /// Run one inference end-to-end on `input` (`(h, w, c)` matching the
+    /// network input); returns the final layer's output tensor.
+    pub fn run(&self, input: &Tensor) -> Tensor {
+        let net = self.net;
+        let weights = self.weights;
+        let (ih, iw, ic) = net.input_hwc;
+        assert_eq!(input.dims(), &[ih, iw, ic][..], "input shape mismatch");
+
+        let mut outs: Vec<Option<Tensor>> = vec![None; net.layers.len()];
+        for g in &self.plan.groups {
+            for &id in &g.layer_ids {
+                let layer = &net.layers[id];
+                let y = match layer.kind {
+                    LayerKind::Conv2d { kh, kw, cin, cout, stride, depthwise } => {
+                        let x = producer(&outs, layer, input);
+                        let w = conv_weight(weights, id, depthwise);
+                        if depthwise {
+                            x.conv2d_depthwise(w, stride)
+                        } else {
+                            match g.algo {
+                                Algo::Winograd => match self.wino.get(&id) {
+                                    Some(k) => winograd::winograd_conv2d_prepared(x, k),
+                                    None => winograd::winograd_conv2d(x, w),
+                                },
+                                Algo::Gemm1x1 | Algo::GemmIm2col => {
+                                    // 1x1 stride-1 skips im2col: the patch
+                                    // matrix is the feature map itself
+                                    let patches = if kh == 1 && kw == 1 && stride == 1 {
+                                        let (xh, xw, _) = layer.in_hwc;
+                                        x.clone().reshape(vec![xh * xw, cin])
+                                    } else {
+                                        x.im2col(kh, kw, stride)
+                                    };
+                                    let flat = match self.packed.get(&id) {
+                                        Some(csr) => csr.matmul(&patches),
+                                        None => {
+                                            let w2 = w
+                                                .clone()
+                                                .reshape(vec![kh * kw * cin, cout]);
+                                            patches.matmul(&w2)
+                                        }
+                                    };
+                                    let (oh, _) = same_pad(layer.in_hwc.0, kh, stride);
+                                    let (ow, _) = same_pad(layer.in_hwc.1, kw, stride);
+                                    flat.reshape(vec![oh, ow, cout])
+                                }
+                                // a conv anchored in a non-conv group (foreign
+                                // framework quirks): fall back to direct
+                                _ => x.conv2d_direct(w, stride),
+                            }
+                        }
+                    }
+                    LayerKind::Linear { .. } => {
+                        let x = producer(&outs, layer, input);
+                        match weights.get(id) {
+                            Some(LayerWeights::Linear(w)) => linear_forward(x, w),
+                            other => panic!(
+                                "layer {id}: missing FC weights (got {:?})",
+                                other.map(|w| w.role())
+                            ),
+                        }
+                    }
+                    _ => {
+                        let x = producer(&outs, layer, input);
+                        glue_layer(layer, x, &outs, weights)
+                    }
+                };
+                check_shape(layer, &y);
+                outs[id] = Some(y);
+            }
+        }
+        outs.last_mut().and_then(|o| o.take()).expect("empty network")
+    }
+}
+
+/// One-shot convenience: bind ([`Executor::new`]) and [`Executor::run`]
+/// once. Callers executing the same plan repeatedly should hold an
+/// [`Executor`] to amortize the block-CSR packing.
+pub fn execute_plan(
+    net: &Network,
+    plan: &ExecutionPlan,
+    sparsity: &SparsityMap,
+    weights: &WeightSet,
+    input: &Tensor,
+) -> Tensor {
+    Executor::new(net, plan, sparsity, weights).run(input)
+}
+
+/// Naive dense per-layer reference: direct convolution / dense GEMV for
+/// every compute layer, the shared glue for everything else. This is the
+/// ground truth the compiled plans are differentially tested against.
+pub fn run_dense_reference(net: &Network, weights: &WeightSet, input: &Tensor) -> Tensor {
+    let (ih, iw, ic) = net.input_hwc;
+    assert_eq!(input.dims(), &[ih, iw, ic][..], "input shape mismatch");
+    let mut outs: Vec<Option<Tensor>> = vec![None; net.layers.len()];
+    for layer in &net.layers {
+        let y = match layer.kind {
+            LayerKind::Conv2d { stride, depthwise, .. } => {
+                let x = producer(&outs, layer, input);
+                let w = conv_weight(weights, layer.id, depthwise);
+                if depthwise {
+                    x.conv2d_depthwise(w, stride)
+                } else {
+                    x.conv2d_direct(w, stride)
+                }
+            }
+            LayerKind::Linear { .. } => {
+                let x = producer(&outs, layer, input);
+                match weights.get(layer.id) {
+                    Some(LayerWeights::Linear(w)) => linear_forward(x, w),
+                    other => panic!(
+                        "layer {}: missing FC weights (got {:?})",
+                        layer.id,
+                        other.map(|w| w.role())
+                    ),
+                }
+            }
+            _ => {
+                let x = producer(&outs, layer, input);
+                glue_layer(layer, x, &outs, weights)
+            }
+        };
+        check_shape(layer, &y);
+        outs[layer.id] = Some(y);
+    }
+    outs.last_mut().and_then(|o| o.take()).expect("empty network")
+}
+
+/// Largest elementwise |a - b| (diagnostic for the differential tests).
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.dims(), b.dims(), "max_abs_diff shape mismatch");
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::codegen::compile;
+    use crate::compiler::device::KRYO_485;
+    use crate::compiler::Framework;
+    use crate::graph::zoo;
+    use crate::graph::{ActKind, NetworkBuilder};
+
+    fn parity(
+        net: &Network,
+        sparsity: &SparsityMap,
+        fw: Framework,
+        rtol: f32,
+    ) -> (Tensor, Tensor) {
+        let plan = compile(net, sparsity, &KRYO_485, fw);
+        let mut weights = WeightSet::random(net, 99);
+        weights.apply_sparsity(sparsity);
+        let mut rng = XorShift64Star::new(7);
+        let (h, w, c) = net.input_hwc;
+        let input = Tensor::he_normal(vec![h, w, c], &mut rng);
+        let got = execute_plan(net, &plan, sparsity, &weights, &input);
+        let want = run_dense_reference(net, &weights, &input);
+        let scale = want.abs_max().max(1e-3);
+        let diff = max_abs_diff(&got, &want);
+        assert!(
+            diff <= rtol * scale,
+            "{}: diff {diff} > {rtol} * {scale}",
+            net.name
+        );
+        (got, want)
+    }
+
+    #[test]
+    fn winograd_plan_matches_reference() {
+        let net = zoo::single_conv(10, 3, 6, 8);
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        assert_eq!(plan.groups[0].algo, Algo::Winograd);
+        parity(&net, &SparsityMap::new(), Framework::Ours, 1e-3);
+        // the executor pre-transforms winograd kernels at bind time
+        let weights = WeightSet::random(&net, 1);
+        let exec = Executor::new(&net, &plan, &SparsityMap::new(), &weights);
+        assert_eq!(exec.wino.len(), 1);
+        assert!(exec.packed.is_empty());
+    }
+
+    #[test]
+    fn gemm_plans_match_reference_tightly() {
+        for &(k, cin, cout) in &[(1usize, 8usize, 6usize), (5, 4, 4)] {
+            let net = zoo::single_conv(9, k, cin, cout);
+            parity(&net, &SparsityMap::new(), Framework::Ours, 1e-5);
+        }
+        // 3x3 without winograd support goes down the im2col path
+        let net = zoo::single_conv(9, 3, 5, 7);
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::TFLite);
+        assert_eq!(plan.groups[0].algo, Algo::GemmIm2col);
+        parity(&net, &SparsityMap::new(), Framework::TFLite, 1e-5);
+    }
+
+    #[test]
+    fn sparse_packed_conv_matches_masked_reference() {
+        let net = zoo::single_conv(8, 3, 16, 16);
+        let sp = uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0);
+        assert!(!sp.is_empty());
+        let plan = compile(&net, &sp, &KRYO_485, Framework::Ours);
+        assert_eq!(plan.groups[0].algo, Algo::GemmIm2col); // no sparse winograd
+        parity(&net, &sp, Framework::Ours, 1e-5);
+    }
+
+    #[test]
+    fn nondefault_block_geometry_still_parity() {
+        // packing follows the annotation's (bf, bc), not the default 8x4
+        let net = zoo::single_conv(8, 3, 8, 8);
+        let mut sp = SparsityMap::new();
+        sp.insert(0, LayerSparsity::new(PruneScheme::BlockPunched { bf: 4, bc: 2 }, 5.0));
+        parity(&net, &sp, Framework::Ours, 1e-5);
+        assert_eq!(pack_geometry(PruneScheme::BlockPunched { bf: 4, bc: 2 }), (2, 4));
+        assert_eq!(
+            pack_geometry(PruneScheme::BlockBased { brows: 16, bcols: 4 }),
+            (16, 4)
+        );
+        assert_eq!(
+            pack_geometry(PruneScheme::Unstructured),
+            (DEFAULT_PACK_ROWS, DEFAULT_PACK_COLS)
+        );
+    }
+
+    #[test]
+    fn executor_reuse_amortizes_packing() {
+        let net = zoo::single_conv(8, 3, 16, 16);
+        let sp = uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0);
+        let plan = compile(&net, &sp, &KRYO_485, Framework::Ours);
+        let mut weights = WeightSet::random(&net, 3);
+        weights.apply_sparsity(&sp);
+        let exec = Executor::new(&net, &plan, &sp, &weights);
+        assert_eq!(exec.packed.len(), 1, "the annotated conv must be packed once");
+        let mut rng = XorShift64Star::new(4);
+        let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
+        let a = exec.run(&x);
+        let b = exec.run(&x);
+        assert_eq!(a, b, "repeated runs must be bit-identical");
+        assert_eq!(a, execute_plan(&net, &plan, &sp, &weights, &x));
+    }
+
+    #[test]
+    fn glue_heavy_network_parity_is_exact() {
+        // depthwise + SE + pool + residual add + GAP + FC, no winograd
+        let mut b = NetworkBuilder::new("glue", (12, 12, 8));
+        b.conv2d(1, 8, 1);
+        b.act(ActKind::HardSwish);
+        let skip = b.head().unwrap();
+        b.depthwise(3, 1);
+        b.act(ActKind::Relu6);
+        b.squeeze_excite(4);
+        b.conv2d(1, 8, 1);
+        b.add_from(skip);
+        b.pool(crate::graph::PoolKind::Max, 2, 2);
+        b.conv2d(3, 12, 2);
+        b.act(ActKind::Swish);
+        b.global_avg_pool();
+        b.linear(5);
+        let net = b.build();
+        parity(&net, &SparsityMap::new(), Framework::TFLite, 1e-6);
+        // and through our framework (winograd-capable) with a loose bound
+        parity(&net, &SparsityMap::new(), Framework::Ours, 1e-3);
+    }
+
+    #[test]
+    fn output_is_finite_and_shaped() {
+        let net = zoo::single_conv(6, 3, 3, 4);
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        let weights = WeightSet::random(&net, 1);
+        let mut rng = XorShift64Star::new(2);
+        let input = Tensor::he_normal(vec![6, 6, 3], &mut rng);
+        let out = execute_plan(&net, &plan, &SparsityMap::new(), &weights, &input);
+        assert_eq!(out.dims(), &[6, 6, 4]);
+        assert!(out.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn weightset_random_is_deterministic() {
+        let net = zoo::single_conv(6, 3, 4, 4);
+        let a = WeightSet::random(&net, 7);
+        let b = WeightSet::random(&net, 7);
+        for ((ia, wa), (ib, wb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ia, ib);
+            match (wa, wb) {
+                (LayerWeights::Conv(x), LayerWeights::Conv(y)) => assert_eq!(x, y),
+                _ => panic!("unexpected weight roles"),
+            }
+        }
+        let c = WeightSet::random(&net, 8);
+        let (wa, wc) = (a.get(0).unwrap(), c.get(0).unwrap());
+        match (wa, wc) {
+            (LayerWeights::Conv(x), LayerWeights::Conv(y)) => assert_ne!(x, y),
+            _ => panic!("unexpected weight roles"),
+        }
+    }
+
+    #[test]
+    fn uniform_sparsity_respects_applicability() {
+        // pattern never lands on depthwise or FC layers
+        let net = zoo::mobilenet_v1();
+        let sp = uniform_sparsity(&net, PruneScheme::Pattern, 2.25);
+        for (&id, _) in &sp {
+            match net.layers[id].kind {
+                LayerKind::Conv2d { kh, kw, depthwise, .. } => {
+                    assert_eq!((kh, kw), (3, 3));
+                    assert!(!depthwise, "pattern annotated a depthwise layer");
+                }
+                _ => panic!("pattern annotated non-conv layer {id}"),
+            }
+        }
+        // dense rate annotates nothing
+        assert!(uniform_sparsity(&net, PruneScheme::Filter, 1.0).is_empty());
+    }
+}

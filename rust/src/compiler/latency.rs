@@ -68,8 +68,10 @@ pub fn measure(
 /// "Measure" an already-compiled plan with the same 100-run protocol as
 /// [`measure`]. A [`super::PlanCache`] hit comes straight here and skips
 /// codegen entirely; the pseudo-noise seed depends only on the plan's
-/// identity (network name, device, framework), so cached and uncached
-/// reports are bit-identical.
+/// identity (network name, device, framework, and the plan's sparsity
+/// fingerprint — per-group `eff_macs`), so cached and uncached reports are
+/// bit-identical while distinct pruning schemes on the same network do not
+/// share a noise stream.
 pub fn measure_plan(plan: &ExecutionPlan, device: &DeviceSpec, runs: usize) -> LatencyReport {
     assert!(
         plan.framework.caps().gpu || !device.is_gpu,
@@ -84,6 +86,11 @@ pub fn measure_plan(plan: &ExecutionPlan, device: &DeviceSpec, runs: usize) -> L
         seed = seed.wrapping_mul(31).wrapping_add(b as u64);
     }
     seed ^= (device.is_gpu as u64) << 60 ^ (plan.framework as u64) << 50;
+    // sparsity fingerprint: two schemes shrinking the same network
+    // differently are different workloads and must jitter independently
+    for g in &plan.groups {
+        seed = seed.wrapping_mul(0x100000001b3) ^ g.eff_macs.to_bits();
+    }
     let mut rng = XorShift64Star::new(seed);
     let mut samples = Vec::with_capacity(runs.max(1));
     for _ in 0..runs.max(1) {
@@ -158,6 +165,36 @@ mod tests {
         assert_eq!(a.memory_ms, b.memory_ms);
         assert_eq!(a.overhead_ms, b.overhead_ms);
         assert_eq!(a.num_groups, b.num_groups);
+    }
+
+    #[test]
+    fn jitter_decorrelates_across_sparsity() {
+        use crate::compiler::codegen::{Algo, FusedGroup};
+        // same network name / device / framework, different sparsity
+        // (eff_macs) => the noise streams must differ. Compare the
+        // mean/base ratio, which depends only on the jitter sequence.
+        let mk = |eff: f64| ExecutionPlan {
+            network: "same-net".to_string(),
+            device: KRYO_485.name,
+            framework: Framework::Ours,
+            groups: vec![FusedGroup {
+                layer_ids: vec![0],
+                algo: Algo::GemmIm2col,
+                macs: 1e9,
+                eff_macs: eff,
+                utilization: 0.5,
+                bytes: 1e6,
+            }],
+        };
+        let ratio = |p: &ExecutionPlan| {
+            let r = measure_plan(p, &KRYO_485, 100);
+            r.mean_ms / (r.compute_ms + r.memory_ms + r.overhead_ms)
+        };
+        let dense = ratio(&mk(1e9));
+        let pruned = ratio(&mk(2e8));
+        assert_ne!(dense, pruned, "distinct schemes share a jitter stream");
+        // while the same plan stays bit-identical
+        assert_eq!(ratio(&mk(2e8)), pruned);
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //!   auto-tuning → [`sparse_exec`] sparsity-aware utilization →
 //!   [`latency`] roofline timing + measurement protocol (100-run average).
 //!
+//! [`executor`] closes the loop: it *runs* a compiled plan on real tensors
+//! with host-CPU implementations of each emitted kernel, so the plans the
+//! search ranks are differentially testable against a dense reference.
+//!
 //! Everything the paper's §4 observations rely on is mechanistic here:
 //! Winograd exists only for dense 3×3, 1×1 skips im2col, unstructured
 //! sparsity pays index overhead and loses vectorization, small blocks
@@ -19,6 +23,7 @@
 
 pub mod codegen;
 pub mod device;
+pub mod executor;
 pub mod frameworks;
 pub mod fusion;
 pub mod latency;
@@ -29,6 +34,10 @@ pub mod winograd;
 
 pub use codegen::{Algo, ExecutionPlan, FusedGroup};
 pub use device::DeviceSpec;
+pub use executor::{
+    execute_plan, max_abs_diff, run_dense_reference, uniform_sparsity, Executor, LayerWeights,
+    WeightSet,
+};
 pub use frameworks::Framework;
 pub use latency::{measure, measure_plan, LatencyReport};
 pub use plan_cache::{PlanCache, PlanCacheStats};

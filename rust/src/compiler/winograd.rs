@@ -117,6 +117,138 @@ pub fn winograd_conv2d_single(x: &Tensor, k: &Tensor) -> Tensor {
     out
 }
 
+/// Hoisted F(2x2,3x3) kernel transforms: one 4x4 `U = G g G^T` per
+/// `(cout, cin)` pair, laid out cout-major. Weights are transformed once
+/// per model ([`transform_kernel`]); every inference then reuses the table
+/// ([`winograd_conv2d_prepared`]) — this is the per-layer state a real code
+/// generator would bake into the emitted kernel.
+#[derive(Debug, Clone)]
+pub struct WinogradKernel {
+    u: Vec<f32>,
+    cin: usize,
+    cout: usize,
+}
+
+/// Transform a `(3,3,cin,cout)` weight into its Winograd-domain table.
+pub fn transform_kernel(weight: &Tensor) -> WinogradKernel {
+    let wd = weight.dims();
+    assert_eq!(wd.len(), 4, "winograd weight must be (3,3,cin,cout), got {wd:?}");
+    assert_eq!((wd[0], wd[1]), (3, 3), "winograd is 3x3-only");
+    let (cin, cout) = (wd[2], wd[3]);
+    let wdat = weight.data();
+    let mut u = vec![0f32; cout * cin * 16];
+    for co in 0..cout {
+        for ci in 0..cin {
+            let mut g = [[0f32; 3]; 3];
+            for ki in 0..3 {
+                for kj in 0..3 {
+                    g[ki][kj] = wdat[((ki * 3 + kj) * cin + ci) * cout + co];
+                }
+            }
+            let gg = matmul4::<4, 3, 3>(&G, &g);
+            let ut = matmul4::<4, 3, 4>(&gg, &transpose(&G));
+            let dst = &mut u[(co * cin + ci) * 16..][..16];
+            for i in 0..4 {
+                for j in 0..4 {
+                    dst[i * 4 + j] = ut[i][j];
+                }
+            }
+        }
+    }
+    WinogradKernel { u, cin, cout }
+}
+
+/// Multi-channel F(2x2,3x3) Winograd convolution: `(h,w,cin) *
+/// (3,3,cin,cout) -> (h,w,cout)`, stride 1, SAME padding — the kernel the
+/// executable backend dispatches for [`super::codegen::Algo::Winograd`]
+/// groups. One-shot convenience over [`transform_kernel`] +
+/// [`winograd_conv2d_prepared`].
+///
+/// Per tile the input transform `V = B^T d B` is computed once per input
+/// channel and the 16-wide elementwise multiply-accumulate runs over
+/// channels. The float summation order differs from direct convolution, so
+/// differential tests give Winograd groups a documented looser tolerance.
+pub fn winograd_conv2d(x: &Tensor, weight: &Tensor) -> Tensor {
+    winograd_conv2d_prepared(x, &transform_kernel(weight))
+}
+
+/// The tile loop of [`winograd_conv2d`] against a pre-transformed kernel.
+pub fn winograd_conv2d_prepared(x: &Tensor, kernel: &WinogradKernel) -> Tensor {
+    let d = x.dims();
+    assert_eq!(d.len(), 3, "winograd input must be (h,w,c), got {d:?}");
+    let (h, w, cin) = (d[0], d[1], d[2]);
+    let (u, cout) = (&kernel.u, kernel.cout);
+    assert_eq!(kernel.cin, cin, "winograd channel mismatch");
+    // SAME, stride 1: oh == h, pad 1 each side
+    let (oh, pt) = crate::tensor::same_pad(h, 3, 1);
+    let (ow, pl) = crate::tensor::same_pad(w, 3, 1);
+
+    let xdat = x.data();
+    let mut out = vec![0f32; oh * ow * cout];
+    let mut v = vec![0f32; cin * 16];
+    let mut ti = 0;
+    while ti < oh {
+        let mut tj = 0;
+        while tj < ow {
+            // input transform per channel for this 4x4 tile
+            for ci in 0..cin {
+                let mut dt = [[0f32; 4]; 4];
+                for i in 0..4 {
+                    let iy = (ti + i) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for j in 0..4 {
+                        let ix = (tj + j) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        dt[i][j] = xdat[(iy as usize * w + ix as usize) * cin + ci];
+                    }
+                }
+                let vt = matmul4::<4, 4, 4>(&BT, &dt);
+                let vt = matmul4::<4, 4, 4>(&vt, &transpose(&BT));
+                let dst = &mut v[ci * 16..][..16];
+                for i in 0..4 {
+                    for j in 0..4 {
+                        dst[i * 4 + j] = vt[i][j];
+                    }
+                }
+            }
+            // elementwise accumulate + inverse transform per output channel
+            for co in 0..cout {
+                let mut m = [0f32; 16];
+                let ub = &u[co * cin * 16..][..cin * 16];
+                for ci in 0..cin {
+                    let uc = &ub[ci * 16..][..16];
+                    let vc = &v[ci * 16..][..16];
+                    for t in 0..16 {
+                        m[t] += uc[t] * vc[t];
+                    }
+                }
+                let mm = [
+                    [m[0], m[1], m[2], m[3]],
+                    [m[4], m[5], m[6], m[7]],
+                    [m[8], m[9], m[10], m[11]],
+                    [m[12], m[13], m[14], m[15]],
+                ];
+                let y = matmul4::<2, 4, 4>(&AT, &mm);
+                let y = matmul4::<2, 4, 2>(&y, &transpose(&AT));
+                for i in 0..2 {
+                    for j in 0..2 {
+                        if ti + i < oh && tj + j < ow {
+                            out[((ti + i) * ow + (tj + j)) * cout + co] = y[i][j];
+                        }
+                    }
+                }
+            }
+            tj += 2;
+        }
+        ti += 2;
+    }
+    Tensor::new(vec![oh, ow, cout], out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +306,39 @@ mod tests {
                     wino.get(&[oi, oj])
                 );
             }
+        }
+    }
+
+    #[test]
+    fn multichannel_matches_direct_conv() {
+        let mut rng = XorShift64Star::new(41);
+        for &(hw, cin, cout) in &[(6usize, 3usize, 4usize), (9, 5, 7), (4, 1, 1)] {
+            let x = Tensor::he_normal(vec![hw, hw, cin], &mut rng);
+            let w = Tensor::he_normal(vec![3, 3, cin, cout], &mut rng);
+            let wino = winograd_conv2d(&x, &w);
+            let direct = x.conv2d_direct(&w, 1);
+            assert_eq!(wino.dims(), direct.dims());
+            let scale = direct.abs_max().max(1e-3);
+            for (a, b) in wino.data().iter().zip(direct.data()) {
+                assert!(
+                    (a - b).abs() < 1e-3 * scale,
+                    "hw={hw} cin={cin}: {a} vs {b} (scale {scale})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multichannel_odd_sizes_edge_tiles() {
+        // odd output sizes exercise the partial last tile row/col
+        let mut rng = XorShift64Star::new(43);
+        let x = Tensor::he_normal(vec![5, 7, 2], &mut rng);
+        let w = Tensor::he_normal(vec![3, 3, 2, 3], &mut rng);
+        let wino = winograd_conv2d(&x, &w);
+        let direct = x.conv2d_direct(&w, 1);
+        let scale = direct.abs_max().max(1e-3);
+        for (a, b) in wino.data().iter().zip(direct.data()) {
+            assert!((a - b).abs() < 1e-3 * scale, "{a} vs {b}");
         }
     }
 

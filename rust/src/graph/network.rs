@@ -108,6 +108,27 @@ impl Network {
         h
     }
 
+    /// The same topology at a different input resolution: every layer's
+    /// spatial shape is re-propagated from a `(hw, hw, c)` input while
+    /// channel structure (and therefore weights) stays identical. This is
+    /// how the executable backend's differential tests run full zoo
+    /// topologies at tractable sizes. The name gains an `@{hw}` suffix so
+    /// the rescaled network is a distinct measurement workload.
+    pub fn rescaled(&self, hw: usize) -> Network {
+        assert!(hw > 0, "rescaled needs a positive resolution");
+        let mut net = self.clone();
+        net.name = format!("{}@{hw}", self.name);
+        net.input_hwc = (hw, hw, self.input_hwc.2);
+        for i in 0..net.layers.len() {
+            net.layers[i].in_hwc = match net.layers[i].inputs.first() {
+                Some(&src) => net.layers[src].out_hwc(),
+                None => net.input_hwc,
+            };
+        }
+        debug_assert_eq!(net.validate(), Ok(()));
+        net
+    }
+
     /// Count of mobile-unfriendly activations (Phase 1 targets).
     pub fn unfriendly_ops(&self) -> usize {
         self.layers
@@ -122,6 +143,16 @@ impl Network {
         for (i, l) in self.layers.iter().enumerate() {
             if l.id != i {
                 return Err(format!("layer {} has id {}", i, l.id));
+            }
+            if let LayerKind::Linear { din, .. } = l.kind {
+                let (h, w, c) = l.in_hwc;
+                if h * w * c != din {
+                    return Err(format!(
+                        "layer {i} ({}): Linear din {din} != input numel {}",
+                        l.name,
+                        h * w * c
+                    ));
+                }
             }
             for &src in &l.inputs {
                 if src >= i {
@@ -196,6 +227,39 @@ mod tests {
         b.global_avg_pool();
         b.linear(10);
         assert_ne!(a.fingerprint(), b.build().fingerprint());
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_linear() {
+        let mut n = tiny();
+        // corrupt the FC's declared width: validate must catch the drift
+        // (this is what keeps Network::rescaled honest for FC layers)
+        if let LayerKind::Linear { din, .. } = &mut n.layers[3].kind {
+            *din = 999;
+        }
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn rescaled_preserves_structure() {
+        for net in [
+            crate::graph::zoo::mobilenet_v2(),
+            crate::graph::zoo::resnet50(),
+            crate::graph::zoo::mobilenet_v3(),
+        ] {
+            let small = net.rescaled(32);
+            assert!(small.validate().is_ok(), "{}", small.name);
+            assert_eq!(small.layers.len(), net.layers.len());
+            assert_eq!(small.input_hwc, (32, 32, 3));
+            assert_eq!(small.total_params(), net.total_params(), "channels must not change");
+            assert!(small.total_macs() < net.total_macs() / 10);
+            assert_ne!(small.fingerprint(), net.fingerprint());
+            // per-layer channel structure identical
+            for (a, b) in small.layers.iter().zip(&net.layers) {
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.in_hwc.2, b.in_hwc.2);
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! Layering:
 //! * [`tensor`]/[`graph`] — host math + DNN IR substrates.
 //! * [`pruning`] — fine-grained structured pruning schemes + algorithms.
-//! * [`compiler`] — the mobile compiler simulator ("on-device" latency).
+//! * [`compiler`] — the mobile compiler simulator ("on-device" latency)
+//!   plus the executable kernel backend (`compiler::executor`).
 //! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts.
 //! * [`train`] — SynthVision data + training/eval driver.
 //! * [`search`] — Q-learning + Bayesian-optimization NPAS pipeline.

@@ -14,9 +14,11 @@ pub mod admm;
 pub mod geometric_median;
 pub mod group_lasso;
 pub mod mask;
+pub mod packing;
 pub mod pattern;
 pub mod scheme;
 
 pub use admm::AdmmState;
-pub use mask::generate_mask;
+pub use mask::{apply_mask, generate_mask};
+pub use packing::BlockCsr;
 pub use scheme::{PruneRate, PruneScheme};

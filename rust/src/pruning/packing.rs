@@ -1,0 +1,242 @@
+//! Block-CSR weight packing — the compact storage the compiler's
+//! block-punched code generation emits (paper §3: blocks over the
+//! (filters x channels) grid keep index overhead at one entry per block
+//! instead of one per weight).
+//!
+//! A masked 2-D weight matrix (for convolutions: the im2col view
+//! `(kh*kw*cin, cout)`) is tiled into `br x bc` blocks; blocks that are
+//! entirely zero are dropped, surviving blocks are stored dense with their
+//! block-column index. [`BlockCsr::matmul`] then skips dropped blocks
+//! wholesale — the mechanism behind the sparse speedups of Fig. 3(b) — while
+//! accumulating surviving terms in the same ascending-`k` order as the dense
+//! GEMM, so packed and dense execution agree to float round-off.
+
+use crate::tensor::Tensor;
+
+/// Default packing geometry, aligned with the default block-punched scheme:
+/// block rows cover [`super::scheme::DEFAULT_BLOCK_CHANNELS`] input
+/// channels, block cols cover [`super::scheme::DEFAULT_BLOCK_FILTERS`]
+/// output filters — so punched blocks map exactly onto dropped CSR blocks.
+pub const DEFAULT_PACK_ROWS: usize = super::scheme::DEFAULT_BLOCK_CHANNELS;
+pub const DEFAULT_PACK_COLS: usize = super::scheme::DEFAULT_BLOCK_FILTERS;
+
+/// A 2-D matrix stored as dense `br x bc` blocks in CSR-of-blocks layout.
+#[derive(Debug, Clone)]
+pub struct BlockCsr {
+    rows: usize,
+    cols: usize,
+    br: usize,
+    bc: usize,
+    /// Per block-row: index range into `col_blocks`/`blocks`.
+    row_ptr: Vec<usize>,
+    /// Block-column index of each stored block.
+    col_blocks: Vec<usize>,
+    /// Stored blocks, `br * bc` values each (zero-padded at ragged edges).
+    blocks: Vec<f32>,
+}
+
+impl BlockCsr {
+    /// Pack a 2-D (masked) weight matrix; blocks that are all-zero are
+    /// dropped.
+    pub fn pack(w: &Tensor, br: usize, bc: usize) -> BlockCsr {
+        let d = w.dims();
+        assert_eq!(d.len(), 2, "BlockCsr packs 2-D matrices, got {d:?}");
+        assert!(br > 0 && bc > 0, "zero block size");
+        let (rows, cols) = (d[0], d[1]);
+        let data = w.data();
+        let nbr = rows.div_ceil(br);
+        let nbc = cols.div_ceil(bc);
+        let mut row_ptr = Vec::with_capacity(nbr + 1);
+        let mut col_blocks = Vec::new();
+        let mut blocks = Vec::new();
+        row_ptr.push(0);
+        for rb in 0..nbr {
+            let r0 = rb * br;
+            let r1 = (r0 + br).min(rows);
+            for cb in 0..nbc {
+                let c0 = cb * bc;
+                let c1 = (c0 + bc).min(cols);
+                let mut any = false;
+                'scan: for r in r0..r1 {
+                    for v in &data[r * cols + c0..r * cols + c1] {
+                        if *v != 0.0 {
+                            any = true;
+                            break 'scan;
+                        }
+                    }
+                }
+                if !any {
+                    continue;
+                }
+                let base = blocks.len();
+                blocks.resize(base + br * bc, 0.0);
+                for r in r0..r1 {
+                    let src = &data[r * cols + c0..r * cols + c1];
+                    let dst = &mut blocks[base + (r - r0) * bc..base + (r - r0) * bc + (c1 - c0)];
+                    dst.copy_from_slice(src);
+                }
+                col_blocks.push(cb);
+            }
+            row_ptr.push(col_blocks.len());
+        }
+        BlockCsr { rows, cols, br, bc, row_ptr, col_blocks, blocks }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn block_dims(&self) -> (usize, usize) {
+        (self.br, self.bc)
+    }
+
+    /// Stored (surviving) block count.
+    pub fn nnz_blocks(&self) -> usize {
+        self.col_blocks.len()
+    }
+
+    /// Total block count of the dense tiling.
+    pub fn total_blocks(&self) -> usize {
+        self.rows.div_ceil(self.br) * self.cols.div_ceil(self.bc)
+    }
+
+    /// Fraction of blocks stored (1.0 = dense).
+    pub fn block_density(&self) -> f64 {
+        if self.total_blocks() == 0 {
+            return 0.0;
+        }
+        self.nnz_blocks() as f64 / self.total_blocks() as f64
+    }
+
+    /// Reconstruct the dense matrix — exact round-trip of the packed input.
+    pub fn unpack(&self) -> Tensor {
+        let mut out = vec![0f32; self.rows * self.cols];
+        for rb in 0..self.row_ptr.len() - 1 {
+            let r0 = rb * self.br;
+            let r1 = (r0 + self.br).min(self.rows);
+            for idx in self.row_ptr[rb]..self.row_ptr[rb + 1] {
+                let cb = self.col_blocks[idx];
+                let c0 = cb * self.bc;
+                let c1 = (c0 + self.bc).min(self.cols);
+                let base = idx * self.br * self.bc;
+                for r in r0..r1 {
+                    let src = &self.blocks[base + (r - r0) * self.bc..][..c1 - c0];
+                    out[r * self.cols + c0..r * self.cols + c1].copy_from_slice(src);
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// Sparse GEMM: `x (M, K=rows) x self (rows, cols) -> (M, cols)`,
+    /// skipping dropped blocks. Accumulation order per output element is
+    /// ascending `k`, matching [`Tensor::matmul`] on the unpacked matrix.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        let d = x.dims();
+        assert_eq!(d.len(), 2, "BlockCsr::matmul lhs must be 2-D, got {d:?}");
+        let (m, k) = (d[0], d[1]);
+        assert_eq!(k, self.rows, "inner dims {k} vs {}", self.rows);
+        let xd = x.data();
+        let n = self.cols;
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let xrow = &xd[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for rb in 0..self.row_ptr.len() - 1 {
+                let r0 = rb * self.br;
+                let r1 = (r0 + self.br).min(self.rows);
+                for idx in self.row_ptr[rb]..self.row_ptr[rb + 1] {
+                    let cb = self.col_blocks[idx];
+                    let c0 = cb * self.bc;
+                    let c1 = (c0 + self.bc).min(self.cols);
+                    let base = idx * self.br * self.bc;
+                    for r in r0..r1 {
+                        let av = xrow[r];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &self.blocks[base + (r - r0) * self.bc..][..c1 - c0];
+                        let dst = &mut orow[c0..c1];
+                        for (o, &wv) in dst.iter_mut().zip(brow) {
+                            *o += av * wv;
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::{apply_mask, generate_mask, PruneRate, PruneScheme};
+    use crate::tensor::XorShift64Star;
+
+    fn masked(rows: usize, cols: usize, rate: f32, seed: u64) -> Tensor {
+        let mut rng = XorShift64Star::new(seed);
+        let mut w = Tensor::he_normal(vec![rows, cols], &mut rng);
+        let m = generate_mask(&w, PruneScheme::block_punched_default(), PruneRate::new(rate));
+        apply_mask(&mut w, &m);
+        w
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let w = masked(32, 24, 4.0, 1);
+        for &(br, bc) in &[(4usize, 8usize), (3, 5), (1, 1), (32, 24), (7, 7)] {
+            let packed = BlockCsr::pack(&w, br, bc);
+            let back = packed.unpack();
+            assert_eq!(back.dims(), w.dims());
+            assert_eq!(back.data(), w.data(), "br={br} bc={bc}");
+        }
+    }
+
+    #[test]
+    fn aligned_blocks_drop_with_sparsity() {
+        // a 4-D conv weight under default block-punched pruning zeroes whole
+        // (position, cin-block, cout-block) cells; in the im2col view those
+        // are exactly the default packing blocks, so 5x pruning keeps
+        // ~kept_of(9)/9 of the blocks
+        let mut rng = XorShift64Star::new(2);
+        let mut w = Tensor::he_normal(vec![3, 3, 16, 32], &mut rng);
+        let m = generate_mask(&w, PruneScheme::block_punched_default(), PruneRate::new(5.0));
+        apply_mask(&mut w, &m);
+        let w2 = w.reshape(vec![9 * 16, 32]);
+        let packed = BlockCsr::pack(&w2, DEFAULT_PACK_ROWS, DEFAULT_PACK_COLS);
+        let expect = PruneRate::new(5.0).kept_of(9) as f64 / 9.0;
+        assert!(
+            (packed.block_density() - expect).abs() < 0.01,
+            "density {:.3} vs structural {expect:.3}",
+            packed.block_density()
+        );
+        let dense = BlockCsr::pack(&w2, 9 * 16, 32);
+        assert_eq!(dense.nnz_blocks(), 1);
+    }
+
+    #[test]
+    fn sparse_matmul_matches_dense() {
+        let mut rng = XorShift64Star::new(3);
+        let w = masked(36, 20, 3.0, 4);
+        let x = Tensor::he_normal(vec![7, 36], &mut rng);
+        let want = x.matmul(&w);
+        for &(br, bc) in &[(4usize, 8usize), (5, 3), (1, 1)] {
+            let got = BlockCsr::pack(&w, br, bc).matmul(&x);
+            assert_eq!(got.dims(), want.dims());
+            for (a, b) in got.data().iter().zip(want.data()) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "br={br}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_matrix_stores_nothing() {
+        let z = Tensor::zeros(vec![16, 16]);
+        let packed = BlockCsr::pack(&z, 4, 4);
+        assert_eq!(packed.nnz_blocks(), 0);
+        assert_eq!(packed.unpack().data(), z.data());
+        let x = Tensor::ones(vec![2, 16]);
+        assert_eq!(packed.matmul(&x).data(), &vec![0f32; 32][..]);
+    }
+}

@@ -1,0 +1,507 @@
+//! Runnable plan bundles — the executor-backend counterpart of the PJRT
+//! artifact manifest.
+//!
+//! A [`PlanBundle`] is a network (IR), its per-layer sparsity annotations
+//! and a [`WeightSet`], serialized to one JSON file. Unlike the HLO
+//! artifacts (which need the unvendorable `xla` crate), a bundle is
+//! *actually runnable* in this offline build: loading compiles the network
+//! through `compiler::codegen` and executes it with `compiler::executor`,
+//! so the manifest load → execute path is exercised in CI without any
+//! `make artifacts` step. The same loud-failure philosophy as
+//! [`super::manifest`] applies: shape or role drift fails at load, not as
+//! numerical garbage.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::{
+    execute_plan, run_dense_reference, DeviceSpec, Framework, LayerWeights, SparsityMap,
+    WeightSet,
+};
+use crate::graph::{ActKind, Layer, LayerKind, Network, PoolKind};
+use crate::pruning::PruneScheme;
+use crate::tensor::Tensor;
+use crate::util::Json;
+
+/// A network + sparsity + weights bundle the executor backend can run.
+#[derive(Debug, Clone)]
+pub struct PlanBundle {
+    pub network: Network,
+    pub sparsity: SparsityMap,
+    pub weights: WeightSet,
+}
+
+impl PlanBundle {
+    pub fn new(network: Network, sparsity: SparsityMap, weights: WeightSet) -> PlanBundle {
+        PlanBundle { network, sparsity, weights }
+    }
+
+    /// Compile for `(device, framework)` and execute on `input`.
+    ///
+    /// Convenience path: it recompiles and re-prepares kernel state on
+    /// every call. Hot loops should compile once (optionally through
+    /// `compiler::PlanCache`) and hold a `compiler::Executor` instead.
+    pub fn execute(&self, device: &DeviceSpec, framework: Framework, input: &Tensor) -> Tensor {
+        let plan = crate::compiler::codegen::compile(&self.network, &self.sparsity, device, framework);
+        execute_plan(&self.network, &plan, &self.sparsity, &self.weights, input)
+    }
+
+    /// The naive dense reference on the same weights (differential anchor).
+    pub fn execute_reference(&self, input: &Tensor) -> Tensor {
+        run_dense_reference(&self.network, &self.weights, input)
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating bundle dir {dir:?}"))?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing bundle {path:?}"))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<PlanBundle> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bundle {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        PlanBundle::from_json(&j).with_context(|| format!("decoding bundle {path:?}"))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let net = &self.network;
+        let (ih, iw, ic) = net.input_hwc;
+        let layers: Vec<Json> = net.layers.iter().map(layer_to_json).collect();
+        let sparsity: Vec<Json> = self
+            .sparsity
+            .iter()
+            .map(|(&id, sp)| {
+                let mut pairs = vec![
+                    ("layer", Json::num(id as f64)),
+                    ("rate", Json::num(sp.rate.0 as f64)),
+                ];
+                pairs.extend(scheme_to_json(sp.scheme));
+                Json::obj(pairs)
+            })
+            .collect();
+        let weights: Vec<Json> = self
+            .weights
+            .iter()
+            .map(|(&id, lw)| {
+                let mut pairs =
+                    vec![("layer", Json::num(id as f64)), ("role", Json::str(lw.role()))];
+                match lw {
+                    LayerWeights::Conv(t)
+                    | LayerWeights::Depthwise(t)
+                    | LayerWeights::Linear(t) => {
+                        pairs.push(("dims", dims_json(t)));
+                        pairs.push(("data", data_json(t)));
+                    }
+                    LayerWeights::SqueezeExcite { reduce, expand } => {
+                        pairs.push(("reduce_dims", dims_json(reduce)));
+                        pairs.push(("reduce", data_json(reduce)));
+                        pairs.push(("expand_dims", dims_json(expand)));
+                        pairs.push(("expand", data_json(expand)));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            (
+                "network",
+                Json::obj(vec![
+                    ("name", Json::str(net.name.clone())),
+                    (
+                        "input_hwc",
+                        Json::Arr(vec![
+                            Json::num(ih as f64),
+                            Json::num(iw as f64),
+                            Json::num(ic as f64),
+                        ]),
+                    ),
+                    ("layers", Json::Arr(layers)),
+                ]),
+            ),
+            ("sparsity", Json::Arr(sparsity)),
+            ("weights", Json::Arr(weights)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanBundle> {
+        let version = j.req("version")?.as_usize().context("version")?;
+        if version != 1 {
+            bail!("unsupported bundle version {version}");
+        }
+        let njson = j.req("network")?;
+        let name = njson.req("name")?.as_str().context("network name")?.to_string();
+        let input_hwc = triple(njson.req("input_hwc")?).context("input_hwc")?;
+        let mut layers = Vec::new();
+        for (i, lj) in njson.req("layers")?.as_arr().context("layers array")?.iter().enumerate()
+        {
+            let layer = layer_from_json(lj).with_context(|| format!("layer {i}"))?;
+            if layer.id != i {
+                bail!("layer {i} carries id {}", layer.id);
+            }
+            layers.push(layer);
+        }
+        let network = Network { name, input_hwc, layers };
+        network.validate().map_err(|e| anyhow::anyhow!("invalid network: {e}"))?;
+
+        let mut sparsity = SparsityMap::new();
+        for sj in j.req("sparsity")?.as_arr().context("sparsity array")? {
+            let id = sj.req("layer")?.as_usize().context("sparsity layer id")?;
+            if id >= network.layers.len() {
+                bail!("sparsity annotation for unknown layer {id}");
+            }
+            let rate = sj.req("rate")?.as_f64().context("rate")? as f32;
+            if !(1.0..=1e6).contains(&rate) {
+                bail!("layer {id}: pruning rate {rate} out of range");
+            }
+            let scheme = scheme_from_json(sj)?;
+            sparsity.insert(id, crate::compiler::LayerSparsity::new(scheme, rate));
+        }
+
+        let mut weights = WeightSet::new();
+        for wj in j.req("weights")?.as_arr().context("weights array")? {
+            let id = wj.req("layer")?.as_usize().context("weight layer id")?;
+            if id >= network.layers.len() {
+                bail!("weights for unknown layer {id}");
+            }
+            let role = wj.req("role")?.as_str().context("weight role")?;
+            let lw = match role {
+                "conv" => LayerWeights::Conv(tensor_from(wj, "dims", "data")?),
+                "depthwise" => LayerWeights::Depthwise(tensor_from(wj, "dims", "data")?),
+                "linear" => LayerWeights::Linear(tensor_from(wj, "dims", "data")?),
+                "squeeze_excite" => LayerWeights::SqueezeExcite {
+                    reduce: tensor_from(wj, "reduce_dims", "reduce")?,
+                    expand: tensor_from(wj, "expand_dims", "expand")?,
+                },
+                other => bail!("unknown weight role `{other}` for layer {id}"),
+            };
+            check_weight_shape(&network.layers[id], &lw)?;
+            weights.insert(id, lw);
+        }
+        // every weighted layer must be covered
+        for l in &network.layers {
+            let needs = matches!(
+                l.kind,
+                LayerKind::Conv2d { .. } | LayerKind::Linear { .. } | LayerKind::SqueezeExcite { .. }
+            );
+            if needs && weights.get(l.id).is_none() {
+                bail!("layer {} ({}) has no weights in the bundle", l.id, l.name);
+            }
+        }
+        Ok(PlanBundle { network, sparsity, weights })
+    }
+}
+
+/// Weight role/shape vs layer definition — the loud ABI check.
+fn check_weight_shape(layer: &Layer, lw: &LayerWeights) -> Result<()> {
+    let want: Vec<Vec<usize>> = match layer.kind {
+        LayerKind::Conv2d { kh, kw, cin, cout, depthwise, .. } => {
+            if depthwise {
+                vec![vec![kh, kw, cout]]
+            } else {
+                vec![vec![kh, kw, cin, cout]]
+            }
+        }
+        LayerKind::Linear { din, dout } => vec![vec![din, dout]],
+        LayerKind::SqueezeExcite { c, reduced } => vec![vec![c, reduced], vec![reduced, c]],
+        _ => bail!("layer {} ({}) takes no weights", layer.id, layer.name),
+    };
+    let got: Vec<&[usize]> = match lw {
+        LayerWeights::Conv(t) | LayerWeights::Depthwise(t) | LayerWeights::Linear(t) => {
+            vec![t.dims()]
+        }
+        LayerWeights::SqueezeExcite { reduce, expand } => vec![reduce.dims(), expand.dims()],
+    };
+    if want.len() != got.len() || want.iter().zip(&got).any(|(w, g)| w.as_slice() != *g) {
+        bail!(
+            "layer {} ({}): weight shape {:?} does not match layer definition {:?}",
+            layer.id,
+            layer.name,
+            got,
+            want
+        );
+    }
+    Ok(())
+}
+
+fn dims_json(t: &Tensor) -> Json {
+    Json::Arr(t.dims().iter().map(|&d| Json::num(d as f64)).collect())
+}
+
+fn data_json(t: &Tensor) -> Json {
+    Json::Arr(t.data().iter().map(|&v| Json::num(v as f64)).collect())
+}
+
+fn tensor_from(j: &Json, dims_key: &str, data_key: &str) -> Result<Tensor> {
+    let dims: Vec<usize> = j
+        .req(dims_key)?
+        .as_arr()
+        .context("dims array")?
+        .iter()
+        .map(|v| v.as_usize().context("dim"))
+        .collect::<Result<_>>()?;
+    let data: Vec<f32> = j
+        .req(data_key)?
+        .as_arr()
+        .context("data array")?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32).context("datum"))
+        .collect::<Result<_>>()?;
+    let numel: usize = dims.iter().product();
+    if numel != data.len() {
+        bail!("tensor dims {dims:?} want {numel} values, got {}", data.len());
+    }
+    Ok(Tensor::new(dims, data))
+}
+
+fn triple(j: &Json) -> Result<(usize, usize, usize)> {
+    let a = j.as_arr().context("expected a 3-array")?;
+    if a.len() != 3 {
+        bail!("expected 3 entries, got {}", a.len());
+    }
+    Ok((
+        a[0].as_usize().context("h")?,
+        a[1].as_usize().context("w")?,
+        a[2].as_usize().context("c")?,
+    ))
+}
+
+fn act_name(a: ActKind) -> &'static str {
+    match a {
+        ActKind::Relu => "relu",
+        ActKind::Relu6 => "relu6",
+        ActKind::Sigmoid => "sigmoid",
+        ActKind::Swish => "swish",
+        ActKind::HardSigmoid => "hard_sigmoid",
+        ActKind::HardSwish => "hard_swish",
+    }
+}
+
+fn act_from(name: &str) -> Result<ActKind> {
+    Ok(match name {
+        "relu" => ActKind::Relu,
+        "relu6" => ActKind::Relu6,
+        "sigmoid" => ActKind::Sigmoid,
+        "swish" => ActKind::Swish,
+        "hard_sigmoid" => ActKind::HardSigmoid,
+        "hard_swish" => ActKind::HardSwish,
+        other => bail!("unknown activation `{other}`"),
+    })
+}
+
+fn layer_to_json(l: &Layer) -> Json {
+    let (h, w, c) = l.in_hwc;
+    let mut pairs = vec![
+        ("id", Json::num(l.id as f64)),
+        ("name", Json::str(l.name.clone())),
+        (
+            "in_hwc",
+            Json::Arr(vec![Json::num(h as f64), Json::num(w as f64), Json::num(c as f64)]),
+        ),
+        (
+            "inputs",
+            Json::Arr(l.inputs.iter().map(|&i| Json::num(i as f64)).collect()),
+        ),
+    ];
+    match l.kind {
+        LayerKind::Conv2d { kh, kw, cin, cout, stride, depthwise } => {
+            pairs.push(("kind", Json::str("conv2d")));
+            pairs.push(("kh", Json::num(kh as f64)));
+            pairs.push(("kw", Json::num(kw as f64)));
+            pairs.push(("cin", Json::num(cin as f64)));
+            pairs.push(("cout", Json::num(cout as f64)));
+            pairs.push(("stride", Json::num(stride as f64)));
+            pairs.push(("depthwise", Json::Bool(depthwise)));
+        }
+        LayerKind::Linear { din, dout } => {
+            pairs.push(("kind", Json::str("linear")));
+            pairs.push(("din", Json::num(din as f64)));
+            pairs.push(("dout", Json::num(dout as f64)));
+        }
+        LayerKind::Pool { kind, size, stride } => {
+            pairs.push(("kind", Json::str("pool")));
+            pairs.push((
+                "pool",
+                Json::str(match kind {
+                    PoolKind::Max => "max",
+                    PoolKind::Avg => "avg",
+                }),
+            ));
+            pairs.push(("size", Json::num(size as f64)));
+            pairs.push(("stride", Json::num(stride as f64)));
+        }
+        LayerKind::GlobalAvgPool => pairs.push(("kind", Json::str("gap"))),
+        LayerKind::Act(a) => {
+            pairs.push(("kind", Json::str("act")));
+            pairs.push(("act", Json::str(act_name(a))));
+        }
+        LayerKind::Add => pairs.push(("kind", Json::str("add"))),
+        LayerKind::SqueezeExcite { c, reduced } => {
+            pairs.push(("kind", Json::str("squeeze_excite")));
+            pairs.push(("c", Json::num(c as f64)));
+            pairs.push(("reduced", Json::num(reduced as f64)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn layer_from_json(j: &Json) -> Result<Layer> {
+    let id = j.req("id")?.as_usize().context("id")?;
+    let name = j.req("name")?.as_str().context("name")?.to_string();
+    let in_hwc = triple(j.req("in_hwc")?).context("in_hwc")?;
+    let inputs: Vec<usize> = j
+        .req("inputs")?
+        .as_arr()
+        .context("inputs")?
+        .iter()
+        .map(|v| v.as_usize().context("input id"))
+        .collect::<Result<_>>()?;
+    let usz = |key: &str| -> Result<usize> { j.req(key)?.as_usize().context(key.to_string()) };
+    let kind = match j.req("kind")?.as_str().context("kind")? {
+        "conv2d" => LayerKind::Conv2d {
+            kh: usz("kh")?,
+            kw: usz("kw")?,
+            cin: usz("cin")?,
+            cout: usz("cout")?,
+            stride: usz("stride")?,
+            depthwise: j.req("depthwise")?.as_bool().context("depthwise")?,
+        },
+        "linear" => LayerKind::Linear { din: usz("din")?, dout: usz("dout")? },
+        "pool" => LayerKind::Pool {
+            kind: match j.req("pool")?.as_str().context("pool kind")? {
+                "max" => PoolKind::Max,
+                "avg" => PoolKind::Avg,
+                other => bail!("unknown pool kind `{other}`"),
+            },
+            size: usz("size")?,
+            stride: usz("stride")?,
+        },
+        "gap" => LayerKind::GlobalAvgPool,
+        "act" => LayerKind::Act(act_from(j.req("act")?.as_str().context("act")?)?),
+        "add" => LayerKind::Add,
+        "squeeze_excite" => {
+            LayerKind::SqueezeExcite { c: usz("c")?, reduced: usz("reduced")? }
+        }
+        other => bail!("unknown layer kind `{other}`"),
+    };
+    Ok(Layer { id, name, kind, in_hwc, inputs })
+}
+
+fn scheme_to_json(s: PruneScheme) -> Vec<(&'static str, Json)> {
+    match s {
+        PruneScheme::Unstructured => vec![("scheme", Json::str("unstructured"))],
+        PruneScheme::Filter => vec![("scheme", Json::str("filter"))],
+        PruneScheme::Pattern => vec![("scheme", Json::str("pattern"))],
+        PruneScheme::BlockPunched { bf, bc } => vec![
+            ("scheme", Json::str("block_punched")),
+            ("bf", Json::num(bf as f64)),
+            ("bc", Json::num(bc as f64)),
+        ],
+        PruneScheme::BlockBased { brows, bcols } => vec![
+            ("scheme", Json::str("block_based")),
+            ("brows", Json::num(brows as f64)),
+            ("bcols", Json::num(bcols as f64)),
+        ],
+    }
+}
+
+fn scheme_from_json(j: &Json) -> Result<PruneScheme> {
+    Ok(match j.req("scheme")?.as_str().context("scheme")? {
+        "unstructured" => PruneScheme::Unstructured,
+        "filter" => PruneScheme::Filter,
+        "pattern" => PruneScheme::Pattern,
+        "block_punched" => PruneScheme::BlockPunched {
+            bf: j.req("bf")?.as_usize().context("bf")?,
+            bc: j.req("bc")?.as_usize().context("bc")?,
+        },
+        "block_based" => PruneScheme::BlockBased {
+            brows: j.req("brows")?.as_usize().context("brows")?,
+            bcols: j.req("bcols")?.as_usize().context("bcols")?,
+        },
+        other => bail!("unknown scheme `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::KRYO_485;
+    use crate::compiler::{executor, max_abs_diff};
+    use crate::graph::NetworkBuilder;
+    use crate::tensor::XorShift64Star;
+
+    fn tiny_bundle() -> PlanBundle {
+        let mut b = NetworkBuilder::new("bundle-net", (8, 8, 3));
+        b.conv2d(3, 8, 1);
+        b.act(ActKind::Relu6);
+        b.depthwise(3, 2);
+        b.act(ActKind::HardSwish);
+        b.squeeze_excite(4);
+        b.conv2d(1, 12, 1);
+        b.global_avg_pool();
+        b.linear(4);
+        let net = b.build();
+        let sparsity =
+            executor::uniform_sparsity(&net, PruneScheme::block_punched_default(), 3.0);
+        let mut weights = WeightSet::random(&net, 5);
+        weights.apply_sparsity(&sparsity);
+        PlanBundle::new(net, sparsity, weights)
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let b = tiny_bundle();
+        let j = b.to_json();
+        let b2 = PlanBundle::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(b2.network.name, b.network.name);
+        assert_eq!(b2.network.fingerprint(), b.network.fingerprint());
+        assert_eq!(b2.sparsity, b.sparsity);
+        assert_eq!(b2.weights.len(), b.weights.len());
+        for ((ia, wa), (ib, wb)) in b.weights.iter().zip(b2.weights.iter()) {
+            assert_eq!(ia, ib);
+            assert_eq!(wa.role(), wb.role());
+        }
+        // execution after the roundtrip is bit-identical
+        let mut rng = XorShift64Star::new(9);
+        let x = Tensor::he_normal(vec![8, 8, 3], &mut rng);
+        let a = b.execute(&KRYO_485, Framework::Ours, &x);
+        let c = b2.execute(&KRYO_485, Framework::Ours, &x);
+        assert_eq!(a, c);
+        assert_eq!(max_abs_diff(&a, &c), 0.0);
+    }
+
+    #[test]
+    fn rejects_malformed_bundles() {
+        let b = tiny_bundle();
+        // wrong weight shape
+        let mut j = b.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(ws)) = m.get_mut("weights") {
+                if let Json::Obj(w0) = &mut ws[0] {
+                    w0.insert("dims".into(), Json::Arr(vec![Json::num(2.0), Json::num(2.0)]));
+                    w0.insert(
+                        "data".into(),
+                        Json::Arr(vec![Json::num(0.0); 4]),
+                    );
+                }
+            }
+        }
+        assert!(PlanBundle::from_json(&j).is_err());
+        // missing weights entirely
+        let mut j2 = b.to_json();
+        if let Json::Obj(m) = &mut j2 {
+            m.insert("weights".into(), Json::Arr(vec![]));
+        }
+        let err = PlanBundle::from_json(&j2).unwrap_err().to_string();
+        assert!(err.contains("no weights"), "{err}");
+    }
+}

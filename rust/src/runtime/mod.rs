@@ -8,7 +8,12 @@
 //! The `xla` crate is not vendorable offline, so [`xla_stub`] supplies the
 //! same API surface with a client that fails loudly at load time; swap the
 //! `use` alias back to the real crate to run against actual PJRT.
+//!
+//! [`bundle`] is the artifact path that *does* run offline: a
+//! [`PlanBundle`] (network + sparsity + weights) loads from JSON and
+//! executes through `compiler::executor` on the host CPU.
 
+pub mod bundle;
 pub mod manifest;
 mod xla_stub;
 
@@ -21,6 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::tensor::Tensor;
 
+pub use bundle::PlanBundle;
 pub use manifest::{ArtifactDef, DType, Manifest, TensorDef};
 
 /// A named runtime input value.

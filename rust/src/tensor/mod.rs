@@ -9,6 +9,7 @@ pub mod ops;
 pub mod rng;
 pub mod shape;
 
+pub use ops::same_pad;
 pub use rng::XorShift64Star;
 pub use shape::Shape;
 

@@ -1,7 +1,26 @@
 //! Elementwise / reduction ops used by the optimizer, the pruning
-//! algorithms (ADMM projections, group-Lasso proximal steps) and metrics.
+//! algorithms (ADMM projections, group-Lasso proximal steps) and metrics —
+//! plus the dense compute kernels the executable backend
+//! (`compiler::executor`) dispatches to: GEMM, im2col, direct and depthwise
+//! convolution, pooling.
+//!
+//! Numerical contract shared by every convolution path: SAME padding (the
+//! IR's `out = ceil(in / stride)` shape rule) and a fixed accumulation
+//! order — the reduction index `(ki, kj, ci)` ascends, and zero
+//! contributions are skippable (adding `x * 0.0` is an exact no-op for
+//! finite floats). `im2col` + [`Tensor::matmul`] therefore reproduces
+//! [`Tensor::conv2d_direct`] bit-for-bit, which is what lets the
+//! sparse-vs-dense differential tests pin a 1e-4 relative tolerance.
 
 use super::Tensor;
+
+/// SAME-padding geometry for one spatial dimension: output size
+/// (`ceil(in/stride)`, matching `Layer::out_hwc`) and the leading pad.
+pub fn same_pad(in_size: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = in_size.div_ceil(stride);
+    let needed = ((out - 1) * stride + k).saturating_sub(in_size);
+    (out, needed / 2)
+}
 
 impl Tensor {
     /// self += other * scale (axpy).
@@ -82,6 +101,240 @@ impl Tensor {
         mags.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
         mags[idx]
     }
+
+    // ---- executable-backend kernels ------------------------------------
+
+    /// Dense GEMM: `(M,K) x (K,N) -> (M,N)`. Accumulates over `k`
+    /// ascending per output element (the shared reduction order).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (da, db) = (self.dims(), other.dims());
+        assert_eq!(da.len(), 2, "matmul lhs must be 2-D, got {da:?}");
+        assert_eq!(db.len(), 2, "matmul rhs must be 2-D, got {db:?}");
+        let (m, k) = (da[0], da[1]);
+        let (k2, n) = (db[0], db[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let a = self.data();
+        let b = other.data();
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // exact no-op contribution
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Lower an `(h, w, c)` feature map to the im2col patch matrix
+    /// `(oh*ow, kh*kw*c)` under SAME padding (out-of-range taps stay 0).
+    pub fn im2col(&self, kh: usize, kw: usize, stride: usize) -> Tensor {
+        let d = self.dims();
+        assert_eq!(d.len(), 3, "im2col expects (h,w,c), got {d:?}");
+        let (h, w, c) = (d[0], d[1], d[2]);
+        let (oh, pt) = same_pad(h, kh, stride);
+        let (ow, pl) = same_pad(w, kw, stride);
+        let kdim = kh * kw * c;
+        let mut out = vec![0f32; oh * ow * kdim];
+        let data = self.data();
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let base = (oi * ow + oj) * kdim;
+                for ki in 0..kh {
+                    let iy = (oi * stride + ki) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let ix = (oj * stride + kj) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = (iy as usize * w + ix as usize) * c;
+                        let dst = base + (ki * kw + kj) * c;
+                        out[dst..dst + c].copy_from_slice(&data[src..src + c]);
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![oh * ow, kdim], out)
+    }
+
+    /// Direct dense convolution: `(h,w,cin) * (kh,kw,cin,cout) ->
+    /// (oh,ow,cout)`, SAME padding. The naive per-layer reference every
+    /// compiled kernel is differentially tested against.
+    pub fn conv2d_direct(&self, weight: &Tensor, stride: usize) -> Tensor {
+        let d = self.dims();
+        let wd = weight.dims();
+        assert_eq!(d.len(), 3, "conv input must be (h,w,c), got {d:?}");
+        assert_eq!(wd.len(), 4, "conv weight must be (kh,kw,cin,cout), got {wd:?}");
+        let (h, w, c) = (d[0], d[1], d[2]);
+        let (kh, kw, cin, cout) = (wd[0], wd[1], wd[2], wd[3]);
+        assert_eq!(c, cin, "conv channel mismatch: input {c}, weight {cin}");
+        let (oh, pt) = same_pad(h, kh, stride);
+        let (ow, pl) = same_pad(w, kw, stride);
+        let x = self.data();
+        let wt = weight.data();
+        let mut out = vec![0f32; oh * ow * cout];
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let orow = &mut out[(oi * ow + oj) * cout..(oi * ow + oj + 1) * cout];
+                for ki in 0..kh {
+                    let iy = (oi * stride + ki) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let ix = (oj * stride + kj) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xrow = &x[(iy as usize * w + ix as usize) * c..][..c];
+                        let wbase = (ki * kw + kj) * cin * cout;
+                        for (ci, &xv) in xrow.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &wt[wbase + ci * cout..][..cout];
+                            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![oh, ow, cout], out)
+    }
+
+    /// Depthwise direct convolution: `(h,w,c) * (kh,kw,c) -> (oh,ow,c)`,
+    /// SAME padding, one kernel slice per channel.
+    pub fn conv2d_depthwise(&self, weight: &Tensor, stride: usize) -> Tensor {
+        let d = self.dims();
+        let wd = weight.dims();
+        assert_eq!(d.len(), 3, "depthwise input must be (h,w,c), got {d:?}");
+        assert_eq!(wd.len(), 3, "depthwise weight must be (kh,kw,c), got {wd:?}");
+        let (h, w, c) = (d[0], d[1], d[2]);
+        let (kh, kw) = (wd[0], wd[1]);
+        assert_eq!(wd[2], c, "depthwise channel mismatch");
+        let (oh, pt) = same_pad(h, kh, stride);
+        let (ow, pl) = same_pad(w, kw, stride);
+        let x = self.data();
+        let wt = weight.data();
+        let mut out = vec![0f32; oh * ow * c];
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let orow = &mut out[(oi * ow + oj) * c..(oi * ow + oj + 1) * c];
+                for ki in 0..kh {
+                    let iy = (oi * stride + ki) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let ix = (oj * stride + kj) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xrow = &x[(iy as usize * w + ix as usize) * c..][..c];
+                        let wrow = &wt[(ki * kw + kj) * c..][..c];
+                        for ((o, &xv), &wv) in orow.iter_mut().zip(xrow).zip(wrow) {
+                            *o += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![oh, ow, c], out)
+    }
+
+    /// Max pooling over `(h,w,c)` with SAME-style geometry; border windows
+    /// are clipped (padding never contributes a max candidate).
+    pub fn maxpool2d(&self, size: usize, stride: usize) -> Tensor {
+        self.pool2d(size, stride, true)
+    }
+
+    /// Average pooling; border windows average only their in-bounds taps.
+    pub fn avgpool2d(&self, size: usize, stride: usize) -> Tensor {
+        self.pool2d(size, stride, false)
+    }
+
+    fn pool2d(&self, size: usize, stride: usize, is_max: bool) -> Tensor {
+        let d = self.dims();
+        assert_eq!(d.len(), 3, "pool input must be (h,w,c), got {d:?}");
+        let (h, w, c) = (d[0], d[1], d[2]);
+        let (oh, pt) = same_pad(h, size, stride);
+        let (ow, pl) = same_pad(w, size, stride);
+        let x = self.data();
+        let mut out = vec![0f32; oh * ow * c];
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let orow = &mut out[(oi * ow + oj) * c..(oi * ow + oj + 1) * c];
+                // signed window [start, start+size) clipped to the input
+                let ystart = (oi * stride) as isize - pt as isize;
+                let y0 = ystart.max(0) as usize;
+                let y1 = ((ystart + size as isize).max(0) as usize).min(h);
+                let xstart = (oj * stride) as isize - pl as isize;
+                let x0 = xstart.max(0) as usize;
+                let x1 = ((xstart + size as isize).max(0) as usize).min(w);
+                let mut count = 0usize;
+                let mut first = true;
+                for iy in y0..y1 {
+                    for ix in x0..x1 {
+                        let xrow = &x[(iy * w + ix) * c..][..c];
+                        if is_max {
+                            if first {
+                                orow.copy_from_slice(xrow);
+                            } else {
+                                for (o, &v) in orow.iter_mut().zip(xrow) {
+                                    if v > *o {
+                                        *o = v;
+                                    }
+                                }
+                            }
+                        } else {
+                            for (o, &v) in orow.iter_mut().zip(xrow) {
+                                *o += v;
+                            }
+                        }
+                        first = false;
+                        count += 1;
+                    }
+                }
+                if !is_max && count > 0 {
+                    let inv = 1.0 / count as f32;
+                    for o in orow.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![oh, ow, c], out)
+    }
+
+    /// Global average pool: `(h,w,c) -> (1,1,c)`.
+    pub fn global_avg_pool(&self) -> Tensor {
+        let d = self.dims();
+        assert_eq!(d.len(), 3, "gap input must be (h,w,c), got {d:?}");
+        let (h, w, c) = (d[0], d[1], d[2]);
+        let mut out = vec![0f32; c];
+        for pix in 0..h * w {
+            let xrow = &self.data()[pix * c..][..c];
+            for (o, &v) in out.iter_mut().zip(xrow) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / (h * w).max(1) as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+        Tensor::new(vec![1, 1, c], out)
+    }
 }
 
 #[cfg(test)]
@@ -141,5 +394,95 @@ mod tests {
         let b = t(vec![0.5, 1.0]);
         assert_eq!(a.sub(&b).data(), &[0.5, 1.0]);
         assert_eq!(a.add(&b).data(), &[1.5, 3.0]);
+    }
+
+    #[test]
+    fn same_pad_geometry() {
+        // stride 1: out == in, total pad k-1
+        assert_eq!(same_pad(8, 3, 1), (8, 1));
+        assert_eq!(same_pad(8, 1, 1), (8, 0));
+        // stride 2: out = ceil(in/2)
+        assert_eq!(same_pad(8, 3, 2), (4, 0)); // needed = 3*2+3-8 = 1 -> pad 0
+        assert_eq!(same_pad(7, 3, 2), (4, 1));
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::new(vec![3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.dims(), &[2, 2]);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct_conv() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(21);
+        for &(hw, k, stride, cin, cout) in
+            &[(6usize, 3usize, 1usize, 4usize, 5usize), (7, 3, 2, 3, 4), (5, 1, 1, 6, 2), (8, 5, 2, 2, 3)]
+        {
+            let x = Tensor::he_normal(vec![hw, hw, cin], &mut rng);
+            let w = Tensor::he_normal(vec![k, k, cin, cout], &mut rng);
+            let direct = x.conv2d_direct(&w, stride);
+            let patches = x.im2col(k, k, stride);
+            let w2 = w.clone().reshape(vec![k * k * cin, cout]);
+            let (oh, _) = same_pad(hw, k, stride);
+            let gemm = patches.matmul(&w2).reshape(vec![oh, oh, cout]);
+            assert_eq!(direct.dims(), gemm.dims());
+            for (a, b) in direct.data().iter().zip(gemm.data()) {
+                assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "{a} vs {b} (k={k})");
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_matches_per_channel_direct() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(23);
+        let (hw, c) = (6, 5);
+        let x = Tensor::he_normal(vec![hw, hw, c], &mut rng);
+        let w = Tensor::he_normal(vec![3, 3, c], &mut rng);
+        let dw = x.conv2d_depthwise(&w, 1);
+        // reference: dense conv with a block-diagonal (kh,kw,c,c) kernel
+        let mut dense = Tensor::zeros(vec![3, 3, c, c]);
+        for ki in 0..3 {
+            for kj in 0..3 {
+                for ch in 0..c {
+                    dense.set(&[ki, kj, ch, ch], w.get(&[ki, kj, ch]));
+                }
+            }
+        }
+        let full = x.conv2d_direct(&dense, 1);
+        for (a, b) in dw.data().iter().zip(full.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pooling_windows() {
+        // 4x4 single channel, values 0..16
+        let x = Tensor::new(vec![4, 4, 1], (0..16).map(|v| v as f32).collect());
+        let mx = x.maxpool2d(2, 2);
+        assert_eq!(mx.dims(), &[2, 2, 1]);
+        assert_eq!(mx.data(), &[5.0, 7.0, 13.0, 15.0]);
+        let av = x.avgpool2d(2, 2);
+        assert_eq!(av.data(), &[2.5, 4.5, 10.5, 12.5]);
+        let g = x.global_avg_pool();
+        assert_eq!(g.dims(), &[1, 1, 1]);
+        assert_eq!(g.scalar(), 7.5);
+    }
+
+    #[test]
+    fn pool_border_clipping() {
+        // 3x3 maxpool stride 2 on 5x5: SAME geometry, clipped windows
+        let x = Tensor::new(vec![5, 5, 1], (0..25).map(|v| v as f32).collect());
+        let mx = x.maxpool2d(3, 2);
+        assert_eq!(mx.dims(), &[3, 3, 1]);
+        // last window row starts at 4-pt .. (pt = (2*2+3-5)/2 = 1)
+        assert_eq!(mx.get(&[2, 2, 0]), 24.0);
+        let av = x.avgpool2d(3, 2);
+        // top-left window covers rows/cols {0,1} only (pad clipped): mean of 0,1,5,6
+        assert_eq!(av.get(&[0, 0, 0]), 3.0);
     }
 }

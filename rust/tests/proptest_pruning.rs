@@ -5,7 +5,8 @@
 //! shapes / schemes / rates (hundreds of cases per property) and asserts
 //! the structural invariants that define each scheme (DESIGN.md S3).
 
-use npas::pruning::{generate_mask, PruneRate, PruneScheme};
+use npas::pruning::pattern::PATTERNS;
+use npas::pruning::{apply_mask, generate_mask, BlockCsr, PruneRate, PruneScheme};
 use npas::tensor::{Tensor, XorShift64Star};
 
 struct Gen {
@@ -229,6 +230,130 @@ fn prop_unstructured_keeps_largest() {
             .map(|(w, _)| w.abs())
             .fold(0.0f32, f32::max);
         assert!(kept_min >= pruned_max, "kept_min {kept_min} < pruned_max {pruned_max}");
+    }
+}
+
+/// `apply_mask` is idempotent: masking already-masked weights is a bitwise
+/// no-op (masks are 0/1, multiplication by 1.0 is exact), and the masked
+/// support is contained in the mask's.
+#[test]
+fn prop_apply_mask_idempotent() {
+    let mut g = Gen::new(0x1DE0);
+    for case in 0..100 {
+        let shape = g_shape(&mut g, case);
+        let mut w = g.weights(shape);
+        let rate = g.rate();
+        let scheme = pick_scheme(&mut g, &w);
+        let mask = generate_mask(&w, scheme, rate);
+        apply_mask(&mut w, &mask);
+        let once = w.clone();
+        apply_mask(&mut w, &mask);
+        assert_eq!(w.data(), once.data(), "case {case}: second apply changed bits");
+        for (v, m) in once.data().iter().zip(mask.data()) {
+            if *m == 0.0 {
+                assert_eq!(*v, 0.0, "case {case}: weight survived outside mask");
+            }
+        }
+    }
+}
+
+/// Block-CSR packing round-trips the masked tensor exactly, for arbitrary
+/// (including misaligned) block geometries, and the packed GEMM agrees
+/// with the dense GEMM on the unpacked matrix.
+#[test]
+fn prop_block_csr_roundtrip() {
+    let mut g = Gen::new(0xC5B10C);
+    for case in 0..80 {
+        let shape = g.conv_shape();
+        let mut w = g.weights(shape.clone());
+        let rate = g.rate();
+        let scheme = pick_scheme(&mut g, &w);
+        let mask = generate_mask(&w, scheme, rate);
+        apply_mask(&mut w, &mask);
+        let (rows, cols) = (shape[0] * shape[1] * shape[2], shape[3]);
+        let w2 = w.clone().reshape(vec![rows, cols]);
+        let (br, bc) =
+            (1 + g.rng.next_range(9) as usize, 1 + g.rng.next_range(9) as usize);
+        let packed = BlockCsr::pack(&w2, br, bc);
+        assert!(packed.nnz_blocks() <= packed.total_blocks());
+        let back = packed.unpack();
+        assert_eq!(back.dims(), w2.dims());
+        assert_eq!(back.data(), w2.data(), "case {case}: br={br} bc={bc} roundtrip drift");
+
+        let x = g.weights(vec![3, rows]);
+        let dense = x.matmul(&w2);
+        let sparse = packed.matmul(&x);
+        for (a, b) in sparse.data().iter().zip(dense.data()) {
+            assert!(
+                (a - b).abs() <= 1e-5 * b.abs().max(1.0),
+                "case {case}: packed GEMM {a} vs dense {b}"
+            );
+        }
+    }
+}
+
+/// Block-punched masks hit the requested rate *within one kernel position
+/// per block*: every block (including ragged edge blocks) keeps exactly
+/// `rate.kept_of(kh*kw)` positions.
+#[test]
+fn prop_block_punched_exact_per_block_quota() {
+    let mut g = Gen::new(0x0B0B);
+    for case in 0..60 {
+        let shape = g.conv3x3_shape();
+        let w = g.weights(shape);
+        let rate = g.rate();
+        let (bf, bc) = (1 + g.rng.next_range(8) as usize, 1 + g.rng.next_range(6) as usize);
+        let mask = generate_mask(&w, PruneScheme::BlockPunched { bf, bc }, rate);
+        let (cin, cout) = (w.dims()[2], w.dims()[3]);
+        let want_pos = rate.kept_of(9);
+        let mut f0 = 0;
+        while f0 < cout {
+            let f1 = (f0 + bf).min(cout);
+            let mut c0 = 0;
+            while c0 < cin {
+                let c1 = (c0 + bc).min(cin);
+                let kept: usize = (0..9)
+                    .filter(|&p| mask.get(&[p / 3, p % 3, c0, f0]) != 0.0)
+                    .count();
+                assert_eq!(
+                    kept, want_pos,
+                    "case {case}: block ({f0},{c0}) keeps {kept} of 9 positions, want {want_pos}"
+                );
+                c0 = c1;
+            }
+            f0 = f1;
+        }
+    }
+}
+
+/// Every kernel of a pattern mask is either fully pruned (connectivity
+/// pruning) or exactly one of the 8 canonical 4-entry patterns.
+#[test]
+fn prop_pattern_masks_are_legal_patterns() {
+    let mut g = Gen::new(0x9A77);
+    for case in 0..60 {
+        let shape = g.conv3x3_shape();
+        let w = g.weights(shape);
+        let rate = g.rate();
+        if rate.is_dense() {
+            continue;
+        }
+        let mask = generate_mask(&w, PruneScheme::Pattern, rate);
+        let (cin, cout) = (w.dims()[2], w.dims()[3]);
+        for c in 0..cin {
+            for f in 0..cout {
+                let kept: Vec<usize> = (0..9)
+                    .filter(|&p| mask.get(&[p / 3, p % 3, c, f]) != 0.0)
+                    .collect();
+                if kept.is_empty() {
+                    continue; // kernel removed by connectivity pruning
+                }
+                assert!(
+                    PATTERNS.iter().any(|pat| pat.as_slice() == kept.as_slice()),
+                    "case {case}: kernel ({c},{f}) kept {kept:?} — not a canonical pattern"
+                );
+            }
+        }
     }
 }
 
