@@ -1,0 +1,164 @@
+//! Serving-engine throughput: batched execution vs n sequential
+//! `Executor::run` calls on a dense 3x3 zoo network.
+//!
+//! Three measurements on an 8-image batch: (1) 8 sequential single-image
+//! runs (the pre-engine baseline), (2) one `Executor::run_batch` call with
+//! intra-op tiling across the available cores, (3) the full
+//! `InferenceEngine` path including the submission queue and micro-batch
+//! assembly. Outputs are gated at 1e-4 relative parity against the
+//! sequential runs before any timing is reported (the plan is compiled for
+//! TFLite, which has no Winograd, so the tight GEMM tolerance applies).
+//!
+//! Acceptance: on a >= 4-core host the batched engine must be at least 2x
+//! the sequential baseline; on narrower hosts the parallel ceiling is the
+//! core count and the assert is skipped (the numbers still print).
+//!
+//! Run: `cargo bench --bench engine_throughput`
+
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Duration;
+
+use npas::bench::{bench, quick, Table};
+use npas::compiler::codegen::compile;
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{max_abs_diff, Algo, Executor, Framework, SparsityMap, WeightSet};
+use npas::graph::zoo;
+use npas::runtime::{EngineConfig, InferenceEngine};
+use npas::tensor::{Tensor, XorShift64Star};
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let net = zoo::npas_deploy_network(
+        "engine-bench",
+        &[zoo::CandidateBlock::Conv3x3; 7],
+    )
+    .rescaled(32);
+    let sparsity = SparsityMap::new();
+    // TFLite: no Winograd, every 3x3 goes im2col + GEMM — the batched path
+    // then runs one big GEMM per layer and the 1e-4 gate applies
+    let plan = Arc::new(compile(&net, &sparsity, &KRYO_485, Framework::TFLite));
+    assert!(
+        plan.groups.iter().all(|g| g.algo != Algo::Winograd),
+        "bench plan must not contain Winograd groups"
+    );
+    let weights = WeightSet::random(&net, 42);
+    let exec_seq = Executor::new(&net, &plan, &sparsity, &weights);
+    let exec_batched =
+        Executor::new(&net, &plan, &sparsity, &weights).with_intra_workers(cores);
+
+    let mut rng = XorShift64Star::new(7);
+    let batch: Vec<Tensor> =
+        (0..8).map(|_| Tensor::he_normal(vec![32, 32, 3], &mut rng)).collect();
+
+    // ---- parity gate before any timing --------------------------------
+    let seq_out: Vec<Tensor> = batch.iter().map(|x| exec_seq.run(x)).collect();
+    let batched_out = exec_batched.run_batch(&batch);
+    for (i, (g, s)) in batched_out.iter().zip(&seq_out).enumerate() {
+        let scale = s.abs_max().max(1e-3);
+        let diff = max_abs_diff(g, s);
+        assert!(
+            diff <= 1e-4 * scale,
+            "image {i}: batched output fails the 1e-4 parity gate ({diff} vs {scale})"
+        );
+    }
+
+    println!(
+        "== dense 3x3 deploy net `{}` ({} layers, {:.1}M MACs/image), batch 8, {cores} cores ==",
+        net.name,
+        net.layers.len(),
+        net.total_macs() as f64 / 1e6
+    );
+    let t_seq = quick("8 x sequential Executor::run", || {
+        for x in &batch {
+            black_box(exec_seq.run(x));
+        }
+    });
+    let t_batch = quick("Executor::run_batch(8), tiled", || {
+        black_box(exec_batched.run_batch(&batch));
+    });
+
+    let engine = InferenceEngine::with_plan(
+        net.clone(),
+        &sparsity,
+        weights.clone(),
+        plan.clone(),
+        EngineConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+            intra_workers: cores,
+        },
+    )
+    .unwrap();
+    // engine outputs pass the same gate (queueing must not change numerics)
+    for (i, (r, s)) in engine.run_batch(&batch).into_iter().zip(&seq_out).enumerate() {
+        let g = r.unwrap_or_else(|e| panic!("engine request {i} failed: {e}"));
+        let scale = s.abs_max().max(1e-3);
+        assert!(
+            max_abs_diff(&g, s) <= 1e-4 * scale,
+            "image {i}: engine output fails the 1e-4 parity gate"
+        );
+    }
+    let t_engine = quick("InferenceEngine::run_batch(8)", || {
+        for r in engine.run_batch(&batch) {
+            black_box(r.expect("engine request failed"));
+        }
+    });
+
+    let speedup = t_seq.mean.as_secs_f64() / t_batch.mean.as_secs_f64().max(1e-12);
+    let engine_speedup = t_seq.mean.as_secs_f64() / t_engine.mean.as_secs_f64().max(1e-12);
+    println!(
+        "   batch efficiency: run_batch(8) {speedup:.2}x, engine end-to-end \
+         {engine_speedup:.2}x vs 8 sequential runs"
+    );
+    let stats = engine.stats();
+    println!(
+        "   engine stats: {} completed / {} batches (mean batch {:.1}), \
+         p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms, {:.0} req/s",
+        stats.completed,
+        stats.batches,
+        stats.mean_batch,
+        stats.p50_ms,
+        stats.p95_ms,
+        stats.p99_ms,
+        stats.throughput_rps
+    );
+
+    println!("\n== batch-size scaling (sequential vs batched executor) ==");
+    let table = Table::new(&["batch", "sequential", "batched", "speedup"], &[8, 14, 14, 12]);
+    for nb in [1usize, 2, 4, 8] {
+        let sub = &batch[..nb];
+        let ts = bench(&format!("seq x{nb}"), Duration::from_millis(150), || {
+            for x in sub {
+                black_box(exec_seq.run(x));
+            }
+        });
+        let tb = bench(&format!("batched x{nb}"), Duration::from_millis(150), || {
+            black_box(exec_batched.run_batch(sub));
+        });
+        table.row(&[
+            format!("{nb}"),
+            format!("{:.2}ms", ts.mean_ms()),
+            format!("{:.2}ms", tb.mean_ms()),
+            format!("{:.2}x", ts.mean.as_secs_f64() / tb.mean.as_secs_f64().max(1e-12)),
+        ]);
+    }
+
+    if cores >= 4 {
+        assert!(
+            engine_speedup >= 2.0,
+            "batched engine below the 2x acceptance bar: {engine_speedup:.2}x \
+             (sequential {:.2}ms vs engine {:.2}ms)",
+            t_seq.mean_ms(),
+            t_engine.mean_ms()
+        );
+        println!("\nacceptance: engine {engine_speedup:.2}x >= 2x sequential — OK");
+    } else {
+        println!(
+            "\nacceptance assert skipped: {cores} cores caps the parallel ceiling at \
+             {cores}x (measured {engine_speedup:.2}x)"
+        );
+    }
+}

@@ -23,6 +23,25 @@
 //! bound. Squeeze-excite is executed as GAP → FC(reduce) → ReLU →
 //! FC(expand) → hard-sigmoid gate (the MobileNet-V3 convention the IR
 //! summarizes as one op).
+//!
+//! Batching: [`Executor::try_run_batch`] executes n inputs through one pass
+//! over the plan. Activations carry a leading batch dimension
+//! (`(n, h, w, c)`); GEMM-family layers lower the whole batch to a single
+//! patch matrix ([`Tensor::im2col_batch`]) so one (optionally row-tiled,
+//! see `intra_workers`) GEMM — dense or packed block-CSR — serves all n
+//! images and the per-invocation weight reshape / packed-matrix traversal
+//! is paid once per batch instead of once per image. Per-image kernels
+//! (Winograd tiles, depthwise, pooling, SE) fan across
+//! `coordinator::scheduler::map_parallel`. Every path reuses the exact
+//! per-row / per-image kernels of the sequential executor, so batched
+//! outputs are bit-identical to n sequential [`Executor::run`] calls.
+//!
+//! Failure model: lookups that depend on *bound data* (weights present, FC
+//! widths, input shapes) return a typed [`ExecError`] from the `try_*`
+//! entry points instead of panicking, so a serving loop
+//! (`runtime::engine`) can fail one request without killing its worker
+//! thread. Plan/graph invariants (topological order, group coverage)
+//! remain debug assertions — they are programmer errors, not data errors.
 
 use std::collections::BTreeMap;
 
@@ -35,6 +54,53 @@ use super::codegen::{Algo, ExecutionPlan};
 use super::sparse_exec::LayerSparsity;
 use super::winograd;
 use super::SparsityMap;
+
+/// Typed executor failure: everything a malformed bundle or request can
+/// cause at run time. `Display` renders the same messages the old
+/// `panic!`s carried; the panicking entry points ([`Executor::run`],
+/// [`run_dense_reference`]) forward these, so legacy callers see identical
+/// behavior while `try_*` callers get a value they can route per-request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecError {
+    /// An input tensor does not match the network's `(h, w, c)` input.
+    InputShape { want: (usize, usize, usize), got: Vec<usize> },
+    /// A weighted layer has no weights bound, or weights of the wrong role.
+    MissingWeights { layer: usize, want: &'static str, got: Option<&'static str> },
+    /// Bound weights have dims that do not match the layer definition —
+    /// caught at bind time so no kernel can panic on a reshape later.
+    WeightShape { layer: usize, got: Vec<usize>, want: Vec<usize> },
+    /// FC input element count does not match the weight matrix's din.
+    FcShape { layer: usize, got: usize, want: usize },
+    /// `run_batch` was called with no inputs.
+    EmptyBatch,
+    /// The network has no layers to execute.
+    EmptyNetwork,
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::InputShape { want, got } => write!(
+                f,
+                "input shape {got:?} does not match network input ({}, {}, {})",
+                want.0, want.1, want.2
+            ),
+            ExecError::MissingWeights { layer, want, got } => {
+                write!(f, "layer {layer}: missing or mismatched `{want}` weights (got {got:?})")
+            }
+            ExecError::WeightShape { layer, got, want } => {
+                write!(f, "layer {layer}: weight shape {got:?} does not match layer definition {want:?}")
+            }
+            ExecError::FcShape { layer, got, want } => {
+                write!(f, "layer {layer}: FC input {got} vs weight din {want}")
+            }
+            ExecError::EmptyBatch => write!(f, "empty request batch"),
+            ExecError::EmptyNetwork => write!(f, "empty network"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
 
 /// Per-layer weight tensors in the artifact ABI shapes.
 #[derive(Debug, Clone)]
@@ -115,6 +181,12 @@ impl WeightSet {
         self.tensors.insert(id, w);
     }
 
+    /// Drop a layer's weights (used by tests to fabricate malformed
+    /// bundles; the loader itself refuses to produce these).
+    pub fn remove(&mut self, id: usize) -> Option<LayerWeights> {
+        self.tensors.remove(&id)
+    }
+
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
@@ -193,14 +265,41 @@ fn producer<'a>(outs: &'a [Option<Tensor>], layer: &Layer, input: &'a Tensor) ->
     }
 }
 
-fn conv_weight<'a>(weights: &'a WeightSet, id: usize, depthwise: bool) -> &'a Tensor {
+fn conv_weight(
+    weights: &WeightSet,
+    id: usize,
+    depthwise: bool,
+) -> Result<&Tensor, ExecError> {
     match weights.get(id) {
-        Some(LayerWeights::Conv(t)) if !depthwise => t,
-        Some(LayerWeights::Depthwise(t)) if depthwise => t,
-        other => panic!(
-            "layer {id}: missing or mismatched conv weights (got {:?})",
-            other.map(|w| w.role())
-        ),
+        Some(LayerWeights::Conv(t)) if !depthwise => Ok(t),
+        Some(LayerWeights::Depthwise(t)) if depthwise => Ok(t),
+        other => Err(ExecError::MissingWeights {
+            layer: id,
+            want: if depthwise { "depthwise" } else { "conv" },
+            got: other.map(|w| w.role()),
+        }),
+    }
+}
+
+fn linear_weight(weights: &WeightSet, id: usize) -> Result<&Tensor, ExecError> {
+    match weights.get(id) {
+        Some(LayerWeights::Linear(t)) => Ok(t),
+        other => Err(ExecError::MissingWeights {
+            layer: id,
+            want: "linear",
+            got: other.map(|w| w.role()),
+        }),
+    }
+}
+
+fn se_weights(weights: &WeightSet, id: usize) -> Result<(&Tensor, &Tensor), ExecError> {
+    match weights.get(id) {
+        Some(LayerWeights::SqueezeExcite { reduce, expand }) => Ok((reduce, expand)),
+        other => Err(ExecError::MissingWeights {
+            layer: id,
+            want: "squeeze_excite",
+            got: other.map(|w| w.role()),
+        }),
     }
 }
 
@@ -240,15 +339,26 @@ fn squeeze_excite(x: &Tensor, reduce: &Tensor, expand: &Tensor) -> Tensor {
     Tensor::new(x.dims().to_vec(), out)
 }
 
-/// Memory-bound glue shared verbatim by the plan executor and the dense
-/// reference (so parity differences can only come from compute kernels).
+/// Split a `(n, h, w, c)` batch into images, map `f` across them with up to
+/// `workers` threads, and restack. `map_parallel` preserves order and every
+/// image is computed by the same per-image kernel, so the result is
+/// bit-identical to a sequential loop for every `workers` value.
+fn batch_map(x: &Tensor, workers: usize, f: impl Fn(&Tensor) -> Tensor + Sync) -> Tensor {
+    let images = x.unstack();
+    let outs = crate::coordinator::scheduler::map_parallel(workers, &images, f);
+    Tensor::stack(&outs)
+}
+
+/// Memory-bound glue shared verbatim by the dense reference and (per image)
+/// the batched executor, so parity differences can only come from compute
+/// kernels. Operates on a single `(h, w, c)` activation.
 fn glue_layer(
     layer: &Layer,
     x: &Tensor,
     outs: &[Option<Tensor>],
     weights: &WeightSet,
-) -> Tensor {
-    match layer.kind {
+) -> Result<Tensor, ExecError> {
+    Ok(match layer.kind {
         LayerKind::Act(kind) => apply_act(x, kind),
         LayerKind::Pool { kind, size, stride } => match kind {
             PoolKind::Max => x.maxpool2d(size, stride),
@@ -260,20 +370,47 @@ fn glue_layer(
                 outs[layer.inputs[1]].as_ref().expect("skip producer executed before Add");
             x.add(skip)
         }
-        LayerKind::SqueezeExcite { .. } => match weights.get(layer.id) {
-            Some(LayerWeights::SqueezeExcite { reduce, expand }) => {
-                squeeze_excite(x, reduce, expand)
-            }
-            other => panic!(
-                "layer {}: missing SE weights (got {:?})",
-                layer.id,
-                other.map(|w| w.role())
-            ),
-        },
+        LayerKind::SqueezeExcite { .. } => {
+            let (reduce, expand) = se_weights(weights, layer.id)?;
+            squeeze_excite(x, reduce, expand)
+        }
         LayerKind::Conv2d { .. } | LayerKind::Linear { .. } => {
             unreachable!("glue_layer called on compute layer {}", layer.id)
         }
-    }
+    })
+}
+
+/// The batched counterpart of [`glue_layer`]: `x` and the entries of `outs`
+/// carry a leading batch dimension. Elementwise ops (activations, residual
+/// add) apply to the whole batch tensor directly; windowed ops fan per
+/// image through [`batch_map`] and reuse the scalar kernels verbatim.
+fn glue_layer_batch(
+    layer: &Layer,
+    x: &Tensor,
+    outs: &[Option<Tensor>],
+    weights: &WeightSet,
+    workers: usize,
+) -> Result<Tensor, ExecError> {
+    Ok(match layer.kind {
+        LayerKind::Act(kind) => apply_act(x, kind),
+        LayerKind::Pool { kind, size, stride } => batch_map(x, workers, |img| match kind {
+            PoolKind::Max => img.maxpool2d(size, stride),
+            PoolKind::Avg => img.avgpool2d(size, stride),
+        }),
+        LayerKind::GlobalAvgPool => batch_map(x, workers, |img| img.global_avg_pool()),
+        LayerKind::Add => {
+            let skip =
+                outs[layer.inputs[1]].as_ref().expect("skip producer executed before Add");
+            x.add(skip)
+        }
+        LayerKind::SqueezeExcite { .. } => {
+            let (reduce, expand) = se_weights(weights, layer.id)?;
+            batch_map(x, workers, |img| squeeze_excite(img, reduce, expand))
+        }
+        LayerKind::Conv2d { .. } | LayerKind::Linear { .. } => {
+            unreachable!("glue_layer_batch called on compute layer {}", layer.id)
+        }
+    })
 }
 
 fn check_shape(layer: &Layer, y: &Tensor) {
@@ -282,6 +419,17 @@ fn check_shape(layer: &Layer, y: &Tensor) {
         y.dims(),
         &[oh, ow, oc][..],
         "layer {} ({}) produced wrong shape",
+        layer.id,
+        layer.name
+    );
+}
+
+fn check_shape_batch(layer: &Layer, nb: usize, y: &Tensor) {
+    let (oh, ow, oc) = layer.out_hwc();
+    debug_assert_eq!(
+        y.dims(),
+        &[nb, oh, ow, oc][..],
+        "layer {} ({}) produced wrong batched shape",
         layer.id,
         layer.name
     );
@@ -301,31 +449,87 @@ fn pack_geometry(scheme: PruneScheme) -> (usize, usize) {
     }
 }
 
-/// A compiled plan bound to weights, with per-layer kernel state prepared
-/// **once**: packed block-CSR matrices for every sparse GEMM layer and
-/// Winograd-domain kernel transforms for every Winograd group. Repeated
-/// [`Executor::run`] calls pay only the kernel time, not the preparation.
-pub struct Executor<'a> {
-    net: &'a Network,
-    plan: &'a ExecutionPlan,
-    weights: &'a WeightSet,
+/// Every *bound* weight tensor must carry the dims the layer definition
+/// implies — checked at bind time so the kernel paths (which reshape and
+/// index freely) can never panic on a malformed weight mid-request.
+/// Missing entries are allowed here: they surface per-request as
+/// [`ExecError::MissingWeights`], which is the behavior the engine's
+/// fail-one-request tests pin.
+fn validate_weight_shapes(net: &Network, weights: &WeightSet) -> Result<(), ExecError> {
+    for (&id, lw) in weights.iter() {
+        let Some(layer) = net.layers.get(id) else {
+            continue; // extra entries are ignored by every lookup path
+        };
+        // role first: a wrong-role binding is a MissingWeights-style error
+        // (same shape the per-request lookups report), not a shape clash
+        let (want_role, want): (&'static str, Vec<Vec<usize>>) = match layer.kind {
+            LayerKind::Conv2d { kh, kw, cin, cout, depthwise, .. } => {
+                if depthwise {
+                    ("depthwise", vec![vec![kh, kw, cout]])
+                } else {
+                    ("conv", vec![vec![kh, kw, cin, cout]])
+                }
+            }
+            LayerKind::Linear { din, dout } => ("linear", vec![vec![din, dout]]),
+            LayerKind::SqueezeExcite { c, reduced } => {
+                ("squeeze_excite", vec![vec![c, reduced], vec![reduced, c]])
+            }
+            _ => continue, // weights bound to an unweighted layer: unused
+        };
+        if lw.role() != want_role {
+            return Err(ExecError::MissingWeights {
+                layer: id,
+                want: want_role,
+                got: Some(lw.role()),
+            });
+        }
+        let got: Vec<&[usize]> = match lw {
+            LayerWeights::Conv(t) | LayerWeights::Depthwise(t) | LayerWeights::Linear(t) => {
+                vec![t.dims()]
+            }
+            LayerWeights::SqueezeExcite { reduce, expand } => {
+                vec![reduce.dims(), expand.dims()]
+            }
+        };
+        // roles match, so the tensor counts match by construction
+        for (w, g) in want.iter().zip(&got) {
+            if w.as_slice() != *g {
+                return Err(ExecError::WeightShape {
+                    layer: id,
+                    got: g.to_vec(),
+                    want: w.clone(),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-layer kernel state a plan needs beyond the raw weights, prepared
+/// **once** per (plan, weights) binding: packed block-CSR matrices for
+/// every sparse GEMM layer and Winograd-domain kernel transforms for every
+/// Winograd group. An [`Executor`] owns one of these, or — for serving,
+/// where many worker threads execute the same binding — borrows a shared
+/// instance via [`Executor::with_prepared`] so the packing cost is paid
+/// once per model, not once per worker.
+#[derive(Debug, Clone, Default)]
+pub struct PreparedKernels {
     packed: BTreeMap<usize, BlockCsr>,
     wino: BTreeMap<usize, winograd::WinogradKernel>,
 }
 
-impl<'a> Executor<'a> {
-    /// Bind a plan to weights. `sparsity` must be the map the plan was
-    /// compiled with; annotated GEMM layers are packed here (block geometry
-    /// follows the annotation's scheme) when the framework executes sparse
-    /// models, and Winograd kernels are pre-transformed. `weights` should
-    /// already be masked ([`WeightSet::apply_sparsity`]).
-    pub fn new(
-        net: &'a Network,
-        plan: &'a ExecutionPlan,
+impl PreparedKernels {
+    /// Pack sparse GEMM layers and pre-transform Winograd kernels for
+    /// `plan` bound to `weights`. `sparsity` must be the map the plan was
+    /// compiled with (block geometry follows each annotation's scheme);
+    /// packing only happens when the framework executes sparse models.
+    pub fn try_prepare(
+        net: &Network,
+        plan: &ExecutionPlan,
         sparsity: &SparsityMap,
-        weights: &'a WeightSet,
-    ) -> Executor<'a> {
-        assert_eq!(plan.network, net.name, "plan was compiled for a different network");
+        weights: &WeightSet,
+    ) -> Result<PreparedKernels, ExecError> {
+        validate_weight_shapes(net, weights)?;
         let sparse_exec = plan.framework.caps().sparse;
         let mut packed = BTreeMap::new();
         let mut wino = BTreeMap::new();
@@ -342,7 +546,7 @@ impl<'a> Executor<'a> {
                 if depthwise {
                     continue;
                 }
-                let w = conv_weight(weights, id, false);
+                let w = conv_weight(weights, id, false)?;
                 if g.algo == Algo::Winograd {
                     wino.insert(id, winograd::transform_kernel(w));
                     continue;
@@ -359,16 +563,134 @@ impl<'a> Executor<'a> {
                 packed.insert(id, BlockCsr::pack(&w2, br, bc));
             }
         }
-        Executor { net, plan, weights, packed, wino }
+        Ok(PreparedKernels { packed, wino })
+    }
+
+    /// Number of block-CSR-packed GEMM layers.
+    pub fn num_packed(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Number of pre-transformed Winograd kernels.
+    pub fn num_winograd(&self) -> usize {
+        self.wino.len()
+    }
+}
+
+/// Owned-or-shared prepared state (shared for serving worker threads).
+enum Prep<'a> {
+    Owned(PreparedKernels),
+    Shared(&'a PreparedKernels),
+}
+
+/// A compiled plan bound to weights, with per-layer kernel state
+/// ([`PreparedKernels`]) prepared **once**. Repeated [`Executor::run`] /
+/// [`Executor::try_run_batch`] calls pay only the kernel time, not the
+/// preparation.
+pub struct Executor<'a> {
+    net: &'a Network,
+    plan: &'a ExecutionPlan,
+    weights: &'a WeightSet,
+    prep: Prep<'a>,
+    /// Threads for intra-op tiling (GEMM row tiles, per-image fan-out).
+    /// 1 = fully sequential; any value yields bit-identical outputs.
+    intra_workers: usize,
+}
+
+impl<'a> Executor<'a> {
+    /// Bind a plan to weights, preparing kernel state. `sparsity` must be
+    /// the map the plan was compiled with; `weights` should already be
+    /// masked ([`WeightSet::apply_sparsity`]). Panics on a malformed
+    /// binding — use [`Executor::try_new`] for a typed error instead.
+    pub fn new(
+        net: &'a Network,
+        plan: &'a ExecutionPlan,
+        sparsity: &SparsityMap,
+        weights: &'a WeightSet,
+    ) -> Executor<'a> {
+        Self::try_new(net, plan, sparsity, weights)
+            .unwrap_or_else(|e| panic!("executor bind: {e}"))
+    }
+
+    /// [`Executor::new`] with a typed error instead of a panic when the
+    /// weight set does not cover the plan's prepared layers.
+    pub fn try_new(
+        net: &'a Network,
+        plan: &'a ExecutionPlan,
+        sparsity: &SparsityMap,
+        weights: &'a WeightSet,
+    ) -> Result<Executor<'a>, ExecError> {
+        assert_eq!(plan.network, net.name, "plan was compiled for a different network");
+        let prepared = PreparedKernels::try_prepare(net, plan, sparsity, weights)?;
+        Ok(Executor { net, plan, weights, prep: Prep::Owned(prepared), intra_workers: 1 })
+    }
+
+    /// Bind against kernel state prepared elsewhere
+    /// ([`PreparedKernels::try_prepare`]) — the serving path: one
+    /// preparation shared by every worker thread's executor view.
+    pub fn with_prepared(
+        net: &'a Network,
+        plan: &'a ExecutionPlan,
+        weights: &'a WeightSet,
+        prepared: &'a PreparedKernels,
+    ) -> Executor<'a> {
+        assert_eq!(plan.network, net.name, "plan was compiled for a different network");
+        Executor { net, plan, weights, prep: Prep::Shared(prepared), intra_workers: 1 }
+    }
+
+    /// Set the intra-op tiling width (clamped to at least 1). Outputs are
+    /// bit-identical for every value; this only trades wall-clock.
+    pub fn with_intra_workers(mut self, workers: usize) -> Executor<'a> {
+        self.intra_workers = workers.max(1);
+        self
+    }
+
+    fn prepared(&self) -> &PreparedKernels {
+        match &self.prep {
+            Prep::Owned(p) => p,
+            Prep::Shared(p) => *p,
+        }
     }
 
     /// Run one inference end-to-end on `input` (`(h, w, c)` matching the
-    /// network input); returns the final layer's output tensor.
+    /// network input); returns the final layer's output tensor. Panics on
+    /// malformed bindings — serving paths use [`Executor::try_run`].
     pub fn run(&self, input: &Tensor) -> Tensor {
+        self.try_run(input).unwrap_or_else(|e| panic!("executor: {e}"))
+    }
+
+    /// [`Executor::run`] with typed errors: a batch of one.
+    pub fn try_run(&self, input: &Tensor) -> Result<Tensor, ExecError> {
+        let mut out = self.try_run_batch(std::slice::from_ref(input))?;
+        Ok(out.pop().expect("batch of one output"))
+    }
+
+    /// Execute a micro-batch: all `inputs` (each `(h, w, c)`) through one
+    /// pass over the plan, returning one output per input, in order.
+    /// Bit-identical to n sequential [`Executor::run`] calls; see the
+    /// module docs for where the batch amortization comes from.
+    pub fn try_run_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, ExecError> {
+        if inputs.is_empty() {
+            return Err(ExecError::EmptyBatch);
+        }
         let net = self.net;
-        let weights = self.weights;
         let (ih, iw, ic) = net.input_hwc;
-        assert_eq!(input.dims(), &[ih, iw, ic][..], "input shape mismatch");
+        for x in inputs {
+            if x.dims() != &[ih, iw, ic][..] {
+                return Err(ExecError::InputShape {
+                    want: net.input_hwc,
+                    got: x.dims().to_vec(),
+                });
+            }
+        }
+        if net.layers.is_empty() {
+            return Err(ExecError::EmptyNetwork);
+        }
+        let nb = inputs.len();
+        let workers = self.intra_workers;
+        let weights = self.weights;
+        let prep = self.prepared();
+        let input = Tensor::stack(inputs);
 
         let mut outs: Vec<Option<Tensor>> = vec![None; net.layers.len()];
         for g in &self.plan.groups {
@@ -376,64 +698,80 @@ impl<'a> Executor<'a> {
                 let layer = &net.layers[id];
                 let y = match layer.kind {
                     LayerKind::Conv2d { kh, kw, cin, cout, stride, depthwise } => {
-                        let x = producer(&outs, layer, input);
-                        let w = conv_weight(weights, id, depthwise);
+                        let x = producer(&outs, layer, &input);
+                        let w = conv_weight(weights, id, depthwise)?;
                         if depthwise {
-                            x.conv2d_depthwise(w, stride)
+                            batch_map(x, workers, |img| img.conv2d_depthwise(w, stride))
                         } else {
                             match g.algo {
-                                Algo::Winograd => match self.wino.get(&id) {
-                                    Some(k) => winograd::winograd_conv2d_prepared(x, k),
-                                    None => winograd::winograd_conv2d(x, w),
+                                Algo::Winograd => match prep.wino.get(&id) {
+                                    Some(k) => batch_map(x, workers, |img| {
+                                        winograd::winograd_conv2d_prepared(img, k)
+                                    }),
+                                    None => batch_map(x, workers, |img| {
+                                        winograd::winograd_conv2d(img, w)
+                                    }),
                                 },
                                 Algo::Gemm1x1 | Algo::GemmIm2col => {
                                     // 1x1 stride-1 skips im2col: the patch
-                                    // matrix is the feature map itself
+                                    // matrix is the feature-map batch itself
                                     let patches = if kh == 1 && kw == 1 && stride == 1 {
                                         let (xh, xw, _) = layer.in_hwc;
-                                        x.clone().reshape(vec![xh * xw, cin])
+                                        x.clone().reshape(vec![nb * xh * xw, cin])
                                     } else {
-                                        x.im2col(kh, kw, stride)
+                                        x.im2col_batch(kh, kw, stride)
                                     };
-                                    let flat = match self.packed.get(&id) {
-                                        Some(csr) => csr.matmul(&patches),
+                                    let flat = match prep.packed.get(&id) {
+                                        Some(csr) => csr.matmul_tiled(&patches, workers),
                                         None => {
                                             let w2 = w
                                                 .clone()
                                                 .reshape(vec![kh * kw * cin, cout]);
-                                            patches.matmul(&w2)
+                                            patches.matmul_tiled(&w2, workers)
                                         }
                                     };
                                     let (oh, _) = same_pad(layer.in_hwc.0, kh, stride);
                                     let (ow, _) = same_pad(layer.in_hwc.1, kw, stride);
-                                    flat.reshape(vec![oh, ow, cout])
+                                    flat.reshape(vec![nb, oh, ow, cout])
                                 }
                                 // a conv anchored in a non-conv group (foreign
                                 // framework quirks): fall back to direct
-                                _ => x.conv2d_direct(w, stride),
+                                _ => batch_map(x, workers, |img| img.conv2d_direct(w, stride)),
                             }
                         }
                     }
                     LayerKind::Linear { .. } => {
-                        let x = producer(&outs, layer, input);
-                        match weights.get(id) {
-                            Some(LayerWeights::Linear(w)) => linear_forward(x, w),
-                            other => panic!(
-                                "layer {id}: missing FC weights (got {:?})",
-                                other.map(|w| w.role())
-                            ),
+                        let x = producer(&outs, layer, &input);
+                        let w = linear_weight(weights, id)?;
+                        let (din, dout) = (w.dims()[0], w.dims()[1]);
+                        if x.numel() != nb * din {
+                            return Err(ExecError::FcShape {
+                                layer: id,
+                                got: x.numel() / nb,
+                                want: din,
+                            });
                         }
+                        x.clone()
+                            .reshape(vec![nb, din])
+                            .matmul_tiled(w, workers)
+                            .reshape(vec![nb, 1, 1, dout])
                     }
                     _ => {
-                        let x = producer(&outs, layer, input);
-                        glue_layer(layer, x, &outs, weights)
+                        let x = producer(&outs, layer, &input);
+                        glue_layer_batch(layer, x, &outs, weights, workers)?
                     }
                 };
-                check_shape(layer, &y);
+                check_shape_batch(layer, nb, &y);
                 outs[id] = Some(y);
             }
         }
-        outs.last_mut().and_then(|o| o.take()).expect("empty network")
+        let last = outs.last_mut().and_then(|o| o.take()).ok_or(ExecError::EmptyNetwork)?;
+        Ok(last.unstack())
+    }
+
+    /// Panicking convenience over [`Executor::try_run_batch`].
+    pub fn run_batch(&self, inputs: &[Tensor]) -> Vec<Tensor> {
+        self.try_run_batch(inputs).unwrap_or_else(|e| panic!("executor: {e}"))
     }
 }
 
@@ -461,7 +799,8 @@ pub fn run_dense_reference(net: &Network, weights: &WeightSet, input: &Tensor) -
         let y = match layer.kind {
             LayerKind::Conv2d { stride, depthwise, .. } => {
                 let x = producer(&outs, layer, input);
-                let w = conv_weight(weights, layer.id, depthwise);
+                let w = conv_weight(weights, layer.id, depthwise)
+                    .unwrap_or_else(|e| panic!("dense reference: {e}"));
                 if depthwise {
                     x.conv2d_depthwise(w, stride)
                 } else {
@@ -470,18 +809,14 @@ pub fn run_dense_reference(net: &Network, weights: &WeightSet, input: &Tensor) -
             }
             LayerKind::Linear { .. } => {
                 let x = producer(&outs, layer, input);
-                match weights.get(layer.id) {
-                    Some(LayerWeights::Linear(w)) => linear_forward(x, w),
-                    other => panic!(
-                        "layer {}: missing FC weights (got {:?})",
-                        layer.id,
-                        other.map(|w| w.role())
-                    ),
-                }
+                let w = linear_weight(weights, layer.id)
+                    .unwrap_or_else(|e| panic!("dense reference: {e}"));
+                linear_forward(x, w)
             }
             _ => {
                 let x = producer(&outs, layer, input);
                 glue_layer(layer, x, &outs, weights)
+                    .unwrap_or_else(|e| panic!("dense reference: {e}"))
             }
         };
         check_shape(layer, &y);
@@ -533,6 +868,25 @@ mod tests {
         (got, want)
     }
 
+    fn glue_heavy_net() -> Network {
+        // depthwise + SE + pool + residual add + GAP + FC, no winograd
+        let mut b = NetworkBuilder::new("glue", (12, 12, 8));
+        b.conv2d(1, 8, 1);
+        b.act(ActKind::HardSwish);
+        let skip = b.head().unwrap();
+        b.depthwise(3, 1);
+        b.act(ActKind::Relu6);
+        b.squeeze_excite(4);
+        b.conv2d(1, 8, 1);
+        b.add_from(skip);
+        b.pool(crate::graph::PoolKind::Max, 2, 2);
+        b.conv2d(3, 12, 2);
+        b.act(ActKind::Swish);
+        b.global_avg_pool();
+        b.linear(5);
+        b.build()
+    }
+
     #[test]
     fn winograd_plan_matches_reference() {
         let net = zoo::single_conv(10, 3, 6, 8);
@@ -542,8 +896,8 @@ mod tests {
         // the executor pre-transforms winograd kernels at bind time
         let weights = WeightSet::random(&net, 1);
         let exec = Executor::new(&net, &plan, &SparsityMap::new(), &weights);
-        assert_eq!(exec.wino.len(), 1);
-        assert!(exec.packed.is_empty());
+        assert_eq!(exec.prepared().num_winograd(), 1);
+        assert_eq!(exec.prepared().num_packed(), 0);
     }
 
     #[test]
@@ -595,7 +949,11 @@ mod tests {
         let mut weights = WeightSet::random(&net, 3);
         weights.apply_sparsity(&sp);
         let exec = Executor::new(&net, &plan, &sp, &weights);
-        assert_eq!(exec.packed.len(), 1, "the annotated conv must be packed once");
+        assert_eq!(
+            exec.prepared().num_packed(),
+            1,
+            "the annotated conv must be packed once"
+        );
         let mut rng = XorShift64Star::new(4);
         let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
         let a = exec.run(&x);
@@ -606,22 +964,7 @@ mod tests {
 
     #[test]
     fn glue_heavy_network_parity_is_exact() {
-        // depthwise + SE + pool + residual add + GAP + FC, no winograd
-        let mut b = NetworkBuilder::new("glue", (12, 12, 8));
-        b.conv2d(1, 8, 1);
-        b.act(ActKind::HardSwish);
-        let skip = b.head().unwrap();
-        b.depthwise(3, 1);
-        b.act(ActKind::Relu6);
-        b.squeeze_excite(4);
-        b.conv2d(1, 8, 1);
-        b.add_from(skip);
-        b.pool(crate::graph::PoolKind::Max, 2, 2);
-        b.conv2d(3, 12, 2);
-        b.act(ActKind::Swish);
-        b.global_avg_pool();
-        b.linear(5);
-        let net = b.build();
+        let net = glue_heavy_net();
         parity(&net, &SparsityMap::new(), Framework::TFLite, 1e-6);
         // and through our framework (winograd-capable) with a loose bound
         parity(&net, &SparsityMap::new(), Framework::Ours, 1e-3);
@@ -640,6 +983,120 @@ mod tests {
     }
 
     #[test]
+    fn run_batch_bit_identical_to_sequential_runs() {
+        // the core batching contract: for a glue-heavy net (every kernel
+        // family) and a sparse net, run_batch == n sequential runs, exactly,
+        // for every intra-op tiling width and ragged batch sizes
+        let mut rng = XorShift64Star::new(51);
+        for (net, sp) in [
+            (glue_heavy_net(), SparsityMap::new()),
+            (zoo::single_conv(8, 3, 16, 16), {
+                let net = zoo::single_conv(8, 3, 16, 16);
+                uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0)
+            }),
+        ] {
+            let plan = compile(&net, &sp, &KRYO_485, Framework::Ours);
+            let mut weights = WeightSet::random(&net, 13);
+            weights.apply_sparsity(&sp);
+            let exec = Executor::new(&net, &plan, &sp, &weights);
+            let (h, w, c) = net.input_hwc;
+            for nb in [1usize, 3, 5] {
+                let inputs: Vec<Tensor> =
+                    (0..nb).map(|_| Tensor::he_normal(vec![h, w, c], &mut rng)).collect();
+                let seq: Vec<Tensor> = inputs.iter().map(|x| exec.run(x)).collect();
+                for workers in [1usize, 2, 4] {
+                    let tiled = Executor::new(&net, &plan, &sp, &weights)
+                        .with_intra_workers(workers);
+                    let got = tiled.run_batch(&inputs);
+                    assert_eq!(got.len(), nb);
+                    for (a, b) in got.iter().zip(&seq) {
+                        assert_eq!(a, b, "{}: nb={nb} workers={workers}", net.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_prepared_kernels_match_owned() {
+        let net = zoo::single_conv(8, 3, 16, 16);
+        let sp = uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0);
+        let plan = compile(&net, &sp, &KRYO_485, Framework::Ours);
+        let mut weights = WeightSet::random(&net, 3);
+        weights.apply_sparsity(&sp);
+        let prepared = PreparedKernels::try_prepare(&net, &plan, &sp, &weights).unwrap();
+        assert_eq!(prepared.num_packed(), 1);
+        let owned = Executor::new(&net, &plan, &sp, &weights);
+        let shared = Executor::with_prepared(&net, &plan, &weights, &prepared);
+        let mut rng = XorShift64Star::new(9);
+        let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
+        assert_eq!(owned.run(&x), shared.run(&x));
+    }
+
+    #[test]
+    fn typed_errors_instead_of_worker_death() {
+        let net = glue_heavy_net();
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        let weights = WeightSet::random(&net, 5);
+        let exec = Executor::new(&net, &plan, &SparsityMap::new(), &weights);
+        // wrong input shape: typed error, no panic
+        let bad = Tensor::zeros(vec![3, 3, 8]);
+        match exec.try_run(&bad) {
+            Err(ExecError::InputShape { want, got }) => {
+                assert_eq!(want, (12, 12, 8));
+                assert_eq!(got, vec![3, 3, 8]);
+            }
+            other => panic!("expected InputShape error, got {other:?}"),
+        }
+        // empty batch: typed error
+        assert_eq!(exec.try_run_batch(&[]), Err(ExecError::EmptyBatch));
+        // missing FC weights: typed error carrying the layer id
+        let mut broken = weights.clone();
+        let fc_id = net
+            .layers
+            .iter()
+            .find(|l| matches!(l.kind, LayerKind::Linear { .. }))
+            .unwrap()
+            .id;
+        broken.remove(fc_id);
+        let exec2 = Executor::new(&net, &plan, &SparsityMap::new(), &broken);
+        let x = Tensor::zeros(vec![12, 12, 8]);
+        match exec2.try_run(&x) {
+            Err(ExecError::MissingWeights { layer, want, got }) => {
+                assert_eq!(layer, fc_id);
+                assert_eq!(want, "linear");
+                assert_eq!(got, None);
+            }
+            other => panic!("expected MissingWeights error, got {other:?}"),
+        }
+        // the error formats into a readable message
+        let msg = exec2.try_run(&x).unwrap_err().to_string();
+        assert!(msg.contains("linear"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_weight_shapes_rejected_at_bind() {
+        // wrong-dims weights must be a typed bind error, not a reshape
+        // panic inside a kernel mid-request
+        let net = zoo::single_conv(8, 3, 4, 4);
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::TFLite);
+        let mut weights = WeightSet::random(&net, 2);
+        weights.insert(0, LayerWeights::Conv(Tensor::zeros(vec![3, 3, 2, 4])));
+        match Executor::try_new(&net, &plan, &SparsityMap::new(), &weights) {
+            Err(ExecError::WeightShape { layer, got, want }) => {
+                assert_eq!(layer, 0);
+                assert_eq!(got, vec![3, 3, 2, 4]);
+                assert_eq!(want, vec![3, 3, 4, 4]);
+            }
+            Ok(_) => panic!("mis-shaped conv weights bound successfully"),
+            Err(other) => panic!("expected WeightShape, got {other}"),
+        }
+        // correct shapes still bind
+        let good = WeightSet::random(&net, 2);
+        assert!(Executor::try_new(&net, &plan, &SparsityMap::new(), &good).is_ok());
+    }
+
+    #[test]
     fn weightset_random_is_deterministic() {
         let net = zoo::single_conv(6, 3, 4, 4);
         let a = WeightSet::random(&net, 7);
@@ -648,14 +1105,14 @@ mod tests {
             assert_eq!(ia, ib);
             match (wa, wb) {
                 (LayerWeights::Conv(x), LayerWeights::Conv(y)) => assert_eq!(x, y),
-                _ => panic!("unexpected weight roles"),
+                other => panic!("expected conv weights on both sides, got {other:?}"),
             }
         }
         let c = WeightSet::random(&net, 8);
         let (wa, wc) = (a.get(0).unwrap(), c.get(0).unwrap());
         match (wa, wc) {
             (LayerWeights::Conv(x), LayerWeights::Conv(y)) => assert_ne!(x, y),
-            _ => panic!("unexpected weight roles"),
+            other => panic!("expected conv weights on both sides, got {other:?}"),
         }
     }
 

@@ -128,20 +128,14 @@ impl BlockCsr {
         Tensor::new(vec![self.rows, self.cols], out)
     }
 
-    /// Sparse GEMM: `x (M, K=rows) x self (rows, cols) -> (M, cols)`,
-    /// skipping dropped blocks. Accumulation order per output element is
-    /// ascending `k`, matching [`Tensor::matmul`] on the unpacked matrix.
-    pub fn matmul(&self, x: &Tensor) -> Tensor {
-        let d = x.dims();
-        assert_eq!(d.len(), 2, "BlockCsr::matmul lhs must be 2-D, got {d:?}");
-        let (m, k) = (d[0], d[1]);
-        assert_eq!(k, self.rows, "inner dims {k} vs {}", self.rows);
-        let xd = x.data();
-        let n = self.cols;
-        let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            let xrow = &xd[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
+    /// The shared packed-GEMM row kernel: `xrows` holds rows of length
+    /// `self.rows`, `out` the matching rows of length `self.cols`
+    /// (zero-initialized). Both [`BlockCsr::matmul`] and
+    /// [`BlockCsr::matmul_tiled`] funnel through this loop, so tiled
+    /// execution is bit-identical to sequential by construction.
+    fn matmul_rows(&self, xrows: &[f32], out: &mut [f32]) {
+        let (k, n) = (self.rows, self.cols);
+        for (xrow, orow) in xrows.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
             for rb in 0..self.row_ptr.len() - 1 {
                 let r0 = rb * self.br;
                 let r1 = (r0 + self.br).min(self.rows);
@@ -163,6 +157,55 @@ impl BlockCsr {
                     }
                 }
             }
+        }
+    }
+
+    /// Sparse GEMM: `x (M, K=rows) x self (rows, cols) -> (M, cols)`,
+    /// skipping dropped blocks. Accumulation order per output element is
+    /// ascending `k`, matching [`Tensor::matmul`] on the unpacked matrix.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        let d = x.dims();
+        assert_eq!(d.len(), 2, "BlockCsr::matmul lhs must be 2-D, got {d:?}");
+        let (m, k) = (d[0], d[1]);
+        assert_eq!(k, self.rows, "inner dims {k} vs {}", self.rows);
+        let n = self.cols;
+        let mut out = vec![0f32; m * n];
+        if k > 0 && n > 0 {
+            self.matmul_rows(x.data(), &mut out);
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// [`BlockCsr::matmul`] with the M dimension split into row tiles
+    /// mapped across `workers` threads — the packed counterpart of
+    /// [`Tensor::matmul_tiled`], bit-identical to the sequential call for
+    /// every `workers` value (output rows are independent).
+    pub fn matmul_tiled(&self, x: &Tensor, workers: usize) -> Tensor {
+        const MIN_TILE_ROWS: usize = 8;
+        let d = x.dims();
+        assert_eq!(d.len(), 2, "BlockCsr::matmul_tiled lhs must be 2-D, got {d:?}");
+        let (m, k) = (d[0], d[1]);
+        assert_eq!(k, self.rows, "inner dims {k} vs {}", self.rows);
+        let n = self.cols;
+        if workers <= 1 || m < 2 * MIN_TILE_ROWS || k == 0 || n == 0 {
+            return self.matmul(x);
+        }
+        let tile = m.div_ceil(workers).max(MIN_TILE_ROWS);
+        let ranges: Vec<(usize, usize)> =
+            (0..m).step_by(tile).map(|r0| (r0, (r0 + tile).min(m))).collect();
+        let xd = x.data();
+        let chunks = crate::coordinator::scheduler::map_parallel(
+            workers,
+            &ranges,
+            |&(r0, r1)| {
+                let mut out = vec![0f32; (r1 - r0) * n];
+                self.matmul_rows(&xd[r0 * k..r1 * k], &mut out);
+                out
+            },
+        );
+        let mut out = Vec::with_capacity(m * n);
+        for c in &chunks {
+            out.extend_from_slice(c);
         }
         Tensor::new(vec![m, n], out)
     }
@@ -226,6 +269,22 @@ mod tests {
             assert_eq!(got.dims(), want.dims());
             for (a, b) in got.data().iter().zip(want.data()) {
                 assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "br={br}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_bit_identical_to_sequential() {
+        let mut rng = XorShift64Star::new(5);
+        let w = masked(36, 20, 3.0, 6);
+        let packed = BlockCsr::pack(&w, 4, 8);
+        for &m in &[1usize, 7, 40, 129] {
+            let x = Tensor::he_normal(vec![m, 36], &mut rng);
+            let want = packed.matmul(&x);
+            for workers in [1usize, 2, 4] {
+                let got = packed.matmul_tiled(&x, workers);
+                assert_eq!(got.dims(), want.dims());
+                assert_eq!(got.data(), want.data(), "m={m} workers={workers}");
             }
         }
     }

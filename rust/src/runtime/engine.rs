@@ -1,0 +1,594 @@
+//! Batched, thread-pool-backed inference serving — the throughput side of
+//! the executable backend.
+//!
+//! [`InferenceEngine`] owns one compiled model binding (network + plan +
+//! masked weights + [`PreparedKernels`]) and serves it over a bounded
+//! submission queue. Worker threads pop requests and **micro-batch** them:
+//! the first request is taken immediately, then the worker lingers up to
+//! `max_wait` (or until `max_batch` requests are in hand) before executing
+//! the whole batch through [`Executor::try_run_batch`] — one im2col + GEMM
+//! (dense or packed block-CSR) per conv layer for the entire batch, with
+//! GEMM row tiles and per-image kernels fanned across
+//! `coordinator::scheduler::map_parallel` (`intra_workers`). Outputs are
+//! bit-identical to sequential [`Executor::run`] calls regardless of how
+//! requests get grouped into batches or how many threads tile a kernel, so
+//! serving is deterministic per input — the property the cross-thread
+//! tests pin.
+//!
+//! Failure model: a malformed request (wrong input shape) or a malformed
+//! binding (missing weights) fails *that request* with a typed
+//! [`ExecError`] — worker threads never die, and the queue keeps draining.
+//!
+//! Per-request latency (submit → response) and batch shape feed
+//! [`EngineStats`]: p50/p95/p99 latency percentiles, mean micro-batch
+//! size, and completed-request throughput. `benches/engine_throughput.rs`
+//! reports batch efficiency against N sequential `Executor::run` calls;
+//! `examples/serve_demo.rs` drives a multi-client session end-to-end.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::compiler::codegen::compile;
+use crate::compiler::{
+    DeviceSpec, ExecError, Executor, ExecutionPlan, Framework, PreparedKernels, SparsityMap,
+    WeightSet,
+};
+use crate::graph::Network;
+use crate::tensor::Tensor;
+
+use super::PlanBundle;
+
+/// Keep at most this many per-request latency samples (enough for stable
+/// tail percentiles; serving longer than this just stops sampling).
+const LATENCY_CAP: usize = 1 << 16;
+
+/// Micro-batching + threading policy of an [`InferenceEngine`].
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads popping micro-batches off the queue.
+    pub workers: usize,
+    /// Largest micro-batch a worker will assemble.
+    pub max_batch: usize,
+    /// How long a worker lingers for more requests after the first.
+    pub max_wait: Duration,
+    /// Bound of the submission queue; [`InferenceEngine::submit`] blocks
+    /// (backpressure) when full, [`InferenceEngine::try_submit`] errors.
+    pub queue_cap: usize,
+    /// Intra-op tiling width inside one batch execution (GEMM row tiles /
+    /// per-image fan-out). Does not change outputs, only wall-clock.
+    pub intra_workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        EngineConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 1024,
+            intra_workers: cores,
+        }
+    }
+}
+
+/// Why a request (or submission) failed at the engine layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// The executor rejected this request (typed per-request failure).
+    Exec(ExecError),
+    /// The engine is shutting down; no new requests are accepted.
+    ShuttingDown,
+    /// `try_submit` found the bounded queue full.
+    QueueFull,
+    /// The serving thread disappeared without answering (should not
+    /// happen — executor failures are typed, not panics).
+    WorkerLost,
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Exec(e) => write!(f, "request failed: {e}"),
+            EngineError::ShuttingDown => write!(f, "engine is shutting down"),
+            EngineError::QueueFull => write!(f, "submission queue is full"),
+            EngineError::WorkerLost => write!(f, "worker thread lost"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<ExecError> for EngineError {
+    fn from(e: ExecError) -> EngineError {
+        EngineError::Exec(e)
+    }
+}
+
+/// Counter/percentile snapshot of a running engine.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Requests answered successfully.
+    pub completed: u64,
+    /// Requests answered with a typed error.
+    pub failed: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Mean requests per micro-batch (batching effectiveness).
+    pub mean_batch: f64,
+    /// Submit→response latency percentiles over completed requests (ms).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Completed requests per second since the engine started.
+    pub throughput_rps: f64,
+}
+
+struct Model {
+    net: Network,
+    plan: Arc<ExecutionPlan>,
+    weights: WeightSet,
+    prepared: PreparedKernels,
+}
+
+struct EngineShared {
+    model: Model,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batch_items: AtomicU64,
+    latencies_ms: Mutex<Vec<f64>>,
+    started: Instant,
+}
+
+struct Request {
+    input: Tensor,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<Tensor, ExecError>>,
+}
+
+/// An in-flight request handle; [`PendingResponse::wait`] blocks for the
+/// response.
+pub struct PendingResponse {
+    rx: Receiver<Result<Tensor, ExecError>>,
+}
+
+impl PendingResponse {
+    pub fn wait(self) -> Result<Tensor, EngineError> {
+        match self.rx.recv() {
+            Ok(Ok(t)) => Ok(t),
+            Ok(Err(e)) => Err(EngineError::Exec(e)),
+            Err(_) => Err(EngineError::WorkerLost),
+        }
+    }
+}
+
+/// See the module docs. Construction compiles/binds the model and spawns
+/// the worker pool; dropping the engine drains the queue and joins it.
+pub struct InferenceEngine {
+    tx: Option<SyncSender<Request>>,
+    threads: Vec<JoinHandle<()>>,
+    shared: Arc<EngineShared>,
+    config: EngineConfig,
+}
+
+impl InferenceEngine {
+    /// Compile `net` for `(device, framework)` and serve it. `weights`
+    /// should already be masked (`WeightSet::apply_sparsity`).
+    pub fn new(
+        net: Network,
+        sparsity: &SparsityMap,
+        weights: WeightSet,
+        device: &DeviceSpec,
+        framework: Framework,
+        config: EngineConfig,
+    ) -> Result<InferenceEngine, ExecError> {
+        let plan = Arc::new(compile(&net, sparsity, device, framework));
+        Self::with_plan(net, sparsity, weights, plan, config)
+    }
+
+    /// Serve an already-compiled plan — the `compiler::PlanCache` path:
+    /// `cache.get_or_compile(..)` hands out a shared `Arc<ExecutionPlan>`
+    /// that any number of engines (and threads) can bind against.
+    pub fn with_plan(
+        net: Network,
+        sparsity: &SparsityMap,
+        weights: WeightSet,
+        plan: Arc<ExecutionPlan>,
+        config: EngineConfig,
+    ) -> Result<InferenceEngine, ExecError> {
+        assert!(config.workers >= 1, "engine needs at least one worker");
+        assert!(config.max_batch >= 1, "max_batch must be at least 1");
+        assert!(config.queue_cap >= 1, "queue_cap must be at least 1");
+        assert_eq!(plan.network, net.name, "plan was compiled for a different network");
+        let prepared = PreparedKernels::try_prepare(&net, &plan, sparsity, &weights)?;
+        let shared = Arc::new(EngineShared {
+            model: Model { net, plan, weights, prepared },
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_items: AtomicU64::new(0),
+            latencies_ms: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        });
+        let (tx, rx) = mpsc::sync_channel::<Request>(config.queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut threads = Vec::with_capacity(config.workers);
+        for i in 0..config.workers {
+            let shared = shared.clone();
+            let rx = rx.clone();
+            let cfg = config.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("npas-engine-{i}"))
+                .spawn(move || worker_loop(&shared, &rx, &cfg))
+                .expect("spawning engine worker");
+            threads.push(handle);
+        }
+        Ok(InferenceEngine { tx: Some(tx), threads, shared, config })
+    }
+
+    /// Serve a loaded [`PlanBundle`] (clones its parts).
+    pub fn from_bundle(
+        bundle: &PlanBundle,
+        device: &DeviceSpec,
+        framework: Framework,
+        config: EngineConfig,
+    ) -> Result<InferenceEngine, ExecError> {
+        InferenceEngine::new(
+            bundle.network.clone(),
+            &bundle.sparsity,
+            bundle.weights.clone(),
+            device,
+            framework,
+            config,
+        )
+    }
+
+    /// Enqueue one request, blocking while the queue is full
+    /// (backpressure). The returned handle resolves to this request's
+    /// output or its typed error.
+    pub fn submit(&self, input: Tensor) -> Result<PendingResponse, EngineError> {
+        let tx = self.tx.as_ref().ok_or(EngineError::ShuttingDown)?;
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request { input, enqueued: Instant::now(), tx: rtx })
+            .map_err(|_| EngineError::ShuttingDown)?;
+        Ok(PendingResponse { rx: rrx })
+    }
+
+    /// Non-blocking [`InferenceEngine::submit`]: errors with
+    /// [`EngineError::QueueFull`] instead of waiting for queue space.
+    pub fn try_submit(&self, input: Tensor) -> Result<PendingResponse, EngineError> {
+        let tx = self.tx.as_ref().ok_or(EngineError::ShuttingDown)?;
+        let (rtx, rrx) = mpsc::channel();
+        match tx.try_send(Request { input, enqueued: Instant::now(), tx: rtx }) {
+            Ok(()) => Ok(PendingResponse { rx: rrx }),
+            Err(TrySendError::Full(_)) => Err(EngineError::QueueFull),
+            Err(TrySendError::Disconnected(_)) => Err(EngineError::ShuttingDown),
+        }
+    }
+
+    /// Synchronous single inference: submit + wait.
+    pub fn run(&self, input: Tensor) -> Result<Tensor, EngineError> {
+        self.submit(input)?.wait()
+    }
+
+    /// Submit every input, then wait for all responses (in input order).
+    /// Submitting before waiting lets the workers micro-batch the set; a
+    /// per-request failure shows up as that slot's `Err`.
+    pub fn run_batch(&self, inputs: &[Tensor]) -> Vec<Result<Tensor, EngineError>> {
+        let pending: Vec<Result<PendingResponse, EngineError>> =
+            inputs.iter().map(|x| self.submit(x.clone())).collect();
+        pending.into_iter().map(|p| p.and_then(PendingResponse::wait)).collect()
+    }
+
+    /// The served network.
+    pub fn network(&self) -> &Network {
+        &self.shared.model.net
+    }
+
+    /// The compiled plan being served.
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.shared.model.plan
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Snapshot of the serving counters and latency percentiles.
+    pub fn stats(&self) -> EngineStats {
+        let s = &self.shared;
+        let completed = s.completed.load(Ordering::Relaxed);
+        let failed = s.failed.load(Ordering::Relaxed);
+        let batches = s.batches.load(Ordering::Relaxed);
+        let items = s.batch_items.load(Ordering::Relaxed);
+        let mut lat = s.latencies_ms.lock().unwrap().clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[(((lat.len() - 1) as f64) * p).round() as usize]
+            }
+        };
+        let elapsed = s.started.elapsed().as_secs_f64();
+        EngineStats {
+            completed,
+            failed,
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+        }
+    }
+
+    /// Stop accepting requests, drain the queue, join the workers.
+    /// Requests already enqueued are still answered.
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        for handle in self.threads.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for InferenceEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &EngineShared, rx: &Mutex<Receiver<Request>>, cfg: &EngineConfig) {
+    let m = &shared.model;
+    let exec = Executor::with_prepared(&m.net, &m.plan, &m.weights, &m.prepared)
+        .with_intra_workers(cfg.intra_workers);
+    loop {
+        let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+        {
+            // holding the receiver lock while waiting is intentional: idle
+            // workers queue on the lock, the holder assembles a whole
+            // micro-batch, and execution happens after the lock drops so
+            // the next worker can start collecting immediately.
+            let rx = rx.lock().unwrap();
+            match rx.recv() {
+                Ok(req) => batch.push(req),
+                Err(_) => return, // engine dropped its sender: shutdown
+            }
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    // linger expired: take only what is already queued
+                    match rx.try_recv() {
+                        Ok(req) => batch.push(req),
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(req) => batch.push(req),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            }
+        }
+        execute_batch(shared, &exec, batch);
+    }
+}
+
+fn execute_batch(shared: &EngineShared, exec: &Executor<'_>, batch: Vec<Request>) {
+    if batch.is_empty() {
+        return;
+    }
+    shared.batches.fetch_add(1, Ordering::Relaxed);
+    shared.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+    // validate shapes per request up front so one malformed request fails
+    // alone instead of poisoning its batch mates
+    let want = shared.model.net.input_hwc;
+    let mut inputs = Vec::with_capacity(batch.len());
+    let mut pending = Vec::with_capacity(batch.len());
+    for req in batch {
+        let d = req.input.dims();
+        if d != &[want.0, want.1, want.2][..] {
+            shared.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = req
+                .tx
+                .send(Err(ExecError::InputShape { want, got: d.to_vec() }));
+            continue;
+        }
+        inputs.push(req.input);
+        pending.push((req.tx, req.enqueued));
+    }
+    if inputs.is_empty() {
+        return;
+    }
+
+    match exec.try_run_batch(&inputs) {
+        Ok(outputs) => {
+            let done = Instant::now();
+            let mut lat = shared.latencies_ms.lock().unwrap();
+            for ((tx, enqueued), out) in pending.into_iter().zip(outputs) {
+                if lat.len() < LATENCY_CAP {
+                    lat.push(done.duration_since(enqueued).as_secs_f64() * 1e3);
+                }
+                shared.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            // a typed failure (e.g. missing weights in a malformed bundle)
+            // answers every affected request; the worker thread survives
+            for (tx, _) in pending {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Err(e.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::KRYO_485;
+    use crate::compiler::{run_dense_reference, uniform_sparsity};
+    use crate::graph::zoo;
+    use crate::pruning::PruneScheme;
+    use crate::tensor::XorShift64Star;
+
+    fn small_cfg() -> EngineConfig {
+        EngineConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+            intra_workers: 2,
+        }
+    }
+
+    fn sparse_engine_parts() -> (Network, SparsityMap, WeightSet) {
+        let net = zoo::single_conv(8, 3, 16, 16);
+        let sp = uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0);
+        let mut weights = WeightSet::random(&net, 3);
+        weights.apply_sparsity(&sp);
+        (net, sp, weights)
+    }
+
+    #[test]
+    fn engine_answers_match_dense_reference() {
+        let (net, sp, weights) = sparse_engine_parts();
+        let engine = InferenceEngine::new(
+            net.clone(),
+            &sp,
+            weights.clone(),
+            &KRYO_485,
+            Framework::Ours,
+            small_cfg(),
+        )
+        .unwrap();
+        let mut rng = XorShift64Star::new(21);
+        for _ in 0..3 {
+            let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
+            let got = engine.run(x.clone()).unwrap();
+            let want = run_dense_reference(&net, &weights, &x);
+            let scale = want.abs_max().max(1e-3);
+            let diff = crate::compiler::max_abs_diff(&got, &want);
+            assert!(diff <= 1e-4 * scale, "diff {diff} vs scale {scale}");
+        }
+        let stats = engine.stats();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.failed, 0);
+        assert!(stats.batches >= 1 && stats.batches <= 3);
+        assert!(stats.p50_ms > 0.0 && stats.p99_ms >= stats.p50_ms);
+        assert!(stats.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn malformed_request_fails_alone() {
+        let (net, sp, weights) = sparse_engine_parts();
+        let engine =
+            InferenceEngine::new(net, &sp, weights, &KRYO_485, Framework::Ours, small_cfg())
+                .unwrap();
+        let mut rng = XorShift64Star::new(22);
+        let good = Tensor::he_normal(vec![8, 8, 16], &mut rng);
+        let bad = Tensor::zeros(vec![2, 2, 2]);
+        let results = engine.run_batch(&[good.clone(), bad, good.clone()]);
+        assert!(results[0].is_ok());
+        assert!(matches!(
+            results[1],
+            Err(EngineError::Exec(ExecError::InputShape { .. }))
+        ));
+        assert!(results[2].is_ok());
+        // the engine keeps serving after the failure
+        assert!(engine.run(good).is_ok());
+        let stats = engine.stats();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.failed, 1);
+    }
+
+    #[test]
+    fn missing_weights_fail_requests_not_the_engine() {
+        // a malformed binding: FC weights missing. Prepared state still
+        // builds (it only packs conv layers), so the failure surfaces
+        // per-request — and must not kill the worker threads.
+        let mut b = crate::graph::NetworkBuilder::new("broken", (6, 6, 4));
+        b.conv2d(1, 8, 1);
+        b.global_avg_pool();
+        b.linear(3);
+        let net = b.build();
+        let mut weights = WeightSet::random(&net, 1);
+        let fc_id = net.layers.len() - 1;
+        weights.remove(fc_id);
+        let engine = InferenceEngine::new(
+            net,
+            &SparsityMap::new(),
+            weights,
+            &KRYO_485,
+            Framework::Ours,
+            small_cfg(),
+        )
+        .unwrap();
+        let x = Tensor::zeros(vec![6, 6, 4]);
+        for _ in 0..3 {
+            match engine.run(x.clone()) {
+                Err(EngineError::Exec(ExecError::MissingWeights { layer, .. })) => {
+                    assert_eq!(layer, fc_id);
+                }
+                other => panic!("expected MissingWeights, got {other:?}"),
+            }
+        }
+        let stats = engine.stats();
+        assert_eq!(stats.failed, 3);
+        assert_eq!(stats.completed, 0);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_but_answers_queued() {
+        let (net, sp, weights) = sparse_engine_parts();
+        let mut engine =
+            InferenceEngine::new(net, &sp, weights, &KRYO_485, Framework::Ours, small_cfg())
+                .unwrap();
+        let mut rng = XorShift64Star::new(23);
+        let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
+        let pending = engine.submit(x.clone()).unwrap();
+        engine.shutdown();
+        // the request enqueued before shutdown is still answered
+        assert!(pending.wait().is_ok());
+        assert!(matches!(engine.submit(x.clone()), Err(EngineError::ShuttingDown)));
+        assert!(matches!(engine.run(x), Err(EngineError::ShuttingDown)));
+    }
+
+    #[test]
+    fn micro_batching_groups_requests() {
+        // one worker, generous linger: submitting n requests before any
+        // can complete must yield fewer batches than requests
+        let (net, sp, weights) = sparse_engine_parts();
+        let cfg = EngineConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 64,
+            intra_workers: 1,
+        };
+        let engine =
+            InferenceEngine::new(net, &sp, weights, &KRYO_485, Framework::Ours, cfg).unwrap();
+        let mut rng = XorShift64Star::new(24);
+        let inputs: Vec<Tensor> =
+            (0..8).map(|_| Tensor::he_normal(vec![8, 8, 16], &mut rng)).collect();
+        let results = engine.run_batch(&inputs);
+        assert!(results.iter().all(|r| r.is_ok()));
+        let stats = engine.stats();
+        assert_eq!(stats.completed, 8);
+        assert!(
+            stats.batches < 8,
+            "8 requests should not need 8 batches (got {})",
+            stats.batches
+        );
+        assert!(stats.mean_batch > 1.0);
+    }
+}

@@ -11,9 +11,13 @@
 //!
 //! [`bundle`] is the artifact path that *does* run offline: a
 //! [`PlanBundle`] (network + sparsity + weights) loads from JSON and
-//! executes through `compiler::executor` on the host CPU.
+//! executes through `compiler::executor` on the host CPU. [`engine`]
+//! serves such a binding over a micro-batched, thread-pool-backed queue
+//! ([`InferenceEngine`]) — the throughput path the serving benches and the
+//! batched-parity suite exercise.
 
 pub mod bundle;
+pub mod engine;
 pub mod manifest;
 mod xla_stub;
 
@@ -27,6 +31,7 @@ use anyhow::{bail, Context, Result};
 use crate::tensor::Tensor;
 
 pub use bundle::PlanBundle;
+pub use engine::{EngineConfig, EngineError, EngineStats, InferenceEngine, PendingResponse};
 pub use manifest::{ArtifactDef, DType, Manifest, TensorDef};
 
 /// A named runtime input value.
@@ -165,7 +170,7 @@ mod tests {
                 assert_eq!(t.dims().len(), 0);
                 assert_eq!(t.scalar(), 0.5);
             }
-            _ => panic!(),
+            other => panic!("Value::scalar must construct F32, got {other:?}"),
         }
     }
 

@@ -22,6 +22,67 @@ pub fn same_pad(in_size: usize, k: usize, stride: usize) -> (usize, usize) {
     (out, needed / 2)
 }
 
+/// Row tiles smaller than this are not worth a thread handoff; also the
+/// floor [`Tensor::matmul_tiled`] uses when deciding to stay sequential.
+const MIN_TILE_ROWS: usize = 8;
+
+/// The shared im2col patch-extraction loop: lower one `(h, w, c)` image
+/// (`src`) into its `(oh*ow, kh*kw*c)` patch rows (`dst`, zero-initialized)
+/// under SAME padding. Both [`Tensor::im2col`] and
+/// [`Tensor::im2col_batch`] call this, so the single-image and batched
+/// lowerings cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+fn im2col_image(
+    src: &[f32],
+    dst: &mut [f32],
+    (h, w, c): (usize, usize, usize),
+    (kh, kw, stride): (usize, usize, usize),
+    (oh, ow): (usize, usize),
+    (pt, pl): (usize, usize),
+) {
+    let kdim = kh * kw * c;
+    for oi in 0..oh {
+        for oj in 0..ow {
+            let base = (oi * ow + oj) * kdim;
+            for ki in 0..kh {
+                let iy = (oi * stride + ki) as isize - pt as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kj in 0..kw {
+                    let ix = (oj * stride + kj) as isize - pl as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let s = (iy as usize * w + ix as usize) * c;
+                    let t = base + (ki * kw + kj) * c;
+                    dst[t..t + c].copy_from_slice(&src[s..s + c]);
+                }
+            }
+        }
+    }
+}
+
+/// The shared GEMM row kernel: `a` holds `a.len() / k` rows of length `k`,
+/// `out` the matching rows of length `n` (zero-initialized). Every matmul
+/// entry point — dense, tiled, batched — funnels through this one loop, so
+/// tiling and batching are bit-identical to [`Tensor::matmul`] by
+/// construction (per output element the reduction index `k` ascends and
+/// zero contributions are skipped as exact no-ops).
+fn matmul_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    for (arow, orow) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // exact no-op contribution
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
 impl Tensor {
     /// self += other * scale (axpy).
     pub fn axpy(&mut self, other: &Tensor, scale: f32) {
@@ -113,27 +174,117 @@ impl Tensor {
         let (m, k) = (da[0], da[1]);
         let (k2, n) = (db[0], db[1]);
         assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
-        let a = self.data();
-        let b = other.data();
         let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue; // exact no-op contribution
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
+        if k > 0 && n > 0 {
+            matmul_rows(self.data(), other.data(), k, n, &mut out);
         }
         Tensor::new(vec![m, n], out)
     }
 
+    /// [`Tensor::matmul`] with the M dimension split into row tiles mapped
+    /// across `workers` threads (`coordinator::scheduler::map_parallel`).
+    /// Output rows are independent and each is produced by the same row
+    /// kernel, so the result is bit-identical to the sequential GEMM for
+    /// every `workers` value; `workers <= 1` (or a small M) short-circuits
+    /// to the plain call.
+    pub fn matmul_tiled(&self, other: &Tensor, workers: usize) -> Tensor {
+        let (da, db) = (self.dims(), other.dims());
+        assert_eq!(da.len(), 2, "matmul_tiled lhs must be 2-D, got {da:?}");
+        assert_eq!(db.len(), 2, "matmul_tiled rhs must be 2-D, got {db:?}");
+        let (m, k) = (da[0], da[1]);
+        let (k2, n) = (db[0], db[1]);
+        assert_eq!(k, k2, "matmul_tiled inner dims {k} vs {k2}");
+        if workers <= 1 || m < 2 * MIN_TILE_ROWS || k == 0 || n == 0 {
+            return self.matmul(other);
+        }
+        let tile = m.div_ceil(workers).max(MIN_TILE_ROWS);
+        let ranges: Vec<(usize, usize)> =
+            (0..m).step_by(tile).map(|r0| (r0, (r0 + tile).min(m))).collect();
+        let a = self.data();
+        let b = other.data();
+        let chunks = crate::coordinator::scheduler::map_parallel(
+            workers,
+            &ranges,
+            |&(r0, r1)| {
+                let mut out = vec![0f32; (r1 - r0) * n];
+                matmul_rows(&a[r0 * k..r1 * k], b, k, n, &mut out);
+                out
+            },
+        );
+        let mut out = Vec::with_capacity(m * n);
+        for c in &chunks {
+            out.extend_from_slice(c);
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    // ---- batch (leading-N) helpers -------------------------------------
+
+    /// Stack same-shaped tensors along a new leading batch dimension:
+    /// n tensors of shape `d` become one `(n, d...)` tensor.
+    pub fn stack(items: &[Tensor]) -> Tensor {
+        assert!(!items.is_empty(), "stack of zero tensors");
+        let inner = items[0].dims();
+        let mut data = Vec::with_capacity(items.len() * items[0].numel());
+        for t in items {
+            assert_eq!(t.dims(), inner, "stack shape mismatch");
+            data.extend_from_slice(t.data());
+        }
+        let mut shape = Vec::with_capacity(inner.len() + 1);
+        shape.push(items.len());
+        shape.extend_from_slice(inner);
+        Tensor::new(shape, data)
+    }
+
+    /// Split a `(n, d...)` tensor back into n tensors of shape `d` —
+    /// the exact inverse of [`Tensor::stack`].
+    pub fn unstack(&self) -> Vec<Tensor> {
+        let d = self.dims();
+        assert!(!d.is_empty(), "unstack needs a leading batch dim");
+        let n = d[0];
+        let inner: Vec<usize> = d[1..].to_vec();
+        let stride: usize = inner.iter().product();
+        (0..n)
+            .map(|i| {
+                Tensor::new(inner.clone(), self.data()[i * stride..(i + 1) * stride].to_vec())
+            })
+            .collect()
+    }
+
+    /// Batched [`Tensor::im2col`]: lower a `(n, h, w, c)` feature-map batch
+    /// to one `(n*oh*ow, kh*kw*c)` patch matrix, so a single GEMM (dense or
+    /// packed block-CSR) serves the whole batch — the weight reshape /
+    /// packed-matrix traversal is paid once instead of once per image.
+    /// Patch rows of image `i` occupy rows `i*oh*ow..(i+1)*oh*ow` and are
+    /// byte-identical to that image's own `im2col` output.
+    pub fn im2col_batch(&self, kh: usize, kw: usize, stride: usize) -> Tensor {
+        let d = self.dims();
+        assert_eq!(d.len(), 4, "im2col_batch expects (n,h,w,c), got {d:?}");
+        let (nb, h, w, c) = (d[0], d[1], d[2], d[3]);
+        let (oh, pt) = same_pad(h, kh, stride);
+        let (ow, pl) = same_pad(w, kw, stride);
+        let kdim = kh * kw * c;
+        let img_in = h * w * c;
+        let img_out = oh * ow * kdim;
+        let mut out = vec![0f32; nb * img_out];
+        let data = self.data();
+        for bi in 0..nb {
+            im2col_image(
+                &data[bi * img_in..(bi + 1) * img_in],
+                &mut out[bi * img_out..(bi + 1) * img_out],
+                (h, w, c),
+                (kh, kw, stride),
+                (oh, ow),
+                (pt, pl),
+            );
+        }
+        Tensor::new(vec![nb * oh * ow, kdim], out)
+    }
+
     /// Lower an `(h, w, c)` feature map to the im2col patch matrix
     /// `(oh*ow, kh*kw*c)` under SAME padding (out-of-range taps stay 0).
+    /// Shares the extraction loop with [`Tensor::im2col_batch`], so the
+    /// single-image and batched lowerings cannot drift apart.
     pub fn im2col(&self, kh: usize, kw: usize, stride: usize) -> Tensor {
         let d = self.dims();
         assert_eq!(d.len(), 3, "im2col expects (h,w,c), got {d:?}");
@@ -142,27 +293,14 @@ impl Tensor {
         let (ow, pl) = same_pad(w, kw, stride);
         let kdim = kh * kw * c;
         let mut out = vec![0f32; oh * ow * kdim];
-        let data = self.data();
-        for oi in 0..oh {
-            for oj in 0..ow {
-                let base = (oi * ow + oj) * kdim;
-                for ki in 0..kh {
-                    let iy = (oi * stride + ki) as isize - pt as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kj in 0..kw {
-                        let ix = (oj * stride + kj) as isize - pl as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let src = (iy as usize * w + ix as usize) * c;
-                        let dst = base + (ki * kw + kj) * c;
-                        out[dst..dst + c].copy_from_slice(&data[src..src + c]);
-                    }
-                }
-            }
-        }
+        im2col_image(
+            self.data(),
+            &mut out,
+            (h, w, c),
+            (kh, kw, stride),
+            (oh, ow),
+            (pt, pl),
+        );
         Tensor::new(vec![oh * ow, kdim], out)
     }
 
@@ -471,6 +609,57 @@ mod tests {
         let g = x.global_avg_pool();
         assert_eq!(g.dims(), &[1, 1, 1]);
         assert_eq!(g.scalar(), 7.5);
+    }
+
+    #[test]
+    fn matmul_tiled_bit_identical_to_sequential() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(31);
+        // M spans below and above the tiling threshold, incl. ragged tiles
+        for &(m, k, n) in &[(4usize, 6usize, 5usize), (16, 9, 7), (61, 12, 10), (128, 33, 3)] {
+            let a = Tensor::he_normal(vec![m, k], &mut rng);
+            let b = Tensor::he_normal(vec![k, n], &mut rng);
+            let want = a.matmul(&b);
+            for workers in [1usize, 2, 3, 8] {
+                let got = a.matmul_tiled(&b, workers);
+                assert_eq!(got.dims(), want.dims());
+                assert_eq!(got.data(), want.data(), "m={m} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(33);
+        let imgs: Vec<Tensor> =
+            (0..3).map(|_| Tensor::he_normal(vec![4, 5, 2], &mut rng)).collect();
+        let batch = Tensor::stack(&imgs);
+        assert_eq!(batch.dims(), &[3, 4, 5, 2]);
+        let back = batch.unstack();
+        assert_eq!(back.len(), 3);
+        for (a, b) in back.iter().zip(&imgs) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn im2col_batch_rows_match_per_image() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(37);
+        for &(hw, k, stride, c) in &[(6usize, 3usize, 1usize, 4usize), (7, 3, 2, 3), (5, 1, 1, 6)] {
+            let imgs: Vec<Tensor> =
+                (0..4).map(|_| Tensor::he_normal(vec![hw, hw, c], &mut rng)).collect();
+            let batch = Tensor::stack(&imgs);
+            let got = batch.im2col_batch(k, k, stride);
+            let per: Vec<Tensor> = imgs.iter().map(|x| x.im2col(k, k, stride)).collect();
+            let rows = per[0].dims()[0];
+            assert_eq!(got.dims(), &[4 * rows, per[0].dims()[1]]);
+            for (i, p) in per.iter().enumerate() {
+                let chunk = &got.data()[i * p.numel()..(i + 1) * p.numel()];
+                assert_eq!(chunk, p.data(), "image {i} k={k} stride={stride}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! Serving-path test wall: the batched `InferenceEngine` against n
+//! sequential `Executor::run` calls.
+//!
+//! Property sweep (hand-rolled; the proptest crate is unavailable
+//! offline): random zoo networks × pruning schemes at reduced resolution,
+//! batch sizes 1–8 with an engine `max_batch` of 3 so larger submissions
+//! exercise ragged final micro-batches. The contract is the differential
+//! suite's: batched outputs match sequential execution within 1e-4 of the
+//! output scale (1e-2 when the plan contains Winograd groups) — in
+//! practice the batched kernels reuse the sequential per-row/per-image
+//! loops and the match is exact, but the *documented* gate is the
+//! tolerance.
+//!
+//! The concurrency test extends the PR-1 cross-thread plan-cache test to
+//! serving: many threads submitting to one engine that binds one
+//! `PlanCache`-compiled plan must each observe bit-identical outputs per
+//! input, regardless of how requests interleave into micro-batches.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use npas::compiler::codegen::compile;
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{
+    max_abs_diff, uniform_sparsity, Algo, Executor, Framework, PlanCache, SparsityMap,
+    WeightSet,
+};
+use npas::graph::{zoo, Network};
+use npas::pruning::PruneScheme;
+use npas::runtime::{EngineConfig, InferenceEngine};
+use npas::tensor::{Tensor, XorShift64Star};
+
+/// Parity resolution: zoo topologies at 10x10 input.
+const RES: usize = 10;
+const RTOL: f32 = 1e-4;
+const RTOL_WINOGRAD: f32 = 1e-2;
+
+/// Small batches, eager workers: `max_batch` 3 means batch sizes 4..8
+/// always leave a ragged final micro-batch.
+fn ragged_cfg() -> EngineConfig {
+    EngineConfig {
+        workers: 1,
+        max_batch: 3,
+        max_wait: Duration::from_millis(20),
+        queue_cap: 64,
+        intra_workers: 2,
+    }
+}
+
+/// Engine vs n sequential `Executor::run` calls on one workload.
+fn check_engine_parity(
+    net: &Network,
+    annotation: Option<(PruneScheme, f32)>,
+    nb: usize,
+    seed: u64,
+) {
+    let sparsity = match annotation {
+        Some((scheme, rate)) => uniform_sparsity(net, scheme, rate),
+        None => SparsityMap::new(),
+    };
+    let label = match annotation {
+        Some((scheme, rate)) => format!("{} @ {scheme} {rate}x nb={nb}", net.name),
+        None => format!("{} @ dense nb={nb}", net.name),
+    };
+    let plan = Arc::new(compile(net, &sparsity, &KRYO_485, Framework::Ours));
+    let rtol = if plan.groups.iter().any(|g| g.algo == Algo::Winograd) {
+        RTOL_WINOGRAD
+    } else {
+        RTOL
+    };
+    let mut weights = WeightSet::random(net, 11);
+    weights.apply_sparsity(&sparsity);
+    let exec = Executor::new(net, &plan, &sparsity, &weights);
+    let engine = InferenceEngine::with_plan(
+        net.clone(),
+        &sparsity,
+        weights.clone(),
+        plan.clone(),
+        ragged_cfg(),
+    )
+    .unwrap();
+
+    let (h, w, c) = net.input_hwc;
+    let mut rng = XorShift64Star::new(0x5EED ^ seed);
+    let inputs: Vec<Tensor> =
+        (0..nb).map(|_| Tensor::he_normal(vec![h, w, c], &mut rng)).collect();
+    let seq: Vec<Tensor> = inputs.iter().map(|x| exec.run(x)).collect();
+    let got = engine.run_batch(&inputs);
+    assert_eq!(got.len(), nb, "{label}: wrong response count");
+    for (i, (g, s)) in got.iter().zip(&seq).enumerate() {
+        let g = g.as_ref().unwrap_or_else(|e| panic!("{label}: request {i} failed: {e}"));
+        assert_eq!(g.dims(), s.dims(), "{label}: request {i} shape mismatch");
+        assert!(g.data().iter().all(|v| v.is_finite()), "{label}: non-finite output");
+        let scale = s.abs_max().max(1e-3);
+        let diff = max_abs_diff(g, s);
+        assert!(
+            diff <= rtol * scale,
+            "{label}: request {i} diverges from sequential run: \
+             |diff| {diff} > {rtol} * {scale}"
+        );
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.completed, nb as u64, "{label}: completed count");
+    assert_eq!(stats.failed, 0, "{label}: failed count");
+}
+
+#[test]
+fn prop_batched_engine_matches_sequential_runs() {
+    use npas::graph::zoo::CandidateBlock::*;
+    let nets: Vec<Network> = vec![
+        zoo::single_conv(9, 3, 8, 8),
+        zoo::mobilenet_v2().rescaled(RES),
+        zoo::mobilenet_v3().rescaled(RES),
+        zoo::npas_deploy_network(
+            "engine-deploy",
+            &[Conv3x3, DwPw, PwDwPw, Conv1x1, DwPw, Skip, Conv3x3],
+        )
+        .rescaled(RES),
+    ];
+    let schemes: [Option<PruneScheme>; 6] = [
+        None,
+        Some(PruneScheme::Unstructured),
+        Some(PruneScheme::Filter),
+        Some(PruneScheme::Pattern),
+        Some(PruneScheme::block_punched_default()),
+        Some(PruneScheme::block_based_default()),
+    ];
+    let mut rng = XorShift64Star::new(0xBA7C4);
+    // two random (scheme, rate, batch-size) draws per network; batch sizes
+    // span 1..=8 so max_batch=3 sees full and ragged final batches
+    for (ni, net) in nets.iter().enumerate() {
+        for rep in 0..2 {
+            let scheme = schemes[rng.next_range(schemes.len() as u64) as usize];
+            let rate = [2.5f32, 5.0][rng.next_range(2) as usize];
+            let nb = 1 + rng.next_range(8) as usize;
+            let seed = (ni * 2 + rep) as u64;
+            check_engine_parity(net, scheme.map(|s| (s, rate)), nb, seed);
+        }
+    }
+}
+
+#[test]
+fn batch_size_sweep_includes_ragged_batches() {
+    // a fixed sparse workload across every batch size 1..=8: with
+    // max_batch 3 this covers exact-multiple and ragged groupings
+    let net = zoo::single_conv(8, 3, 16, 16);
+    for nb in 1..=8usize {
+        check_engine_parity(
+            &net,
+            Some((PruneScheme::block_punched_default(), 5.0)),
+            nb,
+            100 + nb as u64,
+        );
+    }
+}
+
+#[test]
+fn concurrent_submitters_share_one_plan_and_get_identical_outputs() {
+    // extends the PR-1 cross-thread PlanCache test to the serving path:
+    // one cache-compiled plan, one engine, many client threads
+    let net = zoo::single_conv(10, 3, 16, 16);
+    let sparsity = uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0);
+    let cache = PlanCache::default();
+    let plan = cache.get_or_compile(&net, &sparsity, &KRYO_485, Framework::Ours);
+    assert_eq!(cache.misses(), 1);
+    let mut weights = WeightSet::random(&net, 7);
+    weights.apply_sparsity(&sparsity);
+
+    // ground truth: sequential executor on the same binding
+    let exec = Executor::new(&net, &plan, &sparsity, &weights);
+    let mut rng = XorShift64Star::new(55);
+    let pool: Vec<Tensor> =
+        (0..4).map(|_| Tensor::he_normal(vec![10, 10, 16], &mut rng)).collect();
+    let expected: Vec<Tensor> = pool.iter().map(|x| exec.run(x)).collect();
+
+    let engine = InferenceEngine::with_plan(
+        net.clone(),
+        &sparsity,
+        weights.clone(),
+        plan.clone(),
+        EngineConfig {
+            workers: 3,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 128,
+            intra_workers: 2,
+        },
+    )
+    .unwrap();
+
+    let threads = 8usize;
+    let per_thread = 12usize;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let engine = &engine;
+            let pool = &pool;
+            let expected = &expected;
+            scope.spawn(move || {
+                for i in 0..per_thread {
+                    let idx = (t * 5 + i) % pool.len();
+                    let out = engine.run(pool[idx].clone()).unwrap();
+                    // bit-identical, not merely within tolerance: batching
+                    // must never change what a given input produces
+                    assert_eq!(out, expected[idx], "thread {t} request {i} input {idx}");
+                }
+            });
+        }
+    });
+
+    let stats = engine.stats();
+    assert_eq!(stats.completed, (threads * per_thread) as u64);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.batches > 0);
+    // the shared plan was compiled exactly once
+    assert_eq!(cache.misses(), 1);
+}

@@ -1,0 +1,143 @@
+//! Golden-file regression pin for the latency model.
+//!
+//! `measure_plan` is the number every search phase ranks candidates by; a
+//! kernel-model or calibration edit that shifts it silently *bends search
+//! results* without failing any behavioral test. This suite renders, for
+//! every zoo network under the default block-punched scheme (and dense),
+//! the full per-group plan breakdown plus the measured report, and
+//! compares the rendering byte-for-byte against a committed golden file.
+//!
+//! The model is fully deterministic (seeded pseudo-noise, fixed float
+//! formatting), so any diff is a real model change. When a change is
+//! intentional, regenerate with:
+//!
+//! ```sh
+//! UPDATE_GOLDEN=1 cargo test --test golden_latency
+//! ```
+//!
+//! and commit the updated `tests/golden/latency_model.txt`. On a checkout
+//! where the golden file does not exist yet, the test bootstraps it (and
+//! passes) — commit the generated file to arm the pin.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use npas::compiler::codegen::compile;
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{measure_plan, uniform_sparsity, Framework, SparsityMap};
+use npas::graph::{zoo, Network};
+use npas::pruning::PruneScheme;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/latency_model.txt")
+}
+
+fn zoo_networks() -> Vec<Network> {
+    use npas::graph::zoo::CandidateBlock::*;
+    vec![
+        zoo::mobilenet_v1(),
+        zoo::mobilenet_v2(),
+        zoo::mobilenet_v3(),
+        zoo::efficientnet_b0(),
+        zoo::resnet50(),
+        zoo::resnet50_narrow_deep(),
+        zoo::npas_deploy_network(
+            "npas_deploy_mixed",
+            &[Conv3x3, DwPw, PwDwPw, Conv1x1, DwPw, Skip, Conv3x3],
+        ),
+    ]
+}
+
+/// Render the full model output for one (network, sparsity) workload:
+/// the measured report and every fused group's quantities. Fixed-width
+/// scientific formatting keeps the rendering platform-independent.
+fn render_workload(out: &mut String, net: &Network, sparsity: &SparsityMap, tag: &str) {
+    let plan = compile(net, sparsity, &KRYO_485, Framework::Ours);
+    let r = measure_plan(&plan, &KRYO_485, 100);
+    writeln!(
+        out,
+        "net={} scheme={tag} device={} fw={} groups={} mean_ms={:.9e} std_ms={:.9e} \
+         compute_ms={:.9e} memory_ms={:.9e} overhead_ms={:.9e}",
+        net.name,
+        r.device,
+        plan.framework.name(),
+        r.num_groups,
+        r.mean_ms,
+        r.std_ms,
+        r.compute_ms,
+        r.memory_ms,
+        r.overhead_ms,
+    )
+    .unwrap();
+    for (i, g) in plan.groups.iter().enumerate() {
+        writeln!(
+            out,
+            "  group={i} algo={:?} layers={} macs={:.6e} eff_macs={:.6e} util={:.6e} \
+             bytes={:.6e}",
+            g.algo,
+            g.layer_ids.len(),
+            g.macs,
+            g.eff_macs,
+            g.utilization,
+            g.bytes,
+        )
+        .unwrap();
+    }
+}
+
+fn render_all() -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# Golden latency-model dump: per-group plan breakdowns + measure_plan \
+         reports.\n# Regenerate with: UPDATE_GOLDEN=1 cargo test --test golden_latency\n",
+    );
+    for net in zoo_networks() {
+        render_workload(&mut out, &net, &SparsityMap::new(), "dense");
+        let sp = uniform_sparsity(&net, PruneScheme::block_punched_default(), 5.0);
+        render_workload(&mut out, &net, &sp, "block_punched_5x");
+    }
+    out
+}
+
+#[test]
+fn latency_model_matches_golden_file() {
+    let want = render_all();
+    let path = golden_path();
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &want).unwrap();
+        eprintln!(
+            "golden latency-model file written to {} — commit it to pin the model",
+            path.display()
+        );
+        return;
+    }
+    let got = std::fs::read_to_string(&path).unwrap();
+    if got == want {
+        return;
+    }
+    // point at the first drifted line so the failure reads like a diff
+    for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+        assert_eq!(
+            g,
+            w,
+            "latency model drifted from {} at line {} — if the change is \
+             intentional, regenerate with UPDATE_GOLDEN=1 and commit",
+            path.display(),
+            i + 1
+        );
+    }
+    panic!(
+        "latency model output length changed ({} vs {} lines) vs {} — if intentional, \
+         regenerate with UPDATE_GOLDEN=1 and commit",
+        got.lines().count(),
+        want.lines().count(),
+        path.display()
+    );
+}
+
+#[test]
+fn golden_rendering_is_deterministic() {
+    // the pin is only meaningful if the rendering itself cannot flap
+    assert_eq!(render_all(), render_all());
+}
