@@ -1,30 +1,28 @@
-//! Executor demo: compile a pruned network and *run* it on real tensors —
+//! Executor demo: the whole paper pipeline through one `CompiledModel` —
 //! no AOT artifacts or PJRT needed.
 //!
 //! 1. build the NPAS deployment network at a demo-friendly resolution;
-//! 2. block-punched-prune it, compile an execution plan, execute the plan
-//!    on a random input and diff against the naive dense reference;
-//! 3. save the whole thing as a runnable `PlanBundle`, load it back and
-//!    show the load → execute path end-to-end;
-//! 4. print what the latency model *predicts* next to what the kernels
-//!    actually did (kernel mix + wall clock).
+//! 2. `CompiledModel::build(..).scheme(..).weights(..).target(..).compile()`
+//!    — block-punched prune, compile, bind weights, prepare kernels — then
+//!    run it on a random input and diff against `.reference()` (the naive
+//!    dense ground truth);
+//! 3. `.save()` the whole thing as one runnable JSON artifact, `::load()`
+//!    it back and show the load → execute path end-to-end;
+//! 4. print what `.latency()` *predicts* next to what the kernels actually
+//!    did (kernel mix + wall clock).
 //!
 //! Run: `cargo run --release --example executor_demo`
 
 use std::time::Instant;
 
-use npas::compiler::codegen::compile;
 use npas::compiler::device::KRYO_485;
-use npas::compiler::{
-    execute_plan, max_abs_diff, measure_plan, run_dense_reference, uniform_sparsity, Algo,
-    Framework, WeightSet,
-};
+use npas::compiler::{max_abs_diff, Algo, Framework};
 use npas::graph::zoo::{self, CandidateBlock::*};
 use npas::pruning::PruneScheme;
-use npas::runtime::PlanBundle;
 use npas::tensor::{Tensor, XorShift64Star};
+use npas::CompiledModel;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> npas::Result<()> {
     // ---- 1. a searched-shape network at demo resolution -------------------
     let choices = [Conv3x3, DwPw, PwDwPw, Conv1x1, DwPw, Conv3x3, Skip];
     let net = zoo::npas_deploy_network("executor-demo", &choices).rescaled(32);
@@ -35,19 +33,20 @@ fn main() -> anyhow::Result<()> {
         net.total_macs() as f64 / 1e6
     );
 
-    // ---- 2. prune, compile, execute, diff ---------------------------------
-    let sparsity = uniform_sparsity(&net, PruneScheme::block_punched_default(), 5.0);
-    let plan = compile(&net, &sparsity, &KRYO_485, Framework::Ours);
-    let mut weights = WeightSet::random(&net, 42);
-    weights.apply_sparsity(&sparsity);
+    // ---- 2. one builder call: prune + compile + bind + prepare ------------
+    let model = CompiledModel::build(net)
+        .scheme((PruneScheme::block_punched_default(), 5.0))
+        .weights(42u64)
+        .target(&KRYO_485, Framework::Ours)
+        .compile()?;
     let mut rng = XorShift64Star::new(7);
     let input = Tensor::he_normal(vec![32, 32, 3], &mut rng);
 
     let t = Instant::now();
-    let out = execute_plan(&net, &plan, &sparsity, &weights, &input);
+    let out = model.run(&input)?;
     let exec_ms = t.elapsed().as_secs_f64() * 1e3;
     let t = Instant::now();
-    let reference = run_dense_reference(&net, &weights, &input);
+    let reference = model.reference(&input)?;
     let ref_ms = t.elapsed().as_secs_f64() * 1e3;
     let diff = max_abs_diff(&out, &reference);
     println!(
@@ -56,23 +55,23 @@ fn main() -> anyhow::Result<()> {
         out.numel()
     );
 
-    // ---- 3. bundle roundtrip ----------------------------------------------
+    // ---- 3. save → load round-trip ----------------------------------------
     let dir = std::env::temp_dir().join("npas_executor_demo");
-    let path = dir.join("bundle.json");
-    PlanBundle::new(net.clone(), sparsity.clone(), weights).save(&path)?;
-    let loaded = PlanBundle::load(&path)?;
-    let replay = loaded.execute(&KRYO_485, Framework::Ours, &input);
+    let path = dir.join("model.json");
+    model.save(&path)?;
+    let loaded = CompiledModel::load(&path)?;
+    let replay = loaded.run(&input)?;
     println!(
-        "[3/4] bundle saved to {} and reloaded: replay identical = {}",
+        "[3/4] model saved to {} and reloaded: replay identical = {}",
         path.display(),
         replay == out
     );
     let _ = std::fs::remove_dir_all(&dir);
 
     // ---- 4. model vs machine ----------------------------------------------
-    let report = measure_plan(&plan, &KRYO_485, 100);
+    let report = model.latency(100);
     let mut counts = std::collections::BTreeMap::new();
-    for g in &plan.groups {
+    for g in &model.plan().groups {
         *counts.entry(format!("{:?}", g.algo)).or_insert(0usize) += 1;
     }
     let mix: Vec<String> =
@@ -84,8 +83,12 @@ fn main() -> anyhow::Result<()> {
         report.num_groups,
         mix.join(", ")
     );
-    let sparse_groups =
-        plan.groups.iter().filter(|g| g.eff_macs < g.macs * 0.99 && g.algo != Algo::Memory).count();
+    let sparse_groups = model
+        .plan()
+        .groups
+        .iter()
+        .filter(|g| g.eff_macs < g.macs * 0.99 && g.algo != Algo::Memory)
+        .count();
     println!("      {sparse_groups} groups execute packed block-sparse kernels");
     println!("\nnext: `cargo test --test exec_parity` runs the full differential suite");
     Ok(())

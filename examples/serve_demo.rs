@@ -1,27 +1,24 @@
-//! Serving-engine walkthrough: compile a pruned deploy network once, stand
-//! up an `InferenceEngine`, and drive it from several client threads —
-//! the "millions of users" workload scaled down to one process.
+//! Serving-engine walkthrough: build one `CompiledModel`, stand up its
+//! `InferenceEngine` with `.serve()`, and drive it from several client
+//! threads — the "millions of users" workload scaled down to one process.
 //!
 //! Prints the micro-batching behavior (mean batch size), per-request
 //! latency percentiles, throughput, and a spot parity check against the
-//! dense reference.
+//! model's dense reference.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
-use std::sync::Arc;
 use std::time::Duration;
 
-use npas::compiler::codegen::compile;
 use npas::compiler::device::KRYO_485;
-use npas::compiler::{
-    max_abs_diff, run_dense_reference, uniform_sparsity, Framework, WeightSet,
-};
+use npas::compiler::{max_abs_diff, Framework};
 use npas::graph::zoo;
 use npas::pruning::PruneScheme;
-use npas::runtime::{EngineConfig, InferenceEngine};
+use npas::runtime::EngineConfig;
 use npas::tensor::{Tensor, XorShift64Star};
+use npas::CompiledModel;
 
-fn main() {
+fn main() -> npas::Result<()> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     // a mixed NPAS deploy network at reduced resolution, block-punched 5x
     use npas::graph::zoo::CandidateBlock::*;
@@ -30,39 +27,32 @@ fn main() {
         &[Conv3x3, DwPw, PwDwPw, Conv1x1, DwPw, Skip, Conv3x3],
     )
     .rescaled(32);
-    let sparsity = uniform_sparsity(&net, PruneScheme::block_punched_default(), 5.0);
-    let mut weights = WeightSet::random(&net, 17);
-    weights.apply_sparsity(&sparsity);
-    let plan = Arc::new(compile(&net, &sparsity, &KRYO_485, Framework::Ours));
+    let model = CompiledModel::build(net)
+        .scheme((PruneScheme::block_punched_default(), 5.0))
+        .weights(17u64)
+        .target(&KRYO_485, Framework::Ours)
+        .compile()?;
     println!(
         "serving `{}`: {} layers, {} fused groups, {} annotated layers, {cores} cores",
-        net.name,
-        net.layers.len(),
-        plan.groups.len(),
-        sparsity.len()
+        model.network().name,
+        model.network().layers.len(),
+        model.plan().groups.len(),
+        model.sparsity().len()
     );
 
-    let config = EngineConfig {
+    let engine = model.serve(EngineConfig {
         workers: 2,
         max_batch: 8,
         max_wait: Duration::from_millis(2),
         queue_cap: 256,
         intra_workers: cores.div_ceil(2),
-    };
-    let engine = InferenceEngine::with_plan(
-        net.clone(),
-        &sparsity,
-        weights.clone(),
-        plan.clone(),
-        config,
-    )
-    .expect("engine binds");
+    })?;
 
     // spot parity: the served outputs match the masked dense reference
     let mut rng = XorShift64Star::new(3);
     let probe = Tensor::he_normal(vec![32, 32, 3], &mut rng);
     let served = engine.run(probe.clone()).expect("probe request");
-    let reference = run_dense_reference(&net, &weights, &probe);
+    let reference = model.reference(&probe)?;
     let scale = reference.abs_max().max(1e-3);
     println!(
         "spot parity vs dense reference: |diff| {:.3e} (scale {:.3e})",
@@ -103,4 +93,5 @@ fn main() {
     assert_eq!(stats.completed as usize, clients * per_client + 1);
     assert_eq!(stats.failed, 0);
     println!("done.");
+    Ok(())
 }

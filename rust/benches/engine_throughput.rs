@@ -1,13 +1,14 @@
 //! Serving-engine throughput: batched execution vs n sequential
-//! `Executor::run` calls on a dense 3x3 zoo network.
+//! single-image `CompiledModel::run` calls on a dense 3x3 zoo network.
 //!
 //! Three measurements on an 8-image batch: (1) 8 sequential single-image
-//! runs (the pre-engine baseline), (2) one `Executor::run_batch` call with
-//! intra-op tiling across the available cores, (3) the full
-//! `InferenceEngine` path including the submission queue and micro-batch
-//! assembly. Outputs are gated at 1e-4 relative parity against the
-//! sequential runs before any timing is reported (the plan is compiled for
-//! TFLite, which has no Winograd, so the tight GEMM tolerance applies).
+//! runs (the pre-engine baseline), (2) one `CompiledModel::run_batch` call
+//! with intra-op tiling across the available cores, (3) the full
+//! `InferenceEngine` path (`CompiledModel::serve`) including the
+//! submission queue and micro-batch assembly. Outputs are gated at 1e-4
+//! relative parity against the sequential runs before any timing is
+//! reported (the plan is compiled for TFLite, which has no Winograd, so
+//! the tight GEMM tolerance applies).
 //!
 //! Acceptance: on a >= 4-core host the batched engine must be at least 2x
 //! the sequential baseline; on narrower hosts the parallel ceiling is the
@@ -20,12 +21,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use npas::bench::{bench, quick, Table};
-use npas::compiler::codegen::compile;
 use npas::compiler::device::KRYO_485;
-use npas::compiler::{max_abs_diff, Algo, Executor, Framework, SparsityMap, WeightSet};
+use npas::compiler::{max_abs_diff, Algo, Framework, PlanCache};
 use npas::graph::zoo;
-use npas::runtime::{EngineConfig, InferenceEngine};
+use npas::runtime::EngineConfig;
 use npas::tensor::{Tensor, XorShift64Star};
+use npas::CompiledModel;
 
 fn main() {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -34,26 +35,42 @@ fn main() {
         &[zoo::CandidateBlock::Conv3x3; 7],
     )
     .rescaled(32);
-    let sparsity = SparsityMap::new();
     // TFLite: no Winograd, every 3x3 goes im2col + GEMM — the batched path
-    // then runs one big GEMM per layer and the 1e-4 gate applies
-    let plan = Arc::new(compile(&net, &sparsity, &KRYO_485, Framework::TFLite));
+    // then runs one big GEMM per layer and the 1e-4 gate applies. The two
+    // models differ only in intra-op tiling width; a shared plan cache
+    // compiles the workload once (second build is a cache hit).
+    let cache = Arc::new(PlanCache::default());
+    let model_seq = CompiledModel::build(net.clone())
+        .weights(42u64)
+        .target(&KRYO_485, Framework::TFLite)
+        .plan_cache(cache.clone())
+        .compile()
+        .expect("sequential model compiles");
+    let model_tiled = CompiledModel::build(net.clone())
+        .weights(42u64)
+        .target(&KRYO_485, Framework::TFLite)
+        .plan_cache(cache.clone())
+        .intra_workers(cores)
+        .compile()
+        .expect("tiled model compiles");
+    assert_eq!(
+        (cache.hits(), cache.misses()),
+        (1, 1),
+        "the two bindings must share one compiled plan"
+    );
     assert!(
-        plan.groups.iter().all(|g| g.algo != Algo::Winograd),
+        model_seq.plan().groups.iter().all(|g| g.algo != Algo::Winograd),
         "bench plan must not contain Winograd groups"
     );
-    let weights = WeightSet::random(&net, 42);
-    let exec_seq = Executor::new(&net, &plan, &sparsity, &weights);
-    let exec_batched =
-        Executor::new(&net, &plan, &sparsity, &weights).with_intra_workers(cores);
 
     let mut rng = XorShift64Star::new(7);
     let batch: Vec<Tensor> =
         (0..8).map(|_| Tensor::he_normal(vec![32, 32, 3], &mut rng)).collect();
 
     // ---- parity gate before any timing --------------------------------
-    let seq_out: Vec<Tensor> = batch.iter().map(|x| exec_seq.run(x)).collect();
-    let batched_out = exec_batched.run_batch(&batch);
+    let seq_out: Vec<Tensor> =
+        batch.iter().map(|x| model_seq.run(x).expect("sequential run")).collect();
+    let batched_out = model_tiled.run_batch(&batch).expect("batched run");
     for (i, (g, s)) in batched_out.iter().zip(&seq_out).enumerate() {
         let scale = s.abs_max().max(1e-3);
         let diff = max_abs_diff(g, s);
@@ -69,29 +86,24 @@ fn main() {
         net.layers.len(),
         net.total_macs() as f64 / 1e6
     );
-    let t_seq = quick("8 x sequential Executor::run", || {
+    let t_seq = quick("8 x sequential CompiledModel::run", || {
         for x in &batch {
-            black_box(exec_seq.run(x));
+            black_box(model_seq.run(x).expect("sequential run"));
         }
     });
-    let t_batch = quick("Executor::run_batch(8), tiled", || {
-        black_box(exec_batched.run_batch(&batch));
+    let t_batch = quick("CompiledModel::run_batch(8), tiled", || {
+        black_box(model_tiled.run_batch(&batch).expect("batched run"));
     });
 
-    let engine = InferenceEngine::with_plan(
-        net.clone(),
-        &sparsity,
-        weights.clone(),
-        plan.clone(),
-        EngineConfig {
+    let engine = model_tiled
+        .serve(EngineConfig {
             workers: 1,
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             queue_cap: 64,
             intra_workers: cores,
-        },
-    )
-    .unwrap();
+        })
+        .expect("engine binds");
     // engine outputs pass the same gate (queueing must not change numerics)
     for (i, (r, s)) in engine.run_batch(&batch).into_iter().zip(&seq_out).enumerate() {
         let g = r.unwrap_or_else(|e| panic!("engine request {i} failed: {e}"));
@@ -132,11 +144,11 @@ fn main() {
         let sub = &batch[..nb];
         let ts = bench(&format!("seq x{nb}"), Duration::from_millis(150), || {
             for x in sub {
-                black_box(exec_seq.run(x));
+                black_box(model_seq.run(x).expect("sequential run"));
             }
         });
         let tb = bench(&format!("batched x{nb}"), Duration::from_millis(150), || {
-            black_box(exec_batched.run_batch(sub));
+            black_box(model_tiled.run_batch(sub).expect("batched run"));
         });
         table.row(&[
             format!("{nb}"),

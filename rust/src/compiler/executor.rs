@@ -34,14 +34,18 @@
 //! (Winograd tiles, depthwise, pooling, SE) fan across
 //! `coordinator::scheduler::map_parallel`. Every path reuses the exact
 //! per-row / per-image kernels of the sequential executor, so batched
-//! outputs are bit-identical to n sequential [`Executor::run`] calls.
+//! outputs are bit-identical to n sequential [`Executor::try_run`] calls.
 //!
-//! Failure model: lookups that depend on *bound data* (weights present, FC
-//! widths, input shapes) return a typed [`ExecError`] from the `try_*`
-//! entry points instead of panicking, so a serving loop
-//! (`runtime::engine`) can fail one request without killing its worker
-//! thread. Plan/graph invariants (topological order, group coverage)
-//! remain debug assertions — they are programmer errors, not data errors.
+//! Failure model: *everything* here is fallible and typed. Lookups that
+//! depend on bound data (weights present, FC widths, input shapes) return
+//! an [`ExecError`], so a serving loop (`runtime::engine`) can fail one
+//! request without killing its worker thread, and the `CompiledModel`
+//! façade (`crate::model`) lifts the same errors into `NpasError::Exec`.
+//! The panicking `run`/`run_batch` wrappers were removed along with the
+//! one-shot `execute_plan` helper — outside `compiler` internals, execution
+//! goes through `CompiledModel`. Plan/graph invariants (topological order,
+//! group coverage) remain debug assertions — they are programmer errors,
+//! not data errors.
 
 use std::collections::BTreeMap;
 
@@ -56,10 +60,9 @@ use super::winograd;
 use super::SparsityMap;
 
 /// Typed executor failure: everything a malformed bundle or request can
-/// cause at run time. `Display` renders the same messages the old
-/// `panic!`s carried; the panicking entry points ([`Executor::run`],
-/// [`run_dense_reference`]) forward these, so legacy callers see identical
-/// behavior while `try_*` callers get a value they can route per-request.
+/// cause at run time. `Display` renders the same messages the historical
+/// `panic!`s carried; `crate::model::CompiledModel` wraps these in
+/// `NpasError::Exec` at the façade boundary.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ExecError {
     /// An input tensor does not match the network's `(h, w, c)` input.
@@ -584,8 +587,8 @@ enum Prep<'a> {
 }
 
 /// A compiled plan bound to weights, with per-layer kernel state
-/// ([`PreparedKernels`]) prepared **once**. Repeated [`Executor::run`] /
-/// [`Executor::try_run_batch`] calls pay only the kernel time, not the
+/// ([`PreparedKernels`]) prepared **once**. Repeated [`Executor::try_run`]
+/// / [`Executor::try_run_batch`] calls pay only the kernel time, not the
 /// preparation.
 pub struct Executor<'a> {
     net: &'a Network,
@@ -600,20 +603,8 @@ pub struct Executor<'a> {
 impl<'a> Executor<'a> {
     /// Bind a plan to weights, preparing kernel state. `sparsity` must be
     /// the map the plan was compiled with; `weights` should already be
-    /// masked ([`WeightSet::apply_sparsity`]). Panics on a malformed
-    /// binding — use [`Executor::try_new`] for a typed error instead.
-    pub fn new(
-        net: &'a Network,
-        plan: &'a ExecutionPlan,
-        sparsity: &SparsityMap,
-        weights: &'a WeightSet,
-    ) -> Executor<'a> {
-        Self::try_new(net, plan, sparsity, weights)
-            .unwrap_or_else(|e| panic!("executor bind: {e}"))
-    }
-
-    /// [`Executor::new`] with a typed error instead of a panic when the
-    /// weight set does not cover the plan's prepared layers.
+    /// masked ([`WeightSet::apply_sparsity`]). Returns a typed error when
+    /// the weight set does not match the plan's prepared layers.
     pub fn try_new(
         net: &'a Network,
         plan: &'a ExecutionPlan,
@@ -653,13 +644,8 @@ impl<'a> Executor<'a> {
     }
 
     /// Run one inference end-to-end on `input` (`(h, w, c)` matching the
-    /// network input); returns the final layer's output tensor. Panics on
-    /// malformed bindings — serving paths use [`Executor::try_run`].
-    pub fn run(&self, input: &Tensor) -> Tensor {
-        self.try_run(input).unwrap_or_else(|e| panic!("executor: {e}"))
-    }
-
-    /// [`Executor::run`] with typed errors: a batch of one.
+    /// network input); returns the final layer's output tensor, or a typed
+    /// error for a malformed binding or request — a batch of one.
     pub fn try_run(&self, input: &Tensor) -> Result<Tensor, ExecError> {
         let mut out = self.try_run_batch(std::slice::from_ref(input))?;
         Ok(out.pop().expect("batch of one output"))
@@ -667,7 +653,7 @@ impl<'a> Executor<'a> {
 
     /// Execute a micro-batch: all `inputs` (each `(h, w, c)`) through one
     /// pass over the plan, returning one output per input, in order.
-    /// Bit-identical to n sequential [`Executor::run`] calls; see the
+    /// Bit-identical to n sequential [`Executor::try_run`] calls; see the
     /// module docs for where the batch amortization comes from.
     pub fn try_run_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, ExecError> {
         if inputs.is_empty() {
@@ -768,39 +754,28 @@ impl<'a> Executor<'a> {
         let last = outs.last_mut().and_then(|o| o.take()).ok_or(ExecError::EmptyNetwork)?;
         Ok(last.unstack())
     }
-
-    /// Panicking convenience over [`Executor::try_run_batch`].
-    pub fn run_batch(&self, inputs: &[Tensor]) -> Vec<Tensor> {
-        self.try_run_batch(inputs).unwrap_or_else(|e| panic!("executor: {e}"))
-    }
-}
-
-/// One-shot convenience: bind ([`Executor::new`]) and [`Executor::run`]
-/// once. Callers executing the same plan repeatedly should hold an
-/// [`Executor`] to amortize the block-CSR packing.
-pub fn execute_plan(
-    net: &Network,
-    plan: &ExecutionPlan,
-    sparsity: &SparsityMap,
-    weights: &WeightSet,
-    input: &Tensor,
-) -> Tensor {
-    Executor::new(net, plan, sparsity, weights).run(input)
 }
 
 /// Naive dense per-layer reference: direct convolution / dense GEMV for
 /// every compute layer, the shared glue for everything else. This is the
 /// ground truth the compiled plans are differentially tested against.
-pub fn run_dense_reference(net: &Network, weights: &WeightSet, input: &Tensor) -> Tensor {
+/// Fallible like the executor: a malformed binding or input reports the
+/// same typed [`ExecError`]s.
+pub fn run_dense_reference(
+    net: &Network,
+    weights: &WeightSet,
+    input: &Tensor,
+) -> Result<Tensor, ExecError> {
     let (ih, iw, ic) = net.input_hwc;
-    assert_eq!(input.dims(), &[ih, iw, ic][..], "input shape mismatch");
+    if input.dims() != &[ih, iw, ic][..] {
+        return Err(ExecError::InputShape { want: net.input_hwc, got: input.dims().to_vec() });
+    }
     let mut outs: Vec<Option<Tensor>> = vec![None; net.layers.len()];
     for layer in &net.layers {
         let y = match layer.kind {
             LayerKind::Conv2d { stride, depthwise, .. } => {
                 let x = producer(&outs, layer, input);
-                let w = conv_weight(weights, layer.id, depthwise)
-                    .unwrap_or_else(|e| panic!("dense reference: {e}"));
+                let w = conv_weight(weights, layer.id, depthwise)?;
                 if depthwise {
                     x.conv2d_depthwise(w, stride)
                 } else {
@@ -809,20 +784,18 @@ pub fn run_dense_reference(net: &Network, weights: &WeightSet, input: &Tensor) -
             }
             LayerKind::Linear { .. } => {
                 let x = producer(&outs, layer, input);
-                let w = linear_weight(weights, layer.id)
-                    .unwrap_or_else(|e| panic!("dense reference: {e}"));
+                let w = linear_weight(weights, layer.id)?;
                 linear_forward(x, w)
             }
             _ => {
                 let x = producer(&outs, layer, input);
-                glue_layer(layer, x, &outs, weights)
-                    .unwrap_or_else(|e| panic!("dense reference: {e}"))
+                glue_layer(layer, x, &outs, weights)?
             }
         };
         check_shape(layer, &y);
         outs[layer.id] = Some(y);
     }
-    outs.last_mut().and_then(|o| o.take()).expect("empty network")
+    outs.last_mut().and_then(|o| o.take()).ok_or(ExecError::EmptyNetwork)
 }
 
 /// Largest elementwise |a - b| (diagnostic for the differential tests).
@@ -856,8 +829,9 @@ mod tests {
         let mut rng = XorShift64Star::new(7);
         let (h, w, c) = net.input_hwc;
         let input = Tensor::he_normal(vec![h, w, c], &mut rng);
-        let got = execute_plan(net, &plan, sparsity, &weights, &input);
-        let want = run_dense_reference(net, &weights, &input);
+        let exec = Executor::try_new(net, &plan, sparsity, &weights).unwrap();
+        let got = exec.try_run(&input).unwrap();
+        let want = run_dense_reference(net, &weights, &input).unwrap();
         let scale = want.abs_max().max(1e-3);
         let diff = max_abs_diff(&got, &want);
         assert!(
@@ -895,7 +869,7 @@ mod tests {
         parity(&net, &SparsityMap::new(), Framework::Ours, 1e-3);
         // the executor pre-transforms winograd kernels at bind time
         let weights = WeightSet::random(&net, 1);
-        let exec = Executor::new(&net, &plan, &SparsityMap::new(), &weights);
+        let exec = Executor::try_new(&net, &plan, &SparsityMap::new(), &weights).unwrap();
         assert_eq!(exec.prepared().num_winograd(), 1);
         assert_eq!(exec.prepared().num_packed(), 0);
     }
@@ -948,7 +922,7 @@ mod tests {
         let plan = compile(&net, &sp, &KRYO_485, Framework::Ours);
         let mut weights = WeightSet::random(&net, 3);
         weights.apply_sparsity(&sp);
-        let exec = Executor::new(&net, &plan, &sp, &weights);
+        let exec = Executor::try_new(&net, &plan, &sp, &weights).unwrap();
         assert_eq!(
             exec.prepared().num_packed(),
             1,
@@ -956,10 +930,11 @@ mod tests {
         );
         let mut rng = XorShift64Star::new(4);
         let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
-        let a = exec.run(&x);
-        let b = exec.run(&x);
+        let a = exec.try_run(&x).unwrap();
+        let b = exec.try_run(&x).unwrap();
         assert_eq!(a, b, "repeated runs must be bit-identical");
-        assert_eq!(a, execute_plan(&net, &plan, &sp, &weights, &x));
+        let fresh = Executor::try_new(&net, &plan, &sp, &weights).unwrap();
+        assert_eq!(a, fresh.try_run(&x).unwrap());
     }
 
     #[test]
@@ -977,7 +952,8 @@ mod tests {
         let weights = WeightSet::random(&net, 1);
         let mut rng = XorShift64Star::new(2);
         let input = Tensor::he_normal(vec![6, 6, 3], &mut rng);
-        let out = execute_plan(&net, &plan, &SparsityMap::new(), &weights, &input);
+        let exec = Executor::try_new(&net, &plan, &SparsityMap::new(), &weights).unwrap();
+        let out = exec.try_run(&input).unwrap();
         assert_eq!(out.dims(), &[6, 6, 4]);
         assert!(out.data().iter().all(|v| v.is_finite()));
     }
@@ -998,16 +974,18 @@ mod tests {
             let plan = compile(&net, &sp, &KRYO_485, Framework::Ours);
             let mut weights = WeightSet::random(&net, 13);
             weights.apply_sparsity(&sp);
-            let exec = Executor::new(&net, &plan, &sp, &weights);
+            let exec = Executor::try_new(&net, &plan, &sp, &weights).unwrap();
             let (h, w, c) = net.input_hwc;
             for nb in [1usize, 3, 5] {
                 let inputs: Vec<Tensor> =
                     (0..nb).map(|_| Tensor::he_normal(vec![h, w, c], &mut rng)).collect();
-                let seq: Vec<Tensor> = inputs.iter().map(|x| exec.run(x)).collect();
+                let seq: Vec<Tensor> =
+                    inputs.iter().map(|x| exec.try_run(x).unwrap()).collect();
                 for workers in [1usize, 2, 4] {
-                    let tiled = Executor::new(&net, &plan, &sp, &weights)
+                    let tiled = Executor::try_new(&net, &plan, &sp, &weights)
+                        .unwrap()
                         .with_intra_workers(workers);
-                    let got = tiled.run_batch(&inputs);
+                    let got = tiled.try_run_batch(&inputs).unwrap();
                     assert_eq!(got.len(), nb);
                     for (a, b) in got.iter().zip(&seq) {
                         assert_eq!(a, b, "{}: nb={nb} workers={workers}", net.name);
@@ -1026,11 +1004,11 @@ mod tests {
         weights.apply_sparsity(&sp);
         let prepared = PreparedKernels::try_prepare(&net, &plan, &sp, &weights).unwrap();
         assert_eq!(prepared.num_packed(), 1);
-        let owned = Executor::new(&net, &plan, &sp, &weights);
+        let owned = Executor::try_new(&net, &plan, &sp, &weights).unwrap();
         let shared = Executor::with_prepared(&net, &plan, &weights, &prepared);
         let mut rng = XorShift64Star::new(9);
         let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
-        assert_eq!(owned.run(&x), shared.run(&x));
+        assert_eq!(owned.try_run(&x).unwrap(), shared.try_run(&x).unwrap());
     }
 
     #[test]
@@ -1038,7 +1016,7 @@ mod tests {
         let net = glue_heavy_net();
         let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
         let weights = WeightSet::random(&net, 5);
-        let exec = Executor::new(&net, &plan, &SparsityMap::new(), &weights);
+        let exec = Executor::try_new(&net, &plan, &SparsityMap::new(), &weights).unwrap();
         // wrong input shape: typed error, no panic
         let bad = Tensor::zeros(vec![3, 3, 8]);
         match exec.try_run(&bad) {
@@ -1059,7 +1037,7 @@ mod tests {
             .unwrap()
             .id;
         broken.remove(fc_id);
-        let exec2 = Executor::new(&net, &plan, &SparsityMap::new(), &broken);
+        let exec2 = Executor::try_new(&net, &plan, &SparsityMap::new(), &broken).unwrap();
         let x = Tensor::zeros(vec![12, 12, 8]);
         match exec2.try_run(&x) {
             Err(ExecError::MissingWeights { layer, want, got }) => {

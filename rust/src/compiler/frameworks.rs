@@ -103,6 +103,21 @@ impl Framework {
             Framework::PyTorchMobile => "PyTorch Mobile",
         }
     }
+
+    /// Stable lowercase token used by the CLI and serialized bundles.
+    pub fn id(self) -> &'static str {
+        match self {
+            Framework::Ours => "ours",
+            Framework::MNN => "mnn",
+            Framework::TFLite => "tflite",
+            Framework::PyTorchMobile => "ptm",
+        }
+    }
+
+    /// Inverse of [`Framework::id`].
+    pub fn from_id(s: &str) -> Option<Framework> {
+        Framework::ALL.into_iter().find(|fw| fw.id() == s)
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +134,14 @@ mod tests {
             assert!(!c.sparse, "{fw:?} must not execute sparse models");
             assert!(!c.autotune);
         }
+    }
+
+    #[test]
+    fn id_roundtrips() {
+        for fw in Framework::ALL {
+            assert_eq!(Framework::from_id(fw.id()), Some(fw));
+        }
+        assert_eq!(Framework::from_id("onnx"), None);
     }
 
     #[test]

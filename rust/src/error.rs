@@ -1,0 +1,122 @@
+//! Crate-wide typed error: every fallible public entry point of the
+//! pipeline — building a [`crate::model::CompiledModel`], loading a bundle
+//! or manifest, executing a plan, parsing a config — reports one of these
+//! variants instead of a bare `String` or an `anyhow` blob.
+//!
+//! The variants follow the pipeline stages:
+//! * [`NpasError::InvalidConfig`] — the caller asked for something the
+//!   pipeline cannot build (missing weights, unknown device, a sparsity
+//!   annotation pointing at a nonexistent layer, a GPU target for a
+//!   framework without a GPU backend);
+//! * [`NpasError::Compile`] — the compiler/backends failed (codegen,
+//!   PJRT/XLA artifact compilation or execution);
+//! * [`NpasError::Exec`] — the executable kernel backend rejected a bound
+//!   model or a request (wraps the executor's typed [`ExecError`]);
+//! * [`NpasError::Io`] — a filesystem operation failed, tagged with the
+//!   path;
+//! * [`NpasError::Parse`] — on-disk data (bundle JSON, manifest, HLO text)
+//!   did not decode.
+//!
+//! The enum is `Clone + PartialEq + Eq` so tests can assert on exact
+//! variants, and implements [`std::error::Error`] so it threads through
+//! `anyhow`-based callers (the training loop) with `?`.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::compiler::ExecError;
+
+/// Crate-wide result alias: `npas::Result<T>`.
+pub type Result<T> = std::result::Result<T, NpasError>;
+
+/// See the module docs for the variant taxonomy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NpasError {
+    /// Compiler or accelerator-backend failure.
+    Compile(String),
+    /// Typed executor failure (bad binding or bad request).
+    Exec(ExecError),
+    /// Filesystem failure, tagged with the offending path.
+    Io { path: String, message: String },
+    /// On-disk data (JSON bundle, manifest, config) failed to decode.
+    Parse(String),
+    /// The requested pipeline cannot be built from these inputs.
+    InvalidConfig(String),
+}
+
+impl NpasError {
+    /// Tag an [`std::io::Error`] with the path it occurred on.
+    pub fn io(path: impl AsRef<Path>, err: std::io::Error) -> NpasError {
+        NpasError::Io {
+            path: path.as_ref().display().to_string(),
+            message: err.to_string(),
+        }
+    }
+
+    pub fn parse(msg: impl Into<String>) -> NpasError {
+        NpasError::Parse(msg.into())
+    }
+
+    pub fn invalid(msg: impl Into<String>) -> NpasError {
+        NpasError::InvalidConfig(msg.into())
+    }
+
+    pub fn compile(msg: impl Into<String>) -> NpasError {
+        NpasError::Compile(msg.into())
+    }
+}
+
+impl fmt::Display for NpasError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NpasError::Compile(msg) => write!(f, "compile error: {msg}"),
+            NpasError::Exec(e) => write!(f, "execution error: {e}"),
+            NpasError::Io { path, message } => write!(f, "io error on {path}: {message}"),
+            NpasError::Parse(msg) => write!(f, "parse error: {msg}"),
+            NpasError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NpasError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NpasError::Exec(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ExecError> for NpasError {
+    fn from(e: ExecError) -> NpasError {
+        NpasError::Exec(e)
+    }
+}
+
+impl From<crate::util::json::ParseError> for NpasError {
+    fn from(e: crate::util::json::ParseError) -> NpasError {
+        NpasError::Parse(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_tagged_and_stable() {
+        let e = NpasError::invalid("no weights bound");
+        assert_eq!(e.to_string(), "invalid configuration: no weights bound");
+        let e = NpasError::io("/tmp/x.json", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.to_string().contains("/tmp/x.json"), "{e}");
+        let e: NpasError = ExecError::EmptyBatch.into();
+        assert!(matches!(e, NpasError::Exec(ExecError::EmptyBatch)));
+        assert!(e.to_string().contains("empty request batch"), "{e}");
+    }
+
+    #[test]
+    fn variants_compare_for_test_assertions() {
+        assert_eq!(NpasError::parse("x"), NpasError::Parse("x".to_string()));
+        assert_ne!(NpasError::parse("x"), NpasError::invalid("x"));
+    }
+}

@@ -138,16 +138,18 @@ impl Network {
     }
 
     /// Validate topological order + shape consistency between producers and
-    /// consumers. Returns Err(description) on the first violation.
-    pub fn validate(&self) -> Result<(), String> {
+    /// consumers. Returns [`crate::NpasError::InvalidConfig`] describing the
+    /// first violation.
+    pub fn validate(&self) -> crate::Result<()> {
+        let invalid = |msg: String| Err(crate::NpasError::InvalidConfig(msg));
         for (i, l) in self.layers.iter().enumerate() {
             if l.id != i {
-                return Err(format!("layer {} has id {}", i, l.id));
+                return invalid(format!("layer {} has id {}", i, l.id));
             }
             if let LayerKind::Linear { din, .. } = l.kind {
                 let (h, w, c) = l.in_hwc;
                 if h * w * c != din {
-                    return Err(format!(
+                    return invalid(format!(
                         "layer {i} ({}): Linear din {din} != input numel {}",
                         l.name,
                         h * w * c
@@ -156,18 +158,18 @@ impl Network {
             }
             for &src in &l.inputs {
                 if src >= i {
-                    return Err(format!("layer {i} consumes later/self layer {src}"));
+                    return invalid(format!("layer {i} consumes later/self layer {src}"));
                 }
                 let prod = self.layers[src].out_hwc();
                 if matches!(l.kind, LayerKind::Add) {
                     if prod != l.in_hwc {
-                        return Err(format!(
+                        return invalid(format!(
                             "Add layer {i}: input {src} shape {prod:?} != {:?}",
                             l.in_hwc
                         ));
                     }
                 } else if l.inputs.len() == 1 && prod != l.in_hwc {
-                    return Err(format!(
+                    return invalid(format!(
                         "layer {i} ({}) in_hwc {:?} != producer {src} out {prod:?}",
                         l.name, l.in_hwc
                     ));

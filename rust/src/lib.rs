@@ -9,14 +9,22 @@
 //! * [`pruning`] — fine-grained structured pruning schemes + algorithms.
 //! * [`compiler`] — the mobile compiler simulator ("on-device" latency)
 //!   plus the executable kernel backend (`compiler::executor`).
-//! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts.
+//! * [`model`] — the [`CompiledModel`] façade: scheme → compile → measure
+//!   → execute → serve → save behind one typed pipeline handle. This is
+//!   the public path from a pruning decision to a running model.
+//! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts, plus
+//!   the micro-batching serving engine.
 //! * [`train`] — SynthVision data + training/eval driver.
 //! * [`search`] — Q-learning + Bayesian-optimization NPAS pipeline.
 //! * [`coordinator`] — parallel candidate-evaluation scheduling.
+//! * [`error`] — the crate-wide [`NpasError`] taxonomy every fallible
+//!   entry point reports.
 
 pub mod graph;
 pub mod pruning;
 pub mod compiler;
+pub mod error;
+pub mod model;
 pub mod runtime;
 pub mod train;
 pub mod search;
@@ -25,3 +33,6 @@ pub mod config;
 pub mod bench;
 pub mod tensor;
 pub mod util;
+
+pub use error::{NpasError, Result};
+pub use model::{CompiledModel, CompiledModelBuilder, SchemeSpec, WeightSpec};

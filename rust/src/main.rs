@@ -5,22 +5,26 @@
 //!   profile  print the §4 motivation tables (filter types, pruning schemes)
 //!   prune    one-shot prune the supernet under a scheme/rate and report
 //!   train    train the dense supernet and report the loss curve
-//!   measure  latency of a zoo model under a framework/device
+//!   measure  latency model for a zoo network (100-run protocol); with
+//!            `--save` also emits a runnable `CompiledModel` artifact
+//!   run      load a saved `CompiledModel` artifact and execute it
 //!
 //! Flags: `--config <file.json>` plus per-key overrides (see config.rs).
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use npas::compiler::device::{ADRENO_640, KRYO_485};
-use npas::compiler::{measure, Framework, SparsityMap};
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{measure, uniform_sparsity, DeviceSpec, Framework, SparsityMap};
 use npas::config::RunConfig;
 use npas::coordinator::EventLog;
 use npas::graph::zoo;
 use npas::pruning::{PruneRate, PruneScheme};
 use npas::runtime::Runtime;
 use npas::search::npas as pipeline;
+use npas::tensor::{Tensor, XorShift64Star};
 use npas::train::{SgdConfig, Trainer};
 use npas::util::cli::Args;
+use npas::{CompiledModel, NpasError};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -36,6 +40,7 @@ fn main() -> Result<()> {
         Some("prune") => cmd_prune(&cfg, &args),
         Some("train") => cmd_train(&cfg, &args),
         Some("measure") => cmd_measure(&args),
+        Some("run") => cmd_run(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand `{o}`\n");
@@ -60,7 +65,9 @@ USAGE: npas <subcommand> [--config file.json] [--flag value ...]
            --rate 6.0 --steps 20
   train    dense supernet training: --steps 120
   measure  --model mbv1|mbv2|mbv3|effb0|r50|r50deep --device cpu|gpu
-           --framework ours|mnn|tflite|ptm"
+           --framework ours|mnn|tflite|ptm [--scheme ... --rate 5.0]
+  run      --bundle model.json [--batch 4 --seed 7]
+           (artifact written by CompiledModel::save / `measure --save`)"
     );
 }
 
@@ -102,12 +109,10 @@ fn cmd_profile() -> Result<()> {
         // hold MACs constant by scaling cout
         let cout = (256.0 * 9.0 / (k * k) as f64) as usize;
         let net = zoo::single_conv(56, k, 256, cout);
+        // latency-only query: same plan + numbers as CompiledModel::latency,
+        // without materializing weights
         let r = measure(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours, 100);
-        println!(
-            "  {k}x{k}: {:6.2} ms  ({} MACs)",
-            r.mean_ms,
-            net.total_macs()
-        );
+        println!("  {k}x{k}: {:6.2} ms  ({} MACs)", r.mean_ms, net.total_macs());
     }
     println!("\n# Fig 3(b): speedup vs pruning rate (3x3 CONV 56x56x256->256, CPU)");
     let macs = 56.0 * 56.0 * 9.0 * 256.0 * 256.0;
@@ -129,13 +134,7 @@ fn cmd_profile() -> Result<()> {
 
 fn cmd_prune(cfg: &RunConfig, args: &Args) -> Result<()> {
     let rt = Runtime::load(&cfg.artifact_dir)?;
-    let scheme = match args.str_or("scheme", "block").as_str() {
-        "filter" => PruneScheme::Filter,
-        "pattern" => PruneScheme::Pattern,
-        "unstructured" => PruneScheme::Unstructured,
-        "block" => PruneScheme::block_punched_default(),
-        s => bail!("unknown scheme `{s}`"),
-    };
+    let scheme = parse_scheme(&args.str_or("scheme", "block"))?;
     let rate = args.f64_or("rate", 6.0) as f32;
     let steps = args.usize_or("steps", 40);
 
@@ -180,33 +179,102 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn parse_scheme(s: &str) -> Result<PruneScheme> {
+    Ok(match s {
+        "filter" => PruneScheme::Filter,
+        "pattern" => PruneScheme::Pattern,
+        "unstructured" => PruneScheme::Unstructured,
+        "block" => PruneScheme::block_punched_default(),
+        other => return Err(NpasError::invalid(format!("unknown scheme `{other}`")).into()),
+    })
+}
+
+/// Report the latency model for a zoo network (optionally pruned). This is
+/// the latency-only projection of the pipeline — same plan, same numbers
+/// as `CompiledModel::latency` — so no weights are materialized unless
+/// `--save` asks for a runnable artifact, which then goes through the
+/// façade (weights + kernel prep) and can be executed with `npas run`.
 fn cmd_measure(args: &Args) -> Result<()> {
-    let model = args.str_or("model", "mbv3");
-    let net = match model.as_str() {
+    let name = args.str_or("model", "mbv3");
+    let net = match name.as_str() {
         "mbv1" => zoo::mobilenet_v1(),
         "mbv2" => zoo::mobilenet_v2(),
         "mbv3" => zoo::mobilenet_v3(),
         "effb0" => zoo::efficientnet_b0(),
         "r50" => zoo::resnet50(),
         "r50deep" => zoo::resnet50_narrow_deep(),
-        m => bail!("unknown model `{m}`"),
+        m => return Err(NpasError::invalid(format!("unknown model `{m}`")).into()),
     };
-    let device = match args.str_or("device", "cpu").as_str() {
-        "cpu" => &KRYO_485,
-        "gpu" => &ADRENO_640,
-        d => bail!("unknown device `{d}`"),
+    let device_id = args.str_or("device", "cpu");
+    let device = DeviceSpec::by_name(&device_id)
+        .ok_or_else(|| NpasError::invalid(format!("unknown device `{device_id}`")))?;
+    let fw_id = args.str_or("framework", "ours");
+    let fw = Framework::from_id(&fw_id)
+        .ok_or_else(|| NpasError::invalid(format!("unknown framework `{fw_id}`")))?;
+    if device.is_gpu && !fw.caps().gpu {
+        return Err(NpasError::invalid(format!("{} has no GPU backend", fw.name())).into());
+    }
+    let sparsity = match args.get("scheme") {
+        Some(scheme) => {
+            let rate = args.parsed::<f32>("rate")?.unwrap_or(5.0);
+            if !(1.0..=1e6).contains(&rate) {
+                return Err(
+                    NpasError::invalid(format!("pruning rate {rate} outside 1.0..=1e6")).into()
+                );
+            }
+            uniform_sparsity(&net, parse_scheme(scheme)?, rate)
+        }
+        None => SparsityMap::new(),
     };
-    let fw = match args.str_or("framework", "ours").as_str() {
-        "ours" => Framework::Ours,
-        "mnn" => Framework::MNN,
-        "tflite" => Framework::TFLite,
-        "ptm" => Framework::PyTorchMobile,
-        f => bail!("unknown framework `{f}`"),
-    };
-    let r = measure(&net, &SparsityMap::new(), device, fw, 100);
+
+    let r = measure(&net, &sparsity, device, fw, 100);
     println!(
         "{} on {} via {}: {:.2} ms ± {:.2} (compute {:.2} / memory {:.2} / overhead {:.2}; {} fused groups; {} runs)",
         net.name, r.device, fw.name(), r.mean_ms, r.std_ms, r.compute_ms, r.memory_ms, r.overhead_ms, r.num_groups, r.runs
     );
+    if let Some(path) = args.get("save") {
+        let model = CompiledModel::build(net)
+            .scheme(sparsity)
+            .weights(args.u64_or("seed", 42))
+            .target(device, fw)
+            .compile()?;
+        model.save(path)?;
+        println!("saved runnable model to {path} — execute with `npas run --bundle {path}`");
+    }
+    Ok(())
+}
+
+/// Load a saved `CompiledModel` artifact and execute it on random inputs —
+/// the whole save → load → run path of the façade from the command line.
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args.require("bundle")?;
+    let model = CompiledModel::load(path)?;
+    let (h, w, c) = model.network().input_hwc;
+    let nb = args.parsed::<usize>("batch")?.unwrap_or(1).max(1);
+    let mut rng = XorShift64Star::new(args.u64_or("seed", 7));
+    let inputs: Vec<Tensor> =
+        (0..nb).map(|_| Tensor::he_normal(vec![h, w, c], &mut rng)).collect();
+
+    let t = std::time::Instant::now();
+    let outputs = model.run_batch(&inputs)?;
+    let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+    let reference = model.reference(&inputs[0])?;
+    let diff = npas::compiler::max_abs_diff(&outputs[0], &reference);
+    let r = model.latency(100);
+    println!(
+        "{}: batch {nb} in {wall_ms:.1}ms host wall clock; |out - dense reference| = {diff:.2e}",
+        model.network().name
+    );
+    println!(
+        "latency model: {:.2} ms ± {:.2} on {} via {} ({} fused groups)",
+        r.mean_ms,
+        r.std_ms,
+        r.device,
+        model.framework().name(),
+        r.num_groups
+    );
+    for (i, out) in outputs.iter().enumerate() {
+        println!("  output {i}: dims {:?}, l2 {:.4}", out.dims(), out.l2_norm());
+    }
     Ok(())
 }

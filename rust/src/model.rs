@@ -1,0 +1,592 @@
+//! The `CompiledModel` façade: the paper's whole pipeline behind one typed
+//! handle.
+//!
+//! NPAS's core claim is that pruning decisions, compiler optimization and
+//! deployment form *one* pipeline. This module makes that pipeline a
+//! first-class API object: a builder takes a network, a pruning scheme, a
+//! weight source and a `(device, framework)` target, compiles once, and
+//! hands back a [`CompiledModel`] that owns the `ExecutionPlan`, the bound
+//! (masked) `WeightSet` and the `PreparedKernels` — and exposes every stage
+//! the crate previously scattered across four surfaces:
+//!
+//! * [`CompiledModel::latency`] — the roofline latency model's 100-run
+//!   measurement protocol (`compiler::measure_plan`) on the owned plan;
+//! * [`CompiledModel::run`] / [`CompiledModel::run_batch`] — execute the
+//!   plan on real tensors through the kernel backend (typed errors, no
+//!   panicking wrappers);
+//! * [`CompiledModel::reference`] — the naive dense ground truth on the
+//!   same masked weights (the differential-testing anchor);
+//! * [`CompiledModel::serve`] — stand up a micro-batching
+//!   [`InferenceEngine`] sharing this model's one-time kernel preparation;
+//! * [`CompiledModel::save`] / [`CompiledModel::load`] — one JSON artifact
+//!   (network + sparsity + weights + target) that round-trips to a
+//!   bit-identical model, subsuming the old `PlanBundle::execute` path;
+//! * [`CompiledModel::cache_stats`] — compile-once amortization via an
+//!   optional shared [`PlanCache`] (the same cache the search's
+//!   `EvalContext` carries).
+//!
+//! Every failure is a [`crate::NpasError`]: builder misuse (missing
+//! weights, a sparsity annotation pointing at a nonexistent layer, a GPU
+//! target for a CPU-only framework) is `InvalidConfig`; malformed bindings
+//! and requests surface the executor's typed `ExecError` as `Exec`; disk
+//! problems are `Io`/`Parse`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::compiler::codegen::compile;
+use crate::compiler::device::{ADRENO_640, KRYO_485};
+use crate::compiler::latency::measure_plan;
+use crate::compiler::{
+    run_dense_reference, uniform_sparsity, DeviceSpec, ExecutionPlan, Executor, Framework,
+    LatencyReport, PlanCache, PlanCacheStats, PreparedKernels, SparsityMap, WeightSet,
+};
+use crate::error::{NpasError, Result};
+use crate::graph::Network;
+use crate::pruning::PruneScheme;
+use crate::runtime::bundle::PlanBundle;
+use crate::runtime::{EngineConfig, InferenceEngine};
+use crate::tensor::Tensor;
+use crate::util::Json;
+
+/// How the builder derives per-layer sparsity annotations.
+#[derive(Debug, Clone)]
+pub enum SchemeSpec {
+    /// No pruning: compile the dense network.
+    Dense,
+    /// Explicit per-layer annotations (validated against the network).
+    Sparsity(SparsityMap),
+    /// One scheme at one rate on every layer it applies to
+    /// (`compiler::uniform_sparsity`).
+    Uniform(PruneScheme, f32),
+}
+
+impl From<SparsityMap> for SchemeSpec {
+    fn from(map: SparsityMap) -> SchemeSpec {
+        SchemeSpec::Sparsity(map)
+    }
+}
+
+impl From<(PruneScheme, f32)> for SchemeSpec {
+    fn from((scheme, rate): (PruneScheme, f32)) -> SchemeSpec {
+        SchemeSpec::Uniform(scheme, rate)
+    }
+}
+
+/// Where the builder gets weights: an existing set, or He-normal random
+/// weights from a seed (the differential suites' convention).
+#[derive(Debug, Clone)]
+pub enum WeightSpec {
+    Seed(u64),
+    Set(WeightSet),
+}
+
+impl From<u64> for WeightSpec {
+    fn from(seed: u64) -> WeightSpec {
+        WeightSpec::Seed(seed)
+    }
+}
+
+impl From<WeightSet> for WeightSpec {
+    fn from(set: WeightSet) -> WeightSpec {
+        WeightSpec::Set(set)
+    }
+}
+
+/// Builder for [`CompiledModel`]; see [`CompiledModel::build`].
+#[derive(Debug, Clone)]
+pub struct CompiledModelBuilder {
+    network: Network,
+    scheme: SchemeSpec,
+    weights: Option<WeightSpec>,
+    device: DeviceSpec,
+    framework: Framework,
+    cache: Option<Arc<PlanCache>>,
+    intra_workers: usize,
+    /// `false` when loading a saved model whose weights already carry the
+    /// masks (re-masking is skipped so save → load is bit-identical).
+    mask_weights: bool,
+}
+
+impl CompiledModelBuilder {
+    /// Pruning scheme: a full [`SparsityMap`], or `(PruneScheme, rate)` for
+    /// uniform annotation. Omit for a dense model.
+    pub fn scheme(mut self, scheme: impl Into<SchemeSpec>) -> Self {
+        self.scheme = scheme.into();
+        self
+    }
+
+    /// Weight source: a [`WeightSet`], or a `u64` seed for He-normal random
+    /// weights. Required — [`CompiledModelBuilder::compile`] reports
+    /// `InvalidConfig` when no weights were bound.
+    pub fn weights(mut self, weights: impl Into<WeightSpec>) -> Self {
+        self.weights = Some(weights.into());
+        self
+    }
+
+    /// Deployment target. Defaults to the mobile CPU under our framework.
+    pub fn target(mut self, device: &DeviceSpec, framework: Framework) -> Self {
+        self.device = device.clone();
+        self.framework = framework;
+        self
+    }
+
+    /// Route compilation through a shared [`PlanCache`] (compile-once
+    /// candidate evaluation); [`CompiledModel::cache_stats`] then reports
+    /// its counters.
+    pub fn plan_cache(mut self, cache: Arc<PlanCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Intra-op tiling width for [`CompiledModel::run`] /
+    /// [`CompiledModel::run_batch`] (outputs are bit-identical for every
+    /// value; this only trades wall-clock).
+    pub fn intra_workers(mut self, workers: usize) -> Self {
+        self.intra_workers = workers.max(1);
+        self
+    }
+
+    /// Validate, mask, compile and prepare: the one call that turns a
+    /// pruning decision into a runnable model.
+    pub fn compile(self) -> Result<CompiledModel> {
+        let CompiledModelBuilder {
+            network,
+            scheme,
+            weights,
+            device,
+            framework,
+            cache,
+            intra_workers,
+            mask_weights,
+        } = self;
+        network.validate()?;
+        if device.is_gpu && !framework.caps().gpu {
+            return Err(NpasError::invalid(format!(
+                "{} has no GPU backend (target device `{}`)",
+                framework.name(),
+                device.name
+            )));
+        }
+        let sparsity = match scheme {
+            SchemeSpec::Dense => SparsityMap::new(),
+            SchemeSpec::Uniform(scheme, rate) => {
+                // mirror the bundle loader's bound so everything the
+                // builder accepts survives a save → load round-trip
+                if !(1.0..=1e6).contains(&rate) {
+                    return Err(NpasError::invalid(format!(
+                        "pruning rate must be in 1.0..=1e6, got {rate}"
+                    )));
+                }
+                uniform_sparsity(&network, scheme, rate)
+            }
+            SchemeSpec::Sparsity(map) => {
+                for (&id, sp) in &map {
+                    if id >= network.layers.len() {
+                        return Err(NpasError::invalid(format!(
+                            "sparsity annotation for unknown layer {id} \
+                             (network `{}` has {} layers)",
+                            network.name,
+                            network.layers.len()
+                        )));
+                    }
+                    if !(1.0..=1e6).contains(&sp.rate.0) {
+                        return Err(NpasError::invalid(format!(
+                            "layer {id}: pruning rate {} outside 1.0..=1e6",
+                            sp.rate.0
+                        )));
+                    }
+                }
+                map
+            }
+        };
+        let mut weights = match weights {
+            Some(WeightSpec::Set(set)) => set,
+            Some(WeightSpec::Seed(seed)) => WeightSet::random(&network, seed),
+            None => {
+                return Err(NpasError::invalid(
+                    "no weights bound — call .weights(seed) or .weights(weight_set) \
+                     before .compile()",
+                ))
+            }
+        };
+        if mask_weights {
+            weights.apply_sparsity(&sparsity);
+        }
+        let plan = match &cache {
+            Some(cache) => cache.get_or_compile(&network, &sparsity, &device, framework),
+            None => Arc::new(compile(&network, &sparsity, &device, framework)),
+        };
+        let prepared = Arc::new(
+            PreparedKernels::try_prepare(&network, &plan, &sparsity, &weights)
+                .map_err(NpasError::Exec)?,
+        );
+        Ok(CompiledModel {
+            net: network,
+            sparsity,
+            plan,
+            weights,
+            prepared,
+            device,
+            framework,
+            cache,
+            intra_workers,
+        })
+    }
+}
+
+/// One compiled, weight-bound, kernel-prepared model — the single public
+/// path from a pruning scheme to a running (and served, and saved) model.
+/// See the module docs for the pipeline it unifies.
+///
+/// ```
+/// use npas::compiler::device::KRYO_485;
+/// use npas::compiler::Framework;
+/// use npas::graph::zoo;
+/// use npas::pruning::PruneScheme;
+/// use npas::tensor::Tensor;
+/// use npas::CompiledModel;
+///
+/// let net = zoo::single_conv(8, 3, 4, 4);
+/// let model = CompiledModel::build(net)
+///     .scheme((PruneScheme::block_punched_default(), 3.0))
+///     .weights(42u64)
+///     .target(&KRYO_485, Framework::Ours)
+///     .compile()?;
+/// let out = model.run(&Tensor::zeros(vec![8, 8, 4]))?;
+/// assert_eq!(out.dims(), &[8, 8, 4]);
+/// assert!(model.latency(10).mean_ms > 0.0);
+/// # Ok::<(), npas::NpasError>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    net: Network,
+    sparsity: SparsityMap,
+    plan: Arc<ExecutionPlan>,
+    weights: WeightSet,
+    prepared: Arc<PreparedKernels>,
+    device: DeviceSpec,
+    framework: Framework,
+    cache: Option<Arc<PlanCache>>,
+    intra_workers: usize,
+}
+
+impl CompiledModel {
+    /// Start building a model from a network; see
+    /// [`CompiledModelBuilder`].
+    pub fn build(network: Network) -> CompiledModelBuilder {
+        CompiledModelBuilder {
+            network,
+            scheme: SchemeSpec::Dense,
+            weights: None,
+            device: KRYO_485.clone(),
+            framework: Framework::Ours,
+            cache: None,
+            intra_workers: 1,
+            mask_weights: true,
+        }
+    }
+
+    // ---- measure ---------------------------------------------------------
+
+    /// The paper's measurement protocol (mean of `runs` simulated
+    /// measurements) on the owned plan — delegates to
+    /// `compiler::measure_plan`, so a given plan always reports the same
+    /// numbers whether measured here, by the search, or by the benches.
+    pub fn latency(&self, runs: usize) -> LatencyReport {
+        measure_plan(&self.plan, &self.device, runs)
+    }
+
+    // ---- execute ---------------------------------------------------------
+
+    fn executor(&self) -> Executor<'_> {
+        Executor::with_prepared(&self.net, &self.plan, &self.weights, &self.prepared)
+            .with_intra_workers(self.intra_workers)
+    }
+
+    /// Execute one `(h, w, c)` input through the compiled plan.
+    pub fn run(&self, input: &Tensor) -> Result<Tensor> {
+        self.executor().try_run(input).map_err(NpasError::Exec)
+    }
+
+    /// Execute a micro-batch in one pass over the plan (one GEMM per conv
+    /// layer for the whole batch); bit-identical to n [`CompiledModel::run`]
+    /// calls.
+    pub fn run_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.executor().try_run_batch(inputs).map_err(NpasError::Exec)
+    }
+
+    /// The naive dense per-layer reference on the same masked weights —
+    /// the ground truth `run` is differentially tested against.
+    pub fn reference(&self, input: &Tensor) -> Result<Tensor> {
+        run_dense_reference(&self.net, &self.weights, input).map_err(NpasError::Exec)
+    }
+
+    // ---- serve -----------------------------------------------------------
+
+    /// Stand up a micro-batching [`InferenceEngine`] serving this model.
+    /// The engine shares this model's one-time [`PreparedKernels`] — the
+    /// packing/Winograd-transform cost is not paid again per worker.
+    pub fn serve(&self, config: EngineConfig) -> Result<InferenceEngine> {
+        if config.workers < 1 || config.max_batch < 1 || config.queue_cap < 1 {
+            return Err(NpasError::invalid(format!(
+                "engine config needs workers/max_batch/queue_cap >= 1 \
+                 (got {}/{}/{})",
+                config.workers, config.max_batch, config.queue_cap
+            )));
+        }
+        Ok(InferenceEngine::from_parts(
+            self.net.clone(),
+            self.plan.clone(),
+            self.weights.clone(),
+            self.prepared.clone(),
+            config,
+        ))
+    }
+
+    // ---- persist ---------------------------------------------------------
+
+    /// Serialize network + sparsity + (masked) weights + target to one JSON
+    /// artifact. [`CompiledModel::load`] restores a bit-identical model.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut j = crate::runtime::bundle::parts_to_json(
+            &self.net,
+            &self.sparsity,
+            &self.weights,
+        );
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "target".to_string(),
+                Json::obj(vec![
+                    ("device", Json::str(device_token(&self.device))),
+                    ("framework", Json::str(self.framework.id())),
+                ]),
+            );
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| NpasError::io(dir, e))?;
+        }
+        std::fs::write(path, j.to_string()).map_err(|e| NpasError::io(path, e))
+    }
+
+    /// Load a model saved by [`CompiledModel::save`], recompiling for the
+    /// target recorded in the artifact. Weights are restored as saved (the
+    /// masks are already applied), so `save → load → run` is bit-identical
+    /// to the in-memory model.
+    pub fn load(path: impl AsRef<Path>) -> Result<CompiledModel> {
+        let (bundle, j) = crate::runtime::bundle::load_with_json(path.as_ref())?;
+        let target = j.get("target").ok_or_else(|| {
+            NpasError::parse(
+                "artifact has no `target` section (a raw PlanBundle?) — use \
+                 CompiledModel::load_with to supply device + framework",
+            )
+        })?;
+        let device_name = target.str_field("device")?;
+        let device = DeviceSpec::by_name(device_name).ok_or_else(|| {
+            NpasError::parse(format!(
+                "unknown device `{device_name}` in saved target — use \
+                 CompiledModel::load_with to supply a custom DeviceSpec"
+            ))
+        })?;
+        let fw_id = target.str_field("framework")?;
+        let framework = Framework::from_id(fw_id).ok_or_else(|| {
+            NpasError::parse(format!("unknown framework `{fw_id}` in saved target"))
+        })?;
+        Self::from_bundle(bundle, device, framework)
+    }
+
+    /// [`CompiledModel::load`] with an explicit target (for artifacts saved
+    /// against a custom [`DeviceSpec`], or to re-target a saved model).
+    pub fn load_with(
+        path: impl AsRef<Path>,
+        device: &DeviceSpec,
+        framework: Framework,
+    ) -> Result<CompiledModel> {
+        let (bundle, _) = crate::runtime::bundle::load_with_json(path.as_ref())?;
+        Self::from_bundle(bundle, device, framework)
+    }
+
+    fn from_bundle(
+        bundle: PlanBundle,
+        device: &DeviceSpec,
+        framework: Framework,
+    ) -> Result<CompiledModel> {
+        let mut b = CompiledModel::build(bundle.network)
+            .scheme(bundle.sparsity)
+            .weights(bundle.weights)
+            .target(device, framework);
+        b.mask_weights = false; // saved weights already carry the masks
+        b.compile()
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    /// Counters of the shared [`PlanCache`], when one was attached via
+    /// [`CompiledModelBuilder::plan_cache`].
+    pub fn cache_stats(&self) -> Option<PlanCacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    pub fn sparsity(&self) -> &SparsityMap {
+        &self.sparsity
+    }
+
+    pub fn weights(&self) -> &WeightSet {
+        &self.weights
+    }
+
+    pub fn device(&self) -> &DeviceSpec {
+        &self.device
+    }
+
+    pub fn framework(&self) -> Framework {
+        self.framework
+    }
+}
+
+/// The stable token `save` records for a device: the [`DeviceSpec::by_name`]
+/// token for the built-in presets, the display name otherwise (a custom
+/// spec round-trips through [`CompiledModel::load_with`]).
+fn device_token(device: &DeviceSpec) -> &str {
+    if *device == KRYO_485 {
+        "kryo485"
+    } else if *device == ADRENO_640 {
+        "adreno640"
+    } else {
+        device.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ExecError;
+    use crate::graph::zoo;
+    use crate::tensor::XorShift64Star;
+
+    #[test]
+    fn builder_compiles_and_runs_sparse_model() {
+        let net = zoo::single_conv(8, 3, 16, 16);
+        let model = CompiledModel::build(net)
+            .scheme((PruneScheme::block_punched_default(), 4.0))
+            .weights(3u64)
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap();
+        assert!(!model.sparsity().is_empty());
+        let mut rng = XorShift64Star::new(4);
+        let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
+        let got = model.run(&x).unwrap();
+        let want = model.reference(&x).unwrap();
+        let scale = want.abs_max().max(1e-3);
+        let diff = crate::compiler::max_abs_diff(&got, &want);
+        assert!(diff <= 1e-4 * scale, "diff {diff} vs scale {scale}");
+        // latency delegates to measure_plan on the owned plan
+        let direct = measure_plan(model.plan(), &KRYO_485, 100);
+        let facade = model.latency(100);
+        assert_eq!(direct.mean_ms, facade.mean_ms);
+        assert_eq!(direct.num_groups, facade.num_groups);
+    }
+
+    #[test]
+    fn missing_weights_is_invalid_config() {
+        let net = zoo::single_conv(6, 3, 4, 4);
+        match CompiledModel::build(net).compile() {
+            Err(NpasError::InvalidConfig(msg)) => assert!(msg.contains("weights"), "{msg}"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scheme_network_mismatch_is_invalid_config() {
+        let net = zoo::single_conv(6, 3, 4, 4);
+        let mut sp = SparsityMap::new();
+        sp.insert(
+            99,
+            crate::compiler::LayerSparsity::new(PruneScheme::Unstructured, 2.0),
+        );
+        match CompiledModel::build(net).scheme(sp).weights(1u64).compile() {
+            Err(NpasError::InvalidConfig(msg)) => {
+                assert!(msg.contains("unknown layer 99"), "{msg}")
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cpu_only_framework_on_gpu_is_invalid_config() {
+        let net = zoo::single_conv(6, 3, 4, 4);
+        match CompiledModel::build(net)
+            .weights(1u64)
+            .target(&ADRENO_640, Framework::PyTorchMobile)
+            .compile()
+        {
+            Err(NpasError::InvalidConfig(msg)) => assert!(msg.contains("GPU"), "{msg}"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_input_shape_is_typed_exec_error() {
+        let net = zoo::single_conv(6, 3, 4, 4);
+        let model = CompiledModel::build(net).weights(1u64).compile().unwrap();
+        match model.run(&Tensor::zeros(vec![2, 2, 2])) {
+            Err(NpasError::Exec(ExecError::InputShape { want, got })) => {
+                assert_eq!(want, (6, 6, 4));
+                assert_eq!(got, vec![2, 2, 2]);
+            }
+            other => panic!("expected InputShape, got {other:?}"),
+        }
+        assert!(matches!(
+            model.run_batch(&[]),
+            Err(NpasError::Exec(ExecError::EmptyBatch))
+        ));
+    }
+
+    #[test]
+    fn shared_plan_cache_hits_on_second_compile() {
+        let cache = Arc::new(PlanCache::default());
+        let mk = || {
+            CompiledModel::build(zoo::single_conv(8, 3, 8, 8))
+                .scheme((PruneScheme::block_punched_default(), 4.0))
+                .weights(7u64)
+                .plan_cache(cache.clone())
+                .compile()
+                .unwrap()
+        };
+        let a = mk();
+        assert_eq!(a.cache_stats().unwrap().misses, 1);
+        let b = mk();
+        let stats = b.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        // both models share one plan object
+        assert!(Arc::ptr_eq(&a.plan, &b.plan));
+    }
+
+    #[test]
+    fn run_batch_matches_sequential_runs_bit_identically() {
+        let net = zoo::single_conv(8, 3, 8, 8);
+        let model = CompiledModel::build(net)
+            .scheme((PruneScheme::block_punched_default(), 4.0))
+            .weights(9u64)
+            .intra_workers(2)
+            .compile()
+            .unwrap();
+        let mut rng = XorShift64Star::new(11);
+        let inputs: Vec<Tensor> =
+            (0..3).map(|_| Tensor::he_normal(vec![8, 8, 8], &mut rng)).collect();
+        let batch = model.run_batch(&inputs).unwrap();
+        for (x, b) in inputs.iter().zip(&batch) {
+            assert_eq!(&model.run(x).unwrap(), b);
+        }
+    }
+}

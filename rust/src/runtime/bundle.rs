@@ -1,28 +1,30 @@
-//! Runnable plan bundles — the executor-backend counterpart of the PJRT
-//! artifact manifest.
+//! Runnable plan bundles — the on-disk format behind
+//! `crate::model::CompiledModel::save`/`load`.
 //!
 //! A [`PlanBundle`] is a network (IR), its per-layer sparsity annotations
 //! and a [`WeightSet`], serialized to one JSON file. Unlike the HLO
 //! artifacts (which need the unvendorable `xla` crate), a bundle is
-//! *actually runnable* in this offline build: loading compiles the network
-//! through `compiler::codegen` and executes it with `compiler::executor`,
-//! so the manifest load → execute path is exercised in CI without any
-//! `make artifacts` step. The same loud-failure philosophy as
-//! [`super::manifest`] applies: shape or role drift fails at load, not as
-//! numerical garbage.
+//! *actually runnable* in this offline build: the `CompiledModel` façade
+//! loads it, recompiles for the saved target and executes it through
+//! `compiler::executor`, so the manifest load → execute path is exercised
+//! in CI without any `make artifacts` step. The same loud-failure
+//! philosophy as [`super::manifest`] applies: shape or role drift fails at
+//! load with a typed [`NpasError::Parse`], not as numerical garbage.
+//! (The old `PlanBundle::execute` convenience — recompile on every call —
+//! was subsumed by the façade's compile-once handle.)
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
-use crate::compiler::{
-    execute_plan, run_dense_reference, DeviceSpec, Framework, LayerWeights, SparsityMap,
-    WeightSet,
-};
+use crate::compiler::{LayerWeights, SparsityMap, WeightSet};
+use crate::error::{NpasError, Result};
 use crate::graph::{ActKind, Layer, LayerKind, Network, PoolKind};
 use crate::pruning::PruneScheme;
 use crate::tensor::Tensor;
 use crate::util::Json;
+
+fn parse_err(msg: impl Into<String>) -> NpasError {
+    NpasError::parse(msg)
+}
 
 /// A network + sparsity + weights bundle the executor backend can run.
 #[derive(Debug, Clone)]
@@ -37,143 +39,68 @@ impl PlanBundle {
         PlanBundle { network, sparsity, weights }
     }
 
-    /// Compile for `(device, framework)` and execute on `input`.
-    ///
-    /// Convenience path: it recompiles and re-prepares kernel state on
-    /// every call. Hot loops should compile once (optionally through
-    /// `compiler::PlanCache`) and hold a `compiler::Executor` instead.
-    pub fn execute(&self, device: &DeviceSpec, framework: Framework, input: &Tensor) -> Tensor {
-        let plan = crate::compiler::codegen::compile(&self.network, &self.sparsity, device, framework);
-        execute_plan(&self.network, &plan, &self.sparsity, &self.weights, input)
-    }
-
-    /// The naive dense reference on the same weights (differential anchor).
-    pub fn execute_reference(&self, input: &Tensor) -> Tensor {
-        run_dense_reference(&self.network, &self.weights, input)
-    }
-
     // ---- serialization ---------------------------------------------------
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)
-                .with_context(|| format!("creating bundle dir {dir:?}"))?;
+            std::fs::create_dir_all(dir).map_err(|e| NpasError::io(dir, e))?;
         }
-        std::fs::write(path, self.to_json().to_string())
-            .with_context(|| format!("writing bundle {path:?}"))
+        std::fs::write(path, self.to_json().to_string()).map_err(|e| NpasError::io(path, e))
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<PlanBundle> {
-        let path = path.as_ref();
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading bundle {path:?}"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
-        PlanBundle::from_json(&j).with_context(|| format!("decoding bundle {path:?}"))
+        Ok(load_with_json(path.as_ref())?.0)
     }
 
     pub fn to_json(&self) -> Json {
-        let net = &self.network;
-        let (ih, iw, ic) = net.input_hwc;
-        let layers: Vec<Json> = net.layers.iter().map(layer_to_json).collect();
-        let sparsity: Vec<Json> = self
-            .sparsity
-            .iter()
-            .map(|(&id, sp)| {
-                let mut pairs = vec![
-                    ("layer", Json::num(id as f64)),
-                    ("rate", Json::num(sp.rate.0 as f64)),
-                ];
-                pairs.extend(scheme_to_json(sp.scheme));
-                Json::obj(pairs)
-            })
-            .collect();
-        let weights: Vec<Json> = self
-            .weights
-            .iter()
-            .map(|(&id, lw)| {
-                let mut pairs =
-                    vec![("layer", Json::num(id as f64)), ("role", Json::str(lw.role()))];
-                match lw {
-                    LayerWeights::Conv(t)
-                    | LayerWeights::Depthwise(t)
-                    | LayerWeights::Linear(t) => {
-                        pairs.push(("dims", dims_json(t)));
-                        pairs.push(("data", data_json(t)));
-                    }
-                    LayerWeights::SqueezeExcite { reduce, expand } => {
-                        pairs.push(("reduce_dims", dims_json(reduce)));
-                        pairs.push(("reduce", data_json(reduce)));
-                        pairs.push(("expand_dims", dims_json(expand)));
-                        pairs.push(("expand", data_json(expand)));
-                    }
-                }
-                Json::obj(pairs)
-            })
-            .collect();
-        Json::obj(vec![
-            ("version", Json::num(1.0)),
-            (
-                "network",
-                Json::obj(vec![
-                    ("name", Json::str(net.name.clone())),
-                    (
-                        "input_hwc",
-                        Json::Arr(vec![
-                            Json::num(ih as f64),
-                            Json::num(iw as f64),
-                            Json::num(ic as f64),
-                        ]),
-                    ),
-                    ("layers", Json::Arr(layers)),
-                ]),
-            ),
-            ("sparsity", Json::Arr(sparsity)),
-            ("weights", Json::Arr(weights)),
-        ])
+        parts_to_json(&self.network, &self.sparsity, &self.weights)
     }
 
     pub fn from_json(j: &Json) -> Result<PlanBundle> {
-        let version = j.req("version")?.as_usize().context("version")?;
+        let version = j.usize_field("version")?;
         if version != 1 {
-            bail!("unsupported bundle version {version}");
+            return Err(parse_err(format!("unsupported bundle version {version}")));
         }
         let njson = j.req("network")?;
-        let name = njson.req("name")?.as_str().context("network name")?.to_string();
-        let input_hwc = triple(njson.req("input_hwc")?).context("input_hwc")?;
+        let name = njson.str_field("name")?.to_string();
+        let input_hwc = triple(njson.req("input_hwc")?)
+            .map_err(|e| parse_err(format!("input_hwc: {e}")))?;
         let mut layers = Vec::new();
-        for (i, lj) in njson.req("layers")?.as_arr().context("layers array")?.iter().enumerate()
-        {
-            let layer = layer_from_json(lj).with_context(|| format!("layer {i}"))?;
+        for (i, lj) in njson.arr_field("layers")?.iter().enumerate() {
+            let layer =
+                layer_from_json(lj).map_err(|e| parse_err(format!("layer {i}: {e}")))?;
             if layer.id != i {
-                bail!("layer {i} carries id {}", layer.id);
+                return Err(parse_err(format!("layer {i} carries id {}", layer.id)));
             }
             layers.push(layer);
         }
         let network = Network { name, input_hwc, layers };
-        network.validate().map_err(|e| anyhow::anyhow!("invalid network: {e}"))?;
+        network
+            .validate()
+            .map_err(|e| parse_err(format!("invalid network: {e}")))?;
 
         let mut sparsity = SparsityMap::new();
-        for sj in j.req("sparsity")?.as_arr().context("sparsity array")? {
-            let id = sj.req("layer")?.as_usize().context("sparsity layer id")?;
+        for sj in j.arr_field("sparsity")? {
+            let id = sj.usize_field("layer")?;
             if id >= network.layers.len() {
-                bail!("sparsity annotation for unknown layer {id}");
+                return Err(parse_err(format!("sparsity annotation for unknown layer {id}")));
             }
-            let rate = sj.req("rate")?.as_f64().context("rate")? as f32;
+            let rate = sj.f64_field("rate")? as f32;
             if !(1.0..=1e6).contains(&rate) {
-                bail!("layer {id}: pruning rate {rate} out of range");
+                return Err(parse_err(format!("layer {id}: pruning rate {rate} out of range")));
             }
             let scheme = scheme_from_json(sj)?;
             sparsity.insert(id, crate::compiler::LayerSparsity::new(scheme, rate));
         }
 
         let mut weights = WeightSet::new();
-        for wj in j.req("weights")?.as_arr().context("weights array")? {
-            let id = wj.req("layer")?.as_usize().context("weight layer id")?;
+        for wj in j.arr_field("weights")? {
+            let id = wj.usize_field("layer")?;
             if id >= network.layers.len() {
-                bail!("weights for unknown layer {id}");
+                return Err(parse_err(format!("weights for unknown layer {id}")));
             }
-            let role = wj.req("role")?.as_str().context("weight role")?;
+            let role = wj.str_field("role")?;
             let lw = match role {
                 "conv" => LayerWeights::Conv(tensor_from(wj, "dims", "data")?),
                 "depthwise" => LayerWeights::Depthwise(tensor_from(wj, "dims", "data")?),
@@ -182,7 +109,11 @@ impl PlanBundle {
                     reduce: tensor_from(wj, "reduce_dims", "reduce")?,
                     expand: tensor_from(wj, "expand_dims", "expand")?,
                 },
-                other => bail!("unknown weight role `{other}` for layer {id}"),
+                other => {
+                    return Err(parse_err(format!(
+                        "unknown weight role `{other}` for layer {id}"
+                    )))
+                }
             };
             check_weight_shape(&network.layers[id], &lw)?;
             weights.insert(id, lw);
@@ -194,11 +125,93 @@ impl PlanBundle {
                 LayerKind::Conv2d { .. } | LayerKind::Linear { .. } | LayerKind::SqueezeExcite { .. }
             );
             if needs && weights.get(l.id).is_none() {
-                bail!("layer {} ({}) has no weights in the bundle", l.id, l.name);
+                return Err(parse_err(format!(
+                    "layer {} ({}) has no weights in the bundle",
+                    l.id, l.name
+                )));
             }
         }
         Ok(PlanBundle { network, sparsity, weights })
     }
+}
+
+/// The one bundle-file loader — shared by [`PlanBundle::load`] and
+/// `CompiledModel::load`/`load_with` (which also read the `target` section
+/// from the returned [`Json`]). Tags every failure with the path, without
+/// double-wrapping already-typed parse errors.
+pub(crate) fn load_with_json(path: &Path) -> Result<(PlanBundle, Json)> {
+    let with_path = |e: NpasError| match e {
+        NpasError::Parse(msg) => parse_err(format!("{}: {msg}", path.display())),
+        other => other,
+    };
+    let text = std::fs::read_to_string(path).map_err(|e| NpasError::io(path, e))?;
+    let j = Json::parse(&text).map_err(|e| parse_err(format!("{}: {e}", path.display())))?;
+    let bundle = PlanBundle::from_json(&j).map_err(with_path)?;
+    Ok((bundle, j))
+}
+
+/// Serialize bundle parts without cloning them into a [`PlanBundle`] —
+/// shared by [`PlanBundle::to_json`] and `CompiledModel::save`.
+pub(crate) fn parts_to_json(
+    net: &Network,
+    sparsity: &SparsityMap,
+    weights: &WeightSet,
+) -> Json {
+    let (ih, iw, ic) = net.input_hwc;
+    let layers: Vec<Json> = net.layers.iter().map(layer_to_json).collect();
+    let sparsity: Vec<Json> = sparsity
+        .iter()
+        .map(|(&id, sp)| {
+            let mut pairs = vec![
+                ("layer", Json::num(id as f64)),
+                ("rate", Json::num(sp.rate.0 as f64)),
+            ];
+            pairs.extend(scheme_to_json(sp.scheme));
+            Json::obj(pairs)
+        })
+        .collect();
+    let weights: Vec<Json> = weights
+        .iter()
+        .map(|(&id, lw)| {
+            let mut pairs =
+                vec![("layer", Json::num(id as f64)), ("role", Json::str(lw.role()))];
+            match lw {
+                LayerWeights::Conv(t)
+                | LayerWeights::Depthwise(t)
+                | LayerWeights::Linear(t) => {
+                    pairs.push(("dims", dims_json(t)));
+                    pairs.push(("data", data_json(t)));
+                }
+                LayerWeights::SqueezeExcite { reduce, expand } => {
+                    pairs.push(("reduce_dims", dims_json(reduce)));
+                    pairs.push(("reduce", data_json(reduce)));
+                    pairs.push(("expand_dims", dims_json(expand)));
+                    pairs.push(("expand", data_json(expand)));
+                }
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("version", Json::num(1.0)),
+        (
+            "network",
+            Json::obj(vec![
+                ("name", Json::str(net.name.clone())),
+                (
+                    "input_hwc",
+                    Json::Arr(vec![
+                        Json::num(ih as f64),
+                        Json::num(iw as f64),
+                        Json::num(ic as f64),
+                    ]),
+                ),
+                ("layers", Json::Arr(layers)),
+            ]),
+        ),
+        ("sparsity", Json::Arr(sparsity)),
+        ("weights", Json::Arr(weights)),
+    ])
 }
 
 /// Weight role/shape vs layer definition — the loud ABI check.
@@ -213,7 +226,12 @@ fn check_weight_shape(layer: &Layer, lw: &LayerWeights) -> Result<()> {
         }
         LayerKind::Linear { din, dout } => vec![vec![din, dout]],
         LayerKind::SqueezeExcite { c, reduced } => vec![vec![c, reduced], vec![reduced, c]],
-        _ => bail!("layer {} ({}) takes no weights", layer.id, layer.name),
+        _ => {
+            return Err(parse_err(format!(
+                "layer {} ({}) takes no weights",
+                layer.id, layer.name
+            )))
+        }
     };
     let got: Vec<&[usize]> = match lw {
         LayerWeights::Conv(t) | LayerWeights::Depthwise(t) | LayerWeights::Linear(t) => {
@@ -222,13 +240,10 @@ fn check_weight_shape(layer: &Layer, lw: &LayerWeights) -> Result<()> {
         LayerWeights::SqueezeExcite { reduce, expand } => vec![reduce.dims(), expand.dims()],
     };
     if want.len() != got.len() || want.iter().zip(&got).any(|(w, g)| w.as_slice() != *g) {
-        bail!(
+        return Err(parse_err(format!(
             "layer {} ({}): weight shape {:?} does not match layer definition {:?}",
-            layer.id,
-            layer.name,
-            got,
-            want
-        );
+            layer.id, layer.name, got, want
+        )));
     }
     Ok(())
 }
@@ -243,36 +258,38 @@ fn data_json(t: &Tensor) -> Json {
 
 fn tensor_from(j: &Json, dims_key: &str, data_key: &str) -> Result<Tensor> {
     let dims: Vec<usize> = j
-        .req(dims_key)?
-        .as_arr()
-        .context("dims array")?
+        .arr_field(dims_key)?
         .iter()
-        .map(|v| v.as_usize().context("dim"))
+        .map(|v| v.as_usize().ok_or_else(|| parse_err(format!("{dims_key}: bad dim"))))
         .collect::<Result<_>>()?;
     let data: Vec<f32> = j
-        .req(data_key)?
-        .as_arr()
-        .context("data array")?
+        .arr_field(data_key)?
         .iter()
-        .map(|v| v.as_f64().map(|f| f as f32).context("datum"))
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| parse_err(format!("{data_key}: bad datum")))
+        })
         .collect::<Result<_>>()?;
     let numel: usize = dims.iter().product();
     if numel != data.len() {
-        bail!("tensor dims {dims:?} want {numel} values, got {}", data.len());
+        return Err(parse_err(format!(
+            "tensor dims {dims:?} want {numel} values, got {}",
+            data.len()
+        )));
     }
     Ok(Tensor::new(dims, data))
 }
 
 fn triple(j: &Json) -> Result<(usize, usize, usize)> {
-    let a = j.as_arr().context("expected a 3-array")?;
+    let a = j.as_arr().ok_or_else(|| parse_err("expected a 3-array"))?;
     if a.len() != 3 {
-        bail!("expected 3 entries, got {}", a.len());
+        return Err(parse_err(format!("expected 3 entries, got {}", a.len())));
     }
-    Ok((
-        a[0].as_usize().context("h")?,
-        a[1].as_usize().context("w")?,
-        a[2].as_usize().context("c")?,
-    ))
+    let dim = |i: usize| {
+        a[i].as_usize().ok_or_else(|| parse_err(format!("entry {i} is not a number")))
+    };
+    Ok((dim(0)?, dim(1)?, dim(2)?))
 }
 
 fn act_name(a: ActKind) -> &'static str {
@@ -294,7 +311,7 @@ fn act_from(name: &str) -> Result<ActKind> {
         "swish" => ActKind::Swish,
         "hard_sigmoid" => ActKind::HardSigmoid,
         "hard_swish" => ActKind::HardSwish,
-        other => bail!("unknown activation `{other}`"),
+        other => return Err(parse_err(format!("unknown activation `{other}`"))),
     })
 }
 
@@ -355,43 +372,45 @@ fn layer_to_json(l: &Layer) -> Json {
 }
 
 fn layer_from_json(j: &Json) -> Result<Layer> {
-    let id = j.req("id")?.as_usize().context("id")?;
-    let name = j.req("name")?.as_str().context("name")?.to_string();
-    let in_hwc = triple(j.req("in_hwc")?).context("in_hwc")?;
+    let id = j.usize_field("id")?;
+    let name = j.str_field("name")?.to_string();
+    let in_hwc =
+        triple(j.req("in_hwc")?).map_err(|e| parse_err(format!("in_hwc: {e}")))?;
     let inputs: Vec<usize> = j
-        .req("inputs")?
-        .as_arr()
-        .context("inputs")?
+        .arr_field("inputs")?
         .iter()
-        .map(|v| v.as_usize().context("input id"))
+        .map(|v| v.as_usize().ok_or_else(|| parse_err("bad input id")))
         .collect::<Result<_>>()?;
-    let usz = |key: &str| -> Result<usize> { j.req(key)?.as_usize().context(key.to_string()) };
-    let kind = match j.req("kind")?.as_str().context("kind")? {
+    let kind = match j.str_field("kind")? {
         "conv2d" => LayerKind::Conv2d {
-            kh: usz("kh")?,
-            kw: usz("kw")?,
-            cin: usz("cin")?,
-            cout: usz("cout")?,
-            stride: usz("stride")?,
-            depthwise: j.req("depthwise")?.as_bool().context("depthwise")?,
+            kh: j.usize_field("kh")?,
+            kw: j.usize_field("kw")?,
+            cin: j.usize_field("cin")?,
+            cout: j.usize_field("cout")?,
+            stride: j.usize_field("stride")?,
+            depthwise: j.bool_field("depthwise")?,
         },
-        "linear" => LayerKind::Linear { din: usz("din")?, dout: usz("dout")? },
+        "linear" => LayerKind::Linear {
+            din: j.usize_field("din")?,
+            dout: j.usize_field("dout")?,
+        },
         "pool" => LayerKind::Pool {
-            kind: match j.req("pool")?.as_str().context("pool kind")? {
+            kind: match j.str_field("pool")? {
                 "max" => PoolKind::Max,
                 "avg" => PoolKind::Avg,
-                other => bail!("unknown pool kind `{other}`"),
+                other => return Err(parse_err(format!("unknown pool kind `{other}`"))),
             },
-            size: usz("size")?,
-            stride: usz("stride")?,
+            size: j.usize_field("size")?,
+            stride: j.usize_field("stride")?,
         },
         "gap" => LayerKind::GlobalAvgPool,
-        "act" => LayerKind::Act(act_from(j.req("act")?.as_str().context("act")?)?),
+        "act" => LayerKind::Act(act_from(j.str_field("act")?)?),
         "add" => LayerKind::Add,
-        "squeeze_excite" => {
-            LayerKind::SqueezeExcite { c: usz("c")?, reduced: usz("reduced")? }
-        }
-        other => bail!("unknown layer kind `{other}`"),
+        "squeeze_excite" => LayerKind::SqueezeExcite {
+            c: j.usize_field("c")?,
+            reduced: j.usize_field("reduced")?,
+        },
+        other => return Err(parse_err(format!("unknown layer kind `{other}`"))),
     };
     Ok(Layer { id, name, kind, in_hwc, inputs })
 }
@@ -415,19 +434,19 @@ fn scheme_to_json(s: PruneScheme) -> Vec<(&'static str, Json)> {
 }
 
 fn scheme_from_json(j: &Json) -> Result<PruneScheme> {
-    Ok(match j.req("scheme")?.as_str().context("scheme")? {
+    Ok(match j.str_field("scheme")? {
         "unstructured" => PruneScheme::Unstructured,
         "filter" => PruneScheme::Filter,
         "pattern" => PruneScheme::Pattern,
         "block_punched" => PruneScheme::BlockPunched {
-            bf: j.req("bf")?.as_usize().context("bf")?,
-            bc: j.req("bc")?.as_usize().context("bc")?,
+            bf: j.usize_field("bf")?,
+            bc: j.usize_field("bc")?,
         },
         "block_based" => PruneScheme::BlockBased {
-            brows: j.req("brows")?.as_usize().context("brows")?,
-            bcols: j.req("bcols")?.as_usize().context("bcols")?,
+            brows: j.usize_field("brows")?,
+            bcols: j.usize_field("bcols")?,
         },
-        other => bail!("unknown scheme `{other}`"),
+        other => return Err(parse_err(format!("unknown scheme `{other}`"))),
     })
 }
 
@@ -435,8 +454,9 @@ fn scheme_from_json(j: &Json) -> Result<PruneScheme> {
 mod tests {
     use super::*;
     use crate::compiler::device::KRYO_485;
-    use crate::compiler::{executor, max_abs_diff};
+    use crate::compiler::{executor, max_abs_diff, Framework};
     use crate::graph::NetworkBuilder;
+    use crate::model::CompiledModel;
     use crate::tensor::XorShift64Star;
 
     fn tiny_bundle() -> PlanBundle {
@@ -457,6 +477,15 @@ mod tests {
         PlanBundle::new(net, sparsity, weights)
     }
 
+    fn model_of(b: &PlanBundle) -> CompiledModel {
+        CompiledModel::build(b.network.clone())
+            .scheme(b.sparsity.clone())
+            .weights(b.weights.clone())
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap()
+    }
+
     #[test]
     fn json_roundtrip_preserves_everything() {
         let b = tiny_bundle();
@@ -470,11 +499,12 @@ mod tests {
             assert_eq!(ia, ib);
             assert_eq!(wa.role(), wb.role());
         }
-        // execution after the roundtrip is bit-identical
+        // execution after the roundtrip is bit-identical (same façade path
+        // on both sides)
         let mut rng = XorShift64Star::new(9);
         let x = Tensor::he_normal(vec![8, 8, 3], &mut rng);
-        let a = b.execute(&KRYO_485, Framework::Ours, &x);
-        let c = b2.execute(&KRYO_485, Framework::Ours, &x);
+        let a = model_of(&b).run(&x).unwrap();
+        let c = model_of(&b2).run(&x).unwrap();
         assert_eq!(a, c);
         assert_eq!(max_abs_diff(&a, &c), 0.0);
     }
@@ -495,7 +525,11 @@ mod tests {
                 }
             }
         }
-        assert!(PlanBundle::from_json(&j).is_err());
+        match PlanBundle::from_json(&j) {
+            Err(NpasError::Parse(_)) => {}
+            Err(other) => panic!("expected Parse error, got {other}"),
+            Ok(_) => panic!("mis-shaped weights decoded successfully"),
+        }
         // missing weights entirely
         let mut j2 = b.to_json();
         if let Json::Obj(m) = &mut j2 {

@@ -3,17 +3,20 @@
 //!
 //! [`InferenceEngine`] owns one compiled model binding (network + plan +
 //! masked weights + [`PreparedKernels`]) and serves it over a bounded
-//! submission queue. Worker threads pop requests and **micro-batch** them:
-//! the first request is taken immediately, then the worker lingers up to
-//! `max_wait` (or until `max_batch` requests are in hand) before executing
-//! the whole batch through [`Executor::try_run_batch`] — one im2col + GEMM
-//! (dense or packed block-CSR) per conv layer for the entire batch, with
-//! GEMM row tiles and per-image kernels fanned across
+//! submission queue. Engines are stood up through
+//! `crate::model::CompiledModel::serve`, which hands over the model's
+//! already-prepared kernel state — there is no separate compile path here.
+//! Worker threads pop requests and **micro-batch** them: the first request
+//! is taken immediately, then the worker lingers up to `max_wait` (or
+//! until `max_batch` requests are in hand) before executing the whole
+//! batch through [`Executor::try_run_batch`] — one im2col + GEMM (dense or
+//! packed block-CSR) per conv layer for the entire batch, with GEMM row
+//! tiles and per-image kernels fanned across
 //! `coordinator::scheduler::map_parallel` (`intra_workers`). Outputs are
-//! bit-identical to sequential [`Executor::run`] calls regardless of how
-//! requests get grouped into batches or how many threads tile a kernel, so
-//! serving is deterministic per input — the property the cross-thread
-//! tests pin.
+//! bit-identical to sequential [`Executor::try_run`] calls regardless of
+//! how requests get grouped into batches or how many threads tile a
+//! kernel, so serving is deterministic per input — the property the
+//! cross-thread tests pin.
 //!
 //! Failure model: a malformed request (wrong input shape) or a malformed
 //! binding (missing weights) fails *that request* with a typed
@@ -22,8 +25,9 @@
 //! Per-request latency (submit → response) and batch shape feed
 //! [`EngineStats`]: p50/p95/p99 latency percentiles, mean micro-batch
 //! size, and completed-request throughput. `benches/engine_throughput.rs`
-//! reports batch efficiency against N sequential `Executor::run` calls;
-//! `examples/serve_demo.rs` drives a multi-client session end-to-end.
+//! reports batch efficiency against N sequential `CompiledModel::run`
+//! calls; `examples/serve_demo.rs` drives a multi-client session
+//! end-to-end.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -31,15 +35,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::compiler::codegen::compile;
-use crate::compiler::{
-    DeviceSpec, ExecError, Executor, ExecutionPlan, Framework, PreparedKernels, SparsityMap,
-    WeightSet,
-};
+use crate::compiler::{ExecError, Executor, ExecutionPlan, PreparedKernels, WeightSet};
 use crate::graph::Network;
 use crate::tensor::Tensor;
-
-use super::PlanBundle;
 
 /// Keep at most this many per-request latency samples (enough for stable
 /// tail percentiles; serving longer than this just stops sampling).
@@ -131,7 +129,9 @@ struct Model {
     net: Network,
     plan: Arc<ExecutionPlan>,
     weights: WeightSet,
-    prepared: PreparedKernels,
+    /// Shared with the `CompiledModel` that spawned this engine: packing /
+    /// Winograd transforms are paid once per model, not per engine.
+    prepared: Arc<PreparedKernels>,
 }
 
 struct EngineShared {
@@ -166,8 +166,9 @@ impl PendingResponse {
     }
 }
 
-/// See the module docs. Construction compiles/binds the model and spawns
-/// the worker pool; dropping the engine drains the queue and joins it.
+/// See the module docs. Stood up via `CompiledModel::serve`; construction
+/// spawns the worker pool, dropping the engine drains the queue and joins
+/// it.
 pub struct InferenceEngine {
     tx: Option<SyncSender<Request>>,
     threads: Vec<JoinHandle<()>>,
@@ -176,35 +177,22 @@ pub struct InferenceEngine {
 }
 
 impl InferenceEngine {
-    /// Compile `net` for `(device, framework)` and serve it. `weights`
-    /// should already be masked (`WeightSet::apply_sparsity`).
-    pub fn new(
+    /// Serve an already-compiled, already-prepared binding — the
+    /// `CompiledModel::serve` path. The façade validates the config and
+    /// owns the single kernel preparation; this just spawns workers.
+    pub(crate) fn from_parts(
         net: Network,
-        sparsity: &SparsityMap,
-        weights: WeightSet,
-        device: &DeviceSpec,
-        framework: Framework,
-        config: EngineConfig,
-    ) -> Result<InferenceEngine, ExecError> {
-        let plan = Arc::new(compile(&net, sparsity, device, framework));
-        Self::with_plan(net, sparsity, weights, plan, config)
-    }
-
-    /// Serve an already-compiled plan — the `compiler::PlanCache` path:
-    /// `cache.get_or_compile(..)` hands out a shared `Arc<ExecutionPlan>`
-    /// that any number of engines (and threads) can bind against.
-    pub fn with_plan(
-        net: Network,
-        sparsity: &SparsityMap,
-        weights: WeightSet,
         plan: Arc<ExecutionPlan>,
+        weights: WeightSet,
+        prepared: Arc<PreparedKernels>,
         config: EngineConfig,
-    ) -> Result<InferenceEngine, ExecError> {
-        assert!(config.workers >= 1, "engine needs at least one worker");
-        assert!(config.max_batch >= 1, "max_batch must be at least 1");
-        assert!(config.queue_cap >= 1, "queue_cap must be at least 1");
-        assert_eq!(plan.network, net.name, "plan was compiled for a different network");
-        let prepared = PreparedKernels::try_prepare(&net, &plan, sparsity, &weights)?;
+    ) -> InferenceEngine {
+        // the façade validates the config with typed errors; these are
+        // crate-internal invariants, not a second validation layer
+        debug_assert!(config.workers >= 1, "engine needs at least one worker");
+        debug_assert!(config.max_batch >= 1, "max_batch must be at least 1");
+        debug_assert!(config.queue_cap >= 1, "queue_cap must be at least 1");
+        debug_assert_eq!(plan.network, net.name, "plan was compiled for a different network");
         let shared = Arc::new(EngineShared {
             model: Model { net, plan, weights, prepared },
             completed: AtomicU64::new(0),
@@ -227,24 +215,7 @@ impl InferenceEngine {
                 .expect("spawning engine worker");
             threads.push(handle);
         }
-        Ok(InferenceEngine { tx: Some(tx), threads, shared, config })
-    }
-
-    /// Serve a loaded [`PlanBundle`] (clones its parts).
-    pub fn from_bundle(
-        bundle: &PlanBundle,
-        device: &DeviceSpec,
-        framework: Framework,
-        config: EngineConfig,
-    ) -> Result<InferenceEngine, ExecError> {
-        InferenceEngine::new(
-            bundle.network.clone(),
-            &bundle.sparsity,
-            bundle.weights.clone(),
-            device,
-            framework,
-            config,
-        )
+        InferenceEngine { tx: Some(tx), threads, shared, config }
     }
 
     /// Enqueue one request, blocking while the queue is full
@@ -436,8 +407,9 @@ fn execute_batch(shared: &EngineShared, exec: &Executor<'_>, batch: Vec<Request>
 mod tests {
     use super::*;
     use crate::compiler::device::KRYO_485;
-    use crate::compiler::{run_dense_reference, uniform_sparsity};
+    use crate::compiler::Framework;
     use crate::graph::zoo;
+    use crate::model::CompiledModel;
     use crate::pruning::PruneScheme;
     use crate::tensor::XorShift64Star;
 
@@ -451,31 +423,24 @@ mod tests {
         }
     }
 
-    fn sparse_engine_parts() -> (Network, SparsityMap, WeightSet) {
-        let net = zoo::single_conv(8, 3, 16, 16);
-        let sp = uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0);
-        let mut weights = WeightSet::random(&net, 3);
-        weights.apply_sparsity(&sp);
-        (net, sp, weights)
+    fn sparse_model() -> CompiledModel {
+        CompiledModel::build(zoo::single_conv(8, 3, 16, 16))
+            .scheme((PruneScheme::block_punched_default(), 4.0))
+            .weights(3u64)
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap()
     }
 
     #[test]
     fn engine_answers_match_dense_reference() {
-        let (net, sp, weights) = sparse_engine_parts();
-        let engine = InferenceEngine::new(
-            net.clone(),
-            &sp,
-            weights.clone(),
-            &KRYO_485,
-            Framework::Ours,
-            small_cfg(),
-        )
-        .unwrap();
+        let model = sparse_model();
+        let engine = model.serve(small_cfg()).unwrap();
         let mut rng = XorShift64Star::new(21);
         for _ in 0..3 {
             let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
             let got = engine.run(x.clone()).unwrap();
-            let want = run_dense_reference(&net, &weights, &x);
+            let want = model.reference(&x).unwrap();
             let scale = want.abs_max().max(1e-3);
             let diff = crate::compiler::max_abs_diff(&got, &want);
             assert!(diff <= 1e-4 * scale, "diff {diff} vs scale {scale}");
@@ -490,10 +455,7 @@ mod tests {
 
     #[test]
     fn malformed_request_fails_alone() {
-        let (net, sp, weights) = sparse_engine_parts();
-        let engine =
-            InferenceEngine::new(net, &sp, weights, &KRYO_485, Framework::Ours, small_cfg())
-                .unwrap();
+        let engine = sparse_model().serve(small_cfg()).unwrap();
         let mut rng = XorShift64Star::new(22);
         let good = Tensor::he_normal(vec![8, 8, 16], &mut rng);
         let bad = Tensor::zeros(vec![2, 2, 2]);
@@ -513,9 +475,9 @@ mod tests {
 
     #[test]
     fn missing_weights_fail_requests_not_the_engine() {
-        // a malformed binding: FC weights missing. Prepared state still
-        // builds (it only packs conv layers), so the failure surfaces
-        // per-request — and must not kill the worker threads.
+        // a malformed binding: FC weights missing. The façade compiles it
+        // (kernel preparation only packs conv layers), so the failure
+        // surfaces per-request — and must not kill the worker threads.
         let mut b = crate::graph::NetworkBuilder::new("broken", (6, 6, 4));
         b.conv2d(1, 8, 1);
         b.global_avg_pool();
@@ -524,15 +486,12 @@ mod tests {
         let mut weights = WeightSet::random(&net, 1);
         let fc_id = net.layers.len() - 1;
         weights.remove(fc_id);
-        let engine = InferenceEngine::new(
-            net,
-            &SparsityMap::new(),
-            weights,
-            &KRYO_485,
-            Framework::Ours,
-            small_cfg(),
-        )
-        .unwrap();
+        let model = CompiledModel::build(net)
+            .weights(weights)
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap();
+        let engine = model.serve(small_cfg()).unwrap();
         let x = Tensor::zeros(vec![6, 6, 4]);
         for _ in 0..3 {
             match engine.run(x.clone()) {
@@ -549,10 +508,7 @@ mod tests {
 
     #[test]
     fn shutdown_rejects_new_work_but_answers_queued() {
-        let (net, sp, weights) = sparse_engine_parts();
-        let mut engine =
-            InferenceEngine::new(net, &sp, weights, &KRYO_485, Framework::Ours, small_cfg())
-                .unwrap();
+        let mut engine = sparse_model().serve(small_cfg()).unwrap();
         let mut rng = XorShift64Star::new(23);
         let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
         let pending = engine.submit(x.clone()).unwrap();
@@ -564,10 +520,21 @@ mod tests {
     }
 
     #[test]
+    fn bad_engine_config_is_typed_invalid_config() {
+        let cfg = EngineConfig { workers: 0, ..small_cfg() };
+        match sparse_model().serve(cfg) {
+            Err(crate::NpasError::InvalidConfig(msg)) => {
+                assert!(msg.contains("workers"), "{msg}")
+            }
+            Err(other) => panic!("expected InvalidConfig, got {other}"),
+            Ok(_) => panic!("zero-worker engine config must be rejected"),
+        }
+    }
+
+    #[test]
     fn micro_batching_groups_requests() {
         // one worker, generous linger: submitting n requests before any
         // can complete must yield fewer batches than requests
-        let (net, sp, weights) = sparse_engine_parts();
         let cfg = EngineConfig {
             workers: 1,
             max_batch: 8,
@@ -575,8 +542,7 @@ mod tests {
             queue_cap: 64,
             intra_workers: 1,
         };
-        let engine =
-            InferenceEngine::new(net, &sp, weights, &KRYO_485, Framework::Ours, cfg).unwrap();
+        let engine = sparse_model().serve(cfg).unwrap();
         let mut rng = XorShift64Star::new(24);
         let inputs: Vec<Tensor> =
             (0..8).map(|_| Tensor::he_normal(vec![8, 8, 16], &mut rng)).collect();

@@ -4,15 +4,18 @@
 //! `manifest.json` records, for every artifact, the *ordered* input/output
 //! tensor names+shapes+dtypes, plus the supernet hyperparameters. The
 //! runtime binds buffers strictly in manifest order; any drift between the
-//! Python model and the Rust coordinator fails loudly here rather than as
-//! silent numerical garbage.
+//! Python model and the Rust coordinator fails loudly here — as a typed
+//! [`NpasError::Parse`] — rather than as silent numerical garbage.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::error::{NpasError, Result};
 use crate::util::Json;
+
+fn parse_err(msg: impl Into<String>) -> NpasError {
+    NpasError::parse(msg)
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
@@ -33,18 +36,19 @@ impl TensorDef {
     }
 
     fn from_json(j: &Json) -> Result<Self> {
-        let name = j.req("name")?.as_str().context("tensor name")?.to_string();
+        let name = j.str_field("name")?.to_string();
         let shape = j
-            .req("shape")?
-            .as_arr()
-            .context("shape array")?
+            .arr_field("shape")?
             .iter()
-            .map(|v| v.as_usize().context("shape dim"))
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| parse_err(format!("{name}: bad shape dim")))
+            })
             .collect::<Result<Vec<_>>>()?;
         let dtype = match j.req("dtype")?.as_str() {
             Some("f32") => DType::F32,
             Some("i32") => DType::I32,
-            other => bail!("unsupported dtype {other:?} for {name}"),
+            other => return Err(parse_err(format!("unsupported dtype {other:?} for {name}"))),
         };
         Ok(TensorDef { name, shape, dtype })
     }
@@ -60,15 +64,10 @@ pub struct ArtifactDef {
 impl ArtifactDef {
     fn from_json(j: &Json) -> Result<Self> {
         let defs = |key: &str| -> Result<Vec<TensorDef>> {
-            j.req(key)?
-                .as_arr()
-                .context("io array")?
-                .iter()
-                .map(TensorDef::from_json)
-                .collect()
+            j.arr_field(key)?.iter().map(TensorDef::from_json).collect()
         };
         Ok(ArtifactDef {
-            file: j.req("file")?.as_str().context("file")?.to_string(),
+            file: j.str_field("file")?.to_string(),
             inputs: defs("inputs")?,
             outputs: defs("outputs")?,
         })
@@ -107,45 +106,39 @@ impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| NpasError::Io {
+            path: path.display().to_string(),
+            message: format!("{e} — run `make artifacts` first"),
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| parse_err(format!("{}: {e}", path.display())))?;
 
         let m = j.req("model")?;
-        let get = |k: &str| -> Result<usize> { Ok(m.req(k)?.as_usize().context(k.to_string())?) };
         let model = ModelMeta {
-            img: get("img")?,
-            c_in: get("c_in")?,
-            channels: get("channels")?,
-            blocks: get("blocks")?,
-            num_classes: get("num_classes")?,
-            batch: get("batch")?,
-            eval_batch: get("eval_batch")?,
+            img: m.usize_field("img")?,
+            c_in: m.usize_field("c_in")?,
+            channels: m.usize_field("channels")?,
+            blocks: m.usize_field("blocks")?,
+            num_classes: m.usize_field("num_classes")?,
+            batch: m.usize_field("batch")?,
+            eval_batch: m.usize_field("eval_batch")?,
             pool_after: m
-                .req("pool_after")?
-                .as_arr()
-                .context("pool_after")?
+                .arr_field("pool_after")?
                 .iter()
                 .filter_map(|v| v.as_usize())
                 .collect(),
             branches: m
-                .req("branches")?
-                .as_arr()
-                .context("branches")?
+                .arr_field("branches")?
                 .iter()
                 .filter_map(|v| v.as_str().map(String::from))
                 .collect(),
             param_specs: m
-                .req("param_specs")?
-                .as_arr()
-                .context("param_specs")?
+                .arr_field("param_specs")?
                 .iter()
                 .map(|v| {
-                    let name = v.req("name")?.as_str().context("spec name")?.to_string();
+                    let name = v.str_field("name")?.to_string();
                     let shape = v
-                        .req("shape")?
-                        .as_arr()
-                        .context("spec shape")?
+                        .arr_field("shape")?
                         .iter()
                         .filter_map(|d| d.as_usize())
                         .collect();
@@ -153,17 +146,21 @@ impl Manifest {
                 })
                 .collect::<Result<Vec<_>>>()?,
             prunable: m
-                .req("prunable")?
-                .as_arr()
-                .context("prunable")?
+                .arr_field("prunable")?
                 .iter()
                 .filter_map(|v| v.as_str().map(String::from))
                 .collect(),
         };
 
         let mut artifacts = BTreeMap::new();
-        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts obj")? {
-            artifacts.insert(name.clone(), ArtifactDef::from_json(a)?);
+        let aobj = j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| parse_err("`artifacts` is not an object"))?;
+        for (name, a) in aobj {
+            let def = ArtifactDef::from_json(a)
+                .map_err(|e| parse_err(format!("artifact `{name}`: {e}")))?;
+            artifacts.insert(name.clone(), def);
         }
         let man = Manifest { dir, model, artifacts };
         man.validate()?;
@@ -171,7 +168,9 @@ impl Manifest {
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactDef> {
-        self.artifacts.get(name).with_context(|| format!("unknown artifact `{name}`"))
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| NpasError::invalid(format!("unknown artifact `{name}`")))
     }
 
     pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
@@ -185,23 +184,32 @@ impl Manifest {
         for (name, shape) in &self.model.param_specs {
             let def = train
                 .input(name)
-                .with_context(|| format!("param {name} missing from train inputs"))?;
+                .ok_or_else(|| parse_err(format!("param {name} missing from train inputs")))?;
             if &def.shape != shape {
-                bail!("param {name}: manifest shape {:?} != spec {:?}", def.shape, shape);
+                return Err(parse_err(format!(
+                    "param {name}: manifest shape {:?} != spec {:?}",
+                    def.shape, shape
+                )));
             }
         }
         for p in &self.model.prunable {
             train
                 .input(&format!("mask_{p}"))
-                .with_context(|| format!("mask_{p} missing from train inputs"))?;
+                .ok_or_else(|| parse_err(format!("mask_{p} missing from train inputs")))?;
         }
         if self.model.branches.len() != 5 {
-            bail!("expected 5 filter-type branches, got {}", self.model.branches.len());
+            return Err(parse_err(format!(
+                "expected 5 filter-type branches, got {}",
+                self.model.branches.len()
+            )));
         }
         let grads =
             train.outputs.iter().filter(|t| t.name.starts_with("grad_")).count();
         if grads != self.model.param_specs.len() {
-            bail!("train outputs have {grads} grads for {} params", self.model.param_specs.len());
+            return Err(parse_err(format!(
+                "train outputs have {grads} grads for {} params",
+                self.model.param_specs.len()
+            )));
         }
         Ok(())
     }
@@ -236,8 +244,11 @@ mod tests {
     }
 
     #[test]
-    fn missing_dir_errors() {
-        assert!(Manifest::load("/nonexistent/xyz").is_err());
+    fn missing_dir_errors_with_io_variant() {
+        match Manifest::load("/nonexistent/xyz") {
+            Err(NpasError::Io { path, .. }) => assert!(path.contains("nonexistent"), "{path}"),
+            other => panic!("expected Io error, got {other:?}"),
+        }
     }
 
     #[test]

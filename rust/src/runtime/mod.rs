@@ -10,11 +10,14 @@
 //! `use` alias back to the real crate to run against actual PJRT.
 //!
 //! [`bundle`] is the artifact path that *does* run offline: a
-//! [`PlanBundle`] (network + sparsity + weights) loads from JSON and
-//! executes through `compiler::executor` on the host CPU. [`engine`]
-//! serves such a binding over a micro-batched, thread-pool-backed queue
-//! ([`InferenceEngine`]) — the throughput path the serving benches and the
-//! batched-parity suite exercise.
+//! [`PlanBundle`] (network + sparsity + weights) is the on-disk format of
+//! `crate::model::CompiledModel::save`, and loading one through the façade
+//! recompiles and executes it on the host CPU. [`engine`] serves such a
+//! binding over a micro-batched, thread-pool-backed queue
+//! ([`InferenceEngine`], stood up via `CompiledModel::serve`) — the
+//! throughput path the serving benches and the batched-parity suite
+//! exercise. All of it reports the crate-wide typed
+//! [`NpasError`](crate::NpasError).
 
 pub mod bundle;
 pub mod engine;
@@ -26,8 +29,7 @@ use xla_stub as xla;
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::error::{NpasError, Result};
 use crate::tensor::Tensor;
 
 pub use bundle::PlanBundle;
@@ -76,16 +78,17 @@ impl Runtime {
     }
 
     fn load_named(manifest: Manifest, names: &[String]) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| NpasError::compile(format!("creating PJRT CPU client: {e}")))?;
         let mut exes = BTreeMap::new();
         for name in names {
             let path = manifest.hlo_path(name)?;
             let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e}"))?;
+                .map_err(|e| NpasError::parse(format!("parsing HLO text {path:?}: {e}")))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client
                 .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling artifact `{name}`: {e}"))?;
+                .map_err(|e| NpasError::compile(format!("compiling artifact `{name}`: {e}")))?;
             exes.insert(name.clone(), exe);
         }
         Ok(Runtime { client, exes, manifest })
@@ -105,48 +108,66 @@ impl Runtime {
         inputs: &BTreeMap<String, Value>,
     ) -> Result<BTreeMap<String, Tensor>> {
         let def = self.manifest.artifact(artifact)?;
-        let exe = self
-            .exes
-            .get(artifact)
-            .with_context(|| format!("artifact `{artifact}` not compiled in this runtime"))?;
+        let exe = self.exes.get(artifact).ok_or_else(|| {
+            NpasError::invalid(format!("artifact `{artifact}` not compiled in this runtime"))
+        })?;
+        let backend = |e: xla::XlaError| {
+            NpasError::compile(format!("executing artifact `{artifact}`: {e}"))
+        };
 
         let mut literals = Vec::with_capacity(def.inputs.len());
         for tdef in &def.inputs {
-            let val = inputs
-                .get(&tdef.name)
-                .with_context(|| format!("missing input `{}` for `{artifact}`", tdef.name))?;
+            let val = inputs.get(&tdef.name).ok_or_else(|| {
+                NpasError::invalid(format!("missing input `{}` for `{artifact}`", tdef.name))
+            })?;
             if val.numel() != tdef.numel() {
-                bail!(
+                return Err(NpasError::invalid(format!(
                     "input `{}`: got {} elements, manifest wants {:?}",
                     tdef.name,
                     val.numel(),
                     tdef.shape
-                );
+                )));
             }
             let dims: Vec<i64> = tdef.shape.iter().map(|&d| d as i64).collect();
             let lit = match (val, tdef.dtype) {
-                (Value::F32(t), DType::F32) => xla::Literal::vec1(t.data()).reshape(&dims)?,
-                (Value::I32(v), DType::I32) => xla::Literal::vec1(v).reshape(&dims)?,
-                (_, d) => bail!("input `{}`: value/dtype mismatch (want {d:?})", tdef.name),
+                (Value::F32(t), DType::F32) => {
+                    xla::Literal::vec1(t.data()).reshape(&dims).map_err(backend)?
+                }
+                (Value::I32(v), DType::I32) => {
+                    xla::Literal::vec1(v).reshape(&dims).map_err(backend)?
+                }
+                (_, d) => {
+                    return Err(NpasError::invalid(format!(
+                        "input `{}`: value/dtype mismatch (want {d:?})",
+                        tdef.name
+                    )))
+                }
             };
             literals.push(lit);
         }
 
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(backend)?[0][0]
+            .to_literal_sync()
+            .map_err(backend)?;
         // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = result.to_tuple()?;
+        let parts = result.to_tuple().map_err(backend)?;
         if parts.len() != def.outputs.len() {
-            bail!(
+            return Err(NpasError::compile(format!(
                 "artifact `{artifact}`: got {} outputs, manifest says {}",
                 parts.len(),
                 def.outputs.len()
-            );
+            )));
         }
         let mut out = BTreeMap::new();
         for (lit, tdef) in parts.into_iter().zip(&def.outputs) {
             let data = match tdef.dtype {
-                DType::F32 => lit.to_vec::<f32>()?,
-                DType::I32 => lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
+                DType::F32 => lit.to_vec::<f32>().map_err(backend)?,
+                DType::I32 => lit
+                    .to_vec::<i32>()
+                    .map_err(backend)?
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
             };
             out.insert(tdef.name.clone(), Tensor::new(tdef.shape.clone(), data));
         }

@@ -11,6 +11,12 @@
 //!   regenerate the paper's tables in seconds. Latency always comes from
 //!   the compiler simulator on the deployment-scale network — the same path
 //!   the trained evaluator uses.
+//!
+//! Both evaluators are the *latency-only projection* of the
+//! `crate::model::CompiledModel` façade: they compile the same deployment
+//! plans through the same shared [`EvalContext`]/`PlanCache` and read the
+//! same `measure_plan` numbers, without binding weights (a search measures
+//! thousands of candidates; only the winner gets weights, via the façade).
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -76,14 +82,13 @@ fn scheme_sparsity(
 
 /// Compile the scheme's deployment network and measure it on `device`
 /// (100-run protocol) — the candidate latency h of Eq. 1. This is the
-/// uncached reference path; the search loops go through
-/// [`measure_scheme_with`] and an [`EvalContext`] instead.
+/// uncached reference path (a fresh single-use [`EvalContext`]); the
+/// search loops share one context through [`measure_scheme_with`], and the
+/// `CompiledModel` façade reaches the identical `measure_plan` numbers by
+/// attaching the same context's plan cache — one latency model, three
+/// consumers.
 pub fn measure_scheme(scheme: &NpasScheme, device: &DeviceSpec) -> f64 {
-    let blocks: Vec<CandidateBlock> =
-        scheme.choices.iter().map(|c| c.filter.to_candidate()).collect();
-    let (net, stage_layers) = zoo::npas_deploy_network_tagged("npas_candidate", &blocks);
-    let sp = scheme_sparsity(&net, &stage_layers, scheme);
-    compiler::measure(&net, &sp, device, Framework::Ours, 100).mean_ms
+    measure_scheme_with(&EvalContext::new(), scheme, device)
 }
 
 /// Cached [`measure_scheme`]: the deployment graph comes from the context's
@@ -163,10 +168,13 @@ impl EvalCacheStats {
 /// tagged deployment graphs keyed by block choices — candidates that share
 /// filter types reuse the graph and only swap sparsity annotations. One
 /// context is shared across the whole search (and across `map_parallel`
-/// workers: everything inside is `Sync`).
+/// workers: everything inside is `Sync`). The plan cache is `Arc`ed so the
+/// same compile-once state can be attached to a `CompiledModel` builder
+/// (`.plan_cache(ctx.plan_cache.clone())`) — the search's measurements and
+/// the deployed model then share one cache.
 #[derive(Debug)]
 pub struct EvalContext {
-    pub plan_cache: PlanCache,
+    pub plan_cache: Arc<PlanCache>,
     structures: Mutex<StructureInner>,
     structure_hits: AtomicU64,
     structure_misses: AtomicU64,
@@ -187,7 +195,7 @@ impl EvalContext {
 
     pub fn new() -> Self {
         EvalContext {
-            plan_cache: PlanCache::default(),
+            plan_cache: Arc::new(PlanCache::default()),
             structures: Mutex::new(StructureInner::default()),
             structure_hits: AtomicU64::new(0),
             structure_misses: AtomicU64::new(0),

@@ -64,6 +64,26 @@ impl Args {
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
+
+    /// The flag's value, or a typed [`crate::NpasError::InvalidConfig`]
+    /// when it was not passed — for flags a subcommand cannot default.
+    pub fn require(&self, key: &str) -> crate::Result<&str> {
+        self.get(key).ok_or_else(|| {
+            crate::NpasError::invalid(format!("missing required flag --{key}"))
+        })
+    }
+
+    /// Parse `--key` when present. Unlike the `*_or` getters (which
+    /// silently fall back to the default), a present-but-unparsable value
+    /// is a typed `InvalidConfig` error.
+    pub fn parsed<T: std::str::FromStr>(&self, key: &str) -> crate::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+                crate::NpasError::invalid(format!("flag --{key}: cannot parse `{v}`"))
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -98,5 +118,22 @@ mod tests {
         // documented quirk: `--flag value` binds value to flag
         let a = parse("--check cmd");
         assert_eq!(a.get("check"), Some("cmd"));
+    }
+
+    #[test]
+    fn require_and_parsed_are_typed() {
+        let a = parse("run --bundle m.json --batch four");
+        assert_eq!(a.require("bundle").unwrap(), "m.json");
+        match a.require("missing") {
+            Err(crate::NpasError::InvalidConfig(msg)) => {
+                assert!(msg.contains("--missing"), "{msg}")
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        assert_eq!(a.parsed::<usize>("absent").unwrap(), None);
+        match a.parsed::<usize>("batch") {
+            Err(crate::NpasError::InvalidConfig(msg)) => assert!(msg.contains("four"), "{msg}"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
     }
 }

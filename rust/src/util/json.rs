@@ -17,12 +17,19 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, ParseError> {
@@ -44,9 +51,43 @@ impl Json {
         }
     }
 
-    /// Object member or error (for required manifest fields).
-    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
-        self.get(key).ok_or_else(|| anyhow::anyhow!("missing json key `{key}`"))
+    /// Object member or a typed [`crate::NpasError::Parse`] (for required
+    /// manifest/bundle fields).
+    pub fn req(&self, key: &str) -> crate::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| crate::NpasError::parse(format!("missing json key `{key}`")))
+    }
+
+    // ---- typed required-field accessors (load-path error taxonomy) -------
+
+    pub fn str_field(&self, key: &str) -> crate::Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| crate::NpasError::parse(format!("json key `{key}` is not a string")))
+    }
+
+    pub fn f64_field(&self, key: &str) -> crate::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| crate::NpasError::parse(format!("json key `{key}` is not a number")))
+    }
+
+    pub fn usize_field(&self, key: &str) -> crate::Result<usize> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| crate::NpasError::parse(format!("json key `{key}` is not a number")))
+    }
+
+    pub fn bool_field(&self, key: &str) -> crate::Result<bool> {
+        self.req(key)?
+            .as_bool()
+            .ok_or_else(|| crate::NpasError::parse(format!("json key `{key}` is not a bool")))
+    }
+
+    pub fn arr_field(&self, key: &str) -> crate::Result<&[Json]> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| crate::NpasError::parse(format!("json key `{key}` is not an array")))
     }
 
     pub fn as_str(&self) -> Option<&str> {

@@ -1,5 +1,6 @@
-//! Serving-path test wall: the batched `InferenceEngine` against n
-//! sequential `Executor::run` calls.
+//! Serving-path test wall: the batched `InferenceEngine` (stood up via
+//! `CompiledModel::serve`) against n sequential `CompiledModel::run`
+//! calls.
 //!
 //! Property sweep (hand-rolled; the proptest crate is unavailable
 //! offline): random zoo networks × pruning schemes at reduced resolution,
@@ -19,16 +20,13 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use npas::compiler::codegen::compile;
 use npas::compiler::device::KRYO_485;
-use npas::compiler::{
-    max_abs_diff, uniform_sparsity, Algo, Executor, Framework, PlanCache, SparsityMap,
-    WeightSet,
-};
+use npas::compiler::{max_abs_diff, Algo, Framework, PlanCache};
 use npas::graph::{zoo, Network};
 use npas::pruning::PruneScheme;
-use npas::runtime::{EngineConfig, InferenceEngine};
+use npas::runtime::EngineConfig;
 use npas::tensor::{Tensor, XorShift64Star};
+use npas::CompiledModel;
 
 /// Parity resolution: zoo topologies at 10x10 input.
 const RES: usize = 10;
@@ -47,44 +45,36 @@ fn ragged_cfg() -> EngineConfig {
     }
 }
 
-/// Engine vs n sequential `Executor::run` calls on one workload.
+/// Engine vs n sequential `CompiledModel::run` calls on one workload.
 fn check_engine_parity(
     net: &Network,
     annotation: Option<(PruneScheme, f32)>,
     nb: usize,
     seed: u64,
 ) {
-    let sparsity = match annotation {
-        Some((scheme, rate)) => uniform_sparsity(net, scheme, rate),
-        None => SparsityMap::new(),
-    };
     let label = match annotation {
         Some((scheme, rate)) => format!("{} @ {scheme} {rate}x nb={nb}", net.name),
         None => format!("{} @ dense nb={nb}", net.name),
     };
-    let plan = Arc::new(compile(net, &sparsity, &KRYO_485, Framework::Ours));
-    let rtol = if plan.groups.iter().any(|g| g.algo == Algo::Winograd) {
+    let mut builder = CompiledModel::build(net.clone())
+        .weights(11u64)
+        .target(&KRYO_485, Framework::Ours);
+    if let Some((scheme, rate)) = annotation {
+        builder = builder.scheme((scheme, rate));
+    }
+    let model = builder.compile().unwrap_or_else(|e| panic!("{label}: {e}"));
+    let rtol = if model.plan().groups.iter().any(|g| g.algo == Algo::Winograd) {
         RTOL_WINOGRAD
     } else {
         RTOL
     };
-    let mut weights = WeightSet::random(net, 11);
-    weights.apply_sparsity(&sparsity);
-    let exec = Executor::new(net, &plan, &sparsity, &weights);
-    let engine = InferenceEngine::with_plan(
-        net.clone(),
-        &sparsity,
-        weights.clone(),
-        plan.clone(),
-        ragged_cfg(),
-    )
-    .unwrap();
+    let engine = model.serve(ragged_cfg()).unwrap();
 
     let (h, w, c) = net.input_hwc;
     let mut rng = XorShift64Star::new(0x5EED ^ seed);
     let inputs: Vec<Tensor> =
         (0..nb).map(|_| Tensor::he_normal(vec![h, w, c], &mut rng)).collect();
-    let seq: Vec<Tensor> = inputs.iter().map(|x| exec.run(x)).collect();
+    let seq: Vec<Tensor> = inputs.iter().map(|x| model.run(x).unwrap()).collect();
     let got = engine.run_batch(&inputs);
     assert_eq!(got.len(), nb, "{label}: wrong response count");
     for (i, (g, s)) in got.iter().zip(&seq).enumerate() {
@@ -159,34 +149,31 @@ fn concurrent_submitters_share_one_plan_and_get_identical_outputs() {
     // extends the PR-1 cross-thread PlanCache test to the serving path:
     // one cache-compiled plan, one engine, many client threads
     let net = zoo::single_conv(10, 3, 16, 16);
-    let sparsity = uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0);
-    let cache = PlanCache::default();
-    let plan = cache.get_or_compile(&net, &sparsity, &KRYO_485, Framework::Ours);
+    let cache = Arc::new(PlanCache::default());
+    let model = CompiledModel::build(net)
+        .scheme((PruneScheme::block_punched_default(), 4.0))
+        .weights(7u64)
+        .target(&KRYO_485, Framework::Ours)
+        .plan_cache(cache.clone())
+        .compile()
+        .unwrap();
     assert_eq!(cache.misses(), 1);
-    let mut weights = WeightSet::random(&net, 7);
-    weights.apply_sparsity(&sparsity);
 
-    // ground truth: sequential executor on the same binding
-    let exec = Executor::new(&net, &plan, &sparsity, &weights);
+    // ground truth: sequential façade runs on the same binding
     let mut rng = XorShift64Star::new(55);
     let pool: Vec<Tensor> =
         (0..4).map(|_| Tensor::he_normal(vec![10, 10, 16], &mut rng)).collect();
-    let expected: Vec<Tensor> = pool.iter().map(|x| exec.run(x)).collect();
+    let expected: Vec<Tensor> = pool.iter().map(|x| model.run(x).unwrap()).collect();
 
-    let engine = InferenceEngine::with_plan(
-        net.clone(),
-        &sparsity,
-        weights.clone(),
-        plan.clone(),
-        EngineConfig {
+    let engine = model
+        .serve(EngineConfig {
             workers: 3,
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             queue_cap: 128,
             intra_workers: 2,
-        },
-    )
-    .unwrap();
+        })
+        .unwrap();
 
     let threads = 8usize;
     let per_thread = 12usize;

@@ -1,6 +1,6 @@
 //! Differential parity suite: every zoo network x every pruning scheme,
-//! compiled plans executed on real tensors vs the naive dense reference
-//! with the same masks applied.
+//! compiled plans executed on real tensors through the `CompiledModel`
+//! façade vs its naive dense reference with the same masks applied.
 //!
 //! Tolerance contract (see `compiler::executor`): all GEMM-family kernel
 //! paths share the dense reference's reduction order and must match within
@@ -19,16 +19,13 @@
 
 use std::time::{Duration, Instant};
 
-use npas::compiler::codegen::compile;
 use npas::compiler::device::KRYO_485;
-use npas::compiler::{
-    execute_plan, max_abs_diff, run_dense_reference, uniform_sparsity, winograd, Algo,
-    Framework, SparsityMap, WeightSet,
-};
+use npas::compiler::{max_abs_diff, winograd, Algo, Framework};
 use npas::graph::{zoo, Network};
 use npas::pruning::packing::{DEFAULT_PACK_COLS, DEFAULT_PACK_ROWS};
 use npas::pruning::{apply_mask, generate_mask, BlockCsr, PruneRate, PruneScheme};
 use npas::tensor::{Tensor, XorShift64Star};
+use npas::CompiledModel;
 
 /// Parity resolution: zoo topologies at 16x16 input.
 const RES: usize = 16;
@@ -45,29 +42,30 @@ fn all_schemes() -> [PruneScheme; 5] {
     ]
 }
 
-/// Compile + execute + compare against the masked dense reference.
+/// Compile + execute through the `CompiledModel` façade and compare against
+/// its masked dense reference.
 fn check_parity(net: &Network, annotation: Option<(PruneScheme, f32)>) {
-    let sparsity = match annotation {
-        Some((scheme, rate)) => uniform_sparsity(net, scheme, rate),
-        None => SparsityMap::new(),
-    };
     let label = match annotation {
         Some((scheme, rate)) => format!("{} @ {scheme} {rate}x", net.name),
         None => format!("{} @ dense", net.name),
     };
-    let plan = compile(net, &sparsity, &KRYO_485, Framework::Ours);
-    let mut weights = WeightSet::random(net, 11);
-    weights.apply_sparsity(&sparsity);
+    let mut builder = CompiledModel::build(net.clone())
+        .weights(11u64)
+        .target(&KRYO_485, Framework::Ours);
+    if let Some((scheme, rate)) = annotation {
+        builder = builder.scheme((scheme, rate));
+    }
+    let model = builder.compile().unwrap_or_else(|e| panic!("{label}: {e}"));
     let mut rng = XorShift64Star::new(101);
     let (h, w, c) = net.input_hwc;
     let input = Tensor::he_normal(vec![h, w, c], &mut rng);
 
-    let got = execute_plan(net, &plan, &sparsity, &weights, &input);
-    let want = run_dense_reference(net, &weights, &input);
+    let got = model.run(&input).unwrap_or_else(|e| panic!("{label}: {e}"));
+    let want = model.reference(&input).unwrap_or_else(|e| panic!("{label}: {e}"));
     assert_eq!(got.dims(), want.dims(), "{label}: shape mismatch");
     assert!(got.data().iter().all(|v| v.is_finite()), "{label}: non-finite output");
 
-    let has_winograd = plan.groups.iter().any(|g| g.algo == Algo::Winograd);
+    let has_winograd = model.plan().groups.iter().any(|g| g.algo == Algo::Winograd);
     let rtol = if has_winograd { RTOL_WINOGRAD } else { RTOL };
     let scale = want.abs_max().max(1e-3);
     let diff = max_abs_diff(&got, &want);
@@ -114,9 +112,13 @@ fn parity_resnet50() {
     // mask sort (global top-k over 25M weights) within the CI budget; this is
     // also the only zoo net whose dense plan exercises Winograd groups
     let net = zoo::resnet50().rescaled(RES);
-    let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+    let dense = CompiledModel::build(net.clone())
+        .weights(11u64)
+        .target(&KRYO_485, Framework::Ours)
+        .compile()
+        .unwrap();
     assert!(
-        plan.groups.iter().any(|g| g.algo == Algo::Winograd),
+        dense.plan().groups.iter().any(|g| g.algo == Algo::Winograd),
         "resnet50 dense plan must contain Winograd groups"
     );
     sweep(&net, &[5.0]);
@@ -135,26 +137,37 @@ fn parity_npas_deploy_network() {
 fn foreign_frameworks_execute_too() {
     // plans compiled for the baseline frameworks (different fusion levels,
     // no sparse execution, winograd only where the framework supports it)
-    // run through the same executor and agree with the same reference
+    // run through the same façade and agree with the same reference
     let net = zoo::mobilenet_v2().rescaled(RES);
-    let sparsity = uniform_sparsity(&net, PruneScheme::block_punched_default(), 5.0);
-    let mut weights = WeightSet::random(&net, 11);
-    weights.apply_sparsity(&sparsity);
     let mut rng = XorShift64Star::new(101);
     let input = Tensor::he_normal(vec![RES, RES, 3], &mut rng);
-    let want = run_dense_reference(&net, &weights, &input);
-    let scale = want.abs_max().max(1e-3);
+    let mut want: Option<Tensor> = None;
     for fw in [Framework::MNN, Framework::TFLite, Framework::PyTorchMobile] {
-        let plan = compile(&net, &sparsity, &KRYO_485, fw);
-        let got = execute_plan(&net, &plan, &sparsity, &weights, &input);
+        // each model derives identical weights from the shared seed +
+        // scheme, so the dense reference is the same on every iteration
+        let model = CompiledModel::build(net.clone())
+            .scheme((PruneScheme::block_punched_default(), 5.0))
+            .weights(11u64)
+            .target(&KRYO_485, fw)
+            .compile()
+            .unwrap();
+        let reference = model.reference(&input).unwrap();
+        if let Some(first) = &want {
+            assert_eq!(first, &reference, "reference must not depend on the framework");
+        } else {
+            want = Some(reference);
+        }
+        let want = want.as_ref().unwrap();
+        let scale = want.abs_max().max(1e-3);
+        let got = model.run(&input).unwrap();
         // MNN is winograd-capable (and ignores sparsity annotations), so
         // derive the tolerance from the actual plan like check_parity does
-        let rtol = if plan.groups.iter().any(|g| g.algo == Algo::Winograd) {
+        let rtol = if model.plan().groups.iter().any(|g| g.algo == Algo::Winograd) {
             RTOL_WINOGRAD
         } else {
             RTOL
         };
-        let diff = max_abs_diff(&got, &want);
+        let diff = max_abs_diff(&got, want);
         assert!(diff <= rtol * scale, "{}: diff {diff} vs scale {scale}", fw.name());
     }
 }

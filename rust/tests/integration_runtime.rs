@@ -4,19 +4,20 @@
 //! * PJRT over `artifacts/*.hlo.txt` — the xla-crate consumer of the AOT
 //!   pipeline. These tests skip (pass trivially) when artifacts have not
 //!   been built (and the offline xla stub cannot build them).
-//! * Executor-backend [`PlanBundle`]s — generated *in-test*, so the
-//!   manifest load → execute path runs in CI unconditionally.
+//! * Executor-backend `CompiledModel` artifacts — generated *in-test*, so
+//!   the save → load → execute path runs in CI unconditionally.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use npas::compiler::device::{ADRENO_640, KRYO_485};
-use npas::compiler::{executor, max_abs_diff, Framework, WeightSet};
+use npas::compiler::{max_abs_diff, Framework};
 use npas::graph::{ActKind, NetworkBuilder, PoolKind};
 use npas::pruning::PruneScheme;
 use npas::runtime::{Manifest, PlanBundle, Runtime, Value};
 use npas::tensor::{Tensor, XorShift64Star};
+use npas::{CompiledModel, NpasError};
 
 
 /// PJRT's CPU client is thread-safe for concurrent `execute` calls; the
@@ -161,7 +162,7 @@ impl Drop for TempDir {
     }
 }
 
-fn fixture_bundle() -> PlanBundle {
+fn fixture_model() -> CompiledModel {
     let mut b = NetworkBuilder::new("ci-fixture", (10, 10, 3));
     b.conv2d(3, 8, 1);
     b.act(ActKind::Relu);
@@ -177,56 +178,75 @@ fn fixture_bundle() -> PlanBundle {
     b.global_avg_pool();
     b.linear(6);
     let net = b.build();
-    let sparsity = executor::uniform_sparsity(&net, PruneScheme::block_punched_default(), 4.0);
-    let mut weights = WeightSet::random(&net, 17);
-    weights.apply_sparsity(&sparsity);
-    PlanBundle::new(net, sparsity, weights)
+    CompiledModel::build(net)
+        .scheme((PruneScheme::block_punched_default(), 4.0))
+        .weights(17u64)
+        .target(&KRYO_485, Framework::Ours)
+        .compile()
+        .expect("fixture model compiles")
 }
 
 #[test]
-fn bundle_save_load_execute_matches_reference() {
+fn model_save_load_execute_matches_reference() {
     let tmp = TempDir::new("bundle");
-    let path = tmp.0.join("bundle.json");
-    let bundle = fixture_bundle();
-    bundle.save(&path).expect("saving bundle");
+    let path = tmp.0.join("model.json");
+    let model = fixture_model();
+    model.save(&path).expect("saving model");
 
-    let loaded = PlanBundle::load(&path).expect("loading bundle");
-    assert_eq!(loaded.network.fingerprint(), bundle.network.fingerprint());
-    assert_eq!(loaded.sparsity, bundle.sparsity);
+    let loaded = CompiledModel::load(&path).expect("loading model");
+    assert_eq!(
+        loaded.network().fingerprint(),
+        model.network().fingerprint()
+    );
+    assert_eq!(loaded.sparsity(), model.sparsity());
+    assert_eq!(loaded.framework(), Framework::Ours);
+    assert_eq!(loaded.device().name, KRYO_485.name);
 
     let mut rng = XorShift64Star::new(33);
     let x = Tensor::he_normal(vec![10, 10, 3], &mut rng);
-    let got = loaded.execute(&KRYO_485, Framework::Ours, &x);
-    let want = loaded.execute_reference(&x);
+    let got = loaded.run(&x).expect("loaded model runs");
+    let want = loaded.reference(&x).expect("dense reference runs");
     assert_eq!(got.dims(), &[1, 1, 6]);
     assert!(got.data().iter().all(|v| v.is_finite()));
     let scale = want.abs_max().max(1e-3);
     assert!(
         max_abs_diff(&got, &want) <= 1e-4 * scale,
-        "loaded bundle diverges from dense reference: {} vs scale {scale}",
+        "loaded model diverges from dense reference: {} vs scale {scale}",
         max_abs_diff(&got, &want)
     );
 
+    // the loaded model is the in-memory model, bit for bit
+    assert_eq!(got, model.run(&x).unwrap());
     // deterministic across load + device-independent numerics (the plan
     // changes, the arithmetic must not)
-    let again = PlanBundle::load(&path).unwrap().execute(&KRYO_485, Framework::Ours, &x);
+    let again = CompiledModel::load(&path).unwrap().run(&x).unwrap();
     assert_eq!(got, again);
-    let gpu = loaded.execute(&ADRENO_640, Framework::Ours, &x);
+    let gpu = CompiledModel::load_with(&path, &ADRENO_640, Framework::Ours)
+        .unwrap()
+        .run(&x)
+        .unwrap();
     assert!(max_abs_diff(&gpu, &want) <= 1e-4 * scale);
 }
 
 #[test]
-fn bundle_load_rejects_tampering() {
+fn model_load_rejects_tampering() {
     let tmp = TempDir::new("tamper");
-    let path = tmp.0.join("bundle.json");
-    fixture_bundle().save(&path).unwrap();
+    let path = tmp.0.join("model.json");
+    fixture_model().save(&path).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
-    // truncate: invalid json must error, not panic
+    // truncate: invalid json must be a typed Parse error, not a panic
     std::fs::write(&path, &text[..text.len() / 2]).unwrap();
-    assert!(PlanBundle::load(&path).is_err());
+    assert!(matches!(CompiledModel::load(&path), Err(NpasError::Parse(_))));
     // valid json, wrong schema
     std::fs::write(&path, "{\"version\": 1}").unwrap();
-    assert!(PlanBundle::load(&path).is_err());
+    assert!(matches!(CompiledModel::load(&path), Err(NpasError::Parse(_))));
+    // the raw bundle loader reports the same taxonomy
+    assert!(matches!(PlanBundle::load(&path), Err(NpasError::Parse(_))));
+    // a missing file is Io, not Parse
+    assert!(matches!(
+        CompiledModel::load(tmp.0.join("absent.json")),
+        Err(NpasError::Io { .. })
+    ));
 }
 
 #[test]
@@ -302,12 +322,10 @@ fn manifest_fixture_loads_without_artifacts() {
     assert!(man.artifact("nonexistent").is_err());
 
     // the PJRT path is still stub-gated offline: loading executables fails
-    // loudly with the stub's message rather than silently succeeding.
-    // anyhow's plain Display shows only the outermost context, so check the
-    // whole chain ({:#}) for the stub's "unavailable" cause
+    // loudly with a typed Compile error embedding the stub's message
     let err = Runtime::load(&tmp.0).err().expect("stub must refuse to compile");
-    let chain = format!("{err:#}");
-    assert!(chain.contains("unavailable"), "{chain}");
+    assert!(matches!(err, NpasError::Compile(_)), "{err}");
+    assert!(err.to_string().contains("unavailable"), "{err}");
 }
 
 #[test]

@@ -1,0 +1,271 @@
+//! Façade test wall: `CompiledModel` is the single public path from a
+//! pruning scheme to a running model, so this suite pins its contracts:
+//!
+//! * save → load → run round-trips **bit-identically** to the in-memory
+//!   model, across networks (covering every weight-bearing layer kind)
+//!   × pruning schemes;
+//! * builder misuse (missing weights, scheme/network mismatch, impossible
+//!   target) is a typed `NpasError` — never a panic;
+//! * run/reference/serve agree with each other under the differential
+//!   suite's tolerances;
+//! * an attached `PlanCache` amortizes compilation across models and is
+//!   observable through `cache_stats()`.
+
+use std::sync::Arc;
+
+use npas::compiler::device::{ADRENO_640, KRYO_485};
+use npas::compiler::{max_abs_diff, Algo, ExecError, Framework, PlanCache};
+use npas::graph::{zoo, Network};
+use npas::pruning::PruneScheme;
+use npas::runtime::EngineConfig;
+use npas::tensor::{Tensor, XorShift64Star};
+use npas::{CompiledModel, NpasError};
+
+fn build(net: &Network, scheme: Option<(PruneScheme, f32)>, seed: u64) -> CompiledModel {
+    let mut b = CompiledModel::build(net.clone())
+        .weights(seed)
+        .target(&KRYO_485, Framework::Ours);
+    if let Some(s) = scheme {
+        b = b.scheme(s);
+    }
+    b.compile().unwrap_or_else(|e| panic!("{}: {e}", net.name))
+}
+
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let dir = std::env::temp_dir().join(format!("npas_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("creating temp dir");
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// A MobileNet-shaped mini-network covering every weight-bearing layer
+/// kind the serializer handles (full conv, depthwise, squeeze-excite, FC)
+/// plus residual/pool glue — zoo topology structure at bundle-friendly
+/// channel counts (full zoo nets carry millions of params; serializing
+/// them as JSON text would dominate the CI budget without exercising any
+/// additional code path).
+fn mini_mobilenet() -> Network {
+    use npas::graph::{ActKind, NetworkBuilder, PoolKind};
+    let mut b = NetworkBuilder::new("facade-mini-mbv3", (12, 12, 3));
+    b.conv2d(3, 8, 1);
+    b.act(ActKind::HardSwish);
+    let skip = b.head().unwrap();
+    b.depthwise(3, 1);
+    b.act(ActKind::Relu6);
+    b.squeeze_excite(4);
+    b.conv2d(1, 8, 1);
+    b.add_from(skip);
+    b.pool(PoolKind::Max, 2, 2);
+    b.conv2d(3, 12, 2);
+    b.act(ActKind::Swish);
+    b.global_avg_pool();
+    b.linear(5);
+    b.build()
+}
+
+#[test]
+fn save_load_run_is_bit_identical_across_nets_and_schemes() {
+    let tmp = TempDir::new("facade_roundtrip");
+    let nets = [zoo::single_conv(12, 3, 8, 8), mini_mobilenet()];
+    let schemes = [
+        Some((PruneScheme::block_punched_default(), 4.0)),
+        Some((PruneScheme::Unstructured, 2.5)),
+        None,
+    ];
+    let mut rng = XorShift64Star::new(0xFACADE);
+    for (ni, net) in nets.iter().enumerate() {
+        for (si, scheme) in schemes.iter().enumerate() {
+            let label = format!("{} scheme#{si}", net.name);
+            let model = build(net, *scheme, 23);
+            let (h, w, c) = net.input_hwc;
+            let input = Tensor::he_normal(vec![h, w, c], &mut rng);
+            let in_memory = model.run(&input).unwrap_or_else(|e| panic!("{label}: {e}"));
+
+            let path = tmp.0.join(format!("m{ni}_{si}.json"));
+            model.save(&path).unwrap_or_else(|e| panic!("{label}: save: {e}"));
+            let loaded =
+                CompiledModel::load(&path).unwrap_or_else(|e| panic!("{label}: load: {e}"));
+            let replay = loaded.run(&input).unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_eq!(
+                in_memory, replay,
+                "{label}: loaded model diverged from the in-memory model"
+            );
+            // the restored target measures identically too
+            assert_eq!(
+                model.latency(10).mean_ms,
+                loaded.latency(10).mean_ms,
+                "{label}: latency model drifted through the round-trip"
+            );
+            // and the loaded model still matches its own dense reference
+            let want = loaded.reference(&input).unwrap();
+            let has_winograd =
+                loaded.plan().groups.iter().any(|g| g.algo == Algo::Winograd);
+            let rtol = if has_winograd { 1e-2 } else { 1e-4 };
+            let scale = want.abs_max().max(1e-3);
+            let diff = max_abs_diff(&replay, &want);
+            assert!(diff <= rtol * scale, "{label}: diff {diff} vs scale {scale}");
+        }
+    }
+}
+
+#[test]
+fn builder_misuse_is_typed_not_a_panic() {
+    // missing weights
+    match CompiledModel::build(zoo::single_conv(8, 3, 4, 4)).compile() {
+        Err(NpasError::InvalidConfig(msg)) => assert!(msg.contains("weights"), "{msg}"),
+        Err(other) => panic!("expected InvalidConfig, got {other}"),
+        Ok(_) => panic!("weightless build must fail"),
+    }
+    // sparsity annotation for a layer the network does not have
+    let mut sp = npas::compiler::SparsityMap::new();
+    sp.insert(
+        42,
+        npas::compiler::LayerSparsity::new(PruneScheme::block_punched_default(), 4.0),
+    );
+    match CompiledModel::build(zoo::single_conv(8, 3, 4, 4)).scheme(sp).weights(1u64).compile()
+    {
+        Err(NpasError::InvalidConfig(msg)) => {
+            assert!(msg.contains("unknown layer 42"), "{msg}")
+        }
+        Err(other) => panic!("expected InvalidConfig, got {other}"),
+        Ok(_) => panic!("mismatched scheme must fail"),
+    }
+    // rates outside the loader's 1.0..=1e6 bound (incl. inf/NaN) — anything
+    // the builder accepted but the loader refused would break save → load
+    for rate in [0.5f32, f32::INFINITY, f32::NAN, 2e6] {
+        match CompiledModel::build(zoo::single_conv(8, 3, 4, 4))
+            .scheme((PruneScheme::Filter, rate))
+            .weights(1u64)
+            .compile()
+        {
+            Err(NpasError::InvalidConfig(msg)) => assert!(msg.contains("rate"), "{msg}"),
+            Err(other) => panic!("expected InvalidConfig, got {other}"),
+            Ok(_) => panic!("rate {rate} must fail"),
+        }
+    }
+    // PyTorch Mobile has no GPU backend
+    match CompiledModel::build(zoo::single_conv(8, 3, 4, 4))
+        .weights(1u64)
+        .target(&ADRENO_640, Framework::PyTorchMobile)
+        .compile()
+    {
+        Err(NpasError::InvalidConfig(msg)) => assert!(msg.contains("GPU"), "{msg}"),
+        Err(other) => panic!("expected InvalidConfig, got {other}"),
+        Ok(_) => panic!("PTM-on-GPU must fail"),
+    }
+}
+
+#[test]
+fn bad_requests_are_typed_exec_errors() {
+    let model = build(&zoo::single_conv(8, 3, 4, 4), None, 5);
+    match model.run(&Tensor::zeros(vec![3, 3, 3])) {
+        Err(NpasError::Exec(ExecError::InputShape { want, got })) => {
+            assert_eq!(want, (8, 8, 4));
+            assert_eq!(got, vec![3, 3, 3]);
+        }
+        other => panic!("expected InputShape, got {other:?}"),
+    }
+    assert!(matches!(
+        model.run_batch(&[]),
+        Err(NpasError::Exec(ExecError::EmptyBatch))
+    ));
+    // the reference path reports the same taxonomy
+    assert!(matches!(
+        model.reference(&Tensor::zeros(vec![1, 1, 1])),
+        Err(NpasError::Exec(ExecError::InputShape { .. }))
+    ));
+}
+
+#[test]
+fn serve_agrees_with_run() {
+    let net = zoo::single_conv(10, 3, 8, 8);
+    let model = build(&net, Some((PruneScheme::block_punched_default(), 4.0)), 31);
+    let engine = model
+        .serve(EngineConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(1),
+            queue_cap: 32,
+            intra_workers: 2,
+        })
+        .unwrap();
+    let mut rng = XorShift64Star::new(77);
+    for _ in 0..4 {
+        let x = Tensor::he_normal(vec![10, 10, 8], &mut rng);
+        let served = engine.run(x.clone()).unwrap();
+        // serving must never change what a given input produces
+        assert_eq!(served, model.run(&x).unwrap());
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.failed, 0);
+}
+
+#[test]
+fn shared_plan_cache_amortizes_compiles_across_models() {
+    let cache = Arc::new(PlanCache::default());
+    let net = zoo::single_conv(10, 3, 8, 8);
+    let mk = || {
+        CompiledModel::build(net.clone())
+            .scheme((PruneScheme::block_punched_default(), 4.0))
+            .weights(13u64)
+            .plan_cache(cache.clone())
+            .compile()
+            .unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    let stats = b.cache_stats().expect("cache attached");
+    assert_eq!((stats.hits, stats.misses), (1, 1));
+    // identical workload → identical plan object and identical outputs
+    let mut rng = XorShift64Star::new(3);
+    let x = Tensor::he_normal(vec![10, 10, 8], &mut rng);
+    assert_eq!(a.run(&x).unwrap(), b.run(&x).unwrap());
+    // a model without a cache reports no stats
+    let c = CompiledModel::build(net.clone()).weights(13u64).compile().unwrap();
+    assert!(c.cache_stats().is_none());
+}
+
+#[test]
+fn load_rejects_unknown_targets_but_load_with_recovers() {
+    let tmp = TempDir::new("facade_target");
+    let model = build(&zoo::single_conv(8, 3, 4, 4), None, 2);
+    let path = tmp.0.join("m.json");
+    model.save(&path).unwrap();
+    // corrupt the target's framework token
+    let text = std::fs::read_to_string(&path).unwrap();
+    let tampered = text.replace("\"framework\":\"ours\"", "\"framework\":\"onnx\"");
+    assert_ne!(text, tampered, "fixture must contain the framework token");
+    std::fs::write(&path, &tampered).unwrap();
+    assert!(matches!(CompiledModel::load(&path), Err(NpasError::Parse(_))));
+    // an explicit target bypasses the stored one
+    let loaded = CompiledModel::load_with(&path, &KRYO_485, Framework::Ours).unwrap();
+    let x = Tensor::zeros(vec![8, 8, 4]);
+    assert_eq!(loaded.run(&x).unwrap(), model.run(&x).unwrap());
+
+    // a raw PlanBundle (no `target` section) is not loadable by load(), and
+    // the error says how to recover; load_with() opens it fine
+    let raw = tmp.0.join("raw.json");
+    npas::runtime::PlanBundle::new(
+        model.network().clone(),
+        model.sparsity().clone(),
+        model.weights().clone(),
+    )
+    .save(&raw)
+    .unwrap();
+    match CompiledModel::load(&raw) {
+        Err(NpasError::Parse(msg)) => assert!(msg.contains("load_with"), "{msg}"),
+        other => panic!("expected Parse suggesting load_with, got {other:?}"),
+    }
+    let via_raw = CompiledModel::load_with(&raw, &KRYO_485, Framework::Ours).unwrap();
+    assert_eq!(via_raw.run(&x).unwrap(), model.run(&x).unwrap());
+}
