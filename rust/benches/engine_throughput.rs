@@ -20,13 +20,58 @@ use std::hint::black_box;
 use std::sync::Arc;
 use std::time::Duration;
 
-use npas::bench::{bench, quick, Table};
+use npas::bench::{bench, matmul_tiled_spawn_alloc, quick, Measurement, Table};
 use npas::compiler::device::KRYO_485;
-use npas::compiler::{max_abs_diff, Algo, Framework, PlanCache};
-use npas::graph::zoo;
+use npas::compiler::{max_abs_diff, Algo, Framework, LayerWeights, PlanCache, WeightSet};
+use npas::graph::{zoo, LayerKind, Network, NetworkBuilder};
 use npas::runtime::EngineConfig;
-use npas::tensor::{Tensor, XorShift64Star};
+use npas::tensor::{same_pad, Tensor, XorShift64Star};
+use npas::util::Json;
 use npas::CompiledModel;
+
+/// The pre-PR single-image conv hot path, replicated faithfully: fresh
+/// im2col allocation, per-call weight clone + reshape, spawn-per-call
+/// tiled GEMM with per-tile buffers and a gather copy — per layer, per
+/// run. Funnels through the same row kernel, so its output is bit-identical
+/// to the reworked path and the comparison is pure overhead.
+fn legacy_single_image(
+    net: &Network,
+    weights: &WeightSet,
+    x: &Tensor,
+    workers: usize,
+) -> Tensor {
+    let mut cur = x.clone();
+    for l in &net.layers {
+        let LayerKind::Conv2d { kh, kw, cin, cout, stride, .. } = l.kind else {
+            panic!("legacy emulation expects a conv-only net");
+        };
+        let Some(LayerWeights::Conv(w)) = weights.get(l.id) else {
+            panic!("conv weights missing in the bench net");
+        };
+        let patches = cur.im2col(kh, kw, stride);
+        let w2 = w.clone().reshape(vec![kh * kw * cin, cout]);
+        let flat = matmul_tiled_spawn_alloc(&patches, &w2, workers);
+        let (oh, _) = same_pad(l.in_hwc.0, kh, stride);
+        let (ow, _) = same_pad(l.in_hwc.1, kw, stride);
+        cur = flat.reshape(vec![oh, ow, cout]);
+    }
+    cur
+}
+
+/// Conv-only stack for the single-image hot-path comparison.
+fn conv_stack() -> Network {
+    let mut b = NetworkBuilder::new("conv-stack", (32, 32, 16));
+    b.conv2d(3, 32, 1);
+    b.conv2d(3, 32, 1);
+    b.conv2d(3, 32, 2);
+    b.conv2d(3, 48, 1);
+    b.conv2d(1, 48, 1);
+    b.build()
+}
+
+fn ms(m: &Measurement) -> f64 {
+    m.mean_ms()
+}
 
 fn main() {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -158,7 +203,119 @@ fn main() {
         ]);
     }
 
-    if cores >= 4 {
+    // ---- single-image hot path: pre-PR emulation vs reworked path ------
+    let net1 = conv_stack();
+    let model_hot = CompiledModel::build(net1.clone())
+        .weights(33u64)
+        .target(&KRYO_485, Framework::TFLite)
+        .intra_workers(cores)
+        .compile()
+        .expect("conv stack compiles");
+    let x1 = Tensor::he_normal(vec![32, 32, 16], &mut rng);
+    let legacy_out = legacy_single_image(&net1, model_hot.weights(), &x1, cores);
+    let hot_out = model_hot.run(&x1).expect("hot-path run");
+    assert_eq!(
+        legacy_out.data(),
+        hot_out.data(),
+        "legacy emulation and hot path must agree bitwise — the bars time pure overhead"
+    );
+    println!(
+        "\n== single-image conv stack `{}` ({} layers, {:.1}M MACs): pre-PR path vs hot path ==",
+        net1.name,
+        net1.layers.len(),
+        net1.total_macs() as f64 / 1e6
+    );
+    model_hot.run(&x1).expect("warm scratch"); // arena at steady state
+    let t_legacy = quick("pre-PR: spawn + alloc + clone per layer", || {
+        black_box(legacy_single_image(&net1, model_hot.weights(), &x1, cores));
+    });
+    let t_hot = quick("hot path: pool + panels + scratch", || {
+        black_box(model_hot.run(&x1).expect("hot-path run"));
+    });
+    let single_speedup = t_legacy.mean.as_secs_f64() / t_hot.mean.as_secs_f64().max(1e-12);
+    println!("   single-image hot-path speedup: {single_speedup:.2}x vs the pre-PR path");
+
+    // allocations per inference: scratch-arena counters over a known run
+    // count (the escaped output buffer is the only expected miss)
+    let stats_before = model_hot.scratch_stats();
+    let probe_runs = 20u64;
+    for _ in 0..probe_runs {
+        black_box(model_hot.run(&x1).expect("probe run"));
+    }
+    let stats_after = model_hot.scratch_stats();
+    let misses_per_run =
+        (stats_after.misses - stats_before.misses) as f64 / probe_runs as f64;
+    println!(
+        "   scratch arena: {:.2} misses/inference ({} buffers, {:.1} KiB parked)",
+        misses_per_run,
+        stats_after.buffers,
+        stats_after.bytes as f64 / 1024.0
+    );
+
+    // ---- machine-readable snapshot for the bench trajectory ------------
+    let snapshot = Json::obj(vec![
+        ("bench", Json::str("engine_throughput")),
+        ("pr", Json::num(5.0)),
+        ("cores", Json::num(cores as f64)),
+        (
+            "single_image",
+            Json::obj(vec![
+                ("legacy_ms", Json::num(ms(&t_legacy))),
+                ("hotpath_ms", Json::num(ms(&t_hot))),
+                ("speedup", Json::num(single_speedup)),
+            ]),
+        ),
+        (
+            "batch8",
+            Json::obj(vec![
+                ("sequential_ms", Json::num(ms(&t_seq))),
+                ("batched_ms", Json::num(ms(&t_batch))),
+                ("engine_ms", Json::num(ms(&t_engine))),
+                ("run_batch_speedup", Json::num(speedup)),
+                ("engine_speedup", Json::num(engine_speedup)),
+            ]),
+        ),
+        (
+            "engine",
+            Json::obj(vec![
+                ("p50_ms", Json::num(stats.p50_ms)),
+                ("p95_ms", Json::num(stats.p95_ms)),
+                ("p99_ms", Json::num(stats.p99_ms)),
+                ("throughput_rps", Json::num(stats.throughput_rps)),
+                ("mean_batch", Json::num(stats.mean_batch)),
+            ]),
+        ),
+        (
+            "allocations_per_inference",
+            Json::obj(vec![
+                ("scratch_misses_per_run", Json::num(misses_per_run)),
+                ("scratch_hits", Json::num(stats_after.hits as f64)),
+                ("scratch_misses", Json::num(stats_after.misses as f64)),
+            ]),
+        ),
+    ]);
+    // cargo runs bench binaries with cwd = the package dir (rust/); anchor
+    // the snapshot at the workspace root so CI finds it deterministically
+    let snap_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_5.json");
+    std::fs::write(&snap_path, snapshot.to_string()).expect("writing BENCH_5.json");
+    println!("   wrote {}", snap_path.display());
+
+    // shared CI runners have noisy-neighbor wall clocks; NPAS_BENCH_LENIENT
+    // demotes the acceptance asserts to loud prints there (the numbers and
+    // the BENCH_5.json snapshot still record the truth)
+    let lenient = std::env::var_os("NPAS_BENCH_LENIENT").is_some();
+    if cores < 4 {
+        println!(
+            "\nacceptance asserts skipped: {cores} cores caps the parallel ceiling at \
+             {cores}x (engine {engine_speedup:.2}x, single-image {single_speedup:.2}x)"
+        );
+    } else if lenient {
+        println!(
+            "\nacceptance asserts demoted by NPAS_BENCH_LENIENT: engine \
+             {engine_speedup:.2}x (bar 2x), single-image {single_speedup:.2}x (bar 1.5x)"
+        );
+    } else {
         assert!(
             engine_speedup >= 2.0,
             "batched engine below the 2x acceptance bar: {engine_speedup:.2}x \
@@ -167,10 +324,13 @@ fn main() {
             t_engine.mean_ms()
         );
         println!("\nacceptance: engine {engine_speedup:.2}x >= 2x sequential — OK");
-    } else {
-        println!(
-            "\nacceptance assert skipped: {cores} cores caps the parallel ceiling at \
-             {cores}x (measured {engine_speedup:.2}x)"
+        assert!(
+            single_speedup >= 1.5,
+            "single-image hot path below the 1.5x acceptance bar: {single_speedup:.2}x \
+             (legacy {:.2}ms vs hot {:.2}ms)",
+            t_legacy.mean_ms(),
+            t_hot.mean_ms()
         );
+        println!("acceptance: single-image hot path {single_speedup:.2}x >= 1.5x — OK");
     }
 }

@@ -1,5 +1,8 @@
 //! Executor kernel microbench: wall-clock for each compiled-kernel path on
-//! one conv workload, plus packed block-sparse GEMM across pruning rates.
+//! one conv workload, packed block-sparse GEMM across pruning rates, and
+//! before/after bars for the PR-5 hot-path rework — spawn-per-call scoped
+//! threads vs the persistent pool, and allocate-and-copy tiling vs
+//! in-place scratch-reusing tiling over packed B panels.
 //!
 //! This is the measured counterpart of the roofline model's ordering
 //! claims (Fig. 3): Winograd < im2col on dense 3x3, and block-sparse GEMM
@@ -8,10 +11,12 @@
 //!
 //! Run: `cargo bench --bench exec_kernels`
 
-use npas::bench::{quick, Table};
+use npas::bench::{matmul_tiled_spawn_alloc, quick, Table};
+use npas::coordinator::scheduler::{map_parallel, map_parallel_scoped};
 use npas::pruning::packing::{DEFAULT_PACK_COLS, DEFAULT_PACK_ROWS};
 use npas::pruning::{apply_mask, generate_mask, BlockCsr, PruneRate, PruneScheme};
-use npas::tensor::{Tensor, XorShift64Star};
+use npas::tensor::ops::gemm_packed_into;
+use npas::tensor::{PackedB, Tensor, XorShift64Star};
 
 fn main() {
     let mut rng = XorShift64Star::new(5);
@@ -67,4 +72,52 @@ fn main() {
             format!("{:.2}x", dense_t.mean.as_secs_f64() / m.mean.as_secs_f64().max(1e-12)),
         ]);
     }
+
+    // ---- PR-5 before/after: spawn-per-call vs persistent pool ----------
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = cores.min(4).max(2);
+    println!("\n== thread handoff: spawn-per-call (scoped) vs persistent pool ({workers} workers) ==");
+    let ranges: Vec<usize> = (0..workers * 4).collect();
+    let tile_work = |_: &usize| {
+        // a realistic row-tile's worth of FLOPs
+        let mut acc = 0f32;
+        for i in 0..20_000u32 {
+            acc += (i as f32).sqrt();
+        }
+        std::hint::black_box(acc)
+    };
+    let t_spawn = quick("map_parallel_scoped (spawn per call)", || {
+        std::hint::black_box(map_parallel_scoped(workers, &ranges, tile_work));
+    });
+    let t_pool = quick("map_parallel (persistent pool)", || {
+        std::hint::black_box(map_parallel(workers, &ranges, tile_work));
+    });
+    println!(
+        "   pool speedup on spawn-bound fan-out: {:.2}x\n",
+        t_spawn.mean.as_secs_f64() / t_pool.mean.as_secs_f64().max(1e-12)
+    );
+
+    // ---- PR-5 before/after: alloc-and-copy vs in-place scratch GEMM ----
+    println!("== tiled GEMM: per-tile alloc + gather copy vs in-place packed panels ==");
+    let before = matmul_tiled_spawn_alloc(&patches, &w2, workers);
+    let after = patches.matmul_tiled(&w2, workers);
+    assert_eq!(before.data(), after.data(), "before/after bars must agree bitwise");
+    let t_before = quick("spawn + per-tile alloc + copy (pre-PR)", || {
+        std::hint::black_box(matmul_tiled_spawn_alloc(&patches, &w2, workers));
+    });
+    let t_inplace = quick("pool + in-place tiles (matmul_tiled)", || {
+        std::hint::black_box(patches.matmul_tiled(&w2, workers));
+    });
+    let panels = PackedB::pack(&w2);
+    let mut scratch_out = vec![0f32; patches.dims()[0] * w2.dims()[1]];
+    let t_packed = quick("pool + packed panels + reused scratch", || {
+        gemm_packed_into(patches.data(), &panels, workers, &mut scratch_out);
+        std::hint::black_box(&scratch_out);
+    });
+    assert_eq!(&scratch_out[..], after.data(), "packed panel bar must agree bitwise");
+    println!(
+        "   in-place tiles {:.2}x, packed panels + scratch {:.2}x vs the pre-PR path",
+        t_before.mean.as_secs_f64() / t_inplace.mean.as_secs_f64().max(1e-12),
+        t_before.mean.as_secs_f64() / t_packed.mean.as_secs_f64().max(1e-12)
+    );
 }

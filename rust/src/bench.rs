@@ -7,6 +7,33 @@
 
 use std::time::{Duration, Instant};
 
+use crate::coordinator::scheduler::map_parallel_scoped;
+use crate::tensor::Tensor;
+
+/// The pre-PR-5 tiled GEMM, kept verbatim as the **baseline** the hot-path
+/// before/after bars measure against: spawn scoped threads per call, give
+/// every row tile its own buffer, then serially gather-copy the chunks
+/// into the final output. Funnels through the same row kernel as
+/// [`Tensor::matmul`], so its output is bit-identical to the reworked path
+/// and the bars time pure overhead. Do not use outside benches.
+pub fn matmul_tiled_spawn_alloc(a: &Tensor, b: &Tensor, workers: usize) -> Tensor {
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let n = b.dims()[1];
+    let tile = m.div_ceil(workers.max(1)).max(8);
+    let ranges: Vec<(usize, usize)> =
+        (0..m).step_by(tile).map(|r0| (r0, (r0 + tile).min(m))).collect();
+    let ad = a.data();
+    let chunks = map_parallel_scoped(workers, &ranges, |&(r0, r1)| {
+        let sub = Tensor::new(vec![r1 - r0, k], ad[r0 * k..r1 * k].to_vec());
+        sub.matmul(b).into_data()
+    });
+    let mut out = Vec::with_capacity(m * n);
+    for c in &chunks {
+        out.extend_from_slice(c);
+    }
+    Tensor::new(vec![m, n], out)
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct Measurement {
     pub mean: Duration,

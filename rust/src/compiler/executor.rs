@@ -27,14 +27,24 @@
 //! Batching: [`Executor::try_run_batch`] executes n inputs through one pass
 //! over the plan. Activations carry a leading batch dimension
 //! (`(n, h, w, c)`); GEMM-family layers lower the whole batch to a single
-//! patch matrix ([`Tensor::im2col_batch`]) so one (optionally row-tiled,
-//! see `intra_workers`) GEMM — dense or packed block-CSR — serves all n
-//! images and the per-invocation weight reshape / packed-matrix traversal
-//! is paid once per batch instead of once per image. Per-image kernels
-//! (Winograd tiles, depthwise, pooling, SE) fan across
-//! `coordinator::scheduler::map_parallel`. Every path reuses the exact
-//! per-row / per-image kernels of the sequential executor, so batched
-//! outputs are bit-identical to n sequential [`Executor::try_run`] calls.
+//! patch matrix so one (optionally row-tiled, see `intra_workers`) GEMM —
+//! dense panel-packed or block-CSR — serves all n images. Per-image
+//! kernels (Winograd tiles, depthwise, pooling, SE) fan across the
+//! persistent `coordinator::scheduler` thread pool. Every path reuses the
+//! exact per-row / per-image kernels of the sequential executor, so
+//! batched outputs are bit-identical to n sequential
+//! [`Executor::try_run`] calls.
+//!
+//! Hot path: an executor owns (or shares — [`Executor::with_scratch`]) an
+//! [`ExecScratch`] arena sized by walking the plan's shapes once at bind
+//! time. Batch staging, im2col patch matrices, GEMM outputs, Winograd tile
+//! scratch and every intermediate activation live in arena buffers that
+//! are recycled across layers, runs, and engine requests; dense GEMM/FC
+//! weights are panel-packed once in [`PreparedKernels`]. In the steady
+//! state a conv/GEMM layer therefore performs **zero heap allocations**
+//! (pinned by the counting-allocator suite in `tests/alloc_free.rs`), and
+//! row tiles are written in place through disjoint output ranges instead
+//! of per-tile buffers plus a gather copy.
 //!
 //! Failure model: *everything* here is fallible and typed. Lookups that
 //! depend on bound data (weights present, FC widths, input shapes) return
@@ -48,11 +58,15 @@
 //! not data errors.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
+use crate::coordinator::scheduler::{for_each_parallel, SendPtr};
 use crate::graph::{ActKind, Layer, LayerKind, Network, PoolKind};
 use crate::pruning::packing::{DEFAULT_PACK_COLS, DEFAULT_PACK_ROWS};
 use crate::pruning::{apply_mask, generate_mask, BlockCsr, PruneScheme};
-use crate::tensor::{same_pad, Tensor, XorShift64Star};
+use crate::tensor::ops::{depthwise_conv_into, gemm_into, gemm_packed_into, im2col_batch_into};
+use crate::tensor::{same_pad, PackedB, Tensor, XorShift64Star};
 
 use super::codegen::{Algo, ExecutionPlan};
 use super::sparse_exec::LayerSparsity;
@@ -518,14 +532,22 @@ fn validate_weight_shapes(net: &Network, weights: &WeightSet) -> Result<(), Exec
 #[derive(Debug, Clone, Default)]
 pub struct PreparedKernels {
     packed: BTreeMap<usize, BlockCsr>,
+    /// Dense GEMM/FC weights repacked into [`PackedB`] column panels —
+    /// packed once here, reused by every worker/request/batch, so the hot
+    /// path never reshapes (= clones) a weight tensor per call again.
+    panels: BTreeMap<usize, PackedB>,
     wino: BTreeMap<usize, winograd::WinogradKernel>,
 }
 
 impl PreparedKernels {
-    /// Pack sparse GEMM layers and pre-transform Winograd kernels for
-    /// `plan` bound to `weights`. `sparsity` must be the map the plan was
+    /// Pack sparse GEMM layers (block-CSR), pack dense GEMM/FC weights
+    /// into column panels, and pre-transform Winograd kernels for `plan`
+    /// bound to `weights`. `sparsity` must be the map the plan was
     /// compiled with (block geometry follows each annotation's scheme);
-    /// packing only happens when the framework executes sparse models.
+    /// block-CSR packing only happens when the framework executes sparse
+    /// models. A missing FC weight is *not* an error here — it surfaces
+    /// per-request as [`ExecError::MissingWeights`], the behavior the
+    /// engine's fail-one-request tests pin.
     pub fn try_prepare(
         net: &Network,
         plan: &ExecutionPlan,
@@ -535,6 +557,7 @@ impl PreparedKernels {
         validate_weight_shapes(net, weights)?;
         let sparse_exec = plan.framework.caps().sparse;
         let mut packed = BTreeMap::new();
+        let mut panels = BTreeMap::new();
         let mut wino = BTreeMap::new();
         for g in &plan.groups {
             if !matches!(g.algo, Algo::Winograd | Algo::Gemm1x1 | Algo::GemmIm2col) {
@@ -554,19 +577,28 @@ impl PreparedKernels {
                     wino.insert(id, winograd::transform_kernel(w));
                     continue;
                 }
-                if !sparse_exec {
-                    continue;
+                let annotated = sparsity.get(&id).map(|sp| !sp.is_dense()).unwrap_or(false);
+                if sparse_exec && annotated {
+                    let sp = &sparsity[&id];
+                    let w2 = w.clone().reshape(vec![kh * kw * cin, cout]);
+                    let (br, bc) = pack_geometry(sp.scheme);
+                    packed.insert(id, BlockCsr::pack(&w2, br, bc));
+                } else {
+                    // the (kh,kw,cin,cout) storage *is* the row-major
+                    // (kh*kw*cin, cout) im2col view — pack straight from it
+                    panels.insert(id, PackedB::from_slice(w.data(), kh * kw * cin, cout));
                 }
-                let Some(sp) = sparsity.get(&id) else { continue };
-                if sp.is_dense() {
-                    continue;
-                }
-                let w2 = w.clone().reshape(vec![kh * kw * cin, cout]);
-                let (br, bc) = pack_geometry(sp.scheme);
-                packed.insert(id, BlockCsr::pack(&w2, br, bc));
             }
         }
-        Ok(PreparedKernels { packed, wino })
+        // FC layers execute the same panel micro-kernel regardless of the
+        // group algo the latency model filed them under
+        for l in &net.layers {
+            let LayerKind::Linear { din, dout } = l.kind else { continue };
+            if let Some(LayerWeights::Linear(t)) = weights.get(l.id) {
+                panels.insert(l.id, PackedB::from_slice(t.data(), din, dout));
+            }
+        }
+        Ok(PreparedKernels { packed, panels, wino })
     }
 
     /// Number of block-CSR-packed GEMM layers.
@@ -574,9 +606,183 @@ impl PreparedKernels {
         self.packed.len()
     }
 
+    /// Number of dense GEMM/FC layers with pre-packed column panels.
+    pub fn num_panels(&self) -> usize {
+        self.panels.len()
+    }
+
     /// Number of pre-transformed Winograd kernels.
     pub fn num_winograd(&self) -> usize {
         self.wino.len()
+    }
+}
+
+/// Counter snapshot of an [`ExecScratch`] arena.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// `take` calls served from a pooled buffer (no heap allocation).
+    pub hits: u64,
+    /// `take` calls that had to allocate or grow a buffer.
+    pub misses: u64,
+    /// Buffers currently parked in the arena.
+    pub buffers: usize,
+    /// Total capacity parked in the arena, in bytes.
+    pub bytes: usize,
+}
+
+/// Reusable `f32` buffer arena for the execution hot path, sized by
+/// walking the plan's shapes **once at bind time** ([`ExecScratch::for_plan`]):
+/// one buffer per layer activation, the largest im2col patch matrix, and
+/// Winograd input-transform scratch. `take` hands out a zeroed buffer
+/// (recycled capacity when one fits — the steady state — or a fresh
+/// allocation, counted as a miss); `recycle` parks it again. Thread-safe
+/// with short internal locks, so concurrent runs share one arena without
+/// serializing their kernels; buffers above the planned population are
+/// dropped instead of parked so the arena stays bounded.
+#[derive(Debug)]
+pub struct ExecScratch {
+    pool: Mutex<Vec<Vec<f32>>>,
+    max_buffers: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for ExecScratch {
+    fn default() -> ExecScratch {
+        ExecScratch::with_buffers(Vec::new())
+    }
+}
+
+impl ExecScratch {
+    fn with_buffers(buffers: Vec<Vec<f32>>) -> ExecScratch {
+        let max_buffers = (buffers.len() * 2).max(64);
+        ExecScratch {
+            pool: Mutex::new(buffers),
+            max_buffers,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// An empty arena (buffers are grown on demand).
+    pub fn new() -> ExecScratch {
+        ExecScratch::default()
+    }
+
+    /// Compile-time scratch planning: walk the plan's layer shapes once
+    /// and pre-size one buffer per activation (batch of 1; larger batches
+    /// grow on first use and then stay), the largest patch matrix any
+    /// GEMM-lowered conv needs, Winograd tile scratch, and the input
+    /// staging buffer.
+    pub fn for_plan(net: &Network, plan: &ExecutionPlan) -> ExecScratch {
+        let mut algo: BTreeMap<usize, Algo> = BTreeMap::new();
+        for g in &plan.groups {
+            for &id in &g.layer_ids {
+                algo.insert(id, g.algo);
+            }
+        }
+        let (ih, iw, ic) = net.input_hwc;
+        let mut sizes: Vec<usize> = vec![ih * iw * ic];
+        let mut max_patch = 0usize;
+        let mut max_wino = 0usize;
+        for l in &net.layers {
+            let (oh, ow, oc) = l.out_hwc();
+            sizes.push(oh * ow * oc);
+            if let LayerKind::Conv2d { kh, kw, cin, depthwise, .. } = l.kind {
+                if depthwise {
+                    continue;
+                }
+                match algo.get(&l.id) {
+                    Some(Algo::Winograd) => max_wino = max_wino.max(cin * 16),
+                    Some(Algo::Gemm1x1 | Algo::GemmIm2col) => {
+                        max_patch = max_patch.max(oh * ow * kh * kw * cin);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if max_patch > 0 {
+            sizes.push(max_patch);
+        }
+        for _ in 0..2 {
+            if max_wino > 0 {
+                sizes.push(max_wino);
+            }
+        }
+        ExecScratch::with_buffers(sizes.into_iter().map(Vec::with_capacity).collect())
+    }
+
+    /// A zeroed buffer of exactly `len` floats. Reuses pooled capacity
+    /// when available; allocation-free in the steady state.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let reused = {
+            let mut pool = self.pool.lock().unwrap();
+            // best fit: the smallest pooled buffer that already holds `len`
+            let mut best: Option<(usize, usize)> = None;
+            for (i, b) in pool.iter().enumerate() {
+                let cap = b.capacity();
+                let better = match best {
+                    Some((_, c)) => cap < c,
+                    None => true,
+                };
+                if cap >= len && better {
+                    best = Some((i, cap));
+                }
+            }
+            match best {
+                Some((i, _)) => Some(pool.swap_remove(i)),
+                // no fit: grow the largest parked buffer rather than leak
+                // pool slots (still a miss — it reallocates)
+                None => pool.pop(),
+            }
+        };
+        let mut v = match reused {
+            Some(v) if v.capacity() >= len => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            Some(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(len)
+            }
+        };
+        // zero unconditionally: some consumers accumulate (dense GEMM,
+        // depthwise) and some store (panel GEMM, Winograd) — for the
+        // store-only kernels this memset is redundant work, but handing
+        // out len-set-uninitialized memory safely would need MaybeUninit
+        // plumbing through every kernel; a memset is minor next to the
+        // GEMM it precedes
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Park a buffer for reuse (dropped when the arena is at capacity).
+    pub fn recycle(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < self.max_buffers {
+            pool.push(v);
+        }
+    }
+
+    pub fn stats(&self) -> ScratchStats {
+        let pool = self.pool.lock().unwrap();
+        ScratchStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            buffers: pool.len(),
+            bytes: pool.iter().map(|b| b.capacity() * std::mem::size_of::<f32>()).sum(),
+        }
     }
 }
 
@@ -586,15 +792,25 @@ enum Prep<'a> {
     Shared(&'a PreparedKernels),
 }
 
+/// Owned-or-shared scratch arena. Workers own theirs (one arena per
+/// serving thread); the `CompiledModel` façade shares one long-lived arena
+/// across its `run` calls so steady-state inference stops allocating.
+enum ScratchRef<'a> {
+    Owned(ExecScratch),
+    Shared(&'a ExecScratch),
+}
+
 /// A compiled plan bound to weights, with per-layer kernel state
-/// ([`PreparedKernels`]) prepared **once**. Repeated [`Executor::try_run`]
-/// / [`Executor::try_run_batch`] calls pay only the kernel time, not the
-/// preparation.
+/// ([`PreparedKernels`]) prepared **once** and a shape-planned scratch
+/// arena ([`ExecScratch`]). Repeated [`Executor::try_run`] /
+/// [`Executor::try_run_batch`] calls pay only the kernel time — no
+/// preparation, and (for conv/GEMM layers) no heap allocation.
 pub struct Executor<'a> {
     net: &'a Network,
     plan: &'a ExecutionPlan,
     weights: &'a WeightSet,
     prep: Prep<'a>,
+    scratch: ScratchRef<'a>,
     /// Threads for intra-op tiling (GEMM row tiles, per-image fan-out).
     /// 1 = fully sequential; any value yields bit-identical outputs.
     intra_workers: usize,
@@ -613,12 +829,20 @@ impl<'a> Executor<'a> {
     ) -> Result<Executor<'a>, ExecError> {
         assert_eq!(plan.network, net.name, "plan was compiled for a different network");
         let prepared = PreparedKernels::try_prepare(net, plan, sparsity, weights)?;
-        Ok(Executor { net, plan, weights, prep: Prep::Owned(prepared), intra_workers: 1 })
+        Ok(Executor {
+            net,
+            plan,
+            weights,
+            prep: Prep::Owned(prepared),
+            scratch: ScratchRef::Owned(ExecScratch::new()),
+            intra_workers: 1,
+        })
     }
 
     /// Bind against kernel state prepared elsewhere
     /// ([`PreparedKernels::try_prepare`]) — the serving path: one
-    /// preparation shared by every worker thread's executor view.
+    /// preparation shared by every worker thread's executor view, each
+    /// view owning its per-worker scratch arena.
     pub fn with_prepared(
         net: &'a Network,
         plan: &'a ExecutionPlan,
@@ -626,7 +850,14 @@ impl<'a> Executor<'a> {
         prepared: &'a PreparedKernels,
     ) -> Executor<'a> {
         assert_eq!(plan.network, net.name, "plan was compiled for a different network");
-        Executor { net, plan, weights, prep: Prep::Shared(prepared), intra_workers: 1 }
+        Executor {
+            net,
+            plan,
+            weights,
+            prep: Prep::Shared(prepared),
+            scratch: ScratchRef::Owned(ExecScratch::new()),
+            intra_workers: 1,
+        }
     }
 
     /// Set the intra-op tiling width (clamped to at least 1). Outputs are
@@ -636,10 +867,26 @@ impl<'a> Executor<'a> {
         self
     }
 
+    /// Use a scratch arena that outlives this executor — the
+    /// `CompiledModel` façade's path: executors are rebuilt per call but
+    /// the arena (and thus the steady-state zero-allocation property)
+    /// persists on the model.
+    pub fn with_scratch(mut self, scratch: &'a ExecScratch) -> Executor<'a> {
+        self.scratch = ScratchRef::Shared(scratch);
+        self
+    }
+
     fn prepared(&self) -> &PreparedKernels {
         match &self.prep {
             Prep::Owned(p) => p,
             Prep::Shared(p) => *p,
+        }
+    }
+
+    fn scratch(&self) -> &ExecScratch {
+        match &self.scratch {
+            ScratchRef::Owned(s) => s,
+            ScratchRef::Shared(s) => *s,
         }
     }
 
@@ -655,6 +902,11 @@ impl<'a> Executor<'a> {
     /// pass over the plan, returning one output per input, in order.
     /// Bit-identical to n sequential [`Executor::try_run`] calls; see the
     /// module docs for where the batch amortization comes from.
+    ///
+    /// Batch rows are copied directly into (and the final activation
+    /// directly out of) arena-managed buffers — no `Tensor::stack` /
+    /// `unstack` round-trips — and every conv/GEMM layer writes into
+    /// scratch reused across layers, runs and engine requests.
     pub fn try_run_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, ExecError> {
         if inputs.is_empty() {
             return Err(ExecError::EmptyBatch);
@@ -676,7 +928,15 @@ impl<'a> Executor<'a> {
         let workers = self.intra_workers;
         let weights = self.weights;
         let prep = self.prepared();
-        let input = Tensor::stack(inputs);
+        let scratch = self.scratch();
+
+        // stage the batch: rows copied straight into one pooled buffer
+        let img_in = ih * iw * ic;
+        let mut ibuf = scratch.take(nb * img_in);
+        for (row, x) in ibuf.chunks_exact_mut(img_in).zip(inputs) {
+            row.copy_from_slice(x.data());
+        }
+        let input = Tensor::new([nb, ih, iw, ic], ibuf);
 
         let mut outs: Vec<Option<Tensor>> = vec![None; net.layers.len()];
         for g in &self.plan.groups {
@@ -686,39 +946,112 @@ impl<'a> Executor<'a> {
                     LayerKind::Conv2d { kh, kw, cin, cout, stride, depthwise } => {
                         let x = producer(&outs, layer, &input);
                         let w = conv_weight(weights, id, depthwise)?;
+                        let (xh, xw, xc) = layer.in_hwc;
                         if depthwise {
-                            batch_map(x, workers, |img| img.conv2d_depthwise(w, stride))
+                            let (oh, _) = same_pad(xh, kh, stride);
+                            let (ow, _) = same_pad(xw, kw, stride);
+                            let (per_in, per_out) = (xh * xw * xc, oh * ow * xc);
+                            let mut out = scratch.take(nb * per_out);
+                            let xd = x.data();
+                            let wd = w.data();
+                            let ptr = SendPtr(out.as_mut_ptr());
+                            for_each_parallel(workers, nb, |i| {
+                                // SAFETY: per-image output chunks are disjoint
+                                let chunk = unsafe {
+                                    std::slice::from_raw_parts_mut(
+                                        ptr.0.add(i * per_out),
+                                        per_out,
+                                    )
+                                };
+                                depthwise_conv_into(
+                                    &xd[i * per_in..(i + 1) * per_in],
+                                    (xh, xw, xc),
+                                    wd,
+                                    (kh, kw, stride),
+                                    chunk,
+                                );
+                            });
+                            Tensor::new([nb, oh, ow, xc], out)
                         } else {
                             match g.algo {
-                                Algo::Winograd => match prep.wino.get(&id) {
-                                    Some(k) => batch_map(x, workers, |img| {
-                                        winograd::winograd_conv2d_prepared(img, k)
-                                    }),
-                                    None => batch_map(x, workers, |img| {
-                                        winograd::winograd_conv2d(img, w)
-                                    }),
-                                },
+                                Algo::Winograd => {
+                                    let prepared_kernel = prep.wino.get(&id);
+                                    let fallback = prepared_kernel
+                                        .is_none()
+                                        .then(|| winograd::transform_kernel(w));
+                                    let kernel = prepared_kernel
+                                        .or(fallback.as_ref())
+                                        .expect("one of the two sources is set");
+                                    let (oh, ow) = (xh, xw); // 3x3 stride-1 SAME
+                                    let (per_in, per_out) =
+                                        (xh * xw * cin, oh * ow * cout);
+                                    let mut out = scratch.take(nb * per_out);
+                                    let xd = x.data();
+                                    let ptr = SendPtr(out.as_mut_ptr());
+                                    for_each_parallel(workers, nb, |i| {
+                                        // SAFETY: disjoint per-image chunks
+                                        let chunk = unsafe {
+                                            std::slice::from_raw_parts_mut(
+                                                ptr.0.add(i * per_out),
+                                                per_out,
+                                            )
+                                        };
+                                        let mut v = scratch.take(kernel.scratch_len());
+                                        winograd::winograd_conv2d_prepared_into(
+                                            &xd[i * per_in..(i + 1) * per_in],
+                                            (xh, xw),
+                                            kernel,
+                                            chunk,
+                                            &mut v,
+                                        );
+                                        scratch.recycle(v);
+                                    });
+                                    Tensor::new([nb, oh, ow, cout], out)
+                                }
                                 Algo::Gemm1x1 | Algo::GemmIm2col => {
+                                    let (oh, _) = same_pad(xh, kh, stride);
+                                    let (ow, _) = same_pad(xw, kw, stride);
+                                    let kdim = kh * kw * cin;
+                                    let rows = nb * oh * ow;
                                     // 1x1 stride-1 skips im2col: the patch
                                     // matrix is the feature-map batch itself
-                                    let patches = if kh == 1 && kw == 1 && stride == 1 {
-                                        let (xh, xw, _) = layer.in_hwc;
-                                        x.clone().reshape(vec![nb * xh * xw, cin])
+                                    let patch_buf = if kh == 1 && kw == 1 && stride == 1
+                                    {
+                                        None
                                     } else {
-                                        x.im2col_batch(kh, kw, stride)
+                                        let mut pb = scratch.take(rows * kdim);
+                                        im2col_batch_into(
+                                            x.data(),
+                                            (nb, xh, xw, cin),
+                                            (kh, kw, stride),
+                                            &mut pb,
+                                        );
+                                        Some(pb)
                                     };
-                                    let flat = match prep.packed.get(&id) {
-                                        Some(csr) => csr.matmul_tiled(&patches, workers),
-                                        None => {
-                                            let w2 = w
-                                                .clone()
-                                                .reshape(vec![kh * kw * cin, cout]);
-                                            patches.matmul_tiled(&w2, workers)
-                                        }
-                                    };
-                                    let (oh, _) = same_pad(layer.in_hwc.0, kh, stride);
-                                    let (ow, _) = same_pad(layer.in_hwc.1, kw, stride);
-                                    flat.reshape(vec![nb, oh, ow, cout])
+                                    let patches: &[f32] =
+                                        patch_buf.as_deref().unwrap_or(x.data());
+                                    let mut out = scratch.take(rows * cout);
+                                    if let Some(csr) = prep.packed.get(&id) {
+                                        csr.matmul_slice_into(patches, workers, &mut out);
+                                    } else if let Some(panels) = prep.panels.get(&id) {
+                                        gemm_packed_into(patches, panels, workers, &mut out);
+                                    } else {
+                                        // mismatched shared prep: the 4-D
+                                        // weight storage is the row-major
+                                        // (kdim, cout) view — no clone
+                                        gemm_into(
+                                            patches,
+                                            w.data(),
+                                            kdim,
+                                            cout,
+                                            workers,
+                                            &mut out,
+                                        );
+                                    }
+                                    if let Some(pb) = patch_buf {
+                                        scratch.recycle(pb);
+                                    }
+                                    Tensor::new([nb, oh, ow, cout], out)
                                 }
                                 // a conv anchored in a non-conv group (foreign
                                 // framework quirks): fall back to direct
@@ -737,10 +1070,13 @@ impl<'a> Executor<'a> {
                                 want: din,
                             });
                         }
-                        x.clone()
-                            .reshape(vec![nb, din])
-                            .matmul_tiled(w, workers)
-                            .reshape(vec![nb, 1, 1, dout])
+                        let mut out = scratch.take(nb * dout);
+                        if let Some(panels) = prep.panels.get(&id) {
+                            gemm_packed_into(x.data(), panels, workers, &mut out);
+                        } else {
+                            gemm_into(x.data(), w.data(), din, dout, workers, &mut out);
+                        }
+                        Tensor::new([nb, 1, 1, dout], out)
                     }
                     _ => {
                         let x = producer(&outs, layer, &input);
@@ -752,7 +1088,30 @@ impl<'a> Executor<'a> {
             }
         }
         let last = outs.last_mut().and_then(|o| o.take()).ok_or(ExecError::EmptyNetwork)?;
-        Ok(last.unstack())
+        // park every intermediate activation (and the staging buffer) for
+        // the next run before splitting the final activation out
+        scratch.recycle(input.into_data());
+        for t in outs.into_iter().flatten() {
+            scratch.recycle(t.into_data());
+        }
+        let d = last.dims();
+        debug_assert_eq!(d.len(), 4, "batched activations are rank-4");
+        let inner = [d[1], d[2], d[3]];
+        if nb == 1 {
+            // single request: hand the batch buffer itself to the caller
+            return Ok(vec![last.reshape(inner)]);
+        }
+        let per: usize = inner.iter().product();
+        if per == 0 {
+            return Ok((0..nb).map(|_| Tensor::new(inner, Vec::new())).collect());
+        }
+        let results: Vec<Tensor> = last
+            .data()
+            .chunks_exact(per)
+            .map(|chunk| Tensor::new(inner, chunk.to_vec()))
+            .collect();
+        scratch.recycle(last.into_data());
+        Ok(results)
     }
 }
 
@@ -1009,6 +1368,94 @@ mod tests {
         let mut rng = XorShift64Star::new(9);
         let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
         assert_eq!(owned.try_run(&x).unwrap(), shared.try_run(&x).unwrap());
+    }
+
+    #[test]
+    fn dense_gemm_layers_get_packed_panels() {
+        // 5x5 conv: GemmIm2col with no sparsity annotation → panel-packed
+        let net = zoo::single_conv(9, 5, 4, 6);
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        let weights = WeightSet::random(&net, 1);
+        let exec = Executor::try_new(&net, &plan, &SparsityMap::new(), &weights).unwrap();
+        assert_eq!(exec.prepared().num_panels(), 1, "dense GEMM conv must be panel-packed");
+        assert_eq!(exec.prepared().num_packed(), 0);
+        // the glue-heavy net adds an FC layer: panels cover it too
+        let net = glue_heavy_net();
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::TFLite);
+        let weights = WeightSet::random(&net, 2);
+        let exec = Executor::try_new(&net, &plan, &SparsityMap::new(), &weights).unwrap();
+        let fc_layers = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Linear { .. }))
+            .count();
+        assert!(exec.prepared().num_panels() >= fc_layers + 1);
+    }
+
+    #[test]
+    fn scratch_reuse_across_runs_is_stale_data_safe() {
+        // one executor, one arena, many different inputs: reused buffers
+        // must never leak a previous run's data into the next result
+        let net = glue_heavy_net();
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::Ours);
+        let weights = WeightSet::random(&net, 17);
+        let exec = Executor::try_new(&net, &plan, &SparsityMap::new(), &weights)
+            .unwrap()
+            .with_intra_workers(2);
+        let mut rng = XorShift64Star::new(61);
+        let (h, w, c) = net.input_hwc;
+        for round in 0..4 {
+            let x = Tensor::he_normal(vec![h, w, c], &mut rng);
+            let got = exec.try_run(&x).unwrap();
+            let fresh = Executor::try_new(&net, &plan, &SparsityMap::new(), &weights)
+                .unwrap()
+                .try_run(&x)
+                .unwrap();
+            assert_eq!(got, fresh, "round {round}: reused scratch diverged");
+        }
+        // interleave a batch through the same arena
+        let batch: Vec<Tensor> =
+            (0..3).map(|_| Tensor::he_normal(vec![h, w, c], &mut rng)).collect();
+        let got = exec.try_run_batch(&batch).unwrap();
+        for (x, g) in batch.iter().zip(&got) {
+            let fresh = Executor::try_new(&net, &plan, &SparsityMap::new(), &weights)
+                .unwrap()
+                .try_run(x)
+                .unwrap();
+            assert_eq!(g, &fresh, "batched run on reused scratch diverged");
+        }
+    }
+
+    #[test]
+    fn scratch_take_zeroes_and_counts() {
+        let s = ExecScratch::new();
+        let mut a = s.take(16);
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|&v| v == 0.0));
+        a.fill(5.0);
+        s.recycle(a);
+        let b = s.take(8); // served from the recycled capacity
+        assert!(b.iter().all(|&v| v == 0.0), "recycled buffer must be re-zeroed");
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        s.recycle(b);
+        assert_eq!(s.stats().buffers, 1);
+        assert!(s.take(0).is_empty());
+    }
+
+    #[test]
+    fn for_plan_presizes_layer_buffers() {
+        let net = glue_heavy_net();
+        let plan = compile(&net, &SparsityMap::new(), &KRYO_485, Framework::TFLite);
+        let s = ExecScratch::for_plan(&net, &plan);
+        let st = s.stats();
+        assert!(
+            st.buffers >= net.layers.len() + 1,
+            "one buffer per activation plus input staging, got {}",
+            st.buffers
+        );
+        assert_eq!((st.hits, st.misses), (0, 0));
+        assert!(st.bytes > 0, "planned buffers carry real capacity");
     }
 
     #[test]

@@ -35,8 +35,8 @@ pub mod winograd;
 pub use codegen::{Algo, ExecutionPlan, FusedGroup};
 pub use device::DeviceSpec;
 pub use executor::{
-    max_abs_diff, run_dense_reference, uniform_sparsity, ExecError, Executor, LayerWeights,
-    PreparedKernels, WeightSet,
+    max_abs_diff, run_dense_reference, uniform_sparsity, ExecError, ExecScratch, Executor,
+    LayerWeights, PreparedKernels, ScratchStats, WeightSet,
 };
 pub use frameworks::Framework;
 pub use latency::{measure, measure_plan, LatencyReport};

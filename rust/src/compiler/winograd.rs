@@ -129,6 +129,22 @@ pub struct WinogradKernel {
     cout: usize,
 }
 
+impl WinogradKernel {
+    pub fn cin(&self) -> usize {
+        self.cin
+    }
+
+    pub fn cout(&self) -> usize {
+        self.cout
+    }
+
+    /// Length of the per-invocation input-transform scratch
+    /// ([`winograd_conv2d_prepared_into`]'s `v` argument).
+    pub fn scratch_len(&self) -> usize {
+        self.cin * 16
+    }
+}
+
 /// Transform a `(3,3,cin,cout)` weight into its Winograd-domain table.
 pub fn transform_kernel(weight: &Tensor) -> WinogradKernel {
     let wd = weight.dims();
@@ -177,15 +193,38 @@ pub fn winograd_conv2d_prepared(x: &Tensor, kernel: &WinogradKernel) -> Tensor {
     let d = x.dims();
     assert_eq!(d.len(), 3, "winograd input must be (h,w,c), got {d:?}");
     let (h, w, cin) = (d[0], d[1], d[2]);
-    let (u, cout) = (&kernel.u, kernel.cout);
     assert_eq!(kernel.cin, cin, "winograd channel mismatch");
+    let (oh, _) = crate::tensor::same_pad(h, 3, 1);
+    let (ow, _) = crate::tensor::same_pad(w, 3, 1);
+    let mut out = vec![0f32; oh * ow * kernel.cout];
+    let mut v = vec![0f32; kernel.scratch_len()];
+    winograd_conv2d_prepared_into(x.data(), (h, w), kernel, &mut out, &mut v);
+    Tensor::new([oh, ow, kernel.cout], out)
+}
+
+/// [`winograd_conv2d_prepared`] into caller-provided buffers: `x` is the
+/// flat `(h, w, cin)` input, `out` the `(oh, ow, cout)` output (fully
+/// overwritten — every element is stored exactly once by the tile loop),
+/// `v` the per-invocation input-transform scratch of
+/// [`WinogradKernel::scratch_len`] floats (contents ignored). This is the
+/// allocation-free entry point the executor's scratch arena drives; the
+/// arithmetic and its order are identical to the allocating path, so
+/// results are bit-identical.
+pub fn winograd_conv2d_prepared_into(
+    xdat: &[f32],
+    (h, w): (usize, usize),
+    kernel: &WinogradKernel,
+    out: &mut [f32],
+    v: &mut [f32],
+) {
+    let cin = kernel.cin;
+    let (u, cout) = (&kernel.u, kernel.cout);
+    assert_eq!(xdat.len(), h * w * cin, "winograd input length");
     // SAME, stride 1: oh == h, pad 1 each side
     let (oh, pt) = crate::tensor::same_pad(h, 3, 1);
     let (ow, pl) = crate::tensor::same_pad(w, 3, 1);
-
-    let xdat = x.data();
-    let mut out = vec![0f32; oh * ow * cout];
-    let mut v = vec![0f32; cin * 16];
+    assert_eq!(out.len(), oh * ow * cout, "winograd out length");
+    assert_eq!(v.len(), kernel.scratch_len(), "winograd scratch length");
     let mut ti = 0;
     while ti < oh {
         let mut tj = 0;
@@ -246,7 +285,6 @@ pub fn winograd_conv2d_prepared(x: &Tensor, kernel: &WinogradKernel) -> Tensor {
         }
         ti += 2;
     }
-    Tensor::new(vec![oh, ow, cout], out)
 }
 
 #[cfg(test)]
@@ -340,6 +378,19 @@ mod tests {
         for (a, b) in wino.data().iter().zip(direct.data()) {
             assert!((a - b).abs() < 1e-3 * scale, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn into_variant_bit_identical_on_dirty_buffers() {
+        let mut rng = XorShift64Star::new(47);
+        let x = Tensor::he_normal(vec![7, 5, 3], &mut rng);
+        let w = Tensor::he_normal(vec![3, 3, 3, 4], &mut rng);
+        let kernel = transform_kernel(&w);
+        let want = winograd_conv2d_prepared(&x, &kernel);
+        let mut out = vec![f32::NAN; want.numel()];
+        let mut v = vec![f32::NAN; kernel.scratch_len()];
+        winograd_conv2d_prepared_into(x.data(), (7, 5), &kernel, &mut out, &mut v);
+        assert_eq!(&out[..], want.data(), "dirty scratch must not leak into output");
     }
 
     #[test]

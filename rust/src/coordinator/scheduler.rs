@@ -1,17 +1,341 @@
-//! Parallel candidate-evaluation scheduler.
+//! Parallel scheduler: a persistent, lazily-initialized thread pool plus
+//! the `map_parallel` / `for_each_parallel` primitives the whole crate fans
+//! work through.
 //!
-//! The paper fans fast evaluations across 40 Titan RTX GPUs; here a scoped
-//! thread pool fans them across cores (tokio is unavailable offline — plain
-//! `std::thread::scope` with a shared work index is all this needs, and it
-//! keeps the hot path allocation-free).
+//! The paper fans fast evaluations across 40 Titan RTX GPUs; here they fan
+//! across cores. Earlier revisions spawned fresh OS threads per call via
+//! `std::thread::scope`, which is fine for coarse search-evaluation fan-out
+//! but dominates the cost of a single row-tiled GEMM inside the serving hot
+//! path (thread spawn + join is tens of microseconds; a row tile is often
+//! less). [`ThreadPool`] replaces that with parked workers woken by a
+//! condvar: the first parallel call spawns the pool once, every later call
+//! only enqueues a job and parks on its completion latch.
+//!
+//! Contract (unchanged from the scoped implementation):
+//! * `map_parallel(workers, items, f)` preserves item order and degrades to
+//!   a plain sequential map for `workers <= 1` or tiny inputs;
+//! * at most `workers` threads (including the caller, which participates)
+//!   run one call's tasks concurrently;
+//! * a panicking task does not kill any pool worker — the payload is
+//!   captured and re-raised on the *calling* thread after the remaining
+//!   tasks drain, so the pool survives and later calls keep working.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A raw `*mut f32` that may cross threads. Used by the kernel `_into`
+/// paths to hand each task a *disjoint* row range of one output buffer;
+/// every user must guarantee disjointness (see call sites).
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// One type-erased parallel-for job: tasks `0..total` claimed off an atomic
+/// counter by up to `cap` concurrent runners (pool workers + the
+/// submitter).
+struct Job {
+    /// Erased `&'caller F` (thin pointer; `call` below re-types it). The
+    /// submitter blocks in [`ThreadPool::scope`] until every claimed task
+    /// has returned, so no worker ever calls through this pointer after
+    /// the caller's stack frame (which owns the closure and everything it
+    /// borrows) unwinds.
+    data: *const (),
+    /// Monomorphized trampoline that casts `data` back to `&F` and calls
+    /// it with the task index.
+    call: unsafe fn(*const (), usize),
+    total: usize,
+    /// Max concurrent runners — the `workers` contract of `map_parallel`,
+    /// counting the submitting thread.
+    cap: usize,
+    /// Next unclaimed task index (may race past `total`; claims beyond it
+    /// are no-ops).
+    next: AtomicUsize,
+    /// Tasks that have *returned* (claimed != returned while running).
+    done: AtomicUsize,
+    /// Current runner count; incremented under the pool's state lock so
+    /// the `cap` check is atomic.
+    runners: AtomicUsize,
+    /// First captured panic payload, re-raised by the submitter.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+    finished: Mutex<bool>,
+    finished_cv: Condvar,
+}
+
+// SAFETY: `data` is only dereferenced (through `call`) while the
+// submitting frame is alive (see the field docs), and the closure it
+// points to is `Sync`; everything else is atomics/locks.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// # Safety
+/// `data` must point to a live `F` that is safe to call from this thread
+/// (`F: Sync` and the referent outlives the call).
+unsafe fn call_task<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
+}
+
+/// Claim and run tasks until the job is exhausted. Shared by pool workers
+/// and the submitting thread.
+fn run_tasks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.total {
+            break;
+        }
+        // SAFETY: the submitter keeps the closure alive until `finished`;
+        // `call` re-types `data` to the closure it was erased from.
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| unsafe {
+            (job.call)(job.data, i)
+        })) {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.total {
+            let mut fin = job.finished.lock().unwrap();
+            *fin = true;
+            job.finished_cv.notify_all();
+        }
+    }
+}
+
+struct PoolState {
+    queue: Vec<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    cvar: Condvar,
+    spawned: AtomicUsize,
+}
+
+/// Persistent worker pool. One global instance ([`ThreadPool::global`])
+/// backs `map_parallel` / `for_each_parallel`; private instances exist for
+/// tests. Workers park on a condvar between jobs and are reused for the
+/// lifetime of the pool — no per-call thread spawn or join.
+pub struct ThreadPool {
+    inner: Arc<PoolInner>,
+    threads: usize,
+    jobs: AtomicU64,
+}
+
+fn worker_loop(inner: Arc<PoolInner>) {
+    loop {
+        let job: Arc<Job> = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                let found = st.queue.iter().find(|j| {
+                    j.next.load(Ordering::Relaxed) < j.total
+                        && j.runners.load(Ordering::Relaxed) < j.cap
+                });
+                if let Some(j) = found {
+                    j.runners.fetch_add(1, Ordering::Relaxed);
+                    break j.clone();
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = inner.cvar.wait(st).unwrap();
+            }
+        };
+        run_tasks(&job);
+        job.runners.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl ThreadPool {
+    /// Spawn a pool of `threads` parked workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState { queue: Vec::new(), shutdown: false }),
+            cvar: Condvar::new(),
+            spawned: AtomicUsize::new(0),
+        });
+        for i in 0..threads {
+            let inner = inner.clone();
+            // count at spawn time, on this thread: `threads_spawned` is
+            // exact the moment `new` returns (counting inside worker_loop
+            // would race the reuse tests against late-starting workers)
+            inner.spawned.fetch_add(1, Ordering::SeqCst);
+            std::thread::Builder::new()
+                .name(format!("npas-pool-{i}"))
+                .spawn(move || worker_loop(inner))
+                .expect("spawning pool worker");
+        }
+        ThreadPool { inner, threads, jobs: AtomicU64::new(0) }
+    }
+
+    /// The process-wide pool, spawned on first use with `cores - 1`
+    /// workers (the submitting thread is the extra runner).
+    pub fn global() -> &'static ThreadPool {
+        static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            ThreadPool::new(cores.saturating_sub(1).max(1))
+        })
+    }
+
+    /// Configured worker count (excluding submitters).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// OS threads this pool has spawned (counted at spawn time, so the
+    /// value is exact as soon as `new` returns) — stays equal to
+    /// [`ThreadPool::threads`] forever; the reuse tests pin that no call
+    /// path respawns workers.
+    pub fn threads_spawned(&self) -> usize {
+        self.inner.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Parallel jobs completed over the pool's lifetime (telemetry).
+    pub fn jobs_completed(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Run `task(0..total)` with up to `workers` concurrent runners (pool
+    /// workers plus the calling thread, which participates). Blocks until
+    /// every task has returned; panics re-raise here with the original
+    /// payload. Task index claiming is unordered; callers needing ordered
+    /// *results* write them to per-index slots (see [`map_parallel`]).
+    pub fn scope<F: Fn(usize) + Sync>(&self, workers: usize, total: usize, task: &F) {
+        if total == 0 {
+            return;
+        }
+        if workers <= 1 || total == 1 {
+            for i in 0..total {
+                task(i);
+            }
+            return;
+        }
+        // Erasing the borrow is sound because this frame blocks on
+        // `finished` below, and workers stop calling through the pointer
+        // once `next >= total` (every in-flight call is counted in `done`).
+        let job = Arc::new(Job {
+            data: task as *const F as *const (),
+            call: call_task::<F>,
+            total,
+            cap: workers.min(total),
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            runners: AtomicUsize::new(1), // the submitter
+            panic: Mutex::new(None),
+            finished: Mutex::new(false),
+            finished_cv: Condvar::new(),
+        });
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.queue.push(job.clone());
+        }
+        self.inner.cvar.notify_all();
+        // participate, then wait out any straggler workers
+        run_tasks(&job);
+        job.runners.fetch_sub(1, Ordering::Relaxed);
+        {
+            let mut fin = job.finished.lock().unwrap();
+            while !*fin {
+                fin = job.finished_cv.wait(fin).unwrap();
+            }
+        }
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if let Some(pos) = st.queue.iter().position(|j| Arc::ptr_eq(j, &job)) {
+                st.queue.swap_remove(pos);
+            }
+        }
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        let payload = job.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.inner.cvar.notify_all();
+        // workers are detached; they exit once the queue drains
+    }
+}
 
 /// Map `f` over `items` with up to `workers` threads, preserving order.
 /// `workers <= 1` degrades to a plain sequential map (used by evaluators
-/// whose state cannot cross threads, e.g. the PJRT-backed one).
+/// whose state cannot cross threads, e.g. the PJRT-backed one). Parallel
+/// calls route through the persistent [`ThreadPool::global`] — no threads
+/// are spawned per call.
 pub fn map_parallel<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if workers <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let results: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    let task = |i: usize| {
+        let r = f(&items[i]);
+        *results[i].lock().unwrap() = Some(r);
+    };
+    ThreadPool::global().scope(workers, items.len(), &task);
+    results.into_iter().map(|m| m.into_inner().unwrap().expect("task ran")).collect()
+}
+
+/// Index-based parallel for: run `f(0..tasks)` with up to `workers`
+/// concurrent runners on the global pool. The allocation-free counterpart
+/// of [`map_parallel`] — the kernel `_into` paths use it to write disjoint
+/// row ranges of one preallocated output with zero per-call bookkeeping.
+pub fn for_each_parallel<F>(workers: usize, tasks: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if workers <= 1 || tasks <= 1 {
+        for i in 0..tasks {
+            f(i);
+        }
+        return;
+    }
+    ThreadPool::global().scope(workers, tasks, &f);
+}
+
+/// Split `rows` into contiguous tiles of at least `min_tile` rows and run
+/// `f(r0, r1)` per tile with up to `workers` runners. Tiles are disjoint
+/// and cover `0..rows`; small inputs run as one sequential tile. The GEMM
+/// `_into` kernels hang off this so the tiling policy lives in one place.
+pub fn for_each_row_tile<F>(workers: usize, rows: usize, min_tile: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if rows == 0 {
+        return;
+    }
+    if workers <= 1 || rows < 2 * min_tile.max(1) {
+        f(0, rows);
+        return;
+    }
+    let tile = rows.div_ceil(workers).max(min_tile.max(1));
+    let ntiles = rows.div_ceil(tile);
+    for_each_parallel(workers, ntiles, |t| {
+        let r0 = t * tile;
+        f(r0, (r0 + tile).min(rows));
+    });
+}
+
+/// The historical spawn-per-call implementation (`std::thread::scope` with
+/// a shared work index), kept as the *baseline* the pool is benchmarked
+/// against (`benches/exec_kernels.rs`). Semantically identical to
+/// [`map_parallel`]; do not use it on hot paths.
+pub fn map_parallel_scoped<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
@@ -63,7 +387,6 @@ mod tests {
         let items: Vec<usize> = (0..57).collect();
         let out = map_parallel(8, &items, |_| {
             count.fetch_add(1, Ordering::Relaxed);
-            ()
         });
         assert_eq!(out.len(), 57);
         assert_eq!(count.load(Ordering::Relaxed), 57);
@@ -74,5 +397,131 @@ mod tests {
         let empty: Vec<usize> = vec![];
         assert!(map_parallel(4, &empty, |&x| x).is_empty());
         assert_eq!(map_parallel(4, &[7], |&x| x), vec![7]);
+    }
+
+    #[test]
+    fn scoped_baseline_matches_pool() {
+        let items: Vec<usize> = (0..33).collect();
+        assert_eq!(
+            map_parallel_scoped(4, &items, |&x| x * 3),
+            map_parallel(4, &items, |&x| x * 3)
+        );
+    }
+
+    #[test]
+    fn for_each_covers_every_index() {
+        let hits: Vec<AtomicUsize> = (0..41).map(|_| AtomicUsize::new(0)).collect();
+        for_each_parallel(4, hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn row_tiles_partition_exactly() {
+        for rows in [0usize, 1, 7, 16, 61, 128] {
+            for workers in [1usize, 2, 3, 8] {
+                let covered: Vec<AtomicUsize> =
+                    (0..rows).map(|_| AtomicUsize::new(0)).collect();
+                for_each_row_tile(workers, rows, 8, |r0, r1| {
+                    assert!(r0 < r1 || rows == 0, "empty tile {r0}..{r1}");
+                    for c in covered.iter().take(r1).skip(r0) {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                for (r, c) in covered.iter().enumerate() {
+                    assert_eq!(
+                        c.load(Ordering::Relaxed),
+                        1,
+                        "row {r} rows={rows} workers={workers}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reused_across_calls_no_respawn() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicUsize::new(0);
+        let bump = |_: usize| {
+            count.fetch_add(1, Ordering::Relaxed);
+        };
+        pool.scope(4, 16, &bump);
+        let spawned_after_first = pool.threads_spawned();
+        assert!(spawned_after_first <= pool.threads());
+        for _ in 0..50 {
+            pool.scope(4, 16, &bump);
+        }
+        assert_eq!(
+            pool.threads_spawned(),
+            spawned_after_first,
+            "pool must not respawn threads per call"
+        );
+        assert_eq!(count.load(Ordering::Relaxed), 51 * 16);
+        assert_eq!(pool.jobs_completed(), 51);
+    }
+
+    #[test]
+    fn panic_is_contained_and_reraised() {
+        let pool = ThreadPool::new(2);
+        let boom = |i: usize| {
+            if i == 3 {
+                panic!("task 3 exploded");
+            }
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| pool.scope(4, 8, &boom)));
+        let payload = result.expect_err("panic must propagate to the submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "task 3 exploded");
+        // the pool survives: same workers, later jobs still run
+        let spawned = pool.threads_spawned();
+        let count = AtomicUsize::new(0);
+        let bump = |_: usize| {
+            count.fetch_add(1, Ordering::Relaxed);
+        };
+        pool.scope(4, 10, &bump);
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+        assert_eq!(pool.threads_spawned(), spawned, "panic must not kill workers");
+    }
+
+    #[test]
+    fn map_parallel_panic_propagates_but_pool_survives() {
+        let items: Vec<usize> = (0..16).collect();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            map_parallel(4, &items, |&x| {
+                if x == 5 {
+                    panic!("item 5");
+                }
+                x
+            })
+        }));
+        assert!(r.is_err(), "panic inside f must reach the caller");
+        // the global pool keeps serving
+        let out = map_parallel(4, &items, |&x| x + 1);
+        assert_eq!(out, (1..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        // several threads hammering the global pool at once (the serving
+        // engine's shape: every worker row-tiles its own GEMMs)
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let items: Vec<usize> = (0..64).collect();
+                    for _ in 0..20 {
+                        let out = map_parallel(3, &items, |&x| x * 2 + t);
+                        assert_eq!(out[10], 20 + t);
+                        assert_eq!(out.len(), 64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

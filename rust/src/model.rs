@@ -38,8 +38,9 @@ use crate::compiler::codegen::compile;
 use crate::compiler::device::{ADRENO_640, KRYO_485};
 use crate::compiler::latency::measure_plan;
 use crate::compiler::{
-    run_dense_reference, uniform_sparsity, DeviceSpec, ExecutionPlan, Executor, Framework,
-    LatencyReport, PlanCache, PlanCacheStats, PreparedKernels, SparsityMap, WeightSet,
+    run_dense_reference, uniform_sparsity, DeviceSpec, ExecScratch, ExecutionPlan, Executor,
+    Framework, LatencyReport, PlanCache, PlanCacheStats, PreparedKernels, ScratchStats,
+    SparsityMap, WeightSet,
 };
 use crate::error::{NpasError, Result};
 use crate::graph::Network;
@@ -221,12 +222,16 @@ impl CompiledModelBuilder {
             PreparedKernels::try_prepare(&network, &plan, &sparsity, &weights)
                 .map_err(NpasError::Exec)?,
         );
+        // compile-time scratch planning: walk the plan's shapes once so
+        // steady-state `run`/`run_batch` calls reuse one arena
+        let scratch = Arc::new(ExecScratch::for_plan(&network, &plan));
         Ok(CompiledModel {
             net: network,
             sparsity,
             plan,
             weights,
             prepared,
+            scratch,
             device,
             framework,
             cache,
@@ -265,6 +270,10 @@ pub struct CompiledModel {
     plan: Arc<ExecutionPlan>,
     weights: WeightSet,
     prepared: Arc<PreparedKernels>,
+    /// Shape-planned buffer arena shared by every `run`/`run_batch` call
+    /// (executors are rebuilt per call; the arena persists, so steady-state
+    /// conv/GEMM execution allocates nothing).
+    scratch: Arc<ExecScratch>,
     device: DeviceSpec,
     framework: Framework,
     cache: Option<Arc<PlanCache>>,
@@ -302,6 +311,7 @@ impl CompiledModel {
     fn executor(&self) -> Executor<'_> {
         Executor::with_prepared(&self.net, &self.plan, &self.weights, &self.prepared)
             .with_intra_workers(self.intra_workers)
+            .with_scratch(&self.scratch)
     }
 
     /// Execute one `(h, w, c)` input through the compiled plan.
@@ -426,6 +436,14 @@ impl CompiledModel {
     /// [`CompiledModelBuilder::plan_cache`].
     pub fn cache_stats(&self) -> Option<PlanCacheStats> {
         self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Counters of this model's scratch arena: in the steady state,
+    /// repeated `run`/`run_batch` calls stop missing (every buffer is
+    /// served from the pool) — the property the allocation-free tests and
+    /// `BENCH_5.json` report.
+    pub fn scratch_stats(&self) -> ScratchStats {
+        self.scratch.stats()
     }
 
     pub fn network(&self) -> &Network {

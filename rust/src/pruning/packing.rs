@@ -176,38 +176,49 @@ impl BlockCsr {
         Tensor::new(vec![m, n], out)
     }
 
-    /// [`BlockCsr::matmul`] with the M dimension split into row tiles
-    /// mapped across `workers` threads — the packed counterpart of
+    /// [`BlockCsr::matmul`] with the M dimension split into row tiles run
+    /// by the persistent pool, each tile writing its rows **in place** into
+    /// disjoint ranges of one output buffer — the packed counterpart of
     /// [`Tensor::matmul_tiled`], bit-identical to the sequential call for
     /// every `workers` value (output rows are independent).
     pub fn matmul_tiled(&self, x: &Tensor, workers: usize) -> Tensor {
-        const MIN_TILE_ROWS: usize = 8;
         let d = x.dims();
         assert_eq!(d.len(), 2, "BlockCsr::matmul_tiled lhs must be 2-D, got {d:?}");
         let (m, k) = (d[0], d[1]);
         assert_eq!(k, self.rows, "inner dims {k} vs {}", self.rows);
-        let n = self.cols;
-        if workers <= 1 || m < 2 * MIN_TILE_ROWS || k == 0 || n == 0 {
-            return self.matmul(x);
+        let mut out = vec![0f32; m * self.cols];
+        self.matmul_slice_into(x.data(), workers, &mut out);
+        Tensor::new([m, self.cols], out)
+    }
+
+    /// Sparse GEMM into a caller-provided buffer: `xrows` holds
+    /// `out.len() / cols` rows of length `rows`, `out` is fully
+    /// overwritten. Row tiles go to the pool and write disjoint ranges of
+    /// `out` in place — the allocation-free entry point the executor's
+    /// scratch arena drives.
+    pub fn matmul_slice_into(&self, xrows: &[f32], workers: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        let (k, n) = (self.rows, self.cols);
+        if k == 0 || n == 0 {
+            return;
         }
-        let tile = m.div_ceil(workers).max(MIN_TILE_ROWS);
-        let ranges: Vec<(usize, usize)> =
-            (0..m).step_by(tile).map(|r0| (r0, (r0 + tile).min(m))).collect();
-        let xd = x.data();
-        let chunks = crate::coordinator::scheduler::map_parallel(
+        let m = out.len() / n;
+        debug_assert_eq!(out.len(), m * n, "out length {} not a multiple of n={n}", out.len());
+        debug_assert_eq!(xrows.len(), m * k, "lhs length {} vs {m}x{k}", xrows.len());
+        let ptr = crate::coordinator::scheduler::SendPtr(out.as_mut_ptr());
+        crate::coordinator::scheduler::for_each_row_tile(
             workers,
-            &ranges,
-            |&(r0, r1)| {
-                let mut out = vec![0f32; (r1 - r0) * n];
-                self.matmul_rows(&xd[r0 * k..r1 * k], &mut out);
-                out
+            m,
+            crate::tensor::ops::MIN_TILE_ROWS,
+            |r0, r1| {
+                // SAFETY: row tiles are disjoint and in-bounds
+                // (for_each_row_tile partitions 0..m exactly).
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(r0 * n), (r1 - r0) * n)
+                };
+                self.matmul_rows(&xrows[r0 * k..r1 * k], chunk);
             },
         );
-        let mut out = Vec::with_capacity(m * n);
-        for c in &chunks {
-            out.extend_from_slice(c);
-        }
-        Tensor::new(vec![m, n], out)
     }
 }
 
@@ -286,6 +297,21 @@ mod tests {
                 assert_eq!(got.dims(), want.dims());
                 assert_eq!(got.data(), want.data(), "m={m} workers={workers}");
             }
+        }
+    }
+
+    #[test]
+    fn slice_into_overwrites_dirty_buffer() {
+        let mut rng = XorShift64Star::new(7);
+        let w = masked(36, 20, 3.0, 8);
+        let packed = BlockCsr::pack(&w, 4, 8);
+        let x = Tensor::he_normal(vec![21, 36], &mut rng);
+        let want = packed.matmul(&x);
+        let mut out = vec![f32::NAN; 21 * 20];
+        for workers in [1usize, 3] {
+            packed.matmul_slice_into(x.data(), workers, &mut out);
+            assert_eq!(&out[..], want.data(), "workers={workers}");
+            out.fill(f32::NAN);
         }
     }
 

@@ -9,10 +9,12 @@
 //! Worker threads pop requests and **micro-batch** them: the first request
 //! is taken immediately, then the worker lingers up to `max_wait` (or
 //! until `max_batch` requests are in hand) before executing the whole
-//! batch through [`Executor::try_run_batch`] — one im2col + GEMM (dense or
-//! packed block-CSR) per conv layer for the entire batch, with GEMM row
-//! tiles and per-image kernels fanned across
-//! `coordinator::scheduler::map_parallel` (`intra_workers`). Outputs are
+//! batch through [`Executor::try_run_batch`] — one im2col + GEMM (dense
+//! panel-packed or block-CSR) per conv layer for the entire batch, with
+//! GEMM row tiles and per-image kernels fanned across the persistent
+//! `coordinator::scheduler` thread pool (`intra_workers`), and every
+//! worker reusing a per-thread [`ExecScratch`] arena so the steady-state
+//! batch loop performs no conv/GEMM allocations. Outputs are
 //! bit-identical to sequential [`Executor::try_run`] calls regardless of
 //! how requests get grouped into batches or how many threads tile a
 //! kernel, so serving is deterministic per input — the property the
@@ -35,7 +37,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::compiler::{ExecError, Executor, ExecutionPlan, PreparedKernels, WeightSet};
+use crate::compiler::{
+    ExecError, ExecScratch, Executor, ExecutionPlan, PreparedKernels, WeightSet,
+};
 use crate::graph::Network;
 use crate::tensor::Tensor;
 
@@ -248,10 +252,20 @@ impl InferenceEngine {
 
     /// Submit every input, then wait for all responses (in input order).
     /// Submitting before waiting lets the workers micro-batch the set; a
-    /// per-request failure shows up as that slot's `Err`.
+    /// per-request failure shows up as that slot's `Err`. Clones each
+    /// input at submission — callers that can give up ownership should use
+    /// [`InferenceEngine::run_batch_owned`].
     pub fn run_batch(&self, inputs: &[Tensor]) -> Vec<Result<Tensor, EngineError>> {
+        self.run_batch_owned(inputs.to_vec())
+    }
+
+    /// [`InferenceEngine::run_batch`] taking ownership of the inputs, so
+    /// request tensors move straight into the queue (and from there their
+    /// rows are copied once into the executor's batch buffer) without an
+    /// extra clone per activation.
+    pub fn run_batch_owned(&self, inputs: Vec<Tensor>) -> Vec<Result<Tensor, EngineError>> {
         let pending: Vec<Result<PendingResponse, EngineError>> =
-            inputs.iter().map(|x| self.submit(x.clone())).collect();
+            inputs.into_iter().map(|x| self.submit(x)).collect();
         pending.into_iter().map(|p| p.and_then(PendingResponse::wait)).collect()
     }
 
@@ -316,8 +330,12 @@ impl Drop for InferenceEngine {
 
 fn worker_loop(shared: &EngineShared, rx: &Mutex<Receiver<Request>>, cfg: &EngineConfig) {
     let m = &shared.model;
+    // per-worker scratch arena, shapes planned once at thread start: the
+    // steady-state batch loop below performs no conv/GEMM allocations
+    let scratch = ExecScratch::for_plan(&m.net, &m.plan);
     let exec = Executor::with_prepared(&m.net, &m.plan, &m.weights, &m.prepared)
-        .with_intra_workers(cfg.intra_workers);
+        .with_intra_workers(cfg.intra_workers)
+        .with_scratch(&scratch);
     loop {
         let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
         {

@@ -9,7 +9,7 @@ pub mod ops;
 pub mod rng;
 pub mod shape;
 
-pub use ops::same_pad;
+pub use ops::{same_pad, PackedB, PANEL_WIDTH};
 pub use rng::XorShift64Star;
 pub use shape::Shape;
 

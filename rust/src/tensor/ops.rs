@@ -24,7 +24,16 @@ pub fn same_pad(in_size: usize, k: usize, stride: usize) -> (usize, usize) {
 
 /// Row tiles smaller than this are not worth a thread handoff; also the
 /// floor [`Tensor::matmul_tiled`] uses when deciding to stay sequential.
-const MIN_TILE_ROWS: usize = 8;
+pub(crate) const MIN_TILE_ROWS: usize = 8;
+
+/// Column width of one packed-B panel (see [`PackedB`]). Eight f32 lanes —
+/// two SSE / one AVX vector — is the width PatDNN-style register tiling
+/// targets on mobile CPUs.
+pub const PANEL_WIDTH: usize = 8;
+
+/// Rows of A processed per micro-kernel step: each loaded B panel row is
+/// reused against this many A rows (load-redundancy elimination).
+const MICRO_ROWS: usize = 4;
 
 /// The shared im2col patch-extraction loop: lower one `(h, w, c)` image
 /// (`src`) into its `(oh*ow, kh*kw*c)` patch rows (`dst`, zero-initialized)
@@ -78,6 +87,218 @@ fn matmul_rows(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
             let brow = &b[kk * n..(kk + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
                 *o += av * bv;
+            }
+        }
+    }
+}
+
+/// A `(k, n)` GEMM right-hand side repacked into contiguous column panels
+/// of [`PANEL_WIDTH`] columns: panel `p` stores rows `0..k` of columns
+/// `p*W..(p+1)*W` back to back (ragged last panel zero-padded). Packing is
+/// done **once** per weight matrix (`compiler::PreparedKernels`) and reused
+/// across workers, requests and batches; the micro-kernel then streams one
+/// cache-resident panel per output block instead of striding across the
+/// full unblocked B per output row.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a 2-D `(k, n)` tensor.
+    pub fn pack(b: &Tensor) -> PackedB {
+        let d = b.dims();
+        assert_eq!(d.len(), 2, "PackedB packs 2-D matrices, got {d:?}");
+        PackedB::from_slice(b.data(), d[0], d[1])
+    }
+
+    /// Pack a row-major `(k, n)` slice (the executor packs conv weights
+    /// straight from their 4-D storage — the im2col view is the same
+    /// buffer).
+    pub fn from_slice(b: &[f32], k: usize, n: usize) -> PackedB {
+        assert_eq!(b.len(), k * n, "PackedB slice length {} vs {k}x{n}", b.len());
+        if k == 0 || n == 0 {
+            // degenerate matrix: gemm_packed_into just zero-fills
+            return PackedB { k, n, data: Vec::new() };
+        }
+        let npanels = n.div_ceil(PANEL_WIDTH);
+        let mut data = vec![0f32; npanels * k * PANEL_WIDTH];
+        for (p, panel) in data.chunks_exact_mut(k * PANEL_WIDTH).enumerate() {
+            let c0 = p * PANEL_WIDTH;
+            let w = PANEL_WIDTH.min(n - c0);
+            for kk in 0..k {
+                panel[kk * PANEL_WIDTH..kk * PANEL_WIDTH + w]
+                    .copy_from_slice(&b[kk * n + c0..kk * n + c0 + w]);
+            }
+        }
+        PackedB { k, n, data }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Storage footprint of the packed panels (telemetry for the benches).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// The packed-panel GEMM micro-kernel: `a` holds `a.len() / k` rows of
+/// length `k`, `out` the matching rows of length `n` — **fully
+/// overwritten**. Per [`MICRO_ROWS`]x[`PANEL_WIDTH`] output block the
+/// reduction runs `k` ascending with the same zero-skip as [`matmul_rows`],
+/// so per output element the float addition sequence is *identical* to the
+/// unpacked kernel and results are bit-identical; the blocking only changes
+/// which rows share each loaded B panel line.
+fn matmul_rows_packed(a: &[f32], bp: &PackedB, out: &mut [f32]) {
+    let (k, n) = (bp.k, bp.n);
+    debug_assert!(k > 0 && n > 0, "caller guards degenerate dims");
+    let m = a.len() / k;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    let mut r0 = 0;
+    while r0 < m {
+        let mr = MICRO_ROWS.min(m - r0);
+        for (p, panel) in bp.data.chunks_exact(k * PANEL_WIDTH).enumerate() {
+            let c0 = p * PANEL_WIDTH;
+            let w = PANEL_WIDTH.min(n - c0);
+            let mut acc = [[0f32; PANEL_WIDTH]; MICRO_ROWS];
+            for (kk, brow) in panel.chunks_exact(PANEL_WIDTH).enumerate() {
+                for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(r0 + r) * k + kk];
+                    if av == 0.0 {
+                        continue; // exact no-op contribution
+                    }
+                    for (o, &bv) in accr.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate().take(mr) {
+                out[(r0 + r) * n + c0..(r0 + r) * n + c0 + w]
+                    .copy_from_slice(&accr[..w]);
+            }
+        }
+        r0 += mr;
+    }
+}
+
+/// Row-tiled GEMM into a caller-provided buffer: `a (m, k) x b (k, n)` into
+/// `out` (length `m * n`, contents ignored — fully overwritten). Row tiles
+/// are written in place through disjoint ranges of `out`; no per-tile
+/// buffers, no serial copy. Bit-identical to [`Tensor::matmul`] for every
+/// `workers` value.
+pub fn gemm_into(a: &[f32], b: &[f32], k: usize, n: usize, workers: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    if k == 0 || n == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    debug_assert_eq!(out.len(), m * n, "out length {} not a multiple of n={n}", out.len());
+    debug_assert_eq!(a.len(), m * k, "lhs length {} vs {m}x{k}", a.len());
+    let ptr = crate::coordinator::scheduler::SendPtr(out.as_mut_ptr());
+    crate::coordinator::scheduler::for_each_row_tile(workers, m, MIN_TILE_ROWS, |r0, r1| {
+        // SAFETY: row tiles are disjoint and in-bounds (for_each_row_tile
+        // partitions 0..m exactly).
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r0 * n), (r1 - r0) * n) };
+        matmul_rows(&a[r0 * k..r1 * k], b, k, n, chunk);
+    });
+}
+
+/// [`gemm_into`] against a pre-packed right-hand side — the executor's
+/// dense conv/FC hot path: panels packed once, reused every call, row tiles
+/// written in place. Bit-identical to [`gemm_into`] / [`Tensor::matmul`].
+pub fn gemm_packed_into(a: &[f32], bp: &PackedB, workers: usize, out: &mut [f32]) {
+    let (k, n) = (bp.k, bp.n);
+    if k == 0 || n == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let m = out.len() / n;
+    debug_assert_eq!(out.len(), m * n, "out length {} not a multiple of n={n}", out.len());
+    debug_assert_eq!(a.len(), m * k, "lhs length {} vs {m}x{k}", a.len());
+    let ptr = crate::coordinator::scheduler::SendPtr(out.as_mut_ptr());
+    crate::coordinator::scheduler::for_each_row_tile(workers, m, MIN_TILE_ROWS, |r0, r1| {
+        // SAFETY: disjoint row tiles (see gemm_into).
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r0 * n), (r1 - r0) * n) };
+        matmul_rows_packed(&a[r0 * k..r1 * k], bp, chunk);
+    });
+}
+
+/// Batched im2col into a caller-provided buffer: lower a `(nb, h, w, c)`
+/// feature-map batch (given as a flat slice) to the `(nb*oh*ow, kh*kw*c)`
+/// patch matrix in `dst` (length checked; contents ignored — zeroed then
+/// filled). The allocation-free core of [`Tensor::im2col_batch`].
+pub fn im2col_batch_into(
+    src: &[f32],
+    (nb, h, w, c): (usize, usize, usize, usize),
+    (kh, kw, stride): (usize, usize, usize),
+    dst: &mut [f32],
+) {
+    let (oh, pt) = same_pad(h, kh, stride);
+    let (ow, pl) = same_pad(w, kw, stride);
+    let kdim = kh * kw * c;
+    let img_in = h * w * c;
+    let img_out = oh * ow * kdim;
+    assert_eq!(src.len(), nb * img_in, "im2col src length");
+    assert_eq!(dst.len(), nb * img_out, "im2col dst length");
+    dst.fill(0.0); // padding taps must read 0 even on a reused buffer
+    for bi in 0..nb {
+        im2col_image(
+            &src[bi * img_in..(bi + 1) * img_in],
+            &mut dst[bi * img_out..(bi + 1) * img_out],
+            (h, w, c),
+            (kh, kw, stride),
+            (oh, ow),
+            (pt, pl),
+        );
+    }
+}
+
+/// Depthwise convolution into a caller-provided buffer: `(h, w, c)` input
+/// slice times a `(kh, kw, c)` kernel slice, SAME padding, `out` fully
+/// overwritten. The allocation-free core of [`Tensor::conv2d_depthwise`].
+pub fn depthwise_conv_into(
+    src: &[f32],
+    (h, w, c): (usize, usize, usize),
+    wt: &[f32],
+    (kh, kw, stride): (usize, usize, usize),
+    out: &mut [f32],
+) {
+    let (oh, pt) = same_pad(h, kh, stride);
+    let (ow, pl) = same_pad(w, kw, stride);
+    assert_eq!(src.len(), h * w * c, "depthwise src length");
+    assert_eq!(wt.len(), kh * kw * c, "depthwise weight length");
+    assert_eq!(out.len(), oh * ow * c, "depthwise out length");
+    out.fill(0.0);
+    for oi in 0..oh {
+        for oj in 0..ow {
+            let orow = &mut out[(oi * ow + oj) * c..(oi * ow + oj + 1) * c];
+            for ki in 0..kh {
+                let iy = (oi * stride + ki) as isize - pt as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kj in 0..kw {
+                    let ix = (oj * stride + kj) as isize - pl as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xrow = &src[(iy as usize * w + ix as usize) * c..][..c];
+                    let wrow = &wt[(ki * kw + kj) * c..][..c];
+                    for ((o, &xv), &wv) in orow.iter_mut().zip(xrow).zip(wrow) {
+                        *o += xv * wv;
+                    }
+                }
             }
         }
     }
@@ -181,12 +402,13 @@ impl Tensor {
         Tensor::new(vec![m, n], out)
     }
 
-    /// [`Tensor::matmul`] with the M dimension split into row tiles mapped
-    /// across `workers` threads (`coordinator::scheduler::map_parallel`).
-    /// Output rows are independent and each is produced by the same row
-    /// kernel, so the result is bit-identical to the sequential GEMM for
-    /// every `workers` value; `workers <= 1` (or a small M) short-circuits
-    /// to the plain call.
+    /// [`Tensor::matmul`] with the M dimension split into row tiles run by
+    /// the persistent pool (`coordinator::scheduler`), each tile writing
+    /// its rows **in place** into disjoint ranges of one output buffer —
+    /// no per-tile allocations, no serial gather copy. Output rows are
+    /// independent and each is produced by the same row kernel, so the
+    /// result is bit-identical to the sequential GEMM for every `workers`
+    /// value.
     pub fn matmul_tiled(&self, other: &Tensor, workers: usize) -> Tensor {
         let (da, db) = (self.dims(), other.dims());
         assert_eq!(da.len(), 2, "matmul_tiled lhs must be 2-D, got {da:?}");
@@ -194,28 +416,36 @@ impl Tensor {
         let (m, k) = (da[0], da[1]);
         let (k2, n) = (db[0], db[1]);
         assert_eq!(k, k2, "matmul_tiled inner dims {k} vs {k2}");
-        if workers <= 1 || m < 2 * MIN_TILE_ROWS || k == 0 || n == 0 {
-            return self.matmul(other);
-        }
-        let tile = m.div_ceil(workers).max(MIN_TILE_ROWS);
-        let ranges: Vec<(usize, usize)> =
-            (0..m).step_by(tile).map(|r0| (r0, (r0 + tile).min(m))).collect();
-        let a = self.data();
-        let b = other.data();
-        let chunks = crate::coordinator::scheduler::map_parallel(
-            workers,
-            &ranges,
-            |&(r0, r1)| {
-                let mut out = vec![0f32; (r1 - r0) * n];
-                matmul_rows(&a[r0 * k..r1 * k], b, k, n, &mut out);
-                out
-            },
-        );
-        let mut out = Vec::with_capacity(m * n);
-        for c in &chunks {
-            out.extend_from_slice(c);
-        }
-        Tensor::new(vec![m, n], out)
+        let mut out = vec![0f32; m * n];
+        gemm_into(self.data(), other.data(), k, n, workers, &mut out);
+        Tensor::new([m, n], out)
+    }
+
+    /// [`Tensor::matmul_tiled`] into a caller-provided buffer (length
+    /// `m * n`, fully overwritten) — the allocation-free entry point the
+    /// executor's scratch arena drives.
+    pub fn matmul_into(&self, other: &Tensor, workers: usize, out: &mut [f32]) {
+        let (da, db) = (self.dims(), other.dims());
+        assert_eq!(da.len(), 2, "matmul_into lhs must be 2-D, got {da:?}");
+        assert_eq!(db.len(), 2, "matmul_into rhs must be 2-D, got {db:?}");
+        let (m, k) = (da[0], da[1]);
+        let (k2, n) = (db[0], db[1]);
+        assert_eq!(k, k2, "matmul_into inner dims {k} vs {k2}");
+        assert_eq!(out.len(), m * n, "matmul_into out length {} vs {m}x{n}", out.len());
+        gemm_into(self.data(), other.data(), k, n, workers, out);
+    }
+
+    /// GEMM against a pre-packed right-hand side ([`PackedB`]): the
+    /// cache-blocked panel micro-kernel, bit-identical to
+    /// [`Tensor::matmul`] on the unpacked matrix.
+    pub fn matmul_packed(&self, bp: &PackedB, workers: usize) -> Tensor {
+        let da = self.dims();
+        assert_eq!(da.len(), 2, "matmul_packed lhs must be 2-D, got {da:?}");
+        let (m, k) = (da[0], da[1]);
+        assert_eq!(k, bp.k(), "matmul_packed inner dims {k} vs {}", bp.k());
+        let mut out = vec![0f32; m * bp.n()];
+        gemm_packed_into(self.data(), bp, workers, &mut out);
+        Tensor::new([m, bp.n()], out)
     }
 
     // ---- batch (leading-N) helpers -------------------------------------
@@ -261,24 +491,12 @@ impl Tensor {
         let d = self.dims();
         assert_eq!(d.len(), 4, "im2col_batch expects (n,h,w,c), got {d:?}");
         let (nb, h, w, c) = (d[0], d[1], d[2], d[3]);
-        let (oh, pt) = same_pad(h, kh, stride);
-        let (ow, pl) = same_pad(w, kw, stride);
+        let (oh, _) = same_pad(h, kh, stride);
+        let (ow, _) = same_pad(w, kw, stride);
         let kdim = kh * kw * c;
-        let img_in = h * w * c;
-        let img_out = oh * ow * kdim;
-        let mut out = vec![0f32; nb * img_out];
-        let data = self.data();
-        for bi in 0..nb {
-            im2col_image(
-                &data[bi * img_in..(bi + 1) * img_in],
-                &mut out[bi * img_out..(bi + 1) * img_out],
-                (h, w, c),
-                (kh, kw, stride),
-                (oh, ow),
-                (pt, pl),
-            );
-        }
-        Tensor::new(vec![nb * oh * ow, kdim], out)
+        let mut out = vec![0f32; nb * oh * ow * kdim];
+        im2col_batch_into(self.data(), (nb, h, w, c), (kh, kw, stride), &mut out);
+        Tensor::new([nb * oh * ow, kdim], out)
     }
 
     /// Lower an `(h, w, c)` feature map to the im2col patch matrix
@@ -289,19 +507,12 @@ impl Tensor {
         let d = self.dims();
         assert_eq!(d.len(), 3, "im2col expects (h,w,c), got {d:?}");
         let (h, w, c) = (d[0], d[1], d[2]);
-        let (oh, pt) = same_pad(h, kh, stride);
-        let (ow, pl) = same_pad(w, kw, stride);
+        let (oh, _) = same_pad(h, kh, stride);
+        let (ow, _) = same_pad(w, kw, stride);
         let kdim = kh * kw * c;
         let mut out = vec![0f32; oh * ow * kdim];
-        im2col_image(
-            self.data(),
-            &mut out,
-            (h, w, c),
-            (kh, kw, stride),
-            (oh, ow),
-            (pt, pl),
-        );
-        Tensor::new(vec![oh * ow, kdim], out)
+        im2col_batch_into(self.data(), (1, h, w, c), (kh, kw, stride), &mut out);
+        Tensor::new([oh * ow, kdim], out)
     }
 
     /// Direct dense convolution: `(h,w,cin) * (kh,kw,cin,cout) ->
@@ -361,34 +572,17 @@ impl Tensor {
         let (h, w, c) = (d[0], d[1], d[2]);
         let (kh, kw) = (wd[0], wd[1]);
         assert_eq!(wd[2], c, "depthwise channel mismatch");
-        let (oh, pt) = same_pad(h, kh, stride);
-        let (ow, pl) = same_pad(w, kw, stride);
-        let x = self.data();
-        let wt = weight.data();
+        let (oh, _) = same_pad(h, kh, stride);
+        let (ow, _) = same_pad(w, kw, stride);
         let mut out = vec![0f32; oh * ow * c];
-        for oi in 0..oh {
-            for oj in 0..ow {
-                let orow = &mut out[(oi * ow + oj) * c..(oi * ow + oj + 1) * c];
-                for ki in 0..kh {
-                    let iy = (oi * stride + ki) as isize - pt as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kj in 0..kw {
-                        let ix = (oj * stride + kj) as isize - pl as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let xrow = &x[(iy as usize * w + ix as usize) * c..][..c];
-                        let wrow = &wt[(ki * kw + kj) * c..][..c];
-                        for ((o, &xv), &wv) in orow.iter_mut().zip(xrow).zip(wrow) {
-                            *o += xv * wv;
-                        }
-                    }
-                }
-            }
-        }
-        Tensor::new(vec![oh, ow, c], out)
+        depthwise_conv_into(
+            self.data(),
+            (h, w, c),
+            weight.data(),
+            (kh, kw, stride),
+            &mut out,
+        );
+        Tensor::new([oh, ow, c], out)
     }
 
     /// Max pooling over `(h,w,c)` with SAME-style geometry; border windows
@@ -660,6 +854,94 @@ mod tests {
                 assert_eq!(chunk, p.data(), "image {i} k={k} stride={stride}");
             }
         }
+    }
+
+    #[test]
+    fn packed_panel_gemm_bit_identical_to_matmul() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(41);
+        // ragged in every direction: m not a multiple of MICRO_ROWS, n not
+        // a multiple of PANEL_WIDTH, plus exact zeros in A (the skip rule)
+        for &(m, k, n) in &[
+            (1usize, 3usize, 1usize),
+            (4, 8, 8),
+            (5, 7, 3),
+            (13, 9, 17),
+            (61, 12, 10),
+            (128, 33, 40),
+        ] {
+            let mut a = Tensor::he_normal(vec![m, k], &mut rng);
+            for (i, v) in a.data_mut().iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b = Tensor::he_normal(vec![k, n], &mut rng);
+            let want = a.matmul(&b);
+            let bp = PackedB::pack(&b);
+            assert_eq!((bp.k(), bp.n()), (k, n));
+            for workers in [1usize, 2, 4, 7] {
+                let got = a.matmul_packed(&bp, workers);
+                assert_eq!(got.dims(), want.dims());
+                assert_eq!(got.data(), want.data(), "m={m} n={n} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_into_overwrites_dirty_buffers() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(43);
+        let (m, k, n) = (17usize, 6usize, 9usize);
+        let a = Tensor::he_normal(vec![m, k], &mut rng);
+        let b = Tensor::he_normal(vec![k, n], &mut rng);
+        let want = a.matmul(&b);
+        let bp = PackedB::pack(&b);
+        // poison the buffer between calls: results must not see stale data
+        let mut out = vec![f32::NAN; m * n];
+        for workers in [1usize, 3] {
+            a.matmul_into(&b, workers, &mut out);
+            assert_eq!(&out[..], want.data(), "matmul_into workers={workers}");
+            out.fill(1e30);
+            gemm_packed_into(a.data(), &bp, workers, &mut out);
+            assert_eq!(&out[..], want.data(), "gemm_packed_into workers={workers}");
+            out.fill(f32::NAN);
+        }
+    }
+
+    #[test]
+    fn im2col_into_matches_allocating_path_on_dirty_buffer() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(47);
+        let (nb, hw, k, stride, c) = (3usize, 7usize, 3usize, 2usize, 4usize);
+        let batch = Tensor::he_normal(vec![nb, hw, hw, c], &mut rng);
+        let want = batch.im2col_batch(k, k, stride);
+        let mut dst = vec![f32::NAN; want.numel()];
+        im2col_batch_into(batch.data(), (nb, hw, hw, c), (k, k, stride), &mut dst);
+        assert_eq!(&dst[..], want.data());
+    }
+
+    #[test]
+    fn depthwise_into_matches_allocating_path() {
+        use crate::tensor::XorShift64Star;
+        let mut rng = XorShift64Star::new(53);
+        let (hw, c) = (6usize, 5usize);
+        let x = Tensor::he_normal(vec![hw, hw, c], &mut rng);
+        let w = Tensor::he_normal(vec![3, 3, c], &mut rng);
+        let want = x.conv2d_depthwise(&w, 2);
+        let mut out = vec![f32::NAN; want.numel()];
+        depthwise_conv_into(x.data(), (hw, hw, c), w.data(), (3, 3, 2), &mut out);
+        assert_eq!(&out[..], want.data());
+    }
+
+    #[test]
+    fn packed_degenerate_dims() {
+        let a = Tensor::zeros(vec![3, 0]);
+        let b = Tensor::zeros(vec![0, 4]);
+        let bp = PackedB::pack(&b);
+        let got = a.matmul_packed(&bp, 4);
+        assert_eq!(got.dims(), &[3, 4]);
+        assert!(got.data().iter().all(|&v| v == 0.0));
     }
 
     #[test]

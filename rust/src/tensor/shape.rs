@@ -1,69 +1,122 @@
 //! Shape arithmetic for row-major tensors.
+//!
+//! Shapes up to rank [`INLINE_RANK`] — which covers every tensor the crate
+//! builds: activations are `(h, w, c)` or batched `(n, h, w, c)`, weights
+//! at most `(kh, kw, cin, cout)` — are stored inline, so constructing a
+//! `Tensor` from an array shape (`Tensor::new([n, h, w, c], data)`)
+//! performs no heap allocation. This is what lets the executor's
+//! scratch-reusing conv/GEMM path stay allocation-free end to end: the
+//! payload `Vec<f32>` comes from the scratch arena and the shape lives in
+//! the struct. Rarer higher-rank shapes spill to a `Vec`.
+
+/// Ranks up to this are stored inline (no allocation).
+pub const INLINE_RANK: usize = 4;
 
 /// Dimension list with row-major stride math.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct Shape(Vec<usize>);
+#[derive(Debug, Clone)]
+pub struct Shape {
+    /// Rank when inline; `usize::MAX` sentinel is never used — `spill`
+    /// being non-empty marks the spilled representation instead.
+    len: u8,
+    inline: [usize; INLINE_RANK],
+    spill: Vec<usize>,
+}
 
 impl Shape {
     pub fn new(dims: Vec<usize>) -> Self {
-        Shape(dims)
+        Shape::from(dims)
+    }
+
+    /// Build from a slice without taking ownership of an allocation.
+    pub fn from_dims(dims: &[usize]) -> Self {
+        if dims.len() <= INLINE_RANK {
+            let mut inline = [0usize; INLINE_RANK];
+            inline[..dims.len()].copy_from_slice(dims);
+            Shape { len: dims.len() as u8, inline, spill: Vec::new() }
+        } else {
+            Shape { len: 0, inline: [0; INLINE_RANK], spill: dims.to_vec() }
+        }
     }
 
     pub fn dims(&self) -> &[usize] {
-        &self.0
+        if self.spill.is_empty() {
+            &self.inline[..self.len as usize]
+        } else {
+            &self.spill
+        }
     }
 
     pub fn rank(&self) -> usize {
-        self.0.len()
+        self.dims().len()
     }
 
     pub fn numel(&self) -> usize {
-        self.0.iter().product::<usize>().max(if self.0.is_empty() { 1 } else { 0 })
+        let d = self.dims();
+        d.iter().product::<usize>().max(if d.is_empty() { 1 } else { 0 })
     }
 
     /// Row-major strides.
     pub fn strides(&self) -> Vec<usize> {
-        let mut s = vec![1; self.0.len()];
-        for i in (0..self.0.len().saturating_sub(1)).rev() {
-            s[i] = s[i + 1] * self.0[i + 1];
+        let d = self.dims();
+        let mut s = vec![1; d.len()];
+        for i in (0..d.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * d[i + 1];
         }
         s
     }
 
     pub fn linear_index(&self, idx: &[usize]) -> usize {
-        assert_eq!(idx.len(), self.0.len(), "index rank mismatch");
-        let strides = self.strides();
-        idx.iter()
-            .zip(&self.0)
-            .zip(&strides)
-            .map(|((&i, &d), &st)| {
-                assert!(i < d, "index {i} out of bounds for dim {d}");
-                i * st
-            })
-            .sum()
+        let d = self.dims();
+        assert_eq!(idx.len(), d.len(), "index rank mismatch");
+        let mut linear = 0usize;
+        let mut stride = 1usize;
+        for i in (0..d.len()).rev() {
+            assert!(idx[i] < d[i], "index {} out of bounds for dim {}", idx[i], d[i]);
+            linear += idx[i] * stride;
+            stride *= d[i];
+        }
+        linear
     }
 
     /// i64 dims for the xla crate's reshape/literal APIs.
     pub fn dims_i64(&self) -> Vec<i64> {
-        self.0.iter().map(|&d| d as i64).collect()
+        self.dims().iter().map(|&d| d as i64).collect()
+    }
+}
+
+impl PartialEq for Shape {
+    fn eq(&self, other: &Self) -> bool {
+        self.dims() == other.dims()
+    }
+}
+
+impl Eq for Shape {}
+
+impl std::hash::Hash for Shape {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.dims().hash(state);
     }
 }
 
 impl From<Vec<usize>> for Shape {
     fn from(dims: Vec<usize>) -> Self {
-        Shape(dims)
+        if dims.len() <= INLINE_RANK {
+            Shape::from_dims(&dims)
+        } else {
+            Shape { len: 0, inline: [0; INLINE_RANK], spill: dims }
+        }
     }
 }
 
 impl From<&[usize]> for Shape {
     fn from(dims: &[usize]) -> Self {
-        Shape(dims.to_vec())
+        Shape::from_dims(dims)
     }
 }
 
 impl<const N: usize> From<[usize; N]> for Shape {
     fn from(dims: [usize; N]) -> Self {
-        Shape(dims.to_vec())
+        Shape::from_dims(&dims)
     }
 }
 
@@ -96,5 +149,37 @@ mod tests {
     #[should_panic]
     fn out_of_bounds_panics() {
         Shape::new(vec![2, 2]).linear_index(&[2, 0]);
+    }
+
+    #[test]
+    fn inline_and_spilled_agree() {
+        // rank <= 4 stays inline, rank > 4 spills; both behave identically
+        let inline = Shape::from([2usize, 3, 4]);
+        let via_vec = Shape::new(vec![2, 3, 4]);
+        assert_eq!(inline, via_vec);
+        assert_eq!(inline.dims(), &[2, 3, 4]);
+        assert_eq!(inline.rank(), 3);
+
+        let spilled = Shape::new(vec![2, 2, 2, 2, 2]);
+        assert_eq!(spilled.rank(), 5);
+        assert_eq!(spilled.numel(), 32);
+        assert_eq!(spilled.dims(), &[2, 2, 2, 2, 2]);
+        assert_eq!(spilled.strides(), vec![16, 8, 4, 2, 1]);
+        assert_eq!(spilled.linear_index(&[1, 0, 1, 0, 1]), 21);
+    }
+
+    #[test]
+    fn hash_matches_eq_across_representations() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let h = |s: &Shape| {
+            let mut hasher = DefaultHasher::new();
+            s.hash(&mut hasher);
+            hasher.finish()
+        };
+        let a = Shape::from([4usize, 4]);
+        let b = Shape::new(vec![4, 4]);
+        assert_eq!(a, b);
+        assert_eq!(h(&a), h(&b));
     }
 }

@@ -1,0 +1,219 @@
+//! Counting-allocator harness: proves the acceptance claim that
+//! steady-state `try_run` performs **zero heap allocations in conv/GEMM
+//! layers**.
+//!
+//! A thread-local-gated global allocator counts allocations made by the
+//! *current* thread between two marks (other test threads don't pollute
+//! the count), so these tests run the executor sequentially
+//! (`intra_workers = 1` — pool workers would allocate on their own
+//! threads, outside both the counter and the claim).
+//!
+//! Two levels:
+//! * kernel level — the `_into` entry points the executor drives
+//!   (panel GEMM, dense GEMM, block-CSR GEMM, im2col, depthwise, Winograd)
+//!   make **exactly zero** allocations on warm buffers;
+//! * end-to-end — steady-state `CompiledModel::run` on a conv-only network
+//!   allocates only the constant per-run bookkeeping (the layer-output
+//!   table, the result vector, and the one output buffer that escapes to
+//!   the caller), independent of run count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+struct CountingAlloc;
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    // try_with: never panic inside the allocator (TLS teardown)
+    let _ = COUNTING.try_with(|on| {
+        if on.get() {
+            let _ = ALLOCS.try_with(|a| a.set(a.get() + 1));
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocations made by `f` on this thread.
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    ALLOCS.with(|a| a.set(0));
+    COUNTING.with(|c| c.set(true));
+    f();
+    COUNTING.with(|c| c.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+mod kernels {
+    use super::count_allocs;
+    use npas::compiler::winograd::{transform_kernel, winograd_conv2d_prepared_into};
+    use npas::pruning::BlockCsr;
+    use npas::tensor::ops::{
+        depthwise_conv_into, gemm_into, gemm_packed_into, im2col_batch_into,
+    };
+    use npas::tensor::{PackedB, Tensor, XorShift64Star};
+
+    #[test]
+    fn gemm_kernels_allocate_nothing_on_warm_buffers() {
+        let mut rng = XorShift64Star::new(401);
+        let (m, k, n) = (40usize, 36usize, 24usize);
+        let a = Tensor::he_normal(vec![m, k], &mut rng);
+        let b = Tensor::he_normal(vec![k, n], &mut rng);
+        let bp = PackedB::pack(&b);
+        let csr = BlockCsr::pack(&b, 4, 8);
+        let mut out = vec![0f32; m * n];
+
+        let plain = count_allocs(|| gemm_into(a.data(), b.data(), k, n, 1, &mut out));
+        assert_eq!(plain, 0, "dense gemm_into must not allocate");
+
+        let packed = count_allocs(|| gemm_packed_into(a.data(), &bp, 1, &mut out));
+        assert_eq!(packed, 0, "panel gemm must not allocate");
+
+        let sparse = count_allocs(|| csr.matmul_slice_into(a.data(), 1, &mut out));
+        assert_eq!(sparse, 0, "block-CSR gemm must not allocate");
+    }
+
+    #[test]
+    fn lowering_kernels_allocate_nothing_on_warm_buffers() {
+        let mut rng = XorShift64Star::new(403);
+        let (nb, hw, c) = (2usize, 9usize, 5usize);
+        let batch = Tensor::he_normal(vec![nb, hw, hw, c], &mut rng);
+        let mut patches = vec![0f32; nb * hw * hw * 9 * c];
+        let n = count_allocs(|| {
+            im2col_batch_into(batch.data(), (nb, hw, hw, c), (3, 3, 1), &mut patches)
+        });
+        assert_eq!(n, 0, "im2col lowering must not allocate");
+
+        let img = Tensor::he_normal(vec![hw, hw, c], &mut rng);
+        let dw = Tensor::he_normal(vec![3, 3, c], &mut rng);
+        let mut out = vec![0f32; hw * hw * c];
+        let n = count_allocs(|| {
+            depthwise_conv_into(img.data(), (hw, hw, c), dw.data(), (3, 3, 1), &mut out)
+        });
+        assert_eq!(n, 0, "depthwise kernel must not allocate");
+
+        let w = Tensor::he_normal(vec![3, 3, c, 4], &mut rng);
+        let kernel = transform_kernel(&w);
+        let mut wout = vec![0f32; hw * hw * 4];
+        let mut v = vec![0f32; kernel.scratch_len()];
+        let n = count_allocs(|| {
+            winograd_conv2d_prepared_into(img.data(), (hw, hw), &kernel, &mut wout, &mut v)
+        });
+        assert_eq!(n, 0, "winograd tile loop must not allocate");
+    }
+}
+
+mod end_to_end {
+    use super::count_allocs;
+    use npas::compiler::device::KRYO_485;
+    use npas::compiler::Framework;
+    use npas::graph::NetworkBuilder;
+    use npas::tensor::{Tensor, XorShift64Star};
+    use npas::CompiledModel;
+
+    /// Conv/GEMM layers only — the layers the zero-allocation claim covers.
+    fn conv_only_net() -> npas::graph::Network {
+        let mut b = NetworkBuilder::new("alloc-free", (12, 12, 6));
+        b.conv2d(5, 8, 1); // im2col + panel GEMM
+        b.conv2d(1, 8, 1); // 1x1: borrowed patch matrix
+        b.conv2d(3, 10, 2); // im2col under TFLite (no Winograd)
+        b.build()
+    }
+
+    #[test]
+    fn steady_state_run_allocates_only_constant_bookkeeping() {
+        let model = CompiledModel::build(conv_only_net())
+            .weights(19u64)
+            .target(&KRYO_485, Framework::TFLite)
+            .compile()
+            .unwrap();
+        let mut rng = XorShift64Star::new(405);
+        let x = Tensor::he_normal(vec![12, 12, 6], &mut rng);
+        let want = model.run(&x).unwrap();
+        for _ in 0..3 {
+            model.run(&x).unwrap(); // warm the arena to steady state
+        }
+        let miss_before = model.scratch_stats().misses;
+        let mut counts = [0u64; 3];
+        for c in counts.iter_mut() {
+            *c = count_allocs(|| {
+                model.run(&x).unwrap();
+            });
+        }
+        let miss_delta = model.scratch_stats().misses - miss_before;
+
+        // per-run cost is flat (no growth with repetition = no layer leaks
+        // allocations) ...
+        assert_eq!(
+            counts[0], counts[1],
+            "steady-state allocation count must be constant"
+        );
+        assert_eq!(counts[1], counts[2]);
+        // ... and tiny: layer-output table + result vec + the escaped
+        // output buffer (+ its drop-side bookkeeping), NOT proportional to
+        // conv work. 3 conv layers doing ~0.4M MACs would dwarf this bound
+        // if any kernel allocated.
+        assert!(
+            counts[0] <= 8,
+            "per-run bookkeeping exceeded the constant budget: {} allocations",
+            counts[0]
+        );
+        // the arena misses at most the one escaped output per run
+        assert!(
+            miss_delta <= 3,
+            "conv/GEMM scratch must be served from the arena ({miss_delta} misses)"
+        );
+        // and the steady-state answers are still right
+        assert_eq!(model.run(&x).unwrap(), want);
+    }
+
+    #[test]
+    fn batched_steady_state_is_flat_too() {
+        let model = CompiledModel::build(conv_only_net())
+            .weights(21u64)
+            .target(&KRYO_485, Framework::TFLite)
+            .compile()
+            .unwrap();
+        let mut rng = XorShift64Star::new(407);
+        let batch: Vec<Tensor> =
+            (0..3).map(|_| Tensor::he_normal(vec![12, 12, 6], &mut rng)).collect();
+        for _ in 0..3 {
+            model.run_batch(&batch).unwrap();
+        }
+        let a = count_allocs(|| {
+            model.run_batch(&batch).unwrap();
+        });
+        let b = count_allocs(|| {
+            model.run_batch(&batch).unwrap();
+        });
+        assert_eq!(a, b, "batched steady state must not grow");
+        // 3 escaping outputs (buffer + shape-free Tensor each) + result
+        // vec + outs table + per-output copies
+        assert!(a <= 16, "batched per-run bookkeeping too high: {a} allocations");
+    }
+}

@@ -1,0 +1,317 @@
+//! Hot-path regression wall for the allocation-free execution rework:
+//! packed-panel GEMM, in-place tiled GEMM, scratch-reusing executor and
+//! the persistent scheduler pool must all be bit-identical to the PR-2
+//! reference kernels — across tile widths, worker counts (0/1/4/7),
+//! ragged shapes, and repeated runs on one reused scratch arena (the
+//! stale-data hazard).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{ExecScratch, Framework};
+use npas::coordinator::scheduler::{map_parallel, map_parallel_scoped, ThreadPool};
+use npas::graph::{zoo, ActKind, Network, NetworkBuilder};
+use npas::pruning::{BlockCsr, PruneScheme};
+use npas::tensor::ops::{gemm_into, gemm_packed_into};
+use npas::tensor::{PackedB, Tensor, XorShift64Star};
+use npas::CompiledModel;
+
+const WORKER_SWEEP: [usize; 4] = [0, 1, 4, 7];
+
+// ---- kernel-level parity -------------------------------------------------
+
+#[test]
+fn packed_panels_match_reference_gemm_on_ragged_shapes() {
+    let mut rng = XorShift64Star::new(301);
+    // deliberately ragged: m not a multiple of the micro-tile, n not a
+    // multiple of the panel width, k prime
+    for &(m, k, n) in &[
+        (1usize, 13usize, 1usize),
+        (3, 7, 5),
+        (17, 11, 9),
+        (33, 29, 23),
+        (64, 16, 40),
+        (129, 31, 65),
+    ] {
+        let mut a = Tensor::he_normal(vec![m, k], &mut rng);
+        // exact zeros exercise the skip rule shared with the reference
+        for (i, v) in a.data_mut().iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = Tensor::he_normal(vec![k, n], &mut rng);
+        let want = a.matmul(&b); // the PR-2 reference kernel, untouched
+        let bp = PackedB::pack(&b);
+        for workers in WORKER_SWEEP {
+            let got = a.matmul_packed(&bp, workers);
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "packed panels diverge: m={m} k={k} n={n} workers={workers}"
+            );
+            let tiled = a.matmul_tiled(&b, workers);
+            assert_eq!(
+                tiled.data(),
+                want.data(),
+                "in-place tiled GEMM diverges: m={m} workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn into_kernels_ignore_dirty_buffers() {
+    let mut rng = XorShift64Star::new(303);
+    let (m, k, n) = (21usize, 14usize, 18usize);
+    let a = Tensor::he_normal(vec![m, k], &mut rng);
+    let b = Tensor::he_normal(vec![k, n], &mut rng);
+    let want = a.matmul(&b);
+    let bp = PackedB::pack(&b);
+    let mut out = vec![f32::NAN; m * n];
+    for workers in WORKER_SWEEP {
+        gemm_into(a.data(), b.data(), k, n, workers, &mut out);
+        assert_eq!(&out[..], want.data(), "gemm_into workers={workers}");
+        out.fill(f32::INFINITY);
+        gemm_packed_into(a.data(), &bp, workers, &mut out);
+        assert_eq!(&out[..], want.data(), "gemm_packed_into workers={workers}");
+        out.fill(f32::NAN);
+    }
+}
+
+#[test]
+fn block_csr_slice_into_matches_reference() {
+    let mut rng = XorShift64Star::new(305);
+    let mut w = Tensor::he_normal(vec![27, 19], &mut rng);
+    // zero out a band of rows so whole blocks drop
+    for r in 8..16 {
+        for cidx in 0..19 {
+            w.set(&[r, cidx], 0.0);
+        }
+    }
+    let packed = BlockCsr::pack(&w, 4, 8);
+    for &m in &[1usize, 7, 40] {
+        let x = Tensor::he_normal(vec![m, 27], &mut rng);
+        let want = packed.matmul(&x);
+        let mut out = vec![f32::NAN; m * 19];
+        for workers in WORKER_SWEEP {
+            packed.matmul_slice_into(x.data(), workers, &mut out);
+            assert_eq!(&out[..], want.data(), "m={m} workers={workers}");
+            out.fill(f32::NAN);
+        }
+    }
+}
+
+// ---- executor-level parity ----------------------------------------------
+
+fn every_kernel_net() -> Network {
+    // winograd (3x3 under Ours) + 1x1 GEMM + 5x5 im2col + depthwise +
+    // SE + pool + residual + GAP + FC: every dispatch family in one net
+    let mut b = NetworkBuilder::new("hotpath", (13, 13, 6));
+    b.conv2d(3, 8, 1);
+    b.act(ActKind::Relu);
+    let skip = b.head().unwrap();
+    b.conv2d(1, 8, 1);
+    b.depthwise(3, 1);
+    b.squeeze_excite(4);
+    b.add_from(skip);
+    b.conv2d(5, 10, 2);
+    b.act(ActKind::HardSwish);
+    b.pool(npas::graph::PoolKind::Avg, 2, 2);
+    b.global_avg_pool();
+    b.linear(7);
+    b.build()
+}
+
+#[test]
+fn executor_worker_sweep_bit_identical() {
+    // ragged 13x13 input, every kernel family, dense + sparse, all worker
+    // counts: identical outputs everywhere
+    for (fw, annotation) in [
+        (Framework::Ours, None),
+        (Framework::TFLite, None),
+        (Framework::Ours, Some((PruneScheme::block_punched_default(), 4.0))),
+    ] {
+        let mut builder = CompiledModel::build(every_kernel_net())
+            .weights(77u64)
+            .target(&KRYO_485, fw);
+        if let Some(ann) = annotation {
+            builder = builder.scheme(ann);
+        }
+        let baseline = builder.clone().compile().unwrap();
+        let mut rng = XorShift64Star::new(307);
+        let inputs: Vec<Tensor> =
+            (0..5).map(|_| Tensor::he_normal(vec![13, 13, 6], &mut rng)).collect();
+        let want: Vec<Tensor> =
+            inputs.iter().map(|x| baseline.run(x).unwrap()).collect();
+        for workers in WORKER_SWEEP {
+            let model = builder.clone().intra_workers(workers).compile().unwrap();
+            for (x, w) in inputs.iter().zip(&want) {
+                assert_eq!(
+                    &model.run(x).unwrap(),
+                    w,
+                    "{} workers={workers}: single-run divergence",
+                    fw.name()
+                );
+            }
+            for nb in [1usize, 3, 5] {
+                let got = model.run_batch(&inputs[..nb]).unwrap();
+                for (g, w) in got.iter().zip(&want[..nb]) {
+                    assert_eq!(
+                        g, w,
+                        "{} workers={workers} nb={nb}: batch divergence",
+                        fw.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_on_one_scratch_stay_bit_identical() {
+    // the stale-data hazard: one model (= one arena), alternating inputs
+    // and batch shapes, every answer must match the first pass
+    let model = CompiledModel::build(every_kernel_net())
+        .weights(91u64)
+        .target(&KRYO_485, Framework::Ours)
+        .intra_workers(4)
+        .compile()
+        .unwrap();
+    let mut rng = XorShift64Star::new(309);
+    let inputs: Vec<Tensor> =
+        (0..4).map(|_| Tensor::he_normal(vec![13, 13, 6], &mut rng)).collect();
+    let want: Vec<Tensor> = inputs.iter().map(|x| model.run(x).unwrap()).collect();
+    for round in 0..6 {
+        // vary the traversal order and batch shape so buffers are reused
+        // in different roles between rounds
+        let i = round % inputs.len();
+        assert_eq!(model.run(&inputs[i]).unwrap(), want[i], "round {round} single");
+        let nb = 1 + (round % 3);
+        let got = model.run_batch(&inputs[..nb]).unwrap();
+        for (g, w) in got.iter().zip(&want[..nb]) {
+            assert_eq!(g, w, "round {round} batch nb={nb}");
+        }
+    }
+    let stats = model.scratch_stats();
+    assert!(stats.hits > 0, "steady-state runs must reuse arena buffers");
+}
+
+#[test]
+fn scratch_steady_state_stops_missing() {
+    // after warmup, repeated single-image runs take every buffer from the
+    // arena: misses stay flat except the final activation that escapes to
+    // the caller each run
+    let model = CompiledModel::build(zoo::single_conv(12, 5, 8, 8))
+        .weights(5u64)
+        .target(&KRYO_485, Framework::TFLite)
+        .compile()
+        .unwrap();
+    let mut rng = XorShift64Star::new(311);
+    let x = Tensor::he_normal(vec![12, 12, 8], &mut rng);
+    for _ in 0..3 {
+        model.run(&x).unwrap(); // warmup: arena reaches steady state
+    }
+    let before = model.scratch_stats();
+    let runs = 5u64;
+    for _ in 0..runs {
+        model.run(&x).unwrap();
+    }
+    let after = model.scratch_stats();
+    let misses = after.misses - before.misses;
+    assert!(
+        misses <= runs,
+        "steady state allows at most the escaped output buffer per run \
+         ({misses} misses over {runs} runs)"
+    );
+    assert!(after.hits > before.hits, "runs must be served from the arena");
+}
+
+// ---- persistent pool ----------------------------------------------------
+
+#[test]
+fn pool_panic_containment_and_reuse() {
+    let pool = ThreadPool::new(2);
+    let work = |i: usize| {
+        if i == 5 {
+            panic!("boom");
+        }
+    };
+    let r = catch_unwind(AssertUnwindSafe(|| pool.scope(4, 12, &work)));
+    assert!(r.is_err(), "the task panic must reach the submitter");
+    let spawned = pool.threads_spawned();
+    // the pool keeps serving with the same threads
+    let jobs_before = pool.jobs_completed();
+    for _ in 0..20 {
+        pool.scope(4, 12, &|_| {});
+    }
+    assert_eq!(pool.threads_spawned(), spawned, "no respawn after a panic");
+    assert_eq!(pool.jobs_completed(), jobs_before + 20);
+}
+
+#[test]
+fn global_pool_backs_map_parallel_without_respawning() {
+    let items: Vec<usize> = (0..256).collect();
+    let want: Vec<usize> = items.iter().map(|&x| x * x).collect();
+    // prime the global pool, then hammer it: results stay ordered and the
+    // scoped baseline agrees
+    assert_eq!(map_parallel(4, &items, |&x| x * x), want);
+    let spawned = ThreadPool::global().threads_spawned();
+    for workers in [2usize, 4, 7] {
+        assert_eq!(map_parallel(workers, &items, |&x| x * x), want);
+    }
+    assert_eq!(
+        ThreadPool::global().threads_spawned(),
+        spawned,
+        "map_parallel must reuse the persistent pool"
+    );
+    assert_eq!(map_parallel_scoped(4, &items, |&x| x * x), want);
+}
+
+#[test]
+fn executors_share_the_pool_across_threads() {
+    // several serving-style threads, each with its own scratch arena, all
+    // tiling GEMMs over the one global pool: outputs stay bit-identical
+    let model = std::sync::Arc::new(
+        CompiledModel::build(every_kernel_net())
+            .weights(23u64)
+            .target(&KRYO_485, Framework::TFLite)
+            .intra_workers(3)
+            .compile()
+            .unwrap(),
+    );
+    let mut rng = XorShift64Star::new(313);
+    let x = Tensor::he_normal(vec![13, 13, 6], &mut rng);
+    let want = model.run(&x).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let model = model.clone();
+            let x = x.clone();
+            let want = want.clone();
+            std::thread::spawn(move || {
+                // per-thread arena: each thread builds its own executor
+                // via a scratch the model shares — concurrency must not
+                // change numerics
+                for _ in 0..5 {
+                    assert_eq!(model.run(&x).unwrap(), want);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+// ---- arena API ----------------------------------------------------------
+
+#[test]
+fn scratch_arena_is_shareable_across_executors() {
+    let arena = ExecScratch::new();
+    let a = arena.take(100);
+    arena.recycle(a);
+    let b = arena.take(64);
+    assert!(b.iter().all(|&v| v == 0.0));
+    let stats = arena.stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1));
+}
