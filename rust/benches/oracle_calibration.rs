@@ -1,0 +1,210 @@
+//! Oracle comparison bench: what does each latency oracle cost per
+//! candidate, and how well do their candidate *orderings* agree?
+//!
+//! The search only consumes ranks (the reward's latency term is monotone),
+//! so rank agreement against the measured oracle is the fidelity metric
+//! that matters. The bench scores one candidate set — pruning rates from
+//! dense to 10x, light filter types, and per-layer mixed schemes — with:
+//!
+//! * the analytical oracle (roofline simulator, the default),
+//! * the measured oracle (wall-clock through the compiled engine), and
+//! * the calibrated oracle (analytical with measured per-band scales),
+//!
+//! then reports per-candidate scoring cost, Spearman ρ of each cheap
+//! oracle against the measured ordering, and the calibration fit summary.
+//! The machine-readable snapshot lands in `BENCH_6.json` at the workspace
+//! root (same convention as `engine_throughput` → `BENCH_5.json`).
+//!
+//! Acceptance (demoted to prints under `NPAS_BENCH_LENIENT`): no measured
+//! candidate may fall back to the analytical path, and the calibrated
+//! oracle must rank-agree with measurement at least as well as ρ = 0.5.
+//!
+//! Run: `cargo bench --bench oracle_calibration`
+
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+use npas::bench::spearman;
+use npas::compiler::device::KRYO_485;
+use npas::compiler::CalibrationConfig;
+use npas::pruning::{PruneRate, PruneScheme};
+use npas::search::{
+    AnalyticalOracle, CalibratedOracle, EvalContext, LatencyOracle, MeasuredOracle, NpasScheme,
+};
+use npas::train::Branch;
+use npas::util::Json;
+use npas::WallClock;
+
+/// The candidate set: wide compute spread + a mixed-scheme candidate, so
+/// ranking them is neither trivial nor degenerate.
+fn candidates() -> Vec<(String, NpasScheme)> {
+    let mut out = Vec::new();
+    out.push(("dense".to_string(), NpasScheme::dense(5)));
+    for rate in [2.0f32, 3.0, 5.0, 10.0] {
+        let mut s = NpasScheme::dense(5);
+        for c in &mut s.choices {
+            c.scheme = PruneScheme::block_punched_default();
+            c.rate = PruneRate::new(rate);
+        }
+        out.push((format!("block@{rate}x"), s));
+    }
+    let mut mixed = NpasScheme::dense(5);
+    for c in &mut mixed.choices {
+        c.rate = PruneRate::new(5.0);
+        c.mixed = true;
+    }
+    out.push(("mixed@5x".to_string(), mixed));
+    let mut light = NpasScheme::dense(5);
+    for c in &mut light.choices {
+        c.filter = Branch::DwPw;
+    }
+    out.push(("dwpw-dense".to_string(), light));
+    let mut light_pruned = light.clone();
+    for c in &mut light_pruned.choices {
+        c.scheme = PruneScheme::block_punched_default();
+        c.rate = PruneRate::new(3.0);
+    }
+    out.push(("dwpw-block@3x".to_string(), light_pruned));
+    out
+}
+
+/// Score every candidate with one oracle, returning (scores, ms/candidate).
+/// A fresh context per oracle keeps the cost comparison honest (each pays
+/// its own compiles); timing includes one-time setup such as calibration
+/// fitting or anchor measurement, amortized over the set.
+fn score(oracle: &dyn LatencyOracle, set: &[(String, NpasScheme)]) -> (Vec<f64>, f64) {
+    let ctx = EvalContext::new();
+    let t0 = Instant::now();
+    let scores: Vec<f64> =
+        set.iter().map(|(_, s)| black_box(oracle.latency_ms(&ctx, s, &KRYO_485))).collect();
+    let per = t0.elapsed().as_secs_f64() * 1e3 / set.len() as f64;
+    (scores, per)
+}
+
+fn main() {
+    println!("# Oracle scoring cost + rank agreement (device: cpu)\n");
+    let set = candidates();
+    let wall = WallClock { warmup: 1, runs: 3, trim: 0.0, input_seed: 0x7E57 };
+
+    let analytical = AnalyticalOracle;
+    let mut m = MeasuredOracle::new();
+    m.hw = 16;
+    m.wall = wall;
+    let measured = Arc::new(m);
+    let calibrated = CalibratedOracle::new(CalibrationConfig {
+        hw: 16,
+        channels: 16,
+        wall,
+        ..CalibrationConfig::default()
+    });
+
+    let (s_ana, ms_ana) = score(&analytical, &set);
+    let (s_mea, ms_mea) = score(measured.as_ref(), &set);
+    let (s_cal, ms_cal) = score(&calibrated, &set);
+    let (n_measured, n_fallback) = measured.counts();
+
+    println!("{:16} {:>12} {:>12} {:>12}", "candidate", "analytical", "measured", "calibrated");
+    for (i, (name, _)) in set.iter().enumerate() {
+        println!(
+            "{:16} {:>9.3}ms {:>9.3}ms {:>9.3}ms",
+            name, s_ana[i], s_mea[i], s_cal[i]
+        );
+    }
+
+    let rho_ana = spearman(&s_ana, &s_mea);
+    let rho_cal = spearman(&s_cal, &s_mea);
+    println!("\nscoring cost per candidate:");
+    println!("  analytical {ms_ana:9.3} ms");
+    println!("  measured   {ms_mea:9.3} ms  ({n_measured} measured, {n_fallback} fallbacks)");
+    println!("  calibrated {ms_cal:9.3} ms  (includes one-time band fit)");
+    println!("\nrank agreement vs measured ordering (Spearman):");
+    println!("  analytical rho = {rho_ana:.3}");
+    println!("  calibrated rho = {rho_cal:.3}");
+
+    let cal_summary = match calibrated.calibration(&KRYO_485) {
+        Some(cal) => {
+            println!("\ncalibration fit: {}", cal.summary());
+            cal.summary()
+        }
+        None => "fit failed".to_string(),
+    };
+
+    // ---- machine-readable snapshot for the bench trajectory ------------
+    let per_candidate = |names: &[(String, NpasScheme)], scores: &[f64]| {
+        Json::obj(
+            names
+                .iter()
+                .zip(scores)
+                .map(|((n, _), &v)| (n.as_str(), Json::num(v)))
+                .collect(),
+        )
+    };
+    let snapshot = Json::obj(vec![
+        ("bench", Json::str("oracle_calibration")),
+        ("pr", Json::num(6.0)),
+        ("candidates", Json::num(set.len() as f64)),
+        (
+            "scoring_cost_ms_per_candidate",
+            Json::obj(vec![
+                ("analytical", Json::num(ms_ana)),
+                ("measured", Json::num(ms_mea)),
+                ("calibrated", Json::num(ms_cal)),
+            ]),
+        ),
+        (
+            "rank_agreement_vs_measured",
+            Json::obj(vec![
+                ("analytical_rho", Json::num(rho_ana)),
+                ("calibrated_rho", Json::num(rho_cal)),
+            ]),
+        ),
+        (
+            "measured_oracle",
+            Json::obj(vec![
+                ("measured", Json::num(n_measured as f64)),
+                ("fallbacks", Json::num(n_fallback as f64)),
+            ]),
+        ),
+        ("calibration", Json::str(cal_summary)),
+        (
+            "latency_ms",
+            Json::obj(vec![
+                ("analytical", per_candidate(&set, &s_ana)),
+                ("measured", per_candidate(&set, &s_mea)),
+                ("calibrated", per_candidate(&set, &s_cal)),
+            ]),
+        ),
+    ]);
+    let snap_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_6.json");
+    std::fs::write(&snap_path, snapshot.to_string()).expect("writing BENCH_6.json");
+    println!("\n   wrote {}", snap_path.display());
+
+    // shared CI runners have noisy-neighbor wall clocks; NPAS_BENCH_LENIENT
+    // demotes the acceptance asserts to loud prints there (the numbers and
+    // the BENCH_6.json snapshot still record the truth)
+    let lenient = std::env::var_os("NPAS_BENCH_LENIENT").is_some();
+    let verdicts = [
+        (n_fallback == 0, format!("{n_fallback} measured candidates fell back to analytical")),
+        (
+            rho_cal >= 0.5,
+            format!("calibrated oracle rank agreement below 0.5: rho {rho_cal:.3}"),
+        ),
+    ];
+    let mut all_ok = true;
+    for (ok, msg) in verdicts {
+        if ok {
+            continue;
+        }
+        all_ok = false;
+        if lenient {
+            println!("\nacceptance demoted by NPAS_BENCH_LENIENT: {msg}");
+        } else {
+            panic!("{msg}");
+        }
+    }
+    if all_ok {
+        println!("\nacceptance: fallbacks 0, calibrated rho {rho_cal:.3} >= 0.5 — OK");
+    }
+}

@@ -84,6 +84,55 @@ pub fn quick(name: &str, f: impl FnMut()) -> Measurement {
     bench(name, Duration::from_millis(300), f)
 }
 
+/// Spearman rank correlation ρ between two paired samples — the oracle
+/// benches use it to quantify how well the analytical ordering agrees with
+/// measured wall-clock ordering (ranking is what steers the search; absolute
+/// scale does not). Ties get average ranks; returns 0.0 for degenerate
+/// inputs (length < 2, mismatched lengths, or zero rank variance).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return 0.0;
+    }
+    let rx = average_ranks(xs);
+    let ry = average_ranks(ys);
+    let n = rx.len() as f64;
+    let mx = rx.iter().sum::<f64>() / n;
+    let my = ry.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (a, b) in rx.iter().zip(&ry) {
+        cov += (a - mx) * (b - my);
+        vx += (a - mx) * (a - mx);
+        vy += (b - my) * (b - my);
+    }
+    if vx <= 0.0 || vy <= 0.0 {
+        return 0.0;
+    }
+    cov / (vx * vy).sqrt()
+}
+
+/// Ranks (1-based) with ties receiving the average of their positions.
+fn average_ranks(v: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut ranks = vec![0.0; v.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && v[idx[j + 1]] == v[idx[i]] {
+            j += 1;
+        }
+        // positions i..=j (0-based) tie: average 1-based rank
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            ranks[k] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
 fn fmt_duration(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {
@@ -133,6 +182,30 @@ mod tests {
         });
         assert!(m.iters >= 3);
         assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn spearman_detects_order() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let up = [10.0, 20.0, 30.0, 40.0, 50.0];
+        let down = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&xs, &up) - 1.0).abs() < 1e-12);
+        assert!((spearman(&xs, &down) + 1.0).abs() < 1e-12);
+        // monotone but nonlinear is still a perfect rank correlation
+        let exp: Vec<f64> = xs.iter().map(|x| x.exp()).collect();
+        assert!((spearman(&xs, &exp) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_ties_and_degenerates() {
+        // ties take average ranks: [1, 2, 2, 3] vs strictly increasing
+        let a = [1.0, 2.0, 2.0, 3.0];
+        let b = [1.0, 2.0, 3.0, 4.0];
+        let rho = spearman(&a, &b);
+        assert!(rho > 0.9 && rho < 1.0, "rho {rho}");
+        assert_eq!(spearman(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(spearman(&[1.0], &[1.0]), 0.0);
+        assert_eq!(spearman(&[1.0, 2.0], &[1.0]), 0.0);
     }
 
     #[test]

@@ -28,20 +28,34 @@ pub struct LatencyReport {
     pub num_groups: usize,
 }
 
+/// Deterministic single-group time terms (seconds): the compute excess
+/// beyond the memory term, the memory term, and the dispatch overhead.
+/// This is the calibration unit — `compiler::calibrate` rescales these
+/// per-band terms against measured kernel timings — and [`plan_time`] is
+/// exactly the sum of `group_time` over a plan's groups.
+pub fn group_time(
+    g: &super::codegen::FusedGroup,
+    device: &DeviceSpec,
+    overhead_mult: f64,
+) -> (f64, f64, f64) {
+    let size_util = device.size_utilization(g.eff_macs.max(1.0));
+    let c = g.eff_macs / (device.peak_gmacs * g.utilization.max(1e-3) * size_util.max(1e-3));
+    let m = g.bytes / device.mem_bw;
+    // roofline: compute and memory overlap, so a group pays max(c, m) —
+    // accounted as its memory time plus the compute excess beyond it.
+    // Memory-bound groups (m >= c, e.g. glue) contribute no excess.
+    ((c - m).max(0.0), m, device.group_overhead * overhead_mult)
+}
+
 /// Deterministic single-execution time of a plan (seconds).
 pub fn plan_time(plan: &ExecutionPlan, device: &DeviceSpec) -> (f64, f64, f64) {
     let caps = plan.framework.caps();
     let (mut compute, mut memory, mut overhead) = (0f64, 0f64, 0f64);
     for g in &plan.groups {
-        let size_util = device.size_utilization(g.eff_macs.max(1.0));
-        let c = g.eff_macs / (device.peak_gmacs * g.utilization.max(1e-3) * size_util.max(1e-3));
-        let m = g.bytes / device.mem_bw;
-        // roofline: compute and memory overlap, so a group pays max(c, m) —
-        // accounted as its memory time plus the compute excess beyond it.
-        // Memory-bound groups (m >= c, e.g. glue) contribute no excess.
-        compute += (c - m).max(0.0);
+        let (c, m, o) = group_time(g, device, caps.overhead_mult);
+        compute += c;
         memory += m;
-        overhead += device.group_overhead * caps.overhead_mult;
+        overhead += o;
     }
     (compute, memory, overhead)
 }

@@ -21,6 +21,7 @@
 //! trips. [`frameworks`] models MNN/TFLite/PyTorch-Mobile by disabling the
 //! optimizations those frameworks lack.
 
+pub mod calibrate;
 pub mod codegen;
 pub mod device;
 pub mod executor;
@@ -32,6 +33,7 @@ pub mod sparse_exec;
 pub mod tuning;
 pub mod winograd;
 
+pub use calibrate::{Band, Calibration, CalibrationConfig};
 pub use codegen::{Algo, ExecutionPlan, FusedGroup};
 pub use device::DeviceSpec;
 pub use executor::{
@@ -39,7 +41,7 @@ pub use executor::{
     LayerWeights, PreparedKernels, ScratchStats, WeightSet,
 };
 pub use frameworks::Framework;
-pub use latency::{measure, measure_plan, LatencyReport};
+pub use latency::{group_time, measure, measure_plan, LatencyReport};
 pub use plan_cache::{PlanCache, PlanCacheStats};
 pub use sparse_exec::LayerSparsity;
 

@@ -9,7 +9,7 @@ use anyhow::{Context, Result};
 
 use crate::compiler::device::{ADRENO_640, KRYO_485};
 use crate::compiler::DeviceSpec;
-use crate::search::{NpasConfig, RewardConfig};
+use crate::search::{NpasConfig, OracleKind, RewardConfig};
 use crate::train::SgdConfig;
 use crate::util::{cli::Args, Json};
 
@@ -31,6 +31,10 @@ pub struct RunConfig {
     pub lr: f32,
     pub artifact_dir: String,
     pub event_log: Option<String>,
+    /// Which latency oracle scores candidates: `analytical` (simulated cost
+    /// model), `measured` (wall-clock through the compiled engine), or
+    /// `calibrated` (analytical model with measured per-band scales).
+    pub oracle: OracleKind,
 }
 
 impl Default for RunConfig {
@@ -51,6 +55,7 @@ impl Default for RunConfig {
             lr: 0.05,
             artifact_dir: "artifacts".to_string(),
             event_log: None,
+            oracle: OracleKind::Analytical,
         }
     }
 }
@@ -87,6 +92,11 @@ impl RunConfig {
                     cfg.artifact_dir = v.as_str().context(k.clone())?.to_string()
                 }
                 "event_log" => cfg.event_log = v.as_str().map(String::from),
+                "oracle" => {
+                    let name = v.as_str().context(k.clone())?;
+                    cfg.oracle = OracleKind::parse(name)
+                        .with_context(|| format!("unknown oracle `{name}`"))?;
+                }
                 other => anyhow::bail!("unknown config key `{other}` in {path}"),
             }
         }
@@ -118,6 +128,10 @@ impl RunConfig {
         if let Some(p) = args.get("event-log") {
             self.event_log = Some(p.to_string());
         }
+        if let Some(o) = args.get("oracle") {
+            self.oracle =
+                OracleKind::parse(o).with_context(|| format!("unknown oracle `{o}`"))?;
+        }
         Ok(())
     }
 
@@ -135,6 +149,7 @@ impl RunConfig {
         cfg.seed = self.seed;
         cfg.device = self.device;
         cfg.opt = SgdConfig { lr: self.lr, ..SgdConfig::default() };
+        cfg.oracle = self.oracle;
         cfg
     }
 }
@@ -149,7 +164,13 @@ mod tests {
     use super::*;
 
     fn tmp(content: &str) -> String {
-        let p = std::env::temp_dir().join(format!("npas_cfg_{}.json", std::process::id()));
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let p = std::env::temp_dir().join(format!(
+            "npas_cfg_{}_{}.json",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::write(&p, content).unwrap();
         p.to_string_lossy().into_owned()
     }
@@ -189,5 +210,27 @@ mod tests {
         assert_eq!(n.phase2.rounds, 9);
         assert_eq!(n.phase2.bo_batch, 7);
         assert_eq!(n.phase2.reward.target_ms, cfg.target_ms);
+    }
+
+    #[test]
+    fn oracle_from_file_and_cli() {
+        let path = tmp(r#"{"oracle": "calibrated"}"#);
+        let mut cfg = RunConfig::from_json_file(&path).unwrap();
+        assert_eq!(cfg.oracle, OracleKind::Calibrated);
+        let args = Args::parse(["--oracle".to_string(), "measured".to_string()]);
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.oracle, OracleKind::Measured);
+        assert_eq!(cfg.to_npas().oracle, OracleKind::Measured);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unknown_oracle_rejected() {
+        let path = tmp(r#"{"oracle": "psychic"}"#);
+        assert!(RunConfig::from_json_file(&path).is_err());
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(["--oracle".to_string(), "psychic".to_string()]);
+        assert!(cfg.apply_args(&args).is_err());
+        std::fs::remove_file(path).ok();
     }
 }

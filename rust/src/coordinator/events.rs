@@ -54,6 +54,18 @@ impl EventLog {
         self.lines.push(j.to_string());
     }
 
+    /// Record which latency oracle scored a search phase (so a replayed log
+    /// says whether its numbers are analytical, measured, or calibrated).
+    pub fn log_oracle(&mut self, phase: &str, oracle: &str, detail: &str) {
+        let j = Json::obj(vec![
+            ("event", Json::str("oracle")),
+            ("phase", Json::str(phase)),
+            ("oracle", Json::str(oracle)),
+            ("detail", Json::str(detail)),
+        ]);
+        self.lines.push(j.to_string());
+    }
+
     pub fn len(&self) -> usize {
         self.lines.len()
     }
@@ -94,11 +106,14 @@ mod tests {
             EvalOutcome { accuracy: 0.8, latency_ms: 7.5 },
             0.78,
         );
-        assert_eq!(log.len(), 2);
+        log.log_oracle("phase2", "measured", "32x32, min-of-5");
+        assert_eq!(log.len(), 3);
         for l in log.lines() {
             let j = Json::parse(l).unwrap();
             assert!(j.get("event").is_some());
         }
+        let oracle_line = Json::parse(&log.lines()[2]).unwrap();
+        assert_eq!(oracle_line.get("oracle").unwrap().as_str(), Some("measured"));
     }
 
     #[test]

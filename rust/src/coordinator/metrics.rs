@@ -13,6 +13,9 @@ use std::time::{Duration, Instant};
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
     timers: Mutex<BTreeMap<String, Duration>>,
+    /// Non-numeric run annotations (e.g. which latency oracle scored each
+    /// phase); included in [`Metrics::summary`].
+    labels: Mutex<BTreeMap<String, String>>,
 }
 
 pub struct TimerGuard<'a> {
@@ -50,6 +53,15 @@ impl Metrics {
         self.timers.lock().unwrap().get(key).copied().unwrap_or_default()
     }
 
+    /// Attach a string annotation (last write wins).
+    pub fn set_label(&self, key: &str, value: &str) {
+        self.labels.lock().unwrap().insert(key.to_string(), value.to_string());
+    }
+
+    pub fn label(&self, key: &str) -> Option<String> {
+        self.labels.lock().unwrap().get(key).cloned()
+    }
+
     /// Human-readable summary block.
     pub fn summary(&self) -> String {
         let mut out = String::new();
@@ -58,6 +70,9 @@ impl Metrics {
         }
         for (k, d) in self.timers.lock().unwrap().iter() {
             out.push_str(&format!("{k}: {:.2}s\n", d.as_secs_f64()));
+        }
+        for (k, v) in self.labels.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {v}\n"));
         }
         out
     }
@@ -107,7 +122,18 @@ mod tests {
         {
             let _g = m.time("t");
         }
+        m.set_label("phase2.oracle", "measured");
         let s = m.summary();
         assert!(s.contains("a: 1") && s.contains("t:"));
+        assert!(s.contains("phase2.oracle: measured"));
+    }
+
+    #[test]
+    fn labels_last_write_wins() {
+        let m = Metrics::new();
+        assert_eq!(m.label("oracle"), None);
+        m.set_label("oracle", "analytical");
+        m.set_label("oracle", "calibrated");
+        assert_eq!(m.label("oracle").as_deref(), Some("calibrated"));
     }
 }

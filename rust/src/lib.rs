@@ -35,4 +35,6 @@ pub mod tensor;
 pub mod util;
 
 pub use error::{NpasError, Result};
-pub use model::{CompiledModel, CompiledModelBuilder, SchemeSpec, WeightSpec};
+pub use model::{
+    CompiledModel, CompiledModelBuilder, SchemeSpec, WallClock, WallClockReport, WeightSpec,
+};

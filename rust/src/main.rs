@@ -60,6 +60,10 @@ USAGE: npas <subcommand> [--config file.json] [--flag value ...]
   search   full NPAS pipeline: warmup -> phase1 -> phase2 -> phase3
            flags: --target-ms --device cpu|gpu --rounds --pool-size
                   --bo-batch --no-bo --seed --event-log out.jsonl
+                  --oracle analytical|measured|calibrated
+                  (analytical: simulated cost model, the default;
+                   measured: wall-clock through the compiled engine;
+                   calibrated: analytical with measured per-band scales)
   profile  print Fig.3-style motivation tables (filter types / schemes)
   prune    one-shot prune: --scheme filter|pattern|block|unstructured
            --rate 6.0 --steps 20
@@ -85,12 +89,21 @@ fn cmd_search(cfg: &RunConfig) -> Result<()> {
         println!("  block {i}: {}", c.label());
     }
     println!("  head rate: {:.1}x", report.scheme.head_rate.0);
+    if report.scheme.choices.iter().any(|c| c.mixed) {
+        println!("per-layer deployment schemes (mixed candidates expand per tensor):");
+        for (id, name, scheme, rate) in
+            npas::search::evaluator::deployment_sparsity(&report.scheme)
+        {
+            println!("  layer {id:3} {name:24} {scheme} @ {rate:.1}x");
+        }
+    }
     println!("phase1: replaced {} unfriendly ops", report.phase1.replaced_ops);
     println!(
         "phase2: {} evaluations, best reward {:.3}",
         report.phase2.evaluations, report.phase2.best_reward
     );
     println!("phase3 winner: {}", report.phase3.winner.name());
+    println!("latency oracle: {}", report.oracle);
     println!(
         "final: accuracy {:.3}, {:.2}ms CPU / {:.2}ms GPU, {:.1}M params, {:.0}M CONV MACs",
         report.final_accuracy,

@@ -47,8 +47,46 @@ use crate::graph::Network;
 use crate::pruning::PruneScheme;
 use crate::runtime::bundle::PlanBundle;
 use crate::runtime::{EngineConfig, InferenceEngine};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, XorShift64Star};
 use crate::util::Json;
+
+/// Wall-clock measurement protocol for [`CompiledModel::wall_clock`]:
+/// `warmup` unmeasured executions (cache/branch-predictor settling), then
+/// `runs` timed ones. The top `trim` fraction of samples — scheduler and
+/// thermal outliers, always on the slow side — is dropped from the trimmed
+/// mean; `min_ms` is the conventional low-noise statistic a search should
+/// rank by (the fastest observed run is the least-perturbed one).
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    pub warmup: usize,
+    pub runs: usize,
+    /// Fraction of the slowest samples excluded from `trimmed_mean_ms`
+    /// (clamped to 0.0..=0.9; at least one sample is always kept).
+    pub trim: f64,
+    /// Seed for the He-normal input tensor (values do not affect timing;
+    /// fixing the seed keeps runs comparable).
+    pub input_seed: u64,
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock { warmup: 2, runs: 5, trim: 0.25, input_seed: 0x5EED }
+    }
+}
+
+/// Statistics from one [`CompiledModel::wall_clock`] measurement, in host
+/// milliseconds (a *real* duration — unlike [`LatencyReport`], whose scale
+/// is the roofline simulator's).
+#[derive(Debug, Clone, Copy)]
+pub struct WallClockReport {
+    /// Fastest observed run — the ranking statistic.
+    pub min_ms: f64,
+    /// Mean after dropping the slowest `trim` fraction.
+    pub trimmed_mean_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    pub runs: usize,
+}
 
 /// How the builder derives per-layer sparsity annotations.
 #[derive(Debug, Clone)]
@@ -304,6 +342,38 @@ impl CompiledModel {
     /// numbers whether measured here, by the search, or by the benches.
     pub fn latency(&self, runs: usize) -> LatencyReport {
         measure_plan(&self.plan, &self.device, runs)
+    }
+
+    /// *Actually* execute the model and time it: warmup + min-of-N with
+    /// outlier trimming (see [`WallClock`]). This is the measured-latency
+    /// source for `search::oracle::MeasuredOracle` and the calibration
+    /// harness — real host kernels through the same allocation-free hot
+    /// path `run` uses, not the roofline simulation `latency` reports.
+    pub fn wall_clock(&self, cfg: &WallClock) -> Result<WallClockReport> {
+        let (h, w, c) = self.net.layers[0].in_hwc;
+        let mut rng = XorShift64Star::new(cfg.input_seed);
+        let input = Tensor::he_normal(vec![h, w, c], &mut rng);
+        for _ in 0..cfg.warmup {
+            std::hint::black_box(self.run(&input)?);
+        }
+        let runs = cfg.runs.max(1);
+        let mut samples = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(self.run(&input)?);
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("durations are finite"));
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let dropped = (samples.len() as f64 * cfg.trim.clamp(0.0, 0.9)) as usize;
+        let kept = &samples[..samples.len() - dropped.min(samples.len() - 1)];
+        Ok(WallClockReport {
+            min_ms: samples[0],
+            trimmed_mean_ms: kept.iter().sum::<f64>() / kept.len() as f64,
+            mean_ms: mean,
+            max_ms: *samples.last().expect("runs >= 1"),
+            runs,
+        })
     }
 
     // ---- execute ---------------------------------------------------------
@@ -606,5 +676,31 @@ mod tests {
         for (x, b) in inputs.iter().zip(&batch) {
             assert_eq!(&model.run(x).unwrap(), b);
         }
+    }
+
+    #[test]
+    fn wall_clock_reports_ordered_statistics() {
+        let net = zoo::single_conv(8, 3, 8, 8);
+        let model = CompiledModel::build(net).weights(5u64).compile().unwrap();
+        let rep = model
+            .wall_clock(&WallClock { warmup: 1, runs: 8, trim: 0.25, input_seed: 1 })
+            .unwrap();
+        assert_eq!(rep.runs, 8);
+        assert!(rep.min_ms > 0.0);
+        assert!(rep.min_ms <= rep.trimmed_mean_ms, "{rep:?}");
+        assert!(rep.trimmed_mean_ms <= rep.mean_ms + 1e-12, "{rep:?}");
+        assert!(rep.mean_ms <= rep.max_ms, "{rep:?}");
+    }
+
+    #[test]
+    fn wall_clock_trim_keeps_at_least_one_sample() {
+        let net = zoo::single_conv(6, 3, 4, 4);
+        let model = CompiledModel::build(net).weights(5u64).compile().unwrap();
+        // degenerate trim on a single run must not panic or divide by zero
+        let rep = model
+            .wall_clock(&WallClock { warmup: 0, runs: 1, trim: 0.9, input_seed: 1 })
+            .unwrap();
+        assert_eq!(rep.min_ms, rep.trimmed_mean_ms);
+        assert_eq!(rep.min_ms, rep.max_ms);
     }
 }

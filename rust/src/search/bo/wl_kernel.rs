@@ -147,6 +147,21 @@ mod tests {
     }
 
     #[test]
+    fn mixed_flag_changes_features() {
+        // a per-layer mixed candidate must be distinguishable to the GP even
+        // when filter type, scheme, and rate all match the uniform candidate
+        let base = scheme(&[2.0, 5.0, 3.0]);
+        let mut mixed = base.clone();
+        mixed.choices[1].mixed = true;
+        let fb = wl_features(&base, 2);
+        let fm = wl_features(&mixed, 2);
+        assert!(
+            wl_kernel_normalized(&fb, &fm) < 1.0 - 1e-9,
+            "mixed and uniform schemes are WL-indistinguishable"
+        );
+    }
+
+    #[test]
     fn wl_iterations_refine() {
         // at m=0 two chains sharing labels in different orders may tie;
         // deeper iterations separate them

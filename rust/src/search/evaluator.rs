@@ -32,8 +32,9 @@ use crate::runtime::Runtime;
 use crate::tensor::{Tensor, XorShift64Star};
 use crate::train::{Branch, SgdConfig, Trainer};
 
+use super::oracle::LatencyOracle;
 use super::reward::EvalOutcome;
-use super::space::NpasScheme;
+use super::space::{mixed_scheme_for, NpasScheme};
 
 impl Branch {
     pub fn to_candidate(self) -> CandidateBlock {
@@ -48,8 +49,11 @@ impl Branch {
 }
 
 /// The per-layer sparsity annotations a scheme induces on its deployment
-/// network (shared by the cached and uncached measurement paths).
-fn scheme_sparsity(
+/// network (shared by the cached and uncached measurement paths, the
+/// latency oracles, and the CLI's winner printout). A `mixed` stage choice
+/// assigns each layer the scheme best suited to its kernel shape
+/// ([`mixed_scheme_for`]) instead of the stage-uniform one.
+pub(crate) fn scheme_sparsity(
     net: &Network,
     stage_layers: &[Vec<usize>],
     scheme: &NpasScheme,
@@ -62,7 +66,12 @@ fn scheme_sparsity(
         }
         for &id in ids {
             if net.layers[id].prunable() {
-                sp.insert(id, LayerSparsity { scheme: c.scheme, rate: c.rate });
+                let layer_scheme = if c.mixed {
+                    mixed_scheme_for(&net.layers[id].kind)
+                } else {
+                    c.scheme
+                };
+                sp.insert(id, LayerSparsity { scheme: layer_scheme, rate: c.rate });
             }
         }
     }
@@ -135,6 +144,20 @@ pub fn scheme_footprint(scheme: &NpasScheme) -> (u64, u64) {
         };
     }
     (params as u64, net.conv_macs())
+}
+
+/// The deployment-network sparsity map a scheme compiles to, resolved per
+/// layer: `(layer id, layer name, scheme, rate)` in layer order. This is
+/// what the CLI prints for a search winner — for `mixed` stage choices it
+/// shows the actual per-layer scheme assignment, not the stage tag.
+pub fn deployment_sparsity(scheme: &NpasScheme) -> Vec<(usize, String, PruneScheme, f32)> {
+    let blocks: Vec<CandidateBlock> =
+        scheme.choices.iter().map(|c| c.filter.to_candidate()).collect();
+    let (net, stage_layers) = zoo::npas_deploy_network_tagged("npas_candidate", &blocks);
+    let sp = scheme_sparsity(&net, &stage_layers, scheme);
+    sp.iter()
+        .map(|(&id, ls)| (id, net.layers[id].name.clone(), ls.scheme, ls.rate.0))
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -262,6 +285,18 @@ pub trait Evaluator {
     }
 
     fn name(&self) -> &'static str;
+
+    /// Which [`LatencyOracle`] scores this evaluator's candidates (recorded
+    /// in phase reports, metrics labels, and the event log).
+    fn oracle_name(&self) -> &'static str {
+        "analytical"
+    }
+
+    /// The oracle's diagnostic note, if it keeps one (see
+    /// [`LatencyOracle::stats_note`]).
+    fn oracle_note(&self) -> Option<String> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -302,6 +337,9 @@ pub struct ProxyEvaluator {
     /// Shared compile-once state; `Arc` so batch workers and clones hit the
     /// same caches.
     ctx: Arc<EvalContext>,
+    /// Latency scorer; [`super::oracle::AnalyticalOracle`] by default, which
+    /// keeps every number bit-identical to the pre-oracle path.
+    oracle: Arc<dyn LatencyOracle>,
 }
 
 impl ProxyEvaluator {
@@ -312,7 +350,21 @@ impl ProxyEvaluator {
     /// Share an existing evaluation context (e.g. across latency targets or
     /// with the pipeline's own measurements).
     pub fn with_context(device: &'static DeviceSpec, ctx: Arc<EvalContext>) -> Self {
-        ProxyEvaluator { device, base_accuracy: 0.86, workers: 4, ctx }
+        ProxyEvaluator {
+            device,
+            base_accuracy: 0.86,
+            workers: 4,
+            ctx,
+            oracle: Arc::new(super::oracle::AnalyticalOracle),
+        }
+    }
+
+    /// Score latency through a different [`LatencyOracle`] (measured,
+    /// calibrated). The oracle shares this evaluator's context — and thus
+    /// its plan cache — across all batch workers.
+    pub fn with_oracle(mut self, oracle: Arc<dyn LatencyOracle>) -> Self {
+        self.oracle = oracle;
+        self
     }
 
     pub fn context(&self) -> &EvalContext {
@@ -335,7 +387,22 @@ impl ProxyEvaluator {
             acc -= Self::capacity_penalty(c.filter);
             if !c.rate.is_dense() && c.filter != Branch::Skip {
                 let sparsity = 1.0 - 1.0 / c.rate.0 as f64;
-                acc -= degradation_degree(c.scheme) * sparsity.powf(1.6);
+                // mixed stages assign each layer its best-suited scheme, so
+                // they degrade slightly less than the stage's dominant
+                // scheme applied uniformly (the paper-family observation
+                // behind per-layer mapping); dominant = Pattern on 3x3
+                // stages, block-punched elsewhere.
+                let deg = if c.mixed {
+                    let dominant = if c.filter == Branch::Conv3x3 {
+                        PruneScheme::Pattern
+                    } else {
+                        PruneScheme::block_punched_default()
+                    };
+                    degradation_degree(dominant) * 0.95
+                } else {
+                    degradation_degree(c.scheme)
+                };
+                acc -= deg * sparsity.powf(1.6);
             }
         }
         if !scheme.head_rate.is_dense() {
@@ -353,7 +420,7 @@ impl Evaluator for ProxyEvaluator {
     fn evaluate(&self, scheme: &NpasScheme) -> EvalOutcome {
         EvalOutcome {
             accuracy: self.accuracy(scheme),
-            latency_ms: measure_scheme_with(&self.ctx, scheme, self.device),
+            latency_ms: self.oracle.latency_ms(&self.ctx, scheme, self.device),
         }
     }
 
@@ -367,6 +434,14 @@ impl Evaluator for ProxyEvaluator {
 
     fn name(&self) -> &'static str {
         "proxy"
+    }
+
+    fn oracle_name(&self) -> &'static str {
+        self.oracle.name()
+    }
+
+    fn oracle_note(&self) -> Option<String> {
+        self.oracle.stats_note()
     }
 }
 
@@ -396,12 +471,54 @@ impl Default for TrainedEvalConfig {
     }
 }
 
+/// The per-tensor prune plan a scheme induces on the supernet (free-standing
+/// so tests and tools can derive it without a loaded runtime). A `mixed`
+/// stage assigns per-tensor best-suited schemes — Pattern on full 3x3 convs,
+/// block-punched elsewhere — mirroring `scheme_sparsity`'s per-layer
+/// deployment mapping.
+pub fn supernet_prune_plan(scheme: &NpasScheme) -> BTreeMap<String, (PruneScheme, PruneRate)> {
+    let mut plan = BTreeMap::new();
+    for (i, c) in scheme.choices.iter().enumerate() {
+        if c.rate.is_dense() {
+            continue;
+        }
+        for t in c.filter.tensors(i) {
+            let want = if c.mixed {
+                if t.contains("conv3x3") {
+                    PruneScheme::Pattern
+                } else {
+                    PruneScheme::block_punched_default()
+                }
+            } else {
+                c.scheme
+            };
+            // depthwise 3-D tensors cannot take Pattern; fall back to
+            // block-punched (same compiler path)
+            let scheme_t =
+                if want == PruneScheme::Pattern && t.contains("_dw") && !t.contains("dw_pw") {
+                    PruneScheme::block_punched_default()
+                } else {
+                    want
+                };
+            plan.insert(t, (scheme_t, c.rate));
+        }
+    }
+    if !scheme.head_rate.is_dense() {
+        plan.insert(
+            "head_w".to_string(),
+            (PruneScheme::block_based_default(), scheme.head_rate),
+        );
+    }
+    plan
+}
+
 pub struct TrainedEvaluator<'rt> {
     rt: &'rt Runtime,
     /// Warm-started supernet weights (§5.2.3 weight initialization).
     pretrained: BTreeMap<String, Tensor>,
     pub cfg: TrainedEvalConfig,
     ctx: Arc<EvalContext>,
+    oracle: Arc<dyn LatencyOracle>,
 }
 
 impl<'rt> TrainedEvaluator<'rt> {
@@ -410,7 +527,13 @@ impl<'rt> TrainedEvaluator<'rt> {
         pretrained: BTreeMap<String, Tensor>,
         cfg: TrainedEvalConfig,
     ) -> Self {
-        TrainedEvaluator { rt, pretrained, cfg, ctx: Arc::new(EvalContext::new()) }
+        TrainedEvaluator {
+            rt,
+            pretrained,
+            cfg,
+            ctx: Arc::new(EvalContext::new()),
+            oracle: Arc::new(super::oracle::AnalyticalOracle),
+        }
     }
 
     /// Share an evaluation context with the rest of the pipeline (the plan
@@ -420,36 +543,18 @@ impl<'rt> TrainedEvaluator<'rt> {
         self
     }
 
+    /// Score candidate latency through a different [`LatencyOracle`].
+    pub fn with_oracle(mut self, oracle: Arc<dyn LatencyOracle>) -> Self {
+        self.oracle = oracle;
+        self
+    }
+
     /// The per-tensor prune plan a scheme induces on the supernet.
     pub fn prune_plan(
         &self,
         scheme: &NpasScheme,
     ) -> BTreeMap<String, (PruneScheme, PruneRate)> {
-        let mut plan = BTreeMap::new();
-        for (i, c) in scheme.choices.iter().enumerate() {
-            if c.rate.is_dense() {
-                continue;
-            }
-            for t in c.filter.tensors(i) {
-                // depthwise 3-D tensors cannot take Pattern; fall back to
-                // block-punched (same compiler path)
-                let scheme_t = if c.scheme == PruneScheme::Pattern && t.contains("_dw")
-                    && !t.contains("dw_pw")
-                {
-                    PruneScheme::block_punched_default()
-                } else {
-                    c.scheme
-                };
-                plan.insert(t, (scheme_t, c.rate));
-            }
-        }
-        if !scheme.head_rate.is_dense() {
-            plan.insert(
-                "head_w".to_string(),
-                (PruneScheme::block_based_default(), scheme.head_rate),
-            );
-        }
-        plan
+        supernet_prune_plan(scheme)
     }
 
     /// Fast accuracy evaluation: prune → short retrain → held-out accuracy.
@@ -470,7 +575,7 @@ impl Evaluator for TrainedEvaluator<'_> {
         let accuracy = self.fast_accuracy(scheme).expect("fast evaluation failed");
         EvalOutcome {
             accuracy,
-            latency_ms: measure_scheme_with(&self.ctx, scheme, self.cfg.device),
+            latency_ms: self.oracle.latency_ms(&self.ctx, scheme, self.cfg.device),
         }
     }
 
@@ -480,6 +585,14 @@ impl Evaluator for TrainedEvaluator<'_> {
 
     fn name(&self) -> &'static str {
         "trained"
+    }
+
+    fn oracle_name(&self) -> &'static str {
+        self.oracle.name()
+    }
+
+    fn oracle_note(&self) -> Option<String> {
+        self.oracle.stats_note()
     }
 }
 
@@ -630,5 +743,81 @@ mod tests {
         }
         let (_, m_light) = scheme_footprint(&light);
         assert!(m_light < m_dense / 2);
+    }
+
+    fn mixed_scheme(rate: f32) -> NpasScheme {
+        let mut s = NpasScheme::dense(5);
+        for c in &mut s.choices {
+            c.rate = PruneRate::new(rate);
+            c.mixed = true;
+        }
+        s
+    }
+
+    #[test]
+    fn mixed_stage_compiles_to_per_layer_scheme_map() {
+        // a mixed scheme's deployment SparsityMap must assign *different*
+        // schemes to different layers of the same stage — that is the whole
+        // point of per-layer mapping — and every assignment must follow
+        // mixed_scheme_for on the layer's actual kind.
+        let entries = deployment_sparsity(&mixed_scheme(5.0));
+        assert!(!entries.is_empty());
+        let distinct: std::collections::BTreeSet<String> =
+            entries.iter().map(|(_, _, s, _)| s.to_string()).collect();
+        assert!(
+            distinct.len() >= 2,
+            "mixed stages collapsed to one scheme: {distinct:?}"
+        );
+        // uniform block-punched stays uniform (ignoring the head's
+        // block-based entry, which both shapes share)
+        let uniform =
+            deployment_sparsity(&scheme_with(5.0, PruneScheme::block_punched_default()));
+        let uniform_distinct: std::collections::BTreeSet<String> =
+            uniform.iter().map(|(_, _, s, _)| s.to_string()).collect();
+        assert_eq!(uniform_distinct.len(), 1);
+    }
+
+    #[test]
+    fn mixed_latency_differs_from_uniform_and_is_cached_identically() {
+        // mixed and uniform annotate the same graph differently, so they
+        // must compile to different plans (different measured numbers), and
+        // the cached path must stay bit-identical for mixed schemes too.
+        let ctx = EvalContext::new();
+        let mixed = mixed_scheme(5.0);
+        let uniform = scheme_with(5.0, PruneScheme::block_punched_default());
+        let lm = measure_scheme_with(&ctx, &mixed, &KRYO_485);
+        let lu = measure_scheme_with(&ctx, &uniform, &KRYO_485);
+        assert_ne!(lm, lu, "mixed plan identical to uniform");
+        assert_eq!(lm, measure_scheme(&mixed, &KRYO_485));
+    }
+
+    #[test]
+    fn mixed_accuracy_sits_between_unstructured_and_coarse() {
+        // per-layer mapping beats the uniform dominant scheme (x0.95) but
+        // cannot beat uniformly unstructured pruning
+        let ev = ProxyEvaluator::new(&KRYO_485);
+        let u = ev.accuracy(&scheme_with(6.0, PruneScheme::Unstructured));
+        let m = ev.accuracy(&mixed_scheme(6.0));
+        let p = ev.accuracy(&scheme_with(6.0, PruneScheme::Pattern));
+        let f = ev.accuracy(&scheme_with(6.0, PruneScheme::Filter));
+        // jitter is ±0.004/scheme ⇒ ±0.02 over 5 stages; the 3x3 mixed gap
+        // (0.055→0.05225 per stage) is smaller, so compare with slack to
+        // the coarse ends only
+        assert!(u > m, "unstructured {u} vs mixed {m}");
+        assert!(m > f, "mixed {m} vs filter {f}");
+        assert!(m > p - 0.03, "mixed {m} far below pattern {p}");
+    }
+
+    #[test]
+    fn mixed_prune_plan_mixes_tensor_schemes() {
+        // supernet-side: a mixed DwPw stage must block-punch its tensors
+        // while a mixed Conv3x3 stage patterns its 3x3 tensor
+        let mut s = mixed_scheme(5.0);
+        s.choices[1].filter = Branch::DwPw;
+        let plan = supernet_prune_plan(&s);
+        let (s0, _) = plan.get("b0_conv3x3").expect("3x3 tensor in plan");
+        assert_eq!(*s0, PruneScheme::Pattern);
+        let (s1, _) = plan.get("b1_dw").expect("dw tensor in plan");
+        assert_eq!(*s1, PruneScheme::block_punched_default());
     }
 }

@@ -4,6 +4,7 @@
 pub mod bo;
 pub mod evaluator;
 pub mod npas;
+pub mod oracle;
 pub mod phase1;
 pub mod phase2;
 pub mod phase3;
@@ -14,5 +15,8 @@ pub mod space;
 
 pub use evaluator::{EvalCacheStats, EvalContext, Evaluator, ProxyEvaluator, TrainedEvaluator};
 pub use npas::{NpasConfig, NpasReport};
+pub use oracle::{
+    AnalyticalOracle, CalibratedOracle, LatencyOracle, MeasuredOracle, OracleKind,
+};
 pub use reward::{EvalOutcome, RewardConfig};
 pub use space::{LayerChoice, NpasScheme};

@@ -13,9 +13,10 @@ use crate::runtime::Runtime;
 use crate::train::{Branch, SgdConfig, Trainer};
 
 use super::evaluator::{
-    measure_scheme_with, scheme_footprint, EvalCacheStats, EvalContext, Evaluator,
-    TrainedEvalConfig, TrainedEvaluator,
+    scheme_footprint, EvalCacheStats, EvalContext, Evaluator, TrainedEvalConfig,
+    TrainedEvaluator,
 };
+use super::oracle::OracleKind;
 use super::phase1;
 use super::phase2::{self, Phase2Config, Phase2Report};
 use super::phase3::{self, Phase3Config, Phase3Report};
@@ -36,6 +37,8 @@ pub struct NpasConfig {
     pub seed: u64,
     pub device: &'static DeviceSpec,
     pub opt: SgdConfig,
+    /// Which latency oracle scores candidates (and the final report).
+    pub oracle: OracleKind,
 }
 
 impl NpasConfig {
@@ -51,6 +54,7 @@ impl NpasConfig {
             seed: 42,
             device: &ADRENO_640,
             opt: SgdConfig::default(),
+            oracle: OracleKind::Analytical,
         }
     }
 
@@ -82,6 +86,8 @@ pub struct NpasReport {
     pub params: u64,
     pub conv_macs: u64,
     pub metrics_summary: String,
+    /// Which latency oracle produced every latency number above.
+    pub oracle: &'static str,
 }
 
 /// Run the full three-phase pipeline against the real artifact runtime.
@@ -112,15 +118,18 @@ pub fn run(rt: &Runtime, cfg: &NpasConfig, log: &mut EventLog) -> Result<NpasRep
 
     // --- Phase 2 -----------------------------------------------------------
     // one compile-once context for the whole pipeline: fast evaluations and
-    // the final report share the same plan cache
+    // the final report share the same plan cache (a measured oracle's
+    // compiled candidates land in it too)
     let ctx = Arc::new(EvalContext::new());
+    let oracle = cfg.oracle.build();
     let pretrained = tr.params.clone();
     let evaluator = TrainedEvaluator::new(
         rt,
         pretrained.clone(),
         TrainedEvalConfig { device: cfg.device, opt: cfg.opt.clone(), ..Default::default() },
     )
-    .with_context(ctx.clone());
+    .with_context(ctx.clone())
+    .with_oracle(oracle.clone());
     let mut agent =
         QAgent::new(&vec![Branch::Conv3x3; tr.blocks()], QConfig::default(), cfg.seed);
     let p2 = phase2::run(&mut agent, &evaluator, &cfg.phase2, &mut metrics, log);
@@ -134,20 +143,31 @@ pub fn run(rt: &Runtime, cfg: &NpasConfig, log: &mut EventLog) -> Result<NpasRep
     let scheme = p2.best_scheme.clone();
     let p3 = {
         let _t = metrics.time("phase3.time");
-        phase3::run(rt, &pretrained, &scheme, &cfg.phase3)?
+        phase3::run_with_oracle(
+            rt,
+            &pretrained,
+            &scheme,
+            &cfg.phase3,
+            oracle.as_ref(),
+            &ctx,
+            cfg.device,
+        )?
     };
+    log.log_oracle("phase3", p3.oracle, &oracle.stats_note().unwrap_or_default());
     log.log_note(&format!(
-        "phase3: winner {} final acc {:.3} sparsity {:.2}",
+        "phase3: winner {} final acc {:.3} sparsity {:.2} latency {:.2}ms",
         p3.winner.name(),
         p3.final_accuracy,
-        p3.final_sparsity
+        p3.final_sparsity,
+        p3.final_latency_ms,
     ));
 
     let (params, conv_macs) = scheme_footprint(&scheme);
+    metrics.set_label("oracle", oracle.name());
     let report = NpasReport {
         final_accuracy: p3.final_accuracy,
-        latency_cpu_ms: measure_scheme_with(&ctx, &scheme, &KRYO_485),
-        latency_gpu_ms: measure_scheme_with(&ctx, &scheme, &ADRENO_640),
+        latency_cpu_ms: oracle.latency_ms(&ctx, &scheme, &KRYO_485),
+        latency_gpu_ms: oracle.latency_ms(&ctx, &scheme, &ADRENO_640),
         params,
         conv_macs,
         phase1: p1,
@@ -155,6 +175,7 @@ pub fn run(rt: &Runtime, cfg: &NpasConfig, log: &mut EventLog) -> Result<NpasRep
         phase3: p3,
         scheme,
         metrics_summary: metrics.summary(),
+        oracle: oracle.name(),
     };
     log.flush().ok();
     Ok(report)

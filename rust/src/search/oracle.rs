@@ -1,0 +1,378 @@
+//! Latency oracles: the one seam through which every search phase scores a
+//! candidate's latency (the `h` of Eq. 1).
+//!
+//! NPAS's core claim is that the search must be *compiler-aware* — ranked by
+//! what the deployed, compiler-optimized binary costs. Three oracles trade
+//! fidelity against cost:
+//!
+//! * [`AnalyticalOracle`] — the roofline simulator's 100-run protocol via
+//!   `measure_scheme_with`: microseconds per candidate, bit-identical to the
+//!   pre-oracle scores (pinned by `tests/oracle_parity.rs`). The default.
+//! * [`MeasuredOracle`] — CPrune-style hardware-in-the-loop: compiles the
+//!   candidate through [`CompiledModel`] (sharing the search's `PlanCache`
+//!   and the executor's thread pool), executes it on the host kernels at a
+//!   reduced resolution, and scores wall-clock min-of-N with warmup. Scores
+//!   are memoized per (scheme fingerprint, device) and — by default —
+//!   rescaled to the analytical model's millisecond scale through a dense
+//!   anchor measurement, so `RewardConfig::target_ms` keeps its meaning
+//!   across oracles. Compile/execution failures fall back to the analytical
+//!   number (counted, surfaced via [`LatencyOracle::stats_note`]).
+//! * [`CalibratedOracle`] — the analytical model with per-band constants
+//!   fitted against measured kernel timings (`compiler::calibrate`): the
+//!   cheap oracle, rank-corrected by real measurements. Fits lazily once
+//!   per device and is deterministic afterwards.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::compiler::calibrate::{Calibration, CalibrationConfig};
+use crate::compiler::{DeviceSpec, Framework};
+use crate::graph::zoo::CandidateBlock;
+use crate::model::{CompiledModel, WallClock};
+
+use super::evaluator::{measure_scheme_with, scheme_sparsity, EvalContext};
+use super::space::NpasScheme;
+
+/// Object-safe, `Sync` candidate-latency scorer shared by `phase2`,
+/// `phase3`, the BO surrogate's reward stream, and the final report.
+/// Implementations must be deterministic per (scheme, device) within one
+/// process so repeated scoring of a candidate cannot reorder a search.
+pub trait LatencyOracle: Send + Sync + std::fmt::Debug {
+    /// Candidate latency h of Eq. 1 for `scheme` on `device`, in the
+    /// analytical model's millisecond scale (see [`MeasuredOracle`] for how
+    /// wall-clock measurements are normalized into it).
+    fn latency_ms(&self, ctx: &EvalContext, scheme: &NpasScheme, device: &DeviceSpec) -> f64;
+
+    /// Stable identifier recorded in reports, metrics labels and the event
+    /// log ("analytical" / "measured" / "calibrated").
+    fn name(&self) -> &'static str;
+
+    /// One-line diagnostic for the event log (measurement counts, fallback
+    /// counts, anchors, calibration residuals). `None` when stateless.
+    fn stats_note(&self) -> Option<String> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytical
+// ---------------------------------------------------------------------------
+
+/// The pre-refactor scoring path, unchanged: compile through the shared
+/// context and read `measure_plan`'s 100-run mean. Bit-identical to calling
+/// `measure_scheme_with` directly (regression-pinned).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticalOracle;
+
+impl LatencyOracle for AnalyticalOracle {
+    fn latency_ms(&self, ctx: &EvalContext, scheme: &NpasScheme, device: &DeviceSpec) -> f64 {
+        measure_scheme_with(ctx, scheme, device)
+    }
+
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Measured
+// ---------------------------------------------------------------------------
+
+/// Hardware-in-the-loop scoring: real host-kernel execution of the compiled
+/// candidate. See the module docs for the protocol.
+#[derive(Debug)]
+pub struct MeasuredOracle {
+    /// Measurement resolution: the deployment skeleton is rescaled to
+    /// `hw`×`hw` before execution (224×224 per candidate would dominate the
+    /// search; ranking is preserved because every candidate shrinks alike).
+    pub hw: usize,
+    /// Wall-clock protocol (warmup runs, timed runs, outlier trim).
+    pub wall: WallClock,
+    /// He-normal weight seed for the measured binaries (values do not
+    /// affect timing; one seed keeps packing work identical per candidate).
+    pub weight_seed: u64,
+    /// Intra-op workers for the executor — >1 routes through the global
+    /// thread pool, matching deployed execution.
+    pub intra_workers: usize,
+    /// Rescale host wall-clock into the analytical model's ms scale via a
+    /// dense anchor (one per device). Disable for raw host milliseconds.
+    pub normalize: bool,
+    scores: Mutex<HashMap<(u64, String), f64>>,
+    anchors: Mutex<HashMap<String, f64>>,
+    measured: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+impl Default for MeasuredOracle {
+    fn default() -> Self {
+        MeasuredOracle::new()
+    }
+}
+
+impl MeasuredOracle {
+    pub fn new() -> Self {
+        MeasuredOracle {
+            hw: 32,
+            wall: WallClock::default(),
+            weight_seed: 0xC0FFEE,
+            intra_workers: 2,
+            normalize: true,
+            scores: Mutex::new(HashMap::new()),
+            anchors: Mutex::new(HashMap::new()),
+            measured: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+        }
+    }
+
+    /// (successful measurements, analytical fallbacks) so far.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.measured.load(Ordering::Relaxed), self.fallbacks.load(Ordering::Relaxed))
+    }
+
+    /// Compile the candidate at measurement resolution and execute it;
+    /// `None` when compilation or execution fails (the caller falls back).
+    fn raw_host_ms(
+        &self,
+        ctx: &EvalContext,
+        scheme: &NpasScheme,
+        device: &DeviceSpec,
+    ) -> Option<f64> {
+        let blocks: Vec<CandidateBlock> =
+            scheme.choices.iter().map(|c| c.filter.to_candidate()).collect();
+        let structure = ctx.deploy_structure(&blocks);
+        let sp = scheme_sparsity(&structure.0, &structure.1, scheme);
+        // rescaled() suffixes the network name, so the shared plan cache
+        // keys measurement plans apart from the analytical full-res plans
+        let net = structure.0.rescaled(self.hw);
+        let model = CompiledModel::build(net)
+            .scheme(sp)
+            .weights(self.weight_seed)
+            .target(device, Framework::Ours)
+            .plan_cache(ctx.plan_cache.clone())
+            .intra_workers(self.intra_workers)
+            .compile()
+            .ok()?;
+        Some(model.wall_clock(&self.wall).ok()?.min_ms)
+    }
+
+    /// Simulated-ms per host-ms conversion for `device`, fitted once from
+    /// the dense 5-stage reference scheme.
+    fn anchor(&self, ctx: &EvalContext, device: &DeviceSpec) -> f64 {
+        if let Some(&a) = self.anchors.lock().unwrap().get(device.name) {
+            return a;
+        }
+        let dense = NpasScheme::dense(5);
+        let sim = measure_scheme_with(ctx, &dense, device);
+        let a = match self.raw_host_ms(ctx, &dense, device) {
+            Some(host) if host > 0.0 => sim / host,
+            _ => 1.0,
+        };
+        self.anchors.lock().unwrap().insert(device.name.to_string(), a);
+        a
+    }
+}
+
+impl LatencyOracle for MeasuredOracle {
+    fn latency_ms(&self, ctx: &EvalContext, scheme: &NpasScheme, device: &DeviceSpec) -> f64 {
+        let key = (scheme.fingerprint(), device.name.to_string());
+        if let Some(&v) = self.scores.lock().unwrap().get(&key) {
+            return v;
+        }
+        let score = match self.raw_host_ms(ctx, scheme, device) {
+            Some(host) => {
+                self.measured.fetch_add(1, Ordering::Relaxed);
+                if self.normalize {
+                    host * self.anchor(ctx, device)
+                } else {
+                    host
+                }
+            }
+            None => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                measure_scheme_with(ctx, scheme, device)
+            }
+        };
+        self.scores.lock().unwrap().insert(key, score);
+        score
+    }
+
+    fn name(&self) -> &'static str {
+        "measured"
+    }
+
+    fn stats_note(&self) -> Option<String> {
+        let (m, f) = self.counts();
+        let anchors = self.anchors.lock().unwrap();
+        let anchor_note: Vec<String> =
+            anchors.iter().map(|(d, a)| format!("{d}: x{a:.3}")).collect();
+        Some(format!(
+            "measured {m} candidates @ {}x{} ({} analytical fallbacks); anchors [{}]",
+            self.hw,
+            self.hw,
+            f,
+            anchor_note.join(", ")
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Calibrated
+// ---------------------------------------------------------------------------
+
+/// The analytical roofline with per-band scales fitted against measured
+/// kernel timings (`compiler::calibrate`). Fitting happens lazily, once per
+/// device; scoring is then pure arithmetic on the compiled plan —
+/// deterministic and as cheap as the analytical oracle.
+#[derive(Debug)]
+pub struct CalibratedOracle {
+    pub cfg: CalibrationConfig,
+    fits: Mutex<HashMap<String, Option<Arc<Calibration>>>>,
+}
+
+impl Default for CalibratedOracle {
+    fn default() -> Self {
+        CalibratedOracle::new(CalibrationConfig::default())
+    }
+}
+
+impl CalibratedOracle {
+    pub fn new(cfg: CalibrationConfig) -> Self {
+        CalibratedOracle { fits: Mutex::new(HashMap::new()), cfg }
+    }
+
+    /// The per-device calibration, fitted on first use. `None` (cached) when
+    /// the fit itself failed — scoring then falls back to the analytical
+    /// path rather than erroring out of a search.
+    pub fn calibration(&self, device: &DeviceSpec) -> Option<Arc<Calibration>> {
+        if let Some(c) = self.fits.lock().unwrap().get(device.name) {
+            return c.clone();
+        }
+        let fitted = Calibration::fit(device, &self.cfg).ok().map(Arc::new);
+        let mut fits = self.fits.lock().unwrap();
+        fits.entry(device.name.to_string()).or_insert(fitted).clone()
+    }
+}
+
+impl LatencyOracle for CalibratedOracle {
+    fn latency_ms(&self, ctx: &EvalContext, scheme: &NpasScheme, device: &DeviceSpec) -> f64 {
+        let cal = match self.calibration(device) {
+            Some(cal) => cal,
+            None => return measure_scheme_with(ctx, scheme, device),
+        };
+        let blocks: Vec<CandidateBlock> =
+            scheme.choices.iter().map(|c| c.filter.to_candidate()).collect();
+        let structure = ctx.deploy_structure(&blocks);
+        let sp = scheme_sparsity(&structure.0, &structure.1, scheme);
+        let plan = ctx.plan_cache.get_or_compile(&structure.0, &sp, device, Framework::Ours);
+        cal.predict_plan_ms(&plan, device)
+    }
+
+    fn name(&self) -> &'static str {
+        "calibrated"
+    }
+
+    fn stats_note(&self) -> Option<String> {
+        let fits = self.fits.lock().unwrap();
+        if fits.is_empty() {
+            return Some("calibration pending (fits on first score)".to_string());
+        }
+        let notes: Vec<String> = fits
+            .iter()
+            .map(|(d, c)| match c {
+                Some(c) => format!(
+                    "{d}: residual mean {:.1}% / max {:.1}%",
+                    c.residual_mean * 100.0,
+                    c.residual_max * 100.0
+                ),
+                None => format!("{d}: fit failed (analytical fallback)"),
+            })
+            .collect();
+        Some(notes.join("; "))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection
+// ---------------------------------------------------------------------------
+
+/// CLI/config-level oracle selection (`--oracle measured|analytical|calibrated`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OracleKind {
+    Analytical,
+    Measured,
+    Calibrated,
+}
+
+impl Default for OracleKind {
+    fn default() -> Self {
+        OracleKind::Analytical
+    }
+}
+
+impl OracleKind {
+    pub fn parse(s: &str) -> Option<OracleKind> {
+        match s {
+            "analytical" => Some(OracleKind::Analytical),
+            "measured" => Some(OracleKind::Measured),
+            "calibrated" => Some(OracleKind::Calibrated),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OracleKind::Analytical => "analytical",
+            OracleKind::Measured => "measured",
+            OracleKind::Calibrated => "calibrated",
+        }
+    }
+
+    pub fn build(self) -> Arc<dyn LatencyOracle> {
+        match self {
+            OracleKind::Analytical => Arc::new(AnalyticalOracle),
+            OracleKind::Measured => Arc::new(MeasuredOracle::new()),
+            OracleKind::Calibrated => Arc::new(CalibratedOracle::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::{ADRENO_640, KRYO_485};
+    use crate::search::evaluator::measure_scheme;
+
+    #[test]
+    fn analytical_oracle_is_measure_scheme_with() {
+        let ctx = EvalContext::new();
+        let scheme = NpasScheme::dense(5);
+        for device in [&KRYO_485, &ADRENO_640] {
+            let via_oracle = AnalyticalOracle.latency_ms(&ctx, &scheme, device);
+            assert_eq!(via_oracle, measure_scheme(&scheme, device));
+            assert_eq!(via_oracle, measure_scheme_with(&ctx, &scheme, device));
+        }
+    }
+
+    #[test]
+    fn oracle_kind_round_trips() {
+        for kind in [OracleKind::Analytical, OracleKind::Measured, OracleKind::Calibrated] {
+            assert_eq!(OracleKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        assert_eq!(OracleKind::parse("wall-clock"), None);
+    }
+
+    #[test]
+    fn measured_oracle_memoizes_and_is_deterministic_per_process() {
+        let ctx = EvalContext::new();
+        let oracle = MeasuredOracle { hw: 12, normalize: false, ..MeasuredOracle::new() };
+        let scheme = NpasScheme::dense(5);
+        let a = oracle.latency_ms(&ctx, &scheme, &KRYO_485);
+        let b = oracle.latency_ms(&ctx, &scheme, &KRYO_485);
+        assert_eq!(a, b, "memoized score changed between calls");
+        assert!(a > 0.0);
+        let (measured, fallbacks) = oracle.counts();
+        assert_eq!(measured + fallbacks, 1, "second call must hit the memo");
+    }
+}

@@ -42,6 +42,9 @@ pub struct Phase2Report {
     pub pool_generated: usize,
     /// (round, accuracy, latency_ms, reward) per evaluation, in order.
     pub history: Vec<(usize, f32, f64, f64)>,
+    /// Which latency oracle scored this run's candidates (from
+    /// `Evaluator::oracle_name`).
+    pub oracle: &'static str,
 }
 
 /// Run Algorithm 1.
@@ -59,6 +62,9 @@ pub fn run(
     // cache counters are cumulative over the evaluator's lifetime; snapshot
     // them so a shared EvalContext is not double-counted across runs
     let cache_before = evaluator.cache_stats().unwrap_or_default();
+    let oracle = evaluator.oracle_name();
+    metrics.set_label("phase2.oracle", oracle);
+    log.log_oracle("phase2", oracle, &evaluator.oracle_note().unwrap_or_default());
 
     for round in 0..cfg.rounds {
         let _t = metrics.time("phase2.time");
@@ -121,6 +127,7 @@ pub fn run(
         evaluations: history.len(),
         pool_generated,
         history,
+        oracle,
     }
 }
 
@@ -207,8 +214,11 @@ mod tests {
         let mut metrics = Metrics::new();
         let mut log = EventLog::memory();
         let rep = run(&mut agent, &ev, &cfg, &mut metrics, &mut log);
-        assert_eq!(rep.history.len(), log.len());
+        // one oracle-announcement event precedes the per-eval events
+        assert_eq!(rep.history.len() + 1, log.len());
         assert_eq!(metrics.count("phase2.evaluations"), rep.history.len() as u64);
         assert!(rep.pool_generated >= rep.evaluations);
+        assert_eq!(rep.oracle, "analytical");
+        assert_eq!(metrics.label("phase2.oracle").as_deref(), Some("analytical"));
     }
 }

@@ -16,7 +16,8 @@ use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::train::{Branch, SgdConfig, Trainer};
 
-use super::evaluator::TrainedEvaluator;
+use super::evaluator::{EvalContext, TrainedEvaluator};
+use super::oracle::{AnalyticalOracle, LatencyOracle};
 use super::space::NpasScheme;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -87,6 +88,11 @@ pub struct Phase3Report {
     pub winner: PruneAlgo,
     pub final_accuracy: f32,
     pub final_sparsity: f32,
+    /// Deployment latency of the searched scheme as scored by `oracle` (the
+    /// h the winning model is claimed to hit).
+    pub final_latency_ms: f64,
+    /// Which latency oracle produced `final_latency_ms`.
+    pub oracle: &'static str,
 }
 
 fn fresh_trainer<'rt>(
@@ -178,13 +184,37 @@ pub fn run_algorithm<'rt>(
     Ok(tr)
 }
 
-/// Full Phase 3: trial every candidate algorithm, pick the best, run it
-/// best-effort with knowledge distillation from the dense pretrained model.
+/// Full Phase 3 with the default (analytical) latency oracle on the paper's
+/// GPU target — see [`run_with_oracle`].
 pub fn run(
     rt: &Runtime,
     pretrained: &BTreeMap<String, Tensor>,
     scheme: &NpasScheme,
     cfg: &Phase3Config,
+) -> Result<Phase3Report> {
+    run_with_oracle(
+        rt,
+        pretrained,
+        scheme,
+        cfg,
+        &AnalyticalOracle,
+        &EvalContext::new(),
+        &crate::compiler::device::ADRENO_640,
+    )
+}
+
+/// Full Phase 3: trial every candidate algorithm, pick the best, run it
+/// best-effort with knowledge distillation from the dense pretrained model.
+/// The report's final latency is scored by `oracle` on `device` through the
+/// shared `ctx` (so a measured oracle reuses the search's plan cache).
+pub fn run_with_oracle(
+    rt: &Runtime,
+    pretrained: &BTreeMap<String, Tensor>,
+    scheme: &NpasScheme,
+    cfg: &Phase3Config,
+    oracle: &dyn LatencyOracle,
+    ctx: &EvalContext,
+    device: &crate::compiler::DeviceSpec,
 ) -> Result<Phase3Report> {
     let helper = TrainedEvaluator::new(rt, pretrained.clone(), Default::default());
     let plan = helper.prune_plan(scheme);
@@ -211,8 +241,16 @@ pub fn run(
     final_tr.train(cfg.final_steps / 2)?;
     let final_accuracy = final_tr.evaluate(cfg.eval_batches)?;
     let final_sparsity = final_tr.sparsity();
+    let final_latency_ms = oracle.latency_ms(ctx, scheme, device);
 
-    Ok(Phase3Report { trials, winner, final_accuracy, final_sparsity })
+    Ok(Phase3Report {
+        trials,
+        winner,
+        final_accuracy,
+        final_sparsity,
+        final_latency_ms,
+        oracle: oracle.name(),
+    })
 }
 
 #[cfg(test)]

@@ -281,4 +281,23 @@ mod tests {
         let (s2, _) = a2.rollout();
         assert_eq!(s1.fingerprint(), s2.fingerprint());
     }
+
+    #[test]
+    fn exploration_reaches_mixed_actions() {
+        // the agent's action tables come straight from layer_actions, so
+        // per-layer mixed candidates must be generatable — pure-exploration
+        // rollouts should hit one quickly (mixed actions are ~6 of ~40+
+        // actions per depth)
+        let mut a = agent(11);
+        a.epsilon = 1.0;
+        let mut saw_mixed = false;
+        for _ in 0..50 {
+            let (s, _) = a.rollout();
+            if s.choices.iter().any(|c| c.mixed) {
+                saw_mixed = true;
+                break;
+            }
+        }
+        assert!(saw_mixed, "50 pure-exploration rollouts never sampled a mixed action");
+    }
 }

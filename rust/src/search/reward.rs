@@ -13,6 +13,12 @@ pub struct RewardConfig {
     pub alpha: f64,
     /// Trajectory length T (number of searchable layers).
     pub horizon: usize,
+    /// Measurement-noise margin added to H before the penalty kicks in.
+    /// The analytical oracle is deterministic, so the default is 0.0 (Eq. 1
+    /// exactly, bit-identical to the pre-margin config); a wall-clock
+    /// oracle's min-of-N still jitters run-to-run, and penalizing inside
+    /// the noise floor would churn the agent on phantom violations.
+    pub margin_ms: f64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -23,12 +29,20 @@ pub struct EvalOutcome {
 
 impl RewardConfig {
     pub fn new(target_ms: f64, alpha: f64, horizon: usize) -> Self {
-        RewardConfig { target_ms, alpha, horizon }
+        RewardConfig { target_ms, alpha, horizon, margin_ms: 0.0 }
+    }
+
+    /// Tolerate `margin_ms` of measurement noise above the target before
+    /// penalizing (for wall-clock oracles; see `margin_ms`).
+    pub fn with_margin(mut self, margin_ms: f64) -> Self {
+        self.margin_ms = margin_ms.max(0.0);
+        self
     }
 
     /// Final reward r_T.
     pub fn final_reward(&self, o: EvalOutcome) -> f64 {
-        o.accuracy as f64 - self.alpha * (o.latency_ms - self.target_ms).max(0.0)
+        o.accuracy as f64
+            - self.alpha * (o.latency_ms - (self.target_ms + self.margin_ms)).max(0.0)
     }
 
     /// Shaped per-step reward r_t = r_T / T.
@@ -37,7 +51,7 @@ impl RewardConfig {
     }
 
     pub fn meets_target(&self, o: EvalOutcome) -> bool {
-        o.latency_ms <= self.target_ms
+        o.latency_ms <= self.target_ms + self.margin_ms
     }
 }
 
@@ -45,7 +59,8 @@ impl RewardConfig {
 mod tests {
     use super::*;
 
-    const CFG: RewardConfig = RewardConfig { target_ms: 7.0, alpha: 0.05, horizon: 5 };
+    const CFG: RewardConfig =
+        RewardConfig { target_ms: 7.0, alpha: 0.05, horizon: 5, margin_ms: 0.0 };
 
     #[test]
     fn no_penalty_under_target() {
@@ -73,5 +88,21 @@ mod tests {
         let o = EvalOutcome { accuracy: 0.7, latency_ms: 8.0 };
         let total: f64 = (0..CFG.horizon).map(|_| CFG.step_reward(o)).sum();
         assert!((total - CFG.final_reward(o)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn margin_absorbs_noise_but_not_real_violations() {
+        let noisy = RewardConfig::new(7.0, 0.05, 5).with_margin(0.5);
+        // inside the noise floor: no penalty, still "meets target"
+        let near = EvalOutcome { accuracy: 0.8, latency_ms: 7.4 };
+        assert!((noisy.final_reward(near) - 0.8).abs() < 1e-9);
+        assert!(noisy.meets_target(near));
+        assert!(!CFG.meets_target(near));
+        // beyond it: penalized from target + margin, not from target
+        let over = EvalOutcome { accuracy: 0.8, latency_ms: 9.5 };
+        assert!((noisy.final_reward(over) - (0.8 - 0.05 * 2.0)).abs() < 1e-9);
+        // zero margin is bit-identical to the pre-margin config
+        let o = EvalOutcome { accuracy: 0.8, latency_ms: 9.0 };
+        assert_eq!(RewardConfig::new(7.0, 0.05, 5).final_reward(o), CFG.final_reward(o));
     }
 }

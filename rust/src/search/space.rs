@@ -1,6 +1,16 @@
 //! The NPAS search space (paper Table 1) and its per-layer action
 //! enumeration.
+//!
+//! Beyond the paper's uniform per-stage `(scheme, rate)` actions, the space
+//! also carries *mixed* actions: a stage tagged `mixed` assigns each of its
+//! layers the scheme best suited to that layer's kernel shape
+//! ([`mixed_scheme_for`]) instead of one scheme for the whole stage — the
+//! per-layer mixed `SparsityMap` candidates of "Automatic Mapping of the
+//! Best-Suited DNN Pruning Schemes" (PAPERS.md). Non-mixed choices keep
+//! their exact pre-mixed labels and fingerprints (bit-identity contract for
+//! the analytical oracle and the proxy accuracy jitter).
 
+use crate::graph::layer::LayerKind;
 use crate::pruning::{PruneRate, PruneScheme};
 use crate::train::Branch;
 
@@ -8,8 +18,13 @@ use crate::train::Branch;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerChoice {
     pub filter: Branch,
+    /// Stage-uniform scheme; ignored (kept as the canonical block-punched
+    /// fallback) when `mixed` is set.
     pub scheme: PruneScheme,
     pub rate: PruneRate,
+    /// Per-layer best-suited scheme assignment instead of `scheme` on every
+    /// layer of the stage (see [`mixed_scheme_for`]).
+    pub mixed: bool,
 }
 
 impl LayerChoice {
@@ -19,12 +34,32 @@ impl LayerChoice {
             filter: Branch::Conv3x3,
             scheme: PruneScheme::block_punched_default(),
             rate: PruneRate::new(1.0),
+            mixed: false,
         }
     }
 
-    /// Compact label for WL-kernel hashing and logs.
+    /// Compact label for WL-kernel hashing and logs. Non-mixed labels are
+    /// byte-identical to the pre-mixed format (the GP's WL features and the
+    /// event log must not shift under existing schemes).
     pub fn label(&self) -> String {
-        format!("{:?}|{}|{:.1}", self.filter, self.scheme.short_name(), self.rate.0)
+        if self.mixed {
+            format!("{:?}|mixed|{:.1}", self.filter, self.rate.0)
+        } else {
+            format!("{:?}|{}|{:.1}", self.filter, self.scheme.short_name(), self.rate.0)
+        }
+    }
+}
+
+/// The scheme best suited to one layer's shape — the per-layer assignment a
+/// `mixed` stage compiles to: Pattern where it is legal and fast (dense-ish
+/// 3×3 convs keep Winograd-friendly structure), block-punched on pointwise
+/// and depthwise convs (Pattern is undefined for 1×1 and per-channel 3-D
+/// tensors), block-based on FC layers (GEMV-tileable).
+pub fn mixed_scheme_for(kind: &LayerKind) -> PruneScheme {
+    match kind {
+        LayerKind::Conv2d { kh: 3, kw: 3, depthwise: false, .. } => PruneScheme::Pattern,
+        LayerKind::Linear { .. } => PruneScheme::block_based_default(),
+        _ => PruneScheme::block_punched_default(),
     }
 }
 
@@ -64,6 +99,7 @@ pub fn layer_actions(orig: Branch) -> Vec<LayerChoice> {
                 filter: b,
                 scheme: PruneScheme::Filter,
                 rate: PruneRate::new(1.0),
+                mixed: false,
             });
             continue;
         }
@@ -72,8 +108,26 @@ pub fn layer_actions(orig: Branch) -> Vec<LayerChoice> {
                 if rate == 1.0 && scheme != PruneScheme::Filter {
                     continue; // dense is dense: canonicalize to one action
                 }
-                out.push(LayerChoice { filter: b, scheme, rate: PruneRate::new(rate) });
+                out.push(LayerChoice {
+                    filter: b,
+                    scheme,
+                    rate: PruneRate::new(rate),
+                    mixed: false,
+                });
             }
+        }
+        // mixed actions: one per non-dense rate — the stage's layers each
+        // take their best-suited scheme instead of a uniform one
+        for &rate in &PruneRate::SPACE {
+            if rate == 1.0 {
+                continue; // dense mixed is just dense
+            }
+            out.push(LayerChoice {
+                filter: b,
+                scheme: PruneScheme::block_punched_default(),
+                rate: PruneRate::new(rate),
+                mixed: true,
+            });
         }
     }
     out
@@ -95,7 +149,11 @@ impl NpasScheme {
         }
     }
 
-    /// Stable hash for dedup / reproducible pseudo-noise.
+    /// Stable hash for dedup / reproducible pseudo-noise. Non-mixed schemes
+    /// hash exactly as they did before mixed actions existed (the proxy
+    /// accuracy jitter is seeded from this hash, so perturbing it would
+    /// silently move every pinned number); a mixed choice folds a high bit
+    /// into its scheme code, far above the block-geometry bits.
     pub fn fingerprint(&self) -> u64 {
         let mut h = 0xcbf29ce484222325u64; // FNV-1a
         let mut eat = |b: u64| {
@@ -104,7 +162,7 @@ impl NpasScheme {
         };
         for c in &self.choices {
             eat(c.filter as u64);
-            eat(match c.scheme {
+            let code = match c.scheme {
                 PruneScheme::Unstructured => 1,
                 PruneScheme::Filter => 2,
                 PruneScheme::Pattern => 3,
@@ -112,7 +170,8 @@ impl NpasScheme {
                 PruneScheme::BlockBased { brows, bcols } => {
                     5 + ((brows as u64) << 8) + ((bcols as u64) << 16)
                 }
-            });
+            };
+            eat(if c.mixed { code | 1 << 40 } else { code });
             eat((c.rate.0 * 10.0) as u64);
         }
         eat((self.head_rate.0 * 10.0) as u64);
@@ -182,5 +241,55 @@ mod tests {
         let skips: Vec<_> = acts.iter().filter(|c| c.filter == Branch::Skip).collect();
         assert_eq!(skips.len(), 1);
         assert!(skips[0].rate.is_dense());
+    }
+
+    #[test]
+    fn mixed_actions_present_for_every_prunable_branch() {
+        let acts = layer_actions(Branch::Conv3x3);
+        for b in Branch::ALL {
+            let mixed: Vec<_> =
+                acts.iter().filter(|c| c.filter == b && c.mixed).collect();
+            if b == Branch::Skip {
+                assert!(mixed.is_empty(), "skip cannot be mixed-pruned");
+            } else {
+                // one mixed action per non-dense rate
+                assert_eq!(mixed.len(), PruneRate::SPACE.len() - 1, "{b:?}");
+                assert!(mixed.iter().all(|c| !c.rate.is_dense()));
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_flag_changes_fingerprint_and_label_only_when_set() {
+        let uniform = NpasScheme::dense(5);
+        let mut tagged = uniform.clone();
+        tagged.choices[1].rate = PruneRate::new(5.0);
+        let mut mixed = tagged.clone();
+        mixed.choices[1].mixed = true;
+        assert_ne!(tagged.fingerprint(), mixed.fingerprint());
+        assert_ne!(tagged.choices[1].label(), mixed.choices[1].label());
+        assert!(mixed.choices[1].label().contains("mixed"));
+        // non-mixed labels carry no trace of the flag
+        assert!(!tagged.choices[1].label().contains("mixed"));
+    }
+
+    #[test]
+    fn mixed_scheme_for_respects_layer_shapes() {
+        let dense3x3 = LayerKind::Conv2d {
+            kh: 3, kw: 3, cin: 64, cout: 64, stride: 1, depthwise: false,
+        };
+        let dw3x3 = LayerKind::Conv2d {
+            kh: 3, kw: 3, cin: 64, cout: 64, stride: 1, depthwise: true,
+        };
+        let pw = LayerKind::Conv2d {
+            kh: 1, kw: 1, cin: 64, cout: 128, stride: 1, depthwise: false,
+        };
+        let fc = LayerKind::Linear { din: 1280, dout: 1000 };
+        assert_eq!(mixed_scheme_for(&dense3x3), PruneScheme::Pattern);
+        assert_eq!(mixed_scheme_for(&dw3x3), PruneScheme::block_punched_default());
+        assert_eq!(mixed_scheme_for(&pw), PruneScheme::block_punched_default());
+        assert_eq!(mixed_scheme_for(&fc), PruneScheme::block_based_default());
+        // the Pattern assignment must actually be legal on its target shape
+        assert!(PruneScheme::Pattern.applicable_to_kernel(3, 3));
     }
 }

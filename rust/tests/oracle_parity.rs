@@ -1,0 +1,225 @@
+//! Oracle regression wall for the measured-latency evaluation stack.
+//!
+//! Three contracts, in decreasing strictness:
+//!
+//! 1. **Bit identity** — `AnalyticalOracle` must return *exactly* what the
+//!    pre-oracle `measure_scheme`/`measure_scheme_with` path returned, for
+//!    random schemes on both devices. The `LatencyOracle` refactor is a
+//!    seam, not a model change.
+//! 2. **Rank agreement** — the analytical ordering of candidates must agree
+//!    with the measured wall-clock ordering (Spearman ρ). Ranking is what
+//!    steers the search; this is the stack's reason to exist.
+//! 3. **Calibration residual** — the fitted per-band model must predict
+//!    host latency of held-out whole networks within a lenient relative
+//!    error band.
+//!
+//! Contracts 2 and 3 run real kernels on a possibly noisy shared runner;
+//! setting `NPAS_BENCH_LENIENT` demotes their acceptance asserts to
+//! printed warnings (same convention as `benches/engine_throughput.rs`).
+
+use std::sync::Arc;
+
+use npas::bench::spearman;
+use npas::compiler::device::{ADRENO_640, KRYO_485};
+use npas::compiler::{Calibration, CalibrationConfig};
+use npas::coordinator::{EventLog, Metrics};
+use npas::pruning::{PruneRate, PruneScheme};
+use npas::search::evaluator::{measure_scheme, measure_scheme_with};
+use npas::search::phase2::{self, Phase2Config};
+use npas::search::qlearning::{QAgent, QConfig};
+use npas::search::space::layer_actions;
+use npas::search::{
+    AnalyticalOracle, EvalContext, LatencyOracle, MeasuredOracle, NpasScheme, ProxyEvaluator,
+    RewardConfig,
+};
+use npas::tensor::XorShift64Star;
+use npas::train::Branch;
+use npas::WallClock;
+
+fn lenient() -> bool {
+    std::env::var_os("NPAS_BENCH_LENIENT").is_some()
+}
+
+/// Acceptance assert that `NPAS_BENCH_LENIENT` demotes to a warning.
+fn accept(ok: bool, msg: &str) {
+    if ok {
+        return;
+    }
+    if lenient() {
+        println!("LENIENT: acceptance demoted by NPAS_BENCH_LENIENT: {msg}");
+    } else {
+        panic!("{msg}");
+    }
+}
+
+fn random_schemes(n: usize, seed: u64) -> Vec<NpasScheme> {
+    let mut rng = XorShift64Star::new(seed);
+    let acts = layer_actions(Branch::Conv3x3);
+    (0..n)
+        .map(|_| NpasScheme {
+            choices: (0..5)
+                .map(|_| acts[rng.next_range(acts.len() as u64) as usize])
+                .collect(),
+            head_rate: PruneRate::new(PruneRate::SPACE[rng.next_range(7) as usize]),
+        })
+        .collect()
+}
+
+/// A fast wall-clock protocol for debug-mode test runs.
+fn quick_wall() -> WallClock {
+    WallClock { warmup: 1, runs: 3, trim: 0.0, input_seed: 0x7E57 }
+}
+
+// ---------------------------------------------------------------------------
+// 1. bit identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn analytical_oracle_bit_identical_to_pre_oracle_path() {
+    let ctx = EvalContext::new();
+    let oracle: Arc<dyn LatencyOracle> = Arc::new(AnalyticalOracle);
+    for scheme in random_schemes(16, 0xDEC0DE) {
+        for device in [&KRYO_485, &ADRENO_640] {
+            let via_oracle = oracle.latency_ms(&ctx, &scheme, device);
+            assert_eq!(
+                via_oracle,
+                measure_scheme_with(&ctx, &scheme, device),
+                "oracle diverged from measure_scheme_with"
+            );
+            assert_eq!(
+                via_oracle,
+                measure_scheme(&scheme, device),
+                "oracle diverged from the uncached reference path"
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_schemes_keep_bit_identity() {
+    // the per-layer mixed extension must not disturb non-mixed scoring, and
+    // mixed scoring itself must be cache-stable
+    let ctx = EvalContext::new();
+    let mut mixed = NpasScheme::dense(5);
+    for c in &mut mixed.choices {
+        c.rate = PruneRate::new(5.0);
+        c.mixed = true;
+    }
+    let mut uniform = mixed.clone();
+    for c in &mut uniform.choices {
+        c.mixed = false;
+        c.scheme = PruneScheme::block_punched_default();
+    }
+    assert_ne!(mixed.fingerprint(), uniform.fingerprint());
+    for scheme in [&mixed, &uniform] {
+        let cold = measure_scheme_with(&ctx, scheme, &KRYO_485);
+        let hot = measure_scheme_with(&ctx, scheme, &KRYO_485);
+        assert_eq!(cold, hot);
+        assert_eq!(cold, AnalyticalOracle.latency_ms(&ctx, scheme, &KRYO_485));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. rank agreement
+// ---------------------------------------------------------------------------
+
+#[test]
+fn analytical_and_measured_orderings_agree() {
+    // candidates spanning a wide compute range: dense down to 10x-pruned,
+    // plus lighter filter types — the orderings must broadly agree even
+    // though the absolute scales are unrelated
+    let mut schemes = vec![NpasScheme::dense(5)];
+    for rate in [2.0f32, 3.0, 5.0, 10.0] {
+        let mut s = NpasScheme::dense(5);
+        for c in &mut s.choices {
+            c.scheme = PruneScheme::block_punched_default();
+            c.rate = PruneRate::new(rate);
+        }
+        schemes.push(s);
+    }
+    let mut light = NpasScheme::dense(5);
+    for c in &mut light.choices {
+        c.filter = Branch::DwPw;
+    }
+    schemes.push(light);
+
+    let ctx = EvalContext::new();
+    let mut measured_oracle = MeasuredOracle::new();
+    measured_oracle.hw = 12;
+    measured_oracle.wall = quick_wall();
+    measured_oracle.normalize = false; // raw host ms: ranking only
+
+    let analytical: Vec<f64> =
+        schemes.iter().map(|s| AnalyticalOracle.latency_ms(&ctx, s, &KRYO_485)).collect();
+    let measured: Vec<f64> =
+        schemes.iter().map(|s| measured_oracle.latency_ms(&ctx, s, &KRYO_485)).collect();
+
+    let (ok, fallbacks) = measured_oracle.counts();
+    assert_eq!(ok + fallbacks, schemes.len() as u64);
+    accept(fallbacks == 0, &format!("{fallbacks} measured candidates fell back"));
+
+    let rho = spearman(&analytical, &measured);
+    println!("analytical-vs-measured Spearman rho = {rho:.3}");
+    accept(
+        rho > 0.5,
+        &format!("rank agreement too weak: rho {rho:.3}, analytical {analytical:?}, measured {measured:?}"),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. calibration residual
+// ---------------------------------------------------------------------------
+
+#[test]
+fn calibration_residual_within_band() {
+    let cfg = CalibrationConfig {
+        hw: 16,
+        channels: 16,
+        wall: quick_wall(),
+        ..CalibrationConfig::default()
+    };
+    let cal = Calibration::fit(&KRYO_485, &cfg).expect("calibration fit");
+    println!("{}", cal.summary());
+    assert!(cal.residual_mean.is_finite() && cal.residual_mean >= 0.0);
+    assert!(cal.residual_max >= cal.residual_mean);
+    // lenient pin: per-band scaling of a roofline should land the host
+    // prediction within ~2x of the measured wall clock on held-out nets
+    accept(
+        cal.residual_mean < 2.0,
+        &format!("calibration residual mean {:.1}%", cal.residual_mean * 100.0),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// search smoke: phase 2 steered end-to-end by measured latency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn phase2_runs_on_measured_oracle() {
+    let mut oracle = MeasuredOracle::new();
+    oracle.hw = 12;
+    oracle.wall = quick_wall();
+    let oracle = Arc::new(oracle);
+    let shared: Arc<dyn LatencyOracle> = oracle.clone();
+    let ev = ProxyEvaluator::new(&KRYO_485).with_oracle(shared);
+
+    let mut cfg = Phase2Config::small(RewardConfig::new(20.0, 0.05, 5));
+    cfg.rounds = 2;
+    cfg.pool_size = 8;
+    cfg.bo_batch = 2;
+    let mut agent = QAgent::new(&[Branch::Conv3x3; 5], QConfig::default(), 5);
+    let metrics = Metrics::new();
+    let mut log = EventLog::memory();
+    let rep = phase2::run(&mut agent, &ev, &cfg, &metrics, &mut log);
+
+    assert_eq!(rep.oracle, "measured");
+    assert_eq!(metrics.label("phase2.oracle").as_deref(), Some("measured"));
+    assert_eq!(rep.evaluations, 4);
+    assert!(rep.best_outcome.latency_ms.is_finite() && rep.best_outcome.latency_ms > 0.0);
+    let (measured, fallbacks) = oracle.counts();
+    assert!(measured + fallbacks > 0, "no candidate was scored");
+    accept(fallbacks == 0, &format!("{fallbacks} candidates fell back to analytical"));
+    // the oracle-announcement event must record the measured oracle
+    let first = npas::util::Json::parse(&log.lines()[0]).expect("event json");
+    assert_eq!(first.get("oracle").and_then(|j| j.as_str()), Some("measured"));
+}
