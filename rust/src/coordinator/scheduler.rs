@@ -21,6 +21,7 @@
 //!   tasks drain, so the pool survives and later calls keep working.
 
 use std::any::Any;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -103,8 +104,13 @@ fn run_tasks(job: &Job) {
     }
 }
 
+/// A fire-and-forget task submitted via [`ThreadPool::execute`] — the
+/// serving front door's connection handlers ride these.
+type DetachedTask = Box<dyn FnOnce() + Send + 'static>;
+
 struct PoolState {
     queue: Vec<Arc<Job>>,
+    detached: VecDeque<DetachedTask>,
     shutdown: bool,
 }
 
@@ -124,18 +130,31 @@ pub struct ThreadPool {
     jobs: AtomicU64,
 }
 
+/// What a parked worker picked up: a slice of a parallel-for job, or one
+/// detached task.
+enum Work {
+    Job(Arc<Job>),
+    Detached(DetachedTask),
+}
+
 fn worker_loop(inner: Arc<PoolInner>) {
     loop {
-        let job: Arc<Job> = {
+        let work: Work = {
             let mut st = inner.state.lock().unwrap();
             loop {
+                // parallel-for jobs first: they are latency-critical kernel
+                // tiles with a submitter blocked on the completion latch;
+                // detached tasks (connection handlers) tolerate queueing
                 let found = st.queue.iter().find(|j| {
                     j.next.load(Ordering::Relaxed) < j.total
                         && j.runners.load(Ordering::Relaxed) < j.cap
                 });
                 if let Some(j) = found {
                     j.runners.fetch_add(1, Ordering::Relaxed);
-                    break j.clone();
+                    break Work::Job(j.clone());
+                }
+                if let Some(task) = st.detached.pop_front() {
+                    break Work::Detached(task);
                 }
                 if st.shutdown {
                     return;
@@ -143,8 +162,18 @@ fn worker_loop(inner: Arc<PoolInner>) {
                 st = inner.cvar.wait(st).unwrap();
             }
         };
-        run_tasks(&job);
-        job.runners.fetch_sub(1, Ordering::Relaxed);
+        match work {
+            Work::Job(job) => {
+                run_tasks(&job);
+                job.runners.fetch_sub(1, Ordering::Relaxed);
+            }
+            Work::Detached(task) => {
+                // a panicking task must not kill the worker; there is no
+                // submitter latch to re-raise on, so the payload is dropped
+                // (detached tasks report failures through their own channels)
+                let _ = catch_unwind(AssertUnwindSafe(task));
+            }
+        }
     }
 }
 
@@ -153,7 +182,11 @@ impl ThreadPool {
     pub fn new(threads: usize) -> ThreadPool {
         let threads = threads.max(1);
         let inner = Arc::new(PoolInner {
-            state: Mutex::new(PoolState { queue: Vec::new(), shutdown: false }),
+            state: Mutex::new(PoolState {
+                queue: Vec::new(),
+                detached: VecDeque::new(),
+                shutdown: false,
+            }),
             cvar: Condvar::new(),
             spawned: AtomicUsize::new(0),
         });
@@ -198,6 +231,28 @@ impl ThreadPool {
     /// Parallel jobs completed over the pool's lifetime (telemetry).
     pub fn jobs_completed(&self) -> u64 {
         self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Submit one fire-and-forget task to the pool. Unlike
+    /// [`ThreadPool::scope`] there is no completion latch: the call returns
+    /// immediately and the task runs on whichever worker frees up first
+    /// (parallel-for jobs take priority — detached tasks are the serving
+    /// ingress's connection handlers, which tolerate queueing). A panicking
+    /// task is contained to itself; the worker survives. Tasks still queued
+    /// when the pool is dropped are discarded unrun, so callers that need a
+    /// completion signal must carry their own channel.
+    pub fn execute(&self, task: impl FnOnce() + Send + 'static) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.detached.push_back(Box::new(task));
+        }
+        self.inner.cvar.notify_all();
+    }
+
+    /// Detached tasks submitted but not yet picked up by a worker
+    /// (telemetry for the ingress's accept loop).
+    pub fn detached_pending(&self) -> usize {
+        self.inner.state.lock().unwrap().detached.len()
     }
 
     /// Run `task(0..total)` with up to `workers` concurrent runners (pool
@@ -502,6 +557,62 @@ mod tests {
         // the global pool keeps serving
         let out = map_parallel(4, &items, |&x| x + 1);
         assert_eq!(out, (1..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn detached_tasks_run_and_signal_through_channels() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..16 {
+            let tx = tx.clone();
+            pool.execute(move || {
+                tx.send(i).unwrap();
+            });
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+        assert_eq!(pool.detached_pending(), 0);
+    }
+
+    #[test]
+    fn detached_panic_is_contained_worker_survives() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("detached task exploded"));
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.execute(move || {
+            tx.send(7usize).unwrap();
+        });
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+            7,
+            "a panicking detached task must not kill the worker"
+        );
+        assert_eq!(pool.threads_spawned(), 1, "no respawn after a contained panic");
+    }
+
+    #[test]
+    fn detached_tasks_coexist_with_parallel_jobs() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..8 {
+            let tx = tx.clone();
+            pool.execute(move || {
+                tx.send(i).unwrap();
+            });
+        }
+        drop(tx);
+        // parallel-for jobs on the same pool while detached tasks drain
+        let count = AtomicUsize::new(0);
+        let bump = |_: usize| {
+            count.fetch_add(1, Ordering::Relaxed);
+        };
+        pool.scope(3, 32, &bump);
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
     }
 
     #[test]

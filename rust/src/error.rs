@@ -15,7 +15,15 @@
 //! * [`NpasError::Io`] — a filesystem operation failed, tagged with the
 //!   path;
 //! * [`NpasError::Parse`] — on-disk data (bundle JSON, manifest, HLO text)
-//!   did not decode.
+//!   did not decode;
+//! * [`NpasError::NotFound`] — the serving registry has no model under the
+//!   requested name (HTTP 404 at the front door);
+//! * [`NpasError::Overloaded`] — admission control shed the request: the
+//!   model's pending-work bound or the engine's submission queue is full
+//!   (HTTP 503 — retryable);
+//! * [`NpasError::RateLimited`] — per-client fairness shed the request:
+//!   this client already holds its in-flight share while the model still
+//!   has capacity for others (HTTP 429 — retryable by a polite client).
 //!
 //! The enum is `Clone + PartialEq + Eq` so tests can assert on exact
 //! variants, and implements [`std::error::Error`] so it threads through
@@ -42,6 +50,13 @@ pub enum NpasError {
     Parse(String),
     /// The requested pipeline cannot be built from these inputs.
     InvalidConfig(String),
+    /// The serving registry hosts no model under this name.
+    NotFound { model: String },
+    /// Load shedding: the model's pending-request bound (or its engine's
+    /// submission queue) is full; the request was rejected, not queued.
+    Overloaded { model: String, pending: usize },
+    /// Per-client fairness: this client already holds its in-flight share.
+    RateLimited { client: String, inflight: usize },
 }
 
 impl NpasError {
@@ -74,6 +89,15 @@ impl fmt::Display for NpasError {
             NpasError::Io { path, message } => write!(f, "io error on {path}: {message}"),
             NpasError::Parse(msg) => write!(f, "parse error: {msg}"),
             NpasError::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            NpasError::NotFound { model } => write!(f, "model `{model}` not found"),
+            NpasError::Overloaded { model, pending } => write!(
+                f,
+                "model `{model}` overloaded: {pending} requests pending, shedding"
+            ),
+            NpasError::RateLimited { client, inflight } => write!(
+                f,
+                "client `{client}` rate-limited: {inflight} requests in flight"
+            ),
         }
     }
 }
@@ -118,5 +142,17 @@ mod tests {
     fn variants_compare_for_test_assertions() {
         assert_eq!(NpasError::parse("x"), NpasError::Parse("x".to_string()));
         assert_ne!(NpasError::parse("x"), NpasError::invalid("x"));
+    }
+
+    #[test]
+    fn serving_variants_display_their_subject() {
+        let e = NpasError::NotFound { model: "mbv3".into() };
+        assert_eq!(e.to_string(), "model `mbv3` not found");
+        let e = NpasError::Overloaded { model: "mbv3".into(), pending: 64 };
+        assert!(e.to_string().contains("overloaded"), "{e}");
+        assert!(e.to_string().contains("64"), "{e}");
+        let e = NpasError::RateLimited { client: "c9".into(), inflight: 4 };
+        assert!(e.to_string().contains("rate-limited"), "{e}");
+        assert!(e.to_string().contains("c9"), "{e}");
     }
 }

@@ -14,6 +14,9 @@
 //!   the public path from a pruning decision to a running model.
 //! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts, plus
 //!   the micro-batching serving engine.
+//! * [`serve`] — the HTTP/JSON serving front door: model registry with
+//!   LRU/hot-swap hosting, admission control + load shedding, and the
+//!   std-only ingress server.
 //! * [`train`] — SynthVision data + training/eval driver.
 //! * [`search`] — Q-learning + Bayesian-optimization NPAS pipeline.
 //! * [`coordinator`] — parallel candidate-evaluation scheduling.
@@ -26,6 +29,7 @@ pub mod compiler;
 pub mod error;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod search;
 pub mod coordinator;

@@ -8,6 +8,8 @@
 //!   measure  latency model for a zoo network (100-run protocol); with
 //!            `--save` also emits a runnable `CompiledModel` artifact
 //!   run      load a saved `CompiledModel` artifact and execute it
+//!   serve    host saved artifacts behind the HTTP/JSON front door
+//!            (model registry + admission control + load shedding)
 //!
 //! Flags: `--config <file.json>` plus per-key overrides (see config.rs).
 
@@ -41,6 +43,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&cfg, &args),
         Some("measure") => cmd_measure(&args),
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand `{o}`\n");
@@ -71,7 +74,16 @@ USAGE: npas <subcommand> [--config file.json] [--flag value ...]
   measure  --model mbv1|mbv2|mbv3|effb0|r50|r50deep --device cpu|gpu
            --framework ours|mnn|tflite|ptm [--scheme ... --rate 5.0]
   run      --bundle model.json [--batch 4 --seed 7]
-           (artifact written by CompiledModel::save / `measure --save`)"
+           (artifact written by CompiledModel::save / `measure --save`)
+  serve    --models name=bundle.json[,name2=other.json ...]
+           [--addr 127.0.0.1:8080 --capacity 4 --conns 8]
+           [--workers 2 --max-batch 8 --queue-cap 1024]
+           [--max-pending 256 --per-client 64]
+           routes: GET /healthz | GET /v1/models
+                   POST /v1/models/{{name}}/infer   {{\"dims\":[h,w,c],\"data\":[..]}}
+                   GET /v1/models/{{name}}/stats | POST /v1/models/{{name}}/load
+                   DELETE /v1/models/{{name}}
+           shedding: full model queue -> 503, greedy client -> 429"
     );
 }
 
@@ -254,6 +266,60 @@ fn cmd_measure(args: &Args) -> Result<()> {
         model.save(path)?;
         println!("saved runnable model to {path} — execute with `npas run --bundle {path}`");
     }
+    Ok(())
+}
+
+/// Host saved `CompiledModel` artifacts behind the HTTP/JSON front door:
+/// one `ModelRegistry` (shared plan cache, per-model engines + admission
+/// gates) behind the std-only ingress server. Blocks until the process is
+/// killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use npas::serve::{
+        AdmissionConfig, HttpServer, ModelRegistry, RegistryConfig, ServerConfig,
+    };
+
+    let spec = args.require("models")?;
+    let cfg = RegistryConfig {
+        capacity: args.usize_or("capacity", 4),
+        engine: npas::runtime::EngineConfig {
+            workers: args.usize_or("workers", 2),
+            max_batch: args.usize_or("max-batch", 8),
+            queue_cap: args.usize_or("queue-cap", 1024),
+            ..Default::default()
+        },
+        admission: AdmissionConfig {
+            max_pending: args.usize_or("max-pending", 256),
+            per_client: args.usize_or("per-client", 64),
+        },
+    };
+    let registry = std::sync::Arc::new(ModelRegistry::new(cfg)?);
+    for pair in spec.split(',').filter(|p| !p.is_empty()) {
+        let (name, path) = pair.split_once('=').ok_or_else(|| {
+            NpasError::invalid(format!("--models expects name=path pairs, got `{pair}`"))
+        })?;
+        let entry = registry.deploy(name, path)?;
+        println!(
+            "deployed `{}` v{} from {path} ({})",
+            entry.name(),
+            entry.version(),
+            entry.model().network().name
+        );
+    }
+
+    let server = HttpServer::bind(
+        registry,
+        ServerConfig {
+            addr: args.str_or("addr", "127.0.0.1:8080"),
+            max_connections: args.usize_or("conns", 8),
+            ..Default::default()
+        },
+    )?;
+    println!("serving on http://{}  (ctrl-c to stop)", server.addr());
+    println!("  GET  /healthz | GET /v1/models | GET /v1/models/{{name}}/stats");
+    println!("  POST /v1/models/{{name}}/infer   body {{\"dims\":[h,w,c],\"data\":[..]}}");
+    println!("  POST /v1/models/{{name}}/load    body {{\"path\":\"bundle.json\"}}");
+    println!("  DELETE /v1/models/{{name}}");
+    server.run();
     Ok(())
 }
 

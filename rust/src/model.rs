@@ -455,6 +455,13 @@ impl CompiledModel {
     /// masks are already applied), so `save → load → run` is bit-identical
     /// to the in-memory model.
     pub fn load(path: impl AsRef<Path>) -> Result<CompiledModel> {
+        Self::load_impl(path, None)
+    }
+
+    fn load_impl(
+        path: impl AsRef<Path>,
+        cache: Option<Arc<PlanCache>>,
+    ) -> Result<CompiledModel> {
         let (bundle, j) = crate::runtime::bundle::load_with_json(path.as_ref())?;
         let target = j.get("target").ok_or_else(|| {
             NpasError::parse(
@@ -473,7 +480,15 @@ impl CompiledModel {
         let framework = Framework::from_id(fw_id).ok_or_else(|| {
             NpasError::parse(format!("unknown framework `{fw_id}` in saved target"))
         })?;
-        Self::from_bundle(bundle, device, framework)
+        Self::from_bundle_cached(bundle, device, framework, cache)
+    }
+
+    /// [`CompiledModel::load`] routed through a shared [`PlanCache`]: the
+    /// serving registry loads every artifact this way, so N hosted models
+    /// (and every hot-swap reload of the same workload) amortize
+    /// compilation in one cache — the same cache the search shares.
+    pub fn load_cached(path: impl AsRef<Path>, cache: Arc<PlanCache>) -> Result<CompiledModel> {
+        Self::load_impl(path, Some(cache))
     }
 
     /// [`CompiledModel::load`] with an explicit target (for artifacts saved
@@ -492,10 +507,22 @@ impl CompiledModel {
         device: &DeviceSpec,
         framework: Framework,
     ) -> Result<CompiledModel> {
+        Self::from_bundle_cached(bundle, device, framework, None)
+    }
+
+    fn from_bundle_cached(
+        bundle: PlanBundle,
+        device: &DeviceSpec,
+        framework: Framework,
+        cache: Option<Arc<PlanCache>>,
+    ) -> Result<CompiledModel> {
         let mut b = CompiledModel::build(bundle.network)
             .scheme(bundle.sparsity)
             .weights(bundle.weights)
             .target(device, framework);
+        if let Some(cache) = cache {
+            b = b.plan_cache(cache);
+        }
         b.mask_weights = false; // saved weights already carry the masks
         b.compile()
     }
@@ -658,6 +685,30 @@ mod tests {
         assert_eq!((stats.hits, stats.misses), (1, 1));
         // both models share one plan object
         assert!(Arc::ptr_eq(&a.plan, &b.plan));
+    }
+
+    #[test]
+    fn load_cached_shares_the_plan_cache() {
+        let dir = std::env::temp_dir()
+            .join(format!("npas_load_cached_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join("m.json");
+        let model = CompiledModel::build(zoo::single_conv(6, 3, 4, 4))
+            .scheme((PruneScheme::block_punched_default(), 3.0))
+            .weights(5u64)
+            .compile()
+            .unwrap();
+        model.save(&path).unwrap();
+        let cache = Arc::new(PlanCache::default());
+        let a = CompiledModel::load_cached(&path, cache.clone()).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = CompiledModel::load_cached(&path, cache.clone()).unwrap();
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // both loads share one plan object, and outputs stay bit-identical
+        assert!(Arc::ptr_eq(&a.plan, &b.plan));
+        let x = Tensor::zeros(vec![6, 6, 4]);
+        assert_eq!(a.run(&x).unwrap(), model.run(&x).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Admission control: bounded pending work per model + per-client
+//! fairness, decided *before* a request touches the engine queue.
+//!
+//! Two independent bounds, checked in order:
+//! 1. **Model overload** — at most [`AdmissionConfig::max_pending`]
+//!    admitted-but-unanswered requests per model. Past it, requests are
+//!    shed with [`ShedReason::Overloaded`] (HTTP 503): rejecting fast at
+//!    the door keeps queueing delay bounded instead of letting every
+//!    client's latency collapse together.
+//! 2. **Per-client fairness** — at most [`AdmissionConfig::per_client`]
+//!    in-flight requests per client id. One client flooding the model (or
+//!    not reading its responses) exhausts *its own* share and gets
+//!    [`ShedReason::RateLimited`] (HTTP 429) while other clients keep
+//!    being admitted.
+//!
+//! Admission hands out RAII [`Permit`]s: the slot is released when the
+//! permit drops — on response write, on executor error, or on a panicking
+//! handler unwinding — so shed accounting can never leak slots.
+
+use std::sync::{Arc, Mutex};
+
+/// Bounds for one model's [`Admission`] gate.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Admitted-but-unanswered request bound (the shed threshold).
+    pub max_pending: usize,
+    /// In-flight bound per client id.
+    pub per_client: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig { max_pending: 256, per_client: 64 }
+    }
+}
+
+/// Why a request was shed (maps onto the crate error taxonomy at the
+/// registry layer: 503 / 429 at the HTTP front).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The model's pending bound is full.
+    Overloaded { pending: usize },
+    /// This client's in-flight share is full.
+    RateLimited { client: String, inflight: usize },
+}
+
+#[derive(Debug, Default)]
+struct Counts {
+    total: usize,
+    per_client: std::collections::BTreeMap<String, usize>,
+}
+
+/// Counter snapshot of one admission gate.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdmissionStats {
+    /// Currently admitted (permits alive).
+    pub pending: usize,
+    /// Requests admitted over the gate's lifetime.
+    pub admitted: u64,
+    /// Sheds by model overload.
+    pub shed_overloaded: u64,
+    /// Sheds by per-client fairness.
+    pub shed_rate_limited: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counts: Counts,
+    admitted: u64,
+    shed_overloaded: u64,
+    shed_rate_limited: u64,
+}
+
+/// One model's admission gate. Cheap to clone (shared state).
+#[derive(Debug, Clone)]
+pub struct Admission {
+    cfg: AdmissionConfig,
+    inner: Arc<Mutex<Inner>>,
+}
+
+/// An admitted request's slot; dropping it releases the slot.
+#[derive(Debug)]
+pub struct Permit {
+    inner: Arc<Mutex<Inner>>,
+    client: String,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut g = self.inner.lock().unwrap();
+        g.counts.total = g.counts.total.saturating_sub(1);
+        if let Some(n) = g.counts.per_client.get_mut(&self.client) {
+            *n -= 1;
+            if *n == 0 {
+                g.counts.per_client.remove(&self.client);
+            }
+        }
+    }
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission { cfg, inner: Arc::default() }
+    }
+
+    pub fn config(&self) -> AdmissionConfig {
+        self.cfg
+    }
+
+    /// Admit one request for `client`, or say why it was shed. Never
+    /// blocks — shedding is a fast typed rejection, not a wait.
+    pub fn admit(&self, client: &str) -> Result<Permit, ShedReason> {
+        let mut g = self.inner.lock().unwrap();
+        if g.counts.total >= self.cfg.max_pending {
+            g.shed_overloaded += 1;
+            return Err(ShedReason::Overloaded { pending: g.counts.total });
+        }
+        let inflight = g.counts.per_client.get(client).copied().unwrap_or(0);
+        if inflight >= self.cfg.per_client {
+            g.shed_rate_limited += 1;
+            return Err(ShedReason::RateLimited {
+                client: client.to_string(),
+                inflight,
+            });
+        }
+        g.counts.total += 1;
+        *g.counts.per_client.entry(client.to_string()).or_insert(0) += 1;
+        g.admitted += 1;
+        Ok(Permit { inner: self.inner.clone(), client: client.to_string() })
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        let g = self.inner.lock().unwrap();
+        AdmissionStats {
+            pending: g.counts.total,
+            admitted: g.admitted,
+            shed_overloaded: g.shed_overloaded,
+            shed_rate_limited: g.shed_rate_limited,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_until_the_pending_bound_then_sheds_overloaded() {
+        let a = Admission::new(AdmissionConfig { max_pending: 2, per_client: 8 });
+        let p1 = a.admit("x").unwrap();
+        let _p2 = a.admit("y").unwrap();
+        assert_eq!(a.admit("z"), Err(ShedReason::Overloaded { pending: 2 }));
+        drop(p1);
+        assert!(a.admit("z").is_ok(), "released slot readmits");
+        let s = a.stats();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.shed_overloaded, 1);
+        assert_eq!(s.pending, 2);
+    }
+
+    #[test]
+    fn per_client_share_sheds_the_flooder_not_the_neighbor() {
+        let a = Admission::new(AdmissionConfig { max_pending: 16, per_client: 2 });
+        let _h1 = a.admit("hog").unwrap();
+        let _h2 = a.admit("hog").unwrap();
+        assert_eq!(
+            a.admit("hog"),
+            Err(ShedReason::RateLimited { client: "hog".to_string(), inflight: 2 })
+        );
+        // the polite neighbor is unaffected
+        assert!(a.admit("polite").is_ok());
+        assert_eq!(a.stats().shed_rate_limited, 1);
+    }
+
+    #[test]
+    fn permit_drop_releases_the_client_share() {
+        let a = Admission::new(AdmissionConfig { max_pending: 16, per_client: 1 });
+        let p = a.admit("c").unwrap();
+        assert!(matches!(a.admit("c"), Err(ShedReason::RateLimited { .. })));
+        drop(p);
+        assert!(a.admit("c").is_ok());
+    }
+
+    #[test]
+    fn overload_check_precedes_fairness() {
+        // a full model sheds 503 even for a client over its own share too
+        let a = Admission::new(AdmissionConfig { max_pending: 1, per_client: 1 });
+        let _p = a.admit("c").unwrap();
+        assert!(matches!(a.admit("c"), Err(ShedReason::Overloaded { .. })));
+    }
+
+    #[test]
+    fn permits_survive_cross_thread_release() {
+        let a = Admission::new(AdmissionConfig { max_pending: 4, per_client: 4 });
+        let p = a.admit("t").unwrap();
+        std::thread::spawn(move || drop(p)).join().unwrap();
+        assert_eq!(a.stats().pending, 0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Blocking keep-alive HTTP/JSON client over the same framing as the
+//! server ([`crate::serve::http`]). Used by the parity tests, the
+//! `serve_load` load generator, and anyone driving a local server from
+//! Rust without curl.
+//!
+//! One [`HttpClient`] is one connection (HTTP/1.1 keep-alive): requests
+//! are serialized per client, concurrency comes from multiple clients.
+//! A transport error drops the connection and surfaces a typed
+//! [`NpasError::Io`]; the next request transparently reconnects.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use crate::error::{NpasError, Result};
+use crate::serve::http::{read_response, write_request, HttpError, Limits};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// A decoded response: HTTP status + parsed JSON body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonResponse {
+    pub status: u16,
+    pub json: Json,
+}
+
+impl JsonResponse {
+    /// `true` for the 2xx range.
+    pub fn ok(&self) -> bool {
+        (200..300).contains(&self.status)
+    }
+
+    /// The `error.kind` tag of a non-2xx body, if present.
+    pub fn error_kind(&self) -> Option<&str> {
+        self.json.get("error")?.get("kind")?.as_str()
+    }
+}
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// See the module docs.
+pub struct HttpClient {
+    addr: String,
+    limits: Limits,
+    conn: Option<Conn>,
+}
+
+impl HttpClient {
+    /// A client for `addr` (`host:port`). Connects lazily on the first
+    /// request.
+    pub fn new(addr: impl Into<String>) -> HttpClient {
+        HttpClient { addr: addr.into(), limits: Limits::default(), conn: None }
+    }
+
+    pub fn with_limits(mut self, limits: Limits) -> HttpClient {
+        self.limits = limits;
+        self
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<JsonResponse> {
+        self.request("GET", path, &[], b"")
+    }
+
+    pub fn post(&mut self, path: &str, body: &Json) -> Result<JsonResponse> {
+        self.request("POST", path, &[], body.to_string().as_bytes())
+    }
+
+    pub fn delete(&mut self, path: &str) -> Result<JsonResponse> {
+        self.request("DELETE", path, &[], b"")
+    }
+
+    /// One request/response exchange. Any transport failure drops the
+    /// connection (the next call reconnects) and reports [`NpasError::Io`].
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<JsonResponse> {
+        if self.conn.is_none() {
+            let stream = TcpStream::connect(&self.addr)
+                .map_err(|e| NpasError::io(&self.addr, e))?;
+            let reader = BufReader::new(
+                stream.try_clone().map_err(|e| NpasError::io(&self.addr, e))?,
+            );
+            self.conn = Some(Conn { writer: stream, reader });
+        }
+        let conn = self.conn.as_mut().expect("connection just established");
+        let exchanged = write_request(&mut conn.writer, method, path, headers, body)
+            .map_err(|e| NpasError::io(&self.addr, e))
+            .and_then(|()| {
+                read_response(&mut conn.reader, &self.limits).map_err(|e| match e {
+                    HttpError::Closed => NpasError::Io {
+                        path: self.addr.clone(),
+                        message: "connection closed mid-response".to_string(),
+                    },
+                    HttpError::BadRequest(msg) | HttpError::TooLarge(msg) => {
+                        NpasError::parse(format!("bad http response: {msg}"))
+                    }
+                })
+            });
+        let resp = match exchanged {
+            Ok(r) => r,
+            Err(e) => {
+                self.conn = None;
+                return Err(e);
+            }
+        };
+        if matches!(resp.header("connection"), Some(v) if v.eq_ignore_ascii_case("close")) {
+            self.conn = None;
+        }
+        let json = if resp.body.is_empty() {
+            Json::Null
+        } else {
+            let text = std::str::from_utf8(&resp.body)
+                .map_err(|_| NpasError::parse("response body is not utf-8"))?;
+            Json::parse(text)?
+        };
+        Ok(JsonResponse { status: resp.status, json })
+    }
+
+    /// POST `input` to `/v1/models/{model}/infer` as `client_id`.
+    pub fn infer(
+        &mut self,
+        model: &str,
+        client_id: &str,
+        input: &Tensor,
+    ) -> Result<JsonResponse> {
+        let body = infer_request(input, Some(client_id));
+        self.post(&format!("/v1/models/{model}/infer"), &body)
+    }
+}
+
+/// Build the infer request body the server expects:
+/// `{"dims":[...],"data":[...],"client":"..."}`.
+pub fn infer_request(input: &Tensor, client: Option<&str>) -> Json {
+    let mut pairs = vec![
+        ("dims", Json::Arr(input.dims().iter().map(|&d| Json::num(d as f64)).collect())),
+        ("data", Json::Arr(input.data().iter().map(|&v| Json::num(v as f64)).collect())),
+    ];
+    if let Some(c) = client {
+        pairs.push(("client", Json::str(c)));
+    }
+    Json::obj(pairs)
+}
+
+/// Decode a `{"dims":[...],"data":[...]}`-shaped object (an infer reply)
+/// back into a [`Tensor`].
+pub fn tensor_from_json(json: &Json) -> Result<Tensor> {
+    let dims: Vec<usize> = json
+        .arr_field("dims")?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| NpasError::parse("non-integer dim")))
+        .collect::<Result<_>>()?;
+    let data: Vec<f32> = json
+        .arr_field("data")?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| NpasError::parse("non-numeric data element"))
+        })
+        .collect::<Result<_>>()?;
+    let numel: usize = dims.iter().product();
+    if dims.is_empty() || numel != data.len() {
+        return Err(NpasError::parse(format!(
+            "dims {dims:?} disagree with {} data elements",
+            data.len()
+        )));
+    }
+    Ok(Tensor::new(dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_request_round_trips_the_tensor() {
+        let t = Tensor::new(vec![2, 1, 2], vec![1.5, -2.25, 0.0, 3.75]);
+        let body = infer_request(&t, Some("c1"));
+        assert_eq!(body.get("client").unwrap().as_str(), Some("c1"));
+        // what goes over the wire decodes to a bit-identical tensor
+        let wire = Json::parse(&body.to_string()).unwrap();
+        assert_eq!(tensor_from_json(&wire).unwrap(), t);
+    }
+
+    #[test]
+    fn tensor_decoding_rejects_mismatched_shapes() {
+        let bad = Json::parse(r#"{"dims":[2,2,1],"data":[1.0]}"#).unwrap();
+        assert!(matches!(tensor_from_json(&bad), Err(NpasError::Parse(_))));
+        let empty = Json::parse(r#"{"dims":[],"data":[]}"#).unwrap();
+        assert!(tensor_from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn response_helpers_read_status_and_error_kind() {
+        let r = JsonResponse {
+            status: 503,
+            json: Json::parse(r#"{"error":{"kind":"overloaded","message":"m"}}"#).unwrap(),
+        };
+        assert!(!r.ok());
+        assert_eq!(r.error_kind(), Some("overloaded"));
+        let ok = JsonResponse { status: 200, json: Json::Null };
+        assert!(ok.ok());
+        assert_eq!(ok.error_kind(), None);
+    }
+}

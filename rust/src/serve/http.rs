@@ -1,0 +1,340 @@
+//! Hand-rolled HTTP/1.1 framing on std (hyper/axum are unavailable
+//! offline; the workload is line-protocol-simple anyway).
+//!
+//! One request/response grammar, shared by the server and the in-crate
+//! [`crate::serve::HttpClient`]: request line (or status line), lowercased
+//! headers, `Content-Length`-framed body. Keep-alive follows HTTP/1.1
+//! defaults (persistent unless `Connection: close`). Chunked encoding,
+//! trailers and HTTP/2 are intentionally out of scope — both ends of every
+//! connection are this module.
+//!
+//! Size limits are explicit ([`Limits`]): an oversized head or body is a
+//! typed [`HttpError::TooLarge`] the server surfaces as `413`, not an OOM.
+
+use std::collections::BTreeMap;
+use std::io::{self, BufRead, Read, Write};
+
+/// Head/body byte bounds for one message.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// Request/status line + headers, in bytes.
+    pub max_head: usize,
+    /// `Content-Length` bound, in bytes.
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits { max_head: 16 * 1024, max_body: 64 * 1024 * 1024 }
+    }
+}
+
+/// Why a message could not be read.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HttpError {
+    /// The peer closed (or the socket failed / timed out) mid-message.
+    Closed,
+    /// Malformed framing: bad request line, header or length.
+    BadRequest(String),
+    /// Over a [`Limits`] bound; carries which one.
+    TooLarge(String),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed mid-message"),
+            HttpError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            HttpError::TooLarge(msg) => write!(f, "message too large: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request. Header names are lowercased.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// HTTP/1.1 keep-alive: persistent unless the peer asked to close.
+    pub fn keep_alive(&self) -> bool {
+        !matches!(self.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// One parsed response (client side). Header names are lowercased.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, bounding total head bytes.
+fn read_line(
+    r: &mut impl BufRead,
+    head_bytes: &mut usize,
+    limits: &Limits,
+) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    match r.read_until(b'\n', &mut buf) {
+        Ok(0) => return Ok(None), // EOF
+        Ok(_) => {}
+        Err(_) => return Err(HttpError::Closed), // timeout/reset mid-line
+    }
+    if buf.last() != Some(&b'\n') {
+        // EOF before the terminator: a truncated line, not a clean close
+        return Err(HttpError::Closed);
+    }
+    *head_bytes += buf.len();
+    if *head_bytes > limits.max_head {
+        return Err(HttpError::TooLarge(format!(
+            "head exceeds {} bytes",
+            limits.max_head
+        )));
+    }
+    while matches!(buf.last(), Some(b'\n' | b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| {
+        HttpError::BadRequest("non-utf8 bytes in message head".to_string())
+    })
+}
+
+/// Headers + `Content-Length` body, shared by both message kinds.
+fn read_head_and_body(
+    r: &mut impl BufRead,
+    head_bytes: &mut usize,
+    limits: &Limits,
+) -> Result<(BTreeMap<String, String>, Vec<u8>), HttpError> {
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = read_line(r, head_bytes, limits)?.ok_or(HttpError::Closed)?;
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::BadRequest(format!("malformed header `{line}`")))?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    let len = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            HttpError::BadRequest(format!("bad content-length `{v}`"))
+        })?,
+    };
+    if len > limits.max_body {
+        return Err(HttpError::TooLarge(format!(
+            "body of {len} bytes exceeds {}",
+            limits.max_body
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|_| HttpError::Closed)?;
+    Ok((headers, body))
+}
+
+/// Read one request. `Ok(None)` is a clean keep-alive close (EOF before
+/// any bytes); mid-message EOF/timeouts are [`HttpError::Closed`].
+pub fn read_request(
+    r: &mut impl BufRead,
+    limits: &Limits,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let mut head_bytes = 0;
+    let line = match read_line(r, &mut head_bytes, limits)? {
+        None => return Ok(None),
+        Some(l) if l.is_empty() => return Ok(None), // stray blank line
+        Some(l) => l,
+    };
+    let mut parts = line.split_ascii_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m, p, v),
+        _ => return Err(HttpError::BadRequest(format!("bad request line `{line}`"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::BadRequest(format!("unsupported version `{version}`")));
+    }
+    let (headers, body) = read_head_and_body(r, &mut head_bytes, limits)?;
+    Ok(Some(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    }))
+}
+
+/// Read one response (client side).
+pub fn read_response(
+    r: &mut impl BufRead,
+    limits: &Limits,
+) -> Result<HttpResponse, HttpError> {
+    let mut head_bytes = 0;
+    let line = read_line(r, &mut head_bytes, limits)?.ok_or(HttpError::Closed)?;
+    let mut parts = line.split_ascii_whitespace();
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse::<u16>()
+            .map_err(|_| HttpError::BadRequest(format!("bad status line `{line}`")))?,
+        _ => return Err(HttpError::BadRequest(format!("bad status line `{line}`"))),
+    };
+    let (headers, body) = read_head_and_body(r, &mut head_bytes, limits)?;
+    Ok(HttpResponse { status, headers, body })
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one response with an `application/json` body.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write one request with an optional `application/json` body plus extra
+/// headers (client side).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> io::Result<()> {
+    write!(w, "{method} {path} HTTP/1.1\r\nhost: npas\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(raw: &str) -> Result<Option<HttpRequest>, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), &Limits::default())
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let r = req("POST /v1/models/m/infer HTTP/1.1\r\nContent-Length: 4\r\nX-Client: c1\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/models/m/infer");
+        assert_eq!(r.header("x-client"), Some("c1"));
+        assert_eq!(r.body, b"abcd");
+        assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let r = req("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive());
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn clean_eof_is_none_truncation_is_closed() {
+        assert!(req("").unwrap().is_none());
+        assert_eq!(req("GET /x HTTP/1.1"), Err(HttpError::Closed));
+        assert_eq!(
+            req("POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc"),
+            Err(HttpError::Closed)
+        );
+    }
+
+    #[test]
+    fn malformed_framing_is_bad_request() {
+        assert!(matches!(req("NONSENSE\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(req("GET /x SPDY/3\r\n\r\n"), Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            req("GET /x HTTP/1.1\r\nbroken header line\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            req("GET /x HTTP/1.1\r\ncontent-length: banana\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn limits_are_typed_too_large() {
+        let limits = Limits { max_head: 64, max_body: 8 };
+        let big_head = format!("GET /x HTTP/1.1\r\nx-pad: {}\r\n\r\n", "a".repeat(128));
+        assert!(matches!(
+            read_request(&mut Cursor::new(big_head.into_bytes()), &limits),
+            Err(HttpError::TooLarge(_))
+        ));
+        let big_body = "POST /x HTTP/1.1\r\ncontent-length: 9\r\n\r\n123456789";
+        assert!(matches!(
+            read_request(&mut Cursor::new(big_body.as_bytes().to_vec()), &limits),
+            Err(HttpError::TooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn response_round_trips_through_writer_and_reader() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 503, br#"{"error":"shed"}"#, true).unwrap();
+        let r = read_response(&mut Cursor::new(wire), &Limits::default()).unwrap();
+        assert_eq!(r.status, 503);
+        assert_eq!(r.body, br#"{"error":"shed"}"#);
+        assert_eq!(r.header("connection"), Some("keep-alive"));
+    }
+
+    #[test]
+    fn request_round_trips_through_writer_and_reader() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/v1/models/a/infer", &[("x-client", "c7")], b"{}")
+            .unwrap();
+        let r = read_request(&mut Cursor::new(wire), &Limits::default()).unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.header("x-client"), Some("c7"));
+        assert_eq!(r.body, b"{}");
+    }
+}

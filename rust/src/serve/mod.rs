@@ -1,0 +1,37 @@
+//! Serving front door: a hand-rolled HTTP/JSON ingress over the
+//! [`CompiledModel`](crate::model::CompiledModel) pipeline.
+//!
+//! The stack, outside in:
+//! * [`server`] — `std::net` accept loop + keep-alive connection handlers
+//!   on a dedicated thread pool; routes `/healthz`, `/v1/models`,
+//!   `/v1/models/{name}/{infer,stats,load}` and `DELETE
+//!   /v1/models/{name}`.
+//! * [`registry`] — [`ModelRegistry`]: N models, each with its own
+//!   micro-batching engine, sharing one plan cache; LRU eviction and
+//!   version-counted hot-swap.
+//! * [`admission`] — bounded pending work + per-client fairness, shedding
+//!   with typed errors ([`NpasError::Overloaded`] → 503,
+//!   [`NpasError::RateLimited`] → 429) instead of queueing unboundedly.
+//! * [`http`] — the shared HTTP/1.1 framing; [`client`] — the blocking
+//!   keep-alive client the tests and the `serve_load` bench drive.
+//!
+//! Responses are bit-parity-faithful: an infer round trip through JSON
+//! returns exactly the bytes `CompiledModel::run` produces (floats travel
+//! as shortest-round-trip decimals; `tests/serve_parity.rs` pins this).
+//!
+//! [`NpasError::Overloaded`]: crate::error::NpasError::Overloaded
+//! [`NpasError::RateLimited`]: crate::error::NpasError::RateLimited
+
+pub mod admission;
+pub mod client;
+pub mod http;
+pub mod registry;
+pub mod server;
+
+pub use admission::{Admission, AdmissionConfig, AdmissionStats, Permit, ShedReason};
+pub use client::{infer_request, tensor_from_json, HttpClient, JsonResponse};
+pub use http::{HttpError, HttpRequest, HttpResponse, Limits};
+pub use registry::{
+    InferReply, InferTicket, ModelEntry, ModelRegistry, RegistryConfig, RegistryStats,
+};
+pub use server::{HttpServer, ServerConfig, ServerHandle, ServerStats};

@@ -1,0 +1,471 @@
+//! [`ModelRegistry`]: N compiled models behind one serving front, each
+//! with its own micro-batching [`InferenceEngine`], all sharing one
+//! [`PlanCache`] and the global kernel thread pool.
+//!
+//! * **Hosting** — entries are `Arc`-shared [`ModelEntry`]s (model +
+//!   engine + admission gate). Look-ups bump an LRU tick; inserting past
+//!   [`RegistryConfig::capacity`] evicts the least-recently-used entry.
+//!   Eviction only unlinks the entry from the registry: requests already
+//!   holding the `Arc` finish on the old engine, which shuts down when the
+//!   last reference drops.
+//! * **Hot-swap** — [`ModelRegistry::deploy`] (or
+//!   [`ModelRegistry::insert_model`]) under an existing name atomically
+//!   replaces the entry and bumps the registry-wide version counter.
+//!   In-flight requests keep the old entry's `Arc`, so a response is
+//!   always computed entirely by one version's weights — versions never
+//!   mix mid-request (pinned by `tests/serve_parity.rs`).
+//! * **Load shedding** — every submission passes the entry's
+//!   [`Admission`] gate first (bounded pending work, per-client
+//!   fairness), then the engine's bounded queue via `try_submit`; both
+//!   rejections are typed [`NpasError`]s ([`NpasError::Overloaded`] /
+//!   [`NpasError::RateLimited`]) the HTTP front maps to 503/429.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::compiler::{PlanCache, PlanCacheStats};
+use crate::error::{NpasError, Result};
+use crate::model::CompiledModel;
+use crate::runtime::{EngineConfig, EngineError, EngineStats, PendingResponse};
+use crate::serve::admission::{Admission, AdmissionConfig, AdmissionStats, ShedReason};
+use crate::tensor::Tensor;
+
+/// Capacity + per-model engine/admission policy of a [`ModelRegistry`].
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    /// Resident-model bound; inserting past it evicts the LRU entry.
+    pub capacity: usize,
+    /// Engine policy applied to every hosted model.
+    pub engine: EngineConfig,
+    /// Admission policy applied to every hosted model.
+    pub admission: AdmissionConfig,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> RegistryConfig {
+        RegistryConfig {
+            capacity: 4,
+            engine: EngineConfig::default(),
+            admission: AdmissionConfig::default(),
+        }
+    }
+}
+
+/// One hosted model: compiled binding + serving engine + admission gate.
+pub struct ModelEntry {
+    name: String,
+    version: u64,
+    model: CompiledModel,
+    engine: crate::runtime::InferenceEngine,
+    admission: Admission,
+    last_used: AtomicU64,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Registry-wide deployment version (bumps on every insert/hot-swap).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+
+    pub fn engine_stats(&self) -> EngineStats {
+        self.engine.stats()
+    }
+
+    pub fn admission_stats(&self) -> AdmissionStats {
+        self.admission.stats()
+    }
+}
+
+/// An admitted, submitted request: resolves via [`InferTicket::wait`].
+/// Holds the model entry's `Arc` (the engine stays alive through swaps and
+/// evictions) and the admission [`Permit`](crate::serve::Permit) (the slot
+/// frees when the ticket resolves or drops).
+pub struct InferTicket {
+    entry: Arc<ModelEntry>,
+    pending: PendingResponse,
+    _permit: crate::serve::admission::Permit,
+}
+
+/// One answered request.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub output: Tensor,
+    pub model: String,
+    /// The deployment version that computed the output (hot-swap parity
+    /// tests key on this).
+    pub version: u64,
+}
+
+impl InferTicket {
+    /// The deployment version this ticket was admitted against.
+    pub fn version(&self) -> u64 {
+        self.entry.version
+    }
+
+    pub fn wait(self) -> Result<InferReply> {
+        match self.pending.wait() {
+            Ok(output) => Ok(InferReply {
+                output,
+                model: self.entry.name.clone(),
+                version: self.entry.version,
+            }),
+            Err(EngineError::Exec(e)) => Err(NpasError::Exec(e)),
+            // the engine is draining (mid-swap/unload shutdown) or a worker
+            // vanished: retryable from the client's point of view — after a
+            // swap the retry lands on the replacement engine
+            Err(EngineError::ShuttingDown | EngineError::WorkerLost) => {
+                Err(NpasError::Overloaded { model: self.entry.name.clone(), pending: 0 })
+            }
+            Err(EngineError::QueueFull) => unreachable!("wait cannot report QueueFull"),
+        }
+    }
+}
+
+/// Registry-wide counters (per-entry stats live on [`ModelEntry`]).
+#[derive(Debug, Clone, Default)]
+pub struct RegistryStats {
+    pub models: usize,
+    pub evictions: u64,
+    pub swaps: u64,
+    pub plan_cache: PlanCacheStats,
+}
+
+/// See the module docs.
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    cache: Arc<PlanCache>,
+    cfg: RegistryConfig,
+    /// LRU clock: bumped on every look-up.
+    tick: AtomicU64,
+    /// Deployment version counter: bumped on every insert.
+    versions: AtomicU64,
+    evictions: AtomicU64,
+    swaps: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// A registry with its own fresh [`PlanCache`].
+    pub fn new(cfg: RegistryConfig) -> Result<ModelRegistry> {
+        Self::with_cache(cfg, Arc::new(PlanCache::default()))
+    }
+
+    /// A registry compiling through an existing shared [`PlanCache`]
+    /// (e.g. the one a search's `EvalContext` already populated).
+    pub fn with_cache(cfg: RegistryConfig, cache: Arc<PlanCache>) -> Result<ModelRegistry> {
+        if cfg.capacity < 1 {
+            return Err(NpasError::invalid("registry capacity must be >= 1"));
+        }
+        if cfg.admission.max_pending < 1 || cfg.admission.per_client < 1 {
+            return Err(NpasError::invalid(format!(
+                "admission bounds must be >= 1 (max_pending {}, per_client {})",
+                cfg.admission.max_pending, cfg.admission.per_client
+            )));
+        }
+        Ok(ModelRegistry {
+            models: RwLock::new(BTreeMap::new()),
+            cache,
+            cfg,
+            tick: AtomicU64::new(0),
+            versions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    /// Host a compiled model under `name`. An existing entry under the
+    /// same name is hot-swapped (its in-flight requests finish on the old
+    /// engine); past capacity, the LRU entry is evicted first.
+    pub fn insert_model(&self, name: &str, model: CompiledModel) -> Result<Arc<ModelEntry>> {
+        let engine = model.serve(self.cfg.engine.clone())?;
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            version: self.versions.fetch_add(1, Ordering::Relaxed) + 1,
+            model,
+            engine,
+            admission: Admission::new(self.cfg.admission),
+            last_used: AtomicU64::new(self.tick.fetch_add(1, Ordering::Relaxed)),
+        });
+        let mut m = self.models.write().unwrap();
+        if m.insert(name.to_string(), entry.clone()).is_some() {
+            self.swaps.fetch_add(1, Ordering::Relaxed);
+        }
+        while m.len() > self.cfg.capacity {
+            let lru = m
+                .iter()
+                .filter(|(n, _)| n.as_str() != name)
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(n, _)| n.clone());
+            match lru {
+                Some(n) => {
+                    m.remove(&n);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break, // capacity 1 and only the new entry resident
+            }
+        }
+        Ok(entry)
+    }
+
+    /// Load a `CompiledModel::save` artifact through the shared
+    /// [`PlanCache`] and host (or hot-swap) it under `name`.
+    pub fn deploy(&self, name: &str, path: impl AsRef<Path>) -> Result<Arc<ModelEntry>> {
+        let model = CompiledModel::load_cached(path, self.cache.clone())?;
+        self.insert_model(name, model)
+    }
+
+    /// Unlink `name`; returns whether it was resident. In-flight requests
+    /// on the entry finish normally (they hold the `Arc`).
+    pub fn remove(&self, name: &str) -> bool {
+        self.models.write().unwrap().remove(name).is_some()
+    }
+
+    /// The entry under `name`, bumping its LRU recency.
+    pub fn get(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        let m = self.models.read().unwrap();
+        let entry = m
+            .get(name)
+            .ok_or_else(|| NpasError::NotFound { model: name.to_string() })?;
+        entry.last_used.store(self.tick.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+        Ok(entry.clone())
+    }
+
+    /// Resident entries, name-ordered (stats/listing endpoints).
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        self.models.read().unwrap().values().cloned().collect()
+    }
+
+    /// Admit + submit one request. Shedding (admission bounds, engine
+    /// queue) is a fast typed error; an admitted ticket resolves via
+    /// [`InferTicket::wait`].
+    pub fn submit(&self, name: &str, client: &str, input: Tensor) -> Result<InferTicket> {
+        let entry = self.get(name)?;
+        let permit = entry.admission.admit(client).map_err(|r| match r {
+            ShedReason::Overloaded { pending } => {
+                NpasError::Overloaded { model: name.to_string(), pending }
+            }
+            ShedReason::RateLimited { client, inflight } => {
+                NpasError::RateLimited { client, inflight }
+            }
+        })?;
+        let pending = entry.engine.try_submit(input).map_err(|e| match e {
+            // the bounded engine queue is the second shed point
+            EngineError::QueueFull | EngineError::ShuttingDown => NpasError::Overloaded {
+                model: name.to_string(),
+                pending: entry.admission.stats().pending,
+            },
+            EngineError::Exec(e) => NpasError::Exec(e),
+            EngineError::WorkerLost => {
+                NpasError::Overloaded { model: name.to_string(), pending: 0 }
+            }
+        })?;
+        Ok(InferTicket { entry, pending, _permit: permit })
+    }
+
+    /// Blocking admit + submit + wait.
+    pub fn infer(&self, name: &str, client: &str, input: Tensor) -> Result<InferReply> {
+        self.submit(name, client, input)?.wait()
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats {
+            models: self.models.read().unwrap().len(),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            plan_cache: self.cache.stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::KRYO_485;
+    use crate::compiler::Framework;
+    use crate::graph::zoo;
+    use crate::pruning::PruneScheme;
+    use crate::tensor::XorShift64Star;
+    use std::time::Duration;
+
+    fn small_model(seed: u64) -> CompiledModel {
+        CompiledModel::build(zoo::single_conv(8, 3, 8, 8))
+            .scheme((PruneScheme::block_punched_default(), 3.0))
+            .weights(seed)
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap()
+    }
+
+    fn quick_cfg() -> RegistryConfig {
+        RegistryConfig {
+            capacity: 4,
+            engine: EngineConfig {
+                workers: 1,
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 16,
+                intra_workers: 1,
+            },
+            admission: AdmissionConfig { max_pending: 8, per_client: 4 },
+        }
+    }
+
+    fn input(seed: u64) -> Tensor {
+        let mut rng = XorShift64Star::new(seed);
+        Tensor::he_normal(vec![8, 8, 8], &mut rng)
+    }
+
+    #[test]
+    fn hosts_multiple_models_with_independent_outputs() {
+        let reg = ModelRegistry::new(quick_cfg()).unwrap();
+        let (m1, m2) = (small_model(1), small_model(2));
+        let x = input(9);
+        let (w1, w2) = (m1.run(&x).unwrap(), m2.run(&x).unwrap());
+        reg.insert_model("a", m1).unwrap();
+        reg.insert_model("b", m2).unwrap();
+        let r1 = reg.infer("a", "t", x.clone()).unwrap();
+        let r2 = reg.infer("b", "t", x.clone()).unwrap();
+        assert_eq!(r1.output, w1, "served output must be bit-identical to direct run");
+        assert_eq!(r2.output, w2);
+        assert_ne!(r1.output, r2.output, "different weights, different outputs");
+        assert_eq!((r1.version, r2.version), (1, 2));
+    }
+
+    #[test]
+    fn unknown_model_is_typed_not_found() {
+        let reg = ModelRegistry::new(quick_cfg()).unwrap();
+        match reg.infer("ghost", "t", input(1)) {
+            Err(NpasError::NotFound { model }) => assert_eq!(model, "ghost"),
+            other => panic!("expected NotFound, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lru_eviction_honors_recency_not_insertion_order() {
+        let cfg = RegistryConfig { capacity: 2, ..quick_cfg() };
+        let reg = ModelRegistry::new(cfg).unwrap();
+        reg.insert_model("a", small_model(1)).unwrap();
+        reg.insert_model("b", small_model(2)).unwrap();
+        // touch `a`: now `b` is least recently used
+        reg.get("a").unwrap();
+        reg.insert_model("c", small_model(3)).unwrap();
+        assert!(reg.get("a").is_ok());
+        assert!(reg.get("c").is_ok());
+        assert!(matches!(reg.get("b"), Err(NpasError::NotFound { .. })));
+        assert_eq!(reg.stats().evictions, 1);
+        assert_eq!(reg.stats().models, 2);
+    }
+
+    #[test]
+    fn hot_swap_bumps_version_and_changes_outputs() {
+        let reg = ModelRegistry::new(quick_cfg()).unwrap();
+        let (m1, m2) = (small_model(1), small_model(2));
+        let x = input(5);
+        let (w1, w2) = (m1.run(&x).unwrap(), m2.run(&x).unwrap());
+        reg.insert_model("m", m1).unwrap();
+        assert_eq!(reg.infer("m", "t", x.clone()).unwrap().output, w1);
+        reg.insert_model("m", m2).unwrap();
+        let r = reg.infer("m", "t", x).unwrap();
+        assert_eq!(r.output, w2, "post-swap responses come from the new weights");
+        assert_eq!(r.version, 2);
+        assert_eq!(reg.stats().swaps, 1);
+        assert_eq!(reg.stats().models, 1);
+    }
+
+    #[test]
+    fn held_tickets_shed_deterministically_then_recover() {
+        let cfg = RegistryConfig {
+            admission: AdmissionConfig { max_pending: 2, per_client: 2 },
+            ..quick_cfg()
+        };
+        let reg = ModelRegistry::new(cfg).unwrap();
+        reg.insert_model("m", small_model(1)).unwrap();
+        let x = input(3);
+        // hold two tickets: the pending bound is now full
+        let t1 = reg.submit("m", "a", x.clone()).unwrap();
+        let t2 = reg.submit("m", "b", x.clone()).unwrap();
+        match reg.submit("m", "c", x.clone()) {
+            Err(NpasError::Overloaded { model, pending }) => {
+                assert_eq!(model, "m");
+                assert_eq!(pending, 2);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // resolving the tickets frees the slots; serving recovers
+        assert!(t1.wait().is_ok());
+        assert!(t2.wait().is_ok());
+        assert!(reg.infer("m", "c", x).is_ok());
+        let entry = reg.get("m").unwrap();
+        assert_eq!(entry.admission_stats().shed_overloaded, 1);
+        assert_eq!(entry.admission_stats().pending, 0);
+    }
+
+    #[test]
+    fn per_client_fairness_spares_the_neighbor() {
+        let cfg = RegistryConfig {
+            admission: AdmissionConfig { max_pending: 8, per_client: 1 },
+            ..quick_cfg()
+        };
+        let reg = ModelRegistry::new(cfg).unwrap();
+        reg.insert_model("m", small_model(1)).unwrap();
+        let x = input(4);
+        let hog = reg.submit("m", "hog", x.clone()).unwrap();
+        match reg.submit("m", "hog", x.clone()) {
+            Err(NpasError::RateLimited { client, inflight }) => {
+                assert_eq!(client, "hog");
+                assert_eq!(inflight, 1);
+            }
+            other => panic!("expected RateLimited, got {other:?}"),
+        }
+        assert!(reg.infer("m", "polite", x).is_ok(), "neighbor unaffected");
+        assert!(hog.wait().is_ok());
+    }
+
+    #[test]
+    fn deploy_and_reload_share_the_plan_cache() {
+        let dir = std::env::temp_dir()
+            .join(format!("npas_registry_deploy_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join("m.json");
+        small_model(7).save(&path).unwrap();
+        let reg = ModelRegistry::new(quick_cfg()).unwrap();
+        reg.deploy("m", &path).unwrap();
+        assert_eq!(reg.stats().plan_cache.misses, 1);
+        // hot-swap reload of the same workload: a pure cache hit
+        reg.deploy("m", &path).unwrap();
+        let stats = reg.stats();
+        assert_eq!((stats.plan_cache.hits, stats.plan_cache.misses), (1, 1));
+        assert_eq!(stats.swaps, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_config_is_typed_invalid() {
+        assert!(matches!(
+            ModelRegistry::new(RegistryConfig { capacity: 0, ..quick_cfg() }),
+            Err(NpasError::InvalidConfig(_))
+        ));
+        let cfg = RegistryConfig {
+            admission: AdmissionConfig { max_pending: 0, per_client: 1 },
+            ..quick_cfg()
+        };
+        assert!(matches!(ModelRegistry::new(cfg), Err(NpasError::InvalidConfig(_))));
+    }
+}

@@ -1,0 +1,584 @@
+//! The HTTP front door: a [`std::net::TcpListener`] accept loop feeding
+//! keep-alive connection handlers run as detached tasks on a dedicated
+//! [`ThreadPool`], all serving one shared [`ModelRegistry`].
+//!
+//! Threading layout (deadlock-free by construction):
+//! * the accept thread only accepts, sheds, and dispatches — it never
+//!   blocks on a handler;
+//! * connection handlers live on the server's **own** pool (sized
+//!   [`ServerConfig::max_connections`]), not the global kernel pool, so a
+//!   stalled client can never starve inference workers;
+//! * inference itself rides each model's [`InferenceEngine`] workers and,
+//!   inside them, the global intra-op pool.
+//!
+//! Load shedding happens at three layers, outermost first: connections
+//! past the handler backlog are answered `503` at accept; admitted
+//! connections' requests pass the model's [`Admission`] gate
+//! (`503`/`429`); and the engine's bounded queue is the final `503`.
+//! Every rejection is a fast typed JSON error, never a silent drop.
+//!
+//! [`ThreadPool`]: crate::coordinator::scheduler::ThreadPool
+//! [`InferenceEngine`]: crate::runtime::InferenceEngine
+//! [`Admission`]: crate::serve::Admission
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::scheduler::ThreadPool;
+use crate::error::{NpasError, Result};
+use crate::runtime::EngineStats;
+use crate::serve::admission::AdmissionStats;
+use crate::serve::http::{
+    read_request, write_response, HttpError, HttpRequest, Limits,
+};
+use crate::serve::registry::{InferReply, ModelEntry, ModelRegistry};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Socket + connection policy of one [`HttpServer`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port `0` picks a free port (tests).
+    pub addr: String,
+    /// Concurrent connection handlers; an equal-sized accept backlog may
+    /// queue behind them, anything past that is shed `503` at accept.
+    pub max_connections: usize,
+    /// Per-message head/body byte bounds.
+    pub limits: Limits,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 8,
+            limits: Limits::default(),
+        }
+    }
+}
+
+/// Accept-loop counters (request-level stats live on the registry).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    /// Connections accepted (including ones later shed).
+    pub accepted: u64,
+    /// Connections answered `503` at accept (handler backlog full).
+    pub shed_connections: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    accepted: AtomicU64,
+    shed_connections: AtomicU64,
+}
+
+/// See the module docs. Built by [`HttpServer::bind`]; serves via the
+/// blocking [`HttpServer::run`] or the background [`HttpServer::spawn`].
+pub struct HttpServer {
+    registry: Arc<ModelRegistry>,
+    listener: TcpListener,
+    addr: SocketAddr,
+    cfg: ServerConfig,
+    running: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+}
+
+/// A running background server; [`ServerHandle::shutdown`] (or drop) stops
+/// the accept loop and joins every connection handler.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    registry: Arc<ModelRegistry>,
+    running: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    pub fn bind(registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Result<HttpServer> {
+        if cfg.max_connections < 1 {
+            return Err(NpasError::invalid("server max_connections must be >= 1"));
+        }
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| NpasError::io(&cfg.addr, e))?;
+        let addr = listener.local_addr().map_err(|e| NpasError::io(&cfg.addr, e))?;
+        Ok(HttpServer {
+            registry,
+            listener,
+            addr,
+            cfg,
+            running: Arc::new(AtomicBool::new(true)),
+            counters: Arc::new(Counters::default()),
+        })
+    }
+
+    /// The bound address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            accepted: self.counters.accepted.load(Ordering::Relaxed),
+            shed_connections: self.counters.shed_connections.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Serve until [`ServerHandle::shutdown`] flips the running flag (the
+    /// accept loop is unblocked by the handle's self-connect). Joining the
+    /// handler pool on exit waits for in-flight connections to finish.
+    pub fn run(&self) {
+        let pool = ThreadPool::new(self.cfg.max_connections);
+        while self.running.load(Ordering::SeqCst) {
+            let stream = match self.listener.accept() {
+                Ok((s, _)) => s,
+                Err(_) => continue,
+            };
+            if !self.running.load(Ordering::SeqCst) {
+                break; // the shutdown self-connect
+            }
+            self.counters.accepted.fetch_add(1, Ordering::Relaxed);
+            if pool.detached_pending() >= self.cfg.max_connections {
+                // outermost shed layer: don't even queue the connection
+                self.counters.shed_connections.fetch_add(1, Ordering::Relaxed);
+                let body = error_body("overloaded", "connection backlog full, retry later");
+                let mut s = stream;
+                let _ = write_response(&mut s, 503, body.as_bytes(), false);
+                continue;
+            }
+            let registry = self.registry.clone();
+            let running = self.running.clone();
+            let limits = self.cfg.limits;
+            pool.execute(move || handle_connection(stream, &registry, limits, &running));
+        }
+        // pool drop joins workers; handlers notice the cleared flag on
+        // their next idle tick
+    }
+
+    /// Serve on a background thread; the returned handle owns shutdown.
+    pub fn spawn(self) -> ServerHandle {
+        let addr = self.addr;
+        let registry = self.registry.clone();
+        let running = self.running.clone();
+        let counters = self.counters.clone();
+        let thread = std::thread::spawn(move || self.run());
+        ServerHandle { addr, registry, running, counters, thread: Some(thread) }
+    }
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            accepted: self.counters.accepted.load(Ordering::Relaxed),
+            shed_connections: self.counters.shed_connections.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting, drain in-flight connections, join the server.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Some(t) = self.thread.take() {
+            self.running.store(false, Ordering::SeqCst);
+            // unblock the accept loop; the flag makes it exit
+            let _ = TcpStream::connect(self.addr);
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// How long an idle keep-alive connection waits between shutdown-flag
+/// checks (also the slow-read bound once a message has started).
+const IDLE_TICK: Duration = Duration::from_millis(200);
+
+fn handle_connection(
+    stream: TcpStream,
+    registry: &Arc<ModelRegistry>,
+    limits: Limits,
+    running: &AtomicBool,
+) {
+    if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
+        return;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        // idle-wait without consuming: peek lets us poll the shutdown flag
+        // between requests while still treating mid-message EOF as an error
+        if reader.buffer().is_empty() {
+            let mut probe = [0u8; 1];
+            loop {
+                match reader.get_ref().peek(&mut probe) {
+                    Ok(0) => return, // peer closed between requests
+                    Ok(_) => break,
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        if !running.load(Ordering::SeqCst) {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+        }
+        let req = match read_request(&mut reader, &limits) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean keep-alive close
+            Err(HttpError::Closed) => return,
+            Err(HttpError::TooLarge(msg)) => {
+                let body = error_body("too_large", &msg);
+                let _ = write_response(&mut writer, 413, body.as_bytes(), false);
+                return; // framing is unrecoverable past an oversized message
+            }
+            Err(HttpError::BadRequest(msg)) => {
+                let body = error_body("bad_request", &msg);
+                let _ = write_response(&mut writer, 400, body.as_bytes(), false);
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive();
+        let (status, body) = route(registry, &req);
+        if write_response(&mut writer, status, body.to_string().as_bytes(), keep_alive)
+            .is_err()
+            || !keep_alive
+        {
+            return;
+        }
+    }
+}
+
+// ---- routing ---------------------------------------------------------------
+
+/// Dispatch one parsed request against the registry. Pure with respect to
+/// the connection: returns `(status, json_body)`.
+fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) {
+    let path = req.path.split('?').next().unwrap_or("");
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => (200, Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", ["v1", "models"]) => list_models(registry),
+        ("GET", ["v1", "models", name, "stats"]) => model_stats(registry, name),
+        ("POST", ["v1", "models", name, "infer"]) => infer(registry, name, req),
+        ("POST", ["v1", "models", name, "load"]) => load_model(registry, name, req),
+        ("DELETE", ["v1", "models", name]) => {
+            if registry.remove(name) {
+                (200, Json::obj(vec![("removed", Json::str(*name))]))
+            } else {
+                error_response(&NpasError::NotFound { model: name.to_string() })
+            }
+        }
+        ("GET" | "POST" | "DELETE", _) => {
+            (404, error_json("not_found", &format!("no route for `{path}`")))
+        }
+        _ => (405, error_json("method_not_allowed", &format!("method `{}`", req.method))),
+    }
+}
+
+fn list_models(registry: &ModelRegistry) -> (u16, Json) {
+    let models: Vec<Json> = registry
+        .entries()
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(e.name())),
+                ("version", Json::num(e.version() as f64)),
+                ("pending", Json::num(e.admission_stats().pending as f64)),
+            ])
+        })
+        .collect();
+    let s = registry.stats();
+    let body = Json::obj(vec![
+        ("models", Json::Arr(models)),
+        ("evictions", Json::num(s.evictions as f64)),
+        ("swaps", Json::num(s.swaps as f64)),
+        ("plan_cache_hits", Json::num(s.plan_cache.hits as f64)),
+        ("plan_cache_misses", Json::num(s.plan_cache.misses as f64)),
+    ]);
+    (200, body)
+}
+
+fn model_stats(registry: &ModelRegistry, name: &str) -> (u16, Json) {
+    match registry.get(name) {
+        Ok(entry) => (200, entry_stats_json(&entry)),
+        Err(e) => error_response(&e),
+    }
+}
+
+fn entry_stats_json(entry: &ModelEntry) -> Json {
+    let EngineStats {
+        completed,
+        failed,
+        batches,
+        mean_batch,
+        p50_ms,
+        p95_ms,
+        p99_ms,
+        throughput_rps,
+    } = entry.engine_stats();
+    let AdmissionStats { pending, admitted, shed_overloaded, shed_rate_limited } =
+        entry.admission_stats();
+    Json::obj(vec![
+        ("name", Json::str(entry.name())),
+        ("version", Json::num(entry.version() as f64)),
+        ("completed", Json::num(completed as f64)),
+        ("failed", Json::num(failed as f64)),
+        ("batches", Json::num(batches as f64)),
+        ("mean_batch", Json::num(mean_batch)),
+        ("p50_ms", Json::num(p50_ms)),
+        ("p95_ms", Json::num(p95_ms)),
+        ("p99_ms", Json::num(p99_ms)),
+        ("throughput_rps", Json::num(throughput_rps)),
+        ("pending", Json::num(pending as f64)),
+        ("admitted", Json::num(admitted as f64)),
+        ("shed_overloaded", Json::num(shed_overloaded as f64)),
+        ("shed_rate_limited", Json::num(shed_rate_limited as f64)),
+    ])
+}
+
+fn infer(registry: &ModelRegistry, name: &str, req: &HttpRequest) -> (u16, Json) {
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => return (400, error_json("bad_request", "body is not utf-8")),
+    };
+    let json = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return (400, error_json("parse", &e.to_string())),
+    };
+    let input = match parse_tensor(&json) {
+        Ok(t) => t,
+        Err((kind, msg)) => return (400, error_json(kind, &msg)),
+    };
+    // client identity: explicit body field, else header, else anonymous
+    let client = json
+        .get("client")
+        .and_then(Json::as_str)
+        .or_else(|| req.header("x-client"))
+        .unwrap_or("anon");
+    match registry.infer(name, client, input) {
+        Ok(reply) => (200, reply_json(&reply)),
+        Err(e) => error_response(&e),
+    }
+}
+
+/// `{"dims":[h,w,c],"data":[..]}` → [`Tensor`], with the shape/len
+/// mismatch caught here (the [`Tensor::new`] constructor asserts).
+fn parse_tensor(json: &Json) -> std::result::Result<Tensor, (&'static str, String)> {
+    let dims: Vec<usize> = json
+        .get("dims")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ("bad_request", "missing `dims` array".to_string()))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| ("bad_request", "non-integer dim".to_string())))
+        .collect::<std::result::Result<_, _>>()?;
+    let data: Vec<f32> = json
+        .get("data")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ("bad_request", "missing `data` array".to_string()))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| ("bad_request", "non-numeric data element".to_string()))
+        })
+        .collect::<std::result::Result<_, _>>()?;
+    let numel: usize = dims.iter().product();
+    if dims.is_empty() || numel != data.len() {
+        return Err((
+            "bad_request",
+            format!("dims {dims:?} disagree with {} data elements", data.len()),
+        ));
+    }
+    Ok(Tensor::new(dims, data))
+}
+
+fn reply_json(reply: &InferReply) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(reply.model.as_str())),
+        ("version", Json::num(reply.version as f64)),
+        (
+            "dims",
+            Json::Arr(reply.output.dims().iter().map(|&d| Json::num(d as f64)).collect()),
+        ),
+        (
+            "data",
+            Json::Arr(reply.output.data().iter().map(|&v| Json::num(v as f64)).collect()),
+        ),
+    ])
+}
+
+fn load_model(registry: &ModelRegistry, name: &str, req: &HttpRequest) -> (u16, Json) {
+    let parsed = std::str::from_utf8(&req.body)
+        .map_err(|_| NpasError::parse("body is not utf-8"))
+        .and_then(|s| Json::parse(s).map_err(NpasError::from));
+    let json = match parsed {
+        Ok(j) => j,
+        Err(e) => return error_response(&e),
+    };
+    let path = match json.str_field("path") {
+        Ok(p) => p.to_string(),
+        Err(e) => return error_response(&e),
+    };
+    match registry.deploy(name, &path) {
+        Ok(entry) => (
+            200,
+            Json::obj(vec![
+                ("model", Json::str(entry.name())),
+                ("version", Json::num(entry.version() as f64)),
+            ]),
+        ),
+        Err(e) => error_response(&e),
+    }
+}
+
+// ---- error mapping ---------------------------------------------------------
+
+/// Crate error → HTTP status + stable machine-readable `kind`.
+pub fn status_for(err: &NpasError) -> (u16, &'static str) {
+    match err {
+        NpasError::NotFound { .. } => (404, "not_found"),
+        NpasError::RateLimited { .. } => (429, "rate_limited"),
+        NpasError::Overloaded { .. } => (503, "overloaded"),
+        NpasError::Exec(_) => (400, "exec"),
+        NpasError::Parse(_) => (400, "parse"),
+        NpasError::InvalidConfig(_) => (400, "invalid_config"),
+        NpasError::Io { .. } => (500, "io"),
+        NpasError::Compile(_) => (500, "compile"),
+    }
+}
+
+fn error_response(err: &NpasError) -> (u16, Json) {
+    let (status, kind) = status_for(err);
+    (status, error_json(kind, &err.to_string()))
+}
+
+fn error_json(kind: &str, message: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![("kind", Json::str(kind)), ("message", Json::str(message))]),
+    )])
+}
+
+fn error_body(kind: &str, message: &str) -> String {
+    error_json(kind, message).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping_covers_the_serving_taxonomy() {
+        assert_eq!(status_for(&NpasError::NotFound { model: "m".into() }), (404, "not_found"));
+        assert_eq!(
+            status_for(&NpasError::Overloaded { model: "m".into(), pending: 1 }),
+            (503, "overloaded")
+        );
+        assert_eq!(
+            status_for(&NpasError::RateLimited { client: "c".into(), inflight: 1 }),
+            (429, "rate_limited")
+        );
+        assert_eq!(status_for(&NpasError::parse("x")).0, 400);
+        assert_eq!(status_for(&NpasError::invalid("x")).0, 400);
+        assert_eq!(status_for(&NpasError::compile("x")).0, 500);
+    }
+
+    #[test]
+    fn error_bodies_are_machine_readable_json() {
+        let (status, body) = error_response(&NpasError::Overloaded {
+            model: "mbv3".into(),
+            pending: 7,
+        });
+        assert_eq!(status, 503);
+        let j = Json::parse(&body.to_string()).unwrap();
+        assert_eq!(j.get("error").unwrap().str_field("kind").unwrap(), "overloaded");
+        assert!(j.get("error").unwrap().str_field("message").unwrap().contains("mbv3"));
+    }
+
+    #[test]
+    fn tensor_parsing_rejects_shape_mismatch_without_panicking() {
+        let ok = Json::parse(r#"{"dims":[2,1,1],"data":[1.5,-2.25]}"#).unwrap();
+        let t = parse_tensor(&ok).unwrap();
+        assert_eq!(t.dims(), &[2, 1, 1]);
+        assert_eq!(t.data(), &[1.5, -2.25]);
+
+        for bad in [
+            r#"{"dims":[3,1,1],"data":[1.0]}"#,      // numel mismatch
+            r#"{"dims":[],"data":[]}"#,              // empty shape
+            r#"{"data":[1.0]}"#,                     // missing dims
+            r#"{"dims":[1,1,1]}"#,                   // missing data
+            r#"{"dims":[1,1,1],"data":["x"]}"#,      // non-numeric
+        ] {
+            assert!(parse_tensor(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn float_round_trip_through_json_is_bit_exact() {
+        // the bit-parity contract: f32 → f64 → shortest Display → parse.
+        // (-0.0 is the one exception: the writer's integer fast path prints
+        // it as `0`, normalizing the sign — equal under `==`, not to_bits.)
+        let samples: Vec<f32> = vec![
+            0.0,
+            1.5,
+            -2.25,
+            std::f32::consts::PI,
+            1.0e-30,
+            3.402_823_5e38,
+            f32::MIN_POSITIVE,
+        ];
+        let json = Json::Arr(samples.iter().map(|&v| Json::num(v as f64)).collect());
+        let back = Json::parse(&json.to_string()).unwrap();
+        let round: Vec<f32> =
+            back.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        for (a, b) in samples.iter().zip(&round) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} round-tripped to {b}");
+        }
+    }
+
+    #[test]
+    fn routes_reject_unknown_paths_and_methods() {
+        let reg = ModelRegistry::new(Default::default()).unwrap();
+        let req = |method: &str, path: &str| HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers: Default::default(),
+            body: Vec::new(),
+        };
+        assert_eq!(route(&reg, &req("GET", "/healthz")).0, 200);
+        assert_eq!(route(&reg, &req("GET", "/v1/models")).0, 200);
+        assert_eq!(route(&reg, &req("GET", "/nope")).0, 404);
+        assert_eq!(route(&reg, &req("PUT", "/healthz")).0, 405);
+        assert_eq!(route(&reg, &req("GET", "/v1/models/ghost/stats")).0, 404);
+        assert_eq!(route(&reg, &req("DELETE", "/v1/models/ghost")).0, 404);
+    }
+}

@@ -1,0 +1,269 @@
+//! Serving front-door parity: responses over HTTP are bit-identical to
+//! direct `CompiledModel::run`, shedding is typed and survivable, and
+//! hot-swap never mixes weights across versions.
+//!
+//! Everything runs against a real socket (`127.0.0.1:0`) through the
+//! crate's own client, so the whole wire path — JSON encode, HTTP framing,
+//! admission, engine, response decode — is under test, not a shortcut.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use npas::compiler::device::KRYO_485;
+use npas::compiler::Framework;
+use npas::graph::zoo;
+use npas::pruning::PruneScheme;
+use npas::runtime::EngineConfig;
+use npas::serve::{
+    AdmissionConfig, HttpClient, HttpServer, ModelRegistry, RegistryConfig, ServerConfig,
+    ServerHandle,
+};
+use npas::tensor::{Tensor, XorShift64Star};
+use npas::{CompiledModel, NpasError};
+
+fn model(seed: u64) -> CompiledModel {
+    CompiledModel::build(zoo::single_conv(8, 3, 8, 8))
+        .scheme((PruneScheme::block_punched_default(), 3.0))
+        .weights(seed)
+        .target(&KRYO_485, Framework::Ours)
+        .compile()
+        .expect("test model compiles")
+}
+
+fn input(seed: u64) -> Tensor {
+    let mut rng = XorShift64Star::new(seed);
+    Tensor::he_normal(vec![8, 8, 8], &mut rng)
+}
+
+fn registry(admission: AdmissionConfig) -> Arc<ModelRegistry> {
+    let cfg = RegistryConfig {
+        capacity: 4,
+        engine: EngineConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 16,
+            intra_workers: 1,
+        },
+        admission,
+    };
+    Arc::new(ModelRegistry::new(cfg).expect("registry config is valid"))
+}
+
+fn spawn(reg: Arc<ModelRegistry>) -> (ServerHandle, HttpClient) {
+    let server = HttpServer::bind(
+        reg,
+        ServerConfig { max_connections: 4, ..Default::default() },
+    )
+    .expect("server binds an ephemeral port");
+    let addr = server.addr();
+    (server.spawn(), HttpClient::new(addr.to_string()))
+}
+
+/// Bit-identity modulo the one JSON caveat: `-0.0` travels as `0`, which
+/// compares equal but flips the sign bit.
+fn assert_bit_identical(wire: &Tensor, direct: &Tensor) {
+    assert_eq!(wire.dims(), direct.dims());
+    for (i, (w, d)) in wire.data().iter().zip(direct.data()).enumerate() {
+        let same_bits = w.to_bits() == d.to_bits();
+        let both_zero = *w == 0.0 && *d == 0.0;
+        assert!(same_bits || both_zero, "element {i}: {w} is not bit-identical to {d}");
+    }
+}
+
+#[test]
+fn http_responses_are_bit_identical_to_direct_run() {
+    let m = model(1);
+    let direct: Vec<(Tensor, Tensor)> = (0..4)
+        .map(|i| {
+            let x = input(10 + i);
+            let y = m.run(&x).expect("direct run");
+            (x, y)
+        })
+        .collect();
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("m", m).expect("insert");
+    let (server, mut client) = spawn(reg);
+
+    let health = client.get("/healthz").expect("healthz");
+    assert_eq!(health.status, 200);
+
+    for (x, y) in &direct {
+        let resp = client.infer("m", "parity", x).expect("infer round trip");
+        assert_eq!(resp.status, 200, "body: {}", resp.json);
+        assert_eq!(resp.json.str_field("model").expect("model field"), "m");
+        assert_eq!(resp.json.usize_field("version").expect("version field"), 1);
+        let wire = npas::serve::tensor_from_json(&resp.json).expect("reply decodes");
+        assert_bit_identical(&wire, y);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn shed_requests_are_typed_and_serving_recovers() {
+    let reg = registry(AdmissionConfig { max_pending: 2, per_client: 1 });
+    reg.insert_model("m", model(1)).expect("insert");
+    let (server, mut client) = spawn(reg.clone());
+    let x = input(3);
+
+    // hold the model's two admission slots via the registry handle — the
+    // HTTP request that follows must shed deterministically, not race
+    let t1 = reg.submit("m", "holder-a", x.clone()).expect("slot 1");
+    let t2 = reg.submit("m", "holder-b", x.clone()).expect("slot 2");
+    let shed = client.infer("m", "http-client", &x).expect("exchange completes");
+    assert_eq!(shed.status, 503);
+    assert_eq!(shed.error_kind(), Some("overloaded"));
+
+    // free one slot: per-client fairness is now the binding constraint
+    assert!(t1.wait().is_ok());
+    let hog = reg.submit("m", "hog", x.clone()).expect("hog's one slot");
+    let limited = client.infer("m", "hog", &x).expect("exchange completes");
+    assert_eq!(limited.status, 429);
+    assert_eq!(limited.error_kind(), Some("rate_limited"));
+    // a polite client is admitted while the hog is limited
+    let polite = client.infer("m", "polite", &x).expect("exchange completes");
+    assert_eq!(polite.status, 200, "body: {}", polite.json);
+
+    // shedding killed no workers: after the holders resolve, serving is
+    // fully healthy on the same connection
+    assert!(t2.wait().is_ok());
+    assert!(hog.wait().is_ok());
+    let healthy = client.infer("m", "http-client", &x).expect("exchange completes");
+    assert_eq!(healthy.status, 200);
+
+    let entry = reg.get("m").expect("model resident");
+    let stats = entry.admission_stats();
+    assert_eq!(stats.shed_overloaded, 1);
+    assert_eq!(stats.shed_rate_limited, 1);
+    assert_eq!(stats.pending, 0);
+    server.shutdown();
+}
+
+#[test]
+fn hot_swap_never_mixes_weights() {
+    let dir = std::env::temp_dir().join(format!("npas_serve_swap_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let v2_path = dir.join("v2.json");
+    let x = input(5);
+    let m1 = model(1);
+    let m2 = model(2);
+    let w1 = m1.run(&x).expect("v1 direct");
+    let w2 = m2.run(&x).expect("v2 direct");
+    assert_ne!(w1, w2, "the two versions must be distinguishable");
+    m2.save(&v2_path).expect("save v2 bundle");
+
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("m", m1).expect("insert v1");
+    let (server, mut client) = spawn(reg.clone());
+
+    let before = client.infer("m", "swap", &x).expect("v1 infer");
+    assert_eq!(before.json.usize_field("version").unwrap(), 1);
+    assert_bit_identical(&npas::serve::tensor_from_json(&before.json).unwrap(), &w1);
+
+    // requests in flight across the swap: tickets admitted against v1 hold
+    // the old entry alive and must answer with v1 weights
+    let straddler = reg.submit("m", "swap", x.clone()).expect("pre-swap ticket");
+
+    let body = npas::util::Json::obj(vec![(
+        "path",
+        npas::util::Json::str(v2_path.to_string_lossy().as_ref()),
+    )]);
+    let loaded = client.post("/v1/models/m/load", &body).expect("hot-swap load");
+    assert_eq!(loaded.status, 200, "body: {}", loaded.json);
+    assert_eq!(loaded.json.usize_field("version").unwrap(), 2);
+
+    let old = straddler.wait().expect("straddler answered");
+    assert_eq!(old.version, 1, "pre-swap ticket must be answered by v1");
+    assert_bit_identical(&old.output, &w1);
+
+    // every post-swap response is pure v2 — never a blend, never v1
+    for i in 0..3 {
+        let after = client.infer("m", "swap", &x).expect("v2 infer");
+        assert_eq!(after.status, 200, "infer {i} body: {}", after.json);
+        assert_eq!(after.json.usize_field("version").unwrap(), 2);
+        assert_bit_identical(&npas::serve::tensor_from_json(&after.json).unwrap(), &w2);
+    }
+    assert_eq!(reg.stats().swaps, 1);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_models_and_malformed_bodies_are_typed_over_http() {
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("m", model(1)).expect("insert");
+    let (server, mut client) = spawn(reg);
+
+    let missing = client.infer("ghost", "c", &input(1)).expect("exchange completes");
+    assert_eq!(missing.status, 404);
+    assert_eq!(missing.error_kind(), Some("not_found"));
+
+    let bad = npas::util::Json::parse(r#"{"dims":[8,8,8],"data":[1.0]}"#).unwrap();
+    let mismatched = client.post("/v1/models/m/infer", &bad).expect("exchange completes");
+    assert_eq!(mismatched.status, 400);
+    assert_eq!(mismatched.error_kind(), Some("bad_request"));
+
+    // a wrong-shaped (but self-consistent) tensor is the engine's typed
+    // rejection, not a hang or a worker death
+    let wrong_shape = client.infer("m", "c", &input_with_dims(vec![4, 4, 8]));
+    let wrong = wrong_shape.expect("exchange completes");
+    assert_eq!(wrong.status, 400, "body: {}", wrong.json);
+    assert_eq!(wrong.error_kind(), Some("exec"));
+
+    // the same connection still serves good requests afterwards
+    let ok = client.infer("m", "c", &input(2)).expect("exchange completes");
+    assert_eq!(ok.status, 200);
+    server.shutdown();
+}
+
+fn input_with_dims(dims: Vec<usize>) -> Tensor {
+    let mut rng = XorShift64Star::new(9);
+    Tensor::he_normal(dims, &mut rng)
+}
+
+#[test]
+fn registry_lifecycle_over_http_list_delete_stats() {
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("a", model(1)).expect("insert a");
+    reg.insert_model("b", model(2)).expect("insert b");
+    let (server, mut client) = spawn(reg);
+
+    let listed = client.get("/v1/models").expect("list");
+    assert_eq!(listed.status, 200);
+    let names: Vec<&str> = listed
+        .json
+        .arr_field("models")
+        .expect("models array")
+        .iter()
+        .map(|m| m.str_field("name").expect("name"))
+        .collect();
+    assert_eq!(names, vec!["a", "b"]);
+
+    let _ = client.infer("a", "c", &input(1)).expect("infer a");
+    let stats = client.get("/v1/models/a/stats").expect("stats");
+    assert_eq!(stats.status, 200);
+    assert_eq!(stats.json.usize_field("completed").expect("completed"), 1);
+    assert_eq!(stats.json.usize_field("admitted").expect("admitted"), 1);
+
+    let deleted = client.delete("/v1/models/b").expect("delete");
+    assert_eq!(deleted.status, 200);
+    let gone = client.get("/v1/models/b/stats").expect("stats after delete");
+    assert_eq!(gone.status, 404);
+    server.shutdown();
+}
+
+#[test]
+fn direct_registry_infer_matches_the_facade() {
+    // the non-HTTP entry point of the registry is parity-gated too
+    let m = model(3);
+    let x = input(7);
+    let direct = m.run(&x).expect("direct run");
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("m", m).expect("insert");
+    let reply = reg.infer("m", "c", x).expect("registry infer");
+    assert_eq!(reply.output, direct, "registry path must be bit-identical");
+    match reg.infer("ghost", "c", input(1)) {
+        Err(NpasError::NotFound { model }) => assert_eq!(model, "ghost"),
+        other => panic!("expected NotFound, got {other:?}"),
+    }
+}
