@@ -79,6 +79,8 @@ USAGE: npas <subcommand> [--config file.json] [--flag value ...]
            [--addr 127.0.0.1:8080 --capacity 4 --conns 8]
            [--workers 2 --max-batch 8 --queue-cap 1024]
            [--max-pending 256 --per-client 64]
+           [--artifact-root dir]  confines POST .../load to dir;
+                                  required for a non-loopback --addr
            routes: GET /healthz | GET /v1/models
                    POST /v1/models/{{name}}/infer   {{\"dims\":[h,w,c],\"data\":[..]}}
                    GET /v1/models/{{name}}/stats | POST /v1/models/{{name}}/load
@@ -311,6 +313,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ServerConfig {
             addr: args.str_or("addr", "127.0.0.1:8080"),
             max_connections: args.usize_or("conns", 8),
+            // confines POST /v1/models/{name}/load; required for any
+            // non-loopback --addr (bind refuses otherwise)
+            artifact_root: args.get("artifact-root").map(std::path::PathBuf::from),
             ..Default::default()
         },
     )?;

@@ -87,28 +87,45 @@ impl HttpResponse {
 }
 
 /// Read one CRLF- (or bare-LF-) terminated line, bounding total head bytes.
+///
+/// The bound is enforced *while* reading, not after: a peer streaming
+/// bytes with no `\n` gets a typed [`HttpError::TooLarge`] as soon as the
+/// head would exceed [`Limits::max_head`], and this function never buffers
+/// more than that many line bytes — the "typed error, not an OOM" claim in
+/// the module docs holds even against an unterminated flood.
 fn read_line(
     r: &mut impl BufRead,
     head_bytes: &mut usize,
     limits: &Limits,
 ) -> Result<Option<String>, HttpError> {
     let mut buf = Vec::new();
-    match r.read_until(b'\n', &mut buf) {
-        Ok(0) => return Ok(None), // EOF
-        Ok(_) => {}
-        Err(_) => return Err(HttpError::Closed), // timeout/reset mid-line
-    }
-    if buf.last() != Some(&b'\n') {
-        // EOF before the terminator: a truncated line, not a clean close
-        return Err(HttpError::Closed);
+    loop {
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            Err(_) => return Err(HttpError::Closed), // timeout/reset mid-line
+        };
+        if chunk.is_empty() {
+            if buf.is_empty() {
+                return Ok(None); // clean EOF before any line bytes
+            }
+            // EOF before the terminator: a truncated line, not a clean close
+            return Err(HttpError::Closed);
+        }
+        let newline = chunk.iter().position(|&b| b == b'\n');
+        let take = newline.map_or(chunk.len(), |i| i + 1);
+        if *head_bytes + buf.len() + take > limits.max_head {
+            return Err(HttpError::TooLarge(format!(
+                "head exceeds {} bytes",
+                limits.max_head
+            )));
+        }
+        buf.extend_from_slice(&chunk[..take]);
+        r.consume(take);
+        if newline.is_some() {
+            break;
+        }
     }
     *head_bytes += buf.len();
-    if *head_bytes > limits.max_head {
-        return Err(HttpError::TooLarge(format!(
-            "head exceeds {} bytes",
-            limits.max_head
-        )));
-    }
     while matches!(buf.last(), Some(b'\n' | b'\r')) {
         buf.pop();
     }
@@ -313,6 +330,19 @@ mod tests {
         let big_body = "POST /x HTTP/1.1\r\ncontent-length: 9\r\n\r\n123456789";
         assert!(matches!(
             read_request(&mut Cursor::new(big_body.as_bytes().to_vec()), &limits),
+            Err(HttpError::TooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn unterminated_head_flood_is_too_large_not_unbounded_buffering() {
+        // a peer streaming head bytes with no `\n` must hit the typed
+        // limit as soon as the head would exceed max_head — never Closed
+        // after buffering the whole flood
+        let limits = Limits { max_head: 64, max_body: 8 };
+        let flood = vec![b'a'; 1 << 20];
+        assert!(matches!(
+            read_request(&mut Cursor::new(flood), &limits),
             Err(HttpError::TooLarge(_))
         ));
     }

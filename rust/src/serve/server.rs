@@ -23,6 +23,7 @@
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -49,6 +50,14 @@ pub struct ServerConfig {
     pub max_connections: usize,
     /// Per-message head/body byte bounds.
     pub limits: Limits,
+    /// Directory `POST /v1/models/{name}/load` may load artifacts from.
+    /// When set, requested paths are canonicalized and must resolve under
+    /// this root (symlink escapes included) or the load is rejected `400`.
+    /// `None` leaves the route unrestricted, which is only acceptable on a
+    /// loopback bind — [`HttpServer::bind`] refuses to expose an
+    /// unrestricted load route on a non-loopback address, since it would
+    /// hand remote peers an arbitrary-filesystem-path probe/load primitive.
+    pub artifact_root: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -57,6 +66,7 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:0".to_string(),
             max_connections: 8,
             limits: Limits::default(),
+            artifact_root: None,
         }
     }
 }
@@ -105,6 +115,14 @@ impl HttpServer {
         let listener =
             TcpListener::bind(&cfg.addr).map_err(|e| NpasError::io(&cfg.addr, e))?;
         let addr = listener.local_addr().map_err(|e| NpasError::io(&cfg.addr, e))?;
+        if !addr.ip().is_loopback() && cfg.artifact_root.is_none() {
+            return Err(NpasError::invalid(format!(
+                "refusing to bind {addr} without an artifact root: the \
+                 unrestricted load route would let remote peers load arbitrary \
+                 filesystem paths; set ServerConfig.artifact_root \
+                 (`--artifact-root` on the CLI) or bind loopback"
+            )));
+        }
         Ok(HttpServer {
             registry,
             listener,
@@ -136,10 +154,22 @@ impl HttpServer {
     /// handler pool on exit waits for in-flight connections to finish.
     pub fn run(&self) {
         let pool = ThreadPool::new(self.cfg.max_connections);
+        let mut accept_errors: u32 = 0;
         while self.running.load(Ordering::SeqCst) {
             let stream = match self.listener.accept() {
-                Ok((s, _)) => s,
-                Err(_) => continue,
+                Ok((s, _)) => {
+                    accept_errors = 0;
+                    s
+                }
+                Err(_) => {
+                    // a persistent accept failure (e.g. EMFILE) must not
+                    // busy-spin a core: back off exponentially, capped so
+                    // shutdown stays responsive
+                    accept_errors = accept_errors.saturating_add(1);
+                    let backoff = Duration::from_millis(10u64 << accept_errors.min(5));
+                    std::thread::sleep(backoff.min(Duration::from_millis(500)));
+                    continue;
+                }
             };
             if !self.running.load(Ordering::SeqCst) {
                 break; // the shutdown self-connect
@@ -156,7 +186,10 @@ impl HttpServer {
             let registry = self.registry.clone();
             let running = self.running.clone();
             let limits = self.cfg.limits;
-            pool.execute(move || handle_connection(stream, &registry, limits, &running));
+            let artifact_root = self.cfg.artifact_root.clone();
+            pool.execute(move || {
+                handle_connection(stream, &registry, limits, artifact_root.as_deref(), &running)
+            });
         }
         // pool drop joins workers; handlers notice the cleared flag on
         // their next idle tick
@@ -218,6 +251,7 @@ fn handle_connection(
     stream: TcpStream,
     registry: &Arc<ModelRegistry>,
     limits: Limits,
+    artifact_root: Option<&Path>,
     running: &AtomicBool,
 ) {
     if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
@@ -267,7 +301,7 @@ fn handle_connection(
             }
         };
         let keep_alive = req.keep_alive();
-        let (status, body) = route(registry, &req);
+        let (status, body) = route(registry, &req, artifact_root);
         if write_response(&mut writer, status, body.to_string().as_bytes(), keep_alive)
             .is_err()
             || !keep_alive
@@ -281,7 +315,11 @@ fn handle_connection(
 
 /// Dispatch one parsed request against the registry. Pure with respect to
 /// the connection: returns `(status, json_body)`.
-fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) {
+fn route(
+    registry: &ModelRegistry,
+    req: &HttpRequest,
+    artifact_root: Option<&Path>,
+) -> (u16, Json) {
     let path = req.path.split('?').next().unwrap_or("");
     let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
     match (req.method.as_str(), segs.as_slice()) {
@@ -289,7 +327,9 @@ fn route(registry: &ModelRegistry, req: &HttpRequest) -> (u16, Json) {
         ("GET", ["v1", "models"]) => list_models(registry),
         ("GET", ["v1", "models", name, "stats"]) => model_stats(registry, name),
         ("POST", ["v1", "models", name, "infer"]) => infer(registry, name, req),
-        ("POST", ["v1", "models", name, "load"]) => load_model(registry, name, req),
+        ("POST", ["v1", "models", name, "load"]) => {
+            load_model(registry, name, req, artifact_root)
+        }
         ("DELETE", ["v1", "models", name]) => {
             if registry.remove(name) {
                 (200, Json::obj(vec![("removed", Json::str(*name))]))
@@ -436,7 +476,34 @@ fn reply_json(reply: &InferReply) -> Json {
     ])
 }
 
-fn load_model(registry: &ModelRegistry, name: &str, req: &HttpRequest) -> (u16, Json) {
+/// Canonicalize a requested artifact path and require it to live under
+/// the configured root; a missing file, a symlink escape or a plain `..`
+/// escape are all the same typed rejection, leaking nothing about paths
+/// outside the root.
+fn check_artifact_path(
+    root: &Path,
+    requested: &str,
+) -> std::result::Result<PathBuf, NpasError> {
+    let denied = || {
+        NpasError::invalid(format!(
+            "artifact path `{requested}` does not resolve under the configured \
+             artifact root"
+        ))
+    };
+    let root = root.canonicalize().map_err(|e| NpasError::io(root, e))?;
+    let path = Path::new(requested).canonicalize().map_err(|_| denied())?;
+    if !path.starts_with(&root) {
+        return Err(denied());
+    }
+    Ok(path)
+}
+
+fn load_model(
+    registry: &ModelRegistry,
+    name: &str,
+    req: &HttpRequest,
+    artifact_root: Option<&Path>,
+) -> (u16, Json) {
     let parsed = std::str::from_utf8(&req.body)
         .map_err(|_| NpasError::parse("body is not utf-8"))
         .and_then(|s| Json::parse(s).map_err(NpasError::from));
@@ -447,6 +514,13 @@ fn load_model(registry: &ModelRegistry, name: &str, req: &HttpRequest) -> (u16, 
     let path = match json.str_field("path") {
         Ok(p) => p.to_string(),
         Err(e) => return error_response(&e),
+    };
+    let path = match artifact_root {
+        Some(root) => match check_artifact_path(root, &path) {
+            Ok(p) => p.to_string_lossy().into_owned(),
+            Err(e) => return error_response(&e),
+        },
+        None => path,
     };
     match registry.deploy(name, &path) {
         Ok(entry) => (
@@ -574,11 +648,61 @@ mod tests {
             headers: Default::default(),
             body: Vec::new(),
         };
-        assert_eq!(route(&reg, &req("GET", "/healthz")).0, 200);
-        assert_eq!(route(&reg, &req("GET", "/v1/models")).0, 200);
-        assert_eq!(route(&reg, &req("GET", "/nope")).0, 404);
-        assert_eq!(route(&reg, &req("PUT", "/healthz")).0, 405);
-        assert_eq!(route(&reg, &req("GET", "/v1/models/ghost/stats")).0, 404);
-        assert_eq!(route(&reg, &req("DELETE", "/v1/models/ghost")).0, 404);
+        assert_eq!(route(&reg, &req("GET", "/healthz"), None).0, 200);
+        assert_eq!(route(&reg, &req("GET", "/v1/models"), None).0, 200);
+        assert_eq!(route(&reg, &req("GET", "/nope"), None).0, 404);
+        assert_eq!(route(&reg, &req("PUT", "/healthz"), None).0, 405);
+        assert_eq!(route(&reg, &req("GET", "/v1/models/ghost/stats"), None).0, 404);
+        assert_eq!(route(&reg, &req("DELETE", "/v1/models/ghost"), None).0, 404);
+    }
+
+    #[test]
+    fn artifact_root_confines_load_paths() {
+        let base = std::env::temp_dir()
+            .join(format!("npas_artifact_root_{}", std::process::id()));
+        let root = base.join("artifacts");
+        std::fs::create_dir_all(&root).unwrap();
+        let inside = root.join("m.json");
+        std::fs::write(&inside, b"{}").unwrap();
+        let outside = base.join("secret.json");
+        std::fs::write(&outside, b"{}").unwrap();
+
+        let ok = check_artifact_path(&root, inside.to_str().unwrap()).unwrap();
+        assert_eq!(ok, inside.canonicalize().unwrap());
+
+        // a sibling outside the root, a `..` escape and a nonexistent file
+        // are all the same typed rejection
+        for bad in [
+            outside.to_string_lossy().into_owned(),
+            format!("{}/../secret.json", root.display()),
+            root.join("ghost.json").to_string_lossy().into_owned(),
+        ] {
+            assert!(
+                matches!(check_artifact_path(&root, &bad), Err(NpasError::InvalidConfig(_))),
+                "`{bad}` must be rejected"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn non_loopback_bind_requires_an_artifact_root() {
+        let reg = Arc::new(ModelRegistry::new(Default::default()).unwrap());
+        // 0.0.0.0 without a root: the load route would be a remote
+        // arbitrary-path primitive, so bind must refuse
+        let exposed = ServerConfig {
+            addr: "0.0.0.0:0".to_string(),
+            ..Default::default()
+        };
+        assert!(matches!(
+            HttpServer::bind(reg.clone(), exposed.clone()),
+            Err(NpasError::InvalidConfig(_))
+        ));
+        // the same bind with a root is accepted
+        let confined = ServerConfig {
+            artifact_root: Some(std::env::temp_dir()),
+            ..exposed
+        };
+        assert!(HttpServer::bind(reg, confined).is_ok());
     }
 }

@@ -51,11 +51,11 @@ fn registry(admission: AdmissionConfig) -> Arc<ModelRegistry> {
 }
 
 fn spawn(reg: Arc<ModelRegistry>) -> (ServerHandle, HttpClient) {
-    let server = HttpServer::bind(
-        reg,
-        ServerConfig { max_connections: 4, ..Default::default() },
-    )
-    .expect("server binds an ephemeral port");
+    spawn_with(reg, ServerConfig { max_connections: 4, ..Default::default() })
+}
+
+fn spawn_with(reg: Arc<ModelRegistry>, cfg: ServerConfig) -> (ServerHandle, HttpClient) {
+    let server = HttpServer::bind(reg, cfg).expect("server binds an ephemeral port");
     let addr = server.addr();
     (server.spawn(), HttpClient::new(addr.to_string()))
 }
@@ -114,8 +114,11 @@ fn shed_requests_are_typed_and_serving_recovers() {
     assert_eq!(shed.status, 503);
     assert_eq!(shed.error_kind(), Some("overloaded"));
 
-    // free one slot: per-client fairness is now the binding constraint
+    // free BOTH slots before the fairness phase: with only the hog's one
+    // ticket pending (1 < max_pending 2), per-client fairness — not the
+    // overload bound, which is checked first — is the binding constraint
     assert!(t1.wait().is_ok());
+    assert!(t2.wait().is_ok());
     let hog = reg.submit("m", "hog", x.clone()).expect("hog's one slot");
     let limited = client.infer("m", "hog", &x).expect("exchange completes");
     assert_eq!(limited.status, 429);
@@ -124,9 +127,8 @@ fn shed_requests_are_typed_and_serving_recovers() {
     let polite = client.infer("m", "polite", &x).expect("exchange completes");
     assert_eq!(polite.status, 200, "body: {}", polite.json);
 
-    // shedding killed no workers: after the holders resolve, serving is
+    // shedding killed no workers: after the holder resolves, serving is
     // fully healthy on the same connection
-    assert!(t2.wait().is_ok());
     assert!(hog.wait().is_ok());
     let healthy = client.infer("m", "http-client", &x).expect("exchange completes");
     assert_eq!(healthy.status, 200);
@@ -184,6 +186,49 @@ fn hot_swap_never_mixes_weights() {
         assert_bit_identical(&npas::serve::tensor_from_json(&after.json).unwrap(), &w2);
     }
     assert_eq!(reg.stats().swaps, 1);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn load_route_is_confined_to_the_artifact_root() {
+    let dir = std::env::temp_dir().join(format!("npas_serve_root_{}", std::process::id()));
+    let root = dir.join("artifacts");
+    std::fs::create_dir_all(&root).expect("artifact root");
+    let inside = root.join("v2.json");
+    let outside = dir.join("outside.json");
+    let m2 = model(2);
+    m2.save(&inside).expect("save inside root");
+    m2.save(&outside).expect("save outside root");
+
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("m", model(1)).expect("insert v1");
+    let (server, mut client) = spawn_with(
+        reg.clone(),
+        ServerConfig {
+            max_connections: 4,
+            artifact_root: Some(root.clone()),
+            ..Default::default()
+        },
+    );
+
+    let load_body = |p: &std::path::Path| {
+        npas::util::Json::obj(vec![(
+            "path",
+            npas::util::Json::str(p.to_string_lossy().as_ref()),
+        )])
+    };
+    // a path under the root loads and swaps
+    let ok = client.post("/v1/models/m/load", &load_body(&inside)).expect("load inside");
+    assert_eq!(ok.status, 200, "body: {}", ok.json);
+    // a valid artifact outside the root is a typed rejection, not a swap —
+    // and so is a `..` escape written relative to the root
+    for escape in [outside.clone(), root.join("..").join("outside.json")] {
+        let denied = client.post("/v1/models/m/load", &load_body(&escape)).expect("exchange");
+        assert_eq!(denied.status, 400, "`{}` body: {}", escape.display(), denied.json);
+        assert_eq!(denied.error_kind(), Some("invalid_config"));
+    }
+    assert_eq!(reg.stats().swaps, 1, "only the confined load swapped");
     server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }

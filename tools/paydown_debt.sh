@@ -52,3 +52,7 @@ git status --short -- "$GOLDEN" BENCH_5.json BENCH_6.json BENCH_7.json
 echo
 echo "done — review the staged files and commit, e.g.:"
 echo "  git commit -m 'Commit measured bench snapshots and golden latency pin'"
+echo
+echo "then harden the 'Golden latency pin is committed' step in"
+echo ".github/workflows/ci.yml from a ::warning back to 'exit 1' in the"
+echo "same commit, so the pin can never silently disarm again."
