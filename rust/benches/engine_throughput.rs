@@ -14,7 +14,15 @@
 //! the sequential baseline; on narrower hosts the parallel ceiling is the
 //! core count and the assert is skipped (the numbers still print).
 //!
+//! PR-8 adds per-precision-tier bars (fp32-scalar / fp32-simd-dispatch /
+//! int8) for the packed GEMM micro-kernel and the batched engine, written
+//! to `BENCH_8.json` (the PR-5 snapshot in `BENCH_5.json` is unchanged).
+//! Where the simd tier is active (`--features simd` on an AVX host) the
+//! dispatched GEMM must beat scalar by >= 1.5x on >= 4-core hosts;
+//! `NPAS_BENCH_LENIENT` demotes that assert to a print.
+//!
 //! Run: `cargo bench --bench engine_throughput`
+//!      `cargo bench --bench engine_throughput --features simd`
 
 use std::hint::black_box;
 use std::sync::Arc;
@@ -22,7 +30,10 @@ use std::time::Duration;
 
 use npas::bench::{bench, matmul_tiled_spawn_alloc, quick, Measurement, Table};
 use npas::compiler::device::KRYO_485;
-use npas::compiler::{max_abs_diff, Algo, Framework, LayerWeights, PlanCache, WeightSet};
+use npas::compiler::{
+    max_abs_diff, weight_quant_report, Algo, Framework, LayerWeights, PlanCache, Precision,
+    QuantizedGemm, WeightSet,
+};
 use npas::graph::{zoo, LayerKind, Network, NetworkBuilder};
 use npas::runtime::EngineConfig;
 use npas::tensor::{same_pad, Tensor, XorShift64Star};
@@ -252,6 +263,81 @@ fn main() {
         stats_after.bytes as f64 / 1024.0
     );
 
+    // ---- PR-8 precision tiers: scalar / simd-dispatch / int8 -----------
+    println!(
+        "\n== precision tiers (active tier: {}, avx: {}) ==",
+        npas::simd::tier(),
+        npas::simd::avx_active()
+    );
+    // micro-kernel bars: one packed GEMM, same tier entry points the
+    // executor dispatches through
+    let (khw, kcin, kcout) = (32usize, 64usize, 64usize);
+    let gx = Tensor::he_normal(vec![khw, khw, kcin], &mut rng);
+    let gw = Tensor::he_normal(vec![3, 3, kcin, kcout], &mut rng)
+        .reshape(vec![9 * kcin, kcout]);
+    let gpatches = gx.im2col(3, 3, 1);
+    let gpanels = npas::tensor::PackedB::pack(&gw);
+    let gm = gpatches.dims()[0];
+    let mut g_scalar = vec![0f32; gm * kcout];
+    let mut g_simd = vec![0f32; gm * kcout];
+    let mut g_int8 = vec![0f32; gm * kcout];
+    npas::tensor::ops::gemm_packed_scalar_into(gpatches.data(), &gpanels, &mut g_scalar);
+    npas::tensor::ops::gemm_packed_dispatch_into(gpatches.data(), &gpanels, &mut g_simd);
+    assert_eq!(g_scalar, g_simd, "simd tier must be bit-identical to scalar");
+    let gq = QuantizedGemm::from_slice(gw.data(), 9 * kcin, kcout);
+    gq.matmul_into(gpatches.data(), 1, &mut g_int8);
+    let t_tier_scalar = quick("gemm tier fp32-scalar", || {
+        npas::tensor::ops::gemm_packed_scalar_into(gpatches.data(), &gpanels, &mut g_scalar);
+        black_box(&g_scalar);
+    });
+    let t_tier_simd = quick("gemm tier fp32-dispatch", || {
+        npas::tensor::ops::gemm_packed_dispatch_into(gpatches.data(), &gpanels, &mut g_simd);
+        black_box(&g_simd);
+    });
+    let t_tier_int8 = quick("gemm tier int8", || {
+        gq.matmul_into(gpatches.data(), 1, &mut g_int8);
+        black_box(&g_int8);
+    });
+    let simd_speedup =
+        t_tier_scalar.mean.as_secs_f64() / t_tier_simd.mean.as_secs_f64().max(1e-12);
+    let int8_speedup =
+        t_tier_scalar.mean.as_secs_f64() / t_tier_int8.mean.as_secs_f64().max(1e-12);
+    println!(
+        "   micro-kernel: dispatch/scalar {simd_speedup:.2}x, int8/scalar {int8_speedup:.2}x"
+    );
+
+    // engine-level int8 bar: same net/seed, quantized tier, parity-gated
+    // against the fp32 sequential outputs at the quant-harness tolerance
+    let model_int8 = CompiledModel::build(net.clone())
+        .weights(42u64)
+        .target(&KRYO_485, Framework::TFLite)
+        .plan_cache(cache.clone())
+        .intra_workers(cores)
+        .precision(Precision::Int8)
+        .compile()
+        .expect("int8 model compiles");
+    let nq = weight_quant_report(model_int8.network(), model_int8.weights()).len();
+    let int8_out = model_int8.run_batch(&batch).expect("int8 batched run");
+    for (i, (g, s)) in int8_out.iter().zip(&seq_out).enumerate() {
+        let scale = s.abs_max().max(1e-3);
+        let tol = 0.1 * (nq as f64).sqrt().max(1.0) as f32 * scale;
+        let diff = max_abs_diff(g, s);
+        assert!(
+            diff <= tol,
+            "image {i}: int8 output outside the quant tolerance ({diff} vs {tol}, \
+             {nq} quantized layers)"
+        );
+    }
+    let t_batch_int8 = quick("CompiledModel::run_batch(8), int8", || {
+        black_box(model_int8.run_batch(&batch).expect("int8 batched run"));
+    });
+    println!(
+        "   engine batch(8): fp32 {:.2}ms, int8 {:.2}ms ({:.2}x; {nq} quantized layers)",
+        ms(&t_batch),
+        ms(&t_batch_int8),
+        t_batch.mean.as_secs_f64() / t_batch_int8.mean.as_secs_f64().max(1e-12)
+    );
+
     // ---- machine-readable snapshot for the bench trajectory ------------
     let snapshot = Json::obj(vec![
         ("bench", Json::str("engine_throughput")),
@@ -301,6 +387,37 @@ fn main() {
     std::fs::write(&snap_path, snapshot.to_string()).expect("writing BENCH_5.json");
     println!("   wrote {}", snap_path.display());
 
+    // PR-8 per-tier snapshot (BENCH_5 above stays as the PR-5 trajectory)
+    let tier_snapshot = Json::obj(vec![
+        ("bench", Json::str("engine_throughput")),
+        ("pr", Json::num(8.0)),
+        ("cores", Json::num(cores as f64)),
+        ("tier", Json::str(npas::simd::tier())),
+        ("avx_active", Json::Bool(npas::simd::avx_active())),
+        (
+            "gemm_micro_kernel",
+            Json::obj(vec![
+                ("scalar_ms", Json::num(ms(&t_tier_scalar))),
+                ("simd_dispatch_ms", Json::num(ms(&t_tier_simd))),
+                ("int8_ms", Json::num(ms(&t_tier_int8))),
+                ("simd_speedup", Json::num(simd_speedup)),
+                ("int8_speedup", Json::num(int8_speedup)),
+            ]),
+        ),
+        (
+            "engine_batch8",
+            Json::obj(vec![
+                ("fp32_ms", Json::num(ms(&t_batch))),
+                ("int8_ms", Json::num(ms(&t_batch_int8))),
+                ("quantized_layers", Json::num(nq as f64)),
+            ]),
+        ),
+    ]);
+    let tier_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_8.json");
+    std::fs::write(&tier_path, tier_snapshot.to_string()).expect("writing BENCH_8.json");
+    println!("   wrote {}", tier_path.display());
+
     // shared CI runners have noisy-neighbor wall clocks; NPAS_BENCH_LENIENT
     // demotes the acceptance asserts to loud prints there (the numbers and
     // the BENCH_5.json snapshot still record the truth)
@@ -332,5 +449,26 @@ fn main() {
             t_hot.mean_ms()
         );
         println!("acceptance: single-image hot path {single_speedup:.2}x >= 1.5x — OK");
+    }
+
+    // the simd bar only binds where the simd tier actually runs: a build
+    // with `--features simd` on an AVX host (scalar-only builds and
+    // non-AVX hosts print the ratio without a bar to clear)
+    if !npas::simd::avx_active() {
+        println!("simd acceptance skipped: scalar tier active ({})", npas::simd::tier());
+    } else if cores < 4 || lenient {
+        println!(
+            "simd acceptance demoted (cores {cores}, lenient {lenient}): \
+             dispatch/scalar {simd_speedup:.2}x (bar 1.5x)"
+        );
+    } else {
+        assert!(
+            simd_speedup >= 1.5,
+            "simd GEMM tier below the 1.5x acceptance bar: {simd_speedup:.2}x \
+             (scalar {:.2}ms vs dispatch {:.2}ms)",
+            t_tier_scalar.mean_ms(),
+            t_tier_simd.mean_ms()
+        );
+        println!("acceptance: simd GEMM tier {simd_speedup:.2}x >= 1.5x scalar — OK");
     }
 }

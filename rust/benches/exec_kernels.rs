@@ -12,10 +12,11 @@
 //! Run: `cargo bench --bench exec_kernels`
 
 use npas::bench::{matmul_tiled_spawn_alloc, quick, Table};
+use npas::compiler::QuantizedGemm;
 use npas::coordinator::scheduler::{map_parallel, map_parallel_scoped};
 use npas::pruning::packing::{DEFAULT_PACK_COLS, DEFAULT_PACK_ROWS};
 use npas::pruning::{apply_mask, generate_mask, BlockCsr, PruneRate, PruneScheme};
-use npas::tensor::ops::gemm_packed_into;
+use npas::tensor::ops::{gemm_packed_dispatch_into, gemm_packed_into, gemm_packed_scalar_into};
 use npas::tensor::{PackedB, Tensor, XorShift64Star};
 
 fn main() {
@@ -119,5 +120,56 @@ fn main() {
         "   in-place tiles {:.2}x, packed panels + scratch {:.2}x vs the pre-PR path",
         t_before.mean.as_secs_f64() / t_inplace.mean.as_secs_f64().max(1e-12),
         t_before.mean.as_secs_f64() / t_packed.mean.as_secs_f64().max(1e-12)
+    );
+
+    // ---- PR-8 precision tiers: scalar / simd-dispatch / int8 -----------
+    println!(
+        "\n== packed GEMM precision tiers (active tier: {}, avx: {}) ==",
+        npas::simd::tier(),
+        npas::simd::avx_active()
+    );
+    let m = patches.dims()[0];
+    let n = w2.dims()[1];
+    let mut out_scalar = vec![0f32; m * n];
+    let mut out_dispatch = vec![0f32; m * n];
+    let mut out_int8 = vec![0f32; m * n];
+    gemm_packed_scalar_into(patches.data(), &panels, &mut out_scalar);
+    gemm_packed_dispatch_into(patches.data(), &panels, &mut out_dispatch);
+    // the simd tier is an implementation of the same arithmetic contract:
+    // per-lane accumulation chains in scalar order, mul+add (no FMA)
+    assert_eq!(
+        out_scalar, out_dispatch,
+        "dispatched micro-kernel must be bit-identical to the scalar reference"
+    );
+    let q = QuantizedGemm::from_slice(w2.data(), 9 * cin, cout);
+    q.matmul_into(patches.data(), 1, &mut out_int8);
+    let absmax = out_scalar.iter().fold(0f32, |a, v| a.max(v.abs())).max(1e-3);
+    let qerr = out_scalar
+        .iter()
+        .zip(&out_int8)
+        .fold(0f32, |a, (s, i)| a.max((s - i).abs()));
+    assert!(
+        qerr <= 0.02 * absmax,
+        "int8 tier outside the 2% single-GEMM quantization envelope: {qerr} vs {absmax}"
+    );
+    let t_scalar = quick("tier fp32-scalar (reference)", || {
+        gemm_packed_scalar_into(patches.data(), &panels, &mut out_scalar);
+        std::hint::black_box(&out_scalar);
+    });
+    let t_simd = quick("tier fp32-dispatch (simd when active)", || {
+        gemm_packed_dispatch_into(patches.data(), &panels, &mut out_dispatch);
+        std::hint::black_box(&out_dispatch);
+    });
+    let t_int8 = quick("tier int8 (i32 accumulate)", || {
+        q.matmul_into(patches.data(), 1, &mut out_int8);
+        std::hint::black_box(&out_int8);
+    });
+    println!(
+        "   dispatch/scalar speedup: {:.2}x, int8/scalar: {:.2}x \
+         (int8 weights {:.0} KiB vs fp32 panels {:.0} KiB)",
+        t_scalar.mean.as_secs_f64() / t_simd.mean.as_secs_f64().max(1e-12),
+        t_scalar.mean.as_secs_f64() / t_int8.mean.as_secs_f64().max(1e-12),
+        q.bytes() as f64 / 1024.0,
+        (9 * cin * cout * 4) as f64 / 1024.0
     );
 }

@@ -69,6 +69,7 @@ use crate::tensor::ops::{depthwise_conv_into, gemm_into, gemm_packed_into, im2co
 use crate::tensor::{same_pad, PackedB, Tensor, XorShift64Star};
 
 use super::codegen::{Algo, ExecutionPlan};
+use super::quantize::{Precision, QuantizedGemm};
 use super::sparse_exec::LayerSparsity;
 use super::winograd;
 use super::SparsityMap;
@@ -88,6 +89,15 @@ pub enum ExecError {
     WeightShape { layer: usize, got: Vec<usize>, want: Vec<usize> },
     /// FC input element count does not match the weight matrix's din.
     FcShape { layer: usize, got: usize, want: usize },
+    /// A request tensor carries NaN/Inf values. Checked at the serving
+    /// boundary (`runtime::engine`) so one poisoned request fails alone
+    /// with a typed error instead of propagating non-finite activations
+    /// through shared workers; direct `Executor`/`CompiledModel::run`
+    /// callers own their inputs and are a documented pass-through.
+    NonFiniteInput {
+        /// Flat index of the first non-finite element in the input tensor.
+        index: usize,
+    },
     /// `run_batch` was called with no inputs.
     EmptyBatch,
     /// The network has no layers to execute.
@@ -110,6 +120,9 @@ impl std::fmt::Display for ExecError {
             }
             ExecError::FcShape { layer, got, want } => {
                 write!(f, "layer {layer}: FC input {got} vs weight din {want}")
+            }
+            ExecError::NonFiniteInput { index } => {
+                write!(f, "input tensor has a non-finite value at flat index {index}")
             }
             ExecError::EmptyBatch => write!(f, "empty request batch"),
             ExecError::EmptyNetwork => write!(f, "empty network"),
@@ -537,6 +550,13 @@ pub struct PreparedKernels {
     /// path never reshapes (= clones) a weight tensor per call again.
     panels: BTreeMap<usize, PackedB>,
     wino: BTreeMap<usize, winograd::WinogradKernel>,
+    /// Int8-quantized GEMM-family weights ([`Precision::Int8`] bindings
+    /// only); dispatch checks this map before the fp32 ones.
+    qgemm: BTreeMap<usize, QuantizedGemm>,
+    /// The numeric tier this binding was prepared for. Carried here so the
+    /// precision travels with the shared `Arc<PreparedKernels>` through the
+    /// engine and serving stack without widening their constructors.
+    precision: Precision,
 }
 
 impl PreparedKernels {
@@ -554,11 +574,28 @@ impl PreparedKernels {
         sparsity: &SparsityMap,
         weights: &WeightSet,
     ) -> Result<PreparedKernels, ExecError> {
+        PreparedKernels::try_prepare_with(net, plan, sparsity, weights, Precision::Fp32)
+    }
+
+    /// [`PreparedKernels::try_prepare`] for an explicit numeric tier. Under
+    /// [`Precision::Int8`] every GEMM-family layer (including sparse-
+    /// annotated ones — masked weights quantize with exact zeros, so the
+    /// pruning survives) gets a [`QuantizedGemm`] instead of a block-CSR /
+    /// panel packing; Winograd groups and depthwise layers stay fp32 (see
+    /// `compiler::quantize` module docs).
+    pub fn try_prepare_with(
+        net: &Network,
+        plan: &ExecutionPlan,
+        sparsity: &SparsityMap,
+        weights: &WeightSet,
+        precision: Precision,
+    ) -> Result<PreparedKernels, ExecError> {
         validate_weight_shapes(net, weights)?;
         let sparse_exec = plan.framework.caps().sparse;
         let mut packed = BTreeMap::new();
         let mut panels = BTreeMap::new();
         let mut wino = BTreeMap::new();
+        let mut qgemm = BTreeMap::new();
         for g in &plan.groups {
             if !matches!(g.algo, Algo::Winograd | Algo::Gemm1x1 | Algo::GemmIm2col) {
                 continue;
@@ -575,6 +612,12 @@ impl PreparedKernels {
                 let w = conv_weight(weights, id, false)?;
                 if g.algo == Algo::Winograd {
                     wino.insert(id, winograd::transform_kernel(w));
+                    continue;
+                }
+                if precision == Precision::Int8 {
+                    // the (kh,kw,cin,cout) storage *is* the row-major
+                    // (kh*kw*cin, cout) im2col view
+                    qgemm.insert(id, QuantizedGemm::from_slice(w.data(), kh * kw * cin, cout));
                     continue;
                 }
                 let annotated = sparsity.get(&id).map(|sp| !sp.is_dense()).unwrap_or(false);
@@ -595,10 +638,14 @@ impl PreparedKernels {
         for l in &net.layers {
             let LayerKind::Linear { din, dout } = l.kind else { continue };
             if let Some(LayerWeights::Linear(t)) = weights.get(l.id) {
-                panels.insert(l.id, PackedB::from_slice(t.data(), din, dout));
+                if precision == Precision::Int8 {
+                    qgemm.insert(l.id, QuantizedGemm::from_slice(t.data(), din, dout));
+                } else {
+                    panels.insert(l.id, PackedB::from_slice(t.data(), din, dout));
+                }
             }
         }
-        Ok(PreparedKernels { packed, panels, wino })
+        Ok(PreparedKernels { packed, panels, wino, qgemm, precision })
     }
 
     /// Number of block-CSR-packed GEMM layers.
@@ -614,6 +661,16 @@ impl PreparedKernels {
     /// Number of pre-transformed Winograd kernels.
     pub fn num_winograd(&self) -> usize {
         self.wino.len()
+    }
+
+    /// Number of int8-quantized GEMM-family layers.
+    pub fn num_quantized(&self) -> usize {
+        self.qgemm.len()
+    }
+
+    /// The numeric tier this binding was prepared for.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 }
 
@@ -1031,7 +1088,9 @@ impl<'a> Executor<'a> {
                                     let patches: &[f32] =
                                         patch_buf.as_deref().unwrap_or(x.data());
                                     let mut out = scratch.take(rows * cout);
-                                    if let Some(csr) = prep.packed.get(&id) {
+                                    if let Some(q) = prep.qgemm.get(&id) {
+                                        q.matmul_into(patches, workers, &mut out);
+                                    } else if let Some(csr) = prep.packed.get(&id) {
                                         csr.matmul_slice_into(patches, workers, &mut out);
                                     } else if let Some(panels) = prep.panels.get(&id) {
                                         gemm_packed_into(patches, panels, workers, &mut out);
@@ -1071,7 +1130,9 @@ impl<'a> Executor<'a> {
                             });
                         }
                         let mut out = scratch.take(nb * dout);
-                        if let Some(panels) = prep.panels.get(&id) {
+                        if let Some(q) = prep.qgemm.get(&id) {
+                            q.matmul_into(x.data(), workers, &mut out);
+                        } else if let Some(panels) = prep.panels.get(&id) {
                             gemm_packed_into(x.data(), panels, workers, &mut out);
                         } else {
                             gemm_into(x.data(), w.data(), din, dout, workers, &mut out);

@@ -29,6 +29,7 @@ pub mod frameworks;
 pub mod fusion;
 pub mod latency;
 pub mod plan_cache;
+pub mod quantize;
 pub mod sparse_exec;
 pub mod tuning;
 pub mod winograd;
@@ -43,6 +44,9 @@ pub use executor::{
 pub use frameworks::Framework;
 pub use latency::{group_time, measure, measure_plan, LatencyReport};
 pub use plan_cache::{PlanCache, PlanCacheStats};
+pub use quantize::{
+    weight_quant_report, LayerQuantReport, Precision, QuantizedGemm, WEIGHT_QUANT_RTOL,
+};
 pub use sparse_exec::LayerSparsity;
 
 use std::collections::BTreeMap;

@@ -1,0 +1,347 @@
+//! Post-training int8 quantization — the narrow-arithmetic kernel tier
+//! (ROADMAP item 3; NPAS targets 8-bit mobile deployment, and autoComp
+//! couples pruning with quantization as one deployment pipeline).
+//!
+//! Scheme: **symmetric, scale-per-output-channel** for weights and
+//! symmetric per-tensor for activations. Each weight column (output
+//! channel) `c` of the row-major `(k, n)` GEMM view gets
+//! `s_w[c] = absmax(col c) / 127`; activations get one
+//! `s_x = absmax(x) / 127` per call. The kernel accumulates in i32 —
+//! exact integer arithmetic, so results are bit-identical for every
+//! worker count — and dequantizes as `out = acc * s_x * s_w[c]`.
+//!
+//! What is quantized: the GEMM-family layers (im2col convolutions, 1x1
+//! convolutions, fully-connected). Masked (pruned) weights quantize with
+//! exact zeros (`round(0 / s) == 0`), so sparsity survives quantization.
+//! Winograd groups and depthwise convolutions stay fp32 — quantizing
+//! inside the Winograd domain amplifies error through the inverse
+//! transform, and depthwise layers are memory- not compute-bound; both are
+//! documented pass-throughs the quantization harness accounts for.
+//!
+//! Error budget: symmetric absmax quantization bounds per-weight error by
+//! `s_w[c] / 2`, i.e. ≤ 1/254 of the channel's absmax
+//! ([`WEIGHT_QUANT_RTOL`]); the end-to-end activation error gate lives in
+//! the `quant_parity` harness with per-layer attribution from
+//! [`weight_quant_report`].
+
+use crate::graph::{LayerKind, Network};
+
+use super::executor::{LayerWeights, WeightSet};
+
+/// Numeric tier a [`crate::CompiledModel`] executes in.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 kernels (the bit-identity reference tier).
+    #[default]
+    Fp32,
+    /// Scale-per-channel symmetric int8 weights with i32 accumulation for
+    /// GEMM-family layers; Winograd / depthwise layers stay fp32.
+    Int8,
+}
+
+impl Precision {
+    /// Stable identifier used by the model bundle format.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Inverse of [`Precision::id`].
+    pub fn from_id(s: &str) -> Option<Precision> {
+        match s {
+            "fp32" => Some(Precision::Fp32),
+            "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// Guaranteed per-weight relative quantization error bound: rounding to the
+/// nearest of 255 symmetric levels puts every dequantized weight within
+/// half a step — `(absmax/127)/2`, i.e. `absmax / 254` — of the original.
+pub const WEIGHT_QUANT_RTOL: f32 = 1.0 / 254.0;
+
+/// A `(k, n)` GEMM right-hand side quantized to int8 with per-output-channel
+/// scales, plus the i32-accumulate GEMM kernel over it. The int8
+/// counterpart of [`crate::tensor::PackedB`]: built once per
+/// (plan, weights) binding by `PreparedKernels`, reused by every
+/// worker/request/batch.
+#[derive(Debug, Clone)]
+pub struct QuantizedGemm {
+    k: usize,
+    n: usize,
+    /// Row-major `(k, n)` quantized weights.
+    weights: Vec<i8>,
+    /// Per output channel (column): dequantization scale `absmax / 127`.
+    scales: Vec<f32>,
+}
+
+/// Quantize one value against a scale: round-to-nearest, saturating at the
+/// symmetric ±127 range (so the representable set is sign-symmetric and
+/// `0.0` maps to exactly `0`).
+fn quantize_value(v: f32, inv_scale: f32) -> i8 {
+    (v * inv_scale).round().clamp(-127.0, 127.0) as i8
+}
+
+impl QuantizedGemm {
+    /// Quantize a row-major `(k, n)` weight slice (the same im2col view
+    /// `PackedB::from_slice` packs). All-zero columns get scale 1.0, which
+    /// round-trips them exactly.
+    pub fn from_slice(w: &[f32], k: usize, n: usize) -> QuantizedGemm {
+        assert_eq!(w.len(), k * n, "QuantizedGemm slice length {} vs {k}x{n}", w.len());
+        let mut scales = vec![0f32; n];
+        for row in w.chunks_exact(n) {
+            for (s, &v) in scales.iter_mut().zip(row) {
+                *s = s.max(v.abs());
+            }
+        }
+        for s in scales.iter_mut() {
+            *s = if *s > 0.0 { *s / 127.0 } else { 1.0 };
+        }
+        let mut weights = Vec::with_capacity(w.len());
+        for row in w.chunks_exact(n) {
+            for (c, &v) in row.iter().enumerate() {
+                weights.push(quantize_value(v, 1.0 / scales[c]));
+            }
+        }
+        QuantizedGemm { k, n, weights, scales }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Per-output-channel dequantization scales.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Storage footprint of the quantized weights (telemetry for the
+    /// benches — 4x smaller than the fp32 panels they replace).
+    pub fn bytes(&self) -> usize {
+        self.weights.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Dequantize back to a row-major `(k, n)` f32 matrix — the weights the
+    /// int8 kernel *effectively* multiplies by; used for per-layer error
+    /// attribution.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.weights.len());
+        for row in self.weights.chunks_exact(self.n) {
+            for (c, &q) in row.iter().enumerate() {
+                out.push(q as f32 * self.scales[c]);
+            }
+        }
+        out
+    }
+
+    /// Quantized GEMM into a caller-provided buffer: `a` holds
+    /// `out.len() / n` rows of length `k`, `out` is fully overwritten.
+    /// Activations are quantized per-tensor (one scale for the whole call),
+    /// the reduction accumulates in i32 (exact — results are bit-identical
+    /// for every `workers` value), and the dequantized product lands in
+    /// f32. The activation-quantization pass allocates one i8 buffer per
+    /// call; the alloc-free steady-state contract is an fp32-tier property.
+    ///
+    /// i32 headroom: each term is at most `127 * 127`, so overflow needs
+    /// `k > 133_000` — far beyond any reduction dim in the zoo (and checked
+    /// by a debug assert).
+    pub fn matmul_into(&self, a: &[f32], workers: usize, out: &mut [f32]) {
+        let (k, n) = (self.k, self.n);
+        if k == 0 || n == 0 {
+            out.fill(0.0);
+            return;
+        }
+        debug_assert!(k <= 133_000, "i32 accumulator headroom exceeded (k = {k})");
+        let m = out.len() / n;
+        debug_assert_eq!(out.len(), m * n, "out length {} not a multiple of n={n}", out.len());
+        debug_assert_eq!(a.len(), m * k, "lhs length {} vs {m}x{k}", a.len());
+        let amax = a.iter().fold(0f32, |mx, v| mx.max(v.abs()));
+        let sx = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        let inv_sx = 1.0 / sx;
+        let aq: Vec<i8> = a.iter().map(|&v| quantize_value(v, inv_sx)).collect();
+        let ptr = crate::coordinator::scheduler::SendPtr(out.as_mut_ptr());
+        crate::coordinator::scheduler::for_each_row_tile(
+            workers,
+            m,
+            crate::tensor::ops::MIN_TILE_ROWS,
+            |r0, r1| {
+                // SAFETY: row tiles are disjoint and in-bounds
+                // (for_each_row_tile partitions 0..m exactly).
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(r0 * n), (r1 - r0) * n)
+                };
+                self.matmul_rows_i32(&aq[r0 * k..r1 * k], sx, chunk);
+            },
+        );
+    }
+
+    /// The i32 row kernel: same ascending-`k` order and exact-zero skip as
+    /// the fp32 kernels (a zero quantized activation contributes nothing).
+    fn matmul_rows_i32(&self, aq: &[i8], sx: f32, out: &mut [f32]) {
+        let (k, n) = (self.k, self.n);
+        let mut acc = vec![0i32; n];
+        for (arow, orow) in aq.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+            acc.fill(0);
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue;
+                }
+                let av = av as i32;
+                let wrow = &self.weights[kk * n..(kk + 1) * n];
+                for (o, &wv) in acc.iter_mut().zip(wrow) {
+                    *o += av * wv as i32;
+                }
+            }
+            for ((o, &a32), &sw) in orow.iter_mut().zip(&acc).zip(&self.scales) {
+                *o = a32 as f32 * (sx * sw);
+            }
+        }
+    }
+}
+
+/// Per-layer weight-quantization error attribution for the harness: how far
+/// the dequantized int8 weights sit from the fp32 originals, relative to
+/// each layer's absmax.
+#[derive(Debug, Clone)]
+pub struct LayerQuantReport {
+    /// Layer id in the network.
+    pub layer: usize,
+    /// `"conv"` or `"linear"` — the quantized weight's role.
+    pub role: &'static str,
+    /// Largest absolute dequantization error across the layer's weights.
+    pub max_abs_err: f32,
+    /// `max_abs_err` relative to the layer's weight absmax (0 for all-zero
+    /// layers). Bounded by [`WEIGHT_QUANT_RTOL`] by construction.
+    pub rel_err: f32,
+}
+
+/// Quantize-dequantize every GEMM-family weight of `net` bound to
+/// `weights` and report the per-layer error — the attribution half of the
+/// quantization tolerance harness. Depthwise and missing weights are
+/// skipped (they stay fp32 at run time).
+pub fn weight_quant_report(net: &Network, weights: &WeightSet) -> Vec<LayerQuantReport> {
+    let mut reports = Vec::new();
+    for l in &net.layers {
+        let (w, kdim, n, role) = match (&l.kind, weights.get(l.id)) {
+            (
+                LayerKind::Conv2d { kh, kw, cin, cout, depthwise: false, .. },
+                Some(LayerWeights::Conv(t)),
+            ) => (t, kh * kw * cin, *cout, "conv"),
+            (LayerKind::Linear { din, dout }, Some(LayerWeights::Linear(t))) => {
+                (t, *din, *dout, "linear")
+            }
+            _ => continue,
+        };
+        let q = QuantizedGemm::from_slice(w.data(), kdim, n);
+        let deq = q.dequantize();
+        let mut max_abs_err = 0f32;
+        let mut absmax = 0f32;
+        for (&orig, &back) in w.data().iter().zip(&deq) {
+            max_abs_err = max_abs_err.max((orig - back).abs());
+            absmax = absmax.max(orig.abs());
+        }
+        let rel_err = if absmax > 0.0 { max_abs_err / absmax } else { 0.0 };
+        reports.push(LayerQuantReport { layer: l.id, role, max_abs_err, rel_err });
+    }
+    reports
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Tensor, XorShift64Star};
+
+    #[test]
+    fn precision_ids_round_trip() {
+        for p in [Precision::Fp32, Precision::Int8] {
+            assert_eq!(Precision::from_id(p.id()), Some(p));
+        }
+        assert_eq!(Precision::from_id("fp16"), None);
+        assert_eq!(Precision::default(), Precision::Fp32);
+    }
+
+    #[test]
+    fn dequantized_weights_stay_within_half_a_step() {
+        let mut rng = XorShift64Star::new(71);
+        let (k, n) = (27, 13);
+        let w = Tensor::he_normal(vec![k, n], &mut rng);
+        let q = QuantizedGemm::from_slice(w.data(), k, n);
+        let deq = q.dequantize();
+        for (c, s) in q.scales().iter().enumerate() {
+            for r in 0..k {
+                let (orig, back) = (w.data()[r * n + c], deq[r * n + c]);
+                assert!(
+                    (orig - back).abs() <= s * 0.5 + f32::EPSILON,
+                    "col {c}: {orig} vs {back} (scale {s})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_and_masked_weights_quantize_exactly() {
+        // pruned (exact-zero) weights must survive quantization untouched,
+        // and an all-zero column must round-trip exactly via its 1.0 scale
+        let mut w = vec![0f32; 6 * 4];
+        w[1] = 0.5; // col 1 has one live weight
+        let q = QuantizedGemm::from_slice(&w, 6, 4);
+        let deq = q.dequantize();
+        for (i, (&orig, &back)) in w.iter().zip(&deq).enumerate() {
+            if orig == 0.0 {
+                assert_eq!(back, 0.0, "index {i}");
+            }
+        }
+        assert!((deq[1] - 0.5).abs() <= 0.5 / 254.0);
+    }
+
+    #[test]
+    fn int8_gemm_tracks_fp32_within_quant_error() {
+        let mut rng = XorShift64Star::new(73);
+        let (m, k, n) = (9, 36, 20);
+        let a = Tensor::he_normal(vec![m, k], &mut rng);
+        let w = Tensor::he_normal(vec![k, n], &mut rng);
+        let want = a.matmul(&w);
+        let q = QuantizedGemm::from_slice(w.data(), k, n);
+        let mut got = vec![f32::NAN; m * n];
+        q.matmul_into(a.data(), 1, &mut got);
+        // each of the k terms carries ~(activation step + weight step)
+        // error; a loose 2% of the output absmax covers it with margin
+        let tol = 0.02 * want.abs_max().max(1e-3);
+        for (gv, wv) in got.iter().zip(want.data()) {
+            assert!((gv - wv).abs() <= tol, "{gv} vs {wv} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn int8_gemm_bit_identical_across_workers() {
+        // i32 accumulation is exact, so unlike the fp32 tiers this is
+        // bit-identity by integer arithmetic, not by ordering discipline
+        let mut rng = XorShift64Star::new(79);
+        let (m, k, n) = (33, 24, 17);
+        let a = Tensor::he_normal(vec![m, k], &mut rng);
+        let w = Tensor::he_normal(vec![k, n], &mut rng);
+        let q = QuantizedGemm::from_slice(w.data(), k, n);
+        let mut base = vec![0f32; m * n];
+        q.matmul_into(a.data(), 1, &mut base);
+        for workers in [2usize, 4, 7] {
+            let mut got = vec![f32::NAN; m * n];
+            q.matmul_into(a.data(), workers, &mut got);
+            assert_eq!(got, base, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_zero_fill() {
+        let q = QuantizedGemm::from_slice(&[], 0, 4);
+        let mut out = vec![f32::NAN; 3 * 4];
+        q.matmul_into(&[], 1, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

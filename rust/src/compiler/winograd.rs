@@ -256,15 +256,8 @@ pub fn winograd_conv2d_prepared_into(
             }
             // elementwise accumulate + inverse transform per output channel
             for co in 0..cout {
-                let mut m = [0f32; 16];
                 let ub = &u[co * cin * 16..][..cin * 16];
-                for ci in 0..cin {
-                    let uc = &ub[ci * 16..][..16];
-                    let vc = &v[ci * 16..][..16];
-                    for t in 0..16 {
-                        m[t] += uc[t] * vc[t];
-                    }
-                }
+                let m = wino_mac(ub, v, cin);
                 let mm = [
                     [m[0], m[1], m[2], m[3]],
                     [m[4], m[5], m[6], m[7]],
@@ -287,10 +280,82 @@ pub fn winograd_conv2d_prepared_into(
     }
 }
 
+/// The 16-wide elementwise multiply-accumulate at the heart of the tile
+/// loop: `m[t] = Σ_ci u[ci*16 + t] * v[ci*16 + t]` over `cin` channels.
+/// Dispatches to the AVX variant when the `simd` feature is compiled in and
+/// the CPU supports it ([`crate::simd::avx_active`]); the variants are
+/// bit-identical, so the documented Winograd tolerance is unchanged by the
+/// tier.
+fn wino_mac(u: &[f32], v: &[f32], cin: usize) -> [f32; 16] {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if crate::simd::avx_active() {
+        // SAFETY: dispatch just confirmed AVX support on this CPU.
+        return unsafe { wino_mac_avx(u, v, cin) };
+    }
+    wino_mac_scalar(u, v, cin)
+}
+
+/// Scalar reference MAC (the bit-identity contract).
+fn wino_mac_scalar(u: &[f32], v: &[f32], cin: usize) -> [f32; 16] {
+    let mut m = [0f32; 16];
+    for ci in 0..cin {
+        let uc = &u[ci * 16..][..16];
+        let vc = &v[ci * 16..][..16];
+        for t in 0..16 {
+            m[t] += uc[t] * vc[t];
+        }
+    }
+    m
+}
+
+/// AVX MAC, bit-identical to [`wino_mac_scalar`]: the 16 Winograd-domain
+/// lanes are two 8-wide f32 vectors, each lane an independent accumulation
+/// chain over `ci` ascending exactly as in the scalar loop, with separate
+/// multiply and add instructions (no FMA — fusing would skip the
+/// intermediate rounding the scalar code performs).
+///
+/// # Safety
+/// The CPU must support AVX (callers go through [`crate::simd::avx_active`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx")]
+unsafe fn wino_mac_avx(u: &[f32], v: &[f32], cin: usize) -> [f32; 16] {
+    use std::arch::x86_64::*;
+    debug_assert!(u.len() >= cin * 16 && v.len() >= cin * 16);
+    let mut lo = _mm256_setzero_ps();
+    let mut hi = _mm256_setzero_ps();
+    for ci in 0..cin {
+        let uc = u.as_ptr().add(ci * 16);
+        let vc = v.as_ptr().add(ci * 16);
+        lo = _mm256_add_ps(lo, _mm256_mul_ps(_mm256_loadu_ps(uc), _mm256_loadu_ps(vc)));
+        hi = _mm256_add_ps(
+            hi,
+            _mm256_mul_ps(_mm256_loadu_ps(uc.add(8)), _mm256_loadu_ps(vc.add(8))),
+        );
+    }
+    let mut m = [0f32; 16];
+    _mm256_storeu_ps(m.as_mut_ptr(), lo);
+    _mm256_storeu_ps(m.as_mut_ptr().add(8), hi);
+    m
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::tensor::XorShift64Star;
+
+    #[test]
+    fn dispatched_mac_bit_identical_to_scalar() {
+        // pins the AVX MAC against the scalar reference when the `simd`
+        // feature is active; both sides run scalar otherwise
+        let mut rng = XorShift64Star::new(61);
+        for cin in [1usize, 3, 8, 17] {
+            let u: Vec<f32> = (0..cin * 16).map(|_| rng.next_normal()).collect();
+            let v: Vec<f32> = (0..cin * 16).map(|_| rng.next_normal()).collect();
+            let scalar = wino_mac_scalar(&u, &v, cin);
+            let dispatched = wino_mac(&u, &v, cin);
+            assert_eq!(dispatched, scalar, "cin={cin} tier={}", crate::simd::tier());
+        }
+    }
 
     #[test]
     fn tile_matches_direct() {

@@ -35,6 +35,7 @@ pub mod search;
 pub mod coordinator;
 pub mod config;
 pub mod bench;
+pub mod simd;
 pub mod tensor;
 pub mod util;
 

@@ -39,8 +39,8 @@ use crate::compiler::device::{ADRENO_640, KRYO_485};
 use crate::compiler::latency::measure_plan;
 use crate::compiler::{
     run_dense_reference, uniform_sparsity, DeviceSpec, ExecScratch, ExecutionPlan, Executor,
-    Framework, LatencyReport, PlanCache, PlanCacheStats, PreparedKernels, ScratchStats,
-    SparsityMap, WeightSet,
+    Framework, LatencyReport, PlanCache, PlanCacheStats, Precision, PreparedKernels,
+    ScratchStats, SparsityMap, WeightSet,
 };
 use crate::error::{NpasError, Result};
 use crate::graph::Network;
@@ -142,6 +142,7 @@ pub struct CompiledModelBuilder {
     framework: Framework,
     cache: Option<Arc<PlanCache>>,
     intra_workers: usize,
+    precision: Precision,
     /// `false` when loading a saved model whose weights already carry the
     /// masks (re-masking is skipped so save → load is bit-identical).
     mask_weights: bool,
@@ -186,6 +187,18 @@ impl CompiledModelBuilder {
         self
     }
 
+    /// Numeric tier the prepared kernels execute in. Defaults to
+    /// [`Precision::Fp32`] (the bit-identity reference tier);
+    /// [`Precision::Int8`] quantizes every GEMM-family layer
+    /// scale-per-channel with i32 accumulation — outputs then track the
+    /// fp32 reference within the quantization tolerance the `quant_parity`
+    /// harness gates, not bit-identically. The choice is recorded by
+    /// [`CompiledModel::save`] and restored on load.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Validate, mask, compile and prepare: the one call that turns a
     /// pruning decision into a runnable model.
     pub fn compile(self) -> Result<CompiledModel> {
@@ -197,6 +210,7 @@ impl CompiledModelBuilder {
             framework,
             cache,
             intra_workers,
+            precision,
             mask_weights,
         } = self;
         network.validate()?;
@@ -257,7 +271,7 @@ impl CompiledModelBuilder {
             None => Arc::new(compile(&network, &sparsity, &device, framework)),
         };
         let prepared = Arc::new(
-            PreparedKernels::try_prepare(&network, &plan, &sparsity, &weights)
+            PreparedKernels::try_prepare_with(&network, &plan, &sparsity, &weights, precision)
                 .map_err(NpasError::Exec)?,
         );
         // compile-time scratch planning: walk the plan's shapes once so
@@ -274,6 +288,7 @@ impl CompiledModelBuilder {
             framework,
             cache,
             intra_workers,
+            precision,
         })
     }
 }
@@ -316,6 +331,7 @@ pub struct CompiledModel {
     framework: Framework,
     cache: Option<Arc<PlanCache>>,
     intra_workers: usize,
+    precision: Precision,
 }
 
 impl CompiledModel {
@@ -330,6 +346,7 @@ impl CompiledModel {
             framework: Framework::Ours,
             cache: None,
             intra_workers: 1,
+            precision: Precision::Fp32,
             mask_weights: true,
         }
     }
@@ -441,6 +458,7 @@ impl CompiledModel {
                 Json::obj(vec![
                     ("device", Json::str(device_token(&self.device))),
                     ("framework", Json::str(self.framework.id())),
+                    ("precision", Json::str(self.precision.id())),
                 ]),
             );
         }
@@ -480,7 +498,17 @@ impl CompiledModel {
         let framework = Framework::from_id(fw_id).ok_or_else(|| {
             NpasError::parse(format!("unknown framework `{fw_id}` in saved target"))
         })?;
-        Self::from_bundle_cached(bundle, device, framework, cache)
+        // artifacts predating the precision field are fp32 by construction
+        let precision = match target.get("precision") {
+            None => Precision::Fp32,
+            Some(_) => {
+                let id = target.str_field("precision")?;
+                Precision::from_id(id).ok_or_else(|| {
+                    NpasError::parse(format!("unknown precision `{id}` in saved target"))
+                })?
+            }
+        };
+        Self::from_bundle_cached(bundle, device, framework, cache, precision)
     }
 
     /// [`CompiledModel::load`] routed through a shared [`PlanCache`]: the
@@ -493,6 +521,9 @@ impl CompiledModel {
 
     /// [`CompiledModel::load`] with an explicit target (for artifacts saved
     /// against a custom [`DeviceSpec`], or to re-target a saved model).
+    /// Ignores the artifact's recorded precision — the model comes back
+    /// fp32; re-target *and* re-quantize by rebuilding with
+    /// [`CompiledModelBuilder::precision`].
     pub fn load_with(
         path: impl AsRef<Path>,
         device: &DeviceSpec,
@@ -507,7 +538,7 @@ impl CompiledModel {
         device: &DeviceSpec,
         framework: Framework,
     ) -> Result<CompiledModel> {
-        Self::from_bundle_cached(bundle, device, framework, None)
+        Self::from_bundle_cached(bundle, device, framework, None, Precision::Fp32)
     }
 
     fn from_bundle_cached(
@@ -515,11 +546,13 @@ impl CompiledModel {
         device: &DeviceSpec,
         framework: Framework,
         cache: Option<Arc<PlanCache>>,
+        precision: Precision,
     ) -> Result<CompiledModel> {
         let mut b = CompiledModel::build(bundle.network)
             .scheme(bundle.sparsity)
             .weights(bundle.weights)
-            .target(device, framework);
+            .target(device, framework)
+            .precision(precision);
         if let Some(cache) = cache {
             b = b.plan_cache(cache);
         }
@@ -557,6 +590,14 @@ impl CompiledModel {
 
     pub fn weights(&self) -> &WeightSet {
         &self.weights
+    }
+
+    /// Numeric tier the prepared kernels execute in (see
+    /// [`CompiledModelBuilder::precision`]). Quantization is deterministic,
+    /// so a save → load round-trip of an [`Precision::Int8`] model rebuilds
+    /// bit-identical kernels from the saved masked fp32 weights.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     pub fn device(&self) -> &DeviceSpec {

@@ -132,8 +132,21 @@ impl BlockCsr {
     /// `self.rows`, `out` the matching rows of length `self.cols`
     /// (zero-initialized). Both [`BlockCsr::matmul`] and
     /// [`BlockCsr::matmul_tiled`] funnel through this loop, so tiled
-    /// execution is bit-identical to sequential by construction.
+    /// execution is bit-identical to sequential by construction. Dispatches
+    /// to the AVX variant when compiled in and supported
+    /// ([`crate::simd::avx_active`]); the variants are bit-identical.
     fn matmul_rows(&self, xrows: &[f32], out: &mut [f32]) {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if crate::simd::avx_active() {
+            // SAFETY: dispatch just confirmed AVX support on this CPU.
+            unsafe { self.matmul_rows_avx(xrows, out) };
+            return;
+        }
+        self.matmul_rows_scalar(xrows, out)
+    }
+
+    /// Scalar reference row kernel (the bit-identity contract).
+    fn matmul_rows_scalar(&self, xrows: &[f32], out: &mut [f32]) {
         let (k, n) = (self.rows, self.cols);
         for (xrow, orow) in xrows.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
             for rb in 0..self.row_ptr.len() - 1 {
@@ -152,6 +165,58 @@ impl BlockCsr {
                         let brow = &self.blocks[base + (r - r0) * self.bc..][..c1 - c0];
                         let dst = &mut orow[c0..c1];
                         for (o, &wv) in dst.iter_mut().zip(brow) {
+                            *o += av * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX row kernel, bit-identical to [`BlockCsr::matmul_rows_scalar`]:
+    /// the inner `dst[c] += av * brow[c]` updates are independent per
+    /// output column, so vectorizing eight columns at a time (broadcast
+    /// `av`, separate multiply + add — no FMA, which would skip the scalar
+    /// path's intermediate rounding) leaves each element's float op
+    /// sequence unchanged; the ragged block-column tail stays scalar and
+    /// the exact-zero skip on `av` is preserved.
+    ///
+    /// # Safety
+    /// The CPU must support AVX (callers go through
+    /// [`crate::simd::avx_active`]).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[target_feature(enable = "avx")]
+    unsafe fn matmul_rows_avx(&self, xrows: &[f32], out: &mut [f32]) {
+        use std::arch::x86_64::*;
+        let (k, n) = (self.rows, self.cols);
+        for (xrow, orow) in xrows.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+            for rb in 0..self.row_ptr.len() - 1 {
+                let r0 = rb * self.br;
+                let r1 = (r0 + self.br).min(self.rows);
+                for idx in self.row_ptr[rb]..self.row_ptr[rb + 1] {
+                    let cb = self.col_blocks[idx];
+                    let c0 = cb * self.bc;
+                    let c1 = (c0 + self.bc).min(self.cols);
+                    let base = idx * self.br * self.bc;
+                    for r in r0..r1 {
+                        let av = xrow[r];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &self.blocks[base + (r - r0) * self.bc..][..c1 - c0];
+                        let dst = &mut orow[c0..c1];
+                        let va = _mm256_set1_ps(av);
+                        let mut c = 0;
+                        while c + 8 <= dst.len() {
+                            let wv = _mm256_loadu_ps(brow.as_ptr().add(c));
+                            let ov = _mm256_loadu_ps(dst.as_ptr().add(c));
+                            _mm256_storeu_ps(
+                                dst.as_mut_ptr().add(c),
+                                _mm256_add_ps(ov, _mm256_mul_ps(va, wv)),
+                            );
+                            c += 8;
+                        }
+                        for (o, &wv) in dst[c..].iter_mut().zip(&brow[c..]) {
                             *o += av * wv;
                         }
                     }
@@ -297,6 +362,25 @@ mod tests {
                 assert_eq!(got.dims(), want.dims());
                 assert_eq!(got.data(), want.data(), "m={m} workers={workers}");
             }
+        }
+    }
+
+    #[test]
+    fn dispatched_row_kernel_bit_identical_to_scalar() {
+        // pins the AVX row kernel against the scalar reference when the
+        // `simd` feature is active; both sides run scalar otherwise. The
+        // (5, 3) geometry forces ragged block-column tails through the
+        // scalar tail loop of the vector variant.
+        let mut rng = XorShift64Star::new(9);
+        let w = masked(36, 20, 3.0, 10);
+        for &(br, bc) in &[(4usize, 8usize), (5, 3)] {
+            let packed = BlockCsr::pack(&w, br, bc);
+            let x = Tensor::he_normal(vec![9, 36], &mut rng);
+            let mut scalar = vec![0f32; 9 * 20];
+            let mut dispatched = vec![0f32; 9 * 20];
+            packed.matmul_rows_scalar(x.data(), &mut scalar);
+            packed.matmul_rows(x.data(), &mut dispatched);
+            assert_eq!(dispatched, scalar, "br={br} bc={bc} tier={}", crate::simd::tier());
         }
     }
 

@@ -24,15 +24,25 @@ pub const PATTERNS: [[usize; 4]; 8] = [
 
 /// Index of the pattern maximizing the retained |w| mass of a 9-element
 /// kernel, plus that mass.
+///
+/// NaN-aware: a NaN entry poisons every pattern covering it, and `x > NaN`
+/// is false — with an `f32::MIN` sentinel and `>` the *first* pattern used
+/// to win silently whenever pattern 0's mass was NaN. Any finite-mass
+/// pattern now beats a NaN one; if every pattern is poisoned the NaN mass
+/// is returned (not a fabricated finite sentinel) so callers can see it.
 pub fn best_pattern(kernel_abs: &[f32; 9]) -> (usize, f32) {
-    let mut best = (0usize, f32::MIN);
+    let mut best: Option<(usize, f32)> = None;
     for (pi, pat) in PATTERNS.iter().enumerate() {
         let mass: f32 = pat.iter().map(|&i| kernel_abs[i]).sum();
-        if mass > best.1 {
-            best = (pi, mass);
-        }
+        best = match best {
+            None => Some((pi, mass)),
+            // replace a NaN incumbent with the first finite mass seen
+            Some((_, bm)) if bm.is_nan() && !mass.is_nan() => Some((pi, mass)),
+            Some((_, bm)) if mass > bm => Some((pi, mass)),
+            keep => keep,
+        };
     }
-    best
+    best.expect("PATTERNS is non-empty")
 }
 
 /// Pattern + connectivity pruning for a (3,3,cin,cout) weight tensor.
@@ -68,7 +78,17 @@ pub fn pattern_mask(weights: &Tensor, kept: usize) -> Tensor {
     // kernels_kept * PATTERN_KEEP ≈ kept.
     let keep_kernels = (kept / super::scheme::PATTERN_KEEP).clamp(1, nker);
     let mut order: Vec<usize> = (0..nker).collect();
-    order.sort_by(|&a, &b| mass[b].partial_cmp(&mass[a]).unwrap());
+    // descending by mass, NaN-masses last (a corrupted kernel must not win
+    // a connectivity slot, and `partial_cmp().unwrap()` would panic on it)
+    order.sort_by(|&a, &b| {
+        let (ma, mb) = (mass[a], mass[b]);
+        match (ma.is_nan(), mb.is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => mb.partial_cmp(&ma).expect("both finite or equal"),
+        }
+    });
     let mut kept_flag = vec![false; nker];
     for &k in order.iter().take(keep_kernels) {
         kept_flag[k] = true;
@@ -117,6 +137,50 @@ mod tests {
         let (pi, m) = best_pattern(&k);
         assert_eq!(PATTERNS[pi], [0, 1, 3, 4]);
         assert_eq!(m, 20.0);
+    }
+
+    #[test]
+    fn best_pattern_ignores_nan_poisoned_patterns() {
+        // NaN at index 0 poisons the one pattern touching it; every
+        // finite-mass pattern must beat the poisoned one
+        let mut k = [1.0f32; 9];
+        k[0] = f32::NAN;
+        let (pi, m) = best_pattern(&k);
+        assert!(
+            !PATTERNS[pi].contains(&0),
+            "picked NaN-poisoned pattern {:?}",
+            PATTERNS[pi]
+        );
+        assert_eq!(m, 4.0);
+    }
+
+    #[test]
+    fn best_pattern_surfaces_all_nan_kernel() {
+        // center is in every pattern, so a NaN center poisons all 8 masses;
+        // the result must carry the NaN — the old `f32::MIN` sentinel with
+        // `mass > best` skipped every NaN candidate and returned the
+        // fabricated (0, f32::MIN), hiding the corruption from callers
+        let mut k = [1.0f32; 9];
+        k[4] = f32::NAN;
+        let (_, m) = best_pattern(&k);
+        assert!(m.is_nan());
+    }
+
+    #[test]
+    fn pattern_mask_survives_nan_kernel() {
+        let mut rng = XorShift64Star::new(6);
+        let mut w = Tensor::he_normal(vec![3, 3, 2, 4], &mut rng);
+        for p in 0..9 {
+            w.set(&[p / 3, p % 3, 0, 0], f32::NAN);
+        }
+        // 1/8 kernels survive connectivity pruning; the old sort comparator
+        // panicked on the NaN mass before producing any mask at all
+        let mask = pattern_mask(&w, w.numel() / 9);
+        let nan_kernel_nnz: usize = (0..9)
+            .filter(|&p| mask.get(&[p / 3, p % 3, 0, 0]) != 0.0)
+            .count();
+        assert_eq!(nan_kernel_nnz, 0, "NaN kernel must lose to finite ones");
+        assert!(mask.data().iter().all(|&v| v == 0.0 || v == 1.0));
     }
 
     #[test]

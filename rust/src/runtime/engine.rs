@@ -391,6 +391,13 @@ fn execute_batch(shared: &EngineShared, exec: &Executor<'_>, batch: Vec<Request>
                 .send(Err(ExecError::InputShape { want, got: d.to_vec() }));
             continue;
         }
+        // a NaN/Inf input would propagate garbage through the shared batch
+        // GEMM; reject it here so only the poisoned request fails
+        if let Some(index) = req.input.data().iter().position(|v| !v.is_finite()) {
+            shared.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = req.tx.send(Err(ExecError::NonFiniteInput { index }));
+            continue;
+        }
         inputs.push(req.input);
         pending.push((req.tx, req.enqueued));
     }

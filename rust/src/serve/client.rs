@@ -164,7 +164,14 @@ pub fn tensor_from_json(json: &Json) -> Result<Tensor> {
                 .ok_or_else(|| NpasError::parse("non-numeric data element"))
         })
         .collect::<Result<_>>()?;
-    let numel: usize = dims.iter().product();
+    // a hostile/buggy reply can carry dims whose product overflows usize;
+    // fail typed instead of debug-panicking in `iter().product()`
+    let numel: usize = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| {
+            NpasError::parse(format!("dims {dims:?} overflow element count"))
+        })?;
     if dims.is_empty() || numel != data.len() {
         return Err(NpasError::parse(format!(
             "dims {dims:?} disagree with {} data elements",
@@ -194,6 +201,22 @@ mod tests {
         assert!(matches!(tensor_from_json(&bad), Err(NpasError::Parse(_))));
         let empty = Json::parse(r#"{"dims":[],"data":[]}"#).unwrap();
         assert!(tensor_from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn tensor_decoding_rejects_hostile_dims() {
+        // each dim fits a usize but the product overflows — must be a
+        // typed parse error, not a debug-mode multiply panic
+        let overflow = Json::parse(
+            r#"{"dims":[4294967295,4294967295,4294967295],"data":[1.0]}"#,
+        )
+        .unwrap();
+        assert!(matches!(tensor_from_json(&overflow), Err(NpasError::Parse(_))));
+        // fractional and negative dims fail the strict integer decode
+        let fractional = Json::parse(r#"{"dims":[2.5,1,1],"data":[1.0,2.0]}"#).unwrap();
+        assert!(matches!(tensor_from_json(&fractional), Err(NpasError::Parse(_))));
+        let negative = Json::parse(r#"{"dims":[-2,1,1],"data":[1.0]}"#).unwrap();
+        assert!(matches!(tensor_from_json(&negative), Err(NpasError::Parse(_))));
     }
 
     #[test]

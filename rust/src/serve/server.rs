@@ -451,11 +451,24 @@ fn parse_tensor(json: &Json) -> std::result::Result<Tensor, (&'static str, Strin
                 .ok_or_else(|| ("bad_request", "non-numeric data element".to_string()))
         })
         .collect::<std::result::Result<_, _>>()?;
-    let numel: usize = dims.iter().product();
+    // checked product: `[1e15, 1e15, 1e15]` parses as valid usizes whose
+    // naive product overflows (a debug panic / silent wrap, not a 400)
+    let numel: usize = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| ("bad_request", format!("dims {dims:?} overflow element count")))?;
     if dims.is_empty() || numel != data.len() {
         return Err((
             "bad_request",
             format!("dims {dims:?} disagree with {} data elements", data.len()),
+        ));
+    }
+    // an Inf sneaks through raw JSON as e.g. `1e999`; reject it as the
+    // caller's malformed request, never a worker-side failure
+    if let Some(i) = data.iter().position(|v| !v.is_finite()) {
+        return Err((
+            "bad_request",
+            format!("non-finite data element at index {i}"),
         ));
     }
     Ok(Tensor::new(dims, data))

@@ -1,0 +1,56 @@
+//! Runtime SIMD dispatch for the hot kernels (ROADMAP item 3).
+//!
+//! The crate ships two implementations of each hot inner loop — the scalar
+//! reference (always compiled, the bit-identity contract every differential
+//! test pins) and an AVX variant compiled only under `--features simd` on
+//! x86_64. Which one runs is decided **at runtime** per process via CPU
+//! feature detection, so a `simd` build still runs correctly on hosts
+//! without AVX and non-x86_64 targets compile the flag away entirely.
+//!
+//! The AVX variants are written to be *bit-identical* to the scalar
+//! reference, not merely close: each output element keeps its own
+//! independent accumulation chain in the same ascending-`k` order, using
+//! separate multiply and add instructions (no FMA — fusing would skip the
+//! intermediate f32 rounding the scalar code performs) and preserving the
+//! exact-zero skip rule. Vectorization only changes *which* elements are
+//! computed together, never the float op sequence any single element sees.
+
+/// True when the AVX kernel variants are compiled in **and** the running
+/// CPU supports them. All dispatch sites funnel through this one check.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn avx_active() -> bool {
+    std::arch::is_x86_feature_detected!("avx")
+}
+
+/// True when the AVX kernel variants are compiled in **and** the running
+/// CPU supports them. All dispatch sites funnel through this one check.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn avx_active() -> bool {
+    false
+}
+
+/// Human-readable name of the kernel tier the dispatcher will pick —
+/// surfaced by the benches so `BENCH_8.json` records what was measured.
+pub fn tier() -> &'static str {
+    if avx_active() {
+        "simd-avx"
+    } else {
+        "scalar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_matches_dispatch() {
+        assert_eq!(tier(), if avx_active() { "simd-avx" } else { "scalar" });
+    }
+
+    #[test]
+    fn feature_off_means_scalar() {
+        #[cfg(not(feature = "simd"))]
+        assert!(!avx_active(), "without --features simd the tier must be scalar");
+    }
+}

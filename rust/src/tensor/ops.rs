@@ -152,12 +152,26 @@ impl PackedB {
 
 /// The packed-panel GEMM micro-kernel: `a` holds `a.len() / k` rows of
 /// length `k`, `out` the matching rows of length `n` — **fully
-/// overwritten**. Per [`MICRO_ROWS`]x[`PANEL_WIDTH`] output block the
-/// reduction runs `k` ascending with the same zero-skip as [`matmul_rows`],
-/// so per output element the float addition sequence is *identical* to the
-/// unpacked kernel and results are bit-identical; the blocking only changes
-/// which rows share each loaded B panel line.
+/// overwritten**. Dispatches to the AVX variant when the `simd` feature is
+/// compiled in and the CPU supports it ([`crate::simd::avx_active`]);
+/// otherwise runs the scalar reference. Both variants are bit-identical
+/// (see [`matmul_rows_packed_avx`]).
 fn matmul_rows_packed(a: &[f32], bp: &PackedB, out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if crate::simd::avx_active() {
+        // SAFETY: dispatch just confirmed AVX support on this CPU.
+        unsafe { matmul_rows_packed_avx(a, bp, out) };
+        return;
+    }
+    matmul_rows_packed_scalar(a, bp, out)
+}
+
+/// Scalar reference micro-kernel. Per [`MICRO_ROWS`]x[`PANEL_WIDTH`] output
+/// block the reduction runs `k` ascending with the same zero-skip as
+/// [`matmul_rows`], so per output element the float addition sequence is
+/// *identical* to the unpacked kernel and results are bit-identical; the
+/// blocking only changes which rows share each loaded B panel line.
+fn matmul_rows_packed_scalar(a: &[f32], bp: &PackedB, out: &mut [f32]) {
     let (k, n) = (bp.k, bp.n);
     debug_assert!(k > 0 && n > 0, "caller guards degenerate dims");
     let m = a.len() / k;
@@ -184,6 +198,53 @@ fn matmul_rows_packed(a: &[f32], bp: &PackedB, out: &mut [f32]) {
             for (r, accr) in acc.iter().enumerate().take(mr) {
                 out[(r0 + r) * n + c0..(r0 + r) * n + c0 + w]
                     .copy_from_slice(&accr[..w]);
+            }
+        }
+        r0 += mr;
+    }
+}
+
+/// AVX micro-kernel, bit-identical to [`matmul_rows_packed_scalar`] by
+/// construction: [`PANEL_WIDTH`] is exactly one 8-lane f32 AVX vector, each
+/// of the [`MICRO_ROWS`] accumulators lives in a register with every lane
+/// an independent chain in the same ascending-`k` order as the scalar loop,
+/// the broadcast `av == 0.0` skip is preserved (an exact no-op either way),
+/// and multiply/add stay separate instructions — FMA would skip the
+/// intermediate f32 rounding `*o += av * bv` performs and break identity.
+///
+/// # Safety
+/// The CPU must support AVX (callers go through [`crate::simd::avx_active`]).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx")]
+unsafe fn matmul_rows_packed_avx(a: &[f32], bp: &PackedB, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let (k, n) = (bp.k, bp.n);
+    debug_assert!(k > 0 && n > 0, "caller guards degenerate dims");
+    let m = a.len() / k;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    let mut r0 = 0;
+    while r0 < m {
+        let mr = MICRO_ROWS.min(m - r0);
+        for (p, panel) in bp.data.chunks_exact(k * PANEL_WIDTH).enumerate() {
+            let c0 = p * PANEL_WIDTH;
+            let w = PANEL_WIDTH.min(n - c0);
+            let mut acc = [_mm256_setzero_ps(); MICRO_ROWS];
+            for (kk, brow) in panel.chunks_exact(PANEL_WIDTH).enumerate() {
+                let bv = _mm256_loadu_ps(brow.as_ptr());
+                for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(r0 + r) * k + kk];
+                    if av == 0.0 {
+                        continue; // exact no-op contribution
+                    }
+                    *accr = _mm256_add_ps(*accr, _mm256_mul_ps(_mm256_set1_ps(av), bv));
+                }
+            }
+            for (r, accr) in acc.iter().enumerate().take(mr) {
+                let mut lanes = [0f32; PANEL_WIDTH];
+                _mm256_storeu_ps(lanes.as_mut_ptr(), *accr);
+                out[(r0 + r) * n + c0..(r0 + r) * n + c0 + w]
+                    .copy_from_slice(&lanes[..w]);
             }
         }
         r0 += mr;
@@ -232,6 +293,29 @@ pub fn gemm_packed_into(a: &[f32], bp: &PackedB, workers: usize, out: &mut [f32]
             unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r0 * n), (r1 - r0) * n) };
         matmul_rows_packed(&a[r0 * k..r1 * k], bp, chunk);
     });
+}
+
+/// Single-threaded [`gemm_packed_into`] forced through the **scalar**
+/// reference micro-kernel, bypassing runtime dispatch — the baseline bar of
+/// the per-tier benches and the reference side of the SIMD bit-identity
+/// tests.
+pub fn gemm_packed_scalar_into(a: &[f32], bp: &PackedB, out: &mut [f32]) {
+    if bp.k == 0 || bp.n == 0 {
+        out.fill(0.0);
+        return;
+    }
+    matmul_rows_packed_scalar(a, bp, out);
+}
+
+/// Single-threaded [`gemm_packed_into`] through the runtime dispatcher
+/// (AVX when [`crate::simd::avx_active`] reports support, scalar
+/// otherwise) — the best-tier bar of the per-tier benches.
+pub fn gemm_packed_dispatch_into(a: &[f32], bp: &PackedB, out: &mut [f32]) {
+    if bp.k == 0 || bp.n == 0 {
+        out.fill(0.0);
+        return;
+    }
+    matmul_rows_packed(a, bp, out);
 }
 
 /// Batched im2col into a caller-provided buffer: lower a `(nb, h, w, c)`
@@ -885,6 +969,38 @@ mod tests {
                 assert_eq!(got.dims(), want.dims());
                 assert_eq!(got.data(), want.data(), "m={m} n={n} workers={workers}");
             }
+        }
+    }
+
+    #[test]
+    fn dispatched_micro_kernel_bit_identical_to_scalar() {
+        use crate::tensor::XorShift64Star;
+        // When AVX is compiled in (`--features simd`) and present on this
+        // CPU, this pins the vector kernel against the scalar reference
+        // bit-for-bit; otherwise both entry points run scalar and the test
+        // still guards the forced-scalar path against the matmul oracle.
+        let mut rng = XorShift64Star::new(59);
+        for &(m, k, n) in &[(1usize, 3usize, 1usize), (5, 7, 3), (13, 9, 17), (64, 24, 40)] {
+            let mut a = Tensor::he_normal(vec![m, k], &mut rng);
+            for (i, v) in a.data_mut().iter_mut().enumerate() {
+                if i % 4 == 0 {
+                    *v = 0.0; // exercise the zero-skip rule in both kernels
+                }
+            }
+            let b = Tensor::he_normal(vec![k, n], &mut rng);
+            let want = a.matmul(&b);
+            let bp = PackedB::pack(&b);
+            let mut scalar = vec![f32::NAN; m * n];
+            let mut dispatched = vec![f32::NAN; m * n];
+            gemm_packed_scalar_into(a.data(), &bp, &mut scalar);
+            gemm_packed_dispatch_into(a.data(), &bp, &mut dispatched);
+            assert_eq!(&scalar[..], want.data(), "scalar vs matmul m={m} n={n}");
+            assert_eq!(
+                &dispatched[..],
+                &scalar[..],
+                "dispatch (tier {}) vs scalar m={m} n={n}",
+                crate::simd::tier()
+            );
         }
     }
 

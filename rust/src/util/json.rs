@@ -104,8 +104,19 @@ impl Json {
         }
     }
 
+    /// Strict: only non-negative integers that f64 represents exactly.
+    /// The old `f as usize` cast silently truncated `2.5` to 2 and mapped
+    /// negatives / NaN / Inf to 0 or usize::MAX — a wire payload like
+    /// `"dims": [2.5, -1]` became a plausible shape instead of an error.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        self.as_f64().and_then(|f| {
+            if f.is_finite() && f.fract() == 0.0 && (0.0..=MAX_EXACT).contains(&f) {
+                Some(f as usize)
+            } else {
+                None
+            }
+        })
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -451,5 +462,18 @@ mod tests {
     fn req_errors_on_missing() {
         let j = Json::parse("{}").unwrap();
         assert!(j.req("nope").is_err());
+    }
+
+    #[test]
+    fn as_usize_is_strict() {
+        assert_eq!(Json::Num(7.0).as_usize(), Some(7));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        // the old cast truncated 2.5 → 2 and wrapped -1 → huge
+        assert_eq!(Json::Num(2.5).as_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
     }
 }

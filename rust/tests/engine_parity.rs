@@ -201,3 +201,48 @@ fn concurrent_submitters_share_one_plan_and_get_identical_outputs() {
     // the shared plan was compiled exactly once
     assert_eq!(cache.misses(), 1);
 }
+
+#[test]
+fn non_finite_inputs_fail_alone_and_leave_the_engine_healthy() {
+    use npas::compiler::ExecError;
+    use npas::runtime::EngineError;
+
+    let net = zoo::single_conv(RES, 3, 6, 6);
+    let model = CompiledModel::build(net)
+        .scheme((PruneScheme::block_punched_default(), 3.0))
+        .weights(11u64)
+        .target(&KRYO_485, Framework::Ours)
+        .compile()
+        .unwrap();
+    let engine = model.serve(ragged_cfg()).unwrap();
+
+    let mut rng = XorShift64Star::new(31);
+    let good = Tensor::he_normal(vec![RES, RES, 6], &mut rng);
+    let mut poisoned = good.clone();
+    poisoned.data_mut()[5] = f32::NAN;
+    let mut inf = good.clone();
+    inf.data_mut()[0] = f32::INFINITY;
+
+    // the poisoned requests fail typed — batch mates are untouched
+    let results = engine.run_batch(&[good.clone(), poisoned, good.clone(), inf]);
+    assert!(results[0].is_ok());
+    match &results[1] {
+        Err(EngineError::Exec(ExecError::NonFiniteInput { index })) => {
+            assert_eq!(*index, 5)
+        }
+        other => panic!("expected NonFiniteInput, got {other:?}"),
+    }
+    assert!(results[2].is_ok());
+    assert!(matches!(
+        results[3],
+        Err(EngineError::Exec(ExecError::NonFiniteInput { index: 0 }))
+    ));
+    // the shared-batch GEMM never saw the NaN: good outputs stay
+    // bit-identical to a solo run, and the engine keeps serving
+    let direct = model.run(&good).unwrap();
+    assert_eq!(*results[0].as_ref().unwrap(), direct);
+    assert_eq!(engine.run(good).unwrap(), direct);
+    let stats = engine.stats();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.failed, 2);
+}

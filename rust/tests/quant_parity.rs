@@ -1,0 +1,179 @@
+//! Quantization-error tolerance harness: the int8 mirror of
+//! `exec_parity.rs`. Zoo networks x pruning schemes x rates are compiled
+//! twice from the same seed — once fp32, once `Precision::Int8` — and the
+//! int8 run is gated against the fp32 run with per-layer error attribution
+//! from `weight_quant_report` printed on any failure.
+//!
+//! Two-level tolerance contract (see `compiler::quantize`):
+//!
+//! - **Per layer (tight):** every quantized weight dequantizes within
+//!   `WEIGHT_QUANT_RTOL = 1/254` of its layer's absmax — a construction
+//!   guarantee of symmetric absmax quantization, asserted per layer.
+//! - **End to end (coarse):** per-tensor activation + per-channel weight
+//!   steps contribute ~`1/254` relative error each per quantized GEMM;
+//!   across `L` quantized layers the signed errors accumulate like a
+//!   random walk, so the gate is `PER_LAYER_RTOL * sqrt(L)` of the fp32
+//!   output's absmax with a generous safety factor folded into
+//!   `PER_LAYER_RTOL`. This catches catastrophic scale/kernel bugs (which
+//!   show up as O(100%) error); the tight numeric guarantee is the
+//!   per-layer gate above.
+//!
+//! Determinism is exact, not approximate: i32 accumulation makes the int8
+//! tier bit-identical across worker counts, repeated runs, batching, and a
+//! save -> load round trip (quantization is a deterministic function of the
+//! saved masked fp32 weights).
+
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{
+    max_abs_diff, weight_quant_report, Framework, Precision, WEIGHT_QUANT_RTOL,
+};
+use npas::graph::{zoo, Network};
+use npas::pruning::PruneScheme;
+use npas::tensor::{Tensor, XorShift64Star};
+use npas::CompiledModel;
+
+/// Same reduced resolution the exec parity suite uses.
+const RES: usize = 16;
+/// Coarse per-quantized-layer relative error budget for the end-to-end
+/// random-walk gate: ~5x the single-GEMM empirical error (2% of output
+/// absmax, pinned by the `quantize` unit tests) as safety margin.
+const PER_LAYER_RTOL: f32 = 0.1;
+
+fn build(net: &Network, annotation: Option<(PruneScheme, f32)>, precision: Precision) -> CompiledModel {
+    let mut builder = CompiledModel::build(net.clone())
+        .weights(11u64)
+        .target(&KRYO_485, Framework::Ours)
+        .precision(precision);
+    if let Some((scheme, rate)) = annotation {
+        builder = builder.scheme((scheme, rate));
+    }
+    builder.compile().unwrap_or_else(|e| panic!("{}: {e}", net.name))
+}
+
+/// fp32 vs int8 on one workload, with per-layer attribution on failure.
+fn check_quant_parity(net: &Network, annotation: Option<(PruneScheme, f32)>) {
+    let label = match annotation {
+        Some((scheme, rate)) => format!("{} @ {scheme} {rate}x", net.name),
+        None => format!("{} @ dense", net.name),
+    };
+    let fp32 = build(net, annotation, Precision::Fp32);
+    let int8 = build(net, annotation, Precision::Int8);
+    assert_eq!(int8.precision(), Precision::Int8);
+
+    // per-layer attribution first: the tight construction guarantee. Both
+    // models derive identical masked weights from the shared seed.
+    let reports = weight_quant_report(int8.network(), int8.weights());
+    for r in &reports {
+        assert!(
+            r.rel_err <= WEIGHT_QUANT_RTOL + f32::EPSILON,
+            "{label}: layer {} ({}) rel quant error {} exceeds the 1/254 bound",
+            r.layer,
+            r.role,
+            r.rel_err
+        );
+    }
+
+    let mut rng = XorShift64Star::new(101);
+    let (h, w, c) = net.input_hwc;
+    let input = Tensor::he_normal(vec![h, w, c], &mut rng);
+    let want = fp32.run(&input).unwrap_or_else(|e| panic!("{label}: fp32 run: {e}"));
+    let got = int8.run(&input).unwrap_or_else(|e| panic!("{label}: int8 run: {e}"));
+    assert_eq!(got.dims(), want.dims(), "{label}: shape mismatch");
+    assert!(got.data().iter().all(|v| v.is_finite()), "{label}: non-finite int8 output");
+
+    let nq = reports.len();
+    let scale = want.abs_max().max(1e-3);
+    let tol = PER_LAYER_RTOL * (nq as f32).sqrt().max(1.0) * scale;
+    let diff = max_abs_diff(&got, &want);
+    let attribution: Vec<String> = reports
+        .iter()
+        .map(|r| format!("layer {} ({}): rel {:.2e} abs {:.2e}", r.layer, r.role, r.rel_err, r.max_abs_err))
+        .collect();
+    assert!(
+        diff <= tol,
+        "{label}: int8 diverges from fp32: |diff| {diff} > {tol} \
+         ({nq} quantized layers, output absmax {scale})\nper-layer attribution:\n{}",
+        attribution.join("\n")
+    );
+
+    // the quantized kernels must actually have run: with continuous
+    // he_normal weights a bit-identical output would mean the int8 model
+    // silently fell back to the fp32 tier
+    if nq > 0 {
+        assert!(
+            got.data() != want.data(),
+            "{label}: int8 output bit-identical to fp32 — quantized kernels not engaged?"
+        );
+    }
+}
+
+fn sweep(net: &Network, rates: &[f32]) {
+    check_quant_parity(net, None);
+    for scheme in [
+        PruneScheme::Pattern,
+        PruneScheme::block_punched_default(),
+    ] {
+        for &rate in rates {
+            check_quant_parity(net, Some((scheme, rate)));
+        }
+    }
+}
+
+#[test]
+fn quant_parity_mobilenet_v1() {
+    sweep(&zoo::mobilenet_v1().rescaled(RES), &[2.5, 5.0]);
+}
+
+#[test]
+fn quant_parity_mobilenet_v2() {
+    sweep(&zoo::mobilenet_v2().rescaled(RES), &[2.5, 5.0]);
+}
+
+#[test]
+fn quant_parity_npas_deploy_network() {
+    use npas::graph::zoo::CandidateBlock::*;
+    let net = zoo::npas_deploy_network(
+        "deploy-quant",
+        &[Conv3x3, DwPw, PwDwPw, Conv1x1, DwPw, Skip, Conv3x3],
+    )
+    .rescaled(RES);
+    sweep(&net, &[5.0]);
+}
+
+#[test]
+fn int8_outputs_are_deterministic_and_batch_invariant() {
+    let net = zoo::mobilenet_v1().rescaled(RES);
+    let model = build(&net, Some((PruneScheme::block_punched_default(), 3.0)), Precision::Int8);
+    let mut rng = XorShift64Star::new(17);
+    let inputs: Vec<Tensor> = (0..3)
+        .map(|_| Tensor::he_normal(vec![RES, RES, 3], &mut rng))
+        .collect();
+    let solo: Vec<Tensor> = inputs.iter().map(|x| model.run(x).unwrap()).collect();
+    // repeat runs are bit-identical (i32 accumulation is exact)
+    for (x, y) in inputs.iter().zip(&solo) {
+        assert_eq!(&model.run(x).unwrap(), y);
+    }
+    // batching must not change what a given input produces
+    let batched = model.run_batch(&inputs).unwrap();
+    assert_eq!(batched, solo);
+}
+
+#[test]
+fn int8_models_round_trip_through_save_load() {
+    let net = zoo::mobilenet_v2().rescaled(RES);
+    let model = build(&net, Some((PruneScheme::Pattern, 2.5)), Precision::Int8);
+    let mut rng = XorShift64Star::new(23);
+    let input = Tensor::he_normal(vec![RES, RES, 3], &mut rng);
+    let before = model.run(&input).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("npas_quant_rt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("int8.json");
+    model.save(&path).unwrap();
+    let loaded = CompiledModel::load(&path).unwrap();
+    // the precision choice is part of the artifact, and re-quantizing the
+    // saved masked fp32 weights is deterministic — outputs are bit-identical
+    assert_eq!(loaded.precision(), Precision::Int8);
+    assert_eq!(loaded.run(&input).unwrap(), before);
+    std::fs::remove_dir_all(&dir).ok();
+}

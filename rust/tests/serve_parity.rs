@@ -312,3 +312,68 @@ fn direct_registry_infer_matches_the_facade() {
         other => panic!("expected NotFound, got {other:?}"),
     }
 }
+
+#[test]
+fn non_finite_and_hostile_payloads_are_typed_not_fatal() {
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("m", model(1)).expect("insert");
+    let (server, mut client) = spawn(reg);
+
+    // raw body: `1e999` is valid JSON text but parses to f64::INFINITY —
+    // the one wire vector that smuggles a non-finite value past the
+    // literal-rejecting parser. Must be the caller's 400, never a worker
+    // panic or a poisoned engine.
+    let mut vals: Vec<&str> = vec!["0.5"; 8 * 8 * 8];
+    vals[7] = "1e999";
+    let body = format!(r#"{{"dims":[8,8,8],"data":[{}]}}"#, vals.join(","));
+    let inf = client
+        .request("POST", "/v1/models/m/infer", &[], body.as_bytes())
+        .expect("exchange completes");
+    assert_eq!(inf.status, 400, "body: {}", inf.json);
+    assert_eq!(inf.error_kind(), Some("bad_request"));
+
+    // dims that individually fit a usize but whose product overflows
+    let overflow = r#"{"dims":[4294967295,4294967295,4294967295],"data":[0.5]}"#;
+    let of = client
+        .request("POST", "/v1/models/m/infer", &[], overflow.as_bytes())
+        .expect("exchange completes");
+    assert_eq!(of.status, 400, "body: {}", of.json);
+    assert_eq!(of.error_kind(), Some("bad_request"));
+
+    // fractional dims fail the strict integer decode
+    let frac = r#"{"dims":[8.5,8,8],"data":[0.5]}"#;
+    let fr = client
+        .request("POST", "/v1/models/m/infer", &[], frac.as_bytes())
+        .expect("exchange completes");
+    assert_eq!(fr.status, 400, "body: {}", fr.json);
+    assert_eq!(fr.error_kind(), Some("bad_request"));
+
+    // the same connection (and the same engine) still serves afterwards
+    let ok = client.infer("m", "c", &input(2)).expect("exchange completes");
+    assert_eq!(ok.status, 200, "body: {}", ok.json);
+    server.shutdown();
+}
+
+#[test]
+fn int8_models_serve_bit_identical_to_their_direct_run() {
+    // the quantized tier rides the same serving stack: registry + engine
+    // share the int8 PreparedKernels, so wire outputs match the direct
+    // int8 run bit-for-bit (i32 accumulation is worker-count invariant)
+    let m = CompiledModel::build(zoo::single_conv(8, 3, 8, 8))
+        .scheme((PruneScheme::block_punched_default(), 3.0))
+        .weights(1u64)
+        .target(&KRYO_485, Framework::Ours)
+        .precision(npas::compiler::Precision::Int8)
+        .compile()
+        .expect("int8 model compiles");
+    let x = input(21);
+    let direct = m.run(&x).expect("direct int8 run");
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("q", m).expect("insert");
+    let (server, mut client) = spawn(reg);
+    let resp = client.infer("q", "c", &x).expect("infer round trip");
+    assert_eq!(resp.status, 200, "body: {}", resp.json);
+    let wire = npas::serve::tensor_from_json(&resp.json).expect("reply decodes");
+    assert_bit_identical(&wire, &direct);
+    server.shutdown();
+}

@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
-# Pay down the no-toolchain debt: PRs 3-7 were authored on hosts without a
+# Pay down the no-toolchain debt: PRs 3-8 were authored on hosts without a
 # Rust toolchain, so the self-bootstrapping golden latency pin was never
-# generated and the bench snapshots (BENCH_5/6/7.json) were never measured.
-# Run this once on any host with cargo; it regenerates every missing
-# artifact, sanity-checks the golden pin for determinism, and stages the
-# results for a single "pay down toolchain debt" commit.
+# generated and the bench snapshots (BENCH_5/6/7/8.json) were never
+# measured. Run this once on any host with cargo; it regenerates every
+# missing artifact, sanity-checks the golden pin for determinism, verifies
+# the scalar/simd bit-identity contract on both feature legs, and stages
+# the results for a single "pay down toolchain debt" commit.
 #
 # Usage: tools/paydown_debt.sh          (from the repository root)
 
@@ -17,8 +18,11 @@ command -v cargo >/dev/null || {
     exit 1
 }
 
-echo "== 1/4 build + full test suite (bootstraps the golden pin) =="
+echo "== 1/5 build + full test suite, both feature legs (bootstraps the golden pin) =="
 ( cd rust && cargo build --release && cargo test -q )
+# the simd leg recompiles the hot kernels with the AVX variants; the unit
+# suites assert dispatched == scalar bit-identity on this host's CPU
+( cd rust && cargo build --release --features simd && cargo test -q --features simd )
 
 GOLDEN=rust/tests/golden/latency_model.txt
 [ -f "$GOLDEN" ] || {
@@ -26,7 +30,7 @@ GOLDEN=rust/tests/golden/latency_model.txt
     exit 1
 }
 
-echo "== 2/4 golden pin determinism check =="
+echo "== 2/5 golden pin determinism check =="
 # the pin is only trustworthy if a second generation is byte-identical;
 # regenerate into a scratch copy and diff
 cp "$GOLDEN" /tmp/latency_model.first.txt
@@ -40,15 +44,21 @@ if ! cmp -s "$GOLDEN" /tmp/latency_model.first.txt; then
 fi
 echo "   two generations byte-identical — pin is sound"
 
-echo "== 3/4 bench snapshots (release, hard acceptance bars) =="
+echo "== 3/5 quantization tolerance harness (release) =="
+( cd rust && cargo test --release --features simd --test quant_parity -- --nocapture )
+
+echo "== 4/5 bench snapshots (release, hard acceptance bars) =="
+# engine_throughput runs with the simd feature so BENCH_8.json records the
+# real per-tier bars (and the 1.5x simd-vs-scalar assert is armed on AVX
+# hosts with >= 4 cores); the other benches are tier-independent
 ( cd rust \
-    && cargo bench --bench engine_throughput \
+    && cargo bench --bench engine_throughput --features simd \
     && cargo bench --bench oracle_calibration \
     && cargo bench --bench serve_load )
 
-echo "== 4/4 stage artifacts =="
-git add "$GOLDEN" BENCH_5.json BENCH_6.json BENCH_7.json
-git status --short -- "$GOLDEN" BENCH_5.json BENCH_6.json BENCH_7.json
+echo "== 5/5 stage artifacts =="
+git add "$GOLDEN" BENCH_5.json BENCH_6.json BENCH_7.json BENCH_8.json
+git status --short -- "$GOLDEN" BENCH_5.json BENCH_6.json BENCH_7.json BENCH_8.json
 echo
 echo "done — review the staged files and commit, e.g.:"
 echo "  git commit -m 'Commit measured bench snapshots and golden latency pin'"
