@@ -5,10 +5,12 @@
 //! * **closed-loop** — C keep-alive clients each issuing requests
 //!   back-to-back; C sweeps 1..=4. Measures the self-clocked throughput
 //!   ceiling and its client-observed p50/p95/p99.
-//! * **open-loop** — a paced sweep of offered rates around the measured
-//!   capacity (0.25x, 0.5x, 1x, 2x). Senders are blocking threads, so a
-//!   sender that falls behind its schedule stops inflating the offered
-//!   rate — the achieved rate column records what was actually offered.
+//! * **open-loop** — a sweep of offered rates around the measured
+//!   capacity (0.25x, 0.5x, 1x, 2x), with seeded exponential (Poisson)
+//!   inter-arrival times per sender so load bursts the way independent
+//!   clients do. Senders are blocking threads, so a sender that falls
+//!   behind its schedule stops inflating the offered rate — the achieved
+//!   rate column records what was actually offered.
 //!   Past saturation the admission gate must shed (503/429) instead of
 //!   letting latency grow without bound; the shed-rate column is the
 //!   acceptance signal.
@@ -41,12 +43,16 @@ struct Sample {
     status: u16,
 }
 
-/// Client-side percentile over successful exchanges.
+/// Client-side percentile over successful exchanges (standard nearest-rank:
+/// the smallest sample ≥ the requested fraction of the distribution — the
+/// same definition `EngineStats` uses server-side).
 fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
     if sorted_ms.is_empty() {
         return 0.0;
     }
-    sorted_ms[(((sorted_ms.len() - 1) as f64) * p).round() as usize]
+    let n = sorted_ms.len();
+    let rank = (p * n as f64).ceil() as usize;
+    sorted_ms[rank.clamp(1, n) - 1]
 }
 
 struct PointSummary {
@@ -96,21 +102,31 @@ fn summary_json(kind: &str, label: f64, s: &PointSummary) -> Json {
     ])
 }
 
-/// One client thread: `n` exchanges, optionally paced at `interval`.
+/// One client thread: `n` exchanges. `arrival` is `(mean_secs, seed)` for
+/// open-loop Poisson traffic: inter-arrival gaps are seeded exponential
+/// draws (memoryless, so requests burst and idle the way independent real
+/// clients do, instead of the perfectly even spacing a fixed pacer gives).
+/// A sender that falls behind its schedule does not sleep, preserving the
+/// "a blocked sender can't offer load" open-loop semantics.
 fn client_thread(
     addr: String,
     client_id: String,
     input: Tensor,
     n: usize,
-    interval: Option<Duration>,
+    arrival: Option<(f64, u64)>,
 ) -> (Vec<Sample>, usize) {
     let mut client = HttpClient::new(addr);
     let mut samples = Vec::with_capacity(n);
     let mut transport_errors = 0usize;
     let start = Instant::now();
-    for i in 0..n {
-        if let Some(iv) = interval {
-            let due = start + iv * i as u32;
+    let mut rng = XorShift64Star::new(arrival.map(|(_, s)| s).unwrap_or(1));
+    let mut due_secs = 0.0f64;
+    for _ in 0..n {
+        if let Some((mean_secs, _)) = arrival {
+            // inverse-CDF exponential draw; next_f32 ∈ [0,1) keeps ln finite
+            let u = f64::from(rng.next_f32());
+            due_secs += -(1.0 - u).ln() * mean_secs;
+            let due = start + Duration::from_secs_f64(due_secs);
             let now = Instant::now();
             if due > now {
                 std::thread::sleep(due - now);
@@ -134,7 +150,7 @@ fn run_point(
     input: &Tensor,
     clients: usize,
     per_client: usize,
-    interval: Option<Duration>,
+    mean_interval: Option<Duration>,
 ) -> PointSummary {
     let t = Instant::now();
     let handles: Vec<_> = (0..clients)
@@ -142,7 +158,9 @@ fn run_point(
             let addr = addr.to_string();
             let id = format!("load-{c}");
             let input = input.clone();
-            std::thread::spawn(move || client_thread(addr, id, input, per_client, interval))
+            // distinct per-client seed so the Poisson streams are independent
+            let arrival = mean_interval.map(|iv| (iv.as_secs_f64(), 0xA11CE ^ c as u64));
+            std::thread::spawn(move || client_thread(addr, id, input, per_client, arrival))
         })
         .collect();
     let mut samples = Vec::new();
@@ -215,8 +233,8 @@ fn main() {
         closed.push(summary_json("clients", clients as f64, &s));
     }
 
-    // ---- open loop: paced offered-load sweep around capacity ------------
-    println!("\n-- open loop (paced, 1.2s per point) --");
+    // ---- open loop: Poisson offered-load sweep around capacity ----------
+    println!("\n-- open loop (Poisson arrivals, ~1.2s per point) --");
     println!(
         "{:>12} {:>10} {:>9} {:>9} {:>9} {:>10} {:>6} {:>6}",
         "offered r/s", "achieved", "p50 ms", "p95 ms", "p99 ms", "shed rate", "503", "429"
@@ -229,6 +247,7 @@ fn main() {
         // stays under the serial ceiling (a blocked sender can't offer load)
         let senders = ((offered * serial_ms / 1000.0).ceil() as usize + 1).clamp(2, 8);
         let per_sender_rps = offered / senders as f64;
+        // mean inter-arrival time of each sender's exponential draws
         let interval = Duration::from_secs_f64(1.0 / per_sender_rps);
         let per_client = (1.2 * per_sender_rps).ceil() as usize;
         let s = run_point(&addr, &input, senders, per_client.max(2), Some(interval));

@@ -1,0 +1,174 @@
+//! Anytime (early-exit) inference: one compiled backbone, many
+//! latency/accuracy operating points, picked **per request**.
+//!
+//! The subsystem spans four layers:
+//!
+//! * **Graph** — [`crate::graph::anytime`]: [`AnytimeNetwork`] annotates a
+//!   backbone [`Network`](crate::graph::Network) with GAP+FC
+//!   [`ExitHead`](crate::graph::ExitHead)s at fusion-safe cut points.
+//! * **Compiler** — [`plan::AnytimePlan`]: the backbone's deterministic
+//!   [`ExecutionPlan`](crate::compiler::ExecutionPlan) is **sliced** (not
+//!   recompiled) into per-segment sub-plans, plus one ordinary plan per
+//!   head, each with its own predicted latency
+//!   ([`plan::ExitLatencyReport`], also reachable through any
+//!   [`LatencyOracle`](crate::search::oracle::LatencyOracle) via
+//!   `plan_latency_ms`).
+//! * **Runtime** — [`model::AnytimeModel`] executes segment-by-segment
+//!   under an [`AnytimePolicy`]; segments share the twin's masked weights
+//!   and [`PreparedKernels`](crate::compiler::PreparedKernels) (sliced,
+//!   values cloned bit-for-bit), so [`AnytimePolicy::FullDepth`] output is
+//!   **bit-identical** to the exit-free twin — pinned by
+//!   `tests/anytime_parity.rs` across the zoo × schemes.
+//! * **Serve** — `InferenceEngine`/`ModelRegistry` accept per-request
+//!   policies; the HTTP infer route takes optional `deadline_ms` /
+//!   `min_confidence` fields and the reply reports which exit answered.
+//!
+//! Exit heads are plain GAP+FC chain networks compiled through the
+//! ordinary facade, so the int8 and simd precision tiers apply to them
+//! unchanged — no anytime-specific kernels exist.
+
+pub mod model;
+pub mod plan;
+
+pub use model::AnytimeModel;
+pub use plan::{AnytimePlan, ExitLatencyReport};
+
+use crate::graph::AnytimeNetwork;
+use crate::tensor::Tensor;
+
+/// Per-request exit-selection policy of an [`AnytimeModel`].
+///
+/// With `n` exit heads there are `n + 1` operating points: exits `0..n`
+/// (early) and `n` (full depth, the backbone's own classifier).
+///
+/// * [`AnytimePolicy::FullDepth`] runs every segment back-to-back; the
+///   output is bit-identical to the exit-free twin network.
+/// * [`AnytimePolicy::Confidence`]`(t)` runs segment `i`, evaluates head
+///   `i`'s softmax margin (top-1 minus top-2 probability, in `[0, 1]`),
+///   and answers from the first head whose margin is `>= t`; if none
+///   fires, it answers at full depth. `Confidence(0.0)` therefore always
+///   answers at exit 0 and any `t > 1.0` never exits early.
+/// * [`AnytimePolicy::Deadline`]`(ms)` picks the **deepest** operating
+///   point whose predicted cumulative latency (segments so far + head,
+///   from the compile-time latency model) fits the deadline, and runs
+///   straight to it — no mid-flight re-planning. An infeasible deadline
+///   degrades to exit 0 (the cheapest answer), so a tighter deadline
+///   never selects a later exit than a looser one.
+///
+/// ```
+/// use npas::anytime::{AnytimeModel, AnytimePolicy};
+/// use npas::compiler::device::KRYO_485;
+/// use npas::compiler::Framework;
+/// use npas::graph::{ActKind, AnytimeNetwork, NetworkBuilder};
+/// use npas::tensor::Tensor;
+/// use npas::CompiledModel;
+///
+/// let mut b = NetworkBuilder::new("tiny", (8, 8, 4));
+/// b.conv2d(3, 8, 1);
+/// b.act(ActKind::Relu);
+/// b.conv2d(3, 8, 1);
+/// b.global_avg_pool();
+/// b.linear(10);
+/// let anet = AnytimeNetwork::with_exit_fractions(b.build(), &[0.5])?;
+/// let twin = CompiledModel::build(anet.twin().clone())
+///     .weights(7u64)
+///     .target(&KRYO_485, Framework::Ours)
+///     .compile()?;
+/// let model = AnytimeModel::from_model(twin, &anet, 11)?;
+/// let x = Tensor::zeros(vec![8, 8, 4]);
+/// // a zero threshold is always confident: the first exit answers
+/// let out = model.run_policy(&x, AnytimePolicy::Confidence(0.0))?;
+/// assert_eq!((out.exit, out.early), (0, true));
+/// // full depth is bit-identical to the exit-free twin
+/// let full = model.run_policy(&x, AnytimePolicy::FullDepth)?;
+/// assert_eq!(full.output, model.twin().run(&x)?);
+/// assert_eq!(full.exit, model.num_exits());
+/// # Ok::<(), npas::NpasError>(())
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AnytimePolicy {
+    /// Deepest exit whose predicted cumulative latency fits this budget
+    /// (milliseconds, latency-model scale).
+    Deadline(f64),
+    /// First exit whose softmax margin reaches this threshold.
+    Confidence(f32),
+    /// All segments; bit-identical to the exit-free twin.
+    FullDepth,
+}
+
+impl std::fmt::Display for AnytimePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AnytimePolicy::Deadline(ms) => write!(f, "deadline({ms:.3}ms)"),
+            AnytimePolicy::Confidence(t) => write!(f, "confidence({t:.3})"),
+            AnytimePolicy::FullDepth => write!(f, "full-depth"),
+        }
+    }
+}
+
+/// One answered anytime request.
+#[derive(Debug, Clone)]
+pub struct AnytimeOutcome {
+    /// The answering classifier's logits: head `exit`'s output for an
+    /// early exit, the backbone's own output at full depth.
+    pub output: Tensor,
+    /// Operating point that answered: `0..num_exits` for an early exit,
+    /// `num_exits` for full depth.
+    pub exit: usize,
+    /// `exit < num_exits` — an exit head (not the backbone tail) answered.
+    pub early: bool,
+    /// Softmax margin of the answering head (`None` at full depth).
+    pub margin: Option<f64>,
+    /// Predicted cumulative latency of the chosen operating point
+    /// (latency-model ms — the number `Deadline` budgets against).
+    pub predicted_ms: f64,
+}
+
+/// Softmax top-1 minus top-2 probability of a logit vector, in `[0, 1]`.
+/// Degenerate single-logit heads are maximally confident.
+pub(crate) fn softmax_margin(logits: &[f32]) -> f64 {
+    if logits.len() < 2 {
+        return 1.0;
+    }
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f64> = logits.iter().map(|&v| f64::from(v - max).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    let (mut p1, mut p2) = (0.0f64, 0.0f64);
+    for &e in &exps {
+        let p = e / sum;
+        if p > p1 {
+            p2 = p1;
+            p1 = p;
+        } else if p > p2 {
+            p2 = p;
+        }
+    }
+    p1 - p2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_margin_is_bounded_and_ordered() {
+        // uniform logits: zero margin
+        assert!(softmax_margin(&[1.0, 1.0, 1.0]).abs() < 1e-12);
+        // a dominant logit approaches margin 1
+        assert!(softmax_margin(&[50.0, 0.0, 0.0]) > 0.99);
+        // single-logit heads are always confident
+        assert_eq!(softmax_margin(&[3.2]), 1.0);
+        // shift invariance (the stable-softmax property)
+        let a = softmax_margin(&[2.0, 1.0, 0.5]);
+        let b = softmax_margin(&[102.0, 101.0, 100.5]);
+        assert!((a - b).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn policy_display_is_stable() {
+        assert_eq!(AnytimePolicy::Deadline(2.5).to_string(), "deadline(2.500ms)");
+        assert_eq!(AnytimePolicy::Confidence(0.9).to_string(), "confidence(0.900)");
+        assert_eq!(AnytimePolicy::FullDepth.to_string(), "full-depth");
+    }
+}

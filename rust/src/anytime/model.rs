@@ -1,0 +1,380 @@
+//! Runtime layer of `npas::anytime`: [`AnytimeModel`] — a compiled twin
+//! sliced into executable segments plus compiled exit heads, run
+//! segment-by-segment under an [`AnytimePolicy`].
+//!
+//! Nothing is recompiled and no weight value is re-derived: segments
+//! execute the twin's own `ExecutionPlan` slices with the twin's own
+//! masked [`WeightSet`] entries and [`PreparedKernels`] (re-keyed, values
+//! cloned bit-for-bit), so running every segment back-to-back performs the
+//! exact arithmetic of `CompiledModel::run` on the twin — the bit-identity
+//! the anytime parity wall pins. Heads are independent [`CompiledModel`]s
+//! (GAP + FC) built through the ordinary facade at the twin's precision
+//! tier, so int8/simd apply to them unchanged.
+
+use std::sync::Arc;
+
+use crate::compiler::{
+    measure_plan, ExecError, ExecScratch, ExecutionPlan, Executor, PreparedKernels, WeightSet,
+};
+use crate::error::{NpasError, Result};
+use crate::graph::{AnytimeNetwork, ExitHead, Network};
+use crate::model::CompiledModel;
+use crate::runtime::{EngineConfig, InferenceEngine};
+use crate::tensor::Tensor;
+
+use super::plan::{slice_network, slice_plan};
+use super::{softmax_margin, AnytimeOutcome, AnytimePolicy};
+
+/// One executable backbone segment: a slice of the twin's plan, weights and
+/// prepared kernels, with its own shape-planned scratch arena.
+#[derive(Debug)]
+struct Segment {
+    net: Network,
+    plan: Arc<ExecutionPlan>,
+    weights: WeightSet,
+    prepared: Arc<PreparedKernels>,
+    scratch: Arc<ExecScratch>,
+}
+
+/// The twin's weight entries for backbone layers `start..=end`, re-keyed to
+/// the segment's layer ids. Values are cloned bit-for-bit.
+fn slice_weights(weights: &WeightSet, start: usize, end: usize) -> WeightSet {
+    let mut out = WeightSet::new();
+    for (&id, w) in weights.iter() {
+        if (start..=end).contains(&id) {
+            out.insert(id - start, w.clone());
+        }
+    }
+    out
+}
+
+/// An anytime-executable model: the exit-free twin [`CompiledModel`] plus
+/// its sliced segments and compiled exit heads. Build one with
+/// [`AnytimeModel::from_model`]; run requests with
+/// [`AnytimeModel::run_policy`]; serve it with [`AnytimeModel::serve`].
+#[derive(Debug)]
+pub struct AnytimeModel {
+    twin: CompiledModel,
+    anet: AnytimeNetwork,
+    segments: Vec<Segment>,
+    heads: Vec<CompiledModel>,
+    /// Predicted cumulative latency of each operating point (ms,
+    /// latency-model scale): entries `0..num_exits` are segments-so-far +
+    /// head, entry `num_exits` is the full backbone. What
+    /// [`AnytimePolicy::Deadline`] budgets against.
+    cumulative_ms: Vec<f64>,
+}
+
+impl AnytimeModel {
+    /// Slice `twin` (a model compiled from `anet`'s backbone) at the exit
+    /// attach points and compile one head model per exit, seeded from
+    /// `head_seed` (one derived seed per head — head weights are
+    /// independent of the backbone stream). The twin keeps serving as-is;
+    /// full-depth anytime execution reproduces it bit-for-bit.
+    ///
+    /// Errors when `twin` was not compiled from `anet.backbone` (network
+    /// fingerprint mismatch), when `anet` fails validation, or when a head
+    /// fails to compile.
+    pub fn from_model(
+        twin: CompiledModel,
+        anet: &AnytimeNetwork,
+        head_seed: u64,
+    ) -> Result<AnytimeModel> {
+        anet.validate()?;
+        if twin.network().fingerprint() != anet.backbone.fingerprint() {
+            return Err(NpasError::invalid(format!(
+                "twin model was compiled from `{}`, not this anytime backbone `{}`",
+                twin.network().name,
+                anet.backbone.name
+            )));
+        }
+        let ranges = anet.segment_ranges();
+        let mut segments = Vec::with_capacity(ranges.len());
+        for (i, &(start, end)) in ranges.iter().enumerate() {
+            let name = format!("{}#seg{i}", anet.backbone.name);
+            let net = slice_network(&anet.backbone, start, end, name.clone());
+            let plan = slice_plan(twin.plan(), start, end, name)?;
+            let weights = slice_weights(twin.weights(), start, end);
+            let prepared = twin.prepared_arc().slice_rekeyed(start, end);
+            let scratch = Arc::new(ExecScratch::for_plan(&net, &plan));
+            segments.push(Segment {
+                net,
+                plan: Arc::new(plan),
+                weights,
+                prepared: Arc::new(prepared),
+                scratch,
+            });
+        }
+        let mut heads = Vec::with_capacity(anet.num_exits());
+        for i in 0..anet.num_exits() {
+            let seed = head_seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let head = CompiledModel::build(anet.head_network(i))
+                .weights(seed)
+                .target(twin.device(), twin.framework())
+                .precision(twin.precision())
+                .intra_workers(twin.intra_workers())
+                .compile()?;
+            heads.push(head);
+        }
+        let seg_ms: Vec<f64> = segments
+            .iter()
+            .map(|s| measure_plan(&s.plan, twin.device(), 100).mean_ms)
+            .collect();
+        let mut cumulative_ms = Vec::with_capacity(heads.len() + 1);
+        let mut prefix = 0.0;
+        for (i, head) in heads.iter().enumerate() {
+            prefix += seg_ms[i];
+            cumulative_ms.push(prefix + head.latency(100).mean_ms);
+        }
+        cumulative_ms.push(prefix + seg_ms[heads.len()]);
+        Ok(AnytimeModel { twin, anet: anet.clone(), segments, heads, cumulative_ms })
+    }
+
+    pub fn num_exits(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// The exit-free twin this model was sliced from.
+    pub fn twin(&self) -> &CompiledModel {
+        &self.twin
+    }
+
+    pub fn network(&self) -> &AnytimeNetwork {
+        &self.anet
+    }
+
+    pub fn exits(&self) -> &[ExitHead] {
+        &self.anet.exits
+    }
+
+    /// Predicted cumulative latency per operating point (ms); see the
+    /// field docs. `num_exits() + 1` entries, full depth last.
+    pub fn predicted_ms(&self) -> &[f64] {
+        &self.cumulative_ms
+    }
+
+    /// The operating point [`AnytimePolicy::Deadline`] selects for a
+    /// budget: the deepest exit whose predicted cumulative latency fits,
+    /// or exit 0 when none does. Monotone in the deadline by construction
+    /// (a larger budget only grows the feasible set).
+    pub fn exit_for_deadline(&self, deadline_ms: f64) -> usize {
+        let mut choice = None;
+        for (i, &c) in self.cumulative_ms.iter().enumerate() {
+            if c <= deadline_ms {
+                choice = Some(i);
+            }
+        }
+        choice.unwrap_or(0)
+    }
+
+    fn run_segment(&self, i: usize, x: &Tensor) -> std::result::Result<Tensor, ExecError> {
+        let s = &self.segments[i];
+        Executor::with_prepared(&s.net, &s.plan, &s.weights, &s.prepared)
+            .with_intra_workers(self.twin.intra_workers())
+            .with_scratch(&s.scratch)
+            .try_run(x)
+    }
+
+    fn run_head(&self, i: usize, x: &Tensor) -> std::result::Result<Tensor, ExecError> {
+        let h = &self.heads[i];
+        Executor::with_prepared(h.network(), h.plan(), h.weights(), h.prepared_arc())
+            .with_intra_workers(h.intra_workers())
+            .with_scratch(h.scratch_arc())
+            .try_run(x)
+    }
+
+    /// Run segments `0..=` the one feeding `exit` (all of them at full
+    /// depth), then the exit's head.
+    fn run_to(&self, exit: usize, input: &Tensor) -> std::result::Result<AnytimeOutcome, ExecError> {
+        let n = self.num_exits();
+        let last_seg = exit.min(n);
+        let mut act: Option<Tensor> = None;
+        for i in 0..=last_seg {
+            act = Some(self.run_segment(i, act.as_ref().unwrap_or(input))?);
+        }
+        let act = act.expect("segment_ranges is non-empty");
+        if exit < n {
+            let logits = self.run_head(exit, &act)?;
+            let margin = softmax_margin(logits.data());
+            Ok(AnytimeOutcome {
+                output: logits,
+                exit,
+                early: true,
+                margin: Some(margin),
+                predicted_ms: self.cumulative_ms[exit],
+            })
+        } else {
+            Ok(AnytimeOutcome {
+                output: act,
+                exit: n,
+                early: false,
+                margin: None,
+                predicted_ms: self.cumulative_ms[n],
+            })
+        }
+    }
+
+    /// Execute one `(h, w, c)` input under `policy`. See [`AnytimePolicy`]
+    /// for the exit-selection semantics. Full-depth output is bit-identical
+    /// to [`CompiledModel::run`] on the twin.
+    pub fn run_policy(
+        &self,
+        input: &Tensor,
+        policy: AnytimePolicy,
+    ) -> std::result::Result<AnytimeOutcome, ExecError> {
+        match policy {
+            AnytimePolicy::FullDepth => self.run_to(self.num_exits(), input),
+            AnytimePolicy::Deadline(ms) => self.run_to(self.exit_for_deadline(ms), input),
+            AnytimePolicy::Confidence(t) => {
+                let n = self.num_exits();
+                let mut act: Option<Tensor> = None;
+                for i in 0..n {
+                    let next = self.run_segment(i, act.as_ref().unwrap_or(input))?;
+                    let logits = self.run_head(i, &next)?;
+                    let margin = softmax_margin(logits.data());
+                    if margin >= f64::from(t) {
+                        return Ok(AnytimeOutcome {
+                            output: logits,
+                            exit: i,
+                            early: true,
+                            margin: Some(margin),
+                            predicted_ms: self.cumulative_ms[i],
+                        });
+                    }
+                    act = Some(next);
+                }
+                let out = self.run_segment(n, act.as_ref().unwrap_or(input))?;
+                Ok(AnytimeOutcome {
+                    output: out,
+                    exit: n,
+                    early: false,
+                    margin: None,
+                    predicted_ms: self.cumulative_ms[n],
+                })
+            }
+        }
+    }
+
+    /// Stand up a micro-batching [`InferenceEngine`] that accepts both
+    /// plain requests (served from the twin's plan, micro-batched exactly
+    /// as [`CompiledModel::serve`] does) and per-request
+    /// [`AnytimePolicy`] submissions routed through this model.
+    pub fn serve(self: &Arc<AnytimeModel>, config: EngineConfig) -> Result<InferenceEngine> {
+        if config.workers < 1 || config.max_batch < 1 || config.queue_cap < 1 {
+            return Err(NpasError::invalid(format!(
+                "engine config needs workers/max_batch/queue_cap >= 1 \
+                 (got {}/{}/{})",
+                config.workers, config.max_batch, config.queue_cap
+            )));
+        }
+        Ok(InferenceEngine::from_parts_with(
+            self.twin.network().clone(),
+            self.twin.plan_arc().clone(),
+            self.twin.weights().clone(),
+            self.twin.prepared_arc().clone(),
+            Some(Arc::clone(self)),
+            config,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::KRYO_485;
+    use crate::compiler::Framework;
+    use crate::graph::{ActKind, NetworkBuilder};
+    use crate::tensor::XorShift64Star;
+
+    fn tiny_anet() -> AnytimeNetwork {
+        let mut b = NetworkBuilder::new("tiny-any", (8, 8, 4));
+        b.conv2d(3, 8, 1);
+        b.act(ActKind::Relu);
+        b.conv2d(3, 8, 1);
+        b.global_avg_pool();
+        b.linear(10);
+        AnytimeNetwork::with_exit_fractions(b.build(), &[0.3]).unwrap()
+    }
+
+    fn model() -> AnytimeModel {
+        let anet = tiny_anet();
+        let twin = CompiledModel::build(anet.twin().clone())
+            .weights(21u64)
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap();
+        AnytimeModel::from_model(twin, &anet, 99).unwrap()
+    }
+
+    #[test]
+    fn full_depth_is_bit_identical_to_the_twin() {
+        let m = model();
+        let mut rng = XorShift64Star::new(5);
+        for _ in 0..3 {
+            let x = Tensor::he_normal(vec![8, 8, 4], &mut rng);
+            let direct = m.twin().run(&x).unwrap();
+            let any = m.run_policy(&x, AnytimePolicy::FullDepth).unwrap();
+            assert_eq!(any.output, direct);
+            assert_eq!(any.exit, m.num_exits());
+            assert!(!any.early);
+        }
+    }
+
+    #[test]
+    fn confidence_threshold_bounds_bracket_every_exit() {
+        let m = model();
+        let mut rng = XorShift64Star::new(6);
+        let x = Tensor::he_normal(vec![8, 8, 4], &mut rng);
+        // margin >= 0 always holds: the first head answers
+        let lo = m.run_policy(&x, AnytimePolicy::Confidence(0.0)).unwrap();
+        assert_eq!((lo.exit, lo.early), (0, true));
+        assert_eq!(lo.output.dims(), &[1, 1, 10]);
+        assert!(lo.margin.unwrap() >= 0.0);
+        // margin <= 1 < 1.5 never fires: full depth answers
+        let hi = m.run_policy(&x, AnytimePolicy::Confidence(1.5)).unwrap();
+        assert_eq!((hi.exit, hi.early), (m.num_exits(), false));
+        assert_eq!(hi.output, m.twin().run(&x).unwrap());
+    }
+
+    #[test]
+    fn deadline_selection_is_monotone_and_uses_the_predicted_table() {
+        let m = model();
+        let cum = m.predicted_ms().to_vec();
+        assert_eq!(cum.len(), m.num_exits() + 1);
+        // an infeasible budget degrades to the cheapest answer
+        assert_eq!(m.exit_for_deadline(0.0), 0);
+        assert_eq!(m.exit_for_deadline(f64::NAN), 0);
+        // a budget at the full-depth prediction reaches full depth
+        assert_eq!(m.exit_for_deadline(cum[m.num_exits()] + 1.0), m.num_exits());
+        // monotone in the budget
+        let mut prev = 0;
+        for k in 0..50 {
+            let d = k as f64 * cum[m.num_exits()] / 25.0;
+            let e = m.exit_for_deadline(d);
+            assert!(e >= prev, "deadline {d}: exit {e} after {prev}");
+            prev = e;
+        }
+        // the outcome reports the operating point's predicted latency
+        let x = Tensor::zeros(vec![8, 8, 4]);
+        let out = m.run_policy(&x, AnytimePolicy::Deadline(0.0)).unwrap();
+        assert_eq!(out.exit, 0);
+        assert!(out.early);
+        assert_eq!(out.predicted_ms, cum[0]);
+    }
+
+    #[test]
+    fn mismatched_twin_is_invalid_config() {
+        let anet = tiny_anet();
+        let mut other = anet.twin().clone();
+        other.name = "somebody-else".to_string();
+        let twin = CompiledModel::build(other)
+            .weights(21u64)
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap();
+        assert!(matches!(
+            AnytimeModel::from_model(twin, &anet, 1),
+            Err(NpasError::InvalidConfig(_))
+        ));
+    }
+}

@@ -1,0 +1,315 @@
+//! Compiler layer of `npas::anytime`: per-segment and per-head
+//! [`ExecutionPlan`]s, with per-exit latency reporting.
+//!
+//! Segments are **sliced out of the backbone's own compiled plan**, never
+//! recompiled: [`slice_plan`] partitions the twin plan's fused groups at
+//! the exit attach points (which [`valid_exit_points`] guarantees coincide
+//! with fusion-group boundaries) and re-keys layer ids, cloning every group
+//! quantity bit-for-bit. Back-to-back execution of the sliced segments is
+//! therefore bit-identical to the exit-free twin by construction — there is
+//! no second compilation whose fusion or algorithm choices could drift.
+//! Heads are ordinary dense chain networks compiled through [`codegen`].
+//!
+//! [`valid_exit_points`]: crate::graph::valid_exit_points
+
+use crate::compiler::codegen::{self, ExecutionPlan, FusedGroup};
+use crate::compiler::{measure_plan, DeviceSpec, Framework, SparsityMap};
+use crate::error::{NpasError, Result};
+use crate::graph::{AnytimeNetwork, Network};
+use crate::search::oracle::LatencyOracle;
+
+/// Backbone layers `start..=end` as a standalone chain network named
+/// `name`: ids re-keyed to `0..`, the first layer reading the (new)
+/// network input instead of a layer edge. Only valid across fusion-safe
+/// cuts, where no other edge crosses the boundary.
+pub(crate) fn slice_network(
+    backbone: &Network,
+    start: usize,
+    end: usize,
+    name: String,
+) -> Network {
+    let mut layers = Vec::with_capacity(end - start + 1);
+    for l in &backbone.layers[start..=end] {
+        let mut l = l.clone();
+        l.id -= start;
+        if l.id == 0 {
+            // the segment input arrives as the network input
+            l.inputs.clear();
+        } else {
+            for src in &mut l.inputs {
+                *src -= start;
+            }
+        }
+        layers.push(l);
+    }
+    let input_hwc = backbone.layers[start].in_hwc;
+    let net = Network { name, input_hwc, layers };
+    debug_assert_eq!(net.validate(), Ok(()));
+    net
+}
+
+/// The groups of `plan` covering backbone layers `start..=end`, re-keyed to
+/// `0..` and renamed `name`. Every group quantity (algo, eff_macs,
+/// utilization, bytes) is cloned bit-for-bit from the parent plan. Errors
+/// when a fused group straddles the boundary (the cut was not fusion-safe)
+/// or the slice does not tile the range exactly.
+pub(crate) fn slice_plan(
+    plan: &ExecutionPlan,
+    start: usize,
+    end: usize,
+    name: String,
+) -> Result<ExecutionPlan> {
+    let mut groups = Vec::new();
+    for g in &plan.groups {
+        let inside = g.layer_ids.iter().filter(|&&id| (start..=end).contains(&id)).count();
+        if inside == 0 {
+            continue;
+        }
+        if inside != g.layer_ids.len() {
+            return Err(NpasError::invalid(format!(
+                "fused group {:?} of `{}` straddles the cut [{start}, {end}] — \
+                 the attach point is not fusion-safe",
+                g.layer_ids, plan.network
+            )));
+        }
+        groups.push(FusedGroup {
+            layer_ids: g.layer_ids.iter().map(|&id| id - start).collect(),
+            ..g.clone()
+        });
+    }
+    let covered: usize = groups.iter().map(|g| g.layer_ids.len()).sum();
+    if covered != end - start + 1 {
+        return Err(NpasError::invalid(format!(
+            "plan slice [{start}, {end}] of `{}` covers {covered} layers, expected {}",
+            plan.network,
+            end - start + 1
+        )));
+    }
+    Ok(ExecutionPlan { network: name, device: plan.device, framework: plan.framework, groups })
+}
+
+/// One row of the per-exit latency table: what answering at this operating
+/// point costs. The last row (`exit == num_exits`) is full depth.
+#[derive(Debug, Clone)]
+pub struct ExitLatencyReport {
+    /// Operating point: `0..num_exits` are early exits, `num_exits` is the
+    /// backbone's own classifier.
+    pub exit: usize,
+    /// Backbone layer the exit hangs off (`"full-depth"` for the last row).
+    pub attach: String,
+    /// Parameters live on this path: backbone prefix + head.
+    pub params: u64,
+    /// Predicted latency of this exit's final backbone segment alone (ms).
+    pub segment_ms: f64,
+    /// Predicted latency of the exit head (ms); 0 at full depth.
+    pub head_ms: f64,
+    /// Predicted end-to-end latency of answering here: all segments up to
+    /// and including this exit's, plus the head (ms). This is the number
+    /// `AnytimePolicy::Deadline` budgets against.
+    pub cumulative_ms: f64,
+}
+
+/// Per-segment + per-head execution plans of an [`AnytimeNetwork`] on one
+/// (device, framework) target, sliced from the backbone's compiled plan.
+#[derive(Debug, Clone)]
+pub struct AnytimePlan {
+    anet: AnytimeNetwork,
+    device: DeviceSpec,
+    /// One `(network, plan)` per backbone segment, in execution order.
+    segments: Vec<(Network, ExecutionPlan)>,
+    /// One `(network, plan)` per exit head (dense GAP + FC).
+    heads: Vec<(Network, ExecutionPlan)>,
+}
+
+impl AnytimePlan {
+    /// Compile the backbone once (with `sparsity`, exactly as the exit-free
+    /// twin would be) and slice it at the exit attach points; compile each
+    /// head densely. Segment plans are named `{backbone}#seg{i}` so the
+    /// latency model's pseudo-noise streams are per-segment.
+    pub fn compile(
+        anet: &AnytimeNetwork,
+        sparsity: &SparsityMap,
+        device: &DeviceSpec,
+        framework: Framework,
+    ) -> Result<AnytimePlan> {
+        anet.validate()?;
+        let full = codegen::compile(&anet.backbone, sparsity, device, framework);
+        let mut segments = Vec::with_capacity(anet.num_exits() + 1);
+        for (i, &(start, end)) in anet.segment_ranges().iter().enumerate() {
+            let name = format!("{}#seg{i}", anet.backbone.name);
+            let net = slice_network(&anet.backbone, start, end, name.clone());
+            let plan = slice_plan(&full, start, end, name)?;
+            segments.push((net, plan));
+        }
+        let mut heads = Vec::with_capacity(anet.num_exits());
+        for i in 0..anet.num_exits() {
+            let net = anet.head_network(i);
+            let plan = codegen::compile(&net, &SparsityMap::new(), device, framework);
+            heads.push((net, plan));
+        }
+        Ok(AnytimePlan { anet: anet.clone(), device: device.clone(), segments, heads })
+    }
+
+    pub fn num_exits(&self) -> usize {
+        self.anet.num_exits()
+    }
+
+    pub fn network(&self) -> &AnytimeNetwork {
+        &self.anet
+    }
+
+    pub fn device(&self) -> &DeviceSpec {
+        &self.device
+    }
+
+    /// Per-segment `(network, plan)` pairs, execution order.
+    pub fn segments(&self) -> &[(Network, ExecutionPlan)] {
+        &self.segments
+    }
+
+    /// Per-head `(network, plan)` pairs, exit order.
+    pub fn heads(&self) -> &[(Network, ExecutionPlan)] {
+        &self.heads
+    }
+
+    /// The per-exit latency table via the standard `measure_plan` protocol
+    /// (`runs`-sample mean per sub-plan). `num_exits() + 1` rows, full
+    /// depth last.
+    pub fn exit_reports(&self, runs: usize) -> Vec<ExitLatencyReport> {
+        self.reports_from(|plan| measure_plan(plan, &self.device, runs).mean_ms)
+    }
+
+    /// The per-exit latency table scored through a [`LatencyOracle`]'s
+    /// `plan_latency_ms` seam — e.g. a [`CalibratedOracle`] — so exits are
+    /// ranked by the same model that ranked the pruning scheme.
+    ///
+    /// [`CalibratedOracle`]: crate::search::oracle::CalibratedOracle
+    pub fn exit_reports_with(&self, oracle: &dyn LatencyOracle) -> Vec<ExitLatencyReport> {
+        self.reports_from(|plan| oracle.plan_latency_ms(plan, &self.device))
+    }
+
+    fn reports_from(&self, mut ms: impl FnMut(&ExecutionPlan) -> f64) -> Vec<ExitLatencyReport> {
+        let n = self.num_exits();
+        let seg_ms: Vec<f64> = self.segments.iter().map(|(_, p)| ms(p)).collect();
+        let head_ms: Vec<f64> = self.heads.iter().map(|(_, p)| ms(p)).collect();
+        let backbone = &self.anet.backbone;
+        let mut reports = Vec::with_capacity(n + 1);
+        let mut prefix_ms = 0.0;
+        let mut prefix_params = 0u64;
+        let mut layer = 0usize;
+        for (i, e) in self.anet.exits.iter().enumerate() {
+            prefix_ms += seg_ms[i];
+            while layer <= e.after {
+                prefix_params += backbone.layers[layer].params();
+                layer += 1;
+            }
+            reports.push(ExitLatencyReport {
+                exit: i,
+                attach: backbone.layers[e.after].name.clone(),
+                params: prefix_params + self.heads[i].0.total_params(),
+                segment_ms: seg_ms[i],
+                head_ms: head_ms[i],
+                cumulative_ms: prefix_ms + head_ms[i],
+            });
+        }
+        reports.push(ExitLatencyReport {
+            exit: n,
+            attach: "full-depth".to_string(),
+            params: backbone.total_params(),
+            segment_ms: seg_ms[n],
+            head_ms: 0.0,
+            cumulative_ms: prefix_ms + seg_ms[n],
+        });
+        reports
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::device::KRYO_485;
+    use crate::compiler::uniform_sparsity;
+    use crate::graph::anytime::anytime_mobilenet_v2;
+    use crate::pruning::PruneScheme;
+    use crate::search::oracle::AnalyticalOracle;
+
+    fn plan2() -> (AnytimeNetwork, AnytimePlan) {
+        let anet = anytime_mobilenet_v2(2).unwrap();
+        let sp = uniform_sparsity(&anet.backbone, PruneScheme::BlockPunched, 3.0);
+        let plan = AnytimePlan::compile(&anet, &sp, &KRYO_485, Framework::Ours).unwrap();
+        (anet, plan)
+    }
+
+    #[test]
+    fn sliced_segments_tile_the_twin_plan_bit_for_bit() {
+        let (anet, aplan) = plan2();
+        let sp = uniform_sparsity(&anet.backbone, PruneScheme::BlockPunched, 3.0);
+        let full = codegen::compile(&anet.backbone, &sp, &KRYO_485, Framework::Ours);
+        // concatenating the sliced groups (ids re-keyed back) reproduces the
+        // twin plan's group list exactly — same order, same quantities
+        let mut rebuilt: Vec<FusedGroup> = Vec::new();
+        for ((_, seg), &(start, _)) in aplan.segments().iter().zip(&anet.segment_ranges()) {
+            for g in &seg.groups {
+                rebuilt.push(FusedGroup {
+                    layer_ids: g.layer_ids.iter().map(|&id| id + start).collect(),
+                    ..g.clone()
+                });
+            }
+        }
+        assert_eq!(rebuilt.len(), full.groups.len());
+        for (a, b) in rebuilt.iter().zip(&full.groups) {
+            assert_eq!(a.layer_ids, b.layer_ids);
+            assert_eq!(a.algo, b.algo);
+            assert_eq!(a.macs.to_bits(), b.macs.to_bits());
+            assert_eq!(a.eff_macs.to_bits(), b.eff_macs.to_bits());
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+            assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
+        }
+    }
+
+    #[test]
+    fn straddling_slices_are_typed_errors() {
+        let anet = anytime_mobilenet_v2(1).unwrap();
+        let full = codegen::compile(
+            &anet.backbone,
+            &SparsityMap::new(),
+            &KRYO_485,
+            Framework::Ours,
+        );
+        // find a multi-layer fused group and cut through the middle of it
+        let fat = full.groups.iter().find(|g| g.layer_ids.len() >= 2).expect("fusion happened");
+        let mid = fat.layer_ids[0];
+        let err = slice_plan(&full, 0, mid, "bad".to_string());
+        assert!(matches!(err, Err(NpasError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn exit_reports_cover_all_operating_points_ascending() {
+        let (anet, aplan) = plan2();
+        let reports = aplan.exit_reports(100);
+        assert_eq!(reports.len(), anet.num_exits() + 1);
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.exit, i);
+            assert!(r.segment_ms > 0.0 && r.cumulative_ms > 0.0);
+        }
+        // deeper operating points cost more and hold more parameters
+        for w in reports.windows(2) {
+            assert!(w[1].cumulative_ms > w[0].cumulative_ms);
+            assert!(w[1].params > w[0].params);
+        }
+        assert_eq!(reports.last().unwrap().attach, "full-depth");
+        assert_eq!(reports.last().unwrap().head_ms, 0.0);
+        assert_eq!(reports.last().unwrap().params, anet.backbone.total_params());
+    }
+
+    #[test]
+    fn oracle_seam_reproduces_the_measured_table() {
+        let (_, aplan) = plan2();
+        let direct = aplan.exit_reports(100);
+        let via_oracle = aplan.exit_reports_with(&AnalyticalOracle);
+        for (a, b) in direct.iter().zip(&via_oracle) {
+            assert_eq!(a.cumulative_ms.to_bits(), b.cumulative_ms.to_bits());
+            assert_eq!(a.params, b.params);
+        }
+    }
+}

@@ -672,6 +672,29 @@ impl PreparedKernels {
     pub fn precision(&self) -> Precision {
         self.precision
     }
+
+    /// Re-key this binding onto a backbone slice: prepared state for layers
+    /// `start..=end`, with ids shifted down by `start` to match a segment
+    /// network cut from the same backbone (`npas::anytime`). The packed
+    /// panels / block-CSR / Winograd / int8 values are **clones of the
+    /// originals**, so a sliced segment executes through bit-identical
+    /// kernel state to the full-depth binding it came from.
+    pub fn slice_rekeyed(&self, start: usize, end: usize) -> PreparedKernels {
+        fn slice<T: Clone>(
+            m: &BTreeMap<usize, T>,
+            start: usize,
+            end: usize,
+        ) -> BTreeMap<usize, T> {
+            m.range(start..=end).map(|(&id, v)| (id - start, v.clone())).collect()
+        }
+        PreparedKernels {
+            packed: slice(&self.packed, start, end),
+            panels: slice(&self.panels, start, end),
+            wino: slice(&self.wino, start, end),
+            qgemm: slice(&self.qgemm, start, end),
+            precision: self.precision,
+        }
+    }
 }
 
 /// Counter snapshot of an [`ExecScratch`] arena.

@@ -1,0 +1,372 @@
+//! Early-exit topology on top of the chain IR: an [`AnytimeNetwork`] is a
+//! backbone [`Network`] plus [`ExitHead`]s (GAP + FC classifier branches)
+//! attached after selected backbone layers.
+//!
+//! The branched graph never reaches the compiler as one DAG. Instead, the
+//! attach points are restricted to **fusion-safe cut points**
+//! ([`valid_exit_points`]), so `npas::anytime` can slice the backbone's
+//! *compiled* plan into per-segment sub-plans whose back-to-back execution
+//! is bit-identical to the exit-free twin — the property the anytime parity
+//! wall pins. A cut after layer `L` is fusion-safe when:
+//!
+//! 1. `L` is not the last layer and its **only** consumer is `L + 1`
+//!    (no residual edge may cross the cut — an `Add` reaching back across
+//!    it would be unrepresentable in the downstream segment);
+//! 2. no later layer reads any layer at or before `L` (same reason, for
+//!    longer skips);
+//! 3. `L + 1` is a compute anchor (`Conv2d` / `Linear` / `Pool`): anchors
+//!    start a new fusion group under **every** [`FusionLevel`], so `L`
+//!    always ends its group and the compiled plan's group list can be
+//!    sliced at the cut without splitting a fused group.
+//!
+//! [`FusionLevel`]: crate::compiler::fusion::FusionLevel
+
+use crate::error::{NpasError, Result};
+
+use super::builder::NetworkBuilder;
+use super::layer::{LayerId, LayerKind};
+use super::network::Network;
+
+/// One early-exit classifier branch: global-average-pool the activation of
+/// backbone layer `after`, then a single FC to `classes` logits. Heads are
+/// ordinary chain [`Network`]s (see [`AnytimeNetwork::head_network`]), so
+/// they compile, prepare and execute through the existing kernel stack —
+/// including the int8 / simd tiers — with zero new kernel code.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExitHead {
+    /// Head name (defaults to `{backbone}::exit{i}`).
+    pub name: String,
+    /// Backbone layer id whose output feeds this head; must be one of
+    /// [`valid_exit_points`] for the backbone.
+    pub after: LayerId,
+    /// Classifier width (logit count); normally the backbone's own output
+    /// width so every exit answers in the same label space.
+    pub classes: usize,
+}
+
+/// A backbone network annotated with early-exit heads, attach points
+/// strictly ascending. See the module docs for the validity rules.
+#[derive(Debug, Clone)]
+pub struct AnytimeNetwork {
+    pub backbone: Network,
+    pub exits: Vec<ExitHead>,
+}
+
+/// Backbone layer ids after which an exit head may be attached — the
+/// fusion-safe cut points (module docs, rules 1–3).
+pub fn valid_exit_points(net: &Network) -> Vec<LayerId> {
+    let n = net.layers.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    let consumers = net.consumers();
+    (0..n - 1)
+        .filter(|&cut| {
+            // rule 1: the cut layer feeds exactly the next layer
+            if consumers[cut].as_slice() != [cut + 1] {
+                return false;
+            }
+            // rule 3: the next layer is a compute anchor, so the cut layer
+            // ends its fusion group under every fusion level
+            if !matches!(
+                net.layers[cut + 1].kind,
+                LayerKind::Conv2d { .. } | LayerKind::Linear { .. } | LayerKind::Pool { .. }
+            ) {
+                return false;
+            }
+            // rule 2: no skip edge crosses the cut (the cut→cut+1 edge is
+            // the single allowed crossing)
+            net.layers[cut + 1..].iter().all(|l| {
+                l.inputs.iter().all(|&src| src > cut || (l.id == cut + 1 && src == cut))
+            })
+        })
+        .collect()
+}
+
+impl AnytimeNetwork {
+    /// Annotate `backbone` with `fractions.len()` exit heads, each attached
+    /// at the valid cut point whose cumulative-MACs share is nearest the
+    /// requested fraction (e.g. `[1.0/3.0, 2.0/3.0]` for a 2-exit net).
+    /// Head width is the backbone's own output width. Errors when the
+    /// backbone has no valid cut points, when two fractions collapse onto
+    /// the same point, or when a fraction is outside `(0, 1)`.
+    pub fn with_exit_fractions(backbone: Network, fractions: &[f64]) -> Result<AnytimeNetwork> {
+        if fractions.is_empty() {
+            return Err(NpasError::invalid("at least one exit fraction is required"));
+        }
+        for &f in fractions {
+            if !(f > 0.0 && f < 1.0) {
+                return Err(NpasError::invalid(format!(
+                    "exit fraction {f} outside (0, 1)"
+                )));
+            }
+        }
+        let points = valid_exit_points(&backbone);
+        if points.is_empty() {
+            return Err(NpasError::invalid(format!(
+                "network `{}` has no fusion-safe exit points",
+                backbone.name
+            )));
+        }
+        let total: u64 = backbone.total_macs().max(1);
+        let mut cum = Vec::with_capacity(backbone.layers.len());
+        let mut acc = 0u64;
+        for l in &backbone.layers {
+            acc += l.macs();
+            cum.push(acc as f64 / total as f64);
+        }
+        let classes = backbone.layers.last().expect("non-empty network").out_hwc().2;
+        let mut after: Vec<LayerId> = fractions
+            .iter()
+            .map(|&f| {
+                *points
+                    .iter()
+                    .min_by(|&&a, &&b| {
+                        (cum[a] - f)
+                            .abs()
+                            .partial_cmp(&(cum[b] - f).abs())
+                            .expect("fractions are finite")
+                    })
+                    .expect("points is non-empty")
+            })
+            .collect();
+        after.sort_unstable();
+        after.dedup();
+        if after.len() != fractions.len() {
+            return Err(NpasError::invalid(format!(
+                "{} exit fractions collapse onto {} distinct cut points of `{}` — \
+                 spread the fractions or request fewer exits",
+                fractions.len(),
+                after.len(),
+                backbone.name
+            )));
+        }
+        let name = backbone.name.clone();
+        let exits = after
+            .into_iter()
+            .enumerate()
+            .map(|(i, a)| ExitHead { name: format!("{name}::exit{i}"), after: a, classes })
+            .collect();
+        let anet = AnytimeNetwork { backbone, exits };
+        anet.validate().map(|()| anet)
+    }
+
+    /// Structural validation: backbone validity, strictly ascending attach
+    /// points, every attach point fusion-safe, heads non-degenerate.
+    pub fn validate(&self) -> Result<()> {
+        self.backbone
+            .validate()
+            .map_err(|e| NpasError::invalid(format!("backbone: {e}")))?;
+        if self.exits.is_empty() {
+            return Err(NpasError::invalid("an anytime network needs at least one exit"));
+        }
+        let points = valid_exit_points(&self.backbone);
+        let mut prev: Option<LayerId> = None;
+        for e in &self.exits {
+            if e.classes < 1 {
+                return Err(NpasError::invalid(format!(
+                    "exit `{}` has zero classes",
+                    e.name
+                )));
+            }
+            if let Some(p) = prev {
+                if e.after <= p {
+                    return Err(NpasError::invalid(format!(
+                        "exit attach points must be strictly ascending \
+                         (`{}` after layer {} follows layer {})",
+                        e.name, e.after, p
+                    )));
+                }
+            }
+            if !points.contains(&e.after) {
+                return Err(NpasError::invalid(format!(
+                    "exit `{}` attaches after layer {} of `{}`, which is not a \
+                     fusion-safe cut point",
+                    e.name, e.after, self.backbone.name
+                )));
+            }
+            prev = Some(e.after);
+        }
+        Ok(())
+    }
+
+    pub fn num_exits(&self) -> usize {
+        self.exits.len()
+    }
+
+    /// Segment boundaries as inclusive backbone-layer ranges: one
+    /// `(start, end)` per segment, `num_exits() + 1` segments, covering
+    /// every backbone layer exactly once. Segment `i < num_exits()` ends at
+    /// exit `i`'s attach layer; the last segment ends at the backbone tail.
+    pub fn segment_ranges(&self) -> Vec<(LayerId, LayerId)> {
+        let mut ranges = Vec::with_capacity(self.exits.len() + 1);
+        let mut start = 0;
+        for e in &self.exits {
+            ranges.push((start, e.after));
+            start = e.after + 1;
+        }
+        ranges.push((start, self.backbone.layers.len() - 1));
+        ranges
+    }
+
+    /// Exit `i`'s head as a standalone chain network: GAP (skipped when
+    /// the attach activation is already pooled) + FC. Shares no layers with
+    /// the backbone; weights/kernels come from the ordinary compile path.
+    pub fn head_network(&self, i: usize) -> Network {
+        let e = &self.exits[i];
+        let attach_hwc = self.backbone.layers[e.after].out_hwc();
+        let mut b = NetworkBuilder::new(e.name.clone(), attach_hwc);
+        if (attach_hwc.0, attach_hwc.1) != (1, 1) {
+            b.global_avg_pool();
+        }
+        b.linear(e.classes);
+        b.build()
+    }
+
+    /// The exit-free twin: the backbone itself. Full-depth anytime
+    /// execution must be bit-identical to running this network directly.
+    pub fn twin(&self) -> &Network {
+        &self.backbone
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zoo constructors
+// ---------------------------------------------------------------------------
+
+/// Evenly spaced exit fractions for `n` exits: `i/(n+1)` for `i` in `1..=n`.
+fn even_fractions(n: usize) -> Vec<f64> {
+    (1..=n).map(|i| i as f64 / (n + 1) as f64).collect()
+}
+
+/// MobileNet-V2 with `n_exits` (1..=3) evenly spaced early-exit heads.
+pub fn anytime_mobilenet_v2(n_exits: usize) -> Result<AnytimeNetwork> {
+    AnytimeNetwork::with_exit_fractions(super::zoo::mobilenet_v2(), &even_fractions(n_exits))
+}
+
+/// MobileNet-V3 with `n_exits` (1..=3) evenly spaced early-exit heads.
+pub fn anytime_mobilenet_v3(n_exits: usize) -> Result<AnytimeNetwork> {
+    AnytimeNetwork::with_exit_fractions(super::zoo::mobilenet_v3(), &even_fractions(n_exits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::graph::ActKind;
+
+    /// conv → act → conv → gap → fc: cuts are valid after the act (its
+    /// consumer is a conv anchor) and after the gap (fc anchor), nowhere
+    /// else.
+    fn chain() -> Network {
+        let mut b = NetworkBuilder::new("chain", (8, 8, 4));
+        b.conv2d(3, 8, 1);
+        b.act(ActKind::Relu);
+        b.conv2d(3, 8, 1);
+        b.global_avg_pool();
+        b.linear(10);
+        b.build()
+    }
+
+    #[test]
+    fn valid_points_require_anchor_successor_and_single_consumer() {
+        let net = chain();
+        // layer 0's consumer is the act (not an anchor); layer 2's consumer
+        // is the gap (fusible follower, not an anchor); 1 and 3 qualify
+        assert_eq!(valid_exit_points(&net), vec![1, 3]);
+    }
+
+    #[test]
+    fn residual_edges_block_cuts_under_the_skip() {
+        let mut b = NetworkBuilder::new("res", (8, 8, 8));
+        b.conv2d(1, 8, 1);
+        let skip = b.head().unwrap();
+        b.act(ActKind::Relu);
+        b.conv2d(3, 8, 1);
+        b.act(ActKind::Relu);
+        b.add_from(skip);
+        b.conv2d(1, 8, 1);
+        b.global_avg_pool();
+        b.linear(4);
+        let net = b.build();
+        let points = valid_exit_points(&net);
+        // layers 0..4 sit under the skip edge (0 → add at 4) or feed a
+        // non-anchor; only the add (4, feeding conv 5) and the gap (6,
+        // feeding fc 7) are safe
+        assert_eq!(points, vec![4, 6]);
+    }
+
+    #[test]
+    fn zoo_backbones_expose_fusion_safe_exit_points() {
+        for net in [zoo::mobilenet_v2(), zoo::mobilenet_v3()] {
+            let points = valid_exit_points(&net);
+            assert!(
+                points.len() >= 3,
+                "`{}` has only {} fusion-safe cut points",
+                net.name,
+                points.len()
+            );
+            let consumers = net.consumers();
+            for &p in &points {
+                assert_eq!(consumers[p].as_slice(), [p + 1], "cut {p} of {}", net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fraction_placement_builds_valid_ascending_exits() {
+        for n in 1..=3usize {
+            let anet = anytime_mobilenet_v2(n).unwrap();
+            assert_eq!(anet.num_exits(), n);
+            assert!(anet.validate().is_ok());
+            let ranges = anet.segment_ranges();
+            assert_eq!(ranges.len(), n + 1);
+            // ranges tile the backbone exactly
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[n].1, anet.backbone.layers.len() - 1);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1 + 1, w[1].0);
+            }
+            // every head answers in the backbone's label space
+            for e in &anet.exits {
+                assert_eq!(e.classes, 1000);
+            }
+        }
+    }
+
+    #[test]
+    fn head_networks_are_gap_plus_fc_in_the_backbone_label_space() {
+        let anet = anytime_mobilenet_v3(2).unwrap();
+        for i in 0..anet.num_exits() {
+            let head = anet.head_network(i);
+            assert!(head.validate().is_ok());
+            assert_eq!(head.layers.len(), 2, "GAP + FC");
+            assert!(matches!(head.layers[0].kind, LayerKind::GlobalAvgPool));
+            assert!(matches!(head.layers[1].kind, LayerKind::Linear { dout: 1000, .. }));
+            assert_eq!(head.input_hwc, anet.backbone.layers[anet.exits[i].after].out_hwc());
+        }
+    }
+
+    #[test]
+    fn invalid_annotations_are_typed_errors() {
+        let net = chain();
+        // attach at a non-cut point
+        let bad = AnytimeNetwork {
+            backbone: net.clone(),
+            exits: vec![ExitHead { name: "e".into(), after: 0, classes: 10 }],
+        };
+        assert!(matches!(bad.validate(), Err(NpasError::InvalidConfig(_))));
+        // non-ascending attach points
+        let twice = AnytimeNetwork {
+            backbone: net.clone(),
+            exits: vec![
+                ExitHead { name: "a".into(), after: 3, classes: 10 },
+                ExitHead { name: "b".into(), after: 1, classes: 10 },
+            ],
+        };
+        assert!(matches!(twice.validate(), Err(NpasError::InvalidConfig(_))));
+        // out-of-range fraction, and more exits than distinct cut points
+        assert!(AnytimeNetwork::with_exit_fractions(net.clone(), &[1.5]).is_err());
+        assert!(AnytimeNetwork::with_exit_fractions(net, &[0.4, 0.41, 0.42]).is_err());
+    }
+}

@@ -6,11 +6,13 @@
 //! mobile inference compiler sees *after* import (BN folded, constants
 //! propagated) — that is the representation the paper's compiler operates on.
 
+pub mod anytime;
 pub mod builder;
 pub mod layer;
 pub mod network;
 pub mod zoo;
 
+pub use anytime::{valid_exit_points, AnytimeNetwork, ExitHead};
 pub use builder::NetworkBuilder;
 pub use layer::{ActKind, Layer, LayerId, LayerKind, PoolKind};
 pub use network::Network;

@@ -17,12 +17,17 @@
 //! * [`serve`] — the HTTP/JSON serving front door: model registry with
 //!   LRU/hot-swap hosting, admission control + load shedding, and the
 //!   std-only ingress server.
+//! * [`anytime`] — early-exit (anytime) inference: exit heads on the
+//!   graph, per-segment compiled sub-plans sliced bit-for-bit from the
+//!   full plan, and the [`AnytimePolicy`] runtime that trades accuracy
+//!   for latency under a deadline or confidence SLO.
 //! * [`train`] — SynthVision data + training/eval driver.
 //! * [`search`] — Q-learning + Bayesian-optimization NPAS pipeline.
 //! * [`coordinator`] — parallel candidate-evaluation scheduling.
 //! * [`error`] — the crate-wide [`NpasError`] taxonomy every fallible
 //!   entry point reports.
 
+pub mod anytime;
 pub mod graph;
 pub mod pruning;
 pub mod compiler;
@@ -39,6 +44,7 @@ pub mod simd;
 pub mod tensor;
 pub mod util;
 
+pub use anytime::{AnytimeModel, AnytimeOutcome, AnytimePlan, AnytimePolicy, ExitLatencyReport};
 pub use error::{NpasError, Result};
 pub use model::{
     CompiledModel, CompiledModelBuilder, SchemeSpec, WallClock, WallClockReport, WeightSpec,

@@ -73,6 +73,8 @@ USAGE: npas <subcommand> [--config file.json] [--flag value ...]
   train    dense supernet training: --steps 120
   measure  --model mbv1|mbv2|mbv3|effb0|r50|r50deep --device cpu|gpu
            --framework ours|mnn|tflite|ptm [--scheme ... --rate 5.0]
+           [--exits 2 --per-exit]  also print the anytime (early-exit)
+           operating-point table: predicted latency + params per exit
   run      --bundle model.json [--batch 4 --seed 7]
            (artifact written by CompiledModel::save / `measure --save`)
   serve    --models name=bundle.json[,name2=other.json ...]
@@ -83,6 +85,8 @@ USAGE: npas <subcommand> [--config file.json] [--flag value ...]
                                   required for a non-loopback --addr
            routes: GET /healthz | GET /v1/models
                    POST /v1/models/{{name}}/infer   {{\"dims\":[h,w,c],\"data\":[..]}}
+                     (anytime models also accept \"deadline_ms\" or
+                      \"min_confidence\"; replies report the exit taken)
                    GET /v1/models/{{name}}/stats | POST /v1/models/{{name}}/load
                    DELETE /v1/models/{{name}}
            shedding: full model queue -> 503, greedy client -> 429"
@@ -259,6 +263,28 @@ fn cmd_measure(args: &Args) -> Result<()> {
         "{} on {} via {}: {:.2} ms ± {:.2} (compute {:.2} / memory {:.2} / overhead {:.2}; {} fused groups; {} runs)",
         net.name, r.device, fw.name(), r.mean_ms, r.std_ms, r.compute_ms, r.memory_ms, r.overhead_ms, r.num_groups, r.runs
     );
+    // --per-exit: slice the same compiled plan at evenly spaced early-exit
+    // points and print one predicted operating point per exit (note: a bare
+    // `--per-exit` flag must come last or use `--per-exit=true`, since a
+    // following non-flag token would bind to it)
+    if args.bool("per-exit") {
+        let n_exits = args.usize_or("exits", 2);
+        let fractions: Vec<f64> =
+            (1..=n_exits).map(|i| i as f64 / (n_exits + 1) as f64).collect();
+        let anet = npas::graph::AnytimeNetwork::with_exit_fractions(net.clone(), &fractions)?;
+        let plan = npas::anytime::AnytimePlan::compile(&anet, &sparsity, device, fw)?;
+        println!("per-exit operating points ({n_exits} early exits + full depth):");
+        println!(
+            "  {:>4}  {:<26} {:>12} {:>12} {:>9} {:>14}",
+            "exit", "attach", "params", "segment ms", "head ms", "cumulative ms"
+        );
+        for row in plan.exit_reports(100) {
+            println!(
+                "  {:>4}  {:<26} {:>12} {:>12.3} {:>9.3} {:>14.3}",
+                row.exit, row.attach, row.params, row.segment_ms, row.head_ms, row.cumulative_ms
+            );
+        }
+    }
     if let Some(path) = args.get("save") {
         let model = CompiledModel::build(net)
             .scheme(sparsity)
@@ -322,6 +348,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("serving on http://{}  (ctrl-c to stop)", server.addr());
     println!("  GET  /healthz | GET /v1/models | GET /v1/models/{{name}}/stats");
     println!("  POST /v1/models/{{name}}/infer   body {{\"dims\":[h,w,c],\"data\":[..]}}");
+    println!("       anytime models: optional \"deadline_ms\" | \"min_confidence\"");
     println!("  POST /v1/models/{{name}}/load    body {{\"path\":\"bundle.json\"}}");
     println!("  DELETE /v1/models/{{name}}");
     server.run();

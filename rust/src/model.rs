@@ -607,6 +607,26 @@ impl CompiledModel {
     pub fn framework(&self) -> Framework {
         self.framework
     }
+
+    // `npas::anytime` slices this model's compiled artifacts (plan, kernels,
+    // arena) instead of recompiling, so full-depth anytime execution is
+    // bit-identical to this model by construction.
+
+    pub(crate) fn plan_arc(&self) -> &Arc<ExecutionPlan> {
+        &self.plan
+    }
+
+    pub(crate) fn prepared_arc(&self) -> &Arc<PreparedKernels> {
+        &self.prepared
+    }
+
+    pub(crate) fn scratch_arc(&self) -> &Arc<ExecScratch> {
+        &self.scratch
+    }
+
+    pub(crate) fn intra_workers(&self) -> usize {
+        self.intra_workers
+    }
 }
 
 /// The stable token `save` records for a device: the [`DeviceSpec::by_name`]

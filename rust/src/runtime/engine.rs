@@ -37,6 +37,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::anytime::{AnytimeModel, AnytimeOutcome, AnytimePolicy};
 use crate::compiler::{
     ExecError, ExecScratch, Executor, ExecutionPlan, PreparedKernels, WeightSet,
 };
@@ -89,6 +90,10 @@ pub enum EngineError {
     /// The serving thread disappeared without answering (should not
     /// happen — executor failures are typed, not panics).
     WorkerLost,
+    /// An [`AnytimePolicy`] was submitted to an engine serving a plain
+    /// model (stood up via `CompiledModel::serve`, not
+    /// `AnytimeModel::serve`) — there are no exit heads to pick between.
+    PolicyUnsupported,
 }
 
 impl std::fmt::Display for EngineError {
@@ -98,6 +103,9 @@ impl std::fmt::Display for EngineError {
             EngineError::ShuttingDown => write!(f, "engine is shutting down"),
             EngineError::QueueFull => write!(f, "submission queue is full"),
             EngineError::WorkerLost => write!(f, "worker thread lost"),
+            EngineError::PolicyUnsupported => {
+                write!(f, "engine serves no anytime model (no exit heads to select)")
+            }
         }
     }
 }
@@ -108,6 +116,20 @@ impl From<ExecError> for EngineError {
     fn from(e: ExecError) -> EngineError {
         EngineError::Exec(e)
     }
+}
+
+/// Per-operating-point serving counters of an anytime engine: how often
+/// each exit answered and its mean submit→response latency.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExitStat {
+    /// Operating point: `0..num_exits` are early exits, `num_exits` is
+    /// full depth.
+    pub exit: usize,
+    /// Policy requests answered at this exit.
+    pub taken: u64,
+    /// Mean submit→response wall latency of those requests (ms); 0 when
+    /// never taken.
+    pub mean_ms: f64,
 }
 
 /// Counter/percentile snapshot of a running engine.
@@ -127,6 +149,21 @@ pub struct EngineStats {
     pub p99_ms: f64,
     /// Completed requests per second since the engine started.
     pub throughput_rps: f64,
+    /// Per-exit counters, `num_exits + 1` rows (full depth last). Empty
+    /// for engines serving a plain model.
+    pub exits: Vec<ExitStat>,
+}
+
+/// Nearest-rank percentile (ceil convention) on an ascending-sorted slice:
+/// the smallest sample with at least a `p` fraction of the data at or
+/// below it. Empty input reports 0.
+pub(crate) fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = (p * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 struct Model {
@@ -136,6 +173,10 @@ struct Model {
     /// Shared with the `CompiledModel` that spawned this engine: packing /
     /// Winograd transforms are paid once per model, not per engine.
     prepared: Arc<PreparedKernels>,
+    /// Present when the engine was stood up via `AnytimeModel::serve`:
+    /// policy requests execute segment-by-segment through this model
+    /// (whose twin is exactly the plain binding above).
+    anytime: Option<Arc<AnytimeModel>>,
 }
 
 struct EngineShared {
@@ -145,13 +186,25 @@ struct EngineShared {
     batches: AtomicU64,
     batch_items: AtomicU64,
     latencies_ms: Mutex<Vec<f64>>,
+    /// Per-operating-point `(taken, total_ms)` accumulators; empty for
+    /// plain engines, `num_exits + 1` slots for anytime engines.
+    exit_lat: Mutex<Vec<(u64, f64)>>,
     started: Instant,
+}
+
+/// Where a request's answer goes: plain requests resolve to a tensor,
+/// policy requests to a full [`AnytimeOutcome`].
+enum Reply {
+    Plain(mpsc::Sender<Result<Tensor, ExecError>>),
+    Anytime(mpsc::Sender<Result<AnytimeOutcome, ExecError>>),
 }
 
 struct Request {
     input: Tensor,
+    /// `Some` iff `reply` is [`Reply::Anytime`].
+    policy: Option<AnytimePolicy>,
     enqueued: Instant,
-    tx: mpsc::Sender<Result<Tensor, ExecError>>,
+    reply: Reply,
 }
 
 /// An in-flight request handle; [`PendingResponse::wait`] blocks for the
@@ -164,6 +217,22 @@ impl PendingResponse {
     pub fn wait(self) -> Result<Tensor, EngineError> {
         match self.rx.recv() {
             Ok(Ok(t)) => Ok(t),
+            Ok(Err(e)) => Err(EngineError::Exec(e)),
+            Err(_) => Err(EngineError::WorkerLost),
+        }
+    }
+}
+
+/// An in-flight policy-request handle; [`PendingExit::wait`] blocks for
+/// the [`AnytimeOutcome`] (which exit answered, with what margin).
+pub struct PendingExit {
+    rx: Receiver<Result<AnytimeOutcome, ExecError>>,
+}
+
+impl PendingExit {
+    pub fn wait(self) -> Result<AnytimeOutcome, EngineError> {
+        match self.rx.recv() {
+            Ok(Ok(out)) => Ok(out),
             Ok(Err(e)) => Err(EngineError::Exec(e)),
             Err(_) => Err(EngineError::WorkerLost),
         }
@@ -191,19 +260,35 @@ impl InferenceEngine {
         prepared: Arc<PreparedKernels>,
         config: EngineConfig,
     ) -> InferenceEngine {
+        Self::from_parts_with(net, plan, weights, prepared, None, config)
+    }
+
+    /// [`InferenceEngine::from_parts`] with an optional anytime binding —
+    /// the `AnytimeModel::serve` path. The plain binding stays the batch
+    /// fast path; policy requests route through `anytime`.
+    pub(crate) fn from_parts_with(
+        net: Network,
+        plan: Arc<ExecutionPlan>,
+        weights: WeightSet,
+        prepared: Arc<PreparedKernels>,
+        anytime: Option<Arc<AnytimeModel>>,
+        config: EngineConfig,
+    ) -> InferenceEngine {
         // the façade validates the config with typed errors; these are
         // crate-internal invariants, not a second validation layer
         debug_assert!(config.workers >= 1, "engine needs at least one worker");
         debug_assert!(config.max_batch >= 1, "max_batch must be at least 1");
         debug_assert!(config.queue_cap >= 1, "queue_cap must be at least 1");
         debug_assert_eq!(plan.network, net.name, "plan was compiled for a different network");
+        let exit_slots = anytime.as_ref().map(|a| a.num_exits() + 1).unwrap_or(0);
         let shared = Arc::new(EngineShared {
-            model: Model { net, plan, weights, prepared },
+            model: Model { net, plan, weights, prepared, anytime },
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_items: AtomicU64::new(0),
             latencies_ms: Mutex::new(Vec::new()),
+            exit_lat: Mutex::new(vec![(0, 0.0); exit_slots]),
             started: Instant::now(),
         });
         let (tx, rx) = mpsc::sync_channel::<Request>(config.queue_cap);
@@ -228,8 +313,13 @@ impl InferenceEngine {
     pub fn submit(&self, input: Tensor) -> Result<PendingResponse, EngineError> {
         let tx = self.tx.as_ref().ok_or(EngineError::ShuttingDown)?;
         let (rtx, rrx) = mpsc::channel();
-        tx.send(Request { input, enqueued: Instant::now(), tx: rtx })
-            .map_err(|_| EngineError::ShuttingDown)?;
+        tx.send(Request {
+            input,
+            policy: None,
+            enqueued: Instant::now(),
+            reply: Reply::Plain(rtx),
+        })
+        .map_err(|_| EngineError::ShuttingDown)?;
         Ok(PendingResponse { rx: rrx })
     }
 
@@ -238,8 +328,63 @@ impl InferenceEngine {
     pub fn try_submit(&self, input: Tensor) -> Result<PendingResponse, EngineError> {
         let tx = self.tx.as_ref().ok_or(EngineError::ShuttingDown)?;
         let (rtx, rrx) = mpsc::channel();
-        match tx.try_send(Request { input, enqueued: Instant::now(), tx: rtx }) {
+        let req = Request {
+            input,
+            policy: None,
+            enqueued: Instant::now(),
+            reply: Reply::Plain(rtx),
+        };
+        match tx.try_send(req) {
             Ok(()) => Ok(PendingResponse { rx: rrx }),
+            Err(TrySendError::Full(_)) => Err(EngineError::QueueFull),
+            Err(TrySendError::Disconnected(_)) => Err(EngineError::ShuttingDown),
+        }
+    }
+
+    /// Enqueue one request to be answered under an [`AnytimePolicy`],
+    /// blocking while the queue is full. Errors with
+    /// [`EngineError::PolicyUnsupported`] on an engine serving a plain
+    /// model (no exit heads).
+    pub fn submit_policy(
+        &self,
+        input: Tensor,
+        policy: AnytimePolicy,
+    ) -> Result<PendingExit, EngineError> {
+        if self.shared.model.anytime.is_none() {
+            return Err(EngineError::PolicyUnsupported);
+        }
+        let tx = self.tx.as_ref().ok_or(EngineError::ShuttingDown)?;
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            input,
+            policy: Some(policy),
+            enqueued: Instant::now(),
+            reply: Reply::Anytime(rtx),
+        })
+        .map_err(|_| EngineError::ShuttingDown)?;
+        Ok(PendingExit { rx: rrx })
+    }
+
+    /// Non-blocking [`InferenceEngine::submit_policy`]: errors with
+    /// [`EngineError::QueueFull`] instead of waiting for queue space.
+    pub fn try_submit_policy(
+        &self,
+        input: Tensor,
+        policy: AnytimePolicy,
+    ) -> Result<PendingExit, EngineError> {
+        if self.shared.model.anytime.is_none() {
+            return Err(EngineError::PolicyUnsupported);
+        }
+        let tx = self.tx.as_ref().ok_or(EngineError::ShuttingDown)?;
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            input,
+            policy: Some(policy),
+            enqueued: Instant::now(),
+            reply: Reply::Anytime(rtx),
+        };
+        match tx.try_send(req) {
+            Ok(()) => Ok(PendingExit { rx: rrx }),
             Err(TrySendError::Full(_)) => Err(EngineError::QueueFull),
             Err(TrySendError::Disconnected(_)) => Err(EngineError::ShuttingDown),
         }
@@ -248,6 +393,15 @@ impl InferenceEngine {
     /// Synchronous single inference: submit + wait.
     pub fn run(&self, input: Tensor) -> Result<Tensor, EngineError> {
         self.submit(input)?.wait()
+    }
+
+    /// Synchronous policy inference: submit_policy + wait.
+    pub fn run_policy(
+        &self,
+        input: Tensor,
+        policy: AnytimePolicy,
+    ) -> Result<AnytimeOutcome, EngineError> {
+        self.submit_policy(input, policy)?.wait()
     }
 
     /// Submit every input, then wait for all responses (in input order).
@@ -292,13 +446,19 @@ impl InferenceEngine {
         let items = s.batch_items.load(Ordering::Relaxed);
         let mut lat = s.latencies_ms.lock().unwrap().clone();
         lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                0.0
-            } else {
-                lat[(((lat.len() - 1) as f64) * p).round() as usize]
-            }
-        };
+        let pct = |p: f64| nearest_rank(&lat, p);
+        let exits: Vec<ExitStat> = s
+            .exit_lat
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(exit, &(taken, total_ms))| ExitStat {
+                exit,
+                taken,
+                mean_ms: if taken == 0 { 0.0 } else { total_ms / taken as f64 },
+            })
+            .collect();
         let elapsed = s.started.elapsed().as_secs_f64();
         EngineStats {
             completed,
@@ -309,6 +469,7 @@ impl InferenceEngine {
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
             throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+            exits,
         }
     }
 
@@ -370,36 +531,107 @@ fn worker_loop(shared: &EngineShared, rx: &Mutex<Receiver<Request>>, cfg: &Engin
     }
 }
 
+/// Run one policy request through the engine's anytime binding: same
+/// per-request ingress checks as the batch path, then segment-by-segment
+/// execution. Policy requests are not micro-batched — each one may stop at
+/// a different depth.
+fn execute_policy(
+    shared: &EngineShared,
+    input: Tensor,
+    policy: AnytimePolicy,
+    tx: &mpsc::Sender<Result<AnytimeOutcome, ExecError>>,
+    enqueued: Instant,
+) {
+    let anytime = match &shared.model.anytime {
+        Some(a) => a,
+        // unreachable: submit_policy gates on the binding; dropping `tx`
+        // unanswered surfaces as WorkerLost, the should-not-happen error
+        None => {
+            shared.failed.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    let want = shared.model.net.input_hwc;
+    let d = input.dims();
+    if d != &[want.0, want.1, want.2][..] {
+        shared.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(Err(ExecError::InputShape { want, got: d.to_vec() }));
+        return;
+    }
+    if let Some(index) = input.data().iter().position(|v| !v.is_finite()) {
+        shared.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = tx.send(Err(ExecError::NonFiniteInput { index }));
+        return;
+    }
+    match anytime.run_policy(&input, policy) {
+        Ok(out) => {
+            let ms = enqueued.elapsed().as_secs_f64() * 1e3;
+            {
+                let mut lat = shared.latencies_ms.lock().unwrap();
+                if lat.len() < LATENCY_CAP {
+                    lat.push(ms);
+                }
+            }
+            {
+                let mut per_exit = shared.exit_lat.lock().unwrap();
+                if let Some(slot) = per_exit.get_mut(out.exit) {
+                    slot.0 += 1;
+                    slot.1 += ms;
+                }
+            }
+            shared.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Ok(out));
+        }
+        Err(e) => {
+            shared.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(e));
+        }
+    }
+}
+
 fn execute_batch(shared: &EngineShared, exec: &Executor<'_>, batch: Vec<Request>) {
     if batch.is_empty() {
         return;
     }
+    // policy requests run individually (each may stop at its own depth);
+    // the remaining plain requests micro-batch exactly as before
+    let mut plain = Vec::with_capacity(batch.len());
+    for req in batch {
+        match req.reply {
+            Reply::Anytime(tx) => {
+                let policy = req.policy.unwrap_or(AnytimePolicy::FullDepth);
+                execute_policy(shared, req.input, policy, &tx, req.enqueued);
+            }
+            Reply::Plain(tx) => plain.push((req.input, req.enqueued, tx)),
+        }
+    }
+    if plain.is_empty() {
+        return;
+    }
     shared.batches.fetch_add(1, Ordering::Relaxed);
-    shared.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    shared.batch_items.fetch_add(plain.len() as u64, Ordering::Relaxed);
 
     // validate shapes per request up front so one malformed request fails
     // alone instead of poisoning its batch mates
     let want = shared.model.net.input_hwc;
-    let mut inputs = Vec::with_capacity(batch.len());
-    let mut pending = Vec::with_capacity(batch.len());
-    for req in batch {
-        let d = req.input.dims();
+    let mut inputs = Vec::with_capacity(plain.len());
+    let mut pending = Vec::with_capacity(plain.len());
+    for (input, enqueued, tx) in plain {
+        let d = input.dims();
         if d != &[want.0, want.1, want.2][..] {
             shared.failed.fetch_add(1, Ordering::Relaxed);
-            let _ = req
-                .tx
-                .send(Err(ExecError::InputShape { want, got: d.to_vec() }));
+            let _ = tx.send(Err(ExecError::InputShape { want, got: d.to_vec() }));
             continue;
         }
         // a NaN/Inf input would propagate garbage through the shared batch
         // GEMM; reject it here so only the poisoned request fails
-        if let Some(index) = req.input.data().iter().position(|v| !v.is_finite()) {
+        if let Some(index) = input.data().iter().position(|v| !v.is_finite()) {
             shared.failed.fetch_add(1, Ordering::Relaxed);
-            let _ = req.tx.send(Err(ExecError::NonFiniteInput { index }));
+            let _ = tx.send(Err(ExecError::NonFiniteInput { index }));
             continue;
         }
-        inputs.push(req.input);
-        pending.push((req.tx, req.enqueued));
+        inputs.push(input);
+        pending.push((tx, enqueued));
     }
     if inputs.is_empty() {
         return;
@@ -554,6 +786,82 @@ mod tests {
             Err(other) => panic!("expected InvalidConfig, got {other}"),
             Ok(_) => panic!("zero-worker engine config must be rejected"),
         }
+    }
+
+    #[test]
+    fn nearest_rank_percentiles_are_pinned() {
+        // the standard nearest-rank (ceil) convention on a known vector:
+        // p-th percentile of 1..=100 is exactly p
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(nearest_rank(&samples, 0.50), 50.0);
+        assert_eq!(nearest_rank(&samples, 0.95), 95.0);
+        assert_eq!(nearest_rank(&samples, 0.99), 99.0);
+        assert_eq!(nearest_rank(&samples, 1.00), 100.0);
+        // small-sample convention: ceil(0.5 * 2) = rank 1
+        assert_eq!(nearest_rank(&[1.0, 2.0], 0.50), 1.0);
+        assert_eq!(nearest_rank(&[7.5], 0.99), 7.5);
+        assert_eq!(nearest_rank(&[], 0.50), 0.0);
+    }
+
+    fn anytime_engine() -> (Arc<AnytimeModel>, InferenceEngine) {
+        use crate::graph::{ActKind, AnytimeNetwork, NetworkBuilder};
+        let mut b = NetworkBuilder::new("any-served", (8, 8, 4));
+        b.conv2d(3, 8, 1);
+        b.act(ActKind::Relu);
+        b.conv2d(3, 8, 1);
+        b.global_avg_pool();
+        b.linear(6);
+        let anet = AnytimeNetwork::with_exit_fractions(b.build(), &[0.3]).unwrap();
+        let twin = CompiledModel::build(anet.twin().clone())
+            .weights(31u64)
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap();
+        let model = Arc::new(crate::anytime::AnytimeModel::from_model(twin, &anet, 7).unwrap());
+        let engine = model.serve(small_cfg()).unwrap();
+        (model, engine)
+    }
+
+    #[test]
+    fn policy_requests_report_exits_and_count_per_exit() {
+        let (model, engine) = anytime_engine();
+        let mut rng = XorShift64Star::new(40);
+        let x = Tensor::he_normal(vec![8, 8, 4], &mut rng);
+        let early = engine.run_policy(x.clone(), AnytimePolicy::Confidence(0.0)).unwrap();
+        assert_eq!((early.exit, early.early), (0, true));
+        let full = engine.run_policy(x.clone(), AnytimePolicy::FullDepth).unwrap();
+        assert_eq!(full.exit, model.num_exits());
+        // full depth over the engine is bit-identical to the twin, and the
+        // plain (micro-batched) path still serves the twin binding
+        assert_eq!(full.output, model.twin().run(&x).unwrap());
+        assert_eq!(engine.run(x.clone()).unwrap(), model.twin().run(&x).unwrap());
+        // malformed policy requests fail typed, alone
+        assert!(matches!(
+            engine.run_policy(Tensor::zeros(vec![2, 2, 2]), AnytimePolicy::FullDepth),
+            Err(EngineError::Exec(ExecError::InputShape { .. }))
+        ));
+        let stats = engine.stats();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.exits.len(), model.num_exits() + 1);
+        assert_eq!(stats.exits[0].taken, 1);
+        assert_eq!(stats.exits[model.num_exits()].taken, 1);
+        assert!(stats.exits[0].mean_ms > 0.0);
+    }
+
+    #[test]
+    fn policy_on_plain_engine_is_policy_unsupported() {
+        let engine = sparse_model().serve(small_cfg()).unwrap();
+        let x = Tensor::zeros(vec![8, 8, 16]);
+        assert!(matches!(
+            engine.run_policy(x.clone(), AnytimePolicy::FullDepth),
+            Err(EngineError::PolicyUnsupported)
+        ));
+        assert!(matches!(
+            engine.try_submit_policy(x, AnytimePolicy::Deadline(1.0)),
+            Err(EngineError::PolicyUnsupported)
+        ));
+        assert!(engine.stats().exits.is_empty());
     }
 
     #[test]

@@ -33,7 +33,10 @@ use crate::error::{NpasError, Result};
 use crate::tensor::Tensor;
 
 pub use bundle::PlanBundle;
-pub use engine::{EngineConfig, EngineError, EngineStats, InferenceEngine, PendingResponse};
+pub use engine::{
+    EngineConfig, EngineError, EngineStats, ExitStat, InferenceEngine, PendingExit,
+    PendingResponse,
+};
 pub use manifest::{ArtifactDef, DType, Manifest, TensorDef};
 
 /// A named runtime input value.

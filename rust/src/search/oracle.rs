@@ -27,7 +27,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::compiler::calibrate::{Calibration, CalibrationConfig};
-use crate::compiler::{DeviceSpec, Framework};
+use crate::compiler::{measure_plan, DeviceSpec, ExecutionPlan, Framework};
 use crate::graph::zoo::CandidateBlock;
 use crate::model::{CompiledModel, WallClock};
 
@@ -43,6 +43,16 @@ pub trait LatencyOracle: Send + Sync + std::fmt::Debug {
     /// analytical model's millisecond scale (see [`MeasuredOracle`] for how
     /// wall-clock measurements are normalized into it).
     fn latency_ms(&self, ctx: &EvalContext, scheme: &NpasScheme, device: &DeviceSpec) -> f64;
+
+    /// Predicted latency of an already-compiled [`ExecutionPlan`] — the
+    /// seam `npas::anytime` scores per-segment and per-head sub-plans
+    /// through, so every exit gets its own predicted-ms number from the
+    /// same oracle that ranked the scheme. Default: the analytical 100-run
+    /// protocol (`measure_plan`); [`CalibratedOracle`] overrides it with
+    /// its fitted per-band model.
+    fn plan_latency_ms(&self, plan: &ExecutionPlan, device: &DeviceSpec) -> f64 {
+        measure_plan(plan, device, 100).mean_ms
+    }
 
     /// Stable identifier recorded in reports, metrics labels and the event
     /// log ("analytical" / "measured" / "calibrated").
@@ -268,6 +278,13 @@ impl LatencyOracle for CalibratedOracle {
         cal.predict_plan_ms(&plan, device)
     }
 
+    fn plan_latency_ms(&self, plan: &ExecutionPlan, device: &DeviceSpec) -> f64 {
+        match self.calibration(device) {
+            Some(cal) => cal.predict_plan_ms(plan, device),
+            None => measure_plan(plan, device, 100).mean_ms,
+        }
+    }
+
     fn name(&self) -> &'static str {
         "calibrated"
     }
@@ -352,6 +369,20 @@ mod tests {
             assert_eq!(via_oracle, measure_scheme(&scheme, device));
             assert_eq!(via_oracle, measure_scheme_with(&ctx, &scheme, device));
         }
+    }
+
+    #[test]
+    fn plan_latency_seam_defaults_to_measure_plan() {
+        let net = crate::graph::zoo::mobilenet_v2();
+        let plan = crate::compiler::codegen::compile(
+            &net,
+            &crate::compiler::SparsityMap::new(),
+            &KRYO_485,
+            Framework::Ours,
+        );
+        let via = AnalyticalOracle.plan_latency_ms(&plan, &KRYO_485);
+        assert_eq!(via, measure_plan(&plan, &KRYO_485, 100).mean_ms);
+        assert!(via > 0.0);
     }
 
     #[test]

@@ -132,6 +132,30 @@ impl HttpClient {
         let body = infer_request(input, Some(client_id));
         self.post(&format!("/v1/models/{model}/infer"), &body)
     }
+
+    /// POST `input` with an anytime SLO: set exactly one of `deadline_ms`
+    /// or `min_confidence` (`None`/`None` is a plain infer; the server
+    /// rejects both-set with `400`, which this helper forwards verbatim so
+    /// tests can exercise the rejection path).
+    pub fn infer_with_slo(
+        &mut self,
+        model: &str,
+        client_id: &str,
+        input: &Tensor,
+        deadline_ms: Option<f64>,
+        min_confidence: Option<f32>,
+    ) -> Result<JsonResponse> {
+        let mut body = infer_request(input, Some(client_id));
+        if let Json::Obj(map) = &mut body {
+            if let Some(d) = deadline_ms {
+                map.insert("deadline_ms".to_string(), Json::num(d));
+            }
+            if let Some(c) = min_confidence {
+                map.insert("min_confidence".to_string(), Json::num(f64::from(c)));
+            }
+        }
+        self.post(&format!("/v1/models/{model}/infer"), &body)
+    }
 }
 
 /// Build the infer request body the server expects:

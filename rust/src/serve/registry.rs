@@ -25,10 +25,11 @@ use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::anytime::{AnytimeModel, AnytimePolicy};
 use crate::compiler::{PlanCache, PlanCacheStats};
 use crate::error::{NpasError, Result};
 use crate::model::CompiledModel;
-use crate::runtime::{EngineConfig, EngineError, EngineStats, PendingResponse};
+use crate::runtime::{EngineConfig, EngineError, EngineStats, PendingExit, PendingResponse};
 use crate::serve::admission::{Admission, AdmissionConfig, AdmissionStats, ShedReason};
 use crate::tensor::Tensor;
 
@@ -58,6 +59,9 @@ pub struct ModelEntry {
     name: String,
     version: u64,
     model: CompiledModel,
+    /// `Some` when the entry hosts an early-exit model: requests may carry
+    /// an [`AnytimePolicy`] and replies report which exit answered.
+    anytime: Option<Arc<AnytimeModel>>,
     engine: crate::runtime::InferenceEngine,
     admission: Admission,
     last_used: AtomicU64,
@@ -77,6 +81,11 @@ impl ModelEntry {
         &self.model
     }
 
+    /// The hosted [`AnytimeModel`], if this entry serves early exits.
+    pub fn anytime(&self) -> Option<&Arc<AnytimeModel>> {
+        self.anytime.as_ref()
+    }
+
     pub fn engine_stats(&self) -> EngineStats {
         self.engine.stats()
     }
@@ -92,8 +101,15 @@ impl ModelEntry {
 /// frees when the ticket resolves or drops).
 pub struct InferTicket {
     entry: Arc<ModelEntry>,
-    pending: PendingResponse,
+    pending: Pending,
     _permit: crate::serve::admission::Permit,
+}
+
+/// Which engine reply stream the ticket is waiting on: a plain full-model
+/// run, or a policy-routed anytime run that also reports the exit taken.
+enum Pending {
+    Plain(PendingResponse),
+    Anytime(PendingExit),
 }
 
 /// One answered request.
@@ -104,6 +120,12 @@ pub struct InferReply {
     /// The deployment version that computed the output (hot-swap parity
     /// tests key on this).
     pub version: u64,
+    /// Which exit answered (`Some` only for anytime entries; the deepest
+    /// index is the full-depth backbone output).
+    pub exit: Option<usize>,
+    /// Whether the reply came from an early exit head rather than the full
+    /// backbone (`Some` only for anytime entries).
+    pub early: Option<bool>,
 }
 
 impl InferTicket {
@@ -113,20 +135,28 @@ impl InferTicket {
     }
 
     pub fn wait(self) -> Result<InferReply> {
-        match self.pending.wait() {
-            Ok(output) => Ok(InferReply {
-                output,
-                model: self.entry.name.clone(),
-                version: self.entry.version,
-            }),
+        let (name, version) = (self.entry.name.clone(), self.entry.version);
+        let outcome = match self.pending {
+            Pending::Plain(p) => p.wait().map(|output| (output, None, None)),
+            Pending::Anytime(p) => {
+                p.wait().map(|o| (o.output, Some(o.exit), Some(o.early)))
+            }
+        };
+        match outcome {
+            Ok((output, exit, early)) => {
+                Ok(InferReply { output, model: name, version, exit, early })
+            }
             Err(EngineError::Exec(e)) => Err(NpasError::Exec(e)),
             // the engine is draining (mid-swap/unload shutdown) or a worker
             // vanished: retryable from the client's point of view — after a
             // swap the retry lands on the replacement engine
             Err(EngineError::ShuttingDown | EngineError::WorkerLost) => {
-                Err(NpasError::Overloaded { model: self.entry.name.clone(), pending: 0 })
+                Err(NpasError::Overloaded { model: name, pending: 0 })
             }
             Err(EngineError::QueueFull) => unreachable!("wait cannot report QueueFull"),
+            Err(EngineError::PolicyUnsupported) => {
+                unreachable!("policy routing is gated at submit time")
+            }
         }
     }
 }
@@ -199,10 +229,34 @@ impl ModelRegistry {
             name: name.to_string(),
             version: self.versions.fetch_add(1, Ordering::Relaxed) + 1,
             model,
+            anytime: None,
             engine,
             admission: Admission::new(self.cfg.admission),
             last_used: AtomicU64::new(self.tick.fetch_add(1, Ordering::Relaxed)),
         });
+        self.link(name, entry)
+    }
+
+    /// Host an early-exit [`AnytimeModel`] under `name`. The entry's engine
+    /// routes policy requests segment-by-segment through the exit heads;
+    /// plain requests run the full-depth twin unchanged. Hot-swap and LRU
+    /// eviction behave exactly as for [`ModelRegistry::insert_model`].
+    pub fn insert_anytime(&self, name: &str, model: AnytimeModel) -> Result<Arc<ModelEntry>> {
+        let model = Arc::new(model);
+        let engine = model.serve(self.cfg.engine.clone())?;
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            version: self.versions.fetch_add(1, Ordering::Relaxed) + 1,
+            model: model.twin().clone(),
+            anytime: Some(model),
+            engine,
+            admission: Admission::new(self.cfg.admission),
+            last_used: AtomicU64::new(self.tick.fetch_add(1, Ordering::Relaxed)),
+        });
+        self.link(name, entry)
+    }
+
+    fn link(&self, name: &str, entry: Arc<ModelEntry>) -> Result<Arc<ModelEntry>> {
         let mut m = self.models.write().unwrap();
         if m.insert(name.to_string(), entry.clone()).is_some() {
             self.swaps.fetch_add(1, Ordering::Relaxed);
@@ -256,7 +310,29 @@ impl ModelRegistry {
     /// queue) is a fast typed error; an admitted ticket resolves via
     /// [`InferTicket::wait`].
     pub fn submit(&self, name: &str, client: &str, input: Tensor) -> Result<InferTicket> {
+        self.submit_with_policy(name, client, input, None)
+    }
+
+    /// Admit + submit one request with an optional [`AnytimePolicy`].
+    ///
+    /// On an anytime entry, `None` defaults to [`AnytimePolicy::FullDepth`]
+    /// so every served request exercises the segment composition and the
+    /// reply reports which exit answered. On a plain entry, any `Some`
+    /// policy is a typed [`NpasError::InvalidConfig`] (the HTTP front maps
+    /// it to 400): the model has no exit heads to select.
+    pub fn submit_with_policy(
+        &self,
+        name: &str,
+        client: &str,
+        input: Tensor,
+        policy: Option<AnytimePolicy>,
+    ) -> Result<InferTicket> {
         let entry = self.get(name)?;
+        if policy.is_some() && entry.anytime.is_none() {
+            return Err(NpasError::invalid(format!(
+                "model `{name}` has no exit heads: anytime policies are not supported"
+            )));
+        }
         let permit = entry.admission.admit(client).map_err(|r| match r {
             ShedReason::Overloaded { pending } => {
                 NpasError::Overloaded { model: name.to_string(), pending }
@@ -265,7 +341,7 @@ impl ModelRegistry {
                 NpasError::RateLimited { client, inflight }
             }
         })?;
-        let pending = entry.engine.try_submit(input).map_err(|e| match e {
+        let shed = |e: EngineError| match e {
             // the bounded engine queue is the second shed point
             EngineError::QueueFull | EngineError::ShuttingDown => NpasError::Overloaded {
                 model: name.to_string(),
@@ -275,13 +351,33 @@ impl ModelRegistry {
             EngineError::WorkerLost => {
                 NpasError::Overloaded { model: name.to_string(), pending: 0 }
             }
-        })?;
+            EngineError::PolicyUnsupported => NpasError::invalid(format!(
+                "model `{name}` has no exit heads: anytime policies are not supported"
+            )),
+        };
+        let pending = if entry.anytime.is_some() {
+            let policy = policy.unwrap_or(AnytimePolicy::FullDepth);
+            Pending::Anytime(entry.engine.try_submit_policy(input, policy).map_err(shed)?)
+        } else {
+            Pending::Plain(entry.engine.try_submit(input).map_err(shed)?)
+        };
         Ok(InferTicket { entry, pending, _permit: permit })
     }
 
     /// Blocking admit + submit + wait.
     pub fn infer(&self, name: &str, client: &str, input: Tensor) -> Result<InferReply> {
         self.submit(name, client, input)?.wait()
+    }
+
+    /// Blocking admit + submit + wait with an optional [`AnytimePolicy`].
+    pub fn infer_with_policy(
+        &self,
+        name: &str,
+        client: &str,
+        input: Tensor,
+        policy: Option<AnytimePolicy>,
+    ) -> Result<InferReply> {
+        self.submit_with_policy(name, client, input, policy)?.wait()
     }
 
     pub fn stats(&self) -> RegistryStats {
@@ -454,6 +550,66 @@ mod tests {
         assert_eq!((stats.plan_cache.hits, stats.plan_cache.misses), (1, 1));
         assert_eq!(stats.swaps, 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn anytime_model(seed: u64) -> (crate::graph::AnytimeNetwork, AnytimeModel) {
+        use crate::graph::{ActKind, AnytimeNetwork, NetworkBuilder};
+        let mut b = NetworkBuilder::new("reg-any", (8, 8, 4));
+        b.conv2d(3, 8, 1);
+        b.act(ActKind::Relu);
+        b.conv2d(3, 8, 1);
+        b.global_avg_pool();
+        b.linear(10);
+        let anet = AnytimeNetwork::with_exit_fractions(b.build(), &[0.3]).unwrap();
+        let twin = CompiledModel::build(anet.twin().clone())
+            .weights(seed)
+            .target(&KRYO_485, Framework::Ours)
+            .compile()
+            .unwrap();
+        let model = AnytimeModel::from_model(twin, &anet, 17).unwrap();
+        (anet, model)
+    }
+
+    #[test]
+    fn anytime_entries_default_to_full_depth_and_report_the_exit() {
+        let reg = ModelRegistry::new(quick_cfg()).unwrap();
+        let (_, model) = anytime_model(11);
+        let twin = model.twin().clone();
+        let n = model.num_exits();
+        reg.insert_anytime("any", model).unwrap();
+        let mut rng = XorShift64Star::new(2);
+        let x = Tensor::he_normal(vec![8, 8, 4], &mut rng);
+        let want = twin.run(&x).unwrap();
+        // no policy on an anytime entry: full depth, exit still reported
+        let r = reg.infer("any", "t", x.clone()).unwrap();
+        assert_eq!(r.output, want, "served full depth must match the twin bit-for-bit");
+        assert_eq!((r.exit, r.early), (Some(n), Some(false)));
+        // a confidence floor of zero always answers at the first exit
+        let r = reg
+            .infer_with_policy("any", "t", x, Some(AnytimePolicy::Confidence(0.0)))
+            .unwrap();
+        assert_eq!((r.exit, r.early), (Some(0), Some(true)));
+        assert_eq!(r.output.dims(), &[1, 1, 10]);
+        let stats = reg.get("any").unwrap().engine_stats();
+        assert_eq!(stats.exits.len(), n + 1);
+        assert_eq!(stats.exits[0].taken, 1);
+        assert_eq!(stats.exits[n].taken, 1);
+    }
+
+    #[test]
+    fn policy_on_a_plain_entry_is_typed_invalid() {
+        let reg = ModelRegistry::new(quick_cfg()).unwrap();
+        reg.insert_model("plain", small_model(1)).unwrap();
+        let x = input(8);
+        match reg.infer_with_policy("plain", "t", x.clone(), Some(AnytimePolicy::FullDepth)) {
+            Err(NpasError::InvalidConfig(msg)) => {
+                assert!(msg.contains("no exit heads"), "got: {msg}")
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        // plain replies never carry exit metadata
+        let r = reg.infer("plain", "t", x).unwrap();
+        assert_eq!((r.exit, r.early), (None, None));
     }
 
     #[test]

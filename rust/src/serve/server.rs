@@ -29,6 +29,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::anytime::AnytimePolicy;
 use crate::coordinator::scheduler::ThreadPool;
 use crate::error::{NpasError, Result};
 use crate::runtime::EngineStats;
@@ -384,9 +385,20 @@ fn entry_stats_json(entry: &ModelEntry) -> Json {
         p95_ms,
         p99_ms,
         throughput_rps,
+        exits,
     } = entry.engine_stats();
     let AdmissionStats { pending, admitted, shed_overloaded, shed_rate_limited } =
         entry.admission_stats();
+    let exits: Vec<Json> = exits
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("exit", Json::num(e.exit as f64)),
+                ("taken", Json::num(e.taken as f64)),
+                ("mean_ms", Json::num(e.mean_ms)),
+            ])
+        })
+        .collect();
     Json::obj(vec![
         ("name", Json::str(entry.name())),
         ("version", Json::num(entry.version() as f64)),
@@ -398,6 +410,7 @@ fn entry_stats_json(entry: &ModelEntry) -> Json {
         ("p95_ms", Json::num(p95_ms)),
         ("p99_ms", Json::num(p99_ms)),
         ("throughput_rps", Json::num(throughput_rps)),
+        ("exits", Json::Arr(exits)),
         ("pending", Json::num(pending as f64)),
         ("admitted", Json::num(admitted as f64)),
         ("shed_overloaded", Json::num(shed_overloaded as f64)),
@@ -424,7 +437,38 @@ fn infer(registry: &ModelRegistry, name: &str, req: &HttpRequest) -> (u16, Json)
         .and_then(Json::as_str)
         .or_else(|| req.header("x-client"))
         .unwrap_or("anon");
-    match registry.infer(name, client, input) {
+    // optional anytime SLO: at most one of `deadline_ms` / `min_confidence`
+    let deadline = match json.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_f64() {
+            Some(d) => Some(d),
+            None => return (400, error_json("bad_request", "`deadline_ms` must be a number")),
+        },
+    };
+    let confidence = match json.get("min_confidence") {
+        None => None,
+        Some(v) => match v.as_f64() {
+            Some(c) => Some(c as f32),
+            None => {
+                return (400, error_json("bad_request", "`min_confidence` must be a number"))
+            }
+        },
+    };
+    let policy = match (deadline, confidence) {
+        (Some(_), Some(_)) => {
+            return (
+                400,
+                error_json(
+                    "bad_request",
+                    "`deadline_ms` and `min_confidence` are mutually exclusive",
+                ),
+            )
+        }
+        (Some(d), None) => Some(AnytimePolicy::Deadline(d)),
+        (None, Some(c)) => Some(AnytimePolicy::Confidence(c)),
+        (None, None) => None,
+    };
+    match registry.infer_with_policy(name, client, input, policy) {
         Ok(reply) => (200, reply_json(&reply)),
         Err(e) => error_response(&e),
     }
@@ -475,7 +519,7 @@ fn parse_tensor(json: &Json) -> std::result::Result<Tensor, (&'static str, Strin
 }
 
 fn reply_json(reply: &InferReply) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("model", Json::str(reply.model.as_str())),
         ("version", Json::num(reply.version as f64)),
         (
@@ -486,7 +530,13 @@ fn reply_json(reply: &InferReply) -> Json {
             "data",
             Json::Arr(reply.output.data().iter().map(|&v| Json::num(v as f64)).collect()),
         ),
-    ])
+    ];
+    // anytime entries report which operating point answered
+    if let (Some(exit), Some(early)) = (reply.exit, reply.early) {
+        fields.push(("exit", Json::num(exit as f64)));
+        fields.push(("early", Json::Bool(early)));
+    }
+    Json::obj(fields)
 }
 
 /// Canonicalize a requested artifact path and require it to live under

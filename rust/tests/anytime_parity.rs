@@ -1,0 +1,254 @@
+//! The anytime parity wall.
+//!
+//! * **Full depth is free**: running an [`AnytimeModel`] under
+//!   [`AnytimePolicy::FullDepth`] is bit-identical (`assert_eq!`, not
+//!   tolerance-gated) to the exit-free twin, across zoo backbones ×
+//!   pruning schemes × precision tiers — slicing the compiled plan into
+//!   segments must not change a single bit of the composition.
+//! * **Policy bounds bracket the exits**: `Confidence(0.0)` always
+//!   answers at the first exit, a threshold above 1 never exits early,
+//!   and a tighter deadline never selects a later exit than a looser one.
+//! * **The wire changes nothing**: over a real HTTP socket, an anytime
+//!   entry with no policy runs full depth bit-identically to direct
+//!   `CompiledModel::run` and reports the exit that answered; malformed
+//!   SLO fields and policies on plain models are typed `400`s.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use npas::anytime::{AnytimeModel, AnytimePolicy};
+use npas::compiler::device::KRYO_485;
+use npas::compiler::{Framework, Precision};
+use npas::graph::{zoo, ActKind, AnytimeNetwork, NetworkBuilder};
+use npas::pruning::PruneScheme;
+use npas::runtime::EngineConfig;
+use npas::serve::{
+    AdmissionConfig, HttpClient, HttpServer, ModelRegistry, RegistryConfig, ServerConfig,
+    ServerHandle,
+};
+use npas::tensor::{Tensor, XorShift64Star};
+use npas::CompiledModel;
+
+/// Anytime annotation of a zoo backbone, shrunk to a test-speed input.
+fn anet_for(net: npas::graph::Network, fractions: &[f64]) -> AnytimeNetwork {
+    AnytimeNetwork::with_exit_fractions(net.rescaled(32), fractions)
+        .expect("zoo backbones admit the test exit fractions")
+}
+
+fn compile_pair(
+    anet: &AnytimeNetwork,
+    scheme: Option<(PruneScheme, f32)>,
+    precision: Precision,
+    seed: u64,
+) -> (CompiledModel, AnytimeModel) {
+    let mut b = CompiledModel::build(anet.twin().clone())
+        .weights(seed)
+        .target(&KRYO_485, Framework::Ours)
+        .precision(precision);
+    if let Some(s) = scheme {
+        b = b.scheme(s);
+    }
+    let twin = b.compile().expect("twin compiles");
+    let model = AnytimeModel::from_model(twin.clone(), anet, seed ^ 0xA11).unwrap();
+    (twin, model)
+}
+
+fn input_for(anet: &AnytimeNetwork, seed: u64) -> Tensor {
+    let (h, w, c) = anet.twin().input_hwc;
+    let mut rng = XorShift64Star::new(seed);
+    Tensor::he_normal(vec![h, w, c], &mut rng)
+}
+
+/// (a) Full-depth anytime output is bit-identical to the exit-free twin
+/// across zoo backbones × schemes × precision tiers.
+#[test]
+fn full_depth_is_bit_identical_across_zoo_and_schemes() {
+    let configs: Vec<(&str, Option<(PruneScheme, f32)>, Precision)> = vec![
+        ("dense-fp32", None, Precision::Fp32),
+        ("block-fp32", Some((PruneScheme::block_punched_default(), 3.0)), Precision::Fp32),
+        ("block-int8", Some((PruneScheme::block_punched_default(), 3.0)), Precision::Int8),
+    ];
+    for (net_id, backbone) in
+        [("mbv2", zoo::mobilenet_v2()), ("mbv3", zoo::mobilenet_v3())]
+    {
+        let anet = anet_for(backbone, &[0.33, 0.66]);
+        for (cfg_id, scheme, precision) in &configs {
+            let (twin, model) = compile_pair(&anet, *scheme, *precision, 7);
+            let x = input_for(&anet, 91);
+            let direct = twin.run(&x).expect("twin runs");
+            let any = model.run_policy(&x, AnytimePolicy::FullDepth).expect("anytime runs");
+            assert_eq!(
+                any.output, direct,
+                "{net_id}/{cfg_id}: full-depth anytime output diverged from the twin"
+            );
+            assert_eq!(any.exit, model.num_exits());
+            assert!(!any.early);
+        }
+    }
+}
+
+/// (b) The confidence threshold's bounds bracket every exit: zero is
+/// always confident enough for the first head, above-one never is.
+#[test]
+fn confidence_bounds_bracket_the_exits() {
+    let anet = anet_for(zoo::mobilenet_v2(), &[0.5]);
+    let (twin, model) = compile_pair(&anet, None, Precision::Fp32, 3);
+    for seed in [11u64, 12, 13] {
+        let x = input_for(&anet, seed);
+        let first = model.run_policy(&x, AnytimePolicy::Confidence(0.0)).unwrap();
+        assert_eq!((first.exit, first.early), (0, true));
+        assert!(first.margin.is_some());
+        // a threshold no softmax margin can reach degrades to full depth,
+        // bit-identical to the twin
+        let never = model.run_policy(&x, AnytimePolicy::Confidence(1.5)).unwrap();
+        assert_eq!((never.exit, never.early), (model.num_exits(), false));
+        assert_eq!(never.output, twin.run(&x).unwrap());
+    }
+}
+
+/// (c) Deadline monotonicity: sweeping the deadline upward never moves the
+/// selected exit earlier — a tighter deadline never picks a later exit.
+#[test]
+fn deadline_selection_is_monotone() {
+    let anet = anet_for(zoo::mobilenet_v3(), &[0.33, 0.66]);
+    let (_, model) = compile_pair(&anet, None, Precision::Fp32, 5);
+    let x = input_for(&anet, 21);
+    let table = model.predicted_ms().to_vec();
+    let full_ms = table[model.num_exits()];
+    let mut last_exit = 0usize;
+    for step in 0..=50 {
+        let deadline = full_ms * 1.2 * step as f64 / 50.0;
+        let out = model.run_policy(&x, AnytimePolicy::Deadline(deadline)).unwrap();
+        assert!(
+            out.exit >= last_exit,
+            "deadline {deadline:.3}ms picked exit {} after {last_exit}",
+            out.exit
+        );
+        assert!(out.predicted_ms <= deadline.max(table[0]));
+        last_exit = out.exit;
+    }
+    // the sweep must actually traverse the range: infeasible → 0, ample → n
+    assert_eq!(model.run_policy(&x, AnytimePolicy::Deadline(0.0)).unwrap().exit, 0);
+    assert_eq!(last_exit, model.num_exits());
+}
+
+// ---- wire parity -----------------------------------------------------------
+
+fn tiny_anet() -> AnytimeNetwork {
+    let mut b = NetworkBuilder::new("wire-any", (8, 8, 4));
+    b.conv2d(3, 8, 1);
+    b.act(ActKind::Relu);
+    b.conv2d(3, 8, 1);
+    b.global_avg_pool();
+    b.linear(10);
+    AnytimeNetwork::with_exit_fractions(b.build(), &[0.3]).unwrap()
+}
+
+fn serve_anytime() -> (Arc<ModelRegistry>, ServerHandle, HttpClient, CompiledModel, usize) {
+    let anet = tiny_anet();
+    let twin = CompiledModel::build(anet.twin().clone())
+        .weights(41u64)
+        .target(&KRYO_485, Framework::Ours)
+        .compile()
+        .unwrap();
+    let model = AnytimeModel::from_model(twin.clone(), &anet, 9).unwrap();
+    let n = model.num_exits();
+    let reg = Arc::new(
+        ModelRegistry::new(RegistryConfig {
+            capacity: 4,
+            engine: EngineConfig {
+                workers: 1,
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 16,
+                intra_workers: 1,
+            },
+            admission: AdmissionConfig { max_pending: 8, per_client: 4 },
+        })
+        .unwrap(),
+    );
+    reg.insert_anytime("any", model).unwrap();
+    let server = HttpServer::bind(
+        reg.clone(),
+        ServerConfig { max_connections: 4, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.addr();
+    (reg, server.spawn(), HttpClient::new(addr.to_string()), twin, n)
+}
+
+fn wire_input(seed: u64) -> Tensor {
+    let mut rng = XorShift64Star::new(seed);
+    Tensor::he_normal(vec![8, 8, 4], &mut rng)
+}
+
+/// Bit-identity modulo the one JSON caveat: `-0.0` travels as `0`.
+fn assert_bit_identical(wire: &Tensor, direct: &Tensor) {
+    assert_eq!(wire.dims(), direct.dims());
+    for (i, (w, d)) in wire.data().iter().zip(direct.data()).enumerate() {
+        let same_bits = w.to_bits() == d.to_bits();
+        let both_zero = *w == 0.0 && *d == 0.0;
+        assert!(same_bits || both_zero, "element {i}: {w} is not bit-identical to {d}");
+    }
+}
+
+#[test]
+fn http_full_depth_is_bit_identical_and_reports_the_exit() {
+    let (_reg, handle, mut client, twin, n) = serve_anytime();
+    for seed in [31u64, 32, 33] {
+        let x = wire_input(seed);
+        let direct = twin.run(&x).unwrap();
+        // no policy on an anytime entry: full depth through the segments
+        let resp = client.infer("any", "t", &x).expect("wire infer");
+        assert_eq!(resp.status, 200, "{:?}", resp.json);
+        let wire = npas::serve::tensor_from_json(&resp.json).unwrap();
+        assert_bit_identical(&wire, &direct);
+        assert_eq!(resp.json.get("exit").and_then(|v| v.as_usize()), Some(n));
+        assert_eq!(resp.json.get("early"), Some(&npas::util::Json::Bool(false)));
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn http_policies_select_exits_and_reject_malformed_slos() {
+    let (reg, handle, mut client, _twin, n) = serve_anytime();
+    let x = wire_input(44);
+    // a zero confidence floor answers from the first head
+    let resp = client.infer_with_slo("any", "t", &x, None, Some(0.0)).unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.json);
+    assert_eq!(resp.json.get("exit").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(resp.json.get("early"), Some(&npas::util::Json::Bool(true)));
+    // an ample deadline runs to full depth
+    let resp = client.infer_with_slo("any", "t", &x, Some(1e9), None).unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.json);
+    assert_eq!(resp.json.get("exit").and_then(|v| v.as_usize()), Some(n));
+    // both SLO fields at once is a 400, before any inference work
+    let resp = client.infer_with_slo("any", "t", &x, Some(5.0), Some(0.5)).unwrap();
+    assert_eq!(resp.status, 400);
+    assert_eq!(resp.error_kind(), Some("bad_request"));
+    // a policy against a plain (exit-free) model is a typed 400
+    let plain = CompiledModel::build(zoo::single_conv(8, 3, 8, 8))
+        .weights(2u64)
+        .target(&KRYO_485, Framework::Ours)
+        .compile()
+        .unwrap();
+    reg.insert_model("plain", plain).unwrap();
+    let px = {
+        let mut rng = XorShift64Star::new(3);
+        Tensor::he_normal(vec![8, 8, 8], &mut rng)
+    };
+    let resp = client.infer_with_slo("plain", "t", &px, Some(5.0), None).unwrap();
+    assert_eq!(resp.status, 400, "{:?}", resp.json);
+    assert_eq!(resp.error_kind(), Some("invalid_config"));
+    // plain replies carry no exit metadata
+    let resp = client.infer("plain", "t", &px).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json.get("exit"), None);
+    // the stats route reports the per-exit counters
+    let stats = client.get("/v1/models/any/stats").unwrap();
+    assert_eq!(stats.status, 200);
+    let exits = stats.json.get("exits").and_then(|v| v.as_arr()).expect("exits array");
+    assert_eq!(exits.len(), n + 1);
+    assert_eq!(exits[0].get("taken").and_then(|v| v.as_usize()), Some(1));
+    handle.shutdown();
+}
