@@ -81,6 +81,12 @@ USAGE: npas <subcommand> [--config file.json] [--flag value ...]
            [--addr 127.0.0.1:8080 --capacity 4 --conns 8]
            [--workers 2 --max-batch 8 --queue-cap 1024]
            [--max-pending 256 --per-client 64]
+           [--ingress reactor|threads]  socket I/O mode (default honors
+                                        NPAS_INGRESS, else threads):
+                                        threads = one handler per conn;
+                                        reactor = event loop, thousands
+                                        of keep-alives on a few threads
+           [--reactor-threads 2 --reactor-conns 4096]
            [--artifact-root dir]  confines POST .../load to dir;
                                   required for a non-loopback --addr
            routes: GET /healthz | GET /v1/models
@@ -334,6 +340,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
+    let defaults = ServerConfig::default(); // honors NPAS_INGRESS
+    let ingress = match args.get("ingress") {
+        None => defaults.ingress,
+        Some(v) if v.eq_ignore_ascii_case("reactor") => npas::serve::IngressMode::Reactor,
+        Some(v) if v.eq_ignore_ascii_case("threads") => npas::serve::IngressMode::ThreadPerConn,
+        Some(v) => {
+            return Err(NpasError::invalid(format!(
+                "--ingress expects `reactor` or `threads`, got `{v}`"
+            ))
+            .into())
+        }
+    };
     let server = HttpServer::bind(
         registry,
         ServerConfig {
@@ -342,10 +360,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // confines POST /v1/models/{name}/load; required for any
             // non-loopback --addr (bind refuses otherwise)
             artifact_root: args.get("artifact-root").map(std::path::PathBuf::from),
-            ..Default::default()
+            ingress,
+            reactor_threads: args.usize_or("reactor-threads", defaults.reactor_threads),
+            reactor_conns: args.usize_or("reactor-conns", defaults.reactor_conns),
+            ..defaults
         },
     )?;
-    println!("serving on http://{}  (ctrl-c to stop)", server.addr());
+    println!(
+        "serving on http://{}  ({:?} ingress; ctrl-c to stop)",
+        server.addr(),
+        ingress
+    );
     println!("  GET  /healthz | GET /v1/models | GET /v1/models/{{name}}/stats");
     println!("  POST /v1/models/{{name}}/infer   body {{\"dims\":[h,w,c],\"data\":[..]}}");
     println!("       anytime models: optional \"deadline_ms\" | \"min_confidence\"");

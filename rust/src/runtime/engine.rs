@@ -30,9 +30,16 @@
 //! reports batch efficiency against N sequential `CompiledModel::run`
 //! calls; `examples/serve_demo.rs` drives a multi-client session
 //! end-to-end.
+//!
+//! Callers that cannot afford to block on [`PendingResponse::wait`] (the
+//! readiness-driven ingress reactor) submit through the `_waker` variants
+//! with a [`CompletionWaker`]: the waker fires exactly once when the reply
+//! becomes observable — after the answer is sent, or when the request dies
+//! unanswered — so polling [`PendingResponse::try_wait`] never misses a
+//! completion.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -192,11 +199,50 @@ struct EngineShared {
     started: Instant,
 }
 
+/// Callback fired when an in-flight request's reply becomes observable
+/// (answered, or its sender dropped unanswered). The ingress reactor
+/// registers one per ticket so engine completions become poller wakeups
+/// instead of blocked threads.
+pub type CompletionWaker = Arc<dyn Fn() + Send + Sync>;
+
+/// A reply sender paired with an optional [`CompletionWaker`]. The waker
+/// fires exactly once — right after the reply is sent, or on drop if the
+/// request dies unanswered (worker lost, engine dropped mid-queue) — so a
+/// poller that checks `try_wait` after every wakeup never misses its
+/// completion.
+struct ReplyTx<T> {
+    tx: mpsc::Sender<Result<T, ExecError>>,
+    notify: Option<CompletionWaker>,
+}
+
+impl<T> ReplyTx<T> {
+    fn new(tx: mpsc::Sender<Result<T, ExecError>>, notify: Option<CompletionWaker>) -> ReplyTx<T> {
+        ReplyTx { tx, notify }
+    }
+
+    fn send(&mut self, reply: Result<T, ExecError>) {
+        let _ = self.tx.send(reply);
+        self.fire();
+    }
+
+    fn fire(&mut self) {
+        if let Some(w) = self.notify.take() {
+            (*w)();
+        }
+    }
+}
+
+impl<T> Drop for ReplyTx<T> {
+    fn drop(&mut self) {
+        self.fire();
+    }
+}
+
 /// Where a request's answer goes: plain requests resolve to a tensor,
 /// policy requests to a full [`AnytimeOutcome`].
 enum Reply {
-    Plain(mpsc::Sender<Result<Tensor, ExecError>>),
-    Anytime(mpsc::Sender<Result<AnytimeOutcome, ExecError>>),
+    Plain(ReplyTx<Tensor>),
+    Anytime(ReplyTx<AnytimeOutcome>),
 }
 
 struct Request {
@@ -205,6 +251,18 @@ struct Request {
     policy: Option<AnytimePolicy>,
     enqueued: Instant,
     reply: Reply,
+}
+
+impl Request {
+    /// Disarm the completion waker before dropping a request that was
+    /// never enqueued (`try_send` found the queue full): the caller gets a
+    /// typed submission error, not a spurious wakeup.
+    fn defuse(&mut self) {
+        match &mut self.reply {
+            Reply::Plain(tx) => tx.notify = None,
+            Reply::Anytime(tx) => tx.notify = None,
+        }
+    }
 }
 
 /// An in-flight request handle; [`PendingResponse::wait`] blocks for the
@@ -221,6 +279,17 @@ impl PendingResponse {
             Err(_) => Err(EngineError::WorkerLost),
         }
     }
+
+    /// Non-blocking poll: `None` while the request is still in flight,
+    /// `Some` once the reply (or the worker's demise) is observable.
+    pub fn try_wait(&self) -> Option<Result<Tensor, EngineError>> {
+        match self.rx.try_recv() {
+            Ok(Ok(t)) => Some(Ok(t)),
+            Ok(Err(e)) => Some(Err(EngineError::Exec(e))),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(EngineError::WorkerLost)),
+        }
+    }
 }
 
 /// An in-flight policy-request handle; [`PendingExit::wait`] blocks for
@@ -235,6 +304,17 @@ impl PendingExit {
             Ok(Ok(out)) => Ok(out),
             Ok(Err(e)) => Err(EngineError::Exec(e)),
             Err(_) => Err(EngineError::WorkerLost),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight,
+    /// `Some` once the outcome (or the worker's demise) is observable.
+    pub fn try_wait(&self) -> Option<Result<AnytimeOutcome, EngineError>> {
+        match self.rx.try_recv() {
+            Ok(Ok(out)) => Some(Ok(out)),
+            Ok(Err(e)) => Some(Err(EngineError::Exec(e))),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(EngineError::WorkerLost)),
         }
     }
 }
@@ -317,7 +397,7 @@ impl InferenceEngine {
             input,
             policy: None,
             enqueued: Instant::now(),
-            reply: Reply::Plain(rtx),
+            reply: Reply::Plain(ReplyTx::new(rtx, None)),
         })
         .map_err(|_| EngineError::ShuttingDown)?;
         Ok(PendingResponse { rx: rrx })
@@ -326,18 +406,36 @@ impl InferenceEngine {
     /// Non-blocking [`InferenceEngine::submit`]: errors with
     /// [`EngineError::QueueFull`] instead of waiting for queue space.
     pub fn try_submit(&self, input: Tensor) -> Result<PendingResponse, EngineError> {
+        self.try_submit_waker(input, None)
+    }
+
+    /// [`InferenceEngine::try_submit`] with an optional [`CompletionWaker`]
+    /// that fires once the returned handle's `try_wait` would observe the
+    /// reply. On a failed submission no waker ever fires — the typed error
+    /// is the whole story.
+    pub fn try_submit_waker(
+        &self,
+        input: Tensor,
+        notify: Option<CompletionWaker>,
+    ) -> Result<PendingResponse, EngineError> {
         let tx = self.tx.as_ref().ok_or(EngineError::ShuttingDown)?;
         let (rtx, rrx) = mpsc::channel();
         let req = Request {
             input,
             policy: None,
             enqueued: Instant::now(),
-            reply: Reply::Plain(rtx),
+            reply: Reply::Plain(ReplyTx::new(rtx, notify)),
         };
         match tx.try_send(req) {
             Ok(()) => Ok(PendingResponse { rx: rrx }),
-            Err(TrySendError::Full(_)) => Err(EngineError::QueueFull),
-            Err(TrySendError::Disconnected(_)) => Err(EngineError::ShuttingDown),
+            Err(TrySendError::Full(mut req)) => {
+                req.defuse();
+                Err(EngineError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(mut req)) => {
+                req.defuse();
+                Err(EngineError::ShuttingDown)
+            }
         }
     }
 
@@ -359,7 +457,7 @@ impl InferenceEngine {
             input,
             policy: Some(policy),
             enqueued: Instant::now(),
-            reply: Reply::Anytime(rtx),
+            reply: Reply::Anytime(ReplyTx::new(rtx, None)),
         })
         .map_err(|_| EngineError::ShuttingDown)?;
         Ok(PendingExit { rx: rrx })
@@ -372,6 +470,18 @@ impl InferenceEngine {
         input: Tensor,
         policy: AnytimePolicy,
     ) -> Result<PendingExit, EngineError> {
+        self.try_submit_policy_waker(input, policy, None)
+    }
+
+    /// [`InferenceEngine::try_submit_policy`] with an optional
+    /// [`CompletionWaker`]; same contract as
+    /// [`InferenceEngine::try_submit_waker`].
+    pub fn try_submit_policy_waker(
+        &self,
+        input: Tensor,
+        policy: AnytimePolicy,
+        notify: Option<CompletionWaker>,
+    ) -> Result<PendingExit, EngineError> {
         if self.shared.model.anytime.is_none() {
             return Err(EngineError::PolicyUnsupported);
         }
@@ -381,12 +491,18 @@ impl InferenceEngine {
             input,
             policy: Some(policy),
             enqueued: Instant::now(),
-            reply: Reply::Anytime(rtx),
+            reply: Reply::Anytime(ReplyTx::new(rtx, notify)),
         };
         match tx.try_send(req) {
             Ok(()) => Ok(PendingExit { rx: rrx }),
-            Err(TrySendError::Full(_)) => Err(EngineError::QueueFull),
-            Err(TrySendError::Disconnected(_)) => Err(EngineError::ShuttingDown),
+            Err(TrySendError::Full(mut req)) => {
+                req.defuse();
+                Err(EngineError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(mut req)) => {
+                req.defuse();
+                Err(EngineError::ShuttingDown)
+            }
         }
     }
 
@@ -539,7 +655,7 @@ fn execute_policy(
     shared: &EngineShared,
     input: Tensor,
     policy: AnytimePolicy,
-    tx: &mpsc::Sender<Result<AnytimeOutcome, ExecError>>,
+    tx: &mut ReplyTx<AnytimeOutcome>,
     enqueued: Instant,
 ) {
     let anytime = match &shared.model.anytime {
@@ -555,12 +671,12 @@ fn execute_policy(
     let d = input.dims();
     if d != &[want.0, want.1, want.2][..] {
         shared.failed.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(Err(ExecError::InputShape { want, got: d.to_vec() }));
+        tx.send(Err(ExecError::InputShape { want, got: d.to_vec() }));
         return;
     }
     if let Some(index) = input.data().iter().position(|v| !v.is_finite()) {
         shared.failed.fetch_add(1, Ordering::Relaxed);
-        let _ = tx.send(Err(ExecError::NonFiniteInput { index }));
+        tx.send(Err(ExecError::NonFiniteInput { index }));
         return;
     }
     match anytime.run_policy(&input, policy) {
@@ -580,11 +696,11 @@ fn execute_policy(
                 }
             }
             shared.completed.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Ok(out));
+            tx.send(Ok(out));
         }
         Err(e) => {
             shared.failed.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(e));
+            tx.send(Err(e));
         }
     }
 }
@@ -598,9 +714,9 @@ fn execute_batch(shared: &EngineShared, exec: &Executor<'_>, batch: Vec<Request>
     let mut plain = Vec::with_capacity(batch.len());
     for req in batch {
         match req.reply {
-            Reply::Anytime(tx) => {
+            Reply::Anytime(mut tx) => {
                 let policy = req.policy.unwrap_or(AnytimePolicy::FullDepth);
-                execute_policy(shared, req.input, policy, &tx, req.enqueued);
+                execute_policy(shared, req.input, policy, &mut tx, req.enqueued);
             }
             Reply::Plain(tx) => plain.push((req.input, req.enqueued, tx)),
         }
@@ -616,18 +732,18 @@ fn execute_batch(shared: &EngineShared, exec: &Executor<'_>, batch: Vec<Request>
     let want = shared.model.net.input_hwc;
     let mut inputs = Vec::with_capacity(plain.len());
     let mut pending = Vec::with_capacity(plain.len());
-    for (input, enqueued, tx) in plain {
+    for (input, enqueued, mut tx) in plain {
         let d = input.dims();
         if d != &[want.0, want.1, want.2][..] {
             shared.failed.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(ExecError::InputShape { want, got: d.to_vec() }));
+            tx.send(Err(ExecError::InputShape { want, got: d.to_vec() }));
             continue;
         }
         // a NaN/Inf input would propagate garbage through the shared batch
         // GEMM; reject it here so only the poisoned request fails
         if let Some(index) = input.data().iter().position(|v| !v.is_finite()) {
             shared.failed.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(ExecError::NonFiniteInput { index }));
+            tx.send(Err(ExecError::NonFiniteInput { index }));
             continue;
         }
         inputs.push(input);
@@ -641,20 +757,20 @@ fn execute_batch(shared: &EngineShared, exec: &Executor<'_>, batch: Vec<Request>
         Ok(outputs) => {
             let done = Instant::now();
             let mut lat = shared.latencies_ms.lock().unwrap();
-            for ((tx, enqueued), out) in pending.into_iter().zip(outputs) {
+            for ((mut tx, enqueued), out) in pending.into_iter().zip(outputs) {
                 if lat.len() < LATENCY_CAP {
                     lat.push(done.duration_since(enqueued).as_secs_f64() * 1e3);
                 }
                 shared.completed.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(Ok(out));
+                tx.send(Ok(out));
             }
         }
         Err(e) => {
             // a typed failure (e.g. missing weights in a malformed bundle)
             // answers every affected request; the worker thread survives
-            for (tx, _) in pending {
+            for (mut tx, _) in pending {
                 shared.failed.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(Err(e.clone()));
+                tx.send(Err(e.clone()));
             }
         }
     }
@@ -862,6 +978,40 @@ mod tests {
             Err(EngineError::PolicyUnsupported)
         ));
         assert!(engine.stats().exits.is_empty());
+    }
+
+    #[test]
+    fn completion_waker_fires_once_and_try_wait_observes_the_reply() {
+        let engine = sparse_model().serve(small_cfg()).unwrap();
+        let mut rng = XorShift64Star::new(25);
+        let x = Tensor::he_normal(vec![8, 8, 16], &mut rng);
+        let fired = Arc::new(AtomicU64::new(0));
+        let f = fired.clone();
+        let waker: CompletionWaker = Arc::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        });
+        let pending = engine.try_submit_waker(x, Some(waker)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while fired.load(Ordering::SeqCst) == 0 {
+            assert!(Instant::now() < deadline, "completion waker never fired");
+            std::thread::yield_now();
+        }
+        // the reply was sent before the waker fired, so a post-wakeup poll
+        // must observe it — the reactor's no-missed-completion contract
+        assert!(matches!(pending.try_wait(), Some(Ok(_))));
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn try_wait_is_none_while_in_flight_or_queued() {
+        // a request that was never submitted anywhere: try_wait on a
+        // pending handle with no reply yet is None, and after the sender
+        // side is gone it is WorkerLost — never a hang
+        let (rtx, rrx) = mpsc::channel();
+        let pending = PendingResponse { rx: rrx };
+        assert!(pending.try_wait().is_none());
+        drop(rtx);
+        assert!(matches!(pending.try_wait(), Some(Err(EngineError::WorkerLost))));
     }
 
     #[test]

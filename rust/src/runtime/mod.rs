@@ -34,8 +34,8 @@ use crate::tensor::Tensor;
 
 pub use bundle::PlanBundle;
 pub use engine::{
-    EngineConfig, EngineError, EngineStats, ExitStat, InferenceEngine, PendingExit,
-    PendingResponse,
+    CompletionWaker, EngineConfig, EngineError, EngineStats, ExitStat, InferenceEngine,
+    PendingExit, PendingResponse,
 };
 pub use manifest::{ArtifactDef, DType, Manifest, TensorDef};
 

@@ -15,7 +15,11 @@
 //!
 //! Admission hands out RAII [`Permit`]s: the slot is released when the
 //! permit drops — on response write, on executor error, or on a panicking
-//! handler unwinding — so shed accounting can never leak slots.
+//! handler unwinding — so shed accounting can never leak slots. Both
+//! ingress modes sit in front of this gate identically: a thread-per-conn
+//! handler holds the permit across its blocking wait, while the reactor
+//! ([`crate::serve::reactor`]) parks it inside the connection's in-flight
+//! ticket — either way the permit lives exactly as long as the request.
 
 use std::sync::{Arc, Mutex};
 

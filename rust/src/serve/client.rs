@@ -5,8 +5,12 @@
 //!
 //! One [`HttpClient`] is one connection (HTTP/1.1 keep-alive): requests
 //! are serialized per client, concurrency comes from multiple clients.
-//! A transport error drops the connection and surfaces a typed
-//! [`NpasError::Io`]; the next request transparently reconnects.
+//! A transport failure on a *pooled* connection — one that already served
+//! a request and may have been closed by the server in the meantime
+//! (idle reap, restart, shutdown race) — retries exactly once on a fresh
+//! connection instead of surfacing the stale socket as the caller's
+//! error. A failure on a fresh connection is reported as a typed
+//! [`NpasError::Io`], and the next request reconnects.
 
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -71,9 +75,28 @@ impl HttpClient {
         self.request("DELETE", path, &[], b"")
     }
 
-    /// One request/response exchange. Any transport failure drops the
-    /// connection (the next call reconnects) and reports [`NpasError::Io`].
+    /// One request/response exchange. A transport failure on a pooled
+    /// (previously used) connection retries once on a fresh one — the
+    /// server may have legitimately closed the idle socket between
+    /// requests; a failure on the fresh connection reports
+    /// [`NpasError::Io`] and drops the connection for the next call.
     pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<JsonResponse> {
+        let pooled = self.conn.is_some();
+        match self.exchange(method, path, headers, body) {
+            // `exchange` already dropped the stale connection, so the
+            // retry below runs on a freshly dialed one.
+            Err(NpasError::Io { .. }) if pooled => self.exchange(method, path, headers, body),
+            other => other,
+        }
+    }
+
+    fn exchange(
         &mut self,
         method: &str,
         path: &str,
@@ -241,6 +264,30 @@ mod tests {
         assert!(matches!(tensor_from_json(&fractional), Err(NpasError::Parse(_))));
         let negative = Json::parse(r#"{"dims":[-2,1,1],"data":[1.0]}"#).unwrap();
         assert!(matches!(tensor_from_json(&negative), Err(NpasError::Parse(_))));
+    }
+
+    #[test]
+    fn pooled_connection_reconnects_transparently_after_server_close() {
+        use std::io::Read as _;
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // one response per connection, advertising keep-alive but
+            // closing right after: the client's pool then holds a stale
+            // socket, and the second request must arrive on a new one
+            for _ in 0..2 {
+                let (mut s, _) = listener.accept().unwrap();
+                let mut buf = [0u8; 4096];
+                let _ = s.read(&mut buf);
+                crate::serve::http::write_response(&mut s, 200, b"{}", true).unwrap();
+            }
+        });
+        let mut c = HttpClient::new(addr.to_string());
+        assert_eq!(c.get("/one").unwrap().status, 200);
+        // the pooled connection is dead; this must retry, not error
+        assert_eq!(c.get("/two").unwrap().status, 200);
+        server.join().unwrap();
     }
 
     #[test]

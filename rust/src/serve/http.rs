@@ -3,16 +3,22 @@
 //!
 //! One request/response grammar, shared by the server and the in-crate
 //! [`crate::serve::HttpClient`]: request line (or status line), lowercased
-//! headers, `Content-Length`-framed body. Keep-alive follows HTTP/1.1
-//! defaults (persistent unless `Connection: close`). Chunked encoding,
-//! trailers and HTTP/2 are intentionally out of scope — both ends of every
+//! headers, `Content-Length`-framed body. Keep-alive follows HTTP
+//! defaults: persistent for HTTP/1.1 unless `Connection: close`, close for
+//! HTTP/1.0 unless `Connection: keep-alive`. Chunked encoding, trailers
+//! and HTTP/2 are intentionally out of scope — both ends of every
 //! connection are this module.
 //!
 //! Size limits are explicit ([`Limits`]): an oversized head or body is a
 //! typed [`HttpError::TooLarge`] the server surfaces as `413`, not an OOM.
+//!
+//! Both ingress paths parse through [`read_request_buf`] with a
+//! per-connection [`ConnBuf`], so the line scratch and body buffer keep
+//! their capacity across keep-alive requests instead of reallocating per
+//! message; [`read_request`] is the fresh-buffer convenience wrapper.
 
 use std::collections::BTreeMap;
-use std::io::{self, BufRead, Read, Write};
+use std::io::{self, BufRead, Cursor, Read, Write};
 
 /// Head/body byte bounds for one message.
 #[derive(Debug, Clone, Copy)]
@@ -59,6 +65,9 @@ pub struct HttpRequest {
     pub path: String,
     pub headers: BTreeMap<String, String>,
     pub body: Vec<u8>,
+    /// HTTP minor version (`0` for `HTTP/1.0`, `1` for `HTTP/1.x`);
+    /// decides the keep-alive default when no `Connection` header is sent.
+    pub minor: u8,
 }
 
 impl HttpRequest {
@@ -66,9 +75,15 @@ impl HttpRequest {
         self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
     }
 
-    /// HTTP/1.1 keep-alive: persistent unless the peer asked to close.
+    /// Connection persistence: `Connection: close` always closes,
+    /// `Connection: keep-alive` always persists, and with no header the
+    /// HTTP default applies — persistent for 1.1, close for 1.0.
     pub fn keep_alive(&self) -> bool {
-        !matches!(self.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"))
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.minor != 0,
+        }
     }
 }
 
@@ -86,19 +101,47 @@ impl HttpResponse {
     }
 }
 
-/// Read one CRLF- (or bare-LF-) terminated line, bounding total head bytes.
+/// Reusable per-connection parse buffers: the line scratch and the body
+/// allocation survive across keep-alive requests, so a steady request
+/// loop parses without per-message buffer growth (see
+/// `tests/alloc_free.rs`).
+#[derive(Debug, Default)]
+pub struct ConnBuf {
+    line: Vec<u8>,
+    body: Vec<u8>,
+}
+
+impl ConnBuf {
+    pub fn new() -> ConnBuf {
+        ConnBuf { line: Vec::new(), body: Vec::new() }
+    }
+
+    /// Return a finished request's body allocation to the pool so the next
+    /// request on the same connection reuses its capacity.
+    pub fn recycle(&mut self, req: HttpRequest) {
+        let mut body = req.body;
+        if body.capacity() > self.body.capacity() {
+            body.clear();
+            self.body = body;
+        }
+    }
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line into `buf`, bounding total
+/// head bytes. Returns `false` on clean EOF before any line bytes.
 ///
 /// The bound is enforced *while* reading, not after: a peer streaming
 /// bytes with no `\n` gets a typed [`HttpError::TooLarge`] as soon as the
 /// head would exceed [`Limits::max_head`], and this function never buffers
 /// more than that many line bytes — the "typed error, not an OOM" claim in
 /// the module docs holds even against an unterminated flood.
-fn read_line(
+fn read_line_into(
     r: &mut impl BufRead,
+    buf: &mut Vec<u8>,
     head_bytes: &mut usize,
     limits: &Limits,
-) -> Result<Option<String>, HttpError> {
-    let mut buf = Vec::new();
+) -> Result<bool, HttpError> {
+    buf.clear();
     loop {
         let chunk = match r.fill_buf() {
             Ok(c) => c,
@@ -106,7 +149,7 @@ fn read_line(
         };
         if chunk.is_empty() {
             if buf.is_empty() {
-                return Ok(None); // clean EOF before any line bytes
+                return Ok(false); // clean EOF before any line bytes
             }
             // EOF before the terminator: a truncated line, not a clean close
             return Err(HttpError::Closed);
@@ -129,23 +172,32 @@ fn read_line(
     while matches!(buf.last(), Some(b'\n' | b'\r')) {
         buf.pop();
     }
-    String::from_utf8(buf).map(Some).map_err(|_| {
-        HttpError::BadRequest("non-utf8 bytes in message head".to_string())
-    })
+    Ok(true)
 }
 
-/// Headers + `Content-Length` body, shared by both message kinds.
-fn read_head_and_body(
+/// View a stripped head line as UTF-8 or fail with the typed message.
+fn line_str(buf: &[u8]) -> Result<&str, HttpError> {
+    std::str::from_utf8(buf)
+        .map_err(|_| HttpError::BadRequest("non-utf8 bytes in message head".to_string()))
+}
+
+/// Header lines + validated `Content-Length`, shared by both message kinds
+/// and by the reactor's head-only parse.
+fn parse_head_lines(
     r: &mut impl BufRead,
+    line: &mut Vec<u8>,
     head_bytes: &mut usize,
     limits: &Limits,
-) -> Result<(BTreeMap<String, String>, Vec<u8>), HttpError> {
+) -> Result<(BTreeMap<String, String>, usize), HttpError> {
     let mut headers = BTreeMap::new();
     loop {
-        let line = read_line(r, head_bytes, limits)?.ok_or(HttpError::Closed)?;
+        if !read_line_into(r, line, head_bytes, limits)? {
+            return Err(HttpError::Closed);
+        }
         if line.is_empty() {
             break;
         }
+        let line = line_str(line)?;
         let (k, v) = line
             .split_once(':')
             .ok_or_else(|| HttpError::BadRequest(format!("malformed header `{line}`")))?;
@@ -163,23 +215,25 @@ fn read_head_and_body(
             limits.max_body
         )));
     }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body).map_err(|_| HttpError::Closed)?;
-    Ok((headers, body))
+    Ok((headers, len))
 }
 
-/// Read one request. `Ok(None)` is a clean keep-alive close (EOF before
-/// any bytes); mid-message EOF/timeouts are [`HttpError::Closed`].
-pub fn read_request(
+/// Read the `Content-Length` body into the recycled `body_buf` allocation.
+fn read_body(
     r: &mut impl BufRead,
-    limits: &Limits,
-) -> Result<Option<HttpRequest>, HttpError> {
-    let mut head_bytes = 0;
-    let line = match read_line(r, &mut head_bytes, limits)? {
-        None => return Ok(None),
-        Some(l) if l.is_empty() => return Ok(None), // stray blank line
-        Some(l) => l,
-    };
+    body_buf: &mut Vec<u8>,
+    len: usize,
+) -> Result<Vec<u8>, HttpError> {
+    let mut body = std::mem::take(body_buf);
+    body.clear();
+    body.resize(len, 0);
+    r.read_exact(&mut body).map_err(|_| HttpError::Closed)?;
+    Ok(body)
+}
+
+/// Parse the request line into method, path and minor version.
+fn parse_request_line(raw: &[u8]) -> Result<(String, String, u8), HttpError> {
+    let line = line_str(raw)?;
     let mut parts = line.split_ascii_whitespace();
     let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
         (Some(m), Some(p), Some(v)) => (m, p, v),
@@ -188,13 +242,66 @@ pub fn read_request(
     if !version.starts_with("HTTP/1.") {
         return Err(HttpError::BadRequest(format!("unsupported version `{version}`")));
     }
-    let (headers, body) = read_head_and_body(r, &mut head_bytes, limits)?;
-    Ok(Some(HttpRequest {
-        method: method.to_string(),
-        path: path.to_string(),
-        headers,
-        body,
-    }))
+    let minor = if version == "HTTP/1.0" { 0 } else { 1 };
+    Ok((method.to_string(), path.to_string(), minor))
+}
+
+/// Read one request through reusable per-connection buffers. `Ok(None)` is
+/// a clean keep-alive close (EOF before any bytes); mid-message
+/// EOF/timeouts are [`HttpError::Closed`].
+pub fn read_request_buf(
+    r: &mut impl BufRead,
+    limits: &Limits,
+    buf: &mut ConnBuf,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let ConnBuf { line, body } = buf;
+    let mut head_bytes = 0;
+    if !read_line_into(r, line, &mut head_bytes, limits)? {
+        return Ok(None);
+    }
+    if line.is_empty() {
+        return Ok(None); // stray blank line
+    }
+    let (method, path, minor) = parse_request_line(line)?;
+    let (headers, len) = parse_head_lines(r, line, &mut head_bytes, limits)?;
+    let req_body = read_body(r, body, len)?;
+    Ok(Some(HttpRequest { method, path, headers, body: req_body, minor }))
+}
+
+/// Read one request with fresh buffers (convenience wrapper over
+/// [`read_request_buf`] for one-shot callers and tests).
+pub fn read_request(
+    r: &mut impl BufRead,
+    limits: &Limits,
+) -> Result<Option<HttpRequest>, HttpError> {
+    read_request_buf(r, limits, &mut ConnBuf::new())
+}
+
+/// Parse a *complete* request head (everything through the blank line,
+/// which the reactor has already located and bounded) and return the
+/// request with an empty body plus the declared `Content-Length`.
+///
+/// Shares every parse path with [`read_request_buf`], so malformed heads
+/// produce byte-identical typed errors in both ingress modes. `Ok(None)`
+/// mirrors the stray-blank-line close.
+pub(crate) fn parse_request_head(
+    raw: &[u8],
+    limits: &Limits,
+    buf: &mut ConnBuf,
+) -> Result<Option<(HttpRequest, usize)>, HttpError> {
+    let mut r = Cursor::new(raw);
+    let line = &mut buf.line;
+    let mut head_bytes = 0;
+    if !read_line_into(&mut r, line, &mut head_bytes, limits)? {
+        return Ok(None);
+    }
+    if line.is_empty() {
+        return Ok(None); // stray blank line
+    }
+    let (method, path, minor) = parse_request_line(line)?;
+    let (headers, len) = parse_head_lines(&mut r, line, &mut head_bytes, limits)?;
+    let req = HttpRequest { method, path, headers, body: Vec::new(), minor };
+    Ok(Some((req, len)))
 }
 
 /// Read one response (client side).
@@ -203,15 +310,22 @@ pub fn read_response(
     limits: &Limits,
 ) -> Result<HttpResponse, HttpError> {
     let mut head_bytes = 0;
-    let line = read_line(r, &mut head_bytes, limits)?.ok_or(HttpError::Closed)?;
-    let mut parts = line.split_ascii_whitespace();
-    let status = match (parts.next(), parts.next()) {
-        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
-            .parse::<u16>()
-            .map_err(|_| HttpError::BadRequest(format!("bad status line `{line}`")))?,
-        _ => return Err(HttpError::BadRequest(format!("bad status line `{line}`"))),
+    let mut line = Vec::new();
+    if !read_line_into(r, &mut line, &mut head_bytes, limits)? {
+        return Err(HttpError::Closed);
+    }
+    let status = {
+        let line = line_str(&line)?;
+        let mut parts = line.split_ascii_whitespace();
+        match (parts.next(), parts.next()) {
+            (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+                .parse::<u16>()
+                .map_err(|_| HttpError::BadRequest(format!("bad status line `{line}`")))?,
+            _ => return Err(HttpError::BadRequest(format!("bad status line `{line}`"))),
+        }
     };
-    let (headers, body) = read_head_and_body(r, &mut head_bytes, limits)?;
+    let (headers, len) = parse_head_lines(r, &mut line, &mut head_bytes, limits)?;
+    let body = read_body(r, &mut Vec::new(), len)?;
     Ok(HttpResponse { status, headers, body })
 }
 
@@ -285,6 +399,7 @@ mod tests {
         assert_eq!(r.path, "/v1/models/m/infer");
         assert_eq!(r.header("x-client"), Some("c1"));
         assert_eq!(r.body, b"abcd");
+        assert_eq!(r.minor, 1);
         assert!(r.keep_alive());
     }
 
@@ -293,6 +408,20 @@ mod tests {
         let r = req("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
         assert!(!r.keep_alive());
         assert!(r.body.is_empty());
+        // header value is case-insensitive
+        let r = req("GET /healthz HTTP/1.1\r\nConnection: Close\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive());
+    }
+
+    #[test]
+    fn http10_defaults_to_close_unless_keep_alive_requested() {
+        let r = req("GET /healthz HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.minor, 0);
+        assert!(!r.keep_alive());
+        let r = req("GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive());
     }
 
     #[test]
@@ -345,6 +474,49 @@ mod tests {
             read_request(&mut Cursor::new(flood), &limits),
             Err(HttpError::TooLarge(_))
         ));
+    }
+
+    #[test]
+    fn conn_buf_reuses_body_capacity_across_requests() {
+        let mut buf = ConnBuf::new();
+        let wire = "POST /x HTTP/1.1\r\ncontent-length: 4096\r\n\r\n".to_string()
+            + &"z".repeat(4096);
+        let r1 = read_request_buf(
+            &mut Cursor::new(wire.as_bytes().to_vec()),
+            &Limits::default(),
+            &mut buf,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r1.body.len(), 4096);
+        buf.recycle(r1);
+        assert!(buf.body.capacity() >= 4096);
+        // the next (smaller) request parses into the recycled allocation
+        let r2 = read_request_buf(
+            &mut Cursor::new(b"POST /x HTTP/1.1\r\ncontent-length: 2\r\n\r\nok".to_vec()),
+            &Limits::default(),
+            &mut buf,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r2.body, b"ok");
+        assert!(r2.body.capacity() >= 4096);
+    }
+
+    #[test]
+    fn parse_request_head_matches_streaming_parse() {
+        let head = b"POST /v1/models/m/infer HTTP/1.1\r\ncontent-length: 4\r\n\r\n";
+        let mut buf = ConnBuf::new();
+        let (req, len) =
+            parse_request_head(head, &Limits::default(), &mut buf).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/models/m/infer");
+        assert_eq!(len, 4);
+        // malformed heads fail with the same typed errors as the streaming path
+        let bad = b"GET /x SPDY/3\r\n\r\n";
+        let streaming = read_request(&mut Cursor::new(bad.to_vec()), &Limits::default());
+        let head_only = parse_request_head(bad, &Limits::default(), &mut buf).map(|_| ());
+        assert_eq!(streaming.map(|_| ()).unwrap_err(), head_only.unwrap_err());
     }
 
     #[test]

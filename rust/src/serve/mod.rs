@@ -2,10 +2,14 @@
 //! [`CompiledModel`](crate::model::CompiledModel) pipeline.
 //!
 //! The stack, outside in:
-//! * [`server`] — `std::net` accept loop + keep-alive connection handlers
-//!   on a dedicated thread pool; routes `/healthz`, `/v1/models`,
+//! * [`server`] — the front door; routes `/healthz`, `/v1/models`,
 //!   `/v1/models/{name}/{infer,stats,load}` and `DELETE
-//!   /v1/models/{name}`.
+//!   /v1/models/{name}` behind one of two interchangeable ingress modes:
+//!   the thread-per-connection reference path, or [`reactor`] — a
+//!   readiness-driven event loop whose per-connection state machines let
+//!   a few threads carry thousands of keep-alive connections
+//!   ([`IngressMode`] / `NPAS_INGRESS` selects; wire behavior is
+//!   bit-identical either way).
 //! * [`registry`] — [`ModelRegistry`]: N models, each with its own
 //!   micro-batching engine, sharing one plan cache; LRU eviction and
 //!   version-counted hot-swap.
@@ -25,12 +29,14 @@
 pub mod admission;
 pub mod client;
 pub mod http;
+pub mod reactor;
 pub mod registry;
 pub mod server;
 
 pub use admission::{Admission, AdmissionConfig, AdmissionStats, Permit, ShedReason};
 pub use client::{infer_request, tensor_from_json, HttpClient, JsonResponse};
 pub use http::{HttpError, HttpRequest, HttpResponse, Limits};
+pub use reactor::IngressMode;
 pub use registry::{
     InferReply, InferTicket, ModelEntry, ModelRegistry, RegistryConfig, RegistryStats,
 };

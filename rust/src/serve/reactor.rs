@@ -1,0 +1,1077 @@
+//! Readiness-driven ingress: the event loop behind
+//! [`IngressMode::Reactor`].
+//!
+//! A handful of reactor threads own *all* socket I/O through
+//! per-connection state machines, so a connection costs memory — a slab
+//! slot plus its reusable parse buffers — rather than a parked thread.
+//! Thousands of idle keep-alives coexist with a steady inference load on
+//! the same few cores; `benches/serve_load.rs` pins the scaling edge over
+//! the thread-per-connection reference path.
+//!
+//! Layout, outside in:
+//! * `run_reactor` clones the server's listener into
+//!   [`ServerConfig::reactor_threads`](crate::serve::ServerConfig)
+//!   non-blocking accept loops, one reactor thread each.
+//! * Each thread runs `Poller::wait` → accept → service → completions →
+//!   stall sweep. The poller is the epoll backend when the `net-epoll`
+//!   feature is on (Linux-only, raw syscalls — no new dependency) and a
+//!   portable level-triggered scan with an adaptive bounded park
+//!   otherwise. Both are readiness-driven; the scan simply treats every
+//!   connection as possibly ready.
+//! * A `Conn` advances `Head → Body → Waiting/Write → Head` using the
+//!   *same* incremental parser (`http::parse_request_head`) and the same
+//!   routing/validation/serialization code as the blocking path, so wire
+//!   behavior is bit-identical (pinned by `tests/serve_parity.rs` running
+//!   every assertion under both ingress modes).
+//! * Inference never pins a thread: an infer request submits a waker
+//!   ticket ([`ModelRegistry::submit_with_policy_waker`]); the engine
+//!   fires the per-thread `Waker` (condvar + eventfd) when the reply is
+//!   ready and the reactor flushes it on the next turn. Only the rare
+//!   deploy/compile `load` route offloads to the blocking pool.
+//!
+//! Parity corners worth naming: stray blank lines close silently, an
+//! oversized or malformed head answers the typed `413`/`400` then closes,
+//! `Connection: close` and HTTP/1.0 default-close are honored, a
+//! mid-message stall past `STALL_TIMEOUT` drops the connection exactly
+//! like the blocking path's read timeout — but here a slow-loris peer
+//! occupies a slab slot, not a worker thread.
+//!
+//! [`ModelRegistry::submit_with_policy_waker`]: crate::serve::registry::ModelRegistry::submit_with_policy_waker
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::scheduler::ThreadPool;
+use crate::runtime::CompletionWaker;
+use crate::serve::http::{self, ConnBuf, HttpError, HttpRequest, Limits};
+use crate::serve::registry::{InferTicket, ModelRegistry};
+use crate::serve::server::{
+    classify, error_body, error_response, parse_infer_request, reply_json, route, Counters,
+    HttpServer, RouteClass,
+};
+
+/// Which ingress drives socket I/O (see [`crate::serve::server`]'s module
+/// docs for the trade-off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IngressMode {
+    /// The blocking reference path: one handler thread per connection.
+    #[default]
+    ThreadPerConn,
+    /// This module: a few event-loop threads own every socket.
+    Reactor,
+}
+
+impl IngressMode {
+    /// Honor the `NPAS_INGRESS` env var (`reactor` selects the event
+    /// loop; anything else — conventionally `threads` — is the reference
+    /// path). This is how CI runs the whole parity suite under both modes
+    /// without duplicating test code.
+    pub fn from_env() -> IngressMode {
+        match std::env::var("NPAS_INGRESS") {
+            Ok(v) if v.eq_ignore_ascii_case("reactor") => IngressMode::Reactor,
+            _ => IngressMode::ThreadPerConn,
+        }
+    }
+}
+
+// Interest bits; numerically equal to EPOLLIN/EPOLLOUT so the epoll
+// backend passes them through unchanged.
+const INTEREST_NONE: u32 = 0;
+const INTEREST_READ: u32 = 0x1;
+const INTEREST_WRITE: u32 = 0x4;
+// Error/hangup bits epoll reports regardless of armed interest.
+const EVENT_ERR: u32 = 0x8;
+const EVENT_HUP: u32 = 0x10;
+
+/// Adaptive park bounds: a busy loop turn re-polls almost immediately,
+/// an idle one backs off to `MAX_PARK` (which also bounds shutdown-flag
+/// latency). Readiness wakeups (epoll / the waker condvar) cut any park
+/// short.
+const MIN_PARK: Duration = Duration::from_micros(250);
+const MAX_PARK: Duration = Duration::from_millis(10);
+
+/// Mid-message stall bound, mirroring the blocking path's per-read
+/// timeout ([`crate::serve::server`]'s `IDLE_TICK`): a peer that started
+/// a message and stopped sending is dropped; an *idle* keep-alive
+/// connection (no message in flight) never times out.
+const STALL_TIMEOUT: Duration = Duration::from_millis(200);
+
+/// How long shutdown lets in-flight requests drain before dropping the
+/// remaining connections.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// Per-turn socket read size.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// A completed piece of off-loop work, queued to the owning reactor
+/// thread by its [`Waker`]. The `(token, gen)` pair addresses a slab slot
+/// *and* proves the slot still holds the same connection — a slot recycled
+/// for a newer peer rejects stale completions by generation.
+enum Completion {
+    /// An engine reply is (probably) ready on the connection's ticket.
+    Ticket { token: usize, gen: u64 },
+    /// A pool-offloaded route finished with a rendered response.
+    Response { token: usize, gen: u64, status: u16, body: String },
+}
+
+/// Cross-thread doorbell for one reactor thread: completions queue under
+/// the mutex, and the wake side is a condvar notify (scan fallback) plus
+/// an eventfd write (epoll backend) so whichever poller is parked gets
+/// kicked.
+struct Waker {
+    queue: Mutex<Vec<Completion>>,
+    cv: Condvar,
+    #[cfg(all(feature = "net-epoll", target_os = "linux"))]
+    efd: i32,
+}
+
+impl Waker {
+    fn new() -> Waker {
+        Waker {
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            #[cfg(all(feature = "net-epoll", target_os = "linux"))]
+            efd: sys::new_eventfd(),
+        }
+    }
+
+    fn push(&self, c: Completion) {
+        self.queue.lock().unwrap().push(c);
+        self.wake();
+    }
+
+    fn wake(&self) {
+        self.cv.notify_one();
+        #[cfg(all(feature = "net-epoll", target_os = "linux"))]
+        if self.efd >= 0 {
+            sys::eventfd_write(self.efd);
+        }
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+
+    /// Scan-fallback park: wait up to `timeout` unless a completion is
+    /// already queued (pushes that raced ahead of the lock count — no
+    /// lost wakeups).
+    fn wait(&self, timeout: Duration) {
+        let q = self.queue.lock().unwrap();
+        if q.is_empty() {
+            let _ = self.cv.wait_timeout(q, timeout).unwrap();
+        }
+    }
+}
+
+#[cfg(all(feature = "net-epoll", target_os = "linux"))]
+impl Drop for Waker {
+    fn drop(&mut self) {
+        if self.efd >= 0 {
+            sys::close_fd(self.efd);
+        }
+    }
+}
+
+/// Where a connection is in its request/response cycle.
+enum ConnState {
+    /// Accumulating head bytes until the blank line.
+    Head,
+    /// Head parsed; accumulating `need` body bytes.
+    Body { req: HttpRequest, need: usize },
+    /// Request dispatched off-loop (engine ticket or pool offload); the
+    /// socket is quiet until the completion arrives.
+    Waiting,
+    /// Flushing the response under write backpressure.
+    Write,
+}
+
+/// Which readiness the poller should watch for a state.
+fn desired_interest(state: &ConnState) -> u32 {
+    match state {
+        ConnState::Head | ConnState::Body { .. } => INTEREST_READ,
+        ConnState::Waiting => INTEREST_NONE,
+        ConnState::Write => INTEREST_WRITE,
+    }
+}
+
+/// One connection's entire footprint: the socket, the state machine, and
+/// every buffer it reuses across keep-alive requests (inbound staging,
+/// body accumulator, the parser's line/body scratch, the outbound
+/// response). Nothing here is per-request.
+struct Conn {
+    stream: TcpStream,
+    gen: u64,
+    state: ConnState,
+    /// Raw inbound bytes not yet consumed by the parser.
+    inbuf: Vec<u8>,
+    /// Body accumulator; swapped into the request on dispatch and its
+    /// allocation reclaimed afterwards.
+    body: Vec<u8>,
+    /// The shared parser's reusable line/body scratch.
+    parse: ConnBuf,
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Response in flight (or the next one) must close the connection:
+    /// the client asked (`Connection: close` / HTTP/1.0) or framing broke.
+    close_after: bool,
+    ticket: Option<InferTicket>,
+    /// Currently armed poller interest (epoll backend only mutates on
+    /// change).
+    interest: u32,
+    last_activity: Instant,
+}
+
+/// Everything one reactor thread needs, cloned off the server at spawn.
+struct ThreadCtx {
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    limits: Limits,
+    artifact_root: Option<PathBuf>,
+    running: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    pool: Arc<ThreadPool>,
+    total_conns: Arc<AtomicUsize>,
+    max_conns: usize,
+}
+
+/// Entry point from [`HttpServer::run`] when
+/// [`ServerConfig::ingress`](crate::serve::ServerConfig) is
+/// [`IngressMode::Reactor`]. Blocks until shutdown drains.
+pub(crate) fn run_reactor(server: &HttpServer) {
+    let threads = server.cfg.reactor_threads.max(1);
+    // CPU-bound offload only (deploy/compile on the load route); socket
+    // I/O never touches this pool in reactor mode.
+    let pool = Arc::new(ThreadPool::new(server.cfg.max_connections.max(1)));
+    let total_conns = Arc::new(AtomicUsize::new(0));
+    let mut handles = Vec::with_capacity(threads);
+    for i in 0..threads {
+        let listener = match server.listener.try_clone() {
+            Ok(l) => l,
+            Err(_) => continue,
+        };
+        if listener.set_nonblocking(true).is_err() {
+            continue;
+        }
+        let ctx = ThreadCtx {
+            listener,
+            registry: server.registry.clone(),
+            limits: server.cfg.limits,
+            artifact_root: server.cfg.artifact_root.clone(),
+            running: server.running.clone(),
+            counters: server.counters.clone(),
+            pool: pool.clone(),
+            total_conns: total_conns.clone(),
+            max_conns: server.cfg.reactor_conns.max(1),
+        };
+        if let Ok(h) = std::thread::Builder::new()
+            .name(format!("npas-reactor-{i}"))
+            .spawn(move || reactor_thread(ctx))
+        {
+            handles.push(h);
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+fn reactor_thread(ctx: ThreadCtx) {
+    let waker = Arc::new(Waker::new());
+    let mut poller = Poller::new(&waker, &ctx.listener);
+    // Slab of connections: tokens are indices, recycled through the free
+    // list; generations disambiguate recycled slots.
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut gen_counter: u64 = 0;
+    let mut park = MIN_PARK;
+    let mut drain_deadline: Option<Instant> = None;
+
+    loop {
+        let ready = poller.wait(&waker, park);
+        let running = ctx.running.load(Ordering::SeqCst);
+
+        if !running {
+            // Drain: stop accepting, drop idle connections immediately,
+            // let in-flight requests finish until the grace deadline.
+            let deadline =
+                *drain_deadline.get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+            let expired = Instant::now() >= deadline;
+            let doomed: Vec<usize> = conns
+                .iter()
+                .enumerate()
+                .filter_map(|(token, slot)| {
+                    let c = slot.as_ref()?;
+                    let idle = matches!(c.state, ConnState::Head) && c.inbuf.is_empty();
+                    (expired || idle).then_some(token)
+                })
+                .collect();
+            for token in doomed {
+                release(&mut conns, &mut free, token, &ctx);
+            }
+            if conns.iter().all(|c| c.is_none()) {
+                return;
+            }
+        }
+
+        let mut activity = false;
+        if running {
+            activity |=
+                accept_all(&ctx, &mut conns, &mut free, &mut gen_counter, &mut poller);
+        }
+
+        match ready {
+            // The epoll backend names the ready connections.
+            Some(tokens) => {
+                for (token, events) in tokens {
+                    activity |= service_slot(
+                        &mut conns, &mut free, token, events, &ctx, &waker, &mut poller,
+                    );
+                }
+            }
+            // The scan fallback treats every connection as possibly ready;
+            // non-ready ones cost one WouldBlock read each.
+            None => {
+                for token in 0..conns.len() {
+                    activity |= service_slot(
+                        &mut conns, &mut free, token, 0, &ctx, &waker, &mut poller,
+                    );
+                }
+            }
+        }
+
+        for c in waker.drain() {
+            activity |=
+                handle_completion(&mut conns, &mut free, c, &ctx, &waker, &mut poller);
+        }
+
+        activity |= sweep_stalls(&mut conns, &mut free, &ctx);
+
+        park = if activity { MIN_PARK } else { (park * 2).min(MAX_PARK) };
+    }
+}
+
+/// Drop a connection and recycle its slot.
+fn release(conns: &mut [Option<Conn>], free: &mut Vec<usize>, token: usize, ctx: &ThreadCtx) {
+    if conns[token].take().is_some() {
+        ctx.total_conns.fetch_sub(1, Ordering::Relaxed);
+        free.push(token);
+    }
+}
+
+/// Accept every pending connection; sheds past `reactor_conns` with the
+/// same typed 503 body as the thread path's backlog shed.
+fn accept_all(
+    ctx: &ThreadCtx,
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    gen_counter: &mut u64,
+    poller: &mut Poller,
+) -> bool {
+    let mut any = false;
+    loop {
+        let stream = match ctx.listener.accept() {
+            Ok((s, _)) => s,
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            // Persistent accept failures (e.g. EMFILE) must not spin: the
+            // adaptive park is the backoff.
+            Err(_) => break,
+        };
+        any = true;
+        ctx.counters.accepted.fetch_add(1, Ordering::Relaxed);
+        if ctx.total_conns.load(Ordering::Relaxed) >= ctx.max_conns {
+            ctx.counters.shed_connections.fetch_add(1, Ordering::Relaxed);
+            let body = error_body("overloaded", "connection backlog full, retry later");
+            let mut s = stream;
+            // Best-effort: a shed path must never stall the reactor.
+            let _ = http::write_response(&mut s, 503, body.as_bytes(), false);
+            continue;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            continue;
+        }
+        ctx.total_conns.fetch_add(1, Ordering::Relaxed);
+        *gen_counter += 1;
+        let token = match free.pop() {
+            Some(t) => t,
+            None => {
+                conns.push(None);
+                conns.len() - 1
+            }
+        };
+        poller.register(&stream, token, INTEREST_READ);
+        conns[token] = Some(Conn {
+            stream,
+            gen: *gen_counter,
+            state: ConnState::Head,
+            inbuf: Vec::new(),
+            body: Vec::new(),
+            parse: ConnBuf::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            close_after: false,
+            ticket: None,
+            interest: INTEREST_READ,
+            last_activity: Instant::now(),
+        });
+    }
+    any
+}
+
+struct Serviced {
+    keep: bool,
+    progressed: bool,
+}
+
+/// Service one slot: run its state machine, then re-arm poller interest
+/// or recycle the slot. Returns whether anything actually progressed (the
+/// park-adaptivity signal).
+fn service_slot(
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    token: usize,
+    events: u32,
+    ctx: &ThreadCtx,
+    waker: &Arc<Waker>,
+    poller: &mut Poller,
+) -> bool {
+    let s = match conns.get_mut(token).and_then(|s| s.as_mut()) {
+        Some(conn) => service(conn, events, ctx, waker, token),
+        None => return false,
+    };
+    if s.keep {
+        if let Some(conn) = conns[token].as_mut() {
+            update_interest(conn, token, poller);
+        }
+        s.progressed
+    } else {
+        release(conns, free, token, ctx);
+        true
+    }
+}
+
+/// Drive one connection as far as it will go without blocking: parse what
+/// is buffered, read what is readable, flush what is writable.
+fn service(
+    conn: &mut Conn,
+    events: u32,
+    ctx: &ThreadCtx,
+    waker: &Arc<Waker>,
+    token: usize,
+) -> Serviced {
+    let mut progressed = false;
+    loop {
+        if matches!(conn.state, ConnState::Head | ConnState::Body { .. }) {
+            match advance(conn, ctx, waker, token) {
+                Advanced::Changed => {
+                    progressed = true;
+                    continue;
+                }
+                Advanced::Close => return Serviced { keep: false, progressed },
+                Advanced::NeedBytes => {}
+            }
+            match read_some(conn) {
+                ReadOutcome::Progress => progressed = true,
+                ReadOutcome::WouldBlock => return Serviced { keep: true, progressed },
+                ReadOutcome::Closed => return Serviced { keep: false, progressed },
+            }
+        } else if matches!(conn.state, ConnState::Waiting) {
+            // A peer reset/hangup while a reply is in flight: epoll
+            // reports it even with no interest armed, and level-triggered
+            // it would re-fire every turn — drop the connection instead of
+            // spinning (the peer can no longer receive the reply anyway).
+            if events & (EVENT_ERR | EVENT_HUP) != 0 {
+                return Serviced { keep: false, progressed: true };
+            }
+            return Serviced { keep: true, progressed };
+        } else {
+            match pump_out(conn) {
+                Pump::Drained => progressed = true,
+                Pump::Blocked => return Serviced { keep: true, progressed },
+                Pump::Close => return Serviced { keep: false, progressed },
+            }
+        }
+    }
+}
+
+enum ReadOutcome {
+    Progress,
+    WouldBlock,
+    Closed,
+}
+
+fn read_some(conn: &mut Conn) -> ReadOutcome {
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => return ReadOutcome::Closed,
+            Ok(n) => {
+                conn.inbuf.extend_from_slice(&chunk[..n]);
+                conn.last_activity = Instant::now();
+                return ReadOutcome::Progress;
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                return ReadOutcome::WouldBlock
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+}
+
+enum Advanced {
+    /// The state machine moved; re-run it.
+    Changed,
+    /// More socket bytes are needed to move.
+    NeedBytes,
+    /// The connection is done (clean close or unrecoverable framing).
+    Close,
+}
+
+/// Index one past the first blank line (the head/body boundary), or
+/// `None` while the head is incomplete. The blank-line rule must agree
+/// with the streaming parser's: `read_line_into` strips *every* trailing
+/// `\r`, so a line is blank iff it holds nothing but `\r` bytes before
+/// its `\n`.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    let mut line_has_content = false;
+    for (i, &b) in buf.iter().enumerate() {
+        match b {
+            b'\n' => {
+                if !line_has_content {
+                    return Some(i + 1);
+                }
+                line_has_content = false;
+            }
+            b'\r' => {}
+            _ => line_has_content = true,
+        }
+    }
+    None
+}
+
+/// Move the parse forward over whatever `inbuf` holds.
+fn advance(conn: &mut Conn, ctx: &ThreadCtx, waker: &Arc<Waker>, token: usize) -> Advanced {
+    if matches!(conn.state, ConnState::Head) {
+        let end = match head_end(&conn.inbuf) {
+            Some(end) => end,
+            None => {
+                // Incomplete head: bound it now so an unterminated flood
+                // gets the same typed 413 as the blocking path, without
+                // buffering past the limit.
+                if conn.inbuf.len() > ctx.limits.max_head {
+                    conn.close_after = true;
+                    conn.inbuf.clear();
+                    let msg = format!("head exceeds {} bytes", ctx.limits.max_head);
+                    respond(conn, 413, error_body("too_large", &msg).as_bytes());
+                    return Advanced::Changed;
+                }
+                return Advanced::NeedBytes;
+            }
+        };
+        match http::parse_request_head(&conn.inbuf[..end], &ctx.limits, &mut conn.parse) {
+            Ok(Some((req, len))) => {
+                conn.inbuf.drain(..end);
+                let take = len.min(conn.inbuf.len());
+                conn.body.clear();
+                conn.body.extend_from_slice(&conn.inbuf[..take]);
+                conn.inbuf.drain(..take);
+                if conn.body.len() == len {
+                    dispatch(conn, ctx, waker, token, req);
+                } else {
+                    conn.state = ConnState::Body { req, need: len };
+                }
+                Advanced::Changed
+            }
+            // Stray blank line: the blocking path closes silently.
+            Ok(None) => Advanced::Close,
+            Err(HttpError::TooLarge(msg)) => {
+                conn.close_after = true;
+                conn.inbuf.clear();
+                respond(conn, 413, error_body("too_large", &msg).as_bytes());
+                Advanced::Changed
+            }
+            Err(HttpError::BadRequest(msg)) => {
+                conn.close_after = true;
+                conn.inbuf.clear();
+                respond(conn, 400, error_body("bad_request", &msg).as_bytes());
+                Advanced::Changed
+            }
+            // head_end guarantees a complete head, so the parser cannot
+            // hit EOF; treat it as a close if it somehow does.
+            Err(HttpError::Closed) => Advanced::Close,
+        }
+    } else if matches!(conn.state, ConnState::Body { .. }) {
+        let need = match &conn.state {
+            ConnState::Body { need, .. } => *need,
+            _ => unreachable!(),
+        };
+        let take = (need - conn.body.len()).min(conn.inbuf.len());
+        if take > 0 {
+            conn.body.extend_from_slice(&conn.inbuf[..take]);
+            conn.inbuf.drain(..take);
+        }
+        if conn.body.len() < need {
+            return Advanced::NeedBytes;
+        }
+        let req = match std::mem::replace(&mut conn.state, ConnState::Head) {
+            ConnState::Body { req, .. } => req,
+            _ => unreachable!(),
+        };
+        dispatch(conn, ctx, waker, token, req);
+        Advanced::Changed
+    } else {
+        // Waiting/Write: one request in flight at a time; pipelined bytes
+        // stay buffered until the response drains.
+        Advanced::NeedBytes
+    }
+}
+
+/// Owned mirror of [`RouteClass`] (which borrows the request's path).
+enum Dispatched {
+    Infer(String),
+    Load,
+    Other,
+}
+
+/// Hand a complete request to the right executor. Infer submits a waker
+/// ticket and parks the *connection* (never a thread); load offloads its
+/// filesystem + compile work to the pool; everything else answers inline.
+fn dispatch(
+    conn: &mut Conn,
+    ctx: &ThreadCtx,
+    waker: &Arc<Waker>,
+    token: usize,
+    mut req: HttpRequest,
+) {
+    req.body = std::mem::take(&mut conn.body);
+    conn.close_after = !req.keep_alive();
+    let class = match classify(&req) {
+        RouteClass::Infer(name) => Dispatched::Infer(name.to_string()),
+        RouteClass::Load => Dispatched::Load,
+        RouteClass::Other => Dispatched::Other,
+    };
+    match class {
+        Dispatched::Infer(name) => {
+            match parse_infer_request(&req) {
+                Ok((input, client, policy)) => {
+                    let w = waker.clone();
+                    let gen = conn.gen;
+                    let notify: CompletionWaker =
+                        Arc::new(move || w.push(Completion::Ticket { token, gen }));
+                    match ctx.registry.submit_with_policy_waker(
+                        &name,
+                        &client,
+                        input,
+                        policy,
+                        Some(notify),
+                    ) {
+                        Ok(ticket) => {
+                            conn.ticket = Some(ticket);
+                            conn.state = ConnState::Waiting;
+                        }
+                        Err(e) => {
+                            let (status, body) = error_response(&e);
+                            respond(conn, status, body.to_string().as_bytes());
+                        }
+                    }
+                }
+                Err((status, body)) => respond(conn, status, body.to_string().as_bytes()),
+            }
+            // Reclaim the body allocation for the next request.
+            conn.body = req.body;
+            conn.body.clear();
+        }
+        Dispatched::Load => {
+            let registry = ctx.registry.clone();
+            let root = ctx.artifact_root.clone();
+            let w = waker.clone();
+            let gen = conn.gen;
+            conn.state = ConnState::Waiting;
+            ctx.pool.execute(move || {
+                let (status, body) = route(&registry, &req, root.as_deref());
+                w.push(Completion::Response { token, gen, status, body: body.to_string() });
+            });
+        }
+        Dispatched::Other => {
+            let (status, body) = route(&ctx.registry, &req, ctx.artifact_root.as_deref());
+            respond(conn, status, body.to_string().as_bytes());
+            conn.body = req.body;
+            conn.body.clear();
+        }
+    }
+}
+
+/// Render a response into the connection's outbound buffer — the same
+/// [`http::write_response`] bytes the blocking path sends — and enter the
+/// write-flush state.
+fn respond(conn: &mut Conn, status: u16, body: &[u8]) {
+    let keep_alive = !conn.close_after;
+    conn.out.clear();
+    conn.out_pos = 0;
+    // Writing into a Vec cannot fail.
+    let _ = http::write_response(&mut conn.out, status, body, keep_alive);
+    conn.state = ConnState::Write;
+}
+
+enum Pump {
+    /// Fully flushed; back to `Head` (unless closing).
+    Drained,
+    /// The socket pushed back; wait for write readiness.
+    Blocked,
+    Close,
+}
+
+fn pump_out(conn: &mut Conn) -> Pump {
+    while conn.out_pos < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.out_pos..]) {
+            Ok(0) => return Pump::Close,
+            Ok(n) => {
+                conn.out_pos += n;
+                conn.last_activity = Instant::now();
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return Pump::Blocked,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Pump::Close,
+        }
+    }
+    conn.out.clear();
+    conn.out_pos = 0;
+    if conn.close_after {
+        Pump::Close
+    } else {
+        conn.state = ConnState::Head;
+        Pump::Drained
+    }
+}
+
+/// Apply a completion to its slot (if the generation still matches) and
+/// flush the response.
+fn handle_completion(
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    c: Completion,
+    ctx: &ThreadCtx,
+    waker: &Arc<Waker>,
+    poller: &mut Poller,
+) -> bool {
+    let (token, gen) = match &c {
+        Completion::Ticket { token, gen } => (*token, *gen),
+        Completion::Response { token, gen, .. } => (*token, *gen),
+    };
+    {
+        let conn = match conns.get_mut(token).and_then(|s| s.as_mut()) {
+            Some(conn) => conn,
+            None => return false, // connection closed while the work ran
+        };
+        if conn.gen != gen || !matches!(conn.state, ConnState::Waiting) {
+            return false; // stale: the slot was recycled for a newer peer
+        }
+        match c {
+            Completion::Ticket { .. } => {
+                let reply = match conn.ticket.as_ref().and_then(|t| t.try_wait()) {
+                    Some(r) => r,
+                    None => return false, // spurious wake: reply not ready yet
+                };
+                conn.ticket = None;
+                let (status, body) = match reply {
+                    Ok(reply) => (200, reply_json(&reply)),
+                    Err(e) => error_response(&e),
+                };
+                respond(conn, status, body.to_string().as_bytes());
+            }
+            Completion::Response { status, body, .. } => {
+                respond(conn, status, body.as_bytes());
+            }
+        }
+    }
+    // Flush now (and parse anything the client pipelined meanwhile).
+    service_slot(conns, free, token, 0, ctx, waker, poller);
+    true
+}
+
+/// Re-arm poller interest when the state machine's needs changed
+/// (epoll backend; the scan fallback ignores interest).
+fn update_interest(conn: &mut Conn, token: usize, poller: &mut Poller) {
+    let desired = desired_interest(&conn.state);
+    if desired != conn.interest {
+        poller.modify(&conn.stream, token, desired);
+        conn.interest = desired;
+    }
+}
+
+/// Drop connections stalled mid-message past [`STALL_TIMEOUT`]. Idle
+/// keep-alives (nothing in flight) and response flushes are never swept,
+/// mirroring the blocking path.
+fn sweep_stalls(conns: &mut [Option<Conn>], free: &mut Vec<usize>, ctx: &ThreadCtx) -> bool {
+    let stalled: Vec<usize> = conns
+        .iter()
+        .enumerate()
+        .filter_map(|(token, slot)| {
+            let conn = slot.as_ref()?;
+            let mid_message = match &conn.state {
+                ConnState::Head => !conn.inbuf.is_empty(),
+                ConnState::Body { .. } => true,
+                ConnState::Waiting | ConnState::Write => false,
+            };
+            (mid_message && conn.last_activity.elapsed() > STALL_TIMEOUT).then_some(token)
+        })
+        .collect();
+    for &token in &stalled {
+        release(conns, free, token, ctx);
+    }
+    !stalled.is_empty()
+}
+
+/// Readiness source: epoll when the `net-epoll` feature is compiled in
+/// and the kernel cooperates, else the portable level-triggered scan.
+enum Poller {
+    Scan,
+    #[cfg(all(feature = "net-epoll", target_os = "linux"))]
+    Epoll(sys::Epoll),
+}
+
+impl Poller {
+    fn new(waker: &Waker, listener: &TcpListener) -> Poller {
+        #[cfg(all(feature = "net-epoll", target_os = "linux"))]
+        {
+            if waker.efd >= 0 {
+                if let Some(ep) = sys::Epoll::new(waker.efd, listener) {
+                    return Poller::Epoll(ep);
+                }
+            }
+        }
+        let _ = (waker, listener);
+        Poller::Scan
+    }
+
+    /// Park until readiness or `park` elapses. `Some(tokens)` names the
+    /// ready connections (epoll); `None` means "scan everything".
+    fn wait(&mut self, waker: &Waker, park: Duration) -> Option<Vec<(usize, u32)>> {
+        match self {
+            Poller::Scan => {
+                waker.wait(park);
+                None
+            }
+            #[cfg(all(feature = "net-epoll", target_os = "linux"))]
+            Poller::Epoll(ep) => Some(ep.wait(park)),
+        }
+    }
+
+    fn register(&mut self, stream: &TcpStream, token: usize, interest: u32) {
+        match self {
+            Poller::Scan => {
+                let _ = (stream, token, interest);
+            }
+            #[cfg(all(feature = "net-epoll", target_os = "linux"))]
+            Poller::Epoll(ep) => ep.add(stream, token, interest),
+        }
+    }
+
+    fn modify(&mut self, stream: &TcpStream, token: usize, interest: u32) {
+        match self {
+            Poller::Scan => {
+                let _ = (stream, token, interest);
+            }
+            #[cfg(all(feature = "net-epoll", target_os = "linux"))]
+            Poller::Epoll(ep) => ep.modify(stream, token, interest),
+        }
+    }
+}
+
+/// Raw epoll/eventfd bindings. The `libc` crate is deliberately not a
+/// dependency, so the handful of syscalls the backend needs are declared
+/// here directly against the platform C ABI; constants are the
+/// `linux/eventpoll.h` / `sys/eventfd.h` values. Closing a registered fd
+/// removes it from the epoll set, so connection teardown needs no
+/// explicit `EPOLL_CTL_DEL`.
+#[cfg(all(feature = "net-epoll", target_os = "linux"))]
+mod sys {
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x1;
+    const EFD_CLOEXEC: i32 = 0x80000;
+    const EFD_NONBLOCK: i32 = 0x800;
+
+    /// Sentinel tokens for the two always-registered fds.
+    const WAKER_TOKEN: u64 = u64::MAX;
+    const LISTENER_TOKEN: u64 = u64::MAX - 1;
+
+    /// `struct epoll_event`: packed on x86 so the 64-bit `data` sits at
+    /// offset 4, matching the kernel ABI.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86_64", target_arch = "x86"), repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn close(fd: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+
+    pub(super) fn new_eventfd() -> i32 {
+        unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) }
+    }
+
+    pub(super) fn eventfd_write(fd: i32) {
+        let one: u64 = 1;
+        unsafe { write(fd, &one as *const u64 as *const u8, 8) };
+    }
+
+    fn eventfd_drain(fd: i32) {
+        let mut buf = [0u8; 8];
+        unsafe { read(fd, buf.as_mut_ptr(), 8) };
+    }
+
+    pub(super) fn close_fd(fd: i32) {
+        unsafe { close(fd) };
+    }
+
+    pub(super) struct Epoll {
+        epfd: i32,
+        efd: i32,
+    }
+
+    impl Epoll {
+        /// `None` on any setup failure: the caller falls back to the
+        /// portable scan poller. The eventfd is owned by the `Waker`, not
+        /// by this set.
+        pub(super) fn new(efd: i32, listener: &TcpListener) -> Option<Epoll> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return None;
+            }
+            let ep = Epoll { epfd, efd };
+            if !ep.ctl(EPOLL_CTL_ADD, efd, EPOLLIN, WAKER_TOKEN)
+                || !ep.ctl(EPOLL_CTL_ADD, listener.as_raw_fd(), EPOLLIN, LISTENER_TOKEN)
+            {
+                return None; // Drop closes epfd
+            }
+            Some(ep)
+        }
+
+        fn ctl(&self, op: i32, fd: i32, events: u32, token: u64) -> bool {
+            let mut ev = EpollEvent { events, data: token };
+            unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) == 0 }
+        }
+
+        pub(super) fn add(&self, stream: &TcpStream, token: usize, interest: u32) {
+            self.ctl(EPOLL_CTL_ADD, stream.as_raw_fd(), interest, token as u64);
+        }
+
+        pub(super) fn modify(&self, stream: &TcpStream, token: usize, interest: u32) {
+            self.ctl(EPOLL_CTL_MOD, stream.as_raw_fd(), interest, token as u64);
+        }
+
+        /// Wait up to `park`; returns `(token, events)` for ready
+        /// connections, draining the waker eventfd internally. Listener
+        /// readiness is not surfaced — the reactor accepts every turn.
+        pub(super) fn wait(&self, park: Duration) -> Vec<(usize, u32)> {
+            let mut events = [EpollEvent { events: 0, data: 0 }; 64];
+            let ms = park.as_millis().clamp(1, i32::MAX as u128) as i32;
+            let n = unsafe { epoll_wait(self.epfd, events.as_mut_ptr(), 64, ms) };
+            let mut ready = Vec::new();
+            for ev in events.iter().take(n.max(0) as usize) {
+                // Copy fields out by value: the struct may be packed and
+                // references to its fields would be unaligned.
+                let data = ev.data;
+                let flags = ev.events;
+                if data == WAKER_TOKEN {
+                    eventfd_drain(self.efd);
+                } else if data != LISTENER_TOKEN {
+                    ready.push((data as usize, flags));
+                }
+            }
+            ready
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            close_fd(self.epfd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_end_agrees_with_the_streaming_blank_line_rule() {
+        // The boundary is one past the first blank line.
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n\r\nbody"), Some(18));
+        assert_eq!(head_end(b"GET / HTTP/1.1\n\n"), Some(16));
+        // read_line_into strips every trailing CR, so an all-CR line is
+        // blank to the parser — and must be to this scanner too.
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n\r\r\n"), Some(19));
+        // Incomplete heads keep waiting for bytes.
+        assert_eq!(head_end(b""), None);
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n"), None);
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\nx: y\r\n"), None);
+        // A leading blank line is itself a boundary (stray-blank close).
+        assert_eq!(head_end(b"\r\nGET"), Some(2));
+    }
+
+    #[test]
+    fn interest_tracks_connection_state() {
+        assert_eq!(desired_interest(&ConnState::Head), INTEREST_READ);
+        let req = HttpRequest {
+            method: "POST".to_string(),
+            path: "/".to_string(),
+            headers: Default::default(),
+            body: Vec::new(),
+            minor: 1,
+        };
+        assert_eq!(desired_interest(&ConnState::Body { req, need: 4 }), INTEREST_READ);
+        assert_eq!(desired_interest(&ConnState::Waiting), INTEREST_NONE);
+        assert_eq!(desired_interest(&ConnState::Write), INTEREST_WRITE);
+    }
+
+    #[test]
+    fn ingress_mode_defaults_to_the_reference_path() {
+        assert_eq!(IngressMode::default(), IngressMode::ThreadPerConn);
+    }
+
+    #[test]
+    fn waker_queue_drains_in_push_order_and_wakes_waiters() {
+        let w = Waker::new();
+        w.push(Completion::Ticket { token: 1, gen: 7 });
+        w.push(Completion::Response {
+            token: 2,
+            gen: 9,
+            status: 200,
+            body: "{}".to_string(),
+        });
+        let drained = w.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(matches!(drained[0], Completion::Ticket { token: 1, gen: 7 }));
+        assert!(w.drain().is_empty());
+        // A completion pushed before the park makes wait return at once.
+        w.push(Completion::Ticket { token: 0, gen: 1 });
+        let start = Instant::now();
+        w.wait(Duration::from_secs(5));
+        assert!(start.elapsed() < Duration::from_secs(1));
+    }
+}

@@ -29,7 +29,9 @@ use crate::anytime::{AnytimeModel, AnytimePolicy};
 use crate::compiler::{PlanCache, PlanCacheStats};
 use crate::error::{NpasError, Result};
 use crate::model::CompiledModel;
-use crate::runtime::{EngineConfig, EngineError, EngineStats, PendingExit, PendingResponse};
+use crate::runtime::{
+    CompletionWaker, EngineConfig, EngineError, EngineStats, PendingExit, PendingResponse,
+};
 use crate::serve::admission::{Admission, AdmissionConfig, AdmissionStats, ShedReason};
 use crate::tensor::Tensor;
 
@@ -142,21 +144,47 @@ impl InferTicket {
                 p.wait().map(|o| (o.output, Some(o.exit), Some(o.early)))
             }
         };
-        match outcome {
-            Ok((output, exit, early)) => {
-                Ok(InferReply { output, model: name, version, exit, early })
+        map_outcome(name, version, outcome)
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight,
+    /// `Some` once the reply is observable — with exactly the same typed
+    /// mapping as [`InferTicket::wait`]. Intended for the ingress reactor,
+    /// which polls after each [`CompletionWaker`] wakeup; once `Some` is
+    /// returned the ticket is spent and should be dropped (a second poll
+    /// reports the engine worker as lost).
+    pub fn try_wait(&self) -> Option<Result<InferReply>> {
+        let outcome = match &self.pending {
+            Pending::Plain(p) => p.try_wait()?.map(|output| (output, None, None)),
+            Pending::Anytime(p) => {
+                p.try_wait()?.map(|o| (o.output, Some(o.exit), Some(o.early)))
             }
-            Err(EngineError::Exec(e)) => Err(NpasError::Exec(e)),
-            // the engine is draining (mid-swap/unload shutdown) or a worker
-            // vanished: retryable from the client's point of view — after a
-            // swap the retry lands on the replacement engine
-            Err(EngineError::ShuttingDown | EngineError::WorkerLost) => {
-                Err(NpasError::Overloaded { model: name, pending: 0 })
-            }
-            Err(EngineError::QueueFull) => unreachable!("wait cannot report QueueFull"),
-            Err(EngineError::PolicyUnsupported) => {
-                unreachable!("policy routing is gated at submit time")
-            }
+        };
+        Some(map_outcome(self.entry.name.clone(), self.entry.version, outcome))
+    }
+}
+
+/// Shared [`InferTicket::wait`] / [`InferTicket::try_wait`] result mapping,
+/// so both ingress paths surface byte-identical typed errors.
+fn map_outcome(
+    name: String,
+    version: u64,
+    outcome: std::result::Result<(Tensor, Option<usize>, Option<bool>), EngineError>,
+) -> Result<InferReply> {
+    match outcome {
+        Ok((output, exit, early)) => {
+            Ok(InferReply { output, model: name, version, exit, early })
+        }
+        Err(EngineError::Exec(e)) => Err(NpasError::Exec(e)),
+        // the engine is draining (mid-swap/unload shutdown) or a worker
+        // vanished: retryable from the client's point of view — after a
+        // swap the retry lands on the replacement engine
+        Err(EngineError::ShuttingDown | EngineError::WorkerLost) => {
+            Err(NpasError::Overloaded { model: name, pending: 0 })
+        }
+        Err(EngineError::QueueFull) => unreachable!("wait cannot report QueueFull"),
+        Err(EngineError::PolicyUnsupported) => {
+            unreachable!("policy routing is gated at submit time")
         }
     }
 }
@@ -327,6 +355,22 @@ impl ModelRegistry {
         input: Tensor,
         policy: Option<AnytimePolicy>,
     ) -> Result<InferTicket> {
+        self.submit_with_policy_waker(name, client, input, policy, None)
+    }
+
+    /// [`ModelRegistry::submit_with_policy`] with an optional
+    /// [`CompletionWaker`] that fires once the ticket's
+    /// [`InferTicket::try_wait`] would observe the reply. Admission and
+    /// shed mapping are identical; a shed submission returns its typed
+    /// error without ever firing the waker.
+    pub fn submit_with_policy_waker(
+        &self,
+        name: &str,
+        client: &str,
+        input: Tensor,
+        policy: Option<AnytimePolicy>,
+        notify: Option<CompletionWaker>,
+    ) -> Result<InferTicket> {
         let entry = self.get(name)?;
         if policy.is_some() && entry.anytime.is_none() {
             return Err(NpasError::invalid(format!(
@@ -357,9 +401,11 @@ impl ModelRegistry {
         };
         let pending = if entry.anytime.is_some() {
             let policy = policy.unwrap_or(AnytimePolicy::FullDepth);
-            Pending::Anytime(entry.engine.try_submit_policy(input, policy).map_err(shed)?)
+            Pending::Anytime(
+                entry.engine.try_submit_policy_waker(input, policy, notify).map_err(shed)?,
+            )
         } else {
-            Pending::Plain(entry.engine.try_submit(input).map_err(shed)?)
+            Pending::Plain(entry.engine.try_submit_waker(input, notify).map_err(shed)?)
         };
         Ok(InferTicket { entry, pending, _permit: permit })
     }

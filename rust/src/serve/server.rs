@@ -1,13 +1,25 @@
-//! The HTTP front door: a [`std::net::TcpListener`] accept loop feeding
-//! keep-alive connection handlers run as detached tasks on a dedicated
-//! [`ThreadPool`], all serving one shared [`ModelRegistry`].
+//! The HTTP front door, with two interchangeable ingress modes
+//! ([`ServerConfig::ingress`]):
+//!
+//! * [`IngressMode::ThreadPerConn`] — the reference path: a
+//!   [`std::net::TcpListener`] accept loop feeding keep-alive connection
+//!   handlers run as detached tasks on a dedicated [`ThreadPool`]. Simple
+//!   and auditable, but the concurrent-connection ceiling is the pool
+//!   size.
+//! * [`IngressMode::Reactor`] — the readiness-driven event loop in
+//!   [`crate::serve::reactor`]: a handful of reactor threads own all
+//!   socket I/O through per-connection state machines, so thousands of
+//!   idle keep-alive connections cost memory, not threads. Wire behavior
+//!   is bit-identical to the reference path (pinned by
+//!   `tests/serve_parity.rs` running every assertion under both modes).
 //!
 //! Threading layout (deadlock-free by construction):
 //! * the accept thread only accepts, sheds, and dispatches — it never
 //!   blocks on a handler;
 //! * connection handlers live on the server's **own** pool (sized
 //!   [`ServerConfig::max_connections`]), not the global kernel pool, so a
-//!   stalled client can never starve inference workers;
+//!   stalled client can never starve inference workers (in reactor mode
+//!   the pool shrinks to CPU-bound work: deploy/compile offload only);
 //! * inference itself rides each model's [`InferenceEngine`] workers and,
 //!   inside them, the global intra-op pool.
 //!
@@ -35,8 +47,9 @@ use crate::error::{NpasError, Result};
 use crate::runtime::EngineStats;
 use crate::serve::admission::AdmissionStats;
 use crate::serve::http::{
-    read_request, write_response, HttpError, HttpRequest, Limits,
+    read_request_buf, write_response, ConnBuf, HttpError, HttpRequest, Limits,
 };
+use crate::serve::reactor::IngressMode;
 use crate::serve::registry::{InferReply, ModelEntry, ModelRegistry};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -59,6 +72,18 @@ pub struct ServerConfig {
     /// unrestricted load route on a non-loopback address, since it would
     /// hand remote peers an arbitrary-filesystem-path probe/load primitive.
     pub artifact_root: Option<PathBuf>,
+    /// Which ingress drives socket I/O (see the module docs). The default
+    /// honors the `NPAS_INGRESS` env var (`reactor` / `threads`), falling
+    /// back to the thread-per-connection reference path.
+    pub ingress: IngressMode,
+    /// Reactor mode only: event-loop threads owning the sockets. Each is
+    /// cheap (it parks on readiness), so a handful covers thousands of
+    /// connections.
+    pub reactor_threads: usize,
+    /// Reactor mode only: concurrent open-connection ceiling (a memory
+    /// bound, not a thread bound); connections past it are shed `503` at
+    /// accept, exactly like the thread path's backlog shed.
+    pub reactor_conns: usize,
 }
 
 impl Default for ServerConfig {
@@ -68,6 +93,9 @@ impl Default for ServerConfig {
             max_connections: 8,
             limits: Limits::default(),
             artifact_root: None,
+            ingress: IngressMode::from_env(),
+            reactor_threads: 2,
+            reactor_conns: 4096,
         }
     }
 }
@@ -82,20 +110,20 @@ pub struct ServerStats {
 }
 
 #[derive(Default)]
-struct Counters {
-    accepted: AtomicU64,
-    shed_connections: AtomicU64,
+pub(crate) struct Counters {
+    pub(crate) accepted: AtomicU64,
+    pub(crate) shed_connections: AtomicU64,
 }
 
 /// See the module docs. Built by [`HttpServer::bind`]; serves via the
 /// blocking [`HttpServer::run`] or the background [`HttpServer::spawn`].
 pub struct HttpServer {
-    registry: Arc<ModelRegistry>,
-    listener: TcpListener,
+    pub(crate) registry: Arc<ModelRegistry>,
+    pub(crate) listener: TcpListener,
     addr: SocketAddr,
-    cfg: ServerConfig,
-    running: Arc<AtomicBool>,
-    counters: Arc<Counters>,
+    pub(crate) cfg: ServerConfig,
+    pub(crate) running: Arc<AtomicBool>,
+    pub(crate) counters: Arc<Counters>,
 }
 
 /// A running background server; [`ServerHandle::shutdown`] (or drop) stops
@@ -154,6 +182,14 @@ impl HttpServer {
     /// accept loop is unblocked by the handle's self-connect). Joining the
     /// handler pool on exit waits for in-flight connections to finish.
     pub fn run(&self) {
+        match self.cfg.ingress {
+            IngressMode::Reactor => crate::serve::reactor::run_reactor(self),
+            IngressMode::ThreadPerConn => self.run_thread_per_conn(),
+        }
+    }
+
+    /// The thread-per-connection reference ingress (see the module docs).
+    fn run_thread_per_conn(&self) {
         let pool = ThreadPool::new(self.cfg.max_connections);
         let mut accept_errors: u32 = 0;
         while self.running.load(Ordering::SeqCst) {
@@ -263,6 +299,10 @@ fn handle_connection(
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
+    // per-connection parse buffers: the line scratch and body allocation
+    // are reused across keep-alive requests (the same economy the reactor
+    // path gets from its per-connection state)
+    let mut buf = ConnBuf::new();
     loop {
         // idle-wait without consuming: peek lets us poll the shutdown flag
         // between requests while still treating mid-message EOF as an error
@@ -286,7 +326,7 @@ fn handle_connection(
                 }
             }
         }
-        let req = match read_request(&mut reader, &limits) {
+        let req = match read_request_buf(&mut reader, &limits, &mut buf) {
             Ok(Some(req)) => req,
             Ok(None) => return, // clean keep-alive close
             Err(HttpError::Closed) => return,
@@ -303,10 +343,11 @@ fn handle_connection(
         };
         let keep_alive = req.keep_alive();
         let (status, body) = route(registry, &req, artifact_root);
-        if write_response(&mut writer, status, body.to_string().as_bytes(), keep_alive)
+        let done = write_response(&mut writer, status, body.to_string().as_bytes(), keep_alive)
             .is_err()
-            || !keep_alive
-        {
+            || !keep_alive;
+        buf.recycle(req);
+        if done {
             return;
         }
     }
@@ -314,9 +355,32 @@ fn handle_connection(
 
 // ---- routing ---------------------------------------------------------------
 
+/// Coarse route class the reactor keys its dispatch strategy on: infer
+/// requests submit asynchronously (waker ticket, no thread pinned), load
+/// requests offload to the blocking pool (filesystem + compile), and
+/// everything else is cheap enough to answer inline on the event loop.
+pub(crate) enum RouteClass<'a> {
+    Infer(&'a str),
+    Load,
+    Other,
+}
+
+/// Classify a request with exactly the same path normalization as
+/// [`route`], so the reactor's fast path and the blocking dispatcher can
+/// never disagree about what a request is.
+pub(crate) fn classify(req: &HttpRequest) -> RouteClass<'_> {
+    let path = req.path.split('?').next().unwrap_or("");
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "models", name, "infer"]) => RouteClass::Infer(name),
+        ("POST", ["v1", "models", _, "load"]) => RouteClass::Load,
+        _ => RouteClass::Other,
+    }
+}
+
 /// Dispatch one parsed request against the registry. Pure with respect to
 /// the connection: returns `(status, json_body)`.
-fn route(
+pub(crate) fn route(
     registry: &ModelRegistry,
     req: &HttpRequest,
     artifact_root: Option<&Path>,
@@ -418,31 +482,40 @@ fn entry_stats_json(entry: &ModelEntry) -> Json {
     ])
 }
 
-fn infer(registry: &ModelRegistry, name: &str, req: &HttpRequest) -> (u16, Json) {
+/// Validate an infer request's body into `(input, client, policy)`, or the
+/// ready-to-send 400 response. Both ingress paths run exactly this
+/// function, so malformed payloads produce byte-identical replies whether
+/// the request was parsed by a handler thread or the reactor.
+pub(crate) fn parse_infer_request(
+    req: &HttpRequest,
+) -> std::result::Result<(Tensor, String, Option<AnytimePolicy>), (u16, Json)> {
     let body = match std::str::from_utf8(&req.body) {
         Ok(s) => s,
-        Err(_) => return (400, error_json("bad_request", "body is not utf-8")),
+        Err(_) => return Err((400, error_json("bad_request", "body is not utf-8"))),
     };
     let json = match Json::parse(body) {
         Ok(j) => j,
-        Err(e) => return (400, error_json("parse", &e.to_string())),
+        Err(e) => return Err((400, error_json("parse", &e.to_string()))),
     };
     let input = match parse_tensor(&json) {
         Ok(t) => t,
-        Err((kind, msg)) => return (400, error_json(kind, &msg)),
+        Err((kind, msg)) => return Err((400, error_json(kind, &msg))),
     };
     // client identity: explicit body field, else header, else anonymous
     let client = json
         .get("client")
         .and_then(Json::as_str)
         .or_else(|| req.header("x-client"))
-        .unwrap_or("anon");
+        .unwrap_or("anon")
+        .to_string();
     // optional anytime SLO: at most one of `deadline_ms` / `min_confidence`
     let deadline = match json.get("deadline_ms") {
         None => None,
         Some(v) => match v.as_f64() {
             Some(d) => Some(d),
-            None => return (400, error_json("bad_request", "`deadline_ms` must be a number")),
+            None => {
+                return Err((400, error_json("bad_request", "`deadline_ms` must be a number")))
+            }
         },
     };
     let confidence = match json.get("min_confidence") {
@@ -450,25 +523,36 @@ fn infer(registry: &ModelRegistry, name: &str, req: &HttpRequest) -> (u16, Json)
         Some(v) => match v.as_f64() {
             Some(c) => Some(c as f32),
             None => {
-                return (400, error_json("bad_request", "`min_confidence` must be a number"))
+                return Err((
+                    400,
+                    error_json("bad_request", "`min_confidence` must be a number"),
+                ))
             }
         },
     };
     let policy = match (deadline, confidence) {
         (Some(_), Some(_)) => {
-            return (
+            return Err((
                 400,
                 error_json(
                     "bad_request",
                     "`deadline_ms` and `min_confidence` are mutually exclusive",
                 ),
-            )
+            ))
         }
         (Some(d), None) => Some(AnytimePolicy::Deadline(d)),
         (None, Some(c)) => Some(AnytimePolicy::Confidence(c)),
         (None, None) => None,
     };
-    match registry.infer_with_policy(name, client, input, policy) {
+    Ok((input, client, policy))
+}
+
+fn infer(registry: &ModelRegistry, name: &str, req: &HttpRequest) -> (u16, Json) {
+    let (input, client, policy) = match parse_infer_request(req) {
+        Ok(parts) => parts,
+        Err(resp) => return resp,
+    };
+    match registry.infer_with_policy(name, &client, input, policy) {
         Ok(reply) => (200, reply_json(&reply)),
         Err(e) => error_response(&e),
     }
@@ -518,7 +602,7 @@ fn parse_tensor(json: &Json) -> std::result::Result<Tensor, (&'static str, Strin
     Ok(Tensor::new(dims, data))
 }
 
-fn reply_json(reply: &InferReply) -> Json {
+pub(crate) fn reply_json(reply: &InferReply) -> Json {
     let mut fields = vec![
         ("model", Json::str(reply.model.as_str())),
         ("version", Json::num(reply.version as f64)),
@@ -613,19 +697,19 @@ pub fn status_for(err: &NpasError) -> (u16, &'static str) {
     }
 }
 
-fn error_response(err: &NpasError) -> (u16, Json) {
+pub(crate) fn error_response(err: &NpasError) -> (u16, Json) {
     let (status, kind) = status_for(err);
     (status, error_json(kind, &err.to_string()))
 }
 
-fn error_json(kind: &str, message: &str) -> Json {
+pub(crate) fn error_json(kind: &str, message: &str) -> Json {
     Json::obj(vec![(
         "error",
         Json::obj(vec![("kind", Json::str(kind)), ("message", Json::str(message))]),
     )])
 }
 
-fn error_body(kind: &str, message: &str) -> String {
+pub(crate) fn error_body(kind: &str, message: &str) -> String {
     error_json(kind, message).to_string()
 }
 
@@ -710,6 +794,7 @@ mod tests {
             path: path.to_string(),
             headers: Default::default(),
             body: Vec::new(),
+            minor: 1,
         };
         assert_eq!(route(&reg, &req("GET", "/healthz"), None).0, 200);
         assert_eq!(route(&reg, &req("GET", "/v1/models"), None).0, 200);
@@ -717,6 +802,37 @@ mod tests {
         assert_eq!(route(&reg, &req("PUT", "/healthz"), None).0, 405);
         assert_eq!(route(&reg, &req("GET", "/v1/models/ghost/stats"), None).0, 404);
         assert_eq!(route(&reg, &req("DELETE", "/v1/models/ghost"), None).0, 404);
+    }
+
+    #[test]
+    fn classify_agrees_with_route_path_normalization() {
+        let req = |method: &str, path: &str| HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers: Default::default(),
+            body: Vec::new(),
+            minor: 1,
+        };
+        assert!(matches!(
+            classify(&req("POST", "/v1/models/m/infer")),
+            RouteClass::Infer("m")
+        ));
+        // same query-string and duplicate-slash normalization as route()
+        assert!(matches!(
+            classify(&req("POST", "/v1/models/m/infer?trace=1")),
+            RouteClass::Infer("m")
+        ));
+        assert!(matches!(
+            classify(&req("POST", "//v1//models//m//infer")),
+            RouteClass::Infer("m")
+        ));
+        assert!(matches!(classify(&req("POST", "/v1/models/m/load")), RouteClass::Load));
+        assert!(matches!(classify(&req("GET", "/healthz")), RouteClass::Other));
+        // wrong method for the path is Other — route() answers the 404/405
+        assert!(matches!(
+            classify(&req("GET", "/v1/models/m/infer")),
+            RouteClass::Other
+        ));
     }
 
     #[test]

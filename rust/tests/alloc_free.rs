@@ -8,14 +8,19 @@
 //! (`intra_workers = 1` — pool workers would allocate on their own
 //! threads, outside both the counter and the claim).
 //!
-//! Two levels:
+//! Three levels:
 //! * kernel level — the `_into` entry points the executor drives
 //!   (panel GEMM, dense GEMM, block-CSR GEMM, im2col, depthwise, Winograd)
 //!   make **exactly zero** allocations on warm buffers;
 //! * end-to-end — steady-state `CompiledModel::run` on a conv-only network
 //!   allocates only the constant per-run bookkeeping (the layer-output
 //!   table, the result vector, and the one output buffer that escapes to
-//!   the caller), independent of run count.
+//!   the caller), independent of run count;
+//! * serving — steady-state keep-alive request parsing through one
+//!   recycled [`ConnBuf`](npas::serve::http::ConnBuf) stays at a small
+//!   flat per-request constant (the owned method/path/header strings),
+//!   with the line scratch and the body buffer reused across requests —
+//!   both ingress paths lean on exactly this reuse.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -125,6 +130,62 @@ mod kernels {
             winograd_conv2d_prepared_into(img.data(), (hw, hw), &kernel, &mut wout, &mut v)
         });
         assert_eq!(n, 0, "winograd tile loop must not allocate");
+    }
+}
+
+mod serving {
+    use super::count_allocs;
+    use npas::serve::http::{read_request_buf, ConnBuf, Limits};
+
+    #[test]
+    fn steady_state_keep_alive_parse_is_a_flat_small_constant() {
+        // one infer-shaped POST exactly as the wire sees it
+        let body = r#"{"dims":[2,1,2],"data":[1.5,-2.25,0.0,3.75],"client":"c"}"#;
+        let raw = format!(
+            "POST /v1/models/m/infer HTTP/1.1\r\nhost: npas\r\ncontent-length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .into_bytes();
+        let limits = Limits::default();
+        let mut buf = ConnBuf::new();
+
+        let parse_one = |buf: &mut ConnBuf| {
+            let mut r: &[u8] = &raw;
+            let req = read_request_buf(&mut r, &limits, buf)
+                .expect("well-formed request parses")
+                .expect("one full request is present");
+            assert_eq!(req.path, "/v1/models/m/infer");
+            assert_eq!(req.body.len(), body.len());
+            // the keep-alive loop hands the body allocation back
+            buf.recycle(req);
+        };
+        // warm the line scratch and the pooled body to steady state
+        for _ in 0..3 {
+            parse_one(&mut buf);
+        }
+
+        let mut counts = [0u64; 3];
+        for c in counts.iter_mut() {
+            *c = count_allocs(|| parse_one(&mut buf));
+        }
+
+        // flat across requests: nothing in the parse path grows with the
+        // request count once the connection's buffers are warm ...
+        assert_eq!(
+            counts[0], counts[1],
+            "steady-state parse allocation count must be constant"
+        );
+        assert_eq!(counts[1], counts[2]);
+        // ... and small: only the owned strings the parsed request keeps
+        // (method, path, two header keys + values, one map node). The
+        // line scratch and body buffer must come from the ConnBuf pool —
+        // a per-request body or line allocation would blow this budget.
+        assert!(
+            counts[0] <= 12,
+            "per-request parse bookkeeping exceeded the constant budget: {} allocations",
+            counts[0]
+        );
     }
 }
 

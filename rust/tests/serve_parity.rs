@@ -5,7 +5,17 @@
 //! Everything runs against a real socket (`127.0.0.1:0`) through the
 //! crate's own client, so the whole wire path — JSON encode, HTTP framing,
 //! admission, engine, response decode — is under test, not a shortcut.
+//!
+//! Every server-backed test loops over **both ingress modes**
+//! ([`IngressMode::ThreadPerConn`] and [`IngressMode::Reactor`]): the
+//! readiness-driven reactor must be wire-bit-identical to the blocking
+//! reference path, and running the same assertions against both is the
+//! pin. Reactor-only tests at the bottom cover what the thread path
+//! cannot do by construction: slow-loris peers and a thousand idle
+//! keep-alives on a four-thread pool.
 
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -15,11 +25,14 @@ use npas::graph::zoo;
 use npas::pruning::PruneScheme;
 use npas::runtime::EngineConfig;
 use npas::serve::{
-    AdmissionConfig, HttpClient, HttpServer, ModelRegistry, RegistryConfig, ServerConfig,
-    ServerHandle,
+    http, AdmissionConfig, HttpClient, HttpServer, IngressMode, Limits, ModelRegistry,
+    RegistryConfig, ServerConfig, ServerHandle,
 };
 use npas::tensor::{Tensor, XorShift64Star};
 use npas::{CompiledModel, NpasError};
+
+/// Both ingress modes; every server test iterates this.
+const MODES: [IngressMode; 2] = [IngressMode::ThreadPerConn, IngressMode::Reactor];
 
 fn model(seed: u64) -> CompiledModel {
     CompiledModel::build(zoo::single_conv(8, 3, 8, 8))
@@ -50,8 +63,12 @@ fn registry(admission: AdmissionConfig) -> Arc<ModelRegistry> {
     Arc::new(ModelRegistry::new(cfg).expect("registry config is valid"))
 }
 
-fn spawn(reg: Arc<ModelRegistry>) -> (ServerHandle, HttpClient) {
-    spawn_with(reg, ServerConfig { max_connections: 4, ..Default::default() })
+fn server_cfg(mode: IngressMode) -> ServerConfig {
+    ServerConfig { max_connections: 4, ingress: mode, ..Default::default() }
+}
+
+fn spawn(reg: Arc<ModelRegistry>, mode: IngressMode) -> (ServerHandle, HttpClient) {
+    spawn_with(reg, server_cfg(mode))
 }
 
 fn spawn_with(reg: Arc<ModelRegistry>, cfg: ServerConfig) -> (ServerHandle, HttpClient) {
@@ -81,184 +98,202 @@ fn http_responses_are_bit_identical_to_direct_run() {
             (x, y)
         })
         .collect();
-    let reg = registry(AdmissionConfig::default());
-    reg.insert_model("m", m).expect("insert");
-    let (server, mut client) = spawn(reg);
+    for mode in MODES {
+        let reg = registry(AdmissionConfig::default());
+        reg.insert_model("m", model(1)).expect("insert");
+        let (server, mut client) = spawn(reg, mode);
 
-    let health = client.get("/healthz").expect("healthz");
-    assert_eq!(health.status, 200);
+        let health = client.get("/healthz").expect("healthz");
+        assert_eq!(health.status, 200, "[{mode:?}]");
 
-    for (x, y) in &direct {
-        let resp = client.infer("m", "parity", x).expect("infer round trip");
-        assert_eq!(resp.status, 200, "body: {}", resp.json);
-        assert_eq!(resp.json.str_field("model").expect("model field"), "m");
-        assert_eq!(resp.json.usize_field("version").expect("version field"), 1);
-        let wire = npas::serve::tensor_from_json(&resp.json).expect("reply decodes");
-        assert_bit_identical(&wire, y);
+        for (x, y) in &direct {
+            let resp = client.infer("m", "parity", x).expect("infer round trip");
+            assert_eq!(resp.status, 200, "[{mode:?}] body: {}", resp.json);
+            assert_eq!(resp.json.str_field("model").expect("model field"), "m");
+            assert_eq!(resp.json.usize_field("version").expect("version field"), 1);
+            let wire = npas::serve::tensor_from_json(&resp.json).expect("reply decodes");
+            assert_bit_identical(&wire, y);
+        }
+        server.shutdown();
     }
-    server.shutdown();
 }
 
 #[test]
 fn shed_requests_are_typed_and_serving_recovers() {
-    let reg = registry(AdmissionConfig { max_pending: 2, per_client: 1 });
-    reg.insert_model("m", model(1)).expect("insert");
-    let (server, mut client) = spawn(reg.clone());
-    let x = input(3);
+    for mode in MODES {
+        let reg = registry(AdmissionConfig { max_pending: 2, per_client: 1 });
+        reg.insert_model("m", model(1)).expect("insert");
+        let (server, mut client) = spawn(reg.clone(), mode);
+        let x = input(3);
 
-    // hold the model's two admission slots via the registry handle — the
-    // HTTP request that follows must shed deterministically, not race
-    let t1 = reg.submit("m", "holder-a", x.clone()).expect("slot 1");
-    let t2 = reg.submit("m", "holder-b", x.clone()).expect("slot 2");
-    let shed = client.infer("m", "http-client", &x).expect("exchange completes");
-    assert_eq!(shed.status, 503);
-    assert_eq!(shed.error_kind(), Some("overloaded"));
+        // hold the model's two admission slots via the registry handle —
+        // the HTTP request that follows must shed deterministically
+        let t1 = reg.submit("m", "holder-a", x.clone()).expect("slot 1");
+        let t2 = reg.submit("m", "holder-b", x.clone()).expect("slot 2");
+        let shed = client.infer("m", "http-client", &x).expect("exchange completes");
+        assert_eq!(shed.status, 503, "[{mode:?}]");
+        assert_eq!(shed.error_kind(), Some("overloaded"));
 
-    // free BOTH slots before the fairness phase: with only the hog's one
-    // ticket pending (1 < max_pending 2), per-client fairness — not the
-    // overload bound, which is checked first — is the binding constraint
-    assert!(t1.wait().is_ok());
-    assert!(t2.wait().is_ok());
-    let hog = reg.submit("m", "hog", x.clone()).expect("hog's one slot");
-    let limited = client.infer("m", "hog", &x).expect("exchange completes");
-    assert_eq!(limited.status, 429);
-    assert_eq!(limited.error_kind(), Some("rate_limited"));
-    // a polite client is admitted while the hog is limited
-    let polite = client.infer("m", "polite", &x).expect("exchange completes");
-    assert_eq!(polite.status, 200, "body: {}", polite.json);
+        // free BOTH slots before the fairness phase: with only the hog's
+        // one ticket pending (1 < max_pending 2), per-client fairness —
+        // not the overload bound, checked first — is the binding limit
+        assert!(t1.wait().is_ok());
+        assert!(t2.wait().is_ok());
+        let hog = reg.submit("m", "hog", x.clone()).expect("hog's one slot");
+        let limited = client.infer("m", "hog", &x).expect("exchange completes");
+        assert_eq!(limited.status, 429, "[{mode:?}]");
+        assert_eq!(limited.error_kind(), Some("rate_limited"));
+        // a polite client is admitted while the hog is limited
+        let polite = client.infer("m", "polite", &x).expect("exchange completes");
+        assert_eq!(polite.status, 200, "[{mode:?}] body: {}", polite.json);
 
-    // shedding killed no workers: after the holder resolves, serving is
-    // fully healthy on the same connection
-    assert!(hog.wait().is_ok());
-    let healthy = client.infer("m", "http-client", &x).expect("exchange completes");
-    assert_eq!(healthy.status, 200);
+        // shedding killed no workers: after the holder resolves, serving
+        // is fully healthy on the same connection
+        assert!(hog.wait().is_ok());
+        let healthy = client.infer("m", "http-client", &x).expect("exchange completes");
+        assert_eq!(healthy.status, 200, "[{mode:?}]");
 
-    let entry = reg.get("m").expect("model resident");
-    let stats = entry.admission_stats();
-    assert_eq!(stats.shed_overloaded, 1);
-    assert_eq!(stats.shed_rate_limited, 1);
-    assert_eq!(stats.pending, 0);
-    server.shutdown();
+        let entry = reg.get("m").expect("model resident");
+        let stats = entry.admission_stats();
+        assert_eq!(stats.shed_overloaded, 1, "[{mode:?}]");
+        assert_eq!(stats.shed_rate_limited, 1, "[{mode:?}]");
+        assert_eq!(stats.pending, 0, "[{mode:?}]");
+        server.shutdown();
+    }
 }
 
 #[test]
 fn hot_swap_never_mixes_weights() {
-    let dir = std::env::temp_dir().join(format!("npas_serve_swap_{}", std::process::id()));
-    std::fs::create_dir_all(&dir).expect("temp dir");
-    let v2_path = dir.join("v2.json");
     let x = input(5);
-    let m1 = model(1);
-    let m2 = model(2);
-    let w1 = m1.run(&x).expect("v1 direct");
-    let w2 = m2.run(&x).expect("v2 direct");
+    let w1 = model(1).run(&x).expect("v1 direct");
+    let w2 = model(2).run(&x).expect("v2 direct");
     assert_ne!(w1, w2, "the two versions must be distinguishable");
-    m2.save(&v2_path).expect("save v2 bundle");
 
-    let reg = registry(AdmissionConfig::default());
-    reg.insert_model("m", m1).expect("insert v1");
-    let (server, mut client) = spawn(reg.clone());
+    for (i, mode) in MODES.into_iter().enumerate() {
+        let dir = std::env::temp_dir()
+            .join(format!("npas_serve_swap_{}_{i}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let v2_path = dir.join("v2.json");
+        model(2).save(&v2_path).expect("save v2 bundle");
 
-    let before = client.infer("m", "swap", &x).expect("v1 infer");
-    assert_eq!(before.json.usize_field("version").unwrap(), 1);
-    assert_bit_identical(&npas::serve::tensor_from_json(&before.json).unwrap(), &w1);
+        let reg = registry(AdmissionConfig::default());
+        reg.insert_model("m", model(1)).expect("insert v1");
+        let (server, mut client) = spawn(reg.clone(), mode);
 
-    // requests in flight across the swap: tickets admitted against v1 hold
-    // the old entry alive and must answer with v1 weights
-    let straddler = reg.submit("m", "swap", x.clone()).expect("pre-swap ticket");
+        let before = client.infer("m", "swap", &x).expect("v1 infer");
+        assert_eq!(before.json.usize_field("version").unwrap(), 1, "[{mode:?}]");
+        assert_bit_identical(&npas::serve::tensor_from_json(&before.json).unwrap(), &w1);
 
-    let body = npas::util::Json::obj(vec![(
-        "path",
-        npas::util::Json::str(v2_path.to_string_lossy().as_ref()),
-    )]);
-    let loaded = client.post("/v1/models/m/load", &body).expect("hot-swap load");
-    assert_eq!(loaded.status, 200, "body: {}", loaded.json);
-    assert_eq!(loaded.json.usize_field("version").unwrap(), 2);
+        // requests in flight across the swap: tickets admitted against v1
+        // hold the old entry alive and must answer with v1 weights
+        let straddler = reg.submit("m", "swap", x.clone()).expect("pre-swap ticket");
 
-    let old = straddler.wait().expect("straddler answered");
-    assert_eq!(old.version, 1, "pre-swap ticket must be answered by v1");
-    assert_bit_identical(&old.output, &w1);
+        let body = npas::util::Json::obj(vec![(
+            "path",
+            npas::util::Json::str(v2_path.to_string_lossy().as_ref()),
+        )]);
+        let loaded = client.post("/v1/models/m/load", &body).expect("hot-swap load");
+        assert_eq!(loaded.status, 200, "[{mode:?}] body: {}", loaded.json);
+        assert_eq!(loaded.json.usize_field("version").unwrap(), 2);
 
-    // every post-swap response is pure v2 — never a blend, never v1
-    for i in 0..3 {
-        let after = client.infer("m", "swap", &x).expect("v2 infer");
-        assert_eq!(after.status, 200, "infer {i} body: {}", after.json);
-        assert_eq!(after.json.usize_field("version").unwrap(), 2);
-        assert_bit_identical(&npas::serve::tensor_from_json(&after.json).unwrap(), &w2);
+        let old = straddler.wait().expect("straddler answered");
+        assert_eq!(old.version, 1, "[{mode:?}] pre-swap ticket must answer as v1");
+        assert_bit_identical(&old.output, &w1);
+
+        // every post-swap response is pure v2 — never a blend, never v1
+        for j in 0..3 {
+            let after = client.infer("m", "swap", &x).expect("v2 infer");
+            assert_eq!(after.status, 200, "[{mode:?}] infer {j} body: {}", after.json);
+            assert_eq!(after.json.usize_field("version").unwrap(), 2);
+            assert_bit_identical(&npas::serve::tensor_from_json(&after.json).unwrap(), &w2);
+        }
+        assert_eq!(reg.stats().swaps, 1, "[{mode:?}]");
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
-    assert_eq!(reg.stats().swaps, 1);
-    server.shutdown();
-    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
 fn load_route_is_confined_to_the_artifact_root() {
-    let dir = std::env::temp_dir().join(format!("npas_serve_root_{}", std::process::id()));
-    let root = dir.join("artifacts");
-    std::fs::create_dir_all(&root).expect("artifact root");
-    let inside = root.join("v2.json");
-    let outside = dir.join("outside.json");
-    let m2 = model(2);
-    m2.save(&inside).expect("save inside root");
-    m2.save(&outside).expect("save outside root");
+    for (i, mode) in MODES.into_iter().enumerate() {
+        let dir = std::env::temp_dir()
+            .join(format!("npas_serve_root_{}_{i}", std::process::id()));
+        let root = dir.join("artifacts");
+        std::fs::create_dir_all(&root).expect("artifact root");
+        let inside = root.join("v2.json");
+        let outside = dir.join("outside.json");
+        let m2 = model(2);
+        m2.save(&inside).expect("save inside root");
+        m2.save(&outside).expect("save outside root");
 
-    let reg = registry(AdmissionConfig::default());
-    reg.insert_model("m", model(1)).expect("insert v1");
-    let (server, mut client) = spawn_with(
-        reg.clone(),
-        ServerConfig {
-            max_connections: 4,
-            artifact_root: Some(root.clone()),
-            ..Default::default()
-        },
-    );
+        let reg = registry(AdmissionConfig::default());
+        reg.insert_model("m", model(1)).expect("insert v1");
+        let (server, mut client) = spawn_with(
+            reg.clone(),
+            ServerConfig {
+                artifact_root: Some(root.clone()),
+                ..server_cfg(mode)
+            },
+        );
 
-    let load_body = |p: &std::path::Path| {
-        npas::util::Json::obj(vec![(
-            "path",
-            npas::util::Json::str(p.to_string_lossy().as_ref()),
-        )])
-    };
-    // a path under the root loads and swaps
-    let ok = client.post("/v1/models/m/load", &load_body(&inside)).expect("load inside");
-    assert_eq!(ok.status, 200, "body: {}", ok.json);
-    // a valid artifact outside the root is a typed rejection, not a swap —
-    // and so is a `..` escape written relative to the root
-    for escape in [outside.clone(), root.join("..").join("outside.json")] {
-        let denied = client.post("/v1/models/m/load", &load_body(&escape)).expect("exchange");
-        assert_eq!(denied.status, 400, "`{}` body: {}", escape.display(), denied.json);
-        assert_eq!(denied.error_kind(), Some("invalid_config"));
+        let load_body = |p: &std::path::Path| {
+            npas::util::Json::obj(vec![(
+                "path",
+                npas::util::Json::str(p.to_string_lossy().as_ref()),
+            )])
+        };
+        // a path under the root loads and swaps
+        let ok = client.post("/v1/models/m/load", &load_body(&inside)).expect("load inside");
+        assert_eq!(ok.status, 200, "[{mode:?}] body: {}", ok.json);
+        // a valid artifact outside the root is a typed rejection, not a
+        // swap — and so is a `..` escape written relative to the root
+        for escape in [outside.clone(), root.join("..").join("outside.json")] {
+            let denied =
+                client.post("/v1/models/m/load", &load_body(&escape)).expect("exchange");
+            assert_eq!(
+                denied.status,
+                400,
+                "[{mode:?}] `{}` body: {}",
+                escape.display(),
+                denied.json
+            );
+            assert_eq!(denied.error_kind(), Some("invalid_config"));
+        }
+        assert_eq!(reg.stats().swaps, 1, "[{mode:?}] only the confined load swapped");
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
-    assert_eq!(reg.stats().swaps, 1, "only the confined load swapped");
-    server.shutdown();
-    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
 fn unknown_models_and_malformed_bodies_are_typed_over_http() {
-    let reg = registry(AdmissionConfig::default());
-    reg.insert_model("m", model(1)).expect("insert");
-    let (server, mut client) = spawn(reg);
+    for mode in MODES {
+        let reg = registry(AdmissionConfig::default());
+        reg.insert_model("m", model(1)).expect("insert");
+        let (server, mut client) = spawn(reg, mode);
 
-    let missing = client.infer("ghost", "c", &input(1)).expect("exchange completes");
-    assert_eq!(missing.status, 404);
-    assert_eq!(missing.error_kind(), Some("not_found"));
+        let missing = client.infer("ghost", "c", &input(1)).expect("exchange completes");
+        assert_eq!(missing.status, 404, "[{mode:?}]");
+        assert_eq!(missing.error_kind(), Some("not_found"));
 
-    let bad = npas::util::Json::parse(r#"{"dims":[8,8,8],"data":[1.0]}"#).unwrap();
-    let mismatched = client.post("/v1/models/m/infer", &bad).expect("exchange completes");
-    assert_eq!(mismatched.status, 400);
-    assert_eq!(mismatched.error_kind(), Some("bad_request"));
+        let bad = npas::util::Json::parse(r#"{"dims":[8,8,8],"data":[1.0]}"#).unwrap();
+        let mismatched =
+            client.post("/v1/models/m/infer", &bad).expect("exchange completes");
+        assert_eq!(mismatched.status, 400, "[{mode:?}]");
+        assert_eq!(mismatched.error_kind(), Some("bad_request"));
 
-    // a wrong-shaped (but self-consistent) tensor is the engine's typed
-    // rejection, not a hang or a worker death
-    let wrong_shape = client.infer("m", "c", &input_with_dims(vec![4, 4, 8]));
-    let wrong = wrong_shape.expect("exchange completes");
-    assert_eq!(wrong.status, 400, "body: {}", wrong.json);
-    assert_eq!(wrong.error_kind(), Some("exec"));
+        // a wrong-shaped (but self-consistent) tensor is the engine's
+        // typed rejection, not a hang or a worker death
+        let wrong_shape = client.infer("m", "c", &input_with_dims(vec![4, 4, 8]));
+        let wrong = wrong_shape.expect("exchange completes");
+        assert_eq!(wrong.status, 400, "[{mode:?}] body: {}", wrong.json);
+        assert_eq!(wrong.error_kind(), Some("exec"));
 
-    // the same connection still serves good requests afterwards
-    let ok = client.infer("m", "c", &input(2)).expect("exchange completes");
-    assert_eq!(ok.status, 200);
-    server.shutdown();
+        // the same connection still serves good requests afterwards
+        let ok = client.infer("m", "c", &input(2)).expect("exchange completes");
+        assert_eq!(ok.status, 200, "[{mode:?}]");
+        server.shutdown();
+    }
 }
 
 fn input_with_dims(dims: Vec<usize>) -> Tensor {
@@ -268,33 +303,35 @@ fn input_with_dims(dims: Vec<usize>) -> Tensor {
 
 #[test]
 fn registry_lifecycle_over_http_list_delete_stats() {
-    let reg = registry(AdmissionConfig::default());
-    reg.insert_model("a", model(1)).expect("insert a");
-    reg.insert_model("b", model(2)).expect("insert b");
-    let (server, mut client) = spawn(reg);
+    for mode in MODES {
+        let reg = registry(AdmissionConfig::default());
+        reg.insert_model("a", model(1)).expect("insert a");
+        reg.insert_model("b", model(2)).expect("insert b");
+        let (server, mut client) = spawn(reg, mode);
 
-    let listed = client.get("/v1/models").expect("list");
-    assert_eq!(listed.status, 200);
-    let names: Vec<&str> = listed
-        .json
-        .arr_field("models")
-        .expect("models array")
-        .iter()
-        .map(|m| m.str_field("name").expect("name"))
-        .collect();
-    assert_eq!(names, vec!["a", "b"]);
+        let listed = client.get("/v1/models").expect("list");
+        assert_eq!(listed.status, 200, "[{mode:?}]");
+        let names: Vec<&str> = listed
+            .json
+            .arr_field("models")
+            .expect("models array")
+            .iter()
+            .map(|m| m.str_field("name").expect("name"))
+            .collect();
+        assert_eq!(names, vec!["a", "b"], "[{mode:?}]");
 
-    let _ = client.infer("a", "c", &input(1)).expect("infer a");
-    let stats = client.get("/v1/models/a/stats").expect("stats");
-    assert_eq!(stats.status, 200);
-    assert_eq!(stats.json.usize_field("completed").expect("completed"), 1);
-    assert_eq!(stats.json.usize_field("admitted").expect("admitted"), 1);
+        let _ = client.infer("a", "c", &input(1)).expect("infer a");
+        let stats = client.get("/v1/models/a/stats").expect("stats");
+        assert_eq!(stats.status, 200, "[{mode:?}]");
+        assert_eq!(stats.json.usize_field("completed").expect("completed"), 1);
+        assert_eq!(stats.json.usize_field("admitted").expect("admitted"), 1);
 
-    let deleted = client.delete("/v1/models/b").expect("delete");
-    assert_eq!(deleted.status, 200);
-    let gone = client.get("/v1/models/b/stats").expect("stats after delete");
-    assert_eq!(gone.status, 404);
-    server.shutdown();
+        let deleted = client.delete("/v1/models/b").expect("delete");
+        assert_eq!(deleted.status, 200, "[{mode:?}]");
+        let gone = client.get("/v1/models/b/stats").expect("stats after delete");
+        assert_eq!(gone.status, 404, "[{mode:?}]");
+        server.shutdown();
+    }
 }
 
 #[test]
@@ -315,43 +352,45 @@ fn direct_registry_infer_matches_the_facade() {
 
 #[test]
 fn non_finite_and_hostile_payloads_are_typed_not_fatal() {
-    let reg = registry(AdmissionConfig::default());
-    reg.insert_model("m", model(1)).expect("insert");
-    let (server, mut client) = spawn(reg);
+    for mode in MODES {
+        let reg = registry(AdmissionConfig::default());
+        reg.insert_model("m", model(1)).expect("insert");
+        let (server, mut client) = spawn(reg, mode);
 
-    // raw body: `1e999` is valid JSON text but parses to f64::INFINITY —
-    // the one wire vector that smuggles a non-finite value past the
-    // literal-rejecting parser. Must be the caller's 400, never a worker
-    // panic or a poisoned engine.
-    let mut vals: Vec<&str> = vec!["0.5"; 8 * 8 * 8];
-    vals[7] = "1e999";
-    let body = format!(r#"{{"dims":[8,8,8],"data":[{}]}}"#, vals.join(","));
-    let inf = client
-        .request("POST", "/v1/models/m/infer", &[], body.as_bytes())
-        .expect("exchange completes");
-    assert_eq!(inf.status, 400, "body: {}", inf.json);
-    assert_eq!(inf.error_kind(), Some("bad_request"));
+        // raw body: `1e999` is valid JSON text but parses to
+        // f64::INFINITY — the one wire vector that smuggles a non-finite
+        // value past the literal-rejecting parser. Must be the caller's
+        // 400, never a worker panic or a poisoned engine.
+        let mut vals: Vec<&str> = vec!["0.5"; 8 * 8 * 8];
+        vals[7] = "1e999";
+        let body = format!(r#"{{"dims":[8,8,8],"data":[{}]}}"#, vals.join(","));
+        let inf = client
+            .request("POST", "/v1/models/m/infer", &[], body.as_bytes())
+            .expect("exchange completes");
+        assert_eq!(inf.status, 400, "[{mode:?}] body: {}", inf.json);
+        assert_eq!(inf.error_kind(), Some("bad_request"));
 
-    // dims that individually fit a usize but whose product overflows
-    let overflow = r#"{"dims":[4294967295,4294967295,4294967295],"data":[0.5]}"#;
-    let of = client
-        .request("POST", "/v1/models/m/infer", &[], overflow.as_bytes())
-        .expect("exchange completes");
-    assert_eq!(of.status, 400, "body: {}", of.json);
-    assert_eq!(of.error_kind(), Some("bad_request"));
+        // dims that individually fit a usize but whose product overflows
+        let overflow = r#"{"dims":[4294967295,4294967295,4294967295],"data":[0.5]}"#;
+        let of = client
+            .request("POST", "/v1/models/m/infer", &[], overflow.as_bytes())
+            .expect("exchange completes");
+        assert_eq!(of.status, 400, "[{mode:?}] body: {}", of.json);
+        assert_eq!(of.error_kind(), Some("bad_request"));
 
-    // fractional dims fail the strict integer decode
-    let frac = r#"{"dims":[8.5,8,8],"data":[0.5]}"#;
-    let fr = client
-        .request("POST", "/v1/models/m/infer", &[], frac.as_bytes())
-        .expect("exchange completes");
-    assert_eq!(fr.status, 400, "body: {}", fr.json);
-    assert_eq!(fr.error_kind(), Some("bad_request"));
+        // fractional dims fail the strict integer decode
+        let frac = r#"{"dims":[8.5,8,8],"data":[0.5]}"#;
+        let fr = client
+            .request("POST", "/v1/models/m/infer", &[], frac.as_bytes())
+            .expect("exchange completes");
+        assert_eq!(fr.status, 400, "[{mode:?}] body: {}", fr.json);
+        assert_eq!(fr.error_kind(), Some("bad_request"));
 
-    // the same connection (and the same engine) still serves afterwards
-    let ok = client.infer("m", "c", &input(2)).expect("exchange completes");
-    assert_eq!(ok.status, 200, "body: {}", ok.json);
-    server.shutdown();
+        // the same connection (and the same engine) still serves
+        let ok = client.infer("m", "c", &input(2)).expect("exchange completes");
+        assert_eq!(ok.status, 200, "[{mode:?}] body: {}", ok.json);
+        server.shutdown();
+    }
 }
 
 #[test]
@@ -359,21 +398,245 @@ fn int8_models_serve_bit_identical_to_their_direct_run() {
     // the quantized tier rides the same serving stack: registry + engine
     // share the int8 PreparedKernels, so wire outputs match the direct
     // int8 run bit-for-bit (i32 accumulation is worker-count invariant)
-    let m = CompiledModel::build(zoo::single_conv(8, 3, 8, 8))
-        .scheme((PruneScheme::block_punched_default(), 3.0))
-        .weights(1u64)
-        .target(&KRYO_485, Framework::Ours)
-        .precision(npas::compiler::Precision::Int8)
-        .compile()
-        .expect("int8 model compiles");
+    let int8_model = || {
+        CompiledModel::build(zoo::single_conv(8, 3, 8, 8))
+            .scheme((PruneScheme::block_punched_default(), 3.0))
+            .weights(1u64)
+            .target(&KRYO_485, Framework::Ours)
+            .precision(npas::compiler::Precision::Int8)
+            .compile()
+            .expect("int8 model compiles")
+    };
     let x = input(21);
-    let direct = m.run(&x).expect("direct int8 run");
+    let direct = int8_model().run(&x).expect("direct int8 run");
+    for mode in MODES {
+        let reg = registry(AdmissionConfig::default());
+        reg.insert_model("q", int8_model()).expect("insert");
+        let (server, mut client) = spawn(reg, mode);
+        let resp = client.infer("q", "c", &x).expect("infer round trip");
+        assert_eq!(resp.status, 200, "[{mode:?}] body: {}", resp.json);
+        let wire = npas::serve::tensor_from_json(&resp.json).expect("reply decodes");
+        assert_bit_identical(&wire, &direct);
+        server.shutdown();
+    }
+}
+
+// ---- wire-level connection semantics (both modes) --------------------------
+
+/// Read until EOF with a bounded wait; a reset also counts as closed.
+fn assert_closed(r: &mut impl Read, tag: &str) {
+    let mut probe = [0u8; 1];
+    match r.read(&mut probe) {
+        Ok(0) => {}
+        Ok(n) => panic!("{tag}: expected close, read {n} extra bytes"),
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            panic!("{tag}: server kept the connection open")
+        }
+        Err(_) => {} // reset counts as closed
+    }
+}
+
+#[test]
+fn connection_close_and_http10_default_close_are_honored() {
+    for mode in MODES {
+        let reg = registry(AdmissionConfig::default());
+        reg.insert_model("m", model(1)).expect("insert");
+        let (server, _client) = spawn(reg, mode);
+        let addr = server.addr();
+
+        // explicit `Connection: close` on HTTP/1.1: the response echoes
+        // close and the server actually closes the socket
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        http::write_request(&mut s, "GET", "/healthz", &[("connection", "close")], b"")
+            .expect("send");
+        let mut r = BufReader::new(s.try_clone().expect("clone"));
+        let resp = http::read_response(&mut r, &Limits::default()).expect("reply");
+        assert_eq!(resp.status, 200, "[{mode:?}]");
+        assert_eq!(
+            resp.headers.get("connection").map(String::as_str),
+            Some("close"),
+            "[{mode:?}] response must not advertise keep-alive"
+        );
+        assert_closed(&mut r, &format!("[{mode:?}] connection-close"));
+
+        // HTTP/1.0 with no Connection header defaults to close
+        let mut s10 = TcpStream::connect(addr).expect("connect");
+        s10.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s10.write_all(b"GET /healthz HTTP/1.0\r\n\r\n").expect("send 1.0");
+        let mut r10 = BufReader::new(s10.try_clone().expect("clone"));
+        let resp10 = http::read_response(&mut r10, &Limits::default()).expect("reply");
+        assert_eq!(resp10.status, 200, "[{mode:?}]");
+        assert_eq!(
+            resp10.headers.get("connection").map(String::as_str),
+            Some("close"),
+            "[{mode:?}] HTTP/1.0 must default to close"
+        );
+        assert_closed(&mut r10, &format!("[{mode:?}] http/1.0"));
+
+        // HTTP/1.0 asking for keep-alive explicitly gets it
+        let mut ka = TcpStream::connect(addr).expect("connect");
+        ka.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        ka.write_all(b"GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .expect("send 1.0 keep-alive");
+        let mut rka = BufReader::new(ka.try_clone().expect("clone"));
+        let first = http::read_response(&mut rka, &Limits::default()).expect("reply 1");
+        assert_eq!(
+            first.headers.get("connection").map(String::as_str),
+            Some("keep-alive"),
+            "[{mode:?}]"
+        );
+        // ... and a second request on the same socket works
+        ka.write_all(b"GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .expect("send again");
+        let second = http::read_response(&mut rka, &Limits::default()).expect("reply 2");
+        assert_eq!(second.status, 200, "[{mode:?}]");
+        server.shutdown();
+    }
+}
+
+// ---- reactor-only coverage -------------------------------------------------
+
+#[test]
+fn slow_loris_heads_get_typed_413_without_occupying_a_worker() {
+    // max_connections 1: in thread-per-conn mode a single stalled peer
+    // would pin the only handler thread; the reactor must keep serving
+    // inference anyway because stalled sockets cost a slab slot, nothing
+    // more.
     let reg = registry(AdmissionConfig::default());
-    reg.insert_model("q", m).expect("insert");
-    let (server, mut client) = spawn(reg);
-    let resp = client.infer("q", "c", &x).expect("infer round trip");
-    assert_eq!(resp.status, 200, "body: {}", resp.json);
-    let wire = npas::serve::tensor_from_json(&resp.json).expect("reply decodes");
-    assert_bit_identical(&wire, &direct);
+    reg.insert_model("m", model(1)).expect("insert");
+    let (server, mut client) = spawn_with(
+        reg,
+        ServerConfig {
+            max_connections: 1,
+            ingress: IngressMode::Reactor,
+            reactor_threads: 1,
+            limits: Limits { max_head: 256, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let addr = server.addr();
+
+    // three peers start a header and stall mid-line
+    let mut loris: Vec<TcpStream> = (0..3)
+        .map(|i| {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(b"GET /healthz HT").unwrap_or_else(|_| panic!("loris {i} head"));
+            s
+        })
+        .collect();
+
+    // one loris immediately floods past max_head without ever finishing a
+    // line (before the stall sweep can claim it): the reply is the same
+    // typed 413 the blocking path sends, then a close. A single burst
+    // keeps the exchange deterministic — the server drains it whole
+    // before responding, so the close is a clean FIN, not a reset.
+    let flood = &mut loris[0];
+    flood.write_all(&[b'a'; 300]).expect("flood");
+    let mut fr = BufReader::new(flood.try_clone().expect("clone"));
+    let resp = http::read_response(&mut fr, &Limits::default()).expect("413 reply");
+    assert_eq!(resp.status, 413);
+    assert!(
+        std::str::from_utf8(&resp.body).expect("json body").contains("too_large"),
+        "typed kind expected, got {:?}",
+        String::from_utf8_lossy(&resp.body)
+    );
+    assert_closed(&mut fr, "flooding loris");
+
+    // inference proceeds while the other two stall: no worker is occupied
+    for i in 0..2 {
+        let ok = client.infer("m", "c", &input(40 + i)).expect("infer during loris");
+        assert_eq!(ok.status, 200, "body: {}", ok.json);
+    }
+
+    // the quiet ones are reaped by the mid-message stall sweep instead of
+    // leaking slots forever; the 10s read timeout bounds the wait
+    for (i, s) in loris.iter_mut().enumerate().skip(1) {
+        let mut probe = [0u8; 1];
+        loop {
+            match s.read(&mut probe) {
+                Ok(0) => break, // clean FIN
+                Ok(_) => {}     // stray bytes; keep draining
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    panic!("loris {i} was never reaped by the stall sweep")
+                }
+                Err(_) => break, // reset also counts as reaped
+            }
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn a_thousand_idle_keep_alives_leave_serving_responsive() {
+    let reg = registry(AdmissionConfig::default());
+    reg.insert_model("m", model(1)).expect("insert");
+    let (server, mut client) = spawn_with(
+        reg,
+        ServerConfig {
+            // four handler threads in the old path; here they only back
+            // the load route — connections are a slab, not a pool
+            max_connections: 4,
+            ingress: IngressMode::Reactor,
+            reactor_threads: 2,
+            reactor_conns: 2048,
+            ..Default::default()
+        },
+    );
+    let addr = server.addr();
+
+    // pin the client's pooled keep-alive connection *before* the soak so
+    // the infers below never need a fresh fd under fd pressure
+    let warm = client.infer("m", "c", &input(49)).expect("warmup infer");
+    assert_eq!(warm.status, 200, "body: {}", warm.json);
+
+    // open as many idle keep-alives as the host allows (fd limits vary;
+    // each costs two fds in this one process — client end + accepted
+    // end); anything past 256 proves the point, 1000 is the target
+    let mut idle = Vec::new();
+    for _ in 0..1000 {
+        match TcpStream::connect(addr) {
+            Ok(s) => idle.push(s),
+            Err(_) => break, // EMFILE on constrained hosts
+        }
+    }
+    // if the open loop ran into the fd limit, the tail of the backlog may
+    // not be accepted server-side yet; dropping a few frees the headroom
+    // the reactor needs to drain it (accept retries on the next wake)
+    if idle.len() > 64 {
+        idle.truncate(idle.len() - 32);
+    }
+    assert!(idle.len() >= 256, "only {} idle connections opened", idle.len());
+
+    // the event loop still serves fresh work promptly under the idle mass
+    for i in 0..4 {
+        let ok = client.infer("m", "c", &input(50 + i)).expect("infer under idle load");
+        assert_eq!(ok.status, 200, "body: {}", ok.json);
+    }
+
+    // sampled idle connections are live and usable, not silently dropped
+    for pick in [0, idle.len() / 2, idle.len() - 1] {
+        let s = idle[pick].try_clone().expect("clone");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut w = s.try_clone().expect("clone");
+        http::write_request(&mut w, "GET", "/healthz", &[], b"")
+            .expect("request on idle conn");
+        let mut r = BufReader::new(s);
+        let resp =
+            http::read_response(&mut r, &Limits::default()).expect("response on idle conn");
+        assert_eq!(resp.status, 200, "idle connection {pick} must still serve");
+    }
+    drop(idle);
     server.shutdown();
 }
